@@ -1,0 +1,126 @@
+//! Ablations over the model's design choices (DESIGN.md §5, A1–A3):
+//!
+//! * A1 — drop the `min(loads, stores)` roofline properties (§2.1's
+//!   "efficiency gains if both loads and stores are present");
+//! * A2 — collapse the utilization-ratio classes onto pure stride bins;
+//! * A3 — shrink the measurement set (drop whole kernel classes) and
+//!   watch test-kernel error degrade.
+
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{run_campaign, Protocol, PropsCache};
+use uniperf::kernels;
+use uniperf::perfmodel::{fit, Model, NativeSolver, PropertyMatrix};
+use uniperf::stats::{ExtractOpts, Prop, Schema};
+use uniperf::util::bench::Bench;
+use uniperf::util::linalg::geometric_mean;
+
+/// Test-kernel geomean error of a model on one device.
+fn test_err(
+    gpu: &SimGpu,
+    model: &Model,
+    schema: &Schema,
+    extract_opts: ExtractOpts,
+) -> f64 {
+    let protocol = Protocol::default();
+    let mut cache = PropsCache::default();
+    let mut errs = Vec::new();
+    for case in kernels::test_suite(gpu.profile.name) {
+        let props = cache.props_for(&case, extract_opts).unwrap();
+        let pred = model.predict_kernel(schema, &props, &case.env).unwrap();
+        let actual = protocol.reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).unwrap());
+        errs.push((pred - actual).abs() / actual);
+    }
+    geometric_mean(&errs)
+}
+
+fn zero_columns(pm: &PropertyMatrix, schema: &Schema, pred: impl Fn(&Prop) -> bool) -> PropertyMatrix {
+    let mut out = pm.clone();
+    let cols: Vec<usize> = schema
+        .props()
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| pred(p))
+        .map(|(i, _)| i)
+        .collect();
+    for c in &mut out.cases {
+        for &j in &cols {
+            c.props[j] = 0.0;
+        }
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bench::end_to_end();
+    let device = "titan_x";
+    let gpu = SimGpu::named(device).unwrap();
+    let schema = Schema::full();
+    let protocol = Protocol::default();
+    let solver = NativeSolver::new();
+    let workers = uniperf::util::executor::default_workers();
+
+    let cases = kernels::measurement_suite(device);
+    let (pm, _) =
+        run_campaign(&gpu, &cases, &schema, &protocol, ExtractOpts::default(), workers).unwrap();
+
+    // baseline
+    let base_model = fit(device, &pm, &schema, &solver).unwrap();
+    let base = test_err(&gpu, &base_model, &schema, ExtractOpts::default());
+    println!("baseline                         test geomean {base:.3}");
+
+    // A1: no min(loads, stores) roofline columns
+    let pm_a1 = zero_columns(&pm, &schema, |p| matches!(p, Prop::MemMin { .. }));
+    let m_a1 = fit(device, &pm_a1, &schema, &solver).unwrap();
+    // (prediction also without those columns: zero weights make it moot)
+    let a1 = test_err(&gpu, &m_a1, &schema, ExtractOpts::default());
+    println!("A1 drop min(loads,stores)        test geomean {a1:.3}  (delta {:+.3})", a1 - base);
+
+    // A2: collapse utilization-ratio classes at extraction time
+    let opts2 = ExtractOpts { collapse_utilization: true, ..Default::default() };
+    let (pm_a2, _) = run_campaign(&gpu, &cases, &schema, &protocol, opts2, workers).unwrap();
+    let m_a2 = fit(device, &pm_a2, &schema, &solver).unwrap();
+    let a2 = test_err(&gpu, &m_a2, &schema, opts2);
+    println!("A2 collapse utilization classes  test geomean {a2:.3}  (delta {:+.3})", a2 - base);
+
+    // A3: shrink the measurement set by dropping kernel classes
+    for drop_prefixes in [
+        vec!["arith_"],
+        vec!["filled_"],
+        vec!["arith_", "filled_", "transpose", "mm_naive"],
+    ] {
+        let mut pm_small = PropertyMatrix::default();
+        for c in &pm.cases {
+            if !drop_prefixes.iter().any(|p| c.label.starts_with(p)) {
+                pm_small.push(c.label.clone(), c.props.clone(), c.time_s);
+            }
+        }
+        match fit(device, &pm_small, &schema, &solver) {
+            Ok(m) => {
+                let e = test_err(&gpu, &m, &schema, ExtractOpts::default());
+                println!(
+                    "A3 drop {:<24} test geomean {e:.3}  ({} cases, delta {:+.3})",
+                    format!("{drop_prefixes:?}"),
+                    pm_small.n_cases(),
+                    e - base
+                );
+            }
+            Err(err) => println!("A3 drop {drop_prefixes:?}: fit failed ({err})"),
+        }
+    }
+
+    // E7 (§6.2 extension): bin local loads by bank-conflict stride
+    let opts7 = ExtractOpts { bin_local_strides: true, ..Default::default() };
+    let (pm_e7, _) = run_campaign(&gpu, &cases, &schema, &protocol, opts7, workers).unwrap();
+    let m_e7 = fit(device, &pm_e7, &schema, &solver).unwrap();
+    let e7 = test_err(&gpu, &m_e7, &schema, opts7);
+    println!(
+        "E7 bin local bank-conflict strides  test geomean {e7:.3}  (delta {:+.3}, train {:.3} vs {:.3})",
+        e7 - base,
+        m_e7.train_rel_err_geomean,
+        base_model.train_rel_err_geomean
+    );
+
+    // wall-clock of the full ablation-relevant fit
+    b.run("ablation/fit-full-campaign", || fit(device, &pm, &schema, &solver).unwrap());
+    b.finish("ablation");
+}

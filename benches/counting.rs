@@ -1,0 +1,52 @@
+//! The paper's "economical alternative" + "rapid evaluation" claims:
+//! benchmark (a) symbolic property extraction per kernel class, (b)
+//! re-evaluation of the symbolic counts at a new size (claimed cheap),
+//! and (c) the model-evaluation inner product (claimed "rapid, runtime").
+
+use uniperf::kernels::{measure, testks};
+use uniperf::qpoly::env;
+use uniperf::stats::{extract, ExtractOpts, Schema};
+use uniperf::util::bench::Bench;
+use uniperf::util::linalg::dot;
+
+fn main() {
+    let mut b = Bench::new();
+    let schema = Schema::full();
+
+    let kernels = vec![
+        ("mm_tiled", measure::mm_tiled(16, 16), env(&[("n", 512), ("m", 512), ("l", 512)])),
+        ("mm_naive", measure::mm_naive(16, 16), env(&[("n", 512)])),
+        ("transpose_tiled", measure::transpose(measure::TransposeVariant::Tiled, 16, 16), env(&[("n", 2048)])),
+        ("fd5", testks::fd_stencil(16, 16), env(&[("n", 2048)])),
+        ("conv7", testks::convolution(16, 16), env(&[("n", 256)])),
+        ("nbody", testks::nbody(256), env(&[("n", 2048)])),
+    ];
+
+    // (a) full symbolic extraction (classification + counting + schedule)
+    for (name, kernel, e) in &kernels {
+        b.run(&format!("counting/extract/{name}"), || {
+            extract(kernel, e, ExtractOpts::default()).expect("extract")
+        });
+    }
+
+    // (b) symbolic re-evaluation at a new size (the "fully parametric" claim)
+    for (name, kernel, e) in &kernels {
+        let props = extract(kernel, e, ExtractOpts::default()).unwrap();
+        let mut e2 = e.clone();
+        for v in e2.values_mut() {
+            *v *= 2;
+        }
+        b.run(&format!("counting/reeval/{name}"), || {
+            props.eval(&schema, &e2).expect("eval")
+        });
+    }
+
+    // (c) model evaluation: one inner product over the property vector
+    let (_, kernel, e) = &kernels[0];
+    let props = extract(kernel, e, ExtractOpts::default()).unwrap();
+    let v = props.eval(&schema, e).unwrap();
+    let w: Vec<f64> = (0..schema.len()).map(|i| 1e-12 * (i + 1) as f64).collect();
+    b.run("counting/predict-inner-product", || dot(&w, &v));
+
+    b.finish("counting");
+}

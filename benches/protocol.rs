@@ -1,0 +1,75 @@
+//! E4 — validate the paper's §4.2 timing-protocol claims against the
+//! simulated devices:
+//!
+//! * "the minimum differed from the average by less than 5% when
+//!   execution times significantly exceeded the launch overhead";
+//! * empty-kernel launch overhead grows with the number of work groups
+//!   (the two-property overhead model of §2.4);
+//! * the first run is slower (first-touch) and the second run noisier.
+
+use uniperf::gpusim::{all_devices, SimGpu};
+use uniperf::harness::{calibrate_overhead, Protocol};
+use uniperf::kernels::measure;
+use uniperf::qpoly::env;
+use uniperf::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let protocol = Protocol::default();
+
+    println!("-- min-vs-mean agreement (times >> overhead) --");
+    for d in all_devices() {
+        let gpu = SimGpu::new(d.clone());
+        let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
+        let e = env(&[("n", 1 << 24)]);
+        let times = gpu.time(&k, &e, protocol.runs).unwrap();
+        let mn = protocol.reduce(&times);
+        let mean = protocol.reduce_mean(&times);
+        let dev = (mean - mn) / mn;
+        println!(
+            "{:<10} min {:>10.4} ms   mean {:>10.4} ms   delta {:>5.2}%  {}",
+            d.name,
+            mn * 1e3,
+            mean * 1e3,
+            100.0 * dev,
+            if dev < 0.05 { "(<5% HOLDS)" } else { "(DEVIATES)" }
+        );
+    }
+
+    println!("\n-- empty-kernel overhead vs group count (should grow) --");
+    for d in all_devices() {
+        let gpu = SimGpu::new(d.clone());
+        let k = measure::empty(16, 16);
+        let mut prev = 0.0;
+        let mut monotone = true;
+        let mut line = format!("{:<10}", d.name);
+        for p in [8i64, 10, 12] {
+            let e = env(&[("n", 1 << p)]);
+            let t = protocol.reduce(&gpu.time(&k, &e, protocol.runs).unwrap());
+            line += &format!("  2^{p}: {:>8.2} µs", t * 1e6);
+            monotone &= t > prev;
+            prev = t;
+        }
+        println!("{line}  {}", if monotone { "(grows HOLDS)" } else { "(DEVIATES)" });
+    }
+
+    println!("\n-- first-touch + second-run artifacts --");
+    let gpu = SimGpu::named("titan_x").unwrap();
+    let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
+    let times = gpu.time(&k, &env(&[("n", 1 << 22)]), 30).unwrap();
+    let floor = times[4..].iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "run0/min = {:.2} (first touch), |run1-min|/min = {:.2}%",
+        times[0] / floor,
+        100.0 * (times[1] - floor).abs() / floor
+    );
+
+    // and the calibration itself, benchmarked
+    for d in all_devices() {
+        let gpu = SimGpu::new(d);
+        b.run(&format!("protocol/calibrate-overhead/{}", gpu.profile.name), || {
+            calibrate_overhead(&gpu, &protocol).expect("calibrate")
+        });
+    }
+    b.finish("protocol");
+}

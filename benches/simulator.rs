@@ -1,0 +1,42 @@
+//! Simulated-GPU substrate throughput: the analytic timing engine per
+//! kernel class (the substrate must be fast enough that a full Table-1
+//! campaign — 4 devices × ~390 cases × 30 runs — completes in seconds),
+//! and the numeric interpreter on small validation sizes.
+
+use uniperf::gpusim::{base_time, execute, SimGpu};
+use uniperf::kernels::{measure, testks};
+use uniperf::qpoly::env;
+use uniperf::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let gpu = SimGpu::named("titan_x").unwrap();
+
+    let timing_cases = vec![
+        ("mm_tiled", measure::mm_tiled(16, 16), env(&[("n", 1024), ("m", 1024), ("l", 1024)])),
+        ("vsadd_s2", measure::vsadd(2, 256), env(&[("nt", 1 << 22)])),
+        ("fd5", testks::fd_stencil(16, 16), env(&[("n", 2048)])),
+        ("conv7", testks::convolution(16, 16), env(&[("n", 512)])),
+        ("nbody", testks::nbody(256), env(&[("n", 4096)])),
+    ];
+    for (name, kernel, e) in &timing_cases {
+        b.run(&format!("sim/timing-engine/{name}"), || {
+            base_time(&gpu.profile, kernel, e).expect("base_time")
+        });
+    }
+
+    // full 30-run protocol including noise generation
+    let (_, kernel, e) = &timing_cases[0];
+    b.run("sim/30-run-protocol/mm_tiled", || gpu.time(kernel, e, 30).expect("time"));
+
+    // numeric interpreter (validation path), small sizes
+    let interp_cases = vec![
+        ("mm_tiled/n=32", measure::mm_tiled(8, 8), env(&[("n", 32), ("m", 32), ("l", 32)])),
+        ("fd5/n=32", testks::fd_stencil(8, 8), env(&[("n", 32)])),
+        ("nbody/n=128", testks::nbody(32), env(&[("n", 128)])),
+    ];
+    for (name, kernel, e) in &interp_cases {
+        b.run(&format!("sim/interpreter/{name}"), || execute(kernel, e).expect("execute"));
+    }
+    b.finish("simulator");
+}

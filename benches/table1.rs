@@ -1,0 +1,39 @@
+//! E1 — regenerate Table 1 (paper §5): per-device end-to-end pipeline
+//! (measurement campaign → fit → test-kernel prediction), reporting both
+//! the wall time of the pipeline and the resulting error rows.
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::report::{Table1, Table1Entry};
+use uniperf::stats::Schema;
+use uniperf::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::end_to_end();
+    let schema = Schema::full();
+    let cfg = Config { backend: FitBackend::Native, ..Config::default() };
+
+    let mut table = Table1::default();
+    for device in ["titan_x", "c2070", "k40c", "r9_fury"] {
+        let mut last = None;
+        b.run(&format!("table1/pipeline/{device}"), || {
+            let dr = run_device(device, &schema, &cfg).expect("pipeline");
+            last = Some(dr);
+        });
+        let dr = last.unwrap();
+        for (kernel, case, pred, act) in &dr.tests {
+            table.push(Table1Entry {
+                device: device.into(),
+                kernel: kernel.clone(),
+                case: case.clone(),
+                predicted_s: *pred,
+                actual_s: *act,
+            });
+        }
+    }
+    println!("\n{}", table.render());
+    println!(
+        "table1 overall geomean relative error: {:.3} (paper: 0.11)",
+        table.overall_err()
+    );
+    b.finish("table1");
+}

@@ -1,0 +1,60 @@
+//! E2 — regenerate Table 2 (paper §4.3): benchmark the weight fit itself
+//! on the full measurement campaign, comparing the native Cholesky
+//! backend against the AOT-compiled JAX/Pallas artifact, and print the
+//! fitted weight table.
+
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{run_campaign, Protocol};
+use uniperf::perfmodel::{fit, NativeSolver, Solver};
+use uniperf::report::render_table2;
+use uniperf::runtime::XlaSolver;
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let schema = Schema::full();
+    let gpu = SimGpu::named("r9_fury").unwrap();
+    let cases = uniperf::kernels::measurement_suite("r9_fury");
+    let (pm, _) = run_campaign(
+        &gpu,
+        &cases,
+        &schema,
+        &Protocol::default(),
+        ExtractOpts::default(),
+        uniperf::util::executor::default_workers(),
+    )
+    .expect("campaign");
+    println!(
+        "campaign: {} cases x {} properties ({} active)\n",
+        pm.n_cases(),
+        pm.n_props(),
+        pm.active_columns().len()
+    );
+
+    let native = NativeSolver::new();
+    b.run("table2_fit/native-cholesky", || {
+        fit("r9_fury", &pm, &schema, &native).expect("fit")
+    });
+
+    match XlaSolver::from_artifacts() {
+        Ok(solver) => {
+            b.run("table2_fit/xla-pallas-aot", || {
+                fit("r9_fury", &pm, &schema, &solver).expect("fit")
+            });
+            // agreement between backends on the real campaign
+            let mn = fit("r9_fury", &pm, &schema, &native).unwrap();
+            let mx = fit("r9_fury", &pm, &schema, &solver).unwrap();
+            let max_dev = mn
+                .weights
+                .iter()
+                .zip(&mx.weights)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            println!("\nmax |native - xla| weight deviation: {max_dev:.3e}");
+            println!("\n{}", render_table2(&mx, &schema));
+        }
+        Err(e) => println!("xla backend skipped: {e}"),
+    }
+    b.finish("table2_fit");
+}

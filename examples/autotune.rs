@@ -1,0 +1,106 @@
+//! §6.2 extension: model-guided optimization-variant selection.
+//!
+//! "Another interesting extension would be to study our model's ability
+//! to select the optimal set of kernel configurations (i.e., the set that
+//! produces the fastest kernel) from a collection of potential
+//! optimizations."
+//!
+//! This example ranks transpose variants (tiled-prefetch vs. coalesced
+//! read vs. coalesced write) and matrix-multiplication variants (tiled
+//! vs. naive) by *predicted* time, then checks the ranking against the
+//! simulated device — the runtime-autotuning use case the paper
+//! motivates.
+//!
+//! Run with: `cargo run --release --example autotune [device]`
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{Protocol, PropsCache};
+use uniperf::kernels::measure::{mm_naive, mm_tiled, transpose, TransposeVariant};
+use uniperf::kernels::KernelCase;
+use uniperf::qpoly::env;
+use uniperf::stats::{ExtractOpts, Schema};
+
+fn main() {
+    let device = std::env::args().nth(1).unwrap_or_else(|| "titan_x".to_string());
+    println!("== model-guided variant selection on {device} ==\n");
+    let schema = Schema::full();
+    let cfg = Config {
+        devices: vec![device.clone()],
+        backend: FitBackend::Auto,
+        ..Config::default()
+    };
+    let dr = run_device(&device, &schema, &cfg).expect("calibrate");
+    let gpu = SimGpu::named(&device).unwrap();
+    let protocol = Protocol::default();
+    let mut cache = PropsCache::default();
+
+    let mut rank = |title: &str, variants: Vec<KernelCase>| {
+        println!("{title}");
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        for case in variants {
+            let props = cache.props_for(&case, ExtractOpts::default()).expect("props");
+            let pred = dr.model.predict_kernel(&schema, &props, &case.env).expect("predict");
+            let actual =
+                protocol.reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).expect("time"));
+            rows.push((case.label, pred, actual));
+        }
+        let mut by_pred = rows.clone();
+        by_pred.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut by_actual = rows.clone();
+        by_actual.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+        for (label, pred, actual) in &rows {
+            println!("  {:<28} pred {:>9.3} ms   actual {:>9.3} ms", label, pred * 1e3, actual * 1e3);
+        }
+        let hit = by_pred[0].0 == by_actual[0].0;
+        println!(
+            "  model picks: {:<28} truth: {:<28} -> {}\n",
+            by_pred[0].0,
+            by_actual[0].0,
+            if hit { "CORRECT" } else { "MISS" }
+        );
+        hit
+    };
+
+    let n = 2048i64;
+    let t_variants = vec![
+        KernelCase {
+            kernel: transpose(TransposeVariant::Tiled, 16, 16),
+            env: env(&[("n", n)]),
+            label: "transpose/tiled".into(),
+            group: (16, 16),
+        },
+        KernelCase {
+            kernel: transpose(TransposeVariant::CoalescedWrite, 16, 16),
+            env: env(&[("n", n)]),
+            label: "transpose/coalesced-write".into(),
+            group: (16, 16),
+        },
+        KernelCase {
+            kernel: transpose(TransposeVariant::CoalescedRead, 16, 16),
+            env: env(&[("n", n)]),
+            label: "transpose/coalesced-read".into(),
+            group: (16, 16),
+        },
+    ];
+    let hit1 = rank("transpose variants (n=2048):", t_variants);
+
+    let m = 1024i64;
+    let mm_variants = vec![
+        KernelCase {
+            kernel: mm_tiled(16, 16),
+            env: env(&[("n", m), ("m", m), ("l", m)]),
+            label: "mm/tiled".into(),
+            group: (16, 16),
+        },
+        KernelCase {
+            kernel: mm_naive(16, 16),
+            env: env(&[("n", m)]),
+            label: "mm/naive".into(),
+            group: (16, 16),
+        },
+    ];
+    let hit2 = rank("matrix-multiplication variants (n=1024):", mm_variants);
+
+    println!("variant selection: {}/2 families ranked correctly", hit1 as u32 + hit2 as u32);
+}

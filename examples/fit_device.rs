@@ -1,0 +1,51 @@
+//! Reproduce the paper's **Table 2**: fit the model to one device and
+//! print the per-property weights (seconds per operation), directly
+//! interpretable and comparable across devices.
+//!
+//! Run with: `cargo run --release --example fit_device [device]`
+//! (default device: r9_fury, as in the paper's Table 2)
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::report::render_table2;
+use uniperf::stats::Schema;
+
+fn main() {
+    let device = std::env::args().nth(1).unwrap_or_else(|| "r9_fury".to_string());
+    println!("== Table 2 reproduction: weight fit for {device} ==\n");
+    let schema = Schema::full();
+    let cfg = Config {
+        devices: vec![device.clone()],
+        backend: FitBackend::Auto,
+        ..Config::default()
+    };
+    let dr = run_device(&device, &schema, &cfg).expect("fit");
+    println!("{}", render_table2(&dr.model, &schema));
+    println!(
+        "launch overhead (empty-kernel calibration): {:.1} µs",
+        dr.launch_overhead_s * 1e6
+    );
+    println!("measurement cases used: {}", dr.n_measurement_cases);
+
+    // the paper notes the weights "allow direct conclusions about
+    // sustained typical rates": derive a few
+    let w = |label: &str| {
+        dr.model
+            .weight_report(&schema)
+            .into_iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, w)| w)
+    };
+    if let Some(ws1) = w("f32 stride-1 loads") {
+        if ws1 > 0.0 {
+            println!(
+                "\nimplied sustained stride-1 load bandwidth: {:.0} GB/s",
+                4.0 / ws1 / 1e9
+            );
+        }
+    }
+    if let Some(wg) = w("thread groups") {
+        if wg > 0.0 {
+            println!("implied per-group launch cost: {:.2} ns", wg * 1e9);
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the paper's Figure-1 pipeline on a single kernel.
+//!
+//! 1. Build a kernel in the polyhedral IR (the §3.1 "double a vector"
+//!    example, scaled up).
+//! 2. Extract its model properties symbolically.
+//! 3. Calibrate a device model (measurement campaign + fit).
+//! 4. Predict the kernel's run time and compare against the simulated
+//!    device — *without* having trained on this kernel.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::Protocol;
+use uniperf::lpir::builder::{gid_lin_1d, KernelBuilder};
+use uniperf::lpir::{Access, DType, Expr, Layout};
+use uniperf::qpoly::{env, LinExpr};
+use uniperf::stats::{extract, ExtractOpts, Schema};
+
+fn main() {
+    let device = "k40c";
+    println!("== uniperf quickstart on simulated {device} ==\n");
+
+    // --- 1. express a kernel in the IR (out[i] = 2*a[i]) ----------------
+    let kernel = KernelBuilder::new("double", &["n"])
+        .group_dims_1d(LinExpr::var("n"), 256)
+        .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+        .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+        .insn(
+            Access::new("out", vec![gid_lin_1d(256)]),
+            Expr::mul(Expr::lit(2.0), Expr::load("a", vec![gid_lin_1d(256)])),
+            &["g0", "l0"],
+            &[],
+        )
+        .build()
+        .expect("kernel builds");
+    println!("kernel: out[i] = 2*a[i]  (n threads, 256-lane groups)\n");
+
+    // --- 2. symbolic property extraction ---------------------------------
+    let classify_env = env(&[("n", 1 << 22)]);
+    let props = extract(&kernel, &classify_env, ExtractOpts::default()).expect("extract");
+    println!("extracted properties (symbolic in n):");
+    for (label, q) in props.nonzero() {
+        println!("  {label:<28} {q}");
+    }
+
+    // --- 3. fit the device model (measurement campaign, §4) --------------
+    println!("\ncalibrating {device} (390-case measurement campaign)...");
+    let schema = Schema::full();
+    let cfg = Config {
+        devices: vec![device.into()],
+        backend: FitBackend::Auto,
+        protocol: Protocol::default(),
+        ..Config::default()
+    };
+    let dr = run_device(device, &schema, &cfg).expect("calibration");
+    println!(
+        "fitted {} weights, training geomean error {:.1}% (solver: {})",
+        dr.model.active.len(),
+        100.0 * dr.model.train_rel_err_geomean,
+        dr.model.solver
+    );
+
+    // --- 4. predict vs simulate across sizes -----------------------------
+    println!("\n{:<12} {:>12} {:>12} {:>8}", "n", "pred (µs)", "actual (µs)", "relerr");
+    let gpu = SimGpu::named(device).unwrap();
+    let protocol = Protocol::default();
+    for p in [20, 21, 22, 23, 24] {
+        let e = env(&[("n", 1i64 << p)]);
+        let pred = dr.model.predict_kernel(&schema, &props, &e).expect("predict");
+        let times = gpu.time(&kernel, &e, protocol.runs).expect("time");
+        let actual = protocol.reduce(&times);
+        println!(
+            "2^{p:<10} {:>12.1} {:>12.1} {:>7.1}%",
+            pred * 1e6,
+            actual * 1e6,
+            100.0 * (pred - actual).abs() / actual
+        );
+    }
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,60 @@
+"""AOT lowering: jax (L2) + Pallas (L1) -> HLO text artifacts for the
+Rust PJRT runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering uses
+``return_tuple=True``; the Rust side unwraps the result tuple.
+
+Usage: ``python -m compile.aot --outdir ../artifacts`` (from python/).
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+
+    fit_lowered = jax.jit(model.fit).lower(*model.fit_shapes())
+    fit_path = os.path.join(outdir, "fit.hlo.txt")
+    text = to_hlo_text(fit_lowered)
+    with open(fit_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {fit_path}")
+
+    pred_lowered = jax.jit(model.predict).lower(*model.predict_shapes())
+    pred_path = os.path.join(outdir, "predict.hlo.txt")
+    text = to_hlo_text(pred_lowered)
+    with open(pred_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {pred_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    build(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused Gram matrix + masked column-sum.
+
+The fit's hot spot is forming the normal equations of the scaled property
+matrix: ``G = Bs^T Bs`` and ``atb = Bs^T rowmask`` (paper section 4.3). The
+kernel tiles the case dimension into ``TILE``-row panels streamed through
+the grid; the (properties x properties) accumulator lives in the output
+block across grid steps.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): each panel is a
+(TILE, P) VMEM-resident block feeding the MXU via ``blk.T @ blk``;
+successive grid steps double-buffer panels from HBM. ``interpret=True``
+is mandatory on the CPU build (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# rows per grid step: one VMEM panel
+TILE = 128
+
+
+def _gram_kernel(b_ref, v_ref, g_ref, a_ref):
+    """One panel: accumulate G += blk^T blk, atb += blk^T v."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    blk = b_ref[...]
+    g_ref[...] += blk.T @ blk
+    a_ref[...] += blk.T @ v_ref[...]
+
+
+def gram(bs, rowmask):
+    """``(G, atb) = (bs^T bs, bs^T rowmask)`` for a (N, P) matrix.
+
+    ``N`` must be a multiple of :data:`TILE` (the AOT shapes are).
+    """
+    n, p = bs.shape
+    assert n % TILE == 0, f"rows {n} not a multiple of {TILE}"
+    grid = n // TILE
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE, p), lambda i: (i, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), bs.dtype),
+            jax.ShapeDtypeStruct((p,), bs.dtype),
+        ],
+        interpret=True,
+    )(bs, rowmask)

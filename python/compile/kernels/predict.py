@@ -1,0 +1,26 @@
+"""L1 Pallas kernel: batched model evaluation.
+
+Prediction is the paper's "rapid evaluation" claim: one inner product per
+kernel, ``times = P @ w``. Batched over up to MAX_BATCH property vectors;
+a single (B, P) block comfortably fits VMEM, so the kernel is one MXU
+matvec. ``interpret=True`` for the CPU build (see gram.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _predict_kernel(p_ref, w_ref, o_ref):
+    o_ref[...] = p_ref[...] @ w_ref[...]
+
+
+def predict(props, weights):
+    """``props (B, P) @ weights (P,) -> (B,)``."""
+    b, p = props.shape
+    assert weights.shape == (p,)
+    return pl.pallas_call(
+        _predict_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), props.dtype),
+        interpret=True,
+    )(props, weights)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (the pytest correctness
+signal: pallas-vs-ref allclose)."""
+
+import jax.numpy as jnp
+
+
+def gram_ref(bs, rowmask):
+    """Reference for :func:`..gram.gram`."""
+    return bs.T @ bs, bs.T @ rowmask
+
+
+def predict_ref(props, weights):
+    """Reference for :func:`..predict.predict`."""
+    return props @ weights
+
+
+def fit_ref(big_b, rowmask, ridge=1e-10):
+    """Reference for the full L2 fit (mirrors model.fit without Pallas):
+    column-equilibrated ridge-regularised normal equations."""
+    bm = big_b * rowmask[:, None]
+    scale = jnp.max(jnp.abs(bm), axis=0)
+    active = (scale > 0).astype(big_b.dtype)
+    scale_safe = jnp.where(scale > 0, scale, 1.0)
+    bs = bm / scale_safe
+    g = bs.T @ bs
+    atb = bs.T @ rowmask
+    nrows = jnp.sum(rowmask)
+    g = g + jnp.diag(ridge * nrows * active + (1.0 - active))
+    w = jnp.linalg.solve(g, atb * active)
+    return w * active / scale_safe

@@ -1,0 +1,90 @@
+"""L2: the fit and predict computations (paper section 4.3), built on the
+L1 Pallas kernels. Lowered once to HLO text by aot.py; never imported at
+run time by the Rust coordinator.
+
+The fixed AOT shapes (padding + masking contracts shared with
+rust/src/runtime/mod.rs):
+
+* fit:     B (MAX_CASES, MAX_PROPS) f64, rowmask (MAX_CASES,) f64
+           -> weights (MAX_PROPS,) f64
+* predict: P (MAX_BATCH, MAX_PROPS) f64, w (MAX_PROPS,) f64
+           -> times (MAX_BATCH,) f64
+
+Inactive (all-zero) columns receive zero weights; padded rows are masked
+by ``rowmask``. The relative-error scaling (dividing each property row by
+its measured time) happens on the Rust side before the call.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import gram as gram_kernel  # noqa: E402
+from .kernels import predict as predict_kernel  # noqa: E402
+
+# must match rust/src/runtime/mod.rs
+MAX_CASES = 512
+MAX_PROPS = 160
+MAX_BATCH = 64
+RIDGE = 1e-10
+
+
+def solve_spd(g, b):
+    """Gauss-Jordan solve for the (equilibrated, ridge-regularised,
+    symmetric positive-definite) normal equations.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK typed-FFI custom-call on CPU,
+    which xla_extension 0.5.1 (the Rust runtime) rejects; this loop lowers
+    to native HLO (while + dynamic-slice) instead. No pivoting is needed
+    for an SPD system with a unit diagonal on inactive columns.
+    """
+    n = g.shape[0]
+    aug = jnp.concatenate([g, b[:, None]], axis=1)  # (n, n+1)
+
+    def body(k, aug):
+        row = aug[k] / aug[k, k]
+        factors = aug[:, k].at[k].set(0.0)
+        aug = aug - factors[:, None] * row[None, :]
+        return aug.at[k].set(row)
+
+    aug = jax.lax.fori_loop(0, n, body, aug)
+    return aug[:, n]
+
+
+def fit(big_b, rowmask):
+    """Relative-error least squares ``min ||B w - 1||`` with column
+    equilibration and a tiny ridge; the Gram-matrix hot spot runs in the
+    Pallas kernel."""
+    bm = big_b * rowmask[:, None]
+    scale = jnp.max(jnp.abs(bm), axis=0)
+    active = (scale > 0).astype(big_b.dtype)
+    scale_safe = jnp.where(scale > 0, scale, 1.0)
+    bs = bm / scale_safe
+    g, atb = gram_kernel.gram(bs, rowmask)
+    nrows = jnp.sum(rowmask)
+    # unit diagonal on inactive columns keeps the system nonsingular
+    g = g + jnp.diag(RIDGE * nrows * active + (1.0 - active))
+    w = solve_spd(g, atb * active)
+    return (w * active / scale_safe,)
+
+
+def predict(props, weights):
+    """Batched model evaluation ``P @ w`` (Pallas matvec)."""
+    return (predict_kernel.predict(props, weights),)
+
+
+def fit_shapes():
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((MAX_CASES, MAX_PROPS), f64),
+        jax.ShapeDtypeStruct((MAX_CASES,), f64),
+    )
+
+
+def predict_shapes():
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((MAX_BATCH, MAX_PROPS), f64),
+        jax.ShapeDtypeStruct((MAX_PROPS,), f64),
+    )

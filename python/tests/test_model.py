@@ -1,0 +1,81 @@
+"""L2 correctness: the fit computation recovers known weights and matches
+both the pure-jnp reference and numpy's lstsq on active columns."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def padded_problem(n_cases, n_active, true_w, noise, seed):
+    """Build a (MAX_CASES, MAX_PROPS) padded B with known generating
+    weights in the first `n_active` columns."""
+    rng = np.random.default_rng(seed)
+    big_b = np.zeros((model.MAX_CASES, model.MAX_PROPS))
+    rowmask = np.zeros(model.MAX_CASES)
+    for i in range(n_cases):
+        props = rng.integers(1, 1000, n_active) * 1000.0
+        t = float(props @ true_w) * float(np.exp(noise * rng.standard_normal()))
+        big_b[i, :n_active] = props / t
+        rowmask[i] = 1.0
+    return jnp.asarray(big_b), jnp.asarray(rowmask)
+
+
+def test_fit_recovers_exact_weights():
+    true_w = np.array([1e-9, 5e-10, 2e-8])
+    big_b, rowmask = padded_problem(40, 3, true_w, 0.0, 3)
+    (w,) = model.fit(big_b, rowmask)
+    w = np.asarray(w)
+    np.testing.assert_allclose(w[:3], true_w, rtol=1e-6)
+    assert np.all(w[3:] == 0.0), "inactive columns must get zero weight"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_active=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fit_matches_reference(n_active, seed):
+    rng = np.random.default_rng(seed)
+    true_w = rng.uniform(1e-12, 1e-8, n_active)
+    big_b, rowmask = padded_problem(64, n_active, true_w, 0.02, seed)
+    (w,) = model.fit(big_b, rowmask)
+    w_ref = ref.fit_ref(big_b, rowmask, ridge=model.RIDGE)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=1e-8, atol=1e-18)
+
+
+def test_fit_matches_numpy_lstsq():
+    true_w = np.array([2e-12, 8e-12, 3e-9, 1e-4])
+    big_b, rowmask = padded_problem(100, 4, true_w, 0.05, 11)
+    (w,) = model.fit(big_b, rowmask)
+    bnp = np.asarray(big_b)[np.asarray(rowmask) > 0][:, :4]
+    w_np, *_ = np.linalg.lstsq(bnp, np.ones(bnp.shape[0]), rcond=None)
+    np.testing.assert_allclose(np.asarray(w)[:4], w_np, rtol=1e-4)
+
+
+def test_padded_rows_are_ignored():
+    true_w = np.array([1e-9, 2e-9])
+    big_b, rowmask = padded_problem(30, 2, true_w, 0.0, 5)
+    # poison the padded region; the rowmask must exclude it
+    poisoned = np.asarray(big_b).copy()
+    poisoned[31:, :2] = 1e30
+    (w_poisoned,) = model.fit(jnp.asarray(poisoned), rowmask)
+    (w_clean,) = model.fit(big_b, rowmask)
+    np.testing.assert_allclose(np.asarray(w_poisoned), np.asarray(w_clean), rtol=1e-10)
+
+
+def test_predict_shapes_and_values():
+    p = np.zeros((model.MAX_BATCH, model.MAX_PROPS))
+    p[0, 0] = 2e9
+    p[1, 1] = 3e9
+    w = np.zeros(model.MAX_PROPS)
+    w[0] = 1e-12
+    w[1] = 2e-12
+    (out,) = model.predict(jnp.asarray(p), jnp.asarray(w))
+    assert out.shape == (model.MAX_BATCH,)
+    np.testing.assert_allclose(np.asarray(out)[:2], [2e-3, 6e-3], rtol=1e-12)

@@ -1,0 +1,212 @@
+//! The pipeline coordinator: orchestrates measurement campaigns, fits and
+//! test-kernel evaluation across the simulated devices — the paper's
+//! Figure 1 wired end to end.
+//!
+//! Devices are processed in parallel on a thread pool
+//! ([`crate::util::executor`]); within one device, timing runs fan out
+//! over cases. Results (campaigns, models, tables) can be persisted to a
+//! JSON results directory.
+
+use crate::gpusim::SimGpu;
+use crate::harness::{self, Protocol};
+use crate::kernels;
+use crate::perfmodel::{self, Model, NativeSolver, Solver};
+use crate::report::{render_table2, Table1, Table1Entry};
+use crate::stats::{ExtractOpts, Schema};
+use crate::util::executor::{default_workers, par_map};
+use std::path::PathBuf;
+
+/// Which fit backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitBackend {
+    /// in-process Cholesky/QR ([`NativeSolver`])
+    Native,
+    /// AOT-compiled JAX/Pallas artifact through PJRT
+    Xla,
+    /// try the artifact, fall back to native if unavailable
+    Auto,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub devices: Vec<String>,
+    pub protocol: Protocol,
+    pub backend: FitBackend,
+    pub extract: ExtractOpts,
+    /// results directory (None = don't persist)
+    pub out_dir: Option<PathBuf>,
+    pub workers: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            devices: vec![
+                "titan_x".into(),
+                "c2070".into(),
+                "k40c".into(),
+                "r9_fury".into(),
+            ],
+            protocol: Protocol::default(),
+            backend: FitBackend::Auto,
+            extract: ExtractOpts::default(),
+            out_dir: None,
+            workers: default_workers(),
+        }
+    }
+}
+
+/// Per-device pipeline output.
+#[derive(Clone, Debug)]
+pub struct DeviceResult {
+    pub device: String,
+    pub model: Model,
+    pub launch_overhead_s: f64,
+    pub n_measurement_cases: usize,
+    /// (kernel, case letter, predicted, actual) for the §5 test kernels
+    pub tests: Vec<(String, String, f64, f64)>,
+}
+
+/// Full pipeline output.
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub per_device: Vec<DeviceResult>,
+    pub table1: Table1,
+}
+
+fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver>, String> {
+    match backend {
+        FitBackend::Native => Ok(Box::new(NativeSolver::new())),
+        FitBackend::Xla => Ok(Box::new(crate::runtime::XlaSolver::from_artifacts()?)),
+        FitBackend::Auto => match crate::runtime::XlaSolver::from_artifacts() {
+            Ok(s) => Ok(Box::new(s)),
+            Err(_) => Ok(Box::new(NativeSolver::new())),
+        },
+    }
+}
+
+/// Run the full per-device pipeline: measurement campaign → fit → test
+/// kernels → Table-1 entries.
+pub fn run_device(
+    device: &str,
+    schema: &Schema,
+    cfg: &Config,
+) -> Result<DeviceResult, String> {
+    let gpu = SimGpu::named(device).ok_or_else(|| format!("unknown device '{device}'"))?;
+
+    // 1. measurement campaign (§4.1 + §4.2)
+    let cases = kernels::measurement_suite(device);
+    let (pm, overhead) =
+        harness::run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, cfg.workers)?;
+
+    // 2. fit (§4.3)
+    let solver = make_solver(cfg.backend)?;
+    let model = perfmodel::fit(device, &pm, schema, solver.as_ref())?;
+
+    // 3. test kernels (§5): predict + measure
+    let mut tests = Vec::new();
+    let mut cache = harness::PropsCache::default();
+    for case in kernels::test_suite(device) {
+        let props = cache.props_for(&case, cfg.extract)?;
+        let predicted = model.predict_kernel(schema, &props, &case.env)?;
+        let times = gpu.time(&case.kernel, &case.env, cfg.protocol.runs)?;
+        let actual = cfg.protocol.reduce(&times);
+        // label format: "<kernel>/<letter>/..."
+        let mut parts = case.label.split('/');
+        let kname = parts.next().unwrap_or("?").to_string();
+        let letter = parts.next().unwrap_or("?").to_string();
+        tests.push((kname, letter, predicted, actual));
+    }
+
+    // 4. optional persistence
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let cj = harness::campaign_to_json(&pm, device, overhead);
+        std::fs::write(dir.join(format!("campaign_{device}.json")), cj.pretty())
+            .map_err(|e| e.to_string())?;
+        std::fs::write(
+            dir.join(format!("model_{device}.json")),
+            model.to_json(schema).pretty(),
+        )
+        .map_err(|e| e.to_string())?;
+    }
+
+    Ok(DeviceResult {
+        device: device.to_string(),
+        model,
+        launch_overhead_s: overhead,
+        n_measurement_cases: pm.n_cases(),
+        tests,
+    })
+}
+
+/// Run the pipeline across all configured devices (in parallel) and
+/// assemble Table 1.
+pub fn run_pipeline(cfg: &Config) -> Result<PipelineResult, String> {
+    let schema = Schema::full();
+    let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
+    let results = par_map(cfg.devices.clone(), device_workers, |dev| {
+        run_device(&dev, &schema, cfg)
+    });
+    let mut per_device = Vec::new();
+    for r in results {
+        per_device.push(r?);
+    }
+    let mut table1 = Table1::default();
+    for dr in &per_device {
+        for (kernel, case, pred, act) in &dr.tests {
+            table1.push(Table1Entry {
+                device: dr.device.clone(),
+                kernel: kernel.clone(),
+                case: case.clone(),
+                predicted_s: *pred,
+                actual_s: *act,
+            });
+        }
+    }
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::write(dir.join("table1.txt"), table1.render())
+            .map_err(|e| e.to_string())?;
+        for dr in &per_device {
+            std::fs::write(
+                dir.join(format!("table2_{}.txt", dr.device)),
+                render_table2(&dr.model, &schema),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(PipelineResult { per_device, table1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reduced-scope end-to-end smoke test: one device, native solver.
+    /// (The full 4-device pipeline runs in `rust/tests/` and the
+    /// `paper_tables` example.)
+    #[test]
+    fn single_device_pipeline_produces_model_and_tests() {
+        let cfg = Config {
+            devices: vec!["k40c".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        };
+        let schema = Schema::full();
+        let dr = run_device("k40c", &schema, &cfg).unwrap();
+        assert_eq!(dr.tests.len(), 16);
+        assert!(dr.n_measurement_cases > 300, "{}", dr.n_measurement_cases);
+        assert!(dr.launch_overhead_s > 0.0);
+        // the fitted model should predict its own training set decently
+        assert!(
+            dr.model.train_rel_err_geomean < 0.5,
+            "train geomean {}",
+            dr.model.train_rel_err_geomean
+        );
+        // test-kernel predictions should be positive and finite
+        for (k, c, pred, act) in &dr.tests {
+            assert!(pred.is_finite() && *act > 0.0, "{k}/{c}: pred={pred} act={act}");
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Simulated device profiles.
+//!
+//! Stand-ins for the paper's four GPUs (§5): Nvidia GTX Titan X
+//! (Maxwell), Tesla K40 (Kepler), Tesla C2070 (Fermi) and AMD Radeon R9
+//! Fury. Each profile parameterizes the *hidden* cost engine in
+//! [`super::timing`] — deliberately richer than the linear model
+//! (transactions, caches, overlap, occupancy waves, latency floors), so
+//! that fitting the model against the simulator remains a non-trivial
+//! approximation problem with the paper's error structure.
+//!
+//! The constants are drawn from the public spec sheets of the real parts
+//! (bandwidth, SM/CU counts, clocks, FP64 ratios) so that simulated times
+//! land in the same millisecond ranges as the paper's Table 1.
+
+/// A simulated GPU.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// marketing name for reports
+    pub full_name: &'static str,
+    /// streaming multiprocessors (Nvidia) / compute units (AMD)
+    pub sms: u32,
+    /// shader clock in Hz
+    pub clock_hz: f64,
+    /// f32 lanes per SM
+    pub cores_per_sm: u32,
+    /// SIMD width of a scheduling unit (warp 32 / wavefront 64)
+    pub warp_size: u32,
+    /// sustained DRAM bandwidth, bytes/s (≈75% of peak spec)
+    pub dram_bw: f64,
+    /// memory-transaction (cache-line) size in bytes
+    pub line_bytes: u32,
+    /// L2 cache size in bytes (smooths re-walked footprints)
+    pub l2_bytes: u64,
+    /// per-SM L1/texture cache in bytes (absorbs within-group reuse)
+    pub l1_bytes: u64,
+    /// L2-hit bandwidth multiplier over DRAM
+    pub l2_bw_mult: f64,
+    /// aggregate local/shared-memory bandwidth, bytes/s
+    pub local_bw: f64,
+    /// cycles per f32 op: add/sub & mul
+    pub cyc_mad: f64,
+    /// cycles per f32 division
+    pub cyc_div: f64,
+    /// cycles per f32 exponentiation (pow/exp)
+    pub cyc_exp: f64,
+    /// cycles per f32 special function (rsqrt, sqrt, trig)
+    pub cyc_special: f64,
+    /// f64 throughput ratio (f32 rate / f64 rate), e.g. 32 on Maxwell
+    pub f64_ratio: f64,
+    /// barrier cost in cycles per warp that crosses it
+    pub cyc_barrier: f64,
+    /// kernel-launch fixed overhead, seconds
+    pub launch_base: f64,
+    /// additional launch overhead per work group, seconds
+    pub launch_per_group: f64,
+    /// resident thread limit per SM (occupancy)
+    pub threads_per_sm: u32,
+    /// maximum resident groups per SM
+    pub max_groups_per_sm: u32,
+    /// maximum work-group size the device accepts
+    pub max_group_size: u32,
+    /// per-wave pipeline/latency floor, seconds (exposed when few waves)
+    pub wave_latency: f64,
+    /// fraction of min(mem, alu) hidden by overlap, in [0, 1]
+    pub overlap: f64,
+    /// run-to-run multiplicative noise sigma (log-normal)
+    pub noise_sigma: f64,
+    /// first-run (first-touch allocation) slowdown factor
+    pub first_touch_factor: f64,
+    /// extra noise sigma on the second run (paper §4.2 observes this)
+    pub second_run_sigma: f64,
+    /// "irregularity": amplitude of a deterministic size-dependent ripple
+    /// in effective bandwidth (0 = regular device)
+    pub irregularity: f64,
+    /// extra penalty multiplier on uncoalesced (large-stride) traffic
+    pub uncoalesced_penalty: f64,
+}
+
+/// The four devices of the paper's evaluation.
+pub fn all_devices() -> Vec<DeviceProfile> {
+    vec![titan_x(), k40c(), c2070(), r9_fury()]
+}
+
+/// Look up a device profile by short name.
+pub fn device(name: &str) -> Option<DeviceProfile> {
+    all_devices().into_iter().find(|d| d.name == name)
+}
+
+/// Nvidia GTX Titan X (Maxwell, GM200).
+pub fn titan_x() -> DeviceProfile {
+    DeviceProfile {
+        name: "titan_x",
+        full_name: "Nvidia GTX Titan X",
+        sms: 24,
+        clock_hz: 1.0e9,
+        cores_per_sm: 128,
+        warp_size: 32,
+        dram_bw: 0.75 * 336.5e9,
+        line_bytes: 128,
+        l2_bytes: 3 << 20,
+        l1_bytes: 48 << 10,
+        l2_bw_mult: 3.5,
+        local_bw: 24.0 * 128.0 * 1.0e9, // 128 B/cycle/SM
+        cyc_mad: 1.0,
+        cyc_div: 8.0,
+        cyc_exp: 16.0,
+        cyc_special: 4.0,
+        f64_ratio: 32.0,
+        cyc_barrier: 32.0,
+        launch_base: 6.0e-6,
+        launch_per_group: 1.5e-9,
+        threads_per_sm: 2048,
+        max_groups_per_sm: 32,
+        max_group_size: 1024,
+        wave_latency: 2.5e-6,
+        overlap: 0.70,
+        noise_sigma: 0.015,
+        first_touch_factor: 1.9,
+        second_run_sigma: 0.06,
+        irregularity: 0.0,
+        uncoalesced_penalty: 1.0,
+    }
+}
+
+/// Nvidia Tesla K40c (Kepler, GK110B).
+pub fn k40c() -> DeviceProfile {
+    DeviceProfile {
+        name: "k40c",
+        full_name: "Nvidia Tesla K40",
+        sms: 15,
+        clock_hz: 745.0e6,
+        cores_per_sm: 192,
+        warp_size: 32,
+        dram_bw: 0.72 * 288.4e9,
+        line_bytes: 128,
+        l2_bytes: 1536 << 10,
+        l1_bytes: 48 << 10,
+        l2_bw_mult: 3.0,
+        local_bw: 15.0 * 128.0 * 745.0e6,
+        cyc_mad: 1.0,
+        cyc_div: 10.0,
+        cyc_exp: 18.0,
+        cyc_special: 6.0,
+        f64_ratio: 3.0,
+        cyc_barrier: 40.0,
+        launch_base: 8.0e-6,
+        launch_per_group: 2.5e-9,
+        threads_per_sm: 2048,
+        max_groups_per_sm: 16,
+        max_group_size: 1024,
+        wave_latency: 3.5e-6,
+        overlap: 0.75, // Kepler's dual issue hides arithmetic well
+        noise_sigma: 0.012,
+        first_touch_factor: 1.8,
+        second_run_sigma: 0.05,
+        irregularity: 0.0,
+        uncoalesced_penalty: 1.1,
+    }
+}
+
+/// Nvidia Tesla C2070 (Fermi, GF100).
+pub fn c2070() -> DeviceProfile {
+    DeviceProfile {
+        name: "c2070",
+        full_name: "Nvidia Tesla C2070",
+        sms: 14,
+        clock_hz: 1.15e9,
+        cores_per_sm: 32,
+        warp_size: 32,
+        dram_bw: 0.70 * 144.0e9,
+        line_bytes: 128,
+        l2_bytes: 768 << 10,
+        l1_bytes: 48 << 10,
+        l2_bw_mult: 2.5,
+        local_bw: 14.0 * 64.0 * 1.15e9,
+        cyc_mad: 1.0,
+        cyc_div: 12.0,
+        cyc_exp: 20.0,
+        cyc_special: 8.0,
+        f64_ratio: 2.0,
+        cyc_barrier: 48.0,
+        launch_base: 10.0e-6,
+        launch_per_group: 3.5e-9,
+        threads_per_sm: 1536,
+        max_groups_per_sm: 8,
+        max_group_size: 1024,
+        wave_latency: 4.5e-6,
+        overlap: 0.60, // Fermi overlaps less
+        noise_sigma: 0.016,
+        first_touch_factor: 1.7,
+        second_run_sigma: 0.07,
+        irregularity: 0.0,
+        uncoalesced_penalty: 1.3, // weaker coalescing hardware
+    }
+}
+
+/// AMD Radeon R9 Fury (Fiji). The paper found this device "irregular and
+/// ... less amenable to being captured by our model", with the highest
+/// launch overhead; the profile reflects that with a large launch cost, a
+/// 64-lane wavefront, a deterministic bandwidth ripple and heavier
+/// uncoalesced-access penalties.
+pub fn r9_fury() -> DeviceProfile {
+    DeviceProfile {
+        name: "r9_fury",
+        full_name: "AMD Radeon R9 Fury",
+        sms: 56,
+        clock_hz: 1.0e9,
+        cores_per_sm: 64,
+        warp_size: 64,
+        dram_bw: 0.65 * 512.0e9,
+        line_bytes: 64,
+        l2_bytes: 2 << 20,
+        l1_bytes: 16 << 10,
+        l2_bw_mult: 2.0,
+        local_bw: 56.0 * 128.0 * 1.0e9,
+        cyc_mad: 1.0,
+        cyc_div: 10.0,
+        cyc_exp: 16.0,
+        cyc_special: 4.0,
+        f64_ratio: 16.0,
+        cyc_barrier: 40.0,
+        launch_base: 45.0e-6, // highest launch overhead (paper §4.2)
+        launch_per_group: 6.0e-9,
+        threads_per_sm: 2560,
+        max_groups_per_sm: 40,
+        max_group_size: 256, // paper: "the Radeon R9 Fury limits group sizes to 256"
+        wave_latency: 5.0e-6,
+        overlap: 0.55,
+        noise_sigma: 0.02,
+        first_touch_factor: 2.2,
+        second_run_sigma: 0.10,
+        irregularity: 0.35,
+        uncoalesced_penalty: 1.6,
+    }
+}
+
+impl DeviceProfile {
+    /// Peak f32 rate in ops/s.
+    pub fn peak_f32(&self) -> f64 {
+        self.sms as f64 * self.cores_per_sm as f64 * self.clock_hz
+    }
+
+    /// Cycles per op for a model operation kind.
+    pub fn cycles_for(&self, kind: crate::lpir::OpKind, bits: u32) -> f64 {
+        use crate::lpir::OpKind::*;
+        let base = match kind {
+            AddSub | Mul => self.cyc_mad,
+            Div => self.cyc_div,
+            Exp => self.cyc_exp,
+            Special => self.cyc_special,
+        };
+        if bits == 64 {
+            base * self.f64_ratio
+        } else {
+            base
+        }
+    }
+
+    /// Resident groups machine-wide for a given group size (occupancy).
+    pub fn concurrent_groups(&self, group_size: i64) -> i64 {
+        let by_threads = (self.threads_per_sm as i64 / group_size.max(1)).max(1);
+        let per_sm = by_threads.min(self.max_groups_per_sm as i64);
+        per_sm * self.sms as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_devices_registered() {
+        let names: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["titan_x", "k40c", "c2070", "r9_fury"]);
+        assert!(device("k40c").is_some());
+        assert!(device("gtx480").is_none());
+    }
+
+    #[test]
+    fn fury_is_the_irregular_device() {
+        let f = r9_fury();
+        for d in [titan_x(), k40c(), c2070()] {
+            assert!(f.launch_base > d.launch_base);
+            assert!(f.irregularity > d.irregularity);
+        }
+        assert_eq!(f.max_group_size, 256);
+        assert_eq!(f.warp_size, 64);
+    }
+
+    #[test]
+    fn peak_rates_ordering() {
+        // Titan X > Fury-f32? Fury peak: 56*64*1e9 = 3.58 Tops; TitanX 3.07
+        // — Fury has higher f32 peak; what must hold is Fermi being lowest.
+        let peaks: Vec<f64> = all_devices().iter().map(|d| d.peak_f32()).collect();
+        let fermi = c2070().peak_f32();
+        assert!(peaks.iter().all(|&p| p >= fermi));
+    }
+
+    #[test]
+    fn occupancy_limits() {
+        let d = titan_x();
+        assert_eq!(d.concurrent_groups(256), 8 * 24);
+        assert_eq!(d.concurrent_groups(1024), 2 * 24);
+        // tiny groups run into the max-groups cap
+        assert_eq!(d.concurrent_groups(32), 32 * 24);
+    }
+
+    #[test]
+    fn f64_costs_more() {
+        use crate::lpir::OpKind;
+        for d in all_devices() {
+            assert!(d.cycles_for(OpKind::Mul, 64) > d.cycles_for(OpKind::Mul, 32));
+            assert!(d.cycles_for(OpKind::Div, 32) > d.cycles_for(OpKind::AddSub, 32));
+        }
+    }
+}

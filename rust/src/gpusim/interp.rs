@@ -1,0 +1,589 @@
+//! Numeric kernel interpreter — the simulated device's execution engine.
+//!
+//! Executes a [`Kernel`] for a concrete parameter binding, following the
+//! schedule (instruction order, loop nesting; barriers are memory-order
+//! no-ops because lanes are executed instruction-synchronously, which is
+//! exactly the semantics barriers guarantee for race-free kernels).
+//!
+//! Used to *validate* every kernel in the library against a plain
+//! reference implementation — the simulator must run the same computation
+//! the paper's OpenCL kernels ran, not just time a description of it.
+
+use crate::lpir::{Access, DType, Expr, IdxTag, Kernel, MemSpace, RedOp, UnOp};
+#[cfg(test)]
+use crate::qpoly::LinExpr;
+use crate::schedule::{schedule, SchedItem, Schedule};
+use std::collections::BTreeMap;
+
+/// Global-array storage after execution.
+#[derive(Clone, Debug, Default)]
+pub struct Storage {
+    pub arrays: BTreeMap<String, Vec<f64>>,
+}
+
+impl Storage {
+    pub fn get(&self, name: &str) -> Option<&[f64]> {
+        self.arrays.get(name).map(|v| v.as_slice())
+    }
+}
+
+/// Deterministic input seeding: a cheap hash of (array, flat index) mapped
+/// into [-1, 1). Kernel reference implementations use the same function.
+pub fn seed_value(array: &str, flat: usize) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in array.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^= flat as u64;
+    h = h.wrapping_mul(0x100_0000_01b3);
+    h ^= h >> 33;
+    // map to [-1, 1) with 20 bits of resolution
+    ((h >> 44) as i64 - (1 << 19)) as f64 / (1 << 19) as f64
+}
+
+/// Tree form of a schedule (loops re-nested for recursive execution).
+enum Node {
+    Loop(String, Vec<Node>),
+    Run(usize),
+    Barrier,
+}
+
+fn build_tree(sched: &Schedule) -> Vec<Node> {
+    fn go(items: &[SchedItem], pos: &mut usize) -> Vec<Node> {
+        let mut out = Vec::new();
+        while *pos < items.len() {
+            match &items[*pos] {
+                SchedItem::OpenLoop(name) => {
+                    *pos += 1;
+                    let body = go(items, pos);
+                    out.push(Node::Loop(name.clone(), body));
+                }
+                SchedItem::CloseLoop(_) => {
+                    *pos += 1;
+                    return out;
+                }
+                SchedItem::RunInsn(id) => {
+                    out.push(Node::Run(*id));
+                    *pos += 1;
+                }
+                SchedItem::Barrier => {
+                    out.push(Node::Barrier);
+                    *pos += 1;
+                }
+            }
+        }
+        out
+    }
+    let mut pos = 0;
+    go(&sched.items, &mut pos)
+}
+
+struct Machine<'a> {
+    kernel: &'a Kernel,
+    env: &'a BTreeMap<String, i64>,
+    /// concrete extents and element strides per array
+    extents: BTreeMap<String, Vec<i64>>,
+    strides: BTreeMap<String, Vec<i64>>,
+    global: BTreeMap<String, Vec<f64>>,
+    /// local arrays, re-zeroed per group
+    local: BTreeMap<String, Vec<f64>>,
+    /// private arrays: lane-major [lane][elem]
+    private: BTreeMap<String, Vec<Vec<f64>>>,
+    lanes: Vec<(i64, i64)>,
+    l0_name: Option<String>,
+    l1_name: Option<String>,
+}
+
+impl<'a> Machine<'a> {
+    fn flat_index(&self, acc: &Access, ienv: &BTreeMap<String, i64>) -> Result<usize, String> {
+        let strides = &self.strides[&acc.array];
+        let extents = &self.extents[&acc.array];
+        let mut flat: i64 = 0;
+        for ((e, &st), &ext) in acc.idx.iter().zip(strides).zip(extents) {
+            let v = e.eval(ienv)?;
+            if v < 0 || v >= ext {
+                return Err(format!(
+                    "out-of-bounds access {}[..{v}..] (extent {ext}) in kernel '{}'",
+                    acc.array, self.kernel.name
+                ));
+            }
+            flat += v * st;
+        }
+        Ok(flat as usize)
+    }
+
+    fn read(&self, acc: &Access, lane: usize, ienv: &BTreeMap<String, i64>) -> Result<f64, String> {
+        let arr = self.kernel.array(&acc.array).unwrap();
+        let flat = self.flat_index(acc, ienv)?;
+        Ok(match arr.space {
+            MemSpace::Global => self.global[&acc.array][flat],
+            MemSpace::Local => self.local[&acc.array][flat],
+            MemSpace::Private => self.private[&acc.array][lane][flat],
+        })
+    }
+
+    fn write(
+        &mut self,
+        acc: &Access,
+        lane: usize,
+        ienv: &BTreeMap<String, i64>,
+        value: f64,
+        is_update: bool,
+    ) -> Result<(), String> {
+        let arr = self.kernel.array(&acc.array).unwrap();
+        let space = arr.space;
+        let flat = self.flat_index(acc, ienv)?;
+        let slot = match space {
+            MemSpace::Global => &mut self.global.get_mut(&acc.array).unwrap()[flat],
+            MemSpace::Local => &mut self.local.get_mut(&acc.array).unwrap()[flat],
+            MemSpace::Private => &mut self.private.get_mut(&acc.array).unwrap()[lane][flat],
+        };
+        if is_update {
+            *slot += value;
+        } else {
+            *slot = value;
+        }
+        Ok(())
+    }
+
+    fn eval(
+        &self,
+        e: &Expr,
+        lane: usize,
+        ienv: &mut BTreeMap<String, i64>,
+    ) -> Result<f64, String> {
+        Ok(match e {
+            Expr::Lit(x) => *x,
+            Expr::Idx(le) => le.eval(ienv)? as f64,
+            Expr::Load(a) => self.read(a, lane, ienv)?,
+            Expr::Cast(dt, x) => {
+                let v = self.eval(x, lane, ienv)?;
+                match dt {
+                    DType::F32 | DType::F32x4 => v as f32 as f64,
+                    _ => v,
+                }
+            }
+            Expr::Un(op, x) => {
+                let v = self.eval(x, lane, ienv)?;
+                match op {
+                    UnOp::Neg => -v,
+                    UnOp::Sqrt => v.sqrt(),
+                    UnOp::Rsqrt => 1.0 / v.sqrt(),
+                    UnOp::Exp => v.exp(),
+                    UnOp::Sin => v.sin(),
+                    UnOp::Cos => v.cos(),
+                    UnOp::Abs => v.abs(),
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                use crate::lpir::BinOp::*;
+                let x = self.eval(a, lane, ienv)?;
+                let y = self.eval(b, lane, ienv)?;
+                match op {
+                    Add => x + y,
+                    Sub => x - y,
+                    Mul => x * y,
+                    Div => x / y,
+                    Pow => x.powf(y),
+                    Min => x.min(y),
+                    Max => x.max(y),
+                }
+            }
+            Expr::Reduce(op, iname, body) => {
+                let dim = self
+                    .kernel
+                    .domain
+                    .dim(iname)
+                    .ok_or_else(|| format!("unknown reduction iname '{iname}'"))?;
+                let lo = dim.lo.eval(self.env)?;
+                let hi = dim.hi.eval(self.env)?;
+                let mut acc = match op {
+                    RedOp::Sum => 0.0,
+                    RedOp::Max => f64::NEG_INFINITY,
+                };
+                let mut v = lo;
+                while v < hi {
+                    let prev = ienv.insert(iname.clone(), v);
+                    let x = self.eval(body, lane, ienv)?;
+                    match prev {
+                        Some(p) => {
+                            ienv.insert(iname.clone(), p);
+                        }
+                        None => {
+                            ienv.remove(iname);
+                        }
+                    }
+                    match op {
+                        RedOp::Sum => acc += x,
+                        RedOp::Max => acc = acc.max(x),
+                    }
+                    v += dim.step;
+                }
+                acc
+            }
+        })
+    }
+
+    fn run_nodes(
+        &mut self,
+        nodes: &[Node],
+        ienv: &mut BTreeMap<String, i64>,
+    ) -> Result<(), String> {
+        for node in nodes {
+            match node {
+                Node::Barrier => {}
+                Node::Run(id) => {
+                    let insn = self.kernel.insns[*id].clone();
+                    // lanes not listed in `within` still execute the
+                    // instruction redundantly on real hardware; values are
+                    // identical, so executing all lanes is equivalent.
+                    for (lane, &(v0, v1)) in self.lanes.clone().iter().enumerate() {
+                        if let Some(n0) = &self.l0_name {
+                            ienv.insert(n0.clone(), v0);
+                        }
+                        if let Some(n1) = &self.l1_name {
+                            ienv.insert(n1.clone(), v1);
+                        }
+                        let value = self.eval(&insn.rhs, lane, ienv)?;
+                        self.write(&insn.lhs, lane, ienv, value, insn.is_update)?;
+                    }
+                }
+                Node::Loop(name, body) => {
+                    let dim = self
+                        .kernel
+                        .domain
+                        .dim(name)
+                        .ok_or_else(|| format!("unknown loop iname '{name}'"))?;
+                    let lo = dim.lo.eval(self.env)?;
+                    let hi = dim.hi.eval(self.env)?;
+                    let mut v = lo;
+                    while v < hi {
+                        ienv.insert(name.clone(), v);
+                        self.run_nodes(body, ienv)?;
+                        v += dim.step;
+                    }
+                    ienv.remove(name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execute a kernel, returning final global-array storage. Inputs are
+/// seeded with [`seed_value`]; outputs (and local/private scratch) start
+/// at zero.
+pub fn execute(kernel: &Kernel, env: &BTreeMap<String, i64>) -> Result<Storage, String> {
+    kernel.validate()?;
+    let sched = schedule(kernel)?;
+    let tree = build_tree(&sched);
+
+    // allocate arrays
+    let mut extents = BTreeMap::new();
+    let mut strides = BTreeMap::new();
+    let mut global = BTreeMap::new();
+    for arr in &kernel.arrays {
+        let ext = arr.extents_at(env)?;
+        let total: i64 = ext.iter().product::<i64>().max(0);
+        let st: Vec<i64> = arr
+            .elem_strides()
+            .iter()
+            .map(|q| q.eval(env).map(|x| x as i64))
+            .collect::<Result<_, _>>()?;
+        if arr.space == MemSpace::Global {
+            let mut data = vec![0.0; total as usize];
+            if !arr.is_output {
+                for (i, d) in data.iter_mut().enumerate() {
+                    *d = seed_value(&arr.name, i);
+                }
+            }
+            global.insert(arr.name.clone(), data);
+        }
+        extents.insert(arr.name.clone(), ext);
+        strides.insert(arr.name.clone(), st);
+    }
+
+    // grid setup
+    let locals = kernel.local_inames();
+    let groups_map = kernel.group_inames();
+    let l0 = locals.get(&0).cloned();
+    let l1 = locals.get(&1).cloned();
+    let l0_extent = match &l0 {
+        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
+        None => 1,
+    };
+    let l1_extent = match &l1 {
+        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
+        None => 1,
+    };
+    let mut lanes = Vec::with_capacity((l0_extent * l1_extent) as usize);
+    for v1 in 0..l1_extent {
+        for v0 in 0..l0_extent {
+            lanes.push((v0, v1));
+        }
+    }
+
+    let mut machine = Machine {
+        kernel,
+        env,
+        extents,
+        strides,
+        global,
+        local: BTreeMap::new(),
+        private: BTreeMap::new(),
+        lanes,
+        l0_name: l0,
+        l1_name: l1,
+    };
+
+    // iterate groups
+    let g0 = groups_map.get(&0).cloned();
+    let g1 = groups_map.get(&1).cloned();
+    let g0_extent = match &g0 {
+        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
+        None => 1,
+    };
+    let g1_extent = match &g1 {
+        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
+        None => 1,
+    };
+
+    let n_lanes = machine.lanes.len();
+    for gv1 in 0..g1_extent {
+        for gv0 in 0..g0_extent {
+            // fresh local/private storage per group
+            machine.local.clear();
+            machine.private.clear();
+            for arr in &kernel.arrays {
+                let total: i64 = machine.extents[&arr.name].iter().product();
+                match arr.space {
+                    MemSpace::Local => {
+                        machine.local.insert(arr.name.clone(), vec![0.0; total as usize]);
+                    }
+                    MemSpace::Private => {
+                        machine
+                            .private
+                            .insert(arr.name.clone(), vec![vec![0.0; total as usize]; n_lanes]);
+                    }
+                    MemSpace::Global => {}
+                }
+            }
+            let mut ienv: BTreeMap<String, i64> = env.clone();
+            if let Some(n) = &g0 {
+                ienv.insert(n.clone(), gv0);
+            }
+            if let Some(n) = &g1 {
+                ienv.insert(n.clone(), gv1);
+            }
+            machine.run_nodes(&tree, &mut ienv)?;
+        }
+    }
+    Ok(Storage { arrays: machine.global })
+}
+
+/// `IdxTag` re-export guard: interpreting a kernel whose sequential dims
+/// carry grid tags would double-count; assert the invariant here.
+pub fn check_grid_tags(kernel: &Kernel) -> Result<(), String> {
+    for d in &kernel.domain.dims {
+        if matches!(kernel.tag(&d.name), IdxTag::Group(a) | IdxTag::Local(a) if a > 1) {
+            return Err(format!("iname '{}' uses unsupported grid axis > 1", d.name));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid, gid_lin_1d, KernelBuilder};
+    use crate::lpir::Layout;
+    use crate::qpoly::env;
+
+    #[test]
+    fn seed_value_is_deterministic_and_bounded() {
+        for i in 0..1000 {
+            let v = seed_value("a", i);
+            assert_eq!(v, seed_value("a", i));
+            assert!((-1.0..1.0).contains(&v), "{v}");
+        }
+        assert_ne!(seed_value("a", 3), seed_value("b", 3));
+    }
+
+    #[test]
+    fn executes_double_kernel() {
+        let k = KernelBuilder::new("double", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![gid_lin_1d(64)]),
+                Expr::mul(Expr::lit(2.0), Expr::load("a", vec![gid_lin_1d(64)])),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 256)]);
+        let st = execute(&k, &e).unwrap();
+        let out = st.get("out").unwrap();
+        for i in 0..256 {
+            assert_eq!(out[i], 2.0 * seed_value("a", i));
+        }
+    }
+
+    #[test]
+    fn executes_tiled_transpose_with_barrier() {
+        // out[j, i] = a[i, j] via a local tile
+        let n = LinExpr::var("n");
+        let k = KernelBuilder::new("tr", &["n"])
+            .group_dims_2d(n.clone(), 8, n.clone(), 8)
+            .global_array("a", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, true)
+            .local_array("tile", DType::F32, &[8, 8])
+            .insn(
+                Access::new("tile", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load("a", vec![gid(1, 8), gid(0, 8)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .insn(
+                Access::new(
+                    "out",
+                    vec![
+                        LinExpr::scaled_var("g0", 8).add(&LinExpr::var("l1")),
+                        LinExpr::scaled_var("g1", 8).add(&LinExpr::var("l0")),
+                    ],
+                ),
+                Expr::load("tile", vec![LinExpr::var("l0"), LinExpr::var("l1")]),
+                &["g0", "g1", "l0", "l1"],
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 16)]);
+        let st = execute(&k, &e).unwrap();
+        let out = st.get("out").unwrap();
+        for i in 0..16usize {
+            for j in 0..16usize {
+                assert_eq!(out[j * 16 + i], seed_value("a", i * 16 + j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn executes_tiled_mm_with_accumulator() {
+        // c = a @ b via 4x4 tiles with private accumulator
+        let n = LinExpr::var("n");
+        let k = KernelBuilder::new("mm", &["n"])
+            .group_dims_2d(n.clone(), 4, n.clone(), 4)
+            .seq_tiles("kt", n.clone(), 4)
+            .red_dim("ki", LinExpr::constant(4))
+            .global_array("a", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, false)
+            .global_array("c", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, true)
+            .local_array("at", DType::F32, &[4, 4])
+            .local_array("bt", DType::F32, &[4, 4])
+            .private_array("acc", DType::F32, &[1])
+            .insn(
+                Access::new("at", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load(
+                    "a",
+                    vec![gid(1, 4), LinExpr::scaled_var("kt", 4).add(&LinExpr::var("l0"))],
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[],
+            )
+            .insn(
+                Access::new("bt", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load(
+                    "b",
+                    vec![LinExpr::scaled_var("kt", 4).add(&LinExpr::var("l1")), gid(0, 4)],
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[],
+            )
+            .update_insn(
+                Access::new("acc", vec![LinExpr::constant(0)]),
+                Expr::sum(
+                    "ki",
+                    Expr::mul(
+                        Expr::load("at", vec![LinExpr::var("l1"), LinExpr::var("ki")]),
+                        Expr::load("bt", vec![LinExpr::var("ki"), LinExpr::var("l0")]),
+                    ),
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[0, 1],
+            )
+            .insn(
+                Access::new("c", vec![gid(1, 4), gid(0, 4)]),
+                Expr::load("acc", vec![LinExpr::constant(0)]),
+                &["g0", "g1", "l0", "l1"],
+                &[2],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 8)]);
+        let st = execute(&k, &e).unwrap();
+        let c = st.get("c").unwrap();
+        let n = 8usize;
+        for i in 0..n {
+            for j in 0..n {
+                let want: f64 = (0..n)
+                    .map(|kk| seed_value("a", i * n + kk) * seed_value("b", kk * n + j))
+                    .sum();
+                assert!(
+                    (c[i * n + j] - want).abs() < 1e-12,
+                    "c[{i},{j}] = {} want {want}",
+                    c[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_detected() {
+        let k = KernelBuilder::new("oob", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![gid_lin_1d(64)]),
+                Expr::load("a", vec![gid_lin_1d(64).add(&LinExpr::constant(1))]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        assert!(execute(&k, &env(&[("n", 64)])).is_err());
+    }
+
+    #[test]
+    fn strided_seq_loop_executes_correct_subset() {
+        // out[i] = a[3i] for i in the strided global pattern (stride-3 read)
+        let k = KernelBuilder::new("s3", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(3)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![gid_lin_1d(64)]),
+                Expr::load("a", vec![gid_lin_1d(64).scale(3)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 128)]);
+        let st = execute(&k, &e).unwrap();
+        let out = st.get("out").unwrap();
+        for i in 0..128 {
+            assert_eq!(out[i], seed_value("a", 3 * i));
+        }
+    }
+}

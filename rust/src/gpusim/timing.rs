@@ -1,0 +1,593 @@
+//! The hidden timing engine of the simulated GPUs.
+//!
+//! Produces a wall time for (kernel, parameter binding, device) from a
+//! transaction-level cost analysis that is *strictly richer* than the
+//! paper's linear model:
+//!
+//! * per-warp memory-transaction counting from concrete addresses
+//!   (coalescing over cache lines),
+//! * L2 smoothing of re-walked footprints,
+//! * memory/arithmetic overlap,
+//! * occupancy wave quantization and per-wave latency floors,
+//! * per-device launch overhead (base + per-group),
+//! * a deterministic size-dependent bandwidth ripple on "irregular"
+//!   devices (the R9 Fury profile).
+//!
+//! None of these effects are linear in the model's properties, so the fit
+//! against this engine exhibits the paper's error structure rather than
+//! being a change of basis.
+
+use super::device::DeviceProfile;
+use crate::lpir::{Insn, Kernel, MemSpace};
+use crate::qpoly::LinExpr;
+use std::collections::BTreeMap;
+
+/// Cost breakdown for one kernel launch (seconds unless noted).
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub launch: f64,
+    pub mem: f64,
+    pub alu: f64,
+    pub local: f64,
+    pub barrier: f64,
+    /// occupancy waves the launch is quantized into
+    pub waves: i64,
+    pub total: f64,
+}
+
+/// sample positions (fractions of a loop range) for warp address sampling
+const SAMPLE_FRACS: [f64; 4] = [0.0, 0.37, 0.71, 0.93];
+
+struct AccessCost {
+    /// estimated DRAM traffic for this access over the whole launch
+    dram_bytes: f64,
+}
+
+/// Bandwidth multiplier for warp-uniform (broadcast) loads: all lanes hit
+/// one line, which the constant-cache / broadcast path serves without
+/// repeated line fetches.
+const BROADCAST_MULT: f64 = 12.0;
+
+/// Count distinct cache lines a warp touches for one access, averaged over
+/// a few sampled warp instances.
+#[allow(clippy::too_many_arguments)]
+fn warp_lines(
+    kernel: &Kernel,
+    insn: &Insn,
+    idx: &[LinExpr],
+    axis_strides: &[i64],
+    elem_bytes: i64,
+    red: &[String],
+    env: &BTreeMap<String, i64>,
+    profile: &DeviceProfile,
+) -> Result<(f64, bool), String> {
+    // inames the access ranges over: instruction inames + reduction scope
+    let mut names: Vec<String> = insn.within.clone();
+    for r in red {
+        if !names.contains(r) {
+            names.push(r.clone());
+        }
+    }
+    // lane axes
+    let locals = kernel.local_inames();
+    let l0 = locals.get(&0);
+    let l1 = locals.get(&1);
+    let l0_ext = match l0 {
+        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
+        None => 1,
+    };
+    let l1_ext = match l1 {
+        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
+        None => 1,
+    };
+    let threads = (l0_ext * l1_ext).max(1);
+    let warp = (profile.warp_size as i64).min(threads);
+
+    let mut total_lines = 0.0;
+    let mut samples = 0usize;
+    let mut all_broadcast = true;
+    // one reusable iname environment for the whole sampling loop
+    let mut ienv = env.clone();
+    let mut addrs: Vec<i64> = Vec::with_capacity(warp as usize);
+    for (si, frac) in SAMPLE_FRACS.iter().enumerate() {
+        // fix non-lane inames at a sampled position in their range
+        for name in &names {
+            if Some(name) == l0 || Some(name) == l1 {
+                continue;
+            }
+            let dim = match kernel.domain.dim(name) {
+                Some(d) => d,
+                None => continue,
+            };
+            let trip = dim.trip_count_at(env)?;
+            let lo = dim.lo.eval(env)?;
+            let t = ((frac * (trip - 1).max(0) as f64).floor() as i64).clamp(0, (trip - 1).max(0));
+            ienv.insert(name.clone(), lo + dim.step * t);
+        }
+        // one warp: linear local ids [w0, w0 + warp)
+        let w0 = if si % 2 == 0 { 0 } else { ((threads / warp).max(1) - 1) * warp };
+        addrs.clear();
+        for lid in w0..(w0 + warp) {
+            if let Some(n0) = l0 {
+                ienv.insert(n0.clone(), lid % l0_ext);
+            }
+            if let Some(n1) = l1 {
+                ienv.insert(n1.clone(), (lid / l0_ext) % l1_ext.max(1));
+            }
+            let mut flat: i64 = 0;
+            for (e, &st) in idx.iter().zip(axis_strides) {
+                flat += e.eval(&ienv)? * st;
+            }
+            addrs.push(flat * elem_bytes);
+        }
+        addrs.sort_unstable();
+        let uniform = addrs.first() == addrs.last() && !addrs.is_empty();
+        let mut lines = 0usize;
+        let mut prev = i64::MIN;
+        for &a in &addrs {
+            let line = a.div_euclid(profile.line_bytes as i64);
+            if line != prev {
+                lines += 1;
+                prev = line;
+            }
+        }
+        total_lines += lines as f64;
+        all_broadcast &= uniform;
+        samples += 1;
+    }
+    Ok((total_lines / samples as f64, all_broadcast))
+}
+
+/// Analyze all global accesses of a kernel into DRAM traffic estimates.
+fn access_costs(
+    kernel: &Kernel,
+    env: &BTreeMap<String, i64>,
+    profile: &DeviceProfile,
+) -> Result<Vec<AccessCost>, String> {
+    let mut costs = Vec::new();
+    // per-array total requested bytes, for cache smoothing
+    let mut requested: BTreeMap<String, f64> = BTreeMap::new();
+    let mut raw: Vec<(String, f64, bool)> = Vec::new(); // (array, line-bytes, uncoalesced)
+    // per-array flattened accesses with group inames pinned (for the
+    // per-group unique-working-set estimate)
+    let mut group_flats: BTreeMap<String, Vec<crate::stats::footprint::FlatAccess>> =
+        BTreeMap::new();
+
+    let locals = kernel.local_inames();
+    let l0_ext = match locals.get(&0) {
+        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
+        None => 1,
+    };
+    let l1_ext = match locals.get(&1) {
+        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
+        None => 1,
+    };
+    let threads = (l0_ext * l1_ext).max(1);
+    let warp = (profile.warp_size as i64).min(threads) as f64;
+
+    for insn in &kernel.insns {
+        let mut handle = |idx: &[LinExpr], array: &str, red: &[String]| -> Result<(), String> {
+            let arr = match kernel.array(array) {
+                Some(a) => a,
+                None => return Ok(()),
+            };
+            if arr.space != MemSpace::Global {
+                return Ok(());
+            }
+            let axis_strides: Vec<i64> = arr
+                .elem_strides()
+                .iter()
+                .map(|q| q.eval(env).map(|x| x as i64))
+                .collect::<Result<_, _>>()?;
+            let elem_bytes = arr.dtype.size_bytes() as i64;
+            let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+            for r in red {
+                if !names.contains(&r.as_str()) {
+                    names.push(r);
+                }
+            }
+            let execs = kernel.domain.project_onto(&names).count_at(env)? as f64;
+            let (lines_per_warp, broadcast) =
+                warp_lines(kernel, insn, idx, &axis_strides, elem_bytes, red, env, profile)?;
+            let n_warps = execs / warp;
+            let mut bytes = lines_per_warp * n_warps * profile.line_bytes as f64;
+            if broadcast {
+                // warp-uniform load: served by the broadcast/constant path
+                bytes /= BROADCAST_MULT;
+            }
+            // ideal fully-coalesced line count for this access width
+            let ideal = (warp * elem_bytes as f64 / profile.line_bytes as f64).max(1.0);
+            let uncoalesced = lines_per_warp > 2.5 * ideal;
+            *requested.entry(array.to_string()).or_insert(0.0) += bytes;
+            raw.push((array.to_string(), bytes, uncoalesced));
+            // flattened access with group inames pinned to group 0
+            let mut flat =
+                crate::stats::footprint::flatten_access(kernel, idx, &axis_strides, env)?;
+            for (_, gname) in kernel.group_inames() {
+                flat.coeffs.remove(&gname);
+                flat.ranges.remove(&gname);
+            }
+            group_flats.entry(array.to_string()).or_default().push(flat);
+            Ok(())
+        };
+        handle(&insn.lhs.idx, &insn.lhs.array, &[])?;
+        if insn.is_update {
+            handle(&insn.lhs.idx, &insn.lhs.array, &[])?;
+        }
+        let mut err: Option<String> = None;
+        insn.rhs.visit_loads(&mut |a, red| {
+            if err.is_none() {
+                err = handle(&a.idx, &a.array, red).err();
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+    }
+
+    // Cache smoothing: traffic beyond an array's compulsory footprint is
+    // served from cache when one of these working sets fits —
+    // * the whole array is L2-resident, or
+    // * the *unique* cells one work group touches fit its SM's L1
+    //   (temporal reuse inside a tile region, e.g. convolution windows),
+    //   estimated by enumerating the access pattern with the group
+    //   inames pinned, or
+    // * the concurrently-resident groups' unique slices fit L2.
+    let groups = kernel.group_count_at(env)?.max(1) as f64;
+    let (gs0, gs1) = kernel.group_size_at(env)?;
+    let concurrent = profile.concurrent_groups(gs0 * gs1) as f64;
+    // per-array unique bytes one group touches
+    let mut group_unique: BTreeMap<String, f64> = BTreeMap::new();
+    for (array, flats) in &group_flats {
+        let arr = kernel.array(array).unwrap();
+        let cells = crate::stats::footprint::unique_cells(flats) as f64;
+        group_unique.insert(array.clone(), cells * arr.dtype.size_bytes() as f64);
+    }
+    for (array, bytes, uncoalesced) in raw {
+        let arr = kernel.array(&array).unwrap();
+        let footprint: f64 = arr
+            .extents_at(env)?
+            .iter()
+            .map(|&e| e as f64)
+            .product::<f64>()
+            * arr.dtype.size_bytes() as f64;
+        let total_req = requested[&array];
+        let per_group = group_unique.get(&array).copied().unwrap_or(footprint);
+        let cached = footprint <= profile.l2_bytes as f64
+            || per_group <= profile.l1_bytes as f64
+            || per_group * concurrent.min(groups) <= profile.l2_bytes as f64;
+        let dram = if cached && total_req > footprint {
+            // this access's share of the compulsory traffic + cache-rate rest
+            let share = bytes / total_req;
+            footprint * share + (bytes - footprint * share) / profile.l2_bw_mult
+        } else {
+            bytes
+        };
+        let dram = if uncoalesced { dram * profile.uncoalesced_penalty } else { dram };
+        costs.push(AccessCost { dram_bytes: dram });
+    }
+    Ok(costs)
+}
+
+/// Deterministic device-irregularity ripple (R9 Fury): effective
+/// bandwidth oscillates with the footprint size.
+fn ripple(profile: &DeviceProfile, dram_bytes: f64) -> f64 {
+    if profile.irregularity == 0.0 {
+        return 1.0;
+    }
+    let x = (dram_bytes.max(1.0)).ln();
+    1.0 + profile.irregularity * 0.5 * (1.0 + (4.7 * x).sin()) * 0.5
+}
+
+/// Compute the noise-free cost breakdown of one launch.
+pub fn base_time(
+    profile: &DeviceProfile,
+    kernel: &Kernel,
+    env: &BTreeMap<String, i64>,
+) -> Result<Breakdown, String> {
+    let (gs0, gs1) = kernel.group_size_at(env)?;
+    let group_size = gs0 * gs1;
+    if group_size > profile.max_group_size as i64 {
+        return Err(format!(
+            "group size {group_size} exceeds device limit {} on {}",
+            profile.max_group_size, profile.name
+        ));
+    }
+    let groups = kernel.group_count_at(env)?.max(1);
+
+    // --- memory ---------------------------------------------------------
+    let costs = access_costs(kernel, env, profile)?;
+    let dram_bytes: f64 = costs.iter().map(|c| c.dram_bytes).sum();
+    let mem = dram_bytes * ripple(profile, dram_bytes) / profile.dram_bw;
+
+    // --- arithmetic -------------------------------------------------------
+    let mut alu_cycles = 0.0;
+    for insn in &kernel.insns {
+        for ((kind, bits), q) in crate::stats::ops::count_insn_ops(kernel, insn) {
+            let count = q.eval(env)?;
+            alu_cycles += count * profile.cycles_for(kind, bits);
+        }
+    }
+    let alu = alu_cycles / (profile.sms as f64 * profile.cores_per_sm as f64 * profile.clock_hz);
+
+    // --- local (shared) memory traffic ------------------------------------
+    // Bank conflicts (32 banks, 4-byte words): a lane stride of s
+    // serializes a warp's access gcd(s, 32)-fold; strides 0 (broadcast)
+    // and 1 are conflict-free. The linear model can optionally bin local
+    // loads by this stride (paper §6.2 future work; ExtractOpts).
+    let lane0 = kernel.local_inames().get(&0).cloned();
+    let conflict_factor = |arr_name: &str, idx: &[LinExpr]| -> Result<f64, String> {
+        let Some(lane) = &lane0 else { return Ok(1.0) };
+        let arr = kernel.array(arr_name).unwrap();
+        let axis_strides: Vec<i64> = arr
+            .elem_strides()
+            .iter()
+            .map(|q| q.eval(env).map(|x| x as i64))
+            .collect::<Result<_, _>>()?;
+        let mut s: i64 = 0;
+        for (e, &st) in idx.iter().zip(&axis_strides) {
+            s += e.coeff(lane) * st;
+        }
+        let s = s.abs();
+        // worst-case serialization is gcd(s, banks); real parts mitigate
+        // via line multicast, so cap the effective degree
+        Ok(if s <= 1 { 1.0 } else { (gcd_i64(s, 32) as f64).min(4.0) })
+    };
+    let mut local_bytes = 0.0;
+    for insn in &kernel.insns {
+        // stores to local
+        if let Some(arr) = kernel.array(&insn.lhs.array) {
+            if arr.space == MemSpace::Local {
+                let execs = kernel.insn_domain(insn, false).count_at(env)? as f64;
+                local_bytes += execs
+                    * arr.dtype.size_bytes() as f64
+                    * conflict_factor(&insn.lhs.array, &insn.lhs.idx)?;
+            }
+        }
+        let mut err: Option<String> = None;
+        insn.rhs.visit_loads(&mut |a, red| {
+            if err.is_some() {
+                return;
+            }
+            if let Some(arr) = kernel.array(&a.array) {
+                if arr.space == MemSpace::Local {
+                    let mut names: Vec<&str> =
+                        insn.within.iter().map(|s| s.as_str()).collect();
+                    for r in red {
+                        if !names.contains(&r.as_str()) {
+                            names.push(r);
+                        }
+                    }
+                    let factor = match conflict_factor(&a.array, &a.idx) {
+                        Ok(f) => f,
+                        Err(e) => {
+                            err = Some(e);
+                            return;
+                        }
+                    };
+                    match kernel.domain.project_onto(&names).count_at(env) {
+                        Ok(execs) => {
+                            local_bytes +=
+                                execs as f64 * arr.dtype.size_bytes() as f64 * factor
+                        }
+                        Err(e) => err = Some(e),
+                    }
+                }
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+    }
+    let local = local_bytes / profile.local_bw;
+
+    // --- barriers -----------------------------------------------------------
+    let sched = crate::schedule::schedule(kernel)?;
+    let per_group = sched.barriers_per_group(kernel).eval(env)?;
+    let warps_per_group =
+        ((group_size as f64) / profile.warp_size as f64).ceil().max(1.0);
+    let barrier = per_group * groups as f64 * warps_per_group * profile.cyc_barrier
+        / (profile.clock_hz * profile.sms as f64);
+
+    // --- overlap + occupancy -------------------------------------------------
+    let busy = mem.max(alu).max(local);
+    let hidden = mem + alu + local - busy;
+    let mut exec = busy + (1.0 - profile.overlap) * hidden + barrier;
+
+    let concurrent = profile.concurrent_groups(group_size);
+    let waves = (groups + concurrent - 1) / concurrent;
+    // wave quantization: partially-filled final waves waste throughput.
+    // Only a fraction of the workload is latency/occupancy sensitive.
+    let quant = (waves * concurrent) as f64 / groups as f64;
+    const LAT_SENSITIVITY: f64 = 0.25;
+    exec *= 1.0 + LAT_SENSITIVITY * (quant - 1.0);
+    // pipeline-latency floor: one full traversal plus a small per-wave
+    // scheduling cost (waves pipeline, they do not serialize the latency)
+    exec += profile.wave_latency + (waves - 1) as f64 * 120e-9;
+
+    let launch = profile.launch_base + profile.launch_per_group * groups as f64;
+    Ok(Breakdown {
+        launch,
+        mem,
+        alu,
+        local,
+        barrier,
+        waves,
+        total: launch + exec,
+    })
+}
+
+/// Simulated per-run wall times implementing the paper's §4.2 timing
+/// artifacts: first-touch slowdown on run 0, extra variance on run 1,
+/// log-normal noise on every run.
+pub fn run_times(
+    profile: &DeviceProfile,
+    kernel: &Kernel,
+    env: &BTreeMap<String, i64>,
+    runs: usize,
+    seed: u64,
+) -> Result<Vec<f64>, String> {
+    let base = base_time(profile, kernel, env)?;
+    // stable per-(device, kernel, env) stream
+    let mut h: u64 = seed ^ 0x9E37_79B9_97F4_A7C1;
+    for b in profile.name.bytes().chain(kernel.name.bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    for (k, v) in env {
+        for b in k.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h = (h ^ *v as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    let mut rng = crate::util::rng::Rng::new(h);
+    let mut out = Vec::with_capacity(runs);
+    for r in 0..runs {
+        let mut t = base.total;
+        if r == 0 {
+            t *= profile.first_touch_factor;
+        }
+        let sigma = if r == 1 {
+            profile.second_run_sigma
+        } else {
+            profile.noise_sigma
+        };
+        t *= rng.lognormal(sigma);
+        out.push(t);
+    }
+    Ok(out)
+}
+
+fn gcd_i64(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd_i64(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{all_devices, r9_fury, titan_x};
+    use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+    use crate::lpir::{Access, DType, Expr, Layout};
+    use crate::qpoly::env;
+
+    fn copy_kernel(lsize: i64) -> Kernel {
+        KernelBuilder::new("copy", &["n"])
+            .group_dims_1d(LinExpr::var("n"), lsize)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(lsize)]),
+                Expr::load("a", vec![gid_lin_1d(lsize)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn copy_is_bandwidth_bound_and_sane() {
+        let d = titan_x();
+        let e = env(&[("n", 1 << 24)]);
+        let b = base_time(&d, &copy_kernel(256), &e).unwrap();
+        // 2 * 64 MiB over ~252 GB/s ≈ 0.53 ms
+        assert!(b.mem > b.alu);
+        assert!(b.total > 0.3e-3 && b.total < 2.0e-3, "total {}", b.total);
+    }
+
+    #[test]
+    fn bigger_problems_take_longer() {
+        let d = titan_x();
+        let k = copy_kernel(256);
+        let t1 = base_time(&d, &k, &env(&[("n", 1 << 20)])).unwrap().total;
+        let t2 = base_time(&d, &k, &env(&[("n", 1 << 22)])).unwrap().total;
+        assert!(t2 > 2.0 * t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn slower_device_is_slower() {
+        let e = env(&[("n", 1 << 24)]);
+        let k = copy_kernel(256);
+        let fast = base_time(&titan_x(), &k, &e).unwrap().total;
+        let slow = base_time(&crate::gpusim::device::c2070(), &k, &e).unwrap().total;
+        assert!(slow > 1.5 * fast, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn strided_reads_cost_more() {
+        let lsize = 256;
+        let strided = KernelBuilder::new("s4", &["n"])
+            .group_dims_1d(LinExpr::var("n"), lsize)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(4)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(lsize)]),
+                Expr::load("a", vec![gid_lin_1d(lsize).scale(4)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 1 << 22)]);
+        for d in all_devices() {
+            let dense = base_time(&d, &copy_kernel(lsize), &e).unwrap().total;
+            let strid = base_time(&d, &strided, &e).unwrap().total;
+            assert!(strid > 1.5 * dense, "{}: dense={dense} strided={strid}", d.name);
+        }
+    }
+
+    #[test]
+    fn group_size_limit_enforced() {
+        let k = copy_kernel(512);
+        let e = env(&[("n", 1 << 20)]);
+        assert!(base_time(&r9_fury(), &k, &e).is_err()); // Fury caps at 256
+        assert!(base_time(&titan_x(), &k, &e).is_ok());
+    }
+
+    #[test]
+    fn run_protocol_artifacts() {
+        let d = titan_x();
+        let k = copy_kernel(256);
+        let e = env(&[("n", 1 << 22)]);
+        let times = run_times(&d, &k, &e, 30, 1).unwrap();
+        assert_eq!(times.len(), 30);
+        // first run is slower than the rest (first-touch)
+        let min_rest = times[2..].iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(times[0] > 1.4 * min_rest, "t0={} min={}", times[0], min_rest);
+        // deterministic for same seed
+        assert_eq!(times, run_times(&d, &k, &e, 30, 1).unwrap());
+        // different for different seed
+        assert_ne!(times, run_times(&d, &k, &e, 30, 2).unwrap());
+    }
+
+    #[test]
+    fn empty_kernel_dominated_by_launch_overhead() {
+        // launch-grid-only kernel: writes nothing, does nothing
+        let k = KernelBuilder::new("empty", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("sink", DType::F32, vec![LinExpr::constant(1)], Layout::RowMajor, true)
+            .insn(
+                Access::new("sink", vec![LinExpr::constant(0)]),
+                Expr::lit(0.0),
+                &["g0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let d = r9_fury();
+        let small = base_time(&d, &k, &env(&[("n", 1 << 16)])).unwrap();
+        assert!(small.launch > 0.5 * small.total, "{small:?}");
+        // overhead grows with group count
+        let big = base_time(&d, &k, &env(&[("n", 1 << 22)])).unwrap();
+        assert!(big.launch > small.launch);
+    }
+}

@@ -1,0 +1,486 @@
+//! Integer-set counting — the stand-in for isl + barvinok (paper §3.2).
+//!
+//! The basic primitive is counting the integer points of a parametric set,
+//! producing a piecewise quasi-polynomial ([`crate::qpoly::PwQPoly`]) in
+//! the size parameters. Two paths are provided, mirroring the paper
+//! (which uses barvinok "with a fallback to a less accurate, simpler
+//! counting technique"):
+//!
+//! * [`BoxDomain`] — the symbolic fast path: rectangular (possibly strided
+//!   and tiled) loop domains, which covers every measurement and test
+//!   kernel in the paper. Counts are exact piecewise quasi-polynomials.
+//! * [`Set`] — general disjunctions of conjunctions of affine constraints,
+//!   counted by enumeration at a concrete parameter binding (the
+//!   fallback path; exact but not symbolic).
+//!
+//! The module also provides arithmetic-progression counting helpers used
+//! by the footprint analysis ([`progression`]).
+
+use crate::qpoly::{Atom, Guard, LinExpr, PwQPoly, QPoly};
+use std::collections::BTreeMap;
+
+pub mod progression;
+
+/// Upper bound of a loop dimension: `ceil(num / den)` (exclusive).
+/// `den == 1` is the common affine case.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CeilDiv {
+    pub num: LinExpr,
+    pub den: i64,
+}
+
+impl CeilDiv {
+    pub fn affine(e: LinExpr) -> CeilDiv {
+        CeilDiv { num: e, den: 1 }
+    }
+
+    pub fn new(num: LinExpr, den: i64) -> CeilDiv {
+        assert!(den >= 1, "denominator must be positive");
+        CeilDiv { num, den }
+    }
+
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let n = self.num.eval(env)?;
+        Ok(div_ceil(n, self.den))
+    }
+
+    /// Symbolic value as a quasi-polynomial: `ceil(num/den) =
+    /// floor((num + den - 1)/den)`.
+    pub fn as_qpoly(&self) -> QPoly {
+        if self.den == 1 {
+            QPoly::from_lin(&self.num)
+        } else {
+            let shifted = self.num.add(&LinExpr::constant(self.den - 1));
+            QPoly::from_atom(Atom::FloorDiv(shifted, self.den))
+        }
+    }
+}
+
+#[inline]
+pub fn div_ceil(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    a.div_euclid(b) + if a.rem_euclid(b) != 0 { 1 } else { 0 }
+}
+
+/// One dimension of a rectangular loop domain:
+/// `{ lo + step*t : 0 <= t, lo + step*t < hi }` (so trip count
+/// `ceil((hi - lo)/step)` with `hi = ceil(num/den)`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dim {
+    pub name: String,
+    /// inclusive lower bound (affine in parameters)
+    pub lo: LinExpr,
+    /// exclusive upper bound, possibly a ceil-division (tile counts)
+    pub hi: CeilDiv,
+    /// stride between consecutive iterations (>= 1)
+    pub step: i64,
+}
+
+impl Dim {
+    /// `0 <= name < hi`, step 1.
+    pub fn simple(name: &str, hi: LinExpr) -> Dim {
+        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step: 1 }
+    }
+
+    /// `0 <= name < ceil(num/den)`, step 1 — tile loops.
+    pub fn tiles(name: &str, num: LinExpr, den: i64) -> Dim {
+        assert!(den >= 1);
+        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::new(num, den), step: 1 }
+    }
+
+    /// `0 <= name < hi` visiting every `step`-th point — strided loops.
+    pub fn strided(name: &str, hi: LinExpr, step: i64) -> Dim {
+        assert!(step >= 1);
+        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step }
+    }
+
+    /// Symbolic trip count.
+    pub fn trip_count(&self) -> QPoly {
+        if self.den_is_simple() {
+            // ceil((hi - lo)/step) with affine hi
+            let extent = self.hi.num.sub(&self.lo);
+            if self.step == 1 {
+                QPoly::from_lin(&extent)
+            } else {
+                let shifted = extent.add(&LinExpr::constant(self.step - 1));
+                QPoly::from_atom(Atom::FloorDiv(shifted, self.step))
+            }
+        } else {
+            // hi is a ceil-division: builder enforces lo = 0.
+            assert!(
+                self.lo.is_constant() && self.lo.c == 0,
+                "ceil-div upper bounds require a zero lower bound (dim '{}')",
+                self.name
+            );
+            if self.step == 1 {
+                self.hi.as_qpoly()
+            } else {
+                // trip = ceil(ceil(num/den)/step) = ceil(num/(den*step))
+                let den = self.den() * self.step;
+                let shifted = self.hi.num.add(&LinExpr::constant(den - 1));
+                QPoly::from_atom(Atom::FloorDiv(shifted, den))
+            }
+        }
+    }
+
+    /// Guard `trip >= 1`, i.e. `hi - lo - 1 >= 0` (affine case only; the
+    /// ceil-div case uses `num - den*lo - 1 >= 0` which is equivalent for
+    /// positive denominators).
+    pub fn nonempty_guard(&self) -> Guard {
+        if self.den_is_simple() {
+            Guard(self.hi.num.sub(&self.lo).sub(&LinExpr::constant(1)))
+        } else {
+            Guard(self.hi.num.sub(&self.lo.scale(self.den())).sub(&LinExpr::constant(1)))
+        }
+    }
+
+    fn den(&self) -> i64 {
+        self.hi.den
+    }
+
+    fn den_is_simple(&self) -> bool {
+        self.hi.den == 1
+    }
+
+    /// Concrete trip count.
+    pub fn trip_count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let hi = self.hi.eval(env)?;
+        let lo = self.lo.eval(env)?;
+        Ok((div_ceil(hi - lo, self.step)).max(0))
+    }
+}
+
+/// Rectangular parametric loop domain: the Cartesian product of [`Dim`]s.
+/// Bounds may reference parameters but not other dimensions (all kernels
+/// in the paper are rectangular after tiling is expressed with ceil-div
+/// bounds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BoxDomain {
+    pub dims: Vec<Dim>,
+}
+
+impl BoxDomain {
+    pub fn new(dims: Vec<Dim>) -> BoxDomain {
+        BoxDomain { dims }
+    }
+
+    pub fn dim(&self, name: &str) -> Option<&Dim> {
+        self.dims.iter().find(|d| d.name == name)
+    }
+
+    /// Project onto the named dimensions (drop the rest). Valid because
+    /// dims are independent.
+    pub fn project_onto(&self, names: &[&str]) -> BoxDomain {
+        BoxDomain {
+            dims: self.dims.iter().filter(|d| names.contains(&d.name.as_str())).cloned().collect(),
+        }
+    }
+
+    /// Symbolic point count: `Π trip(dim)` guarded by non-emptiness of
+    /// every dim. (If any dim is empty the true count is 0, which is what
+    /// `PwQPoly::eval` returns when a guard fails.)
+    pub fn count(&self) -> PwQPoly {
+        let mut q = QPoly::one();
+        let mut guards = Vec::new();
+        for d in &self.dims {
+            q = q.mul(&d.trip_count());
+            // Constant-true guards are dropped; constant-false make the
+            // domain statically empty.
+            let g = d.nonempty_guard();
+            if g.0.is_constant() {
+                if g.0.c < 0 {
+                    return PwQPoly::zero();
+                }
+            } else {
+                guards.push(g);
+            }
+        }
+        PwQPoly { pieces: vec![(guards, q)] }
+    }
+
+    /// Concrete point count (cross-check for `count`).
+    pub fn count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let mut n = 1i64;
+        for d in &self.dims {
+            n *= d.trip_count_at(env)?;
+            if n == 0 {
+                return Ok(0);
+            }
+        }
+        Ok(n)
+    }
+}
+
+/// A conjunction of affine constraints `e >= 0` over named dims and
+/// parameters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Conjunct {
+    pub constraints: Vec<LinExpr>,
+}
+
+/// General integer set: disjunction of conjunctions over `dims`,
+/// parametric in whatever parameters the constraints mention. This is the
+/// fallback ("simpler counting technique") path: exact enumeration at a
+/// concrete binding.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Set {
+    pub dims: Vec<String>,
+    pub disjuncts: Vec<Conjunct>,
+}
+
+impl Set {
+    pub fn new(dims: Vec<String>) -> Set {
+        Set { dims, disjuncts: vec![Conjunct::default()] }
+    }
+
+    /// Add `e >= 0` to every disjunct (intersection with a half-space).
+    pub fn constrain(mut self, e: LinExpr) -> Set {
+        for d in &mut self.disjuncts {
+            d.constraints.push(e.clone());
+        }
+        self
+    }
+
+    /// Union with another set over the same dims.
+    pub fn union(mut self, other: Set) -> Set {
+        assert_eq!(self.dims, other.dims, "union requires identical dim tuples");
+        self.disjuncts.extend(other.disjuncts);
+        self
+    }
+
+    /// Derive [lo, hi] bounds for dim `i` in a conjunct, given fixed
+    /// earlier dims and parameters. Constraints mentioning later dims are
+    /// skipped (they are checked when those dims are fixed).
+    fn bounds_for(
+        &self,
+        conj: &Conjunct,
+        i: usize,
+        fixed: &BTreeMap<String, i64>,
+    ) -> Result<Option<(i64, i64)>, String> {
+        let name = &self.dims[i];
+        let later: Vec<&String> = self.dims[i + 1..].iter().collect();
+        let (mut lo, mut hi) = (i64::MIN / 4, i64::MAX / 4);
+        let mut bounded = false;
+        for c in &conj.constraints {
+            if later.iter().any(|d| c.coeff(d) != 0) {
+                continue;
+            }
+            let k = c.coeff(name);
+            if k == 0 {
+                continue;
+            }
+            // Evaluate the rest of the constraint with fixed values.
+            let mut rest = c.clone();
+            rest.terms.remove(name);
+            let r = rest.eval(fixed)?;
+            if k > 0 {
+                // k*v + r >= 0  ->  v >= ceil(-r/k)
+                lo = lo.max(div_ceil(-r, k));
+            } else {
+                // k*v + r >= 0  ->  v <= floor(r/(-k))
+                hi = hi.min(r.div_euclid(-k));
+            }
+            bounded = true;
+        }
+        if !bounded || lo <= i64::MIN / 8 || hi >= i64::MAX / 8 {
+            return Err(format!("dim '{name}' is unbounded in enumeration fallback"));
+        }
+        if lo > hi {
+            return Ok(None);
+        }
+        Ok(Some((lo, hi)))
+    }
+
+    fn conj_holds(conj: &Conjunct, env: &BTreeMap<String, i64>) -> Result<bool, String> {
+        for c in &conj.constraints {
+            if c.eval(env)? < 0 {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Enumerate the points of one conjunct.
+    fn enumerate_conj(
+        &self,
+        conj: &Conjunct,
+        i: usize,
+        fixed: &mut BTreeMap<String, i64>,
+        out: &mut Vec<Vec<i64>>,
+    ) -> Result<(), String> {
+        if i == self.dims.len() {
+            if Self::conj_holds(conj, fixed)? {
+                out.push(self.dims.iter().map(|d| fixed[d]).collect());
+            }
+            return Ok(());
+        }
+        let Some((lo, hi)) = self.bounds_for(conj, i, fixed)? else {
+            return Ok(());
+        };
+        for v in lo..=hi {
+            fixed.insert(self.dims[i].clone(), v);
+            self.enumerate_conj(conj, i + 1, fixed, out)?;
+        }
+        fixed.remove(&self.dims[i]);
+        Ok(())
+    }
+
+    /// Count points at a concrete parameter binding. Handles overlapping
+    /// disjuncts by deduplicating enumerated points.
+    pub fn count_at(&self, params: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let mut all: Vec<Vec<i64>> = Vec::new();
+        for conj in &self.disjuncts {
+            let mut fixed = params.clone();
+            self.enumerate_conj(conj, 0, &mut fixed, &mut all)?;
+        }
+        all.sort();
+        all.dedup();
+        Ok(all.len() as i64)
+    }
+}
+
+/// Convert a [`BoxDomain`] into a general [`Set`] (for cross-checking the
+/// symbolic path against the enumeration path). Strided dims are encoded
+/// by an auxiliary congruence dim — instead we simply expand them: a
+/// strided dim `v in {0, s, 2s, ...} ∩ [0, hi)` is represented by dim `t`
+/// with `v = s*t`, so the Set uses the *trip space*.
+pub fn box_to_trip_set(b: &BoxDomain) -> Set {
+    let mut s = Set::new(b.dims.iter().map(|d| format!("t_{}", d.name)).collect());
+    for d in &b.dims {
+        let t = format!("t_{}", d.name);
+        // t >= 0
+        s = s.constrain(LinExpr::var(&t));
+        // lo + step*t < hi  ->  hi_num - den*(lo + step*t) - 1 >= 0
+        // (for den = 1 this is hi - lo - step*t - 1 >= 0; exact for den>=1
+        //  because t < ceil(num/den) <=> den*t < num  when lo = 0 and
+        //  step = 1; for general lo/step we require den == 1.)
+        if d.hi.den == 1 {
+            let mut e = d.hi.num.sub(&d.lo).add(&LinExpr::constant(-1));
+            e.add_term(&t, -d.step);
+            s = s.constrain(e);
+        } else {
+            assert!(d.lo.is_constant() && d.lo.c == 0 && d.step == 1);
+            let mut e = d.hi.num.clone();
+            e.add_term(&t, -d.hi.den);
+            // den*t < num  <=>  num - den*t - 1 >= 0
+            s = s.constrain(e.add(&LinExpr::constant(-1)));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qpoly::env;
+
+    #[test]
+    fn simple_box_count() {
+        // {[i,j] : 0<=i<n, 0<=j<m} -> n*m
+        let b = BoxDomain::new(vec![
+            Dim::simple("i", LinExpr::var("n")),
+            Dim::simple("j", LinExpr::var("m")),
+        ]);
+        let c = b.count();
+        assert_eq!(c.eval(&env(&[("n", 12), ("m", 7)])).unwrap(), 84.0);
+        // empty when n = 0
+        assert_eq!(c.eval(&env(&[("n", 0), ("m", 7)])).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn strided_dim_count() {
+        // every third element of [0, n)
+        let b = BoxDomain::new(vec![Dim::strided("i", LinExpr::var("n"), 3)]);
+        for n in [1i64, 2, 3, 7, 9, 100] {
+            let want = div_ceil(n, 3) as f64;
+            assert_eq!(b.count().eval(&env(&[("n", n)])).unwrap(), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tiled_dim_count() {
+        // tile loop 0 <= t < ceil(n/16)
+        let b = BoxDomain::new(vec![Dim::tiles("t", LinExpr::var("n"), 16)]);
+        assert_eq!(b.count().eval(&env(&[("n", 16)])).unwrap(), 1.0);
+        assert_eq!(b.count().eval(&env(&[("n", 17)])).unwrap(), 2.0);
+        assert_eq!(b.count().eval(&env(&[("n", 256)])).unwrap(), 16.0);
+    }
+
+    #[test]
+    fn projection_drops_dims() {
+        let b = BoxDomain::new(vec![
+            Dim::simple("i", LinExpr::var("n")),
+            Dim::simple("j", LinExpr::var("m")),
+            Dim::simple("k", LinExpr::var("l")),
+        ]);
+        let p = b.project_onto(&["i", "k"]);
+        assert_eq!(p.dims.len(), 2);
+        assert_eq!(p.count().eval(&env(&[("n", 3), ("l", 5)])).unwrap(), 15.0);
+    }
+
+    #[test]
+    fn count_at_matches_symbolic() {
+        let b = BoxDomain::new(vec![
+            Dim::strided("i", LinExpr::var("n"), 2),
+            Dim::tiles("t", LinExpr::var("m"), 12),
+        ]);
+        for (n, m) in [(10i64, 12i64), (11, 13), (1, 1), (64, 144)] {
+            let e = env(&[("n", n), ("m", m)]);
+            assert_eq!(b.count().eval(&e).unwrap(), b.count_at(&e).unwrap() as f64);
+        }
+    }
+
+    #[test]
+    fn enumeration_set_triangle() {
+        // {[i,j] : 0<=i<n, 0<=j<=i} -> n(n+1)/2
+        let mut s = Set::new(vec!["i".into(), "j".into()]);
+        s = s.constrain(LinExpr::var("i"));
+        s = s.constrain(LinExpr::var("n").sub(&LinExpr::var("i")).sub(&LinExpr::constant(1)));
+        s = s.constrain(LinExpr::var("j"));
+        s = s.constrain(LinExpr::var("i").sub(&LinExpr::var("j")));
+        for n in [1i64, 2, 5, 10] {
+            assert_eq!(s.count_at(&env(&[("n", n)])).unwrap(), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn enumeration_detects_unbounded() {
+        let s = Set::new(vec!["i".into()]).constrain(LinExpr::var("i")); // i >= 0 only
+        assert!(s.count_at(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn union_dedups_overlap() {
+        // [0, 10) ∪ [5, 15) = [0, 15) -> 15 points
+        let half = |lo: i64, hi: i64| {
+            Set::new(vec!["i".into()])
+                .constrain(LinExpr::var("i").sub(&LinExpr::constant(lo)))
+                .constrain(LinExpr::constant(hi - 1).sub(&LinExpr::var("i")))
+        };
+        let u = half(0, 10).union(half(5, 15));
+        assert_eq!(u.count_at(&env(&[])).unwrap(), 15);
+    }
+
+    #[test]
+    fn box_vs_enumeration_crosscheck() {
+        let b = BoxDomain::new(vec![
+            Dim::simple("i", LinExpr::var("n")),
+            Dim::strided("j", LinExpr::var("m"), 3),
+        ]);
+        let s = box_to_trip_set(&b);
+        for (n, m) in [(4i64, 9i64), (5, 10), (1, 1), (8, 2)] {
+            let e = env(&[("n", n), ("m", m)]);
+            assert_eq!(
+                b.count().eval(&e).unwrap(),
+                s.count_at(&e).unwrap() as f64,
+                "n={n} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn statically_empty_box() {
+        let b = BoxDomain::new(vec![Dim::simple("i", LinExpr::constant(0))]);
+        assert!(b.count().is_zero());
+    }
+}

@@ -1,0 +1,187 @@
+//! Arithmetic-progression helpers for the footprint / utilization-ratio
+//! analysis (paper §2.1).
+//!
+//! An axis-0 access pattern is a union of arithmetic progressions
+//! `{ s·i + r : 0 <= i < N }` sharing a stride `s` but differing in
+//! residue `r`. The *accessed* cell count is the union size; the *filled*
+//! footprint closes the striding gaps. Their ratio is the utilization
+//! ratio that the paper quantizes into the amortized-stride-fraction
+//! classes.
+
+use std::collections::BTreeSet;
+
+/// A union of arithmetic progressions with a common stride.
+#[derive(Clone, Debug, Default)]
+pub struct ProgressionUnion {
+    /// common stride (cells); 0 = uniform (lane-independent) access
+    pub stride: i64,
+    /// residues modulo `stride` that are touched (for stride >= 1)
+    pub residues: BTreeSet<i64>,
+}
+
+impl ProgressionUnion {
+    pub fn uniform() -> Self {
+        ProgressionUnion { stride: 0, residues: BTreeSet::new() }
+    }
+
+    pub fn new(stride: i64) -> Self {
+        assert!(stride >= 1);
+        ProgressionUnion { stride, residues: BTreeSet::new() }
+    }
+
+    pub fn add_offset(&mut self, offset: i64) {
+        if self.stride >= 1 {
+            self.residues.insert(offset.rem_euclid(self.stride));
+        }
+    }
+
+    /// Number of residues covered per period of the stride. For stride 0
+    /// or 1 this is 1 by convention.
+    pub fn covered_per_period(&self) -> i64 {
+        if self.stride <= 1 {
+            1
+        } else {
+            (self.residues.len() as i64).clamp(1, self.stride)
+        }
+    }
+
+    /// Utilization ratio: accessed cells / filled footprint, in the limit
+    /// of a long progression (the per-period view the paper quantizes).
+    pub fn utilization(&self) -> f64 {
+        if self.stride <= 1 {
+            1.0
+        } else {
+            self.covered_per_period() as f64 / self.stride as f64
+        }
+    }
+}
+
+/// The paper's amortized-stride-fraction classes (§2.1). `numer` counts
+/// covered cells per period (quantized utilization), `denom_class` the
+/// stride with everything above 4 collapsed to ">4".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum StrideClass {
+    /// stride 0 — uniform (lane-independent) access
+    Uniform,
+    /// stride 1 — perfectly coalesced
+    Unit,
+    /// amortized fraction numer/denom with denom in {2,3,4}
+    Frac { numer: u8, denom: u8 },
+    /// stride > 4: numer/">4" with numer clamped to 1..=4
+    FracGt4 { numer: u8 },
+}
+
+impl StrideClass {
+    /// Classify an axis-0 access pattern per the paper's rules:
+    /// * stride 0 -> `Uniform`, stride 1 -> `Unit` (ratio disregarded);
+    /// * stride 2: utilization <= 50% -> 1/2 else 2/2;
+    /// * strides 3 and 4: numerator = covered cells per period;
+    /// * stride > 4: numerator clamped to 1..=4, denominator ">4".
+    pub fn classify(stride: i64, covered_per_period: i64) -> StrideClass {
+        match stride {
+            0 => StrideClass::Uniform,
+            1 => StrideClass::Unit,
+            2 => {
+                if covered_per_period <= 1 {
+                    StrideClass::Frac { numer: 1, denom: 2 }
+                } else {
+                    StrideClass::Frac { numer: 2, denom: 2 }
+                }
+            }
+            3 | 4 => StrideClass::Frac {
+                numer: covered_per_period.clamp(1, stride) as u8,
+                denom: stride as u8,
+            },
+            s if s > 4 => StrideClass::FracGt4 { numer: covered_per_period.clamp(1, 4) as u8 },
+            s => {
+                // negative stride: same traffic pattern as its magnitude
+                StrideClass::classify(-s, covered_per_period)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            StrideClass::Uniform => "stride-0".into(),
+            StrideClass::Unit => "stride-1".into(),
+            StrideClass::Frac { numer, denom } => format!("{numer}/{denom}"),
+            StrideClass::FracGt4 { numer } => format!("{numer}/>4"),
+        }
+    }
+
+    /// All classes, in a stable order (used to build the property schema).
+    pub fn all() -> Vec<StrideClass> {
+        let mut v = vec![StrideClass::Uniform, StrideClass::Unit];
+        for denom in 2..=4u8 {
+            for numer in 1..=denom {
+                v.push(StrideClass::Frac { numer, denom });
+            }
+        }
+        for numer in 1..=4u8 {
+            v.push(StrideClass::FracGt4 { numer });
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_of_both_phases_full_utilization() {
+        // a[2i] and a[2i+1]: stride 2, both residues -> 2/2
+        let mut u = ProgressionUnion::new(2);
+        u.add_offset(0);
+        u.add_offset(1);
+        assert_eq!(u.covered_per_period(), 2);
+        assert_eq!(
+            StrideClass::classify(2, u.covered_per_period()),
+            StrideClass::Frac { numer: 2, denom: 2 }
+        );
+    }
+
+    #[test]
+    fn single_phase_stride2_half() {
+        let mut u = ProgressionUnion::new(2);
+        u.add_offset(0);
+        assert_eq!(u.utilization(), 0.5);
+        assert_eq!(
+            StrideClass::classify(2, u.covered_per_period()),
+            StrideClass::Frac { numer: 1, denom: 2 }
+        );
+    }
+
+    #[test]
+    fn offsets_reduce_modulo_stride() {
+        let mut u = ProgressionUnion::new(3);
+        u.add_offset(0);
+        u.add_offset(3); // same residue
+        u.add_offset(7); // residue 1
+        assert_eq!(u.covered_per_period(), 2);
+    }
+
+    #[test]
+    fn stride_gt4_clamps() {
+        assert_eq!(StrideClass::classify(9, 1), StrideClass::FracGt4 { numer: 1 });
+        assert_eq!(StrideClass::classify(100, 77), StrideClass::FracGt4 { numer: 4 });
+    }
+
+    #[test]
+    fn uniform_and_unit() {
+        assert_eq!(StrideClass::classify(0, 1), StrideClass::Uniform);
+        assert_eq!(StrideClass::classify(1, 1), StrideClass::Unit);
+        // negative stride behaves like its magnitude
+        assert_eq!(StrideClass::classify(-1, 1), StrideClass::Unit);
+        assert_eq!(StrideClass::classify(-3, 3), StrideClass::Frac { numer: 3, denom: 3 });
+    }
+
+    #[test]
+    fn all_classes_distinct_labels() {
+        let all = StrideClass::all();
+        let labels: std::collections::BTreeSet<String> =
+            all.iter().map(|c| c.label()).collect();
+        assert_eq!(labels.len(), all.len());
+        assert_eq!(all.len(), 2 + (2 + 3 + 4) + 4); // uniform, unit, fracs, >4
+    }
+}

@@ -1,0 +1,947 @@
+//! The nine measurement-kernel classes of §4.1.
+//!
+//! Every class is a parameterized [`Kernel`] builder plus the paper's
+//! per-device sweep (size exponents, shape cases, work-group sets). The
+//! builders avoid data-dependent control flow — boundary coverage uses
+//! unrolled cooperative loads into padded arrays instead of guards, which
+//! keeps the polyhedral analyses exact.
+
+use super::{snap, GroupSet, KernelCase};
+use crate::lpir::builder::{gid, KernelBuilder};
+use crate::lpir::{Access, DType, Expr, Kernel, Layout, UnOp};
+use crate::qpoly::{env, LinExpr};
+
+fn v(name: &str) -> LinExpr {
+    LinExpr::var(name)
+}
+
+fn c(x: i64) -> LinExpr {
+    LinExpr::constant(x)
+}
+
+/// ceil(a/b) for small constants.
+fn ceil_div(a: i64, b: i64) -> i64 {
+    (a + b - 1) / b
+}
+
+// ---------------------------------------------------------------------------
+// 1. Tiled matrix multiplication
+// ---------------------------------------------------------------------------
+
+/// Tiled MM: `C (n×l) = A (n×m) · B (m×l)`, row-major, prefetching tiles
+/// into local memory. The reduction is tiled by the lane extent `gx`;
+/// when the group is non-square (`gy < gx`) the B tile is staged with an
+/// unrolled cooperative load into a row-padded B (`bpad` extra rows), so
+/// no control flow is needed.
+pub fn mm_tiled(gx: i64, gy: i64) -> Kernel {
+    let ru = ceil_div(gx, gy);
+    let bpad = ru * gy - gx;
+    let mut b = KernelBuilder::new("mm_tiled", &["n", "m", "l"])
+        .group_dims_2d(v("l"), gx, v("n"), gy)
+        .seq_tiles("kt", v("m"), gx)
+        .red_dim("ki", c(gx))
+        .global_array("a", DType::F32, vec![v("n"), v("m")], Layout::RowMajor, false)
+        .global_array(
+            "b",
+            DType::F32,
+            vec![v("m").add(&c(bpad)), v("l")],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array("cc", DType::F32, vec![v("n"), v("l")], Layout::RowMajor, true)
+        .local_array("at", DType::F32, &[gy, gx])
+        .local_array("bt", DType::F32, &[ru * gy, gx])
+        .private_array("acc", DType::F32, &[1]);
+    if ru > 1 {
+        b = b.unroll_dim("u", ru);
+    }
+    // at[l1, l0] = a[g1*gy + l1, kt*gx + l0]
+    b = b.insn(
+        Access::new("at", vec![v("l1"), v("l0")]),
+        Expr::load("a", vec![gid(1, gy), LinExpr::scaled_var("kt", gx).add(&v("l0"))]),
+        &["g0", "g1", "l0", "l1", "kt"],
+        &[],
+    );
+    // bt[l1 + gy*u, l0] = b[kt*gx + l1 + gy*u, g0*gx + l0]
+    if ru > 1 {
+        b = b.insn(
+            Access::new("bt", vec![v("l1").add(&LinExpr::scaled_var("u", gy)), v("l0")]),
+            Expr::load(
+                "b",
+                vec![
+                    LinExpr::scaled_var("kt", gx)
+                        .add(&v("l1"))
+                        .add(&LinExpr::scaled_var("u", gy)),
+                    gid(0, gx),
+                ],
+            ),
+            &["g0", "g1", "l0", "l1", "kt", "u"],
+            &[],
+        );
+    } else {
+        b = b.insn(
+            Access::new("bt", vec![v("l1"), v("l0")]),
+            Expr::load("b", vec![LinExpr::scaled_var("kt", gx).add(&v("l1")), gid(0, gx)]),
+            &["g0", "g1", "l0", "l1", "kt"],
+            &[],
+        );
+    }
+    b.update_insn(
+        Access::new("acc", vec![c(0)]),
+        Expr::sum(
+            "ki",
+            Expr::mul(
+                Expr::load("at", vec![v("l1"), v("ki")]),
+                Expr::load("bt", vec![v("ki"), v("l0")]),
+            ),
+        ),
+        &["g0", "g1", "l0", "l1", "kt"],
+        &[0, 1],
+    )
+    .insn(
+        Access::new("cc", vec![gid(1, gy), gid(0, gx)]),
+        Expr::load("acc", vec![c(0)]),
+        &["g0", "g1", "l0", "l1"],
+        &[2],
+    )
+    .build()
+    .expect("mm_tiled builds")
+}
+
+/// The four MM shape cases of §4.1: (n, m, l) from a base size.
+pub fn mm_shapes(base: i64) -> Vec<(&'static str, i64, i64, i64)> {
+    vec![
+        ("square", base, base, base),
+        ("l_half", base, base, base / 2),
+        ("m_half", base, base / 2, base),
+        ("n_half", base / 2, base, base),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// 2. Naive matrix multiplication
+// ---------------------------------------------------------------------------
+
+/// Naive MM on square `n×n` matrices: each thread computes one output
+/// element as a full inner product (uniform A reads, stride-1 B reads).
+pub fn mm_naive(gx: i64, gy: i64) -> Kernel {
+    KernelBuilder::new("mm_naive", &["n"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .red_dim("k", v("n"))
+        .global_array("a", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, false)
+        .global_array("b", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, false)
+        .global_array("cc", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+        .insn(
+            Access::new("cc", vec![gid(1, gy), gid(0, gx)]),
+            Expr::sum(
+                "k",
+                Expr::mul(
+                    Expr::load("a", vec![gid(1, gy), v("k")]),
+                    Expr::load("b", vec![v("k"), gid(0, gx)]),
+                ),
+            ),
+            &["g0", "g1", "l0", "l1"],
+            &[],
+        )
+        .build()
+        .expect("mm_naive builds")
+}
+
+// ---------------------------------------------------------------------------
+// 3. Vector scale-and-add (strides 1, 2, 3)
+// ---------------------------------------------------------------------------
+
+/// `out[s·i] = s1·x[s·i] + s2·y[s·i]` over `nt` threads; arrays have
+/// `s·nt` elements. The scalars live in 1-element arrays, producing the
+/// model's uniform (stride-0) load class.
+pub fn vsadd(stride: i64, lsize: i64) -> Kernel {
+    let idx = gid(0, lsize).scale(stride);
+    KernelBuilder::new(&format!("vsadd_s{stride}"), &["nt"])
+        .group_dims_1d(v("nt"), lsize)
+        .global_array("x", DType::F32, vec![v("nt").scale(stride)], Layout::RowMajor, false)
+        .global_array("y", DType::F32, vec![v("nt").scale(stride)], Layout::RowMajor, false)
+        .global_array("s1", DType::F32, vec![c(1)], Layout::RowMajor, false)
+        .global_array("s2", DType::F32, vec![c(1)], Layout::RowMajor, false)
+        .global_array("out", DType::F32, vec![v("nt").scale(stride)], Layout::RowMajor, true)
+        .insn(
+            Access::new("out", vec![idx.clone()]),
+            Expr::add(
+                Expr::mul(Expr::load("s1", vec![c(0)]), Expr::load("x", vec![idx.clone()])),
+                Expr::mul(Expr::load("s2", vec![c(0)]), Expr::load("y", vec![idx])),
+            ),
+            &["g0", "l0"],
+            &[],
+        )
+        .build()
+        .expect("vsadd builds")
+}
+
+// ---------------------------------------------------------------------------
+// 4. Transpose (three prefetch/stride configurations)
+// ---------------------------------------------------------------------------
+
+/// Which transpose variant to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransposeVariant {
+    /// prefetch tiles into local memory: stride-1 reads *and* writes
+    Tiled,
+    /// no prefetch, stride-1 writes, uncoalesced reads
+    CoalescedWrite,
+    /// no prefetch, stride-1 reads, uncoalesced writes
+    CoalescedRead,
+}
+
+/// Square-matrix transpose `out = aᵀ`, three variants. The tiled variant
+/// uses square `gx×gx` tiles staged with an unrolled cooperative load
+/// (row-padded global arrays when `gy < gx`).
+pub fn transpose(variant: TransposeVariant, gx: i64, gy: i64) -> Kernel {
+    match variant {
+        TransposeVariant::Tiled => {
+            let ru = ceil_div(gx, gy);
+            assert!(2 * gy >= gx, "tiled transpose needs 2*gy >= gx (got {gx}x{gy})");
+            // overlapping cooperative loads: iteration u covers tile rows
+            // [u*(gx-gy), u*(gx-gy)+gy); for ru = 2 that is [0,gy) and
+            // [gx-gy, gx) which exactly cover [0, gx) with a benign
+            // same-value overlap — no guards, no padding
+            let off = gx - gy;
+            let mut b = KernelBuilder::new("transpose_tiled", &["n"])
+                // both grid axes tile n by gx (square tiles); lanes (gx, gy)
+                .custom_grid_2d(v("n"), gx, gx, v("n"), gx, gy)
+                .global_array("a", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, false)
+                .global_array("out", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+                .local_array("t", DType::F32, &[gx, gx]);
+            if ru > 1 {
+                // separate unroll inames: all load iterations must finish
+                // before any (transposed) read of the tile
+                b = b.unroll_dim("u", ru).unroll_dim("w", ru);
+                b = b
+                    .insn(
+                        Access::new(
+                            "t",
+                            vec![v("l1").add(&LinExpr::scaled_var("u", off)), v("l0")],
+                        ),
+                        Expr::load(
+                            "a",
+                            vec![
+                                LinExpr::scaled_var("g1", gx)
+                                    .add(&v("l1"))
+                                    .add(&LinExpr::scaled_var("u", off)),
+                                gid(0, gx),
+                            ],
+                        ),
+                        &["g0", "g1", "l0", "l1", "u"],
+                        &[],
+                    )
+                    .insn(
+                        Access::new(
+                            "out",
+                            vec![
+                                LinExpr::scaled_var("g0", gx)
+                                    .add(&v("l1"))
+                                    .add(&LinExpr::scaled_var("w", off)),
+                                LinExpr::scaled_var("g1", gx).add(&v("l0")),
+                            ],
+                        ),
+                        Expr::load(
+                            "t",
+                            vec![v("l0"), v("l1").add(&LinExpr::scaled_var("w", off))],
+                        ),
+                        &["g0", "g1", "l0", "l1", "w"],
+                        &[0],
+                    );
+            } else {
+                b = b
+                    .insn(
+                        Access::new("t", vec![v("l1"), v("l0")]),
+                        Expr::load("a", vec![gid(1, gx), gid(0, gx)]),
+                        &["g0", "g1", "l0", "l1"],
+                        &[],
+                    )
+                    .insn(
+                        Access::new(
+                            "out",
+                            vec![
+                                LinExpr::scaled_var("g0", gx).add(&v("l1")),
+                                LinExpr::scaled_var("g1", gx).add(&v("l0")),
+                            ],
+                        ),
+                        Expr::load("t", vec![v("l0"), v("l1")]),
+                        &["g0", "g1", "l0", "l1"],
+                        &[0],
+                    );
+            }
+            b.build().expect("transpose_tiled builds")
+        }
+        TransposeVariant::CoalescedWrite => KernelBuilder::new("transpose_cw", &["n"])
+            .group_dims_2d(v("n"), gx, v("n"), gy)
+            .global_array("a", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+            .insn(
+                // out[y, x] = a[x, y]: write stride-1 (x = lane), read stride-n
+                Access::new("out", vec![gid(1, gy), gid(0, gx)]),
+                Expr::load("a", vec![gid(0, gx), gid(1, gy)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .build()
+            .expect("transpose_cw builds"),
+        TransposeVariant::CoalescedRead => KernelBuilder::new("transpose_cr", &["n"])
+            .group_dims_2d(v("n"), gx, v("n"), gy)
+            .global_array("a", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+            .insn(
+                // out[x, y] = a[y, x]: read stride-1, write stride-n
+                Access::new("out", vec![gid(0, gx), gid(1, gy)]),
+                Expr::load("a", vec![gid(1, gy), gid(0, gx)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .build()
+            .expect("transpose_cr builds"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Stride-1 global access (copy / add-4 / index-store)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalAccessConfig {
+    /// 1 load, 1 store
+    Copy,
+    /// 4 loads, 1 store
+    Add4,
+    /// 0 loads, 1 store
+    StoreIndex,
+}
+
+/// Stride-1 global-access kernels over `n`-element arrays.
+pub fn global_access(cfg: GlobalAccessConfig, lsize: i64) -> Kernel {
+    let idx = gid(0, lsize);
+    let b = KernelBuilder::new(
+        match cfg {
+            GlobalAccessConfig::Copy => "sg_copy",
+            GlobalAccessConfig::Add4 => "sg_add4",
+            GlobalAccessConfig::StoreIndex => "sg_storeidx",
+        },
+        &["n"],
+    )
+    .group_dims_1d(v("n"), lsize);
+    match cfg {
+        GlobalAccessConfig::Copy => b
+            .global_array("a", DType::F32, vec![v("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![idx.clone()]),
+                Expr::load("a", vec![idx]),
+                &["g0", "l0"],
+                &[],
+            ),
+        GlobalAccessConfig::Add4 => {
+            let mut b = b;
+            for name in ["a1", "a2", "a3", "a4"] {
+                b = b.global_array(name, DType::F32, vec![v("n")], Layout::RowMajor, false);
+            }
+            b.global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true).insn(
+                Access::new("out", vec![idx.clone()]),
+                Expr::add(
+                    Expr::add(
+                        Expr::load("a1", vec![idx.clone()]),
+                        Expr::load("a2", vec![idx.clone()]),
+                    ),
+                    Expr::add(
+                        Expr::load("a3", vec![idx.clone()]),
+                        Expr::load("a4", vec![idx]),
+                    ),
+                ),
+                &["g0", "l0"],
+                &[],
+            )
+        }
+        GlobalAccessConfig::StoreIndex => b
+            .global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true)
+            .insn(Access::new("out", vec![idx.clone()]), Expr::Idx(idx), &["g0", "l0"], &[]),
+    }
+    .build()
+    .expect("global_access builds")
+}
+
+// ---------------------------------------------------------------------------
+// 6/7. Stride-2 / stride-3 filled access
+// ---------------------------------------------------------------------------
+
+/// Filled strided access: a `s×nt` column-major array is read in a
+/// stride-`s` pattern covering all residues; each of `nt` threads sums
+/// its `s`-tuple 256 times (paper: "a summation over 256 of these
+/// pairwise sums") into a `1×nt` output.
+pub fn filled(s: i64, lsize: i64) -> Kernel {
+    let mut b = KernelBuilder::new(&format!("filled_s{s}"), &["nt"])
+        .group_dims_1d(v("nt"), lsize)
+        .red_dim("q", c(256))
+        // column-major [s, nt]: element (c, col) at flat c + s*col
+        .global_array("x", DType::F32, vec![c(s), v("nt")], Layout::ColMajor, false)
+        .global_array("out", DType::F32, vec![v("nt")], Layout::RowMajor, true);
+    // sum over q of (x[0, i] + x[1, i] (+ x[2, i]))
+    let col = gid(0, lsize);
+    let mut body = Expr::load("x", vec![c(0), col.clone()]);
+    for ci in 1..s {
+        body = Expr::add(body, Expr::load("x", vec![c(ci), col.clone()]));
+    }
+    b = b.insn(
+        Access::new("out", vec![col]),
+        Expr::sum("q", body),
+        &["g0", "l0"],
+        &[],
+    );
+    b.build().expect("filled builds")
+}
+
+// ---------------------------------------------------------------------------
+// 8. Arithmetic-operation kernels
+// ---------------------------------------------------------------------------
+
+/// Which arithmetic type a kernel exercises (§4.1: separate kernel each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArithType {
+    AddSub,
+    Mul,
+    Div,
+    Exp,
+    Rsqrt,
+}
+
+impl ArithType {
+    pub fn all() -> [ArithType; 5] {
+        [ArithType::AddSub, ArithType::Mul, ArithType::Div, ArithType::Exp, ArithType::Rsqrt]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArithType::AddSub => "addsub",
+            ArithType::Mul => "mul",
+            ArithType::Div => "div",
+            ArithType::Exp => "exp",
+            ArithType::Rsqrt => "rsqrt",
+        }
+    }
+}
+
+/// `out[y, x] = Σ_{q<k} chain(q)` where the chain applies 6–10 operations
+/// of one type to the (float-converted) reduction index. No global reads.
+pub fn arith(ty: ArithType, gx: i64, gy: i64) -> Kernel {
+    let iv = Expr::Idx(v("q"));
+    let chain = match ty {
+        ArithType::AddSub => {
+            // 8 add/sub ops
+            let mut e = iv.clone();
+            for (i, lit) in [1.1, 2.2, 3.3, 4.4].iter().enumerate() {
+                e = Expr::add(e, Expr::lit(*lit));
+                if i % 2 == 0 {
+                    e = Expr::sub(e, iv.clone());
+                } else {
+                    e = Expr::add(e, iv.clone());
+                }
+            }
+            e
+        }
+        ArithType::Mul => {
+            // 8 multiplications
+            let mut e = iv.clone();
+            for lit in [1.0001, 0.9999, 1.0002, 0.9998, 1.0001, 0.9999, 1.0002, 0.9998] {
+                e = Expr::mul(e, Expr::lit(lit));
+            }
+            e
+        }
+        ArithType::Div => {
+            // 7 divisions
+            let mut e = Expr::add(iv.clone(), Expr::lit(1.5));
+            for lit in [1.1, 0.9, 1.2, 0.8, 1.3, 0.7, 1.05] {
+                e = Expr::div(e, Expr::lit(lit));
+            }
+            e
+        }
+        ArithType::Exp => {
+            // 6 exponentiations
+            let mut e = Expr::add(iv.clone(), Expr::lit(1.5));
+            for _ in 0..6 {
+                e = Expr::bin(crate::lpir::BinOp::Pow, e, Expr::lit(1.01));
+            }
+            e
+        }
+        ArithType::Rsqrt => {
+            // 6 rsqrt applications
+            let mut e = Expr::add(iv.clone(), Expr::lit(1.5));
+            for _ in 0..6 {
+                e = Expr::un(UnOp::Rsqrt, e);
+            }
+            e
+        }
+    };
+    KernelBuilder::new(&format!("arith_{}", ty.label()), &["n", "k"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .red_dim("q", v("k"))
+        .global_array("out", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+        .insn(
+            Access::new("out", vec![gid(1, gy), gid(0, gx)]),
+            Expr::sum("q", chain),
+            &["g0", "g1", "l0", "l1"],
+            &[],
+        )
+        .build()
+        .expect("arith builds")
+}
+
+// ---------------------------------------------------------------------------
+// 9. Empty kernel
+// ---------------------------------------------------------------------------
+
+/// Launches the grid of an `n×n` element-per-thread kernel but performs
+/// no operations or memory accesses (launch-overhead calibration, §2.4).
+pub fn empty(gx: i64, gy: i64) -> Kernel {
+    KernelBuilder::new("empty", &["n"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .build()
+        .expect("empty builds")
+}
+
+// ---------------------------------------------------------------------------
+// Per-device sweeps (§4.1)
+// ---------------------------------------------------------------------------
+
+/// Per-device configuration of one measurement class.
+struct ClassCfg {
+    group_set: GroupSet,
+    p: i64,
+}
+
+fn mm_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
+        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 7 },
+        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
+        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 9 },
+    }
+}
+
+fn mm_naive_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
+        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 6 },
+        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
+        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 9 },
+    }
+}
+
+fn vsadd_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 20 },
+        "c2070" => ClassCfg { group_set: GroupSet::OneDLarge, p: 18 },
+        "k40c" => ClassCfg { group_set: GroupSet::OneDLarge, p: 20 },
+        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 21 },
+    }
+}
+
+fn transpose_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 10 },
+        "c2070" | "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 10 },
+        _ => ClassCfg { group_set: GroupSet::TwoDMed, p: 11 },
+    }
+}
+
+fn global_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 18 },
+        "c2070" => ClassCfg { group_set: GroupSet::OneDMed, p: 17 },
+        "k40c" => ClassCfg { group_set: GroupSet::OneDMed, p: 18 },
+        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 19 },
+    }
+}
+
+fn filled_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 16 },
+        "c2070" => ClassCfg { group_set: GroupSet::OneDMed, p: 15 },
+        "k40c" => ClassCfg { group_set: GroupSet::OneDMed, p: 16 },
+        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 17 },
+    }
+}
+
+fn arith_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
+        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 7 },
+        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
+        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 8 },
+    }
+}
+
+fn empty_cfg(device: &str) -> ClassCfg {
+    match device {
+        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 9 },
+        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
+        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 9 },
+        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 10 },
+    }
+}
+
+/// Assemble the full §4.1 measurement suite for a device.
+pub fn suite(device: &str) -> Vec<KernelCase> {
+    let mut out = Vec::new();
+
+    // 1. tiled MM: 4 shapes x 4 sizes x 3 groups
+    let cfg = mm_cfg(device);
+    for (gx, gy) in cfg.group_set.sizes() {
+        let k = mm_tiled(gx, gy);
+        for t in 0..4 {
+            let base = 1i64 << (cfg.p + t);
+            for (shape, n, m, l) in mm_shapes(base) {
+                let (n, m, l) = (snap(n, gy), snap(m, gx), snap(l, gx));
+                out.push(KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("n", n), ("m", m), ("l", l)]),
+                    label: format!("mm_tiled/{shape}/b={base}/g={gx}x{gy}"),
+                    group: (gx, gy),
+                });
+            }
+        }
+    }
+
+    // 2. naive MM: 4 sizes x 3 groups
+    let cfg = mm_naive_cfg(device);
+    for (gx, gy) in cfg.group_set.sizes() {
+        let k = mm_naive(gx, gy);
+        for t in 0..4 {
+            let n = snap(1i64 << (cfg.p + t), lcm(gx, gy));
+            out.push(KernelCase {
+                kernel: k.clone(),
+                env: env(&[("n", n)]),
+                label: format!("mm_naive/n={n}/g={gx}x{gy}"),
+                group: (gx, gy),
+            });
+        }
+    }
+
+    // 3. vector scale-and-add: 3 strides x 4 sizes x 3 groups
+    let cfg = vsadd_cfg(device);
+    for (lsize, _) in cfg.group_set.sizes() {
+        for stride in 1..=3i64 {
+            let k = vsadd(stride, lsize);
+            for t in 0..4 {
+                let n = 1i64 << (cfg.p + 2 * t).min(26);
+                let nt = snap(n / stride, lsize);
+                out.push(KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("nt", nt)]),
+                    label: format!("vsadd/s={stride}/t={t}/n={n}/g={lsize}"),
+                    group: (lsize, 1),
+                });
+            }
+        }
+    }
+
+    // 4. transpose: 3 variants x 4 sizes x 3 groups
+    let cfg = transpose_cfg(device);
+    for (gx, gy) in cfg.group_set.sizes() {
+        for variant in [
+            TransposeVariant::Tiled,
+            TransposeVariant::CoalescedWrite,
+            TransposeVariant::CoalescedRead,
+        ] {
+            let k = transpose(variant, gx, gy);
+            for t in 0..4 {
+                let n = snap(1i64 << (cfg.p + t), lcm(gx, gy).max(gx));
+                out.push(KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("n", n)]),
+                    label: format!("{}/n={n}/g={gx}x{gy}", k.name),
+                    group: (gx, gy),
+                });
+            }
+        }
+    }
+
+    // 5. stride-1 global access: 3 configs x 9 sizes x 3 groups
+    let cfg = global_cfg(device);
+    for (lsize, _) in cfg.group_set.sizes() {
+        for gac in
+            [GlobalAccessConfig::Copy, GlobalAccessConfig::Add4, GlobalAccessConfig::StoreIndex]
+        {
+            let k = global_access(gac, lsize);
+            for t in 0..9 {
+                let n = snap(1i64 << (cfg.p + t).min(26), lsize);
+                out.push(KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("n", n)]),
+                    label: format!("{}/t={t}/n={n}/g={lsize}", k.name),
+                    group: (lsize, 1),
+                });
+            }
+        }
+    }
+
+    // 6/7. filled stride-2 and stride-3: 4 sizes x 3 groups each
+    let cfg = filled_cfg(device);
+    for (lsize, _) in cfg.group_set.sizes() {
+        for s in [2i64, 3] {
+            let k = filled(s, lsize);
+            for t in 0..4 {
+                let nt = snap(1i64 << (cfg.p + 3 * t).min(24), lsize);
+                out.push(KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("nt", nt)]),
+                    label: format!("{}/t={t}/nt={nt}/g={lsize}", k.name),
+                    group: (lsize, 1),
+                });
+            }
+        }
+    }
+
+    // 8. arithmetic: 5 types x (3 k-values x 3 sizes) x 3 groups
+    let cfg = arith_cfg(device);
+    for (gx, gy) in cfg.group_set.sizes() {
+        for ty in ArithType::all() {
+            let k = arith(ty, gx, gy);
+            for kk in [256i64, 512, 728] {
+                for t in 0..3 {
+                    let n = snap(1i64 << (cfg.p + t), lcm(gx, gy));
+                    out.push(KernelCase {
+                        kernel: k.clone(),
+                        env: env(&[("n", n), ("k", kk)]),
+                        label: format!("{}/n={n}/k={kk}/g={gx}x{gy}", k.name),
+                        group: (gx, gy),
+                    });
+                }
+            }
+        }
+    }
+
+    // 9. empty kernel: 6 sizes x 3 groups
+    let cfg = empty_cfg(device);
+    for (gx, gy) in cfg.group_set.sizes() {
+        let k = empty(gx, gy);
+        for t in 0..6 {
+            let n = snap(1i64 << (cfg.p + t), lcm(gx, gy));
+            out.push(KernelCase {
+                kernel: k.clone(),
+                env: env(&[("n", n)]),
+                label: format!("empty/n={n}/g={gx}x{gy}"),
+                group: (gx, gy),
+            });
+        }
+    }
+
+    out
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: i64, b: i64) -> i64 {
+    a / gcd(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{execute, seed_value};
+    use crate::qpoly::env;
+
+    #[test]
+    fn mm_tiled_square_group_correct() {
+        let k = mm_tiled(8, 8);
+        let e = env(&[("n", 16), ("m", 16), ("l", 16)]);
+        let st = execute(&k, &e).unwrap();
+        let cc = st.get("cc").unwrap();
+        for i in 0..16usize {
+            for j in 0..16usize {
+                let want: f64 = (0..16)
+                    .map(|kk| seed_value("a", i * 16 + kk) * seed_value("b", kk * 16 + j))
+                    .sum();
+                assert!((cc[i * 16 + j] - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn mm_tiled_nonsquare_group_correct() {
+        // (gx, gy) = (8, 4): ru = 2, B padded by 0 rows (2*4 = 8 = gx)
+        let k = mm_tiled(8, 4);
+        let e = env(&[("n", 8), ("m", 16), ("l", 8)]);
+        let st = execute(&k, &e).unwrap();
+        let cc = st.get("cc").unwrap();
+        for i in 0..8usize {
+            for j in 0..8usize {
+                let want: f64 = (0..16)
+                    .map(|kk| seed_value("a", i * 16 + kk) * seed_value("b", kk * 8 + j))
+                    .sum();
+                assert!((cc[i * 8 + j] - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn mm_tiled_padded_b_group_correct() {
+        // (gx, gy) = (16, 12): ru = 2, bpad = 8 -> padded B rows unused
+        let k = mm_tiled(16, 12);
+        let e = env(&[("n", 24), ("m", 32), ("l", 16)]);
+        let st = execute(&k, &e).unwrap();
+        let cc = st.get("cc").unwrap();
+        for i in 0..24usize {
+            for j in 0..16usize {
+                let want: f64 = (0..32)
+                    .map(|kk| seed_value("a", i * 32 + kk) * seed_value("b", kk * 16 + j))
+                    .sum();
+                assert!((cc[i * 16 + j] - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn mm_naive_correct() {
+        let k = mm_naive(8, 4);
+        let e = env(&[("n", 8)]);
+        let st = execute(&k, &e).unwrap();
+        let cc = st.get("cc").unwrap();
+        for i in 0..8usize {
+            for j in 0..8usize {
+                let want: f64 = (0..8)
+                    .map(|kk| seed_value("a", i * 8 + kk) * seed_value("b", kk * 8 + j))
+                    .sum();
+                assert!((cc[i * 8 + j] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn vsadd_strides_correct() {
+        for s in 1..=3i64 {
+            let k = vsadd(s, 32);
+            let e = env(&[("nt", 64)]);
+            let st = execute(&k, &e).unwrap();
+            let out = st.get("out").unwrap();
+            let (s1, s2) = (seed_value("s1", 0), seed_value("s2", 0));
+            for i in 0..64usize {
+                let idx = s as usize * i;
+                let want = s1 * seed_value("x", idx) + s2 * seed_value("y", idx);
+                assert!((out[idx] - want).abs() < 1e-12, "s={s} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_variants_correct() {
+        // tiled with square group
+        for (variant, gx, gy) in [
+            (TransposeVariant::Tiled, 8, 8),
+            (TransposeVariant::Tiled, 8, 4),
+            (TransposeVariant::CoalescedWrite, 8, 4),
+            (TransposeVariant::CoalescedRead, 8, 4),
+        ] {
+            let k = transpose(variant, gx, gy);
+            let n = 16usize;
+            let e = env(&[("n", n as i64)]);
+            let st = execute(&k, &e).unwrap();
+            let out = st.get("out").unwrap();
+            // row pitch may include padding for the tiled variant
+            let pitch = n;
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(
+                        out[j * pitch + i],
+                        seed_value("a", i * pitch + j),
+                        "{variant:?} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_access_configs_correct() {
+        let e = env(&[("n", 128)]);
+        let st = execute(&global_access(GlobalAccessConfig::Copy, 64), &e).unwrap();
+        assert_eq!(st.get("out").unwrap()[7], seed_value("a", 7));
+        let st = execute(&global_access(GlobalAccessConfig::Add4, 64), &e).unwrap();
+        let want: f64 = ["a1", "a2", "a3", "a4"].iter().map(|a| seed_value(a, 9)).sum();
+        assert!((st.get("out").unwrap()[9] - want).abs() < 1e-12);
+        let st = execute(&global_access(GlobalAccessConfig::StoreIndex, 64), &e).unwrap();
+        assert_eq!(st.get("out").unwrap()[100], 100.0);
+    }
+
+    #[test]
+    fn filled_kernels_correct() {
+        for s in [2i64, 3] {
+            let k = filled(s, 32);
+            let e = env(&[("nt", 32)]);
+            let st = execute(&k, &e).unwrap();
+            let out = st.get("out").unwrap();
+            for i in 0..32usize {
+                let pair: f64 =
+                    (0..s as usize).map(|ci| seed_value("x", ci + s as usize * i)).sum();
+                assert!((out[i] - 256.0 * pair).abs() < 1e-9, "s={s} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn arith_kernels_run_and_are_finite() {
+        for ty in ArithType::all() {
+            let k = arith(ty, 8, 4);
+            let e = env(&[("n", 8), ("k", 16)]);
+            let st = execute(&k, &e).unwrap();
+            for &x in st.get("out").unwrap() {
+                assert!(x.is_finite(), "{ty:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn arith_op_counts_match_design() {
+        use crate::lpir::OpKind;
+        use crate::stats::{extract, ExtractOpts, Prop, Schema};
+        // mul kernel: 8 muls per reduction point
+        let k = arith(ArithType::Mul, 16, 16);
+        let e = env(&[("n", 32), ("k", 16)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let muls = v[schema.index_of(&Prop::Op { kind: OpKind::Mul, bits: 32 }).unwrap()];
+        assert_eq!(muls, 8.0 * 32.0 * 32.0 * 16.0);
+    }
+
+    #[test]
+    fn empty_kernel_has_no_work() {
+        use crate::stats::{extract, ExtractOpts, Prop, Schema};
+        let k = empty(16, 16);
+        let e = env(&[("n", 64)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let nonzero: Vec<usize> = (0..v.len()).filter(|&i| v[i] != 0.0).collect();
+        // only WorkGroups and Const
+        assert_eq!(nonzero.len(), 2);
+        assert_eq!(v[schema.index_of(&Prop::WorkGroups).unwrap()], 16.0);
+        assert_eq!(v[schema.index_of(&Prop::Const).unwrap()], 1.0);
+    }
+
+    #[test]
+    fn suite_sizes_per_device() {
+        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+            let suite = suite(dev);
+            // 48 mm + 12 naive + 36 vsadd + 36 transpose + 81 global
+            // + 24 filled + 135 arith + 18 empty = 390
+            assert_eq!(suite.len(), 390, "{dev}");
+            // labels unique
+            let mut labels: Vec<&String> = suite.iter().map(|c| &c.label).collect();
+            labels.sort();
+            labels.dedup();
+            assert_eq!(labels.len(), 390, "{dev}: duplicate labels");
+        }
+    }
+}

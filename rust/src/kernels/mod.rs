@@ -1,0 +1,113 @@
+//! The kernel library: the paper's measurement-kernel classes (§4.1) and
+//! test kernels (§5), expressed as [`crate::lpir`] builders.
+//!
+//! * [`measure`] — the nine measurement classes (tiled & naive matrix
+//!   multiplication, vector scale-and-add at strides 1–3, three transpose
+//!   variants, stride-1 global access, stride-2/3 filled access, five
+//!   arithmetic-operation kernels, and the empty kernel), each swept over
+//!   the paper's size and work-group-size cases per device.
+//! * [`testks`] — the four test kernels (finite-difference stencil,
+//!   skinny matrix multiplication, 7×7×3 convolution, n-body), with the
+//!   per-device problem/group sizes of §5.
+//!
+//! Sizes are *snapped* to the nearest multiple of the work-group tile so
+//! kernels stay guard-free (the paper's OpenCL emits boundary guards
+//! instead; both choices keep model and device consistent, which is all
+//! the fit requires).
+
+pub mod measure;
+pub mod testks;
+
+use crate::lpir::Kernel;
+use std::collections::BTreeMap;
+
+/// A concrete benchmarkable case: kernel + parameter binding.
+#[derive(Clone, Debug)]
+pub struct KernelCase {
+    pub kernel: Kernel,
+    pub env: BTreeMap<String, i64>,
+    /// e.g. `mm_square/p=9/t=1/g=16x16`
+    pub label: String,
+    /// work-group shape used to build the kernel
+    pub group: (i64, i64),
+}
+
+/// The paper's six work-group-size sets (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupSet {
+    OneDSmall,
+    OneDMed,
+    OneDLarge,
+    TwoDSmall,
+    TwoDMed,
+    TwoDLarge,
+}
+
+impl GroupSet {
+    /// The three work-group shapes of the set.
+    pub fn sizes(&self) -> Vec<(i64, i64)> {
+        match self {
+            GroupSet::OneDSmall => vec![(192, 1), (224, 1), (256, 1)],
+            GroupSet::OneDMed => vec![(128, 1), (256, 1), (384, 1)],
+            GroupSet::OneDLarge => vec![(256, 1), (384, 1), (512, 1)],
+            GroupSet::TwoDSmall => vec![(16, 12), (16, 14), (16, 16)],
+            GroupSet::TwoDMed => vec![(16, 12), (16, 16), (32, 16)],
+            GroupSet::TwoDLarge => vec![(16, 16), (24, 16), (32, 16)],
+        }
+    }
+
+    /// The 256-thread member of the set (the configuration the paper
+    /// reports test-kernel results for).
+    pub fn g256(&self) -> (i64, i64) {
+        self.sizes()
+            .into_iter()
+            .find(|(a, b)| a * b == 256)
+            .expect("every group set contains a 256-thread shape")
+    }
+}
+
+/// Snap `n` to the nearest positive multiple of `q`.
+pub fn snap(n: i64, q: i64) -> i64 {
+    (((n + q / 2) / q).max(1)) * q
+}
+
+/// Full measurement suite for a device (§4.1): all nine classes with the
+/// paper's per-device group sets and size exponents.
+pub fn measurement_suite(device: &str) -> Vec<KernelCase> {
+    measure::suite(device)
+}
+
+/// The four test kernels for a device (§5), 256-thread groups, four size
+/// cases (`a.`–`d.`) each.
+pub fn test_suite(device: &str) -> Vec<KernelCase> {
+    testks::suite(device)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_sets_have_three_shapes_and_a_256(){
+        for gs in [
+            GroupSet::OneDSmall,
+            GroupSet::OneDMed,
+            GroupSet::OneDLarge,
+            GroupSet::TwoDSmall,
+            GroupSet::TwoDMed,
+            GroupSet::TwoDLarge,
+        ] {
+            assert_eq!(gs.sizes().len(), 3);
+            let (a, b) = gs.g256();
+            assert_eq!(a * b, 256);
+        }
+    }
+
+    #[test]
+    fn snap_behaviour() {
+        assert_eq!(snap(128, 16), 128);
+        assert_eq!(snap(128, 12), 132);
+        assert_eq!(snap(5, 16), 16);
+        assert_eq!(snap(1024, 48), 1008);
+    }
+}

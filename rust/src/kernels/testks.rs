@@ -1,0 +1,526 @@
+//! The four test kernels of §5: finite-difference stencil, skinny matrix
+//! multiplication, 7×7×3 convolution, and n-body. Results for these are
+//! what Table 1 reports.
+
+use super::{measure::mm_tiled, snap, GroupSet, KernelCase};
+use crate::lpir::builder::{gid, KernelBuilder};
+use crate::lpir::{Access, DType, Expr, Kernel, Layout, UnOp};
+use crate::qpoly::{env, LinExpr};
+
+fn v(name: &str) -> LinExpr {
+    LinExpr::var(name)
+}
+
+fn c(x: i64) -> LinExpr {
+    LinExpr::constant(x)
+}
+
+/// Small epsilon added to squared distances in the n-body kernel (the
+/// self-interaction term becomes a constant instead of a singularity).
+pub const NBODY_EPS: f64 = 1.0e-4;
+
+// ---------------------------------------------------------------------------
+// Finite differences
+// ---------------------------------------------------------------------------
+
+/// 5-point stencil with a quadratic source term on an `n×n` grid
+/// (row-major), prefetching `(gy+2)×(gx+2)` halo tiles into local memory.
+/// The input is halo-padded to `(n+2)×(n+2)`, so the kernel is guard-free;
+/// each thread performs four shifted loads that jointly cover the tile
+/// plus halo.
+pub fn fd_stencil(gx: i64, gy: i64) -> Kernel {
+    let np2 = v("n").add(&c(2));
+    let mut b = KernelBuilder::new("fd5", &["n"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .global_array("u", DType::F32, vec![np2.clone(), np2], Layout::RowMajor, false)
+        .global_array("out", DType::F32, vec![v("n"), v("n")], Layout::RowMajor, true)
+        .local_array("t", DType::F32, &[gy + 2, gx + 2]);
+    // four shifted cooperative loads cover [0, gy+2) x [0, gx+2)
+    let mut deps = Vec::new();
+    for (dy, dx) in [(0i64, 0i64), (0, 2), (2, 0), (2, 2)] {
+        b = b.insn(
+            Access::new("t", vec![v("l1").add(&c(dy)), v("l0").add(&c(dx))]),
+            Expr::load(
+                "u",
+                vec![gid(1, gy).add(&c(dy)), gid(0, gx).add(&c(dx))],
+            ),
+            &["g0", "g1", "l0", "l1"],
+            &[],
+        );
+        deps.push(b_len(&b) - 1);
+    }
+    // out[y, x] = 0.25*(N + S + E + W - 4*C) + C*C
+    let center = Expr::load("t", vec![v("l1").add(&c(1)), v("l0").add(&c(1))]);
+    let north = Expr::load("t", vec![v("l1"), v("l0").add(&c(1))]);
+    let south = Expr::load("t", vec![v("l1").add(&c(2)), v("l0").add(&c(1))]);
+    let west = Expr::load("t", vec![v("l1").add(&c(1)), v("l0")]);
+    let east = Expr::load("t", vec![v("l1").add(&c(1)), v("l0").add(&c(2))]);
+    let laplace = Expr::sub(
+        Expr::add(Expr::add(north, south), Expr::add(west, east)),
+        Expr::mul(Expr::lit(4.0), center.clone()),
+    );
+    let rhs = Expr::add(
+        Expr::mul(Expr::lit(0.25), laplace),
+        Expr::mul(center.clone(), center),
+    );
+    b.insn(
+        Access::new("out", vec![gid(1, gy), gid(0, gx)]),
+        rhs,
+        &["g0", "g1", "l0", "l1"],
+        &deps,
+    )
+    .build()
+    .expect("fd5 builds")
+}
+
+fn b_len(b: &KernelBuilder) -> usize {
+    b.insn_count()
+}
+
+/// Reference implementation of [`fd_stencil`] against seeded inputs.
+pub fn fd_reference(n: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let np2 = n + 2;
+    let u = |y: usize, x: usize| seed_value("u", y * np2 + x);
+    let mut out = vec![0.0; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let cpt = u(y + 1, x + 1);
+            let lap = u(y, x + 1) + u(y + 2, x + 1) + u(y + 1, x) + u(y + 1, x + 2) - 4.0 * cpt;
+            out[y * n + x] = 0.25 * lap + cpt * cpt;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// 'Skinny' matrix multiplication
+// ---------------------------------------------------------------------------
+
+/// Tiled MM with `n = l = m/8` (§5): reuses the measurement tiled-MM
+/// kernel with the skinny shape.
+pub fn skinny_mm(gx: i64, gy: i64) -> Kernel {
+    let mut k = mm_tiled(gx, gy);
+    k.name = "mm_skinny".into();
+    k
+}
+
+/// Parameter binding for the skinny shape at base size `n`.
+pub fn skinny_env(n: i64, gx: i64, gy: i64) -> std::collections::BTreeMap<String, i64> {
+    let n_ = snap(n, gy);
+    let m_ = snap(8 * n, gx);
+    let l_ = snap(n, gx);
+    env(&[("n", n_), ("m", m_), ("l", l_)])
+}
+
+// ---------------------------------------------------------------------------
+// Convolution
+// ---------------------------------------------------------------------------
+
+/// 7×7 convolution: three filters applied to three RGB images (§5).
+///
+/// `out[i, j, y, x] = Σ_{η,ξ,c} m[i, y+η, x+ξ, c] · f[j, η, ξ, c]`
+///
+/// with `m` halo-padded to `(3, n+6, n+6, 3)` (interleaved RGB — the
+/// innermost channel axis gives the image loads the lane stride 3 / 3-of-3
+/// utilization class) and `f` of shape `(3, 7, 7, 3)` read uniformly.
+pub fn convolution(gx: i64, gy: i64) -> Kernel {
+    let np6 = v("n").add(&c(6));
+    KernelBuilder::new("conv7", &["n"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .seq_dim("i", c(3))
+        .seq_dim("j", c(3))
+        .red_dim("eta", c(7))
+        .red_dim("xi", c(7))
+        .red_dim("ch", c(3))
+        .global_array(
+            "m",
+            DType::F32,
+            vec![c(3), np6.clone(), np6, c(3)],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array("f", DType::F32, vec![c(3), c(7), c(7), c(3)], Layout::RowMajor, false)
+        .global_array(
+            "out",
+            DType::F32,
+            vec![c(3), c(3), v("n"), v("n")],
+            Layout::RowMajor,
+            true,
+        )
+        .insn(
+            Access::new("out", vec![v("i"), v("j"), gid(1, gy), gid(0, gx)]),
+            Expr::sum(
+                "eta",
+                Expr::sum(
+                    "xi",
+                    Expr::sum(
+                        "ch",
+                        Expr::mul(
+                            Expr::load(
+                                "m",
+                                vec![
+                                    v("i"),
+                                    gid(1, gy).add(&v("eta")),
+                                    gid(0, gx).add(&v("xi")),
+                                    v("ch"),
+                                ],
+                            ),
+                            Expr::load("f", vec![v("j"), v("eta"), v("xi"), v("ch")]),
+                        ),
+                    ),
+                ),
+            ),
+            &["g0", "g1", "l0", "l1", "i", "j"],
+            &[],
+        )
+        .build()
+        .expect("conv7 builds")
+}
+
+/// Reference implementation of [`convolution`].
+pub fn conv_reference(n: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let np6 = n + 6;
+    let m = |i: usize, y: usize, x: usize, ch: usize| {
+        seed_value("m", ((i * np6 + y) * np6 + x) * 3 + ch)
+    };
+    let f = |j: usize, e: usize, x: usize, ch: usize| {
+        seed_value("f", ((j * 7 + e) * 7 + x) * 3 + ch)
+    };
+    let mut out = vec![0.0; 3 * 3 * n * n];
+    for i in 0..3 {
+        for j in 0..3 {
+            for y in 0..n {
+                for x in 0..n {
+                    let mut acc = 0.0;
+                    for eta in 0..7 {
+                        for xi in 0..7 {
+                            for ch in 0..3 {
+                                acc += m(i, y + eta, x + xi, ch) * f(j, eta, xi, ch);
+                            }
+                        }
+                    }
+                    out[((i * 3 + j) * n + y) * n + x] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// N-body
+// ---------------------------------------------------------------------------
+
+/// N-body inverse-distance summation (§5): positions in a column-major
+/// `3×n` array, prefetched in `3×gsize` blocks into local memory; each
+/// thread sums `1/√(|p_i - p_j|² + ε)` over all j.
+pub fn nbody(lsize: i64) -> Kernel {
+    let i = gid(0, lsize);
+    KernelBuilder::new("nbody", &["n"])
+        .group_dims_1d(v("n"), lsize)
+        .seq_tiles("jt", v("n"), lsize)
+        .unroll_dim("cload", 3)
+        .red_dim("jl", c(lsize))
+        // column-major [3, n]: element (cp, j) at flat cp + 3j
+        .global_array("pos", DType::F32, vec![c(3), v("n")], Layout::ColMajor, false)
+        .global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true)
+        .local_array("tile", DType::F32, &[3, lsize])
+        .private_array("pp", DType::F32, &[3])
+        .private_array("acc", DType::F32, &[1])
+        // 0: own position into registers (outside the jt loop)
+        .insn(
+            Access::new("pp", vec![v("cload")]),
+            Expr::load("pos", vec![v("cload"), i.clone()]),
+            &["g0", "l0", "cload"],
+            &[],
+        )
+        // 1: prefetch a 3×gsize block of positions
+        .insn(
+            Access::new("tile", vec![v("cload"), v("l0")]),
+            Expr::load(
+                "pos",
+                vec![v("cload"), LinExpr::scaled_var("jt", lsize).add(&v("l0"))],
+            ),
+            &["g0", "l0", "jt", "cload"],
+            &[0],
+        )
+        // 2: accumulate inverse distances over the tile
+        .update_insn(
+            Access::new("acc", vec![c(0)]),
+            Expr::sum("jl", {
+                let d = |cp: i64| {
+                    Expr::sub(
+                        Expr::load("pp", vec![c(cp)]),
+                        Expr::load("tile", vec![c(cp), v("jl")]),
+                    )
+                };
+                let sq = |e: Expr| Expr::mul(e.clone(), e);
+                Expr::un(
+                    UnOp::Rsqrt,
+                    Expr::add(
+                        Expr::add(sq(d(0)), sq(d(1))),
+                        Expr::add(sq(d(2)), Expr::lit(NBODY_EPS)),
+                    ),
+                )
+            }),
+            &["g0", "l0", "jt"],
+            &[1],
+        )
+        // 3: write the sum
+        .insn(
+            Access::new("out", vec![i]),
+            Expr::load("acc", vec![c(0)]),
+            &["g0", "l0"],
+            &[2],
+        )
+        .build()
+        .expect("nbody builds")
+}
+
+/// Reference implementation of [`nbody`].
+pub fn nbody_reference(n: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let p = |cp: usize, j: usize| seed_value("pos", cp + 3 * j);
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..n {
+            let dx = p(0, i) - p(0, j);
+            let dy = p(1, i) - p(1, j);
+            let dz = p(2, i) - p(2, j);
+            acc += 1.0 / (dx * dx + dy * dy + dz * dz + NBODY_EPS).sqrt();
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Per-device test suite (§5)
+// ---------------------------------------------------------------------------
+
+/// §5 per-device configuration: (group set, p) for each test kernel.
+fn cfg(device: &str) -> [(GroupSet, i64); 4] {
+    // order: fd, skinny_mm, conv, nbody
+    match device {
+        "r9_fury" => [
+            (GroupSet::TwoDSmall, 10),
+            (GroupSet::TwoDSmall, 9),
+            (GroupSet::TwoDSmall, 7),
+            (GroupSet::OneDSmall, 10),
+        ],
+        "c2070" => [
+            (GroupSet::TwoDMed, 10),
+            (GroupSet::TwoDMed, 9),
+            (GroupSet::TwoDMed, 6),
+            (GroupSet::OneDMed, 11),
+        ],
+        "k40c" => [
+            (GroupSet::TwoDMed, 11),
+            (GroupSet::TwoDMed, 9),
+            (GroupSet::TwoDMed, 7),
+            (GroupSet::OneDMed, 11),
+        ],
+        _ => [
+            (GroupSet::TwoDLarge, 11),
+            (GroupSet::TwoDLarge, 10),
+            (GroupSet::TwoDLarge, 8),
+            (GroupSet::OneDLarge, 11),
+        ],
+    }
+}
+
+/// The four §5 test kernels with their 256-thread group configuration and
+/// four size cases (`a.`–`d.`, i.e. t = 0..4) each.
+pub fn suite(device: &str) -> Vec<KernelCase> {
+    let [fd_c, mm_c, cv_c, nb_c] = cfg(device);
+    let mut out = Vec::new();
+
+    let (gx, gy) = fd_c.0.g256();
+    let k = fd_stencil(gx, gy);
+    for t in 0..4 {
+        let n = snap(1i64 << (fd_c.1 + t), lcm(gx, gy));
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("fd5/{}/n={n}", case_letter(t)),
+            group: (gx, gy),
+        });
+    }
+
+    let (gx, gy) = mm_c.0.g256();
+    let k = skinny_mm(gx, gy);
+    for t in 0..4 {
+        let n = 1i64 << (mm_c.1 + t);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: skinny_env(n, gx, gy),
+            label: format!("mm_skinny/{}/n={n}", case_letter(t)),
+            group: (gx, gy),
+        });
+    }
+
+    let (gx, gy) = cv_c.0.g256();
+    let k = convolution(gx, gy);
+    for t in 0..4 {
+        let n = snap(1i64 << (cv_c.1 + t), lcm(gx, gy));
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("conv7/{}/n={n}", case_letter(t)),
+            group: (gx, gy),
+        });
+    }
+
+    let (lsize, _) = nb_c.0.g256();
+    let k = nbody(lsize);
+    for t in 0..4 {
+        let n = snap(1i64 << (nb_c.1 + t), lsize);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("nbody/{}/n={n}", case_letter(t)),
+            group: (lsize, 1),
+        });
+    }
+    out
+}
+
+/// Table-1 row letters for the four size cases.
+pub fn case_letter(t: i64) -> &'static str {
+    ["a", "b", "c", "d"][t as usize]
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: i64, b: i64) -> i64 {
+    a / gcd(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{execute, seed_value};
+
+    #[test]
+    fn fd_stencil_matches_reference() {
+        let k = fd_stencil(8, 8);
+        let n = 16usize;
+        let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+        let out = st.get("out").unwrap();
+        let want = fd_reference(n);
+        for i in 0..n * n {
+            assert!((out[i] - want[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn skinny_mm_matches_reference() {
+        let k = skinny_mm(8, 8);
+        let e = skinny_env(8, 8, 8);
+        let (n, m, l) = (e["n"] as usize, e["m"] as usize, e["l"] as usize);
+        let st = execute(&k, &e).unwrap();
+        let cc = st.get("cc").unwrap();
+        for i in 0..n {
+            for j in 0..l {
+                let want: f64 = (0..m)
+                    .map(|kk| seed_value("a", i * m + kk) * seed_value("b", kk * l + j))
+                    .sum();
+                assert!((cc[i * l + j] - want).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn convolution_matches_reference() {
+        let k = convolution(8, 4);
+        let n = 8usize;
+        let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+        let out = st.get("out").unwrap();
+        let want = conv_reference(n);
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn nbody_matches_reference() {
+        let k = nbody(16);
+        let n = 32usize;
+        let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+        let out = st.get("out").unwrap();
+        let want = nbody_reference(n);
+        for i in 0..n {
+            assert!(
+                (out[i] - want[i]).abs() / want[i].abs() < 1e-10,
+                "i={i}: {} vs {}",
+                out[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn test_suite_has_16_cases_per_device() {
+        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+            let s = suite(dev);
+            assert_eq!(s.len(), 16, "{dev}");
+            // 4 kernels x 4 size cases with 256-thread groups
+            for case in &s {
+                assert_eq!(case.group.0 * case.group.1, 256, "{}", case.label);
+            }
+        }
+    }
+
+    #[test]
+    fn nbody_exercises_rsqrt_and_local_loads() {
+        use crate::lpir::OpKind;
+        use crate::stats::{extract, ExtractOpts, Prop, Schema};
+        let k = nbody(16);
+        let e = env(&[("n", 64)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let rsqrt_like =
+            v[schema.index_of(&Prop::Op { kind: OpKind::Special, bits: 32 }).unwrap()];
+        assert_eq!(rsqrt_like, 64.0 * 64.0); // one rsqrt per pair
+        assert!(v[schema.index_of(&Prop::LocalLoad { bits: 32 }).unwrap()] > 0.0);
+        assert!(v[schema.index_of(&Prop::Barriers).unwrap()] > 0.0);
+    }
+
+    #[test]
+    fn conv_filter_reads_are_uniform() {
+        use crate::stats::{extract, ExtractOpts, Prop, Schema, Dir};
+        use crate::isl::progression::StrideClass;
+        let k = convolution(16, 16);
+        let e = env(&[("n", 32)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let uni = v[schema
+            .index_of(&Prop::MemGlobal {
+                bits: 32,
+                dir: Dir::Load,
+                class: StrideClass::Uniform,
+            })
+            .unwrap()];
+        assert!(uni > 0.0, "filter loads should be uniform");
+        // image loads have lane stride 3, full utilization -> 3/3
+        let s3 = v[schema
+            .index_of(&Prop::MemGlobal {
+                bits: 32,
+                dir: Dir::Load,
+                class: StrideClass::Frac { numer: 3, denom: 3 },
+            })
+            .unwrap()];
+        assert!(s3 > 0.0, "image loads should be stride-3 full-utilization");
+    }
+}

@@ -1,0 +1,45 @@
+//! # uniperf
+//!
+//! Reproduction of *“A Unified, Hardware-Fitted, Cross-GPU Performance
+//! Model”* (Stevens & Klöckner, 2016).
+//!
+//! The library models the wall time of a GPU compute kernel as a linear
+//! combination of symbolically-extracted, hardware-independent *kernel
+//! properties* with hardware-fitted weights:
+//!
+//! ```text
+//! T_wall(n) ≈ Σ_i α_i · p_i(n)
+//! ```
+//!
+//! Pipeline (the paper's Figure 1):
+//!
+//! 1. Express kernels in the polyhedral IR ([`lpir`]).
+//! 2. Count operations symbolically ([`isl`], [`qpoly`]) and classify them
+//!    into model properties ([`stats`]).
+//! 3. Time a library of measurement kernels ([`kernels`]) on a device
+//!    ([`gpusim`] — a simulated-GPU substrate standing in for the paper's
+//!    four physical GPUs) using the paper's timing protocol ([`harness`]).
+//! 4. Fit the per-device weights by relative-error least squares
+//!    ([`perfmodel`]; the numerical hot path is AOT-compiled JAX/Pallas
+//!    loaded through [`runtime`]).
+//! 5. Predict test-kernel run times and report the paper's tables
+//!    ([`report`], [`coordinator`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+pub mod util;
+pub mod qpoly;
+pub mod isl;
+pub mod lpir;
+pub mod schedule;
+pub mod stats;
+pub mod gpusim;
+pub mod kernels;
+pub mod perfmodel;
+pub mod harness;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

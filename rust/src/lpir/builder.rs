@@ -1,0 +1,282 @@
+//! Fluent construction of [`Kernel`]s.
+//!
+//! Mirrors the role of `loopy.make_kernel` + tagging transformations: the
+//! builder creates grid inames (`g0`/`g1` group axes, `l0`/`l1` local
+//! axes), sequential and reduction loops, array declarations, and
+//! instructions, then validates the result.
+
+use super::expr::{Access, DType, Expr};
+use super::{ArrayDecl, IdxTag, Insn, Kernel, Layout, MemSpace};
+use crate::isl::{BoxDomain, Dim};
+use crate::qpoly::LinExpr;
+use std::collections::BTreeMap;
+
+/// Global-index expression `lsize * g<axis> + l<axis>`.
+pub fn gid(axis: usize, lsize: i64) -> LinExpr {
+    LinExpr::scaled_var(&format!("g{axis}"), lsize).add(&LinExpr::var(&format!("l{axis}")))
+}
+
+/// 1-D shorthand for [`gid`] on axis 0.
+pub fn gid_lin_1d(lsize: i64) -> LinExpr {
+    gid(0, lsize)
+}
+
+/// Builder for [`Kernel`].
+pub struct KernelBuilder {
+    name: String,
+    params: Vec<String>,
+    dims: Vec<Dim>,
+    tags: BTreeMap<String, IdxTag>,
+    arrays: Vec<ArrayDecl>,
+    insns: Vec<Insn>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str, params: &[&str]) -> KernelBuilder {
+        KernelBuilder {
+            name: name.into(),
+            params: params.iter().map(|s| s.to_string()).collect(),
+            dims: Vec::new(),
+            tags: BTreeMap::new(),
+            arrays: Vec::new(),
+            insns: Vec::new(),
+        }
+    }
+
+    /// 1-D grid: `g0` ranges over `ceil(total/lsize)` groups, `l0` over
+    /// `lsize` lanes. Global index is [`gid_lin_1d`]`(lsize)`.
+    pub fn group_dims_1d(mut self, total: LinExpr, lsize: i64) -> Self {
+        self.dims.push(Dim::tiles("g0", total, lsize));
+        self.dims.push(Dim::simple("l0", LinExpr::constant(lsize)));
+        self.tags.insert("g0".into(), IdxTag::Group(0));
+        self.tags.insert("l0".into(), IdxTag::Local(0));
+        self
+    }
+
+    /// 2-D grid: axis 0 is the SIMD-lane (fastest-varying) axis.
+    pub fn group_dims_2d(
+        mut self,
+        total0: LinExpr,
+        lsize0: i64,
+        total1: LinExpr,
+        lsize1: i64,
+    ) -> Self {
+        self.dims.push(Dim::tiles("g0", total0, lsize0));
+        self.dims.push(Dim::tiles("g1", total1, lsize1));
+        self.dims.push(Dim::simple("l0", LinExpr::constant(lsize0)));
+        self.dims.push(Dim::simple("l1", LinExpr::constant(lsize1)));
+        self.tags.insert("g0".into(), IdxTag::Group(0));
+        self.tags.insert("g1".into(), IdxTag::Group(1));
+        self.tags.insert("l0".into(), IdxTag::Local(0));
+        self.tags.insert("l1".into(), IdxTag::Local(1));
+        self
+    }
+
+    /// 2-D grid with independent tile and lane extents per axis: group
+    /// axis `i` has `ceil(total_i / tile_i)` groups and `lsize_i` lanes.
+    /// Used when a kernel's tile shape differs from its work-group shape
+    /// (e.g. square transpose tiles staged by a non-square group).
+    pub fn custom_grid_2d(
+        mut self,
+        total0: LinExpr,
+        tile0: i64,
+        lsize0: i64,
+        total1: LinExpr,
+        tile1: i64,
+        lsize1: i64,
+    ) -> Self {
+        self.dims.push(Dim::tiles("g0", total0, tile0));
+        self.dims.push(Dim::tiles("g1", total1, tile1));
+        self.dims.push(Dim::simple("l0", LinExpr::constant(lsize0)));
+        self.dims.push(Dim::simple("l1", LinExpr::constant(lsize1)));
+        self.tags.insert("g0".into(), IdxTag::Group(0));
+        self.tags.insert("g1".into(), IdxTag::Group(1));
+        self.tags.insert("l0".into(), IdxTag::Local(0));
+        self.tags.insert("l1".into(), IdxTag::Local(1));
+        self
+    }
+
+    /// Plain sequential loop `0 <= name < hi`.
+    pub fn seq_dim(mut self, name: &str, hi: LinExpr) -> Self {
+        self.dims.push(Dim::simple(name, hi));
+        self.tags.insert(name.into(), IdxTag::Seq);
+        self
+    }
+
+    /// Sequential tile loop `0 <= name < ceil(num/den)`.
+    pub fn seq_tiles(mut self, name: &str, num: LinExpr, den: i64) -> Self {
+        self.dims.push(Dim::tiles(name, num, den));
+        self.tags.insert(name.into(), IdxTag::Seq);
+        self
+    }
+
+    /// Strided sequential loop over every `step`-th point of `[0, hi)`.
+    pub fn seq_strided(mut self, name: &str, hi: LinExpr, step: i64) -> Self {
+        self.dims.push(Dim::strided(name, hi, step));
+        self.tags.insert(name.into(), IdxTag::Seq);
+        self
+    }
+
+    /// Unrolled loop (sequential semantics, no loop overhead modeled).
+    pub fn unroll_dim(mut self, name: &str, hi: i64) -> Self {
+        self.dims.push(Dim::simple(name, LinExpr::constant(hi)));
+        self.tags.insert(name.into(), IdxTag::Unroll);
+        self
+    }
+
+    /// Reduction iname: a domain dim not tagged onto the grid; referenced
+    /// by `Expr::Reduce`.
+    pub fn red_dim(mut self, name: &str, hi: LinExpr) -> Self {
+        self.dims.push(Dim::simple(name, hi));
+        self.tags.insert(name.into(), IdxTag::Seq);
+        self
+    }
+
+    pub fn global_array(
+        mut self,
+        name: &str,
+        dtype: DType,
+        shape: Vec<LinExpr>,
+        layout: Layout,
+        is_output: bool,
+    ) -> Self {
+        self.arrays.push(ArrayDecl {
+            name: name.into(),
+            dtype,
+            shape,
+            space: MemSpace::Global,
+            layout,
+            is_output,
+        });
+        self
+    }
+
+    /// Work-group shared ("local") scratch array with constant shape.
+    pub fn local_array(mut self, name: &str, dtype: DType, shape: &[i64]) -> Self {
+        self.arrays.push(ArrayDecl {
+            name: name.into(),
+            dtype,
+            shape: shape.iter().map(|&s| LinExpr::constant(s)).collect(),
+            space: MemSpace::Local,
+            layout: Layout::RowMajor,
+            is_output: false,
+        });
+        self
+    }
+
+    /// Per-thread register array (usually a scalar accumulator: shape [1]).
+    pub fn private_array(mut self, name: &str, dtype: DType, shape: &[i64]) -> Self {
+        self.arrays.push(ArrayDecl {
+            name: name.into(),
+            dtype,
+            shape: shape.iter().map(|&s| LinExpr::constant(s)).collect(),
+            space: MemSpace::Private,
+            layout: Layout::RowMajor,
+            is_output: false,
+        });
+        self
+    }
+
+    /// Append an instruction; returns the builder (ids are sequential).
+    pub fn insn(mut self, lhs: Access, rhs: Expr, within: &[&str], deps: &[usize]) -> Self {
+        let id = self.insns.len();
+        self.insns.push(Insn {
+            id,
+            lhs,
+            rhs,
+            within: within.iter().map(|s| s.to_string()).collect(),
+            deps: deps.to_vec(),
+            is_update: false,
+        });
+        self
+    }
+
+    /// Append an update instruction (`lhs += rhs` for sum accumulators).
+    pub fn update_insn(
+        mut self,
+        lhs: Access,
+        rhs: Expr,
+        within: &[&str],
+        deps: &[usize],
+    ) -> Self {
+        let id = self.insns.len();
+        self.insns.push(Insn {
+            id,
+            lhs,
+            rhs,
+            within: within.iter().map(|s| s.to_string()).collect(),
+            deps: deps.to_vec(),
+            is_update: true,
+        });
+        self
+    }
+
+    /// Number of instructions appended so far (for dependency wiring).
+    pub fn insn_count(&self) -> usize {
+        self.insns.len()
+    }
+
+    /// Finish and validate.
+    pub fn build(self) -> Result<Kernel, String> {
+        let k = Kernel {
+            name: self.name,
+            params: self.params,
+            domain: BoxDomain::new(self.dims),
+            tags: self.tags,
+            arrays: self.arrays,
+            insns: self.insns,
+        };
+        k.validate()?;
+        Ok(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qpoly::env;
+
+    #[test]
+    fn gid_expression() {
+        let e = gid(1, 16);
+        assert_eq!(e.eval(&env(&[("g1", 3), ("l1", 5)])).unwrap(), 53);
+    }
+
+    #[test]
+    fn two_d_grid_counts() {
+        let k = KernelBuilder::new("t", &["n"])
+            .group_dims_2d(LinExpr::var("n"), 16, LinExpr::var("n"), 16)
+            .global_array(
+                "out",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                true,
+            )
+            .insn(
+                Access::new("out", vec![gid(1, 16), gid(0, 16)]),
+                Expr::lit(0.0),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 64)]);
+        assert_eq!(k.group_count_at(&e).unwrap(), 16);
+        assert_eq!(k.group_size_at(&e).unwrap(), (16, 16));
+    }
+
+    #[test]
+    fn build_rejects_invalid() {
+        let r = KernelBuilder::new("bad", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .insn(
+                Access::new("missing", vec![LinExpr::var("l0")]),
+                Expr::lit(1.0),
+                &["g0", "l0"],
+                &[],
+            )
+            .build();
+        assert!(r.is_err());
+    }
+}

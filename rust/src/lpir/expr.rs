@@ -1,0 +1,327 @@
+//! Expression AST for kernel instructions.
+//!
+//! Instructions are scalar assignments `lhs = rhs` (paper §3.1) whose
+//! right-hand sides contain arithmetic, array loads, and `reduce`
+//! expressions over reduction inames. Index expressions are affine
+//! ([`LinExpr`]) so the polyhedral analyses stay exact.
+
+use crate::qpoly::LinExpr;
+use std::fmt;
+
+/// Scalar element types. The paper's model classifies operations and
+/// accesses by 32-bit / 64-bit operand types (§2.2); 128-bit accesses
+/// arise from 4-wide vector types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    /// 4-wide f32 vector (one 128-bit access)
+    F32x4,
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+            DType::F32x4 => 16,
+        }
+    }
+
+    /// Access-size bucket in bits (32 / 64 / 128) as used by the model.
+    pub fn access_bits(&self) -> u32 {
+        (self.size_bytes() * 8) as u32
+    }
+
+    /// Promotion for binary arithmetic.
+    pub fn promote(a: DType, b: DType) -> DType {
+        use DType::*;
+        match (a, b) {
+            (F64, _) | (_, F64) => F64,
+            (F32x4, _) | (_, F32x4) => F32x4,
+            (F32, _) | (_, F32) => F32,
+            (I32, I32) => I32,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        !matches!(self, DType::I32)
+    }
+}
+
+/// Operation-kind categories of the model (§2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// addition and subtraction share a category
+    AddSub,
+    Mul,
+    Div,
+    /// exponentiation (pow, exp)
+    Exp,
+    /// other special functions (rsqrt, sqrt, sin, ...)
+    Special,
+}
+
+impl OpKind {
+    pub fn all() -> [OpKind; 5] {
+        [OpKind::AddSub, OpKind::Mul, OpKind::Div, OpKind::Exp, OpKind::Special]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::AddSub => "add/sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Exp => "exp",
+            OpKind::Special => "special",
+        }
+    }
+}
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// float power
+    Pow,
+    Min,
+    Max,
+}
+
+impl BinOp {
+    pub fn op_kind(&self) -> OpKind {
+        match self {
+            BinOp::Add | BinOp::Sub | BinOp::Min | BinOp::Max => OpKind::AddSub,
+            BinOp::Mul => OpKind::Mul,
+            BinOp::Div => OpKind::Div,
+            BinOp::Pow => OpKind::Exp,
+        }
+    }
+}
+
+/// Unary operators / intrinsic calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Sqrt,
+    Rsqrt,
+    Exp,
+    Sin,
+    Cos,
+    Abs,
+}
+
+impl UnOp {
+    pub fn op_kind(&self) -> OpKind {
+        match self {
+            UnOp::Neg => OpKind::AddSub,
+            UnOp::Exp => OpKind::Exp,
+            UnOp::Sqrt | UnOp::Rsqrt | UnOp::Sin | UnOp::Cos | UnOp::Abs => OpKind::Special,
+        }
+    }
+}
+
+/// Reduction operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RedOp {
+    Sum,
+    Max,
+}
+
+/// An array access with affine index expressions (over inames + params).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Access {
+    pub array: String,
+    pub idx: Vec<LinExpr>,
+}
+
+impl Access {
+    pub fn new(array: &str, idx: Vec<LinExpr>) -> Access {
+        Access { array: array.into(), idx }
+    }
+}
+
+impl fmt::Display for Access {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.array)?;
+        for (i, e) in self.idx.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Right-hand-side expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// floating literal
+    Lit(f64),
+    /// value of an iname or parameter (as a float)
+    Idx(LinExpr),
+    /// array load
+    Load(Access),
+    Un(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// explicit type conversion (e.g. index -> f64 for double-precision
+    /// arithmetic kernels); conversions are not counted as arithmetic
+    Cast(DType, Box<Expr>),
+    /// `reduce(op, iname, body)` — body evaluated over the reduction
+    /// iname's domain slice
+    Reduce(RedOp, String, Box<Expr>),
+}
+
+impl Expr {
+    pub fn lit(x: f64) -> Expr {
+        Expr::Lit(x)
+    }
+
+    pub fn load(array: &str, idx: Vec<LinExpr>) -> Expr {
+        Expr::Load(Access::new(array, idx))
+    }
+
+    pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Add, a, b)
+    }
+
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Sub, a, b)
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Mul, a, b)
+    }
+
+    pub fn div(a: Expr, b: Expr) -> Expr {
+        Expr::bin(BinOp::Div, a, b)
+    }
+
+    pub fn un(op: UnOp, a: Expr) -> Expr {
+        Expr::Un(op, Box::new(a))
+    }
+
+    pub fn sum(iname: &str, body: Expr) -> Expr {
+        Expr::Reduce(RedOp::Sum, iname.into(), Box::new(body))
+    }
+
+    pub fn cast(dtype: DType, e: Expr) -> Expr {
+        Expr::Cast(dtype, Box::new(e))
+    }
+
+    /// Visit every load access, with the set of enclosing reduction inames.
+    pub fn visit_loads<'a>(&'a self, f: &mut impl FnMut(&'a Access, &[String])) {
+        fn go<'a>(
+            e: &'a Expr,
+            red: &mut Vec<String>,
+            f: &mut impl FnMut(&'a Access, &[String]),
+        ) {
+            match e {
+                Expr::Lit(_) | Expr::Idx(_) => {}
+                Expr::Load(a) => f(a, red),
+                Expr::Un(_, x) | Expr::Cast(_, x) => go(x, red, f),
+                Expr::Bin(_, a, b) => {
+                    go(a, red, f);
+                    go(b, red, f);
+                }
+                Expr::Reduce(_, iname, body) => {
+                    red.push(iname.clone());
+                    go(body, red, f);
+                    red.pop();
+                }
+            }
+        }
+        go(self, &mut Vec::new(), f)
+    }
+
+    /// Reduction inames used anywhere in this expression.
+    pub fn reduction_inames(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        fn go(e: &Expr, out: &mut Vec<String>) {
+            match e {
+                Expr::Un(_, x) | Expr::Cast(_, x) => go(x, out),
+                Expr::Bin(_, a, b) => {
+                    go(a, out);
+                    go(b, out);
+                }
+                Expr::Reduce(_, iname, body) => {
+                    if !out.contains(iname) {
+                        out.push(iname.clone());
+                    }
+                    go(body, out);
+                }
+                _ => {}
+            }
+        }
+        go(self, &mut out);
+        out
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Lit(x) => write!(f, "{x}"),
+            Expr::Idx(e) => write!(f, "({e})"),
+            Expr::Load(a) => write!(f, "{a}"),
+            Expr::Un(op, x) => write!(f, "{op:?}({x})"),
+            Expr::Cast(dt, x) => write!(f, "({dt:?})({x})"),
+            Expr::Bin(op, a, b) => write!(f, "({a} {op:?} {b})"),
+            Expr::Reduce(op, iname, body) => write!(f, "reduce({op:?}, {iname}, {body})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qpoly::LinExpr;
+
+    #[test]
+    fn dtype_sizes_and_bits() {
+        assert_eq!(DType::F32.access_bits(), 32);
+        assert_eq!(DType::F64.access_bits(), 64);
+        assert_eq!(DType::F32x4.access_bits(), 128);
+        assert_eq!(DType::promote(DType::F32, DType::F64), DType::F64);
+        assert_eq!(DType::promote(DType::I32, DType::F32), DType::F32);
+    }
+
+    #[test]
+    fn op_kind_mapping() {
+        assert_eq!(BinOp::Sub.op_kind(), OpKind::AddSub);
+        assert_eq!(BinOp::Pow.op_kind(), OpKind::Exp);
+        assert_eq!(UnOp::Rsqrt.op_kind(), OpKind::Special);
+    }
+
+    #[test]
+    fn visit_loads_tracks_reduction_scope() {
+        // sum(k, a[i,k] * b[k,j]) + c[i]
+        let e = Expr::add(
+            Expr::sum(
+                "k",
+                Expr::mul(
+                    Expr::load("a", vec![LinExpr::var("i"), LinExpr::var("k")]),
+                    Expr::load("b", vec![LinExpr::var("k"), LinExpr::var("j")]),
+                ),
+            ),
+            Expr::load("c", vec![LinExpr::var("i")]),
+        );
+        let mut seen = Vec::new();
+        e.visit_loads(&mut |a, red| seen.push((a.array.clone(), red.to_vec())));
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], ("a".into(), vec!["k".to_string()]));
+        assert_eq!(seen[1], ("b".into(), vec!["k".to_string()]));
+        assert_eq!(seen[2], ("c".into(), vec![]));
+        assert_eq!(e.reduction_inames(), vec!["k".to_string()]);
+    }
+}

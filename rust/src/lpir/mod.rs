@@ -1,0 +1,376 @@
+//! `lpir` — the polyhedral kernel IR (the Loopy analogue; paper §3.1).
+//!
+//! A [`Kernel`] consists of:
+//! * a rectangular parametric *loop domain* ([`crate::isl::BoxDomain`]),
+//! * *iname tags* mapping loop variables onto the GPU execution grid
+//!   (group/local axes) or marking them sequential,
+//! * *array declarations* in global, local (work-group shared), or
+//!   private (register) memory,
+//! * scalar-assignment *instructions* with affine array indices and an
+//!   explicit dependency DAG.
+//!
+//! The IR is the substrate for everything else: [`crate::stats`] extracts
+//! model properties from it, [`crate::schedule`] linearizes it and inserts
+//! barriers, and [`crate::gpusim`] interprets it (numerically and for
+//! simulated timing).
+
+pub mod expr;
+pub mod builder;
+
+pub use expr::{Access, BinOp, DType, Expr, OpKind, RedOp, UnOp};
+
+use crate::isl::BoxDomain;
+use crate::qpoly::LinExpr;
+use std::collections::BTreeMap;
+
+/// How an iname maps onto the execution grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdxTag {
+    /// OpenCL work-group index along grid axis `0` or `1`
+    Group(usize),
+    /// OpenCL local (within-group) index along axis `0` or `1`; axis 0 is
+    /// the SIMD-lane axis used for stride analysis
+    Local(usize),
+    /// ordinary sequential loop
+    Seq,
+    /// fully unrolled loop (sequential for analysis purposes)
+    Unroll,
+}
+
+/// Memory space of an array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemSpace {
+    /// off-chip device memory
+    Global,
+    /// on-chip work-group shared memory ("local" in OpenCL terms)
+    Local,
+    /// per-thread registers (not modeled as memory traffic)
+    Private,
+}
+
+/// Data layout of a multi-dimensional array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+}
+
+/// An array declaration (kernel argument or temporary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub dtype: DType,
+    /// per-axis extents, affine in the kernel parameters
+    pub shape: Vec<LinExpr>,
+    pub space: MemSpace,
+    pub layout: Layout,
+    /// written by the kernel (outputs are validated by the simulator)
+    pub is_output: bool,
+}
+
+impl ArrayDecl {
+    /// Element strides (in elements) for the flattened linear index,
+    /// symbolic in the parameters. Row-major: last axis has stride 1.
+    pub fn elem_strides(&self) -> Vec<crate::qpoly::QPoly> {
+        use crate::qpoly::QPoly;
+        let d = self.shape.len();
+        let mut strides = vec![QPoly::one(); d];
+        match self.layout {
+            Layout::RowMajor => {
+                for a in (0..d.saturating_sub(1)).rev() {
+                    strides[a] = strides[a + 1].mul(&QPoly::from_lin(&self.shape[a + 1]));
+                }
+            }
+            Layout::ColMajor => {
+                for a in 1..d {
+                    strides[a] = strides[a - 1].mul(&QPoly::from_lin(&self.shape[a - 1]));
+                }
+            }
+        }
+        strides
+    }
+
+    /// Concrete extents at a parameter binding.
+    pub fn extents_at(&self, env: &BTreeMap<String, i64>) -> Result<Vec<i64>, String> {
+        self.shape.iter().map(|e| e.eval(env)).collect()
+    }
+}
+
+/// One scalar-assignment instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Insn {
+    pub id: usize,
+    pub lhs: Access,
+    pub rhs: Expr,
+    /// inames the instruction is nested within (its execution domain is
+    /// the projection of the kernel domain onto these); reduction inames
+    /// inside `rhs` are *not* listed here
+    pub within: Vec<String>,
+    /// instruction dependencies (must be scheduled earlier)
+    pub deps: Vec<usize>,
+    /// update (`lhs op= rhs`) rather than plain assignment — used for
+    /// accumulators whose reduction is expressed across a sequential loop
+    pub is_update: bool,
+}
+
+/// A kernel: domain + tags + arrays + instructions (paper §3.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// size parameters (`n`, `m`, ...)
+    pub params: Vec<String>,
+    pub domain: BoxDomain,
+    pub tags: BTreeMap<String, IdxTag>,
+    pub arrays: Vec<ArrayDecl>,
+    pub insns: Vec<Insn>,
+}
+
+impl Kernel {
+    pub fn array(&self, name: &str) -> Option<&ArrayDecl> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+
+    pub fn tag(&self, iname: &str) -> IdxTag {
+        self.tags.get(iname).copied().unwrap_or(IdxTag::Seq)
+    }
+
+    /// inames tagged `Local(axis)`, keyed by axis.
+    pub fn local_inames(&self) -> BTreeMap<usize, String> {
+        self.tags
+            .iter()
+            .filter_map(|(n, t)| match t {
+                IdxTag::Local(a) => Some((*a, n.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// inames tagged `Group(axis)`, keyed by axis.
+    pub fn group_inames(&self) -> BTreeMap<usize, String> {
+        self.tags
+            .iter()
+            .filter_map(|(n, t)| match t {
+                IdxTag::Group(a) => Some((*a, n.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Work-group size `(local0, local1)` at a parameter binding. Axes
+    /// without a local iname have extent 1.
+    pub fn group_size_at(&self, env: &BTreeMap<String, i64>) -> Result<(i64, i64), String> {
+        let locals = self.local_inames();
+        let mut out = [1i64, 1];
+        for (axis, iname) in locals {
+            let dim = self
+                .domain
+                .dim(&iname)
+                .ok_or_else(|| format!("local iname '{iname}' not in domain"))?;
+            out[axis.min(1)] = dim.trip_count_at(env)?;
+        }
+        Ok((out[0], out[1]))
+    }
+
+    /// Number of work groups launched at a parameter binding.
+    pub fn group_count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let groups = self.group_inames();
+        let mut n = 1i64;
+        for (_, iname) in groups {
+            let dim = self
+                .domain
+                .dim(&iname)
+                .ok_or_else(|| format!("group iname '{iname}' not in domain"))?;
+            n *= dim.trip_count_at(env)?;
+        }
+        Ok(n)
+    }
+
+    /// Symbolic work-group count (the launch-overhead property, §2.4).
+    pub fn group_count(&self) -> crate::qpoly::PwQPoly {
+        use crate::qpoly::{PwQPoly, QPoly};
+        let mut q = QPoly::one();
+        let mut guards = Vec::new();
+        for (_, iname) in self.group_inames() {
+            if let Some(dim) = self.domain.dim(&iname) {
+                q = q.mul(&dim.trip_count());
+                let g = dim.nonempty_guard();
+                if !g.0.is_constant() {
+                    guards.push(g);
+                }
+            }
+        }
+        PwQPoly { pieces: vec![(guards, q)] }
+    }
+
+    /// The execution domain of an instruction: projection of the kernel
+    /// domain onto `within` plus any reduction inames in its RHS
+    /// (Algorithm 1 of the paper takes the projection onto the "relevant
+    /// set of loop indices").
+    pub fn insn_domain(&self, insn: &Insn, include_reductions: bool) -> BoxDomain {
+        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+        let red = insn.rhs.reduction_inames();
+        if include_reductions {
+            for r in &red {
+                if !names.contains(&r.as_str()) {
+                    names.push(r);
+                }
+            }
+        }
+        self.domain.project_onto(&names)
+    }
+
+    /// Structural validation: every iname referenced exists in the
+    /// domain, every accessed array is declared, every dep id exists,
+    /// and index arities match array ranks.
+    pub fn validate(&self) -> Result<(), String> {
+        let ids: Vec<usize> = self.insns.iter().map(|i| i.id).collect();
+        for insn in &self.insns {
+            for w in &insn.within {
+                if self.domain.dim(w).is_none() {
+                    return Err(format!(
+                        "insn {} references unknown iname '{w}'",
+                        insn.id
+                    ));
+                }
+            }
+            for d in &insn.deps {
+                if !ids.contains(d) {
+                    return Err(format!("insn {} depends on unknown insn {d}", insn.id));
+                }
+            }
+            let check_access = |a: &Access| -> Result<(), String> {
+                let arr = self
+                    .array(&a.array)
+                    .ok_or_else(|| format!("unknown array '{}'", a.array))?;
+                if arr.shape.len() != a.idx.len() {
+                    return Err(format!(
+                        "access {} has {} indices, array has rank {}",
+                        a,
+                        a.idx.len(),
+                        arr.shape.len()
+                    ));
+                }
+                Ok(())
+            };
+            check_access(&insn.lhs)?;
+            let mut err = None;
+            insn.rhs.visit_loads(&mut |a, _| {
+                if err.is_none() {
+                    err = check_access(a).err();
+                }
+            });
+            if let Some(e) = err {
+                return Err(e);
+            }
+            for r in insn.rhs.reduction_inames() {
+                if self.domain.dim(&r).is_none() {
+                    return Err(format!(
+                        "insn {} reduces over unknown iname '{r}'",
+                        insn.id
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isl::Dim;
+    use crate::qpoly::{env, LinExpr};
+
+    /// out[i] = 2*a[i], the paper's §3.1 example kernel.
+    fn double_kernel() -> Kernel {
+        builder::KernelBuilder::new("double", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![builder::gid_lin_1d(256)]),
+                Expr::mul(Expr::lit(2.0), Expr::load("a", vec![builder::gid_lin_1d(256)])),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn double_kernel_validates() {
+        let k = double_kernel();
+        assert_eq!(k.params, vec!["n".to_string()]);
+        assert!(k.validate().is_ok());
+    }
+
+    #[test]
+    fn group_size_and_count() {
+        let k = double_kernel();
+        let e = env(&[("n", 1024)]);
+        assert_eq!(k.group_size_at(&e).unwrap(), (256, 1));
+        assert_eq!(k.group_count_at(&e).unwrap(), 4);
+        assert_eq!(k.group_count().eval(&e).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn insn_domain_projection() {
+        let k = double_kernel();
+        let d = k.insn_domain(&k.insns[0], true);
+        assert_eq!(d.count().eval(&env(&[("n", 1024)])).unwrap(), 1024.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_array() {
+        let mut k = double_kernel();
+        k.insns[0].rhs = Expr::load("nope", vec![LinExpr::var("l0")]);
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_arity() {
+        let mut k = double_kernel();
+        k.insns[0].rhs = Expr::load("a", vec![LinExpr::var("l0"), LinExpr::var("g0")]);
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_dep() {
+        let mut k = double_kernel();
+        k.insns[0].deps = vec![99];
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn elem_strides_row_vs_col() {
+        let arr = ArrayDecl {
+            name: "a".into(),
+            dtype: DType::F32,
+            shape: vec![LinExpr::var("n"), LinExpr::var("m")],
+            space: MemSpace::Global,
+            layout: Layout::RowMajor,
+            is_output: false,
+        };
+        let s = arr.elem_strides();
+        let e = env(&[("n", 4), ("m", 8)]);
+        assert_eq!(s[0].eval(&e).unwrap(), 8.0);
+        assert_eq!(s[1].eval(&e).unwrap(), 1.0);
+        let col = ArrayDecl { layout: Layout::ColMajor, ..arr };
+        let s = col.elem_strides();
+        assert_eq!(s[0].eval(&e).unwrap(), 1.0);
+        assert_eq!(s[1].eval(&e).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn kernel_dim_lookup_and_tags() {
+        let k = double_kernel();
+        assert_eq!(k.tag("g0"), IdxTag::Group(0));
+        assert_eq!(k.tag("l0"), IdxTag::Local(0));
+        assert_eq!(k.tag("unknown"), IdxTag::Seq);
+        assert!(k.domain.dim("l0").is_some());
+        assert_eq!(
+            k.domain.dim("l0").unwrap(),
+            &Dim::simple("l0", LinExpr::constant(256))
+        );
+    }
+}

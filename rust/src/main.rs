@@ -1,0 +1,179 @@
+//! `uniperf` CLI — drive the unified, hardware-fitted, cross-GPU
+//! performance model end to end.
+//!
+//! Subcommands:
+//! * `pipeline` — full Figure-1 pipeline over all devices (Table 1 + 2)
+//! * `fit`      — calibrate one device and print its weight table
+//! * `predict`  — predict + measure the §5 test kernels on one device
+//! * `devices`  — list the simulated device profiles
+//! * `props`    — show extracted properties for one test kernel
+
+use uniperf::coordinator::{run_device, run_pipeline, Config, FitBackend};
+use uniperf::gpusim::all_devices;
+use uniperf::harness::Protocol;
+use uniperf::report::render_table2;
+use uniperf::stats::{extract, ExtractOpts, Schema};
+use uniperf::util::cli::{parse, usage, OptSpec};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "device", help: "device name (titan_x|k40c|c2070|r9_fury)", is_flag: false, default: Some("k40c") },
+        OptSpec { name: "backend", help: "fit backend: native|xla|auto", is_flag: false, default: Some("auto") },
+        OptSpec { name: "runs", help: "timing runs per case", is_flag: false, default: Some("30") },
+        OptSpec { name: "out", help: "results directory", is_flag: false, default: None },
+        OptSpec { name: "workers", help: "worker threads", is_flag: false, default: None },
+        OptSpec { name: "kernel", help: "test kernel: fd5|mm_skinny|conv7|nbody", is_flag: false, default: Some("fd5") },
+        OptSpec { name: "collapse-utilization", help: "ablation: ignore utilization ratios", is_flag: true, default: None },
+        OptSpec { name: "bin-local-strides", help: "extension (§6.2): bin local loads by bank-conflict stride", is_flag: true, default: None },
+    ]
+}
+
+fn backend_of(s: &str) -> Result<FitBackend, String> {
+    match s {
+        "native" => Ok(FitBackend::Native),
+        "xla" => Ok(FitBackend::Xla),
+        "auto" => Ok(FitBackend::Auto),
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_help();
+            return;
+        }
+    };
+    if let Err(e) = dispatch(cmd, &rest) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "uniperf {} — unified, hardware-fitted, cross-GPU performance model",
+        uniperf::VERSION
+    );
+    println!();
+    println!("subcommands: pipeline | fit | predict | devices | props");
+    println!();
+    println!("{}", usage("uniperf <subcommand>", "options", &specs()));
+}
+
+fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    cfg.backend = backend_of(args.get_or("backend", "auto"))?;
+    cfg.protocol = Protocol { runs: args.get_usize("runs", 30)?, ..Protocol::default() };
+    cfg.extract = ExtractOpts {
+        collapse_utilization: args.has_flag("collapse-utilization"),
+        bin_local_strides: args.has_flag("bin-local-strides"),
+    };
+    if let Some(out) = args.get("out") {
+        cfg.out_dir = Some(out.into());
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().map_err(|_| "bad --workers")?;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
+    let args = parse(rest, &specs())?;
+    match cmd {
+        "pipeline" => {
+            let cfg = make_config(&args)?;
+            let t0 = std::time::Instant::now();
+            let result = run_pipeline(&cfg)?;
+            println!("{}", result.table1.render());
+            for dr in &result.per_device {
+                println!(
+                    "{}: {} cases, launch overhead {:.1} µs, train geomean {:.1}%",
+                    dr.device,
+                    dr.n_measurement_cases,
+                    dr.launch_overhead_s * 1e6,
+                    100.0 * dr.model.train_rel_err_geomean
+                );
+            }
+            println!("pipeline completed in {:.1}s", t0.elapsed().as_secs_f64());
+            Ok(())
+        }
+        "fit" => {
+            let cfg = make_config(&args)?;
+            let device = args.get_or("device", "k40c").to_string();
+            let schema = Schema::full();
+            let dr = run_device(&device, &schema, &cfg)?;
+            println!("{}", render_table2(&dr.model, &schema));
+            Ok(())
+        }
+        "predict" => {
+            let cfg = make_config(&args)?;
+            let device = args.get_or("device", "k40c").to_string();
+            let schema = Schema::full();
+            let dr = run_device(&device, &schema, &cfg)?;
+            println!(
+                "{:<12} {:>6} {:>12} {:>12} {:>8}",
+                "kernel", "case", "pred (ms)", "actual (ms)", "relerr"
+            );
+            for (k, c, pred, act) in &dr.tests {
+                println!(
+                    "{:<12} {:>6} {:>12.3} {:>12.3} {:>7.1}%",
+                    k,
+                    c,
+                    pred * 1e3,
+                    act * 1e3,
+                    100.0 * (pred - act).abs() / act
+                );
+            }
+            Ok(())
+        }
+        "devices" => {
+            println!(
+                "{:<10} {:<24} {:>5} {:>10} {:>10} {:>9}",
+                "name", "full name", "SMs", "clock", "BW (GB/s)", "warp"
+            );
+            for d in all_devices() {
+                println!(
+                    "{:<10} {:<24} {:>5} {:>7.2}GHz {:>10.0} {:>9}",
+                    d.name,
+                    d.full_name,
+                    d.sms,
+                    d.clock_hz / 1e9,
+                    d.dram_bw / 1e9,
+                    d.warp_size
+                );
+            }
+            Ok(())
+        }
+        "props" => {
+            let device = args.get_or("device", "k40c").to_string();
+            let kernel_name = args.get_or("kernel", "fd5");
+            let suite = uniperf::kernels::test_suite(&device);
+            let case = suite
+                .iter()
+                .find(|c| c.kernel.name == kernel_name)
+                .ok_or_else(|| format!("unknown test kernel '{kernel_name}'"))?;
+            let props = extract(&case.kernel, &case.env, ExtractOpts::default())?;
+            println!("symbolic properties of {kernel_name} (polynomials in the size parameters):");
+            for (label, q) in props.nonzero() {
+                println!("  {:<42} {}", label, q);
+            }
+            println!("\nat {:?}:", case.env);
+            let schema = Schema::full();
+            let v = props.eval(&schema, &case.env)?;
+            for (i, p) in schema.props().iter().enumerate() {
+                if v[i] != 0.0 {
+                    println!("  {:<42} {:e}", p.label(), v[i]);
+                }
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try 'help')")),
+    }
+}

@@ -1,0 +1,398 @@
+//! The performance model: property matrix assembly, weight fitting
+//! (paper §4.3) and run-time prediction (§2).
+//!
+//! The fit minimizes *relative* error: with property matrix `P`
+//! (cases × properties) and measured times `T`,
+//!
+//! ```text
+//! min_α Σ_j (1 - ⟨α, P_j⟩ / T_j)²   =   min_α ‖B α - 1‖²,   B_j = P_j / T_j
+//! ```
+//!
+//! which is an ordinary least-squares problem in the scaled matrix `B`.
+//! Two interchangeable solver backends exist:
+//!
+//! * [`NativeSolver`] — in-process Gram + Cholesky (ridge-regularised)
+//!   with a Householder-QR fallback, built on [`crate::util::linalg`];
+//! * `runtime::XlaSolver` — the AOT-compiled JAX/Pallas artifact executed
+//!   through PJRT (the production path; see `python/compile/`).
+//!
+//! Both are cross-checked against each other in the integration tests.
+//!
+//! Prediction is the paper's "rapid evaluation": evaluate the symbolic
+//! property vector at the target size, then one small inner product.
+
+use crate::stats::{KernelProps, Schema};
+use crate::util::json::Json;
+use crate::util::linalg::{cholesky_solve, dot, qr_solve, Mat};
+use std::collections::BTreeMap;
+
+/// One measured case: a kernel's dense property vector + wall time.
+#[derive(Clone, Debug)]
+pub struct Case {
+    /// display label, e.g. `mm_square/n=512/g=16x16`
+    pub label: String,
+    pub props: Vec<f64>,
+    /// measured wall time in seconds
+    pub time_s: f64,
+}
+
+/// The assembled measurement set.
+#[derive(Clone, Debug, Default)]
+pub struct PropertyMatrix {
+    pub cases: Vec<Case>,
+}
+
+impl PropertyMatrix {
+    pub fn push(&mut self, label: String, props: Vec<f64>, time_s: f64) {
+        assert!(time_s > 0.0, "non-positive measured time for {label}");
+        self.cases.push(Case { label, props, time_s });
+    }
+
+    pub fn n_cases(&self) -> usize {
+        self.cases.len()
+    }
+
+    pub fn n_props(&self) -> usize {
+        self.cases.first().map(|c| c.props.len()).unwrap_or(0)
+    }
+
+    /// Columns with at least one non-zero entry (only these are fittable;
+    /// the paper notes the measurement set "contains instances of every
+    /// property relevant to the test kernels").
+    pub fn active_columns(&self) -> Vec<usize> {
+        let p = self.n_props();
+        (0..p)
+            .filter(|&j| self.cases.iter().any(|c| c.props[j] != 0.0))
+            .collect()
+    }
+
+    /// The relative-error-scaled matrix `B` restricted to `cols`.
+    pub fn scaled_matrix(&self, cols: &[usize]) -> Mat {
+        let mut m = Mat::zeros(self.n_cases(), cols.len());
+        for (i, c) in self.cases.iter().enumerate() {
+            for (k, &j) in cols.iter().enumerate() {
+                *m.at_mut(i, k) = c.props[j] / c.time_s;
+            }
+        }
+        m
+    }
+}
+
+/// A solver for the least-squares system `min ‖B α - 1‖²`.
+pub trait Solver {
+    /// Returns the weight vector (length = `b.cols`).
+    fn solve(&self, b: &Mat) -> Result<Vec<f64>, String>;
+
+    /// Identifying name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// In-process solver: column-equilibrated normal equations + Cholesky,
+/// falling back to Householder QR when ill-conditioned.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeSolver {
+    /// relative ridge (applied to the equilibrated Gram); 0 = none
+    pub ridge: f64,
+}
+
+impl NativeSolver {
+    pub fn new() -> Self {
+        NativeSolver { ridge: 1e-10 }
+    }
+}
+
+impl Solver for NativeSolver {
+    fn solve(&self, b: &Mat) -> Result<Vec<f64>, String> {
+        let (rows, cols) = (b.rows, b.cols);
+        if rows < cols {
+            return Err(format!("underdetermined fit: {rows} cases < {cols} properties"));
+        }
+        // column equilibration for conditioning
+        let mut scale = vec![0.0f64; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                scale[j] = scale[j].max(b.at(i, j).abs());
+            }
+        }
+        for s in &mut scale {
+            if *s == 0.0 {
+                *s = 1.0;
+            }
+        }
+        let mut bs = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                *bs.at_mut(i, j) = b.at(i, j) / scale[j];
+            }
+        }
+        let ones = vec![1.0; rows];
+        let g = bs.gram();
+        let atb = bs.t_mul_vec(&ones);
+        let w = match cholesky_solve(&g, &atb, self.ridge * rows as f64) {
+            Some(w) => w,
+            None => qr_solve(&bs, &ones),
+        };
+        Ok(w.iter().zip(&scale).map(|(wi, s)| wi / s).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native-cholesky"
+    }
+}
+
+/// A fitted device model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    /// device the weights were fitted for
+    pub device: String,
+    /// dense weight vector in schema order (inactive columns are 0)
+    pub weights: Vec<f64>,
+    /// which columns were active during the fit
+    pub active: Vec<usize>,
+    /// geometric-mean relative error on the training set
+    pub train_rel_err_geomean: f64,
+    pub solver: &'static str,
+}
+
+impl Model {
+    /// Predicted wall time (seconds) for a dense property vector — the
+    /// paper's "rapid evaluation": one inner product.
+    #[inline]
+    pub fn predict(&self, props: &[f64]) -> f64 {
+        dot(&self.weights, props)
+    }
+
+    /// Predict from symbolic properties at a parameter binding.
+    pub fn predict_kernel(
+        &self,
+        schema: &Schema,
+        props: &KernelProps,
+        env: &BTreeMap<String, i64>,
+    ) -> Result<f64, String> {
+        Ok(self.predict(&props.eval(schema, env)?))
+    }
+
+    /// Relative absolute error |pred - actual| / actual (the paper's
+    /// error measure).
+    pub fn rel_err(pred: f64, actual: f64) -> f64 {
+        (pred - actual).abs() / actual
+    }
+
+    /// Table-2-style weight report: (label, weight) for active columns
+    /// with non-zero weights, in schema order.
+    pub fn weight_report(&self, schema: &Schema) -> Vec<(String, f64)> {
+        self.active
+            .iter()
+            .filter(|&&j| self.weights[j] != 0.0)
+            .map(|&j| (schema.props()[j].label(), self.weights[j]))
+            .collect()
+    }
+
+    /// Serialize to JSON (for campaign persistence).
+    pub fn to_json(&self, schema: &Schema) -> Json {
+        Json::obj(vec![
+            ("device", Json::Str(self.device.clone())),
+            ("solver", Json::Str(self.solver.to_string())),
+            ("train_rel_err_geomean", Json::Num(self.train_rel_err_geomean)),
+            (
+                "weights",
+                Json::Arr(
+                    self.active
+                        .iter()
+                        .map(|&j| {
+                            Json::obj(vec![
+                                ("prop", Json::Str(schema.props()[j].label())),
+                                ("index", Json::Num(j as f64)),
+                                ("weight", Json::Num(self.weights[j])),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize from JSON produced by [`Model::to_json`].
+    pub fn from_json(j: &Json, schema: &Schema) -> Result<Model, String> {
+        let device = j
+            .get("device")
+            .and_then(Json::as_str)
+            .ok_or("missing device")?
+            .to_string();
+        let mut weights = vec![0.0; schema.len()];
+        let mut active = Vec::new();
+        for w in j.get("weights").and_then(Json::as_arr).ok_or("missing weights")? {
+            let idx = w.get("index").and_then(Json::as_f64).ok_or("missing index")? as usize;
+            let val = w.get("weight").and_then(Json::as_f64).ok_or("missing weight")?;
+            if idx >= schema.len() {
+                return Err(format!("weight index {idx} out of range"));
+            }
+            weights[idx] = val;
+            active.push(idx);
+        }
+        Ok(Model {
+            device,
+            weights,
+            active,
+            train_rel_err_geomean: j
+                .get("train_rel_err_geomean")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            solver: "loaded",
+        })
+    }
+}
+
+/// Fit a model from a measurement set with the given solver.
+pub fn fit(
+    device: &str,
+    pm: &PropertyMatrix,
+    schema: &Schema,
+    solver: &dyn Solver,
+) -> Result<Model, String> {
+    if pm.n_cases() == 0 {
+        return Err("empty measurement set".into());
+    }
+    if pm.n_props() != schema.len() {
+        return Err(format!(
+            "property vectors have {} entries, schema expects {}",
+            pm.n_props(),
+            schema.len()
+        ));
+    }
+    let active = pm.active_columns();
+    let b = pm.scaled_matrix(&active);
+    let w_active = solver.solve(&b)?;
+    let mut weights = vec![0.0; schema.len()];
+    for (k, &j) in active.iter().enumerate() {
+        weights[j] = w_active[k];
+    }
+    // training diagnostics
+    let errs: Vec<f64> = pm
+        .cases
+        .iter()
+        .map(|c| Model::rel_err(dot(&weights, &c.props), c.time_s))
+        .collect();
+    Ok(Model {
+        device: device.to_string(),
+        weights,
+        active,
+        train_rel_err_geomean: crate::util::linalg::geometric_mean(&errs),
+        solver: solver.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic measurement set: times generated from known weights
+    /// (plus optional noise) must be recovered by the fit.
+    fn synthetic(n_cases: usize, true_w: &[f64], noise: f64, seed: u64) -> PropertyMatrix {
+        let mut rng = Rng::new(seed);
+        let mut pm = PropertyMatrix::default();
+        for i in 0..n_cases {
+            let props: Vec<f64> = true_w
+                .iter()
+                .map(|_| (rng.range_u64(1, 1000) * 1000) as f64)
+                .collect();
+            let t: f64 =
+                props.iter().zip(true_w).map(|(p, w)| p * w).sum::<f64>() * rng.lognormal(noise);
+            pm.push(format!("case{i}"), props, t);
+        }
+        pm
+    }
+
+    fn raw_fit(pm: &PropertyMatrix, n_props: usize) -> Vec<f64> {
+        let active: Vec<usize> = (0..n_props).collect();
+        let b = pm.scaled_matrix(&active);
+        NativeSolver::new().solve(&b).unwrap()
+    }
+
+    #[test]
+    fn recovers_exact_weights_noiseless() {
+        let true_w = [1e-9, 5e-10, 2e-8];
+        let pm = synthetic(40, &true_w, 0.0, 7);
+        let w = raw_fit(&pm, 3);
+        for (wi, ti) in w.iter().zip(&true_w) {
+            assert!((wi - ti).abs() / ti < 1e-8, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn near_recovery_with_noise() {
+        let true_w = [1e-9, 5e-10, 2e-8];
+        let pm = synthetic(200, &true_w, 0.03, 11);
+        let w = raw_fit(&pm, 3);
+        for (wi, ti) in w.iter().zip(&true_w) {
+            assert!((wi - ti).abs() / ti < 0.05, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let true_w = [1e-9, 5e-10, 2e-8];
+        let pm = synthetic(2, &true_w, 0.0, 3);
+        let active: Vec<usize> = (0..3).collect();
+        let b = pm.scaled_matrix(&active);
+        assert!(NativeSolver::new().solve(&b).is_err());
+    }
+
+    #[test]
+    fn collinear_columns_still_predict() {
+        // two identical columns: weights are not unique, but the
+        // prediction must still reproduce the generating times
+        let mut pm = PropertyMatrix::default();
+        let mut rng = Rng::new(5);
+        for i in 0..20 {
+            let a = rng.range_u64(1, 100) as f64 * 1e6;
+            let props = vec![a, a, 2.0 * a];
+            let t = 3e-9 * a;
+            pm.push(format!("c{i}"), props, t);
+        }
+        let w = raw_fit(&pm, 3);
+        for c in &pm.cases {
+            let pred: f64 = w.iter().zip(&c.props).map(|(wi, p)| wi * p).sum();
+            assert!((pred - c.time_s).abs() / c.time_s < 1e-6);
+        }
+    }
+
+    #[test]
+    fn full_fit_with_schema_roundtrip() {
+        let schema = Schema::full();
+        let p = schema.len();
+        let active_cols = [0usize, 11, 40, p - 2, p - 1];
+        let true_w = [2e-12, 1e-12, 8e-12, 3e-9, 1e-4];
+        let mut rng = Rng::new(42);
+        let mut pm = PropertyMatrix::default();
+        for i in 0..30 {
+            let mut props = vec![0.0; p];
+            for &j in &active_cols {
+                props[j] =
+                    if j == p - 1 { 1.0 } else { (rng.range_u64(1, 500) * 100) as f64 };
+            }
+            let t: f64 = active_cols
+                .iter()
+                .zip(&true_w)
+                .map(|(&j, w)| props[j] * w)
+                .sum();
+            pm.push(format!("case{i}"), props, t);
+        }
+        let model = fit("test_dev", &pm, &schema, &NativeSolver::new()).unwrap();
+        assert!(model.train_rel_err_geomean < 1e-6, "{}", model.train_rel_err_geomean);
+        // json roundtrip preserves predictions
+        let j = model.to_json(&schema);
+        let loaded = Model::from_json(&Json::parse(&j.pretty()).unwrap(), &schema).unwrap();
+        for c in &pm.cases {
+            assert!((model.predict(&c.props) - loaded.predict(&c.props)).abs() < 1e-15);
+        }
+        assert_eq!(model.weight_report(&schema).len(), active_cols.len());
+    }
+
+    #[test]
+    fn rel_err_definition() {
+        assert_eq!(Model::rel_err(1.5, 1.0), 0.5);
+        assert_eq!(Model::rel_err(0.5, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,580 @@
+//! Piecewise quasi-polynomials — the symbolic representation of operation
+//! counts (paper §3.2).
+//!
+//! Counting the integer points of a parametric loop domain yields a
+//! *piecewise quasi-polynomial* in the size parameters (Verdoolaege et
+//! al.): a polynomial whose "variables" are either parameters (`n`, `m`,
+//! …) or integer floor divisions of affine parameter expressions
+//! (`floor((n+15)/16)` — these arise from tiling and strided loops).
+//!
+//! This module implements the closed arithmetic on those objects
+//! (addition, multiplication, scaling) plus evaluation at a concrete
+//! parameter binding, which is all the model needs: property expressions
+//! `p_i(n)` are built symbolically once and cheaply re-evaluated for
+//! changed `n` (the paper's "fully parametric" claim).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Affine integer expression: `Σ c_v · v + c0` over named parameters.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct LinExpr {
+    /// parameter name -> coefficient (zero coefficients are not stored)
+    pub terms: BTreeMap<String, i64>,
+    /// constant term
+    pub c: i64,
+}
+
+impl LinExpr {
+    pub fn constant(c: i64) -> LinExpr {
+        LinExpr { terms: BTreeMap::new(), c }
+    }
+
+    pub fn var(name: &str) -> LinExpr {
+        let mut terms = BTreeMap::new();
+        terms.insert(name.to_string(), 1);
+        LinExpr { terms, c: 0 }
+    }
+
+    pub fn scaled_var(name: &str, k: i64) -> LinExpr {
+        let mut e = LinExpr::constant(0);
+        e.add_term(name, k);
+        e
+    }
+
+    pub fn add_term(&mut self, name: &str, k: i64) {
+        if k == 0 {
+            return;
+        }
+        let entry = self.terms.entry(name.to_string()).or_insert(0);
+        *entry += k;
+        if *entry == 0 {
+            self.terms.remove(name);
+        }
+    }
+
+    pub fn add(&self, other: &LinExpr) -> LinExpr {
+        let mut out = self.clone();
+        out.c += other.c;
+        for (v, k) in &other.terms {
+            out.add_term(v, *k);
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &LinExpr) -> LinExpr {
+        self.add(&other.neg())
+    }
+
+    pub fn neg(&self) -> LinExpr {
+        LinExpr {
+            terms: self.terms.iter().map(|(v, k)| (v.clone(), -k)).collect(),
+            c: -self.c,
+        }
+    }
+
+    pub fn scale(&self, k: i64) -> LinExpr {
+        if k == 0 {
+            return LinExpr::constant(0);
+        }
+        LinExpr {
+            terms: self.terms.iter().map(|(v, c)| (v.clone(), c * k)).collect(),
+            c: self.c * k,
+        }
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Coefficient of a parameter (0 if absent).
+    pub fn coeff(&self, name: &str) -> i64 {
+        self.terms.get(name).copied().unwrap_or(0)
+    }
+
+    /// Evaluate with a parameter binding; errors on unbound parameters.
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        let mut acc = self.c;
+        for (v, k) in &self.terms {
+            let val = env.get(v).ok_or_else(|| format!("unbound parameter '{v}'"))?;
+            acc += k * val;
+        }
+        Ok(acc)
+    }
+
+    /// Substitute a parameter with an affine expression.
+    pub fn substitute(&self, name: &str, with: &LinExpr) -> LinExpr {
+        let k = self.coeff(name);
+        if k == 0 {
+            return self.clone();
+        }
+        let mut out = self.clone();
+        out.terms.remove(name);
+        out.add(&with.scale(k))
+    }
+}
+
+impl fmt::Display for LinExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (v, k) in &self.terms {
+            if *k == 1 && !first {
+                write!(f, " + {v}")?;
+            } else if *k == 1 {
+                write!(f, "{v}")?;
+            } else if *k == -1 {
+                write!(f, "{}-{v}", if first { "" } else { " " })?;
+            } else if *k < 0 {
+                write!(f, "{}{k}*{v}", if first { "" } else { " " })?;
+            } else if first {
+                write!(f, "{k}*{v}")?;
+            } else {
+                write!(f, " + {k}*{v}")?;
+            }
+            first = false;
+        }
+        if first {
+            write!(f, "{}", self.c)?;
+        } else if self.c > 0 {
+            write!(f, " + {}", self.c)?;
+        } else if self.c < 0 {
+            write!(f, " - {}", -self.c)?;
+        }
+        Ok(())
+    }
+}
+
+/// A multiplicative atom of a quasi-polynomial term.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Atom {
+    /// a bare parameter
+    Param(String),
+    /// `floor(num / den)`, `den > 0`
+    FloorDiv(LinExpr, i64),
+}
+
+impl Atom {
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+        match self {
+            Atom::Param(p) => {
+                env.get(p).copied().ok_or_else(|| format!("unbound parameter '{p}'"))
+            }
+            Atom::FloorDiv(num, den) => {
+                let n = num.eval(env)?;
+                Ok(n.div_euclid(*den))
+            }
+        }
+    }
+}
+
+impl fmt::Display for Atom {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Atom::Param(p) => write!(f, "{p}"),
+            Atom::FloorDiv(num, den) => write!(f, "floor(({num})/{den})"),
+        }
+    }
+}
+
+/// Product of atoms with exponents; the "1" monomial is the empty map.
+pub type Monomial = BTreeMap<Atom, u32>;
+
+/// Quasi-polynomial: map monomial -> coefficient.
+///
+/// Coefficients are `f64` but remain exact for all integer counts below
+/// 2^53, which comfortably covers every kernel in the paper.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct QPoly {
+    pub terms: BTreeMap<Monomial, f64>,
+}
+
+impl QPoly {
+    pub fn zero() -> QPoly {
+        QPoly::default()
+    }
+
+    pub fn constant(c: f64) -> QPoly {
+        let mut q = QPoly::zero();
+        if c != 0.0 {
+            q.terms.insert(Monomial::new(), c);
+        }
+        q
+    }
+
+    pub fn one() -> QPoly {
+        QPoly::constant(1.0)
+    }
+
+    pub fn param(name: &str) -> QPoly {
+        QPoly::from_atom(Atom::Param(name.to_string()))
+    }
+
+    pub fn from_atom(a: Atom) -> QPoly {
+        // constant-fold floor of a constant
+        if let Atom::FloorDiv(num, den) = &a {
+            if num.is_constant() {
+                return QPoly::constant(num.c.div_euclid(*den) as f64);
+            }
+        }
+        let mut m = Monomial::new();
+        m.insert(a, 1);
+        let mut q = QPoly::zero();
+        q.terms.insert(m, 1.0);
+        q
+    }
+
+    /// Lift an affine expression into a quasi-polynomial.
+    pub fn from_lin(e: &LinExpr) -> QPoly {
+        let mut q = QPoly::constant(e.c as f64);
+        for (v, k) in &e.terms {
+            q = q.add(&QPoly::param(v).scale(*k as f64));
+        }
+        q
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// `self` as a constant if it has no parametric terms.
+    pub fn as_constant(&self) -> Option<f64> {
+        match self.terms.len() {
+            0 => Some(0.0),
+            1 => {
+                let (m, c) = self.terms.iter().next().unwrap();
+                if m.is_empty() {
+                    Some(*c)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    fn insert_term(&mut self, m: Monomial, c: f64) {
+        if c == 0.0 {
+            return;
+        }
+        let entry = self.terms.entry(m.clone()).or_insert(0.0);
+        *entry += c;
+        if *entry == 0.0 {
+            self.terms.remove(&m);
+        }
+    }
+
+    pub fn add(&self, other: &QPoly) -> QPoly {
+        let mut out = self.clone();
+        for (m, c) in &other.terms {
+            out.insert_term(m.clone(), *c);
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &QPoly) -> QPoly {
+        self.add(&other.scale(-1.0))
+    }
+
+    pub fn scale(&self, k: f64) -> QPoly {
+        if k == 0.0 {
+            return QPoly::zero();
+        }
+        QPoly { terms: self.terms.iter().map(|(m, c)| (m.clone(), c * k)).collect() }
+    }
+
+    pub fn mul(&self, other: &QPoly) -> QPoly {
+        let mut out = QPoly::zero();
+        for (ma, ca) in &self.terms {
+            for (mb, cb) in &other.terms {
+                let mut m = ma.clone();
+                for (atom, e) in mb {
+                    *m.entry(atom.clone()).or_insert(0) += e;
+                }
+                out.insert_term(m, ca * cb);
+            }
+        }
+        out
+    }
+
+    /// Evaluate at a concrete parameter binding.
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<f64, String> {
+        let mut acc = 0.0;
+        for (m, c) in &self.terms {
+            let mut term = *c;
+            for (atom, e) in m {
+                let v = atom.eval(env)? as f64;
+                term *= v.powi(*e as i32);
+            }
+            acc += term;
+        }
+        Ok(acc)
+    }
+
+    /// Total degree (parameters and floor-atoms each count as degree 1).
+    pub fn degree(&self) -> u32 {
+        self.terms.keys().map(|m| m.values().sum::<u32>()).max().unwrap_or(0)
+    }
+}
+
+impl fmt::Display for QPoly {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.terms.is_empty() {
+            return write!(f, "0");
+        }
+        let mut first = true;
+        for (m, c) in &self.terms {
+            if !first {
+                write!(f, " + ")?;
+            }
+            first = false;
+            if m.is_empty() {
+                write!(f, "{c}")?;
+                continue;
+            }
+            if *c != 1.0 {
+                write!(f, "{c}*")?;
+            }
+            let mut first_atom = true;
+            for (atom, e) in m {
+                if !first_atom {
+                    write!(f, "*")?;
+                }
+                first_atom = false;
+                if *e == 1 {
+                    write!(f, "{atom}")?;
+                } else {
+                    write!(f, "{atom}^{e}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An affine constraint `expr >= 0`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Guard(pub LinExpr);
+
+impl Guard {
+    pub fn holds(&self, env: &BTreeMap<String, i64>) -> Result<bool, String> {
+        Ok(self.0.eval(env)? >= 0)
+    }
+}
+
+/// Piecewise quasi-polynomial: guarded pieces evaluated first-match. The
+/// pieces produced by our counting are disjoint; `eval` returns 0 if no
+/// guard holds (matching isl's semantics of counting an empty set).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PwQPoly {
+    pub pieces: Vec<(Vec<Guard>, QPoly)>,
+}
+
+impl PwQPoly {
+    pub fn from_qpoly(q: QPoly) -> PwQPoly {
+        PwQPoly { pieces: vec![(Vec::new(), q)] }
+    }
+
+    pub fn zero() -> PwQPoly {
+        PwQPoly::from_qpoly(QPoly::zero())
+    }
+
+    pub fn constant(c: f64) -> PwQPoly {
+        PwQPoly::from_qpoly(QPoly::constant(c))
+    }
+
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<f64, String> {
+        for (guards, q) in &self.pieces {
+            let mut ok = true;
+            for g in guards {
+                if !g.holds(env)? {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return q.eval(env);
+            }
+        }
+        Ok(0.0)
+    }
+
+    /// Binary combination: cross product of pieces, merging guards.
+    fn combine(&self, other: &PwQPoly, f: impl Fn(&QPoly, &QPoly) -> QPoly) -> PwQPoly {
+        let mut pieces = Vec::new();
+        for (ga, qa) in &self.pieces {
+            for (gb, qb) in &other.pieces {
+                let mut g = ga.clone();
+                g.extend(gb.iter().cloned());
+                pieces.push((g, f(qa, qb)));
+            }
+        }
+        PwQPoly { pieces }
+    }
+
+    pub fn add(&self, other: &PwQPoly) -> PwQPoly {
+        // Fast path: both single-piece and guard-free.
+        if self.pieces.len() == 1
+            && other.pieces.len() == 1
+            && self.pieces[0].0.is_empty()
+            && other.pieces[0].0.is_empty()
+        {
+            return PwQPoly::from_qpoly(self.pieces[0].1.add(&other.pieces[0].1));
+        }
+        self.combine(other, |a, b| a.add(b))
+    }
+
+    pub fn mul(&self, other: &PwQPoly) -> PwQPoly {
+        self.combine(other, |a, b| a.mul(b))
+    }
+
+    pub fn scale(&self, k: f64) -> PwQPoly {
+        PwQPoly {
+            pieces: self.pieces.iter().map(|(g, q)| (g.clone(), q.scale(k))).collect(),
+        }
+    }
+
+    /// Whether every piece is the zero polynomial.
+    pub fn is_zero(&self) -> bool {
+        self.pieces.iter().all(|(_, q)| q.is_zero())
+    }
+}
+
+impl fmt::Display for PwQPoly {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.pieces.len() == 1 && self.pieces[0].0.is_empty() {
+            return write!(f, "{}", self.pieces[0].1);
+        }
+        for (i, (guards, q)) in self.pieces.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            if !guards.is_empty() {
+                write!(f, "[")?;
+                for (j, g) in guards.iter().enumerate() {
+                    if j > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{} >= 0", g.0)?;
+                }
+                write!(f, "] -> ")?;
+            }
+            write!(f, "{q}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: parameter environment builder.
+pub fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linexpr_arith_and_eval() {
+        let e = LinExpr::var("n").scale(2).add(&LinExpr::constant(3)); // 2n+3
+        assert_eq!(e.eval(&env(&[("n", 5)])).unwrap(), 13);
+        let f = e.sub(&LinExpr::var("n")); // n+3
+        assert_eq!(f.eval(&env(&[("n", 5)])).unwrap(), 8);
+        assert!(e.eval(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn linexpr_cancellation() {
+        let e = LinExpr::var("n").sub(&LinExpr::var("n"));
+        assert!(e.is_constant());
+        assert_eq!(e.c, 0);
+    }
+
+    #[test]
+    fn linexpr_substitute() {
+        // e = 2i + 3, i := 16*t + l  ->  32t + 2l + 3
+        let e = LinExpr::scaled_var("i", 2).add(&LinExpr::constant(3));
+        let with = LinExpr::scaled_var("t", 16).add(&LinExpr::var("l"));
+        let s = e.substitute("i", &with);
+        assert_eq!(s.coeff("t"), 32);
+        assert_eq!(s.coeff("l"), 2);
+        assert_eq!(s.c, 3);
+        assert_eq!(s.coeff("i"), 0);
+    }
+
+    #[test]
+    fn qpoly_mul_expands() {
+        // (n + 1) * (n + 2) = n^2 + 3n + 2
+        let n1 = QPoly::param("n").add(&QPoly::one());
+        let n2 = QPoly::param("n").add(&QPoly::constant(2.0));
+        let p = n1.mul(&n2);
+        let e = env(&[("n", 7)]);
+        assert_eq!(p.eval(&e).unwrap(), (7.0 + 1.0) * (7.0 + 2.0));
+        assert_eq!(p.degree(), 2);
+    }
+
+    #[test]
+    fn floordiv_atom_eval() {
+        // floor((n+15)/16) — tile count
+        let fd = Atom::FloorDiv(LinExpr::var("n").add(&LinExpr::constant(15)), 16);
+        assert_eq!(fd.eval(&env(&[("n", 1)])).unwrap(), 1);
+        assert_eq!(fd.eval(&env(&[("n", 16)])).unwrap(), 1);
+        assert_eq!(fd.eval(&env(&[("n", 17)])).unwrap(), 2);
+    }
+
+    #[test]
+    fn floordiv_constant_folds() {
+        let q = QPoly::from_atom(Atom::FloorDiv(LinExpr::constant(37), 16));
+        assert_eq!(q.as_constant(), Some(2.0));
+    }
+
+    #[test]
+    fn qpoly_add_cancels() {
+        let p = QPoly::param("n").sub(&QPoly::param("n"));
+        assert!(p.is_zero());
+    }
+
+    #[test]
+    fn display_readable() {
+        let n = QPoly::param("n");
+        let p = n.mul(&n).scale(2.0).add(&QPoly::constant(1.0));
+        let s = format!("{p}");
+        assert!(s.contains("n^2"), "{s}");
+    }
+
+    #[test]
+    fn piecewise_eval_guard() {
+        // piece 1: n - 4 >= 0 -> n^2 ; else 0
+        let pw = PwQPoly {
+            pieces: vec![(
+                vec![Guard(LinExpr::var("n").sub(&LinExpr::constant(4)))],
+                QPoly::param("n").mul(&QPoly::param("n")),
+            )],
+        };
+        assert_eq!(pw.eval(&env(&[("n", 8)])).unwrap(), 64.0);
+        assert_eq!(pw.eval(&env(&[("n", 2)])).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn piecewise_combine_merges_guards() {
+        let a = PwQPoly {
+            pieces: vec![(vec![Guard(LinExpr::var("n"))], QPoly::param("n"))],
+        };
+        let b = PwQPoly::constant(3.0);
+        let s = a.mul(&b);
+        assert_eq!(s.eval(&env(&[("n", 5)])).unwrap(), 15.0);
+        assert_eq!(s.pieces[0].0.len(), 1);
+    }
+
+    #[test]
+    fn eval_matches_structure_after_arith() {
+        // p = (n*m + 2n + 1) * floor(n/2)
+        let nm = QPoly::param("n").mul(&QPoly::param("m"));
+        let p = nm
+            .add(&QPoly::param("n").scale(2.0))
+            .add(&QPoly::one())
+            .mul(&QPoly::from_atom(Atom::FloorDiv(LinExpr::var("n"), 2)));
+        let e = env(&[("n", 9), ("m", 4)]);
+        let want = ((9 * 4 + 2 * 9 + 1) * (9 / 2)) as f64;
+        assert_eq!(p.eval(&e).unwrap(), want);
+    }
+}

@@ -1,0 +1,244 @@
+//! Report generation: the paper's Table 1 (predicted vs. actual times +
+//! geometric-mean relative errors) and Table 2 (fitted weights).
+
+use crate::perfmodel::Model;
+use crate::stats::Schema;
+use crate::util::linalg::geometric_mean;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One Table-1 cell: a test-kernel size case on one device.
+#[derive(Clone, Debug)]
+pub struct Table1Entry {
+    pub device: String,
+    /// kernel display name, e.g. `fd5`
+    pub kernel: String,
+    /// size case letter `a`–`d`
+    pub case: String,
+    pub predicted_s: f64,
+    pub actual_s: f64,
+}
+
+impl Table1Entry {
+    pub fn rel_err(&self) -> f64 {
+        Model::rel_err(self.predicted_s, self.actual_s)
+    }
+}
+
+/// The assembled Table 1.
+#[derive(Clone, Debug, Default)]
+pub struct Table1 {
+    pub entries: Vec<Table1Entry>,
+}
+
+impl Table1 {
+    pub fn push(&mut self, e: Table1Entry) {
+        self.entries.push(e);
+    }
+
+    pub fn devices(&self) -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        for e in &self.entries {
+            if !v.contains(&e.device) {
+                v.push(e.device.clone());
+            }
+        }
+        v
+    }
+
+    pub fn kernels(&self) -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        for e in &self.entries {
+            if !v.contains(&e.kernel) {
+                v.push(e.kernel.clone());
+            }
+        }
+        v
+    }
+
+    /// Geometric-mean relative error of one kernel on one device.
+    pub fn kernel_device_err(&self, kernel: &str, device: &str) -> f64 {
+        let errs: Vec<f64> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel && e.device == device)
+            .map(|e| e.rel_err())
+            .collect();
+        geometric_mean(&errs)
+    }
+
+    /// Cross-kernel geometric mean for one device (Table 1's bottom row).
+    pub fn device_err(&self, device: &str) -> f64 {
+        let errs: Vec<f64> = self
+            .kernels()
+            .iter()
+            .map(|k| self.kernel_device_err(k, device))
+            .collect();
+        geometric_mean(&errs)
+    }
+
+    /// Cross-GPU geometric mean for one kernel (Table 1's last column).
+    pub fn kernel_err(&self, kernel: &str) -> f64 {
+        let errs: Vec<f64> = self
+            .devices()
+            .iter()
+            .map(|d| self.kernel_device_err(kernel, d))
+            .collect();
+        geometric_mean(&errs)
+    }
+
+    /// Overall geometric mean across kernels and devices.
+    pub fn overall_err(&self) -> f64 {
+        let errs: Vec<f64> = self.entries.iter().map(|e| e.rel_err()).collect();
+        geometric_mean(&errs)
+    }
+
+    /// Render in the layout of the paper's Table 1: per kernel, one row
+    /// per size case with predicted/actual (ms) pairs per device, plus
+    /// geometric-mean error rows.
+    pub fn render(&self) -> String {
+        let devices = self.devices();
+        let kernels = self.kernels();
+        let mut s = String::new();
+        let _ = write!(s, "{:<14}", "Kernel");
+        for d in &devices {
+            let _ = write!(s, " | {:>19}", d);
+        }
+        let _ = writeln!(s, " | cross-GPU");
+        let _ = write!(s, "{:<14}", "");
+        for _ in &devices {
+            let _ = write!(s, " | {:>9} {:>9}", "pred(ms)", "act(ms)");
+        }
+        let _ = writeln!(s, " |  geomean");
+        let line_len = 14 + devices.len() * 22 + 11;
+        let _ = writeln!(s, "{}", "-".repeat(line_len));
+        for k in &kernels {
+            // per-device geomean header row for this kernel
+            let _ = write!(s, "{:<14}", k);
+            for d in &devices {
+                let _ = write!(s, " | {:>19.2}", self.kernel_device_err(k, d));
+            }
+            let _ = writeln!(s, " | {:>8.2}", self.kernel_err(k));
+            // the a.-d. case rows
+            let cases: Vec<&Table1Entry> =
+                self.entries.iter().filter(|e| &e.kernel == k).collect();
+            let mut letters: Vec<&str> = cases.iter().map(|e| e.case.as_str()).collect();
+            letters.sort();
+            letters.dedup();
+            for letter in letters {
+                let _ = write!(s, "  {:<12}", format!("{letter}."));
+                for d in &devices {
+                    match cases
+                        .iter()
+                        .find(|e| e.case == letter && &e.device == d)
+                    {
+                        Some(e) => {
+                            let _ = write!(
+                                s,
+                                " | {:>9.2} {:>9.2}",
+                                e.predicted_s * 1e3,
+                                e.actual_s * 1e3
+                            );
+                        }
+                        None => {
+                            let _ = write!(s, " | {:>9} {:>9}", "-", "-");
+                        }
+                    }
+                }
+                let _ = writeln!(s, " |");
+            }
+        }
+        let _ = writeln!(s, "{}", "-".repeat(line_len));
+        let _ = write!(s, "{:<14}", "cross-kernel");
+        for d in &devices {
+            let _ = write!(s, " | {:>19.2}", self.device_err(d));
+        }
+        let _ = writeln!(s, " | {:>8.2}", self.overall_err());
+        s
+    }
+
+    /// Map (kernel -> (device -> geomean error)) for programmatic checks.
+    pub fn error_matrix(&self) -> BTreeMap<String, BTreeMap<String, f64>> {
+        let mut out = BTreeMap::new();
+        for k in self.kernels() {
+            let mut row = BTreeMap::new();
+            for d in self.devices() {
+                row.insert(d.clone(), self.kernel_device_err(&k, &d));
+            }
+            out.insert(k, row);
+        }
+        out
+    }
+}
+
+/// Render the paper's Table 2: the fitted weight vector with
+/// per-property labels, in units of seconds per operation.
+pub fn render_table2(model: &Model, schema: &Schema) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Property weights for {} (seconds per operation)", model.device);
+    let _ = writeln!(s, "{:<42} {:>12}", "Property", "Weight");
+    let _ = writeln!(s, "{}", "-".repeat(56));
+    for (label, w) in model.weight_report(schema) {
+        let _ = writeln!(s, "{:<42} {:>12.3e}", label, w);
+    }
+    let _ = writeln!(s, "{}", "-".repeat(56));
+    let _ = writeln!(
+        s,
+        "training geomean relative error: {:.1}%  (solver: {})",
+        100.0 * model.train_rel_err_geomean,
+        model.solver
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_table() -> Table1 {
+        let mut t = Table1::default();
+        for (dev, k, case, p, a) in [
+            ("titan_x", "fd5", "a", 0.32e-3, 0.41e-3),
+            ("titan_x", "fd5", "b", 1.03e-3, 1.39e-3),
+            ("titan_x", "nbody", "a", 0.48e-3, 0.16e-3),
+            ("k40c", "fd5", "a", 0.70e-3, 0.70e-3),
+            ("k40c", "nbody", "a", 0.99e-3, 0.24e-3),
+        ] {
+            t.push(Table1Entry {
+                device: dev.into(),
+                kernel: k.into(),
+                case: case.into(),
+                predicted_s: p,
+                actual_s: a,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn geomeans_match_hand_computation() {
+        let t = sample_table();
+        // fd5 on titan_x: errs 0.2195..., 0.259
+        let e1: f64 = (0.41 - 0.32) / 0.41;
+        let e2: f64 = (1.39 - 1.03) / 1.39;
+        let want = (e1 * e2).sqrt();
+        assert!((t.kernel_device_err("fd5", "titan_x") - want).abs() < 1e-12);
+        // nbody is the worst kernel in this sample
+        assert!(t.kernel_err("nbody") > t.kernel_err("fd5"));
+    }
+
+    #[test]
+    fn render_contains_all_sections() {
+        let r = sample_table().render();
+        for needle in ["fd5", "nbody", "titan_x", "k40c", "cross-kernel", "a.", "b."] {
+            assert!(r.contains(needle), "missing {needle}:\n{r}");
+        }
+    }
+
+    #[test]
+    fn devices_and_kernels_in_first_seen_order() {
+        let t = sample_table();
+        assert_eq!(t.devices(), vec!["titan_x".to_string(), "k40c".to_string()]);
+        assert_eq!(t.kernels(), vec!["fd5".to_string(), "nbody".to_string()]);
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: loads and executes the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 fit/predict computations (whose inner Gram/matvec hot
+//! spots are L1 Pallas kernels) to HLO *text*, which this module parses
+//! with `HloModuleProto::from_text_file`, compiles on the PJRT CPU client
+//! and executes. HLO text — not serialized protos — is the interchange
+//! format because jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Fixed artifact shapes (padding + masking on the Rust side):
+//! * `fit.hlo.txt`:     B (MAX_CASES × MAX_PROPS) f64, rowmask (MAX_CASES)
+//!   → weights (MAX_PROPS)
+//! * `predict.hlo.txt`: P (MAX_BATCH × MAX_PROPS) f64, w (MAX_PROPS)
+//!   → times (MAX_BATCH)
+
+use crate::perfmodel::Solver;
+use crate::util::linalg::Mat;
+use std::path::{Path, PathBuf};
+
+/// Maximum measurement cases the fit artifact accepts (the full §4.1
+/// suite is 390 cases; padded rows are masked out).
+pub const MAX_CASES: usize = 512;
+/// Property-vector length baked into the artifacts (= `Schema::full().len()`).
+pub const MAX_PROPS: usize = 160;
+/// Maximum prediction batch of the predict artifact.
+pub const MAX_BATCH: usize = 64;
+
+/// Default artifact directory: `$UNIPERF_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("UNIPERF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn err<E: std::fmt::Display>(e: E) -> String {
+    format!("xla runtime: {e}")
+}
+
+/// A compiled HLO executable on the PJRT CPU client.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaExecutable {
+    /// Load HLO text from `path`, compile on a fresh CPU client.
+    pub fn load(path: &Path) -> Result<XlaExecutable, String> {
+        if !path.exists() {
+            return Err(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().map_err(err)?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(err)?;
+        Ok(XlaExecutable { exe })
+    }
+
+    /// Execute with f64 inputs; returns the flattened f64 outputs of the
+    /// result tuple, in order.
+    pub fn run_f64(
+        &self,
+        inputs: &[(&[f64], &[i64])],
+    ) -> Result<Vec<Vec<f64>>, String> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data).reshape(dims).map_err(err)
+            })
+            .collect::<Result<_, _>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(err)?[0][0]
+            .to_literal_sync()
+            .map_err(err)?;
+        // jax lowers with return_tuple=True: decompose the result tuple
+        let elems = result.to_tuple().map_err(err)?;
+        elems
+            .iter()
+            .map(|e| e.to_vec::<f64>().map_err(err))
+            .collect()
+    }
+}
+
+/// The production fit path: the relative-error least-squares solve as an
+/// AOT-compiled JAX computation whose Gram/matvec hot spot is a Pallas
+/// kernel (see `python/compile/kernels/gram.py`).
+pub struct XlaSolver {
+    exe: XlaExecutable,
+}
+
+impl XlaSolver {
+    /// Load `fit.hlo.txt` from the artifact directory.
+    pub fn from_artifacts() -> Result<XlaSolver, String> {
+        Self::from_path(&artifacts_dir().join("fit.hlo.txt"))
+    }
+
+    pub fn from_path(path: &Path) -> Result<XlaSolver, String> {
+        Ok(XlaSolver { exe: XlaExecutable::load(path)? })
+    }
+}
+
+impl Solver for XlaSolver {
+    fn solve(&self, b: &Mat) -> Result<Vec<f64>, String> {
+        if b.rows > MAX_CASES {
+            return Err(format!("{} cases exceed artifact capacity {MAX_CASES}", b.rows));
+        }
+        if b.cols > MAX_PROPS {
+            return Err(format!("{} props exceed artifact capacity {MAX_PROPS}", b.cols));
+        }
+        if b.rows < b.cols {
+            return Err(format!("underdetermined fit: {} cases < {} properties", b.rows, b.cols));
+        }
+        // pad B into (MAX_CASES, MAX_PROPS)
+        let mut bp = vec![0.0f64; MAX_CASES * MAX_PROPS];
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                bp[i * MAX_PROPS + j] = b.at(i, j);
+            }
+        }
+        let mut rowmask = vec![0.0f64; MAX_CASES];
+        for r in rowmask.iter_mut().take(b.rows) {
+            *r = 1.0;
+        }
+        let outs = self.exe.run_f64(&[
+            (&bp, &[MAX_CASES as i64, MAX_PROPS as i64]),
+            (&rowmask, &[MAX_CASES as i64]),
+        ])?;
+        let w = outs
+            .first()
+            .ok_or("fit artifact returned no outputs")?;
+        if w.len() < b.cols {
+            return Err(format!("fit artifact returned {} weights, expected >= {}", w.len(), b.cols));
+        }
+        Ok(w[..b.cols].to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas-aot"
+    }
+}
+
+/// Batched predictor: `times = P · w` through the predict artifact.
+pub struct XlaPredictor {
+    exe: XlaExecutable,
+}
+
+impl XlaPredictor {
+    pub fn from_artifacts() -> Result<XlaPredictor, String> {
+        Self::from_path(&artifacts_dir().join("predict.hlo.txt"))
+    }
+
+    pub fn from_path(path: &Path) -> Result<XlaPredictor, String> {
+        Ok(XlaPredictor { exe: XlaExecutable::load(path)? })
+    }
+
+    /// Predict times for up to [`MAX_BATCH`] property vectors.
+    pub fn predict(&self, props: &[Vec<f64>], weights: &[f64]) -> Result<Vec<f64>, String> {
+        if props.len() > MAX_BATCH {
+            return Err(format!("batch {} exceeds artifact capacity {MAX_BATCH}", props.len()));
+        }
+        let mut p = vec![0.0f64; MAX_BATCH * MAX_PROPS];
+        for (i, row) in props.iter().enumerate() {
+            if row.len() > MAX_PROPS {
+                return Err(format!("property vector {} too long: {}", i, row.len()));
+            }
+            p[i * MAX_PROPS..i * MAX_PROPS + row.len()].copy_from_slice(row);
+        }
+        let mut w = vec![0.0f64; MAX_PROPS];
+        if weights.len() > MAX_PROPS {
+            return Err(format!("weight vector too long: {}", weights.len()));
+        }
+        w[..weights.len()].copy_from_slice(weights);
+        let outs = self.exe.run_f64(&[
+            (&p, &[MAX_BATCH as i64, MAX_PROPS as i64]),
+            (&w, &[MAX_PROPS as i64]),
+        ])?;
+        Ok(outs.first().ok_or("predict artifact returned no outputs")?[..props.len()].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_fits_artifact_capacity() {
+        // the python side bakes MAX_PROPS into the artifacts; the schema
+        // must fit or padding silently misaligns (the solver also packs
+        // only the *active* columns, which is fewer still)
+        assert!(crate::stats::Schema::full().len() <= MAX_PROPS);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let r = XlaSolver::from_path(Path::new("/nonexistent/fit.hlo.txt"));
+        assert!(r.is_err());
+        assert!(format!("{}", r.err().unwrap()).contains("make artifacts"));
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // don't mutate the process env (tests run in parallel); just check
+        // the default
+        if std::env::var_os("UNIPERF_ARTIFACTS").is_none() {
+            assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

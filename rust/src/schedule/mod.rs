@@ -1,0 +1,446 @@
+//! Schedule search + barrier insertion (paper §3.2, last paragraph).
+//!
+//! Barrier synchronizations "are not apparent in Loopy code without a
+//! *schedule*": a linearization of the instructions, a nesting of the
+//! sequential loops, and the locations of required work-group barriers.
+//! This module finds such a schedule:
+//!
+//! 1. instructions are topologically sorted by their dependency DAG;
+//! 2. sequential loops are opened/closed greedily around instructions
+//!    (stack discipline, ordered by domain declaration order);
+//! 3. a barrier is inserted whenever a work-group-shared ("local") array
+//!    flows across SIMD lanes: a read of data written since the last
+//!    barrier under a different lane mapping (RAW), or an overwrite of
+//!    data read since the last barrier (WAR — this produces the classic
+//!    trailing barrier of tiled matrix multiplication).
+//!
+//! The schedule is consumed by [`crate::stats`] (symbolic barrier counts)
+//! and by [`crate::gpusim`] (execution order).
+
+use crate::lpir::{IdxTag, Insn, Kernel, MemSpace};
+use crate::qpoly::{LinExpr, PwQPoly};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One element of the linearized schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedItem {
+    /// open a sequential (or unrolled) loop over this iname
+    OpenLoop(String),
+    CloseLoop(String),
+    /// execute an instruction for all lanes of the group
+    RunInsn(usize),
+    /// work-group barrier
+    Barrier,
+}
+
+/// A complete schedule for a kernel.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub items: Vec<SchedItem>,
+}
+
+impl Schedule {
+    /// Total number of barrier *instructions* executed per work-group
+    /// execution, symbolically: each barrier site is multiplied by the
+    /// trip counts of its enclosing sequential loops.
+    pub fn barriers_per_group(&self, kernel: &Kernel) -> PwQPoly {
+        let mut total = PwQPoly::zero();
+        let mut stack: Vec<String> = Vec::new();
+        for item in &self.items {
+            match item {
+                SchedItem::OpenLoop(name) => stack.push(name.clone()),
+                SchedItem::CloseLoop(_) => {
+                    stack.pop();
+                }
+                SchedItem::Barrier => {
+                    let mut q = PwQPoly::constant(1.0);
+                    for iname in &stack {
+                        if let Some(dim) = kernel.domain.dim(iname) {
+                            let tc = PwQPoly { pieces: vec![(Vec::new(), dim.trip_count())] };
+                            q = q.mul(&tc);
+                        }
+                    }
+                    total = total.add(&q);
+                }
+                SchedItem::RunInsn(_) => {}
+            }
+        }
+        total
+    }
+
+    /// Number of `Barrier` items (static barrier sites).
+    pub fn barrier_sites(&self) -> usize {
+        self.items.iter().filter(|i| matches!(i, SchedItem::Barrier)).count()
+    }
+}
+
+/// Local-memory accesses of one instruction: (array, index, is_write).
+fn local_accesses(kernel: &Kernel, insn: &Insn) -> Vec<(String, Vec<LinExpr>, bool)> {
+    let mut out = Vec::new();
+    if let Some(arr) = kernel.array(&insn.lhs.array) {
+        if arr.space == MemSpace::Local {
+            out.push((insn.lhs.array.clone(), insn.lhs.idx.clone(), true));
+            // an update instruction also reads its LHS
+            if insn.is_update {
+                out.push((insn.lhs.array.clone(), insn.lhs.idx.clone(), false));
+            }
+        }
+    }
+    insn.rhs.visit_loads(&mut |a, _| {
+        if let Some(arr) = kernel.array(&a.array) {
+            if arr.space == MemSpace::Local {
+                out.push((a.array.clone(), a.idx.clone(), false));
+            }
+        }
+    });
+    out
+}
+
+/// Pending cross-lane state since the last barrier. The lane "signature"
+/// of an access is simply its index-expression vector: two accesses with
+/// identical signatures touch the same element from the same lane, so no
+/// cross-lane data flow occurs between them.
+#[derive(Default)]
+struct BarrierState {
+    /// array -> index signatures written since last barrier
+    writes: BTreeMap<String, Vec<Vec<LinExpr>>>,
+    /// array -> index signatures read since last barrier
+    reads: BTreeMap<String, Vec<Vec<LinExpr>>>,
+}
+
+impl BarrierState {
+    fn clear(&mut self) {
+        self.writes.clear();
+        self.reads.clear();
+    }
+
+    /// Would executing `accesses` require a barrier first?
+    fn needs_barrier(&self, accesses: &[(String, Vec<LinExpr>, bool)]) -> bool {
+        for (arr, idx, is_write) in accesses {
+            if *is_write {
+                // WAR: overwriting data other lanes may still be reading
+                if let Some(reads) = self.reads.get(arr) {
+                    if reads.iter().any(|r| r != idx) {
+                        return true;
+                    }
+                }
+                // WAW across lanes is also ordered by a barrier
+                if let Some(writes) = self.writes.get(arr) {
+                    if writes.iter().any(|w| w != idx) {
+                        return true;
+                    }
+                }
+            } else {
+                // RAW: reading data written under a different lane mapping
+                if let Some(writes) = self.writes.get(arr) {
+                    if writes.iter().any(|w| w != idx) {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    fn record(&mut self, accesses: Vec<(String, Vec<LinExpr>, bool)>) {
+        for (arr, idx, is_write) in accesses {
+            let slot = if is_write { &mut self.writes } else { &mut self.reads };
+            let v = slot.entry(arr).or_default();
+            if !v.contains(&idx) {
+                v.push(idx);
+            }
+        }
+    }
+}
+
+/// Compute a schedule for the kernel. Returns an error on dependency
+/// cycles.
+pub fn schedule(kernel: &Kernel) -> Result<Schedule, String> {
+    // --- 1. topological sort (stable: prefer lower ids) -------------------
+    let n = kernel.insns.len();
+    let mut indeg = vec![0usize; n];
+    let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for insn in &kernel.insns {
+        for &d in &insn.deps {
+            out_edges[d].push(insn.id);
+            indeg[insn.id] += 1;
+        }
+    }
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(&next) = ready.iter().next() {
+        ready.remove(&next);
+        order.push(next);
+        for &succ in &out_edges[next] {
+            indeg[succ] -= 1;
+            if indeg[succ] == 0 {
+                ready.insert(succ);
+            }
+        }
+    }
+    if order.len() != n {
+        return Err(format!("dependency cycle among instructions of '{}'", kernel.name));
+    }
+
+    // --- 2. loop nesting (stack discipline) -------------------------------
+    // Required sequential loops per instruction, in domain order.
+    let seq_loops = |insn: &Insn| -> Vec<String> {
+        kernel
+            .domain
+            .dims
+            .iter()
+            .filter(|d| {
+                insn.within.contains(&d.name)
+                    && matches!(kernel.tag(&d.name), IdxTag::Seq | IdxTag::Unroll)
+            })
+            .map(|d| d.name.clone())
+            .collect()
+    };
+
+    let mut items = Vec::new();
+    let mut stack: Vec<String> = Vec::new();
+    let mut bstate = BarrierState::default();
+    // loops whose current body contained a barrier: their close emits a
+    // trailing barrier (iteration separation for local-memory reuse)
+    let mut loop_had_barrier: BTreeMap<String, bool> = BTreeMap::new();
+
+    for &id in &order {
+        let insn = &kernel.insns[id];
+        let want = seq_loops(insn);
+        // common prefix of current stack and wanted nest
+        let mut prefix = 0;
+        while prefix < stack.len() && prefix < want.len() && stack[prefix] == want[prefix] {
+            prefix += 1;
+        }
+        // close loops deeper than the common prefix (LIFO)
+        while stack.len() > prefix {
+            let closing = stack.pop().unwrap();
+            if loop_had_barrier.remove(&closing).unwrap_or(false) {
+                items.push(SchedItem::Barrier);
+                bstate.clear();
+            }
+            items.push(SchedItem::CloseLoop(closing));
+        }
+        // open the missing loops
+        for iname in want.iter().skip(stack.len()) {
+            items.push(SchedItem::OpenLoop(iname.clone()));
+            stack.push(iname.clone());
+            loop_had_barrier.insert(iname.clone(), false);
+        }
+
+        // --- 3. barrier insertion -----------------------------------------
+        let accesses = local_accesses(kernel, insn);
+        if bstate.needs_barrier(&accesses) {
+            items.push(SchedItem::Barrier);
+            bstate.clear();
+            for iname in &stack {
+                loop_had_barrier.insert(iname.clone(), true);
+            }
+        }
+        bstate.record(accesses);
+        items.push(SchedItem::RunInsn(id));
+    }
+    while let Some(closing) = stack.pop() {
+        if loop_had_barrier.remove(&closing).unwrap_or(false) {
+            items.push(SchedItem::Barrier);
+            bstate.clear();
+        }
+        items.push(SchedItem::CloseLoop(closing));
+    }
+    Ok(Schedule { items })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid, KernelBuilder};
+    use crate::lpir::{Access, DType, Expr, Layout};
+    use crate::qpoly::{env, LinExpr};
+
+    /// A minimal prefetching kernel: stage a tile of `a` into local
+    /// memory, then read it back transposed (cross-lane flow).
+    fn prefetch_kernel() -> Kernel {
+        KernelBuilder::new("prefetch", &["n"])
+            .group_dims_2d(LinExpr::var("n"), 16, LinExpr::var("n"), 16)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array(
+                "out",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                true,
+            )
+            .local_array("tile", DType::F32, &[16, 16])
+            .insn(
+                Access::new("tile", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load("a", vec![gid(1, 16), gid(0, 16)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .insn(
+                Access::new(
+                    "out",
+                    vec![
+                        LinExpr::scaled_var("g0", 16).add(&LinExpr::var("l1")),
+                        LinExpr::scaled_var("g1", 16).add(&LinExpr::var("l0")),
+                    ],
+                ),
+                Expr::load("tile", vec![LinExpr::var("l0"), LinExpr::var("l1")]),
+                &["g0", "g1", "l0", "l1"],
+                &[0],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn prefetch_needs_one_barrier() {
+        let k = prefetch_kernel();
+        let s = schedule(&k).unwrap();
+        assert_eq!(s.barrier_sites(), 1);
+        let runs: Vec<&SchedItem> = s.items.iter().collect();
+        assert_eq!(
+            runs,
+            vec![&SchedItem::RunInsn(0), &SchedItem::Barrier, &SchedItem::RunInsn(1)]
+        );
+    }
+
+    #[test]
+    fn no_barrier_without_local_memory() {
+        let k = KernelBuilder::new("copy", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid(0, 256)]),
+                Expr::load("a", vec![gid(0, 256)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let s = schedule(&k).unwrap();
+        assert_eq!(s.barrier_sites(), 0);
+    }
+
+    #[test]
+    fn same_lane_mapping_needs_no_barrier() {
+        let k = KernelBuilder::new("same_lane", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .local_array("tile", DType::F32, &[64])
+            .insn(
+                Access::new("tile", vec![LinExpr::var("l0")]),
+                Expr::load("a", vec![gid(0, 64)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .insn(
+                Access::new("out", vec![gid(0, 64)]),
+                Expr::load("tile", vec![LinExpr::var("l0")]),
+                &["g0", "l0"],
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let s = schedule(&k).unwrap();
+        assert_eq!(s.barrier_sites(), 0);
+    }
+
+    /// Tiled-MM-shaped kernel: prefetch two tiles inside a sequential tile
+    /// loop, consume them, write out at the end.
+    fn tiled_mm_like() -> Kernel {
+        let n = LinExpr::var("n");
+        KernelBuilder::new("mm_like", &["n"])
+            .group_dims_2d(n.clone(), 16, n.clone(), 16)
+            .seq_tiles("kt", n.clone(), 16)
+            .red_dim("ki", LinExpr::constant(16))
+            .global_array("a", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, false)
+            .global_array("c", DType::F32, vec![n.clone(), n.clone()], Layout::RowMajor, true)
+            .local_array("at", DType::F32, &[16, 16])
+            .local_array("bt", DType::F32, &[16, 16])
+            .private_array("acc", DType::F32, &[1])
+            .insn(
+                Access::new("at", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load(
+                    "a",
+                    vec![gid(1, 16), LinExpr::scaled_var("kt", 16).add(&LinExpr::var("l0"))],
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[],
+            )
+            .insn(
+                Access::new("bt", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load(
+                    "b",
+                    vec![LinExpr::scaled_var("kt", 16).add(&LinExpr::var("l1")), gid(0, 16)],
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[],
+            )
+            .update_insn(
+                Access::new("acc", vec![LinExpr::constant(0)]),
+                Expr::sum(
+                    "ki",
+                    Expr::mul(
+                        Expr::load("at", vec![LinExpr::var("l1"), LinExpr::var("ki")]),
+                        Expr::load("bt", vec![LinExpr::var("ki"), LinExpr::var("l0")]),
+                    ),
+                ),
+                &["g0", "g1", "l0", "l1", "kt"],
+                &[0, 1],
+            )
+            .insn(
+                Access::new("c", vec![gid(1, 16), gid(0, 16)]),
+                Expr::load("acc", vec![LinExpr::constant(0)]),
+                &["g0", "g1", "l0", "l1"],
+                &[2],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn tiled_mm_has_two_barriers_per_tile_iteration() {
+        let k = tiled_mm_like();
+        let s = schedule(&k).unwrap();
+        // one barrier between prefetch and consume, one trailing barrier
+        // at the end of each kt iteration
+        assert_eq!(s.barrier_sites(), 2, "schedule: {:?}", s.items);
+        let per_group = s.barriers_per_group(&k);
+        assert_eq!(per_group.eval(&env(&[("n", 256)])).unwrap(), 2.0 * 16.0);
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let mut k = prefetch_kernel();
+        k.insns[0].deps = vec![1];
+        assert!(schedule(&k).is_err());
+    }
+
+    #[test]
+    fn loops_open_and_close_balanced() {
+        let k = tiled_mm_like();
+        let s = schedule(&k).unwrap();
+        let mut depth = 0i64;
+        for item in &s.items {
+            match item {
+                SchedItem::OpenLoop(_) => depth += 1,
+                SchedItem::CloseLoop(_) => {
+                    depth -= 1;
+                    assert!(depth >= 0);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0);
+    }
+}

@@ -1,0 +1,805 @@
+//! Automatic extraction of model properties from kernels (paper §2 + §3).
+//!
+//! A [`KernelProps`] maps each [`Prop`] to a symbolic execution count
+//! ([`PwQPoly`]); [`Schema`] fixes the property ordering so that dense
+//! vectors line up across kernels for the fit.
+//!
+//! Extraction is fully automatic for the static-control-flow kernels the
+//! paper targets: memory accesses are classified by access size ×
+//! direction × amortized-stride-fraction class (§2.1), floating-point
+//! operations by kind × operand width (§2.2), barrier counts come from
+//! the schedule (§2.3), and launch overhead from the work-group count
+//! (§2.4). The non-linear `min(loads, stores)` roofline property is
+//! evaluated at binding time from the retained load/store counts.
+
+pub mod footprint;
+pub mod ops;
+
+use crate::isl::progression::StrideClass;
+use crate::lpir::{Insn, Kernel, MemSpace, OpKind};
+use crate::qpoly::PwQPoly;
+use crate::schedule::schedule;
+use footprint::{flatten_access, utilization, FlatAccess};
+use std::collections::BTreeMap;
+
+/// Memory-access direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Dir {
+    Load,
+    Store,
+}
+
+/// A model property (one column of the property matrix).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Prop {
+    /// float op counts by kind and operand width (32/64)
+    Op { kind: OpKind, bits: u32 },
+    /// loads from work-group shared memory, by access width
+    LocalLoad { bits: u32 },
+    /// bank-conflicted local loads (lane stride >= 2) — §6.2 extension,
+    /// populated only when `ExtractOpts::bin_local_strides` is set
+    LocalLoadConflict { bits: u32 },
+    /// global-memory traffic by access width, direction and stride class
+    MemGlobal { bits: u32, dir: Dir, class: StrideClass },
+    /// `min(loads, stores)` of one access type — the roofline-style
+    /// nonlinearity of §2.1 (evaluated at binding time)
+    MemMin { bits: u32, class: StrideClass },
+    /// total barriers encountered by all threads
+    Barriers,
+    /// number of work groups launched (launch overhead, linear part)
+    WorkGroups,
+    /// constant 1 (launch overhead, constant part)
+    Const,
+}
+
+impl Prop {
+    /// Human-readable name (used in Table-2-style weight reports).
+    pub fn label(&self) -> String {
+        match self {
+            Prop::Op { kind, bits } => format!("f{bits} {}", kind.label()),
+            Prop::LocalLoad { bits } => format!("local f{bits} loads"),
+            Prop::LocalLoadConflict { bits } => format!("local f{bits} conflicted loads"),
+            Prop::MemGlobal { bits, dir, class } => {
+                let d = match dir {
+                    Dir::Load => "loads",
+                    Dir::Store => "stores",
+                };
+                format!("f{bits} {} {d}", class.label())
+            }
+            Prop::MemMin { bits, class } => {
+                format!("min(f{bits} {} loads, stores)", class.label())
+            }
+            Prop::Barriers => "barriers".into(),
+            Prop::WorkGroups => "thread groups".into(),
+            Prop::Const => "const(1)".into(),
+        }
+    }
+}
+
+/// The fixed property ordering shared by all kernels.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    props: Vec<Prop>,
+    index: BTreeMap<Prop, usize>,
+}
+
+impl Default for Schema {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+impl Schema {
+    /// The full §2 property set.
+    pub fn full() -> Schema {
+        let mut props = Vec::new();
+        for kind in OpKind::all() {
+            for bits in [32u32, 64] {
+                props.push(Prop::Op { kind, bits });
+            }
+        }
+        for bits in [32u32, 64, 128] {
+            props.push(Prop::LocalLoad { bits });
+        }
+        for bits in [32u32, 64, 128] {
+            props.push(Prop::LocalLoadConflict { bits });
+        }
+        for bits in [32u32, 64, 128] {
+            for dir in [Dir::Load, Dir::Store] {
+                for class in StrideClass::all() {
+                    props.push(Prop::MemGlobal { bits, dir, class });
+                }
+            }
+        }
+        for bits in [32u32, 64, 128] {
+            for class in StrideClass::all() {
+                props.push(Prop::MemMin { bits, class });
+            }
+        }
+        props.push(Prop::Barriers);
+        props.push(Prop::WorkGroups);
+        props.push(Prop::Const);
+        let index = props.iter().cloned().enumerate().map(|(i, p)| (p, i)).collect();
+        Schema { props, index }
+    }
+
+    /// Ablation A2: a schema whose stride classes ignore the utilization
+    /// ratio (pure stride binning — every fraction collapses onto its
+    /// denominator's fully-utilized class).
+    pub fn without_utilization() -> Schema {
+        // Same property list; collapse happens at extraction time via
+        // `collapse_utilization`. The schema itself is unchanged so that
+        // vectors remain comparable.
+        Self::full()
+    }
+
+    pub fn len(&self) -> usize {
+        self.props.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.props.is_empty()
+    }
+
+    pub fn props(&self) -> &[Prop] {
+        &self.props
+    }
+
+    pub fn index_of(&self, p: &Prop) -> Option<usize> {
+        self.index.get(p).copied()
+    }
+}
+
+/// Extraction options (ablations).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExtractOpts {
+    /// collapse utilization-ratio classes onto the fully-utilized class
+    /// of the same stride (ablation A2)
+    pub collapse_utilization: bool,
+    /// bin local loads by lane stride into conflict-free vs.
+    /// bank-conflicted classes (the paper's §6.2 future-work extension)
+    pub bin_local_strides: bool,
+}
+
+/// Symbolic property counts for one kernel.
+#[derive(Clone, Debug)]
+pub struct KernelProps {
+    pub kernel_name: String,
+    pub sym: BTreeMap<Prop, PwQPoly>,
+}
+
+impl KernelProps {
+    /// Dense property vector at a parameter binding, in schema order.
+    /// `MemMin` entries are computed here (the min is not a polynomial).
+    pub fn eval(
+        &self,
+        schema: &Schema,
+        env: &BTreeMap<String, i64>,
+    ) -> Result<Vec<f64>, String> {
+        let mut v = vec![0.0; schema.len()];
+        for (p, q) in &self.sym {
+            if let Some(i) = schema.index_of(p) {
+                v[i] = q.eval(env)?;
+            }
+        }
+        // fill the roofline min(loads, stores) entries
+        for (i, p) in schema.props().iter().enumerate() {
+            if let Prop::MemMin { bits, class } = p {
+                let loads = schema
+                    .index_of(&Prop::MemGlobal { bits: *bits, dir: Dir::Load, class: *class })
+                    .map(|j| v[j])
+                    .unwrap_or(0.0);
+                let stores = schema
+                    .index_of(&Prop::MemGlobal { bits: *bits, dir: Dir::Store, class: *class })
+                    .map(|j| v[j])
+                    .unwrap_or(0.0);
+                v[i] = loads.min(stores);
+            }
+        }
+        Ok(v)
+    }
+
+    /// Non-zero symbolic entries with labels (for reports / debugging).
+    pub fn nonzero(&self) -> Vec<(String, &PwQPoly)> {
+        self.sym
+            .iter()
+            .filter(|(_, q)| !q.is_zero())
+            .map(|(p, q)| (p.label(), q))
+            .collect()
+    }
+}
+
+/// A global access together with its symbolic count and flattened form.
+struct GAccess {
+    bits: u32,
+    dir: Dir,
+    count: PwQPoly,
+    flat: FlatAccess,
+    lane_stride: i64,
+}
+
+/// Extract all §2 properties of a kernel.
+///
+/// `classify_env` is a representative parameter binding used only to
+/// *classify* accesses (stride class and utilization); the returned
+/// counts remain symbolic and can be evaluated at any binding. (Stride
+/// classes are structural for all kernels in the paper: they do not
+/// change across the size sweeps.)
+pub fn extract(
+    kernel: &Kernel,
+    classify_env: &BTreeMap<String, i64>,
+    opts: ExtractOpts,
+) -> Result<KernelProps, String> {
+    kernel.validate()?;
+    let sched = schedule(kernel)?;
+    let mut sym: BTreeMap<Prop, PwQPoly> = BTreeMap::new();
+    fn add(sym: &mut BTreeMap<Prop, PwQPoly>, p: Prop, q: PwQPoly) {
+        let entry = sym.entry(p).or_insert_with(PwQPoly::zero);
+        *entry = entry.add(&q);
+    }
+
+    // lane (SIMD) iname: local axis 0
+    let lane_iname = kernel.local_inames().get(&0).cloned();
+
+    // ---- global memory accesses + local loads ---------------------------
+    let mut gaccesses: Vec<(String, GAccess)> = Vec::new(); // (array, access)
+    for insn in &kernel.insns {
+        collect_mem(kernel, insn, classify_env, lane_iname.as_deref(), &mut gaccesses)?;
+
+        // local loads (RHS only). The base model does not track their
+        // strides (§2.1 last paragraph); with `bin_local_strides` they
+        // split into conflict-free vs. bank-conflicted classes (§6.2).
+        insn.rhs.visit_loads(&mut |a, red| {
+            if let Some(arr) = kernel.array(&a.array) {
+                if arr.space == MemSpace::Local {
+                    let mut names: Vec<&str> =
+                        insn.within.iter().map(|s| s.as_str()).collect();
+                    for r in red {
+                        if !names.contains(&r.as_str()) {
+                            names.push(r);
+                        }
+                    }
+                    let count = kernel.domain.project_onto(&names).count();
+                    let conflicted = opts.bin_local_strides
+                        && local_lane_stride(kernel, a, classify_env, lane_iname.as_deref())
+                            .map(|s| s.abs() >= 2)
+                            .unwrap_or(false);
+                    let p = if conflicted {
+                        Prop::LocalLoadConflict { bits: arr.dtype.access_bits() }
+                    } else {
+                        Prop::LocalLoad { bits: arr.dtype.access_bits() }
+                    };
+                    let entry = sym.entry(p).or_insert_with(PwQPoly::zero);
+                    *entry = entry.add(&count);
+                }
+            }
+        });
+    }
+
+    // group accesses by (array, dir, bits, |lane stride|) and classify
+    let mut groups: BTreeMap<(String, Dir, u32, i64), Vec<GAccess>> = BTreeMap::new();
+    for (arr, acc) in gaccesses {
+        groups
+            .entry((arr, acc.dir, acc.bits, acc.lane_stride.abs()))
+            .or_default()
+            .push(acc);
+    }
+    for ((_, dir, bits, stride), accs) in groups {
+        let class = classify_group(stride, &accs, opts);
+        let mut count = PwQPoly::zero();
+        for a in &accs {
+            count = count.add(&a.count);
+        }
+        add(&mut sym, Prop::MemGlobal { bits, dir, class }, count);
+    }
+
+    // ---- floating point operations --------------------------------------
+    for insn in &kernel.insns {
+        for ((kind, bits), q) in ops::count_insn_ops(kernel, insn) {
+            add(&mut sym, Prop::Op { kind, bits }, q);
+        }
+    }
+
+    // ---- barriers: total encountered by all threads ----------------------
+    let per_group = sched.barriers_per_group(kernel);
+    if !per_group.is_zero() {
+        let group_count = kernel.group_count();
+        // threads per group (product of local trip counts; symbolic)
+        let mut gsize = PwQPoly::constant(1.0);
+        for (_, iname) in kernel.local_inames() {
+            if let Some(dim) = kernel.domain.dim(&iname) {
+                gsize = gsize.mul(&PwQPoly { pieces: vec![(Vec::new(), dim.trip_count())] });
+            }
+        }
+        add(&mut sym, Prop::Barriers, per_group.mul(&group_count).mul(&gsize));
+    }
+
+    // ---- launch overhead --------------------------------------------------
+    add(&mut sym, Prop::WorkGroups, kernel.group_count());
+    add(&mut sym, Prop::Const, PwQPoly::constant(1.0));
+
+    Ok(KernelProps { kernel_name: kernel.name.clone(), sym })
+}
+
+/// Lane stride (in elements) of a local-memory access.
+fn local_lane_stride(
+    kernel: &Kernel,
+    access: &crate::lpir::Access,
+    env: &BTreeMap<String, i64>,
+    lane_iname: Option<&str>,
+) -> Option<i64> {
+    let lane = lane_iname?;
+    let arr = kernel.array(&access.array)?;
+    let axis_strides: Vec<i64> = arr
+        .elem_strides()
+        .iter()
+        .map(|q| q.eval(env).ok().map(|x| x as i64))
+        .collect::<Option<_>>()?;
+    let mut s: i64 = 0;
+    for (e, &st) in access.idx.iter().zip(&axis_strides) {
+        s += e.coeff(lane) * st;
+    }
+    Some(s)
+}
+
+/// Gather the global-memory accesses of one instruction.
+fn collect_mem(
+    kernel: &Kernel,
+    insn: &Insn,
+    env: &BTreeMap<String, i64>,
+    lane_iname: Option<&str>,
+    out: &mut Vec<(String, GAccess)>,
+) -> Result<(), String> {
+    let mut push = |array: &str,
+                    idx: &[crate::qpoly::LinExpr],
+                    dir: Dir,
+                    red: &[String]|
+     -> Result<(), String> {
+        let arr = kernel.array(array).ok_or_else(|| format!("unknown array '{array}'"))?;
+        if arr.space != MemSpace::Global {
+            return Ok(());
+        }
+        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+        for r in red {
+            if !names.contains(&r.as_str()) {
+                names.push(r);
+            }
+        }
+        let count = kernel.domain.project_onto(&names).count();
+        // concrete element strides at the classification binding
+        let axis_strides: Vec<i64> = arr
+            .elem_strides()
+            .iter()
+            .map(|q| q.eval(env).map(|x| x as i64))
+            .collect::<Result<_, _>>()?;
+        let flat = flatten_access(kernel, idx, &axis_strides, env)?;
+        let lane_stride = lane_iname
+            .map(|l| flat.coeffs.get(l).copied().unwrap_or(0))
+            .unwrap_or(0);
+        out.push((
+            array.to_string(),
+            GAccess { bits: arr.dtype.access_bits(), dir, count, flat, lane_stride },
+        ));
+        Ok(())
+    };
+
+    // stores: LHS (update instructions also read their LHS)
+    push(&insn.lhs.array, &insn.lhs.idx, Dir::Store, &[])?;
+    if insn.is_update {
+        push(&insn.lhs.array, &insn.lhs.idx, Dir::Load, &[])?;
+    }
+    // loads: RHS
+    let mut err: Option<String> = None;
+    insn.rhs.visit_loads(&mut |a, red| {
+        if err.is_none() {
+            err = push(&a.array, &a.idx, Dir::Load, red).err();
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Classify an access group into a stride class using the footprint
+/// utilization (paper §2.1 quantization rules).
+fn classify_group(stride: i64, accs: &[GAccess], opts: ExtractOpts) -> StrideClass {
+    if stride == 0 {
+        return StrideClass::Uniform;
+    }
+    if stride == 1 {
+        return StrideClass::Unit;
+    }
+    if opts.collapse_utilization {
+        // ablation: pure stride binning, assume full utilization
+        return StrideClass::classify(stride, stride);
+    }
+    let flats: Vec<FlatAccess> = accs.iter().map(|a| a.flat.clone()).collect();
+    let info = utilization(&flats);
+    // Covered cells per stride period, quantized from the ratio. The
+    // small epsilon implements the paper's "50% or less -> 1/2" rule and
+    // absorbs finite-window boundary effects (a stride-2 window of N
+    // cells has ratio N/(2N-1), slightly above 1/2).
+    let denom = if stride > 4 { 4 } else { stride };
+    let covered =
+        ((info.utilization * denom as f64 - 0.02).ceil() as i64).clamp(1, denom);
+    if stride > 4 {
+        StrideClass::FracGt4 { numer: covered as u8 }
+    } else {
+        StrideClass::classify(stride, covered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid, gid_lin_1d, KernelBuilder};
+    use crate::lpir::{Access, DType, Expr, Layout};
+    use crate::qpoly::{env, LinExpr};
+
+    fn copy_kernel() -> Kernel {
+        KernelBuilder::new("copy", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::load("a", vec![gid_lin_1d(256)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn copy_properties() {
+        let k = copy_kernel();
+        let e = env(&[("n", 1 << 20)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let n = (1u64 << 20) as f64;
+        let get = |p: Prop| v[schema.index_of(&p).unwrap()];
+        assert_eq!(
+            get(Prop::MemGlobal { bits: 32, dir: Dir::Load, class: StrideClass::Unit }),
+            n
+        );
+        assert_eq!(
+            get(Prop::MemGlobal { bits: 32, dir: Dir::Store, class: StrideClass::Unit }),
+            n
+        );
+        // roofline min property
+        assert_eq!(get(Prop::MemMin { bits: 32, class: StrideClass::Unit }), n);
+        assert_eq!(get(Prop::WorkGroups), n / 256.0);
+        assert_eq!(get(Prop::Const), 1.0);
+        assert_eq!(get(Prop::Barriers), 0.0);
+    }
+
+    #[test]
+    fn stride2_load_classified_half() {
+        // b[i] = a[2i]: loads stride 2, half utilization
+        let k = KernelBuilder::new("s2", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(2)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::load("a", vec![gid_lin_1d(256).scale(2)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 1 << 18)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let has = props.sym.iter().any(|(p, q)| {
+            matches!(
+                p,
+                Prop::MemGlobal {
+                    bits: 32,
+                    dir: Dir::Load,
+                    class: StrideClass::Frac { numer: 1, denom: 2 }
+                }
+            ) && !q.is_zero()
+        });
+        assert!(has, "props: {:?}", props.nonzero().iter().map(|(l, _)| l).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stride2_filled_classified_full() {
+        // b[i] = a[2i] + a[2i+1]: both phases -> 2/2
+        let k = KernelBuilder::new("s2f", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(2)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::add(
+                    Expr::load("a", vec![gid_lin_1d(256).scale(2)]),
+                    Expr::load(
+                        "a",
+                        vec![gid_lin_1d(256).scale(2).add(&LinExpr::constant(1))],
+                    ),
+                ),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 1 << 18)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let idx = schema
+            .index_of(&Prop::MemGlobal {
+                bits: 32,
+                dir: Dir::Load,
+                class: StrideClass::Frac { numer: 2, denom: 2 },
+            })
+            .unwrap();
+        assert_eq!(v[idx], 2.0 * (1 << 18) as f64);
+    }
+
+    #[test]
+    fn uncoalesced_column_access() {
+        // out[i] = a[gid*m] — lane stride = m (row-major): uncoalesced
+        let k = KernelBuilder::new("col", &["n", "m"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("m")],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::load("a", vec![gid_lin_1d(256), LinExpr::constant(0)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 4096), ("m", 512)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let found = props.sym.iter().any(|(p, q)| {
+            matches!(
+                p,
+                Prop::MemGlobal { bits: 32, dir: Dir::Load, class: StrideClass::FracGt4 { numer: 1 } }
+            ) && !q.is_zero()
+        });
+        assert!(found, "{:?}", props.nonzero().iter().map(|(l, _)| l).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_access_stride0() {
+        // b[i] = a[0] — lane-independent load
+        let k = KernelBuilder::new("uni", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::load("a", vec![LinExpr::constant(0)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 1024)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let idx = schema
+            .index_of(&Prop::MemGlobal {
+                bits: 32,
+                dir: Dir::Load,
+                class: StrideClass::Uniform,
+            })
+            .unwrap();
+        assert_eq!(v[idx], 1024.0);
+    }
+
+    #[test]
+    fn local_loads_counted() {
+        let k = KernelBuilder::new("loc", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .local_array("t", DType::F32, &[64])
+            .insn(
+                Access::new("t", vec![LinExpr::var("l0")]),
+                Expr::load("a", vec![gid_lin_1d(64)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .insn(
+                Access::new("b", vec![gid_lin_1d(64)]),
+                Expr::load("t", vec![LinExpr::var("l0")]),
+                &["g0", "l0"],
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 640)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        assert_eq!(v[schema.index_of(&Prop::LocalLoad { bits: 32 }).unwrap()], 640.0);
+    }
+
+    #[test]
+    fn barrier_property_scales_with_threads() {
+        // 2-D prefetch with cross-lane read: 1 barrier/group · 256 threads
+        let k = KernelBuilder::new("pf", &["n"])
+            .group_dims_2d(LinExpr::var("n"), 16, LinExpr::var("n"), 16)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array(
+                "o",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                true,
+            )
+            .local_array("t", DType::F32, &[16, 16])
+            .insn(
+                Access::new("t", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load("a", vec![gid(1, 16), gid(0, 16)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .insn(
+                Access::new("o", vec![gid(1, 16), gid(0, 16)]),
+                Expr::load("t", vec![LinExpr::var("l0"), LinExpr::var("l1")]),
+                &["g0", "g1", "l0", "l1"],
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 64)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        // 16 groups (4x4) · 256 threads · 1 barrier
+        assert_eq!(v[schema.index_of(&Prop::Barriers).unwrap()], 16.0 * 256.0);
+    }
+
+    #[test]
+    fn symbolic_reevaluation_cheap_and_consistent() {
+        let k = copy_kernel();
+        let e1 = env(&[("n", 1 << 20)]);
+        let props = extract(&k, &e1, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        // re-evaluate the same symbolic counts at other sizes
+        for p in [1 << 18, 1 << 19, 1 << 21] {
+            let e = env(&[("n", p)]);
+            let v = props.eval(&schema, &e).unwrap();
+            let idx = schema
+                .index_of(&Prop::MemGlobal {
+                    bits: 32,
+                    dir: Dir::Load,
+                    class: StrideClass::Unit,
+                })
+                .unwrap();
+            assert_eq!(v[idx], p as f64);
+        }
+    }
+
+    #[test]
+    fn local_stride_binning_extension() {
+        use crate::lpir::builder::gid;
+        // transpose-style tile: read t[l0, l1] -> lane stride = gx (conflict)
+        let k = KernelBuilder::new("tconf", &["n"])
+            .group_dims_2d(LinExpr::var("n"), 16, LinExpr::var("n"), 16)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array(
+                "o",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("n")],
+                Layout::RowMajor,
+                true,
+            )
+            .local_array("t", DType::F32, &[16, 16])
+            .insn(
+                Access::new("t", vec![LinExpr::var("l1"), LinExpr::var("l0")]),
+                Expr::load("a", vec![gid(1, 16), gid(0, 16)]),
+                &["g0", "g1", "l0", "l1"],
+                &[],
+            )
+            .insn(
+                // conflicted read: lane (l0) indexes the major axis
+                Access::new("o", vec![gid(1, 16), gid(0, 16)]),
+                Expr::load("t", vec![LinExpr::var("l0"), LinExpr::var("l1")]),
+                &["g0", "g1", "l0", "l1"],
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 64)]);
+        let schema = Schema::full();
+        // default: everything lands in the plain local-load class
+        let base = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let v = base.eval(&schema, &e).unwrap();
+        assert_eq!(v[schema.index_of(&Prop::LocalLoad { bits: 32 }).unwrap()], 4096.0);
+        assert_eq!(
+            v[schema.index_of(&Prop::LocalLoadConflict { bits: 32 }).unwrap()],
+            0.0
+        );
+        // extension: the strided read moves to the conflicted class
+        let ext = extract(
+            &k,
+            &e,
+            ExtractOpts { bin_local_strides: true, ..Default::default() },
+        )
+        .unwrap();
+        let v = ext.eval(&schema, &e).unwrap();
+        assert_eq!(v[schema.index_of(&Prop::LocalLoad { bits: 32 }).unwrap()], 0.0);
+        assert_eq!(
+            v[schema.index_of(&Prop::LocalLoadConflict { bits: 32 }).unwrap()],
+            4096.0
+        );
+    }
+
+    #[test]
+    fn collapse_utilization_ablation() {
+        let k = KernelBuilder::new("s2", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(2)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::load("a", vec![gid_lin_1d(256).scale(2)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e = env(&[("n", 4096)]);
+        let props =
+            extract(&k, &e, ExtractOpts { collapse_utilization: true, ..Default::default() }).unwrap();
+        // under the ablation, the stride-2 load lands in 2/2
+        let found = props.sym.iter().any(|(p, q)| {
+            matches!(
+                p,
+                Prop::MemGlobal {
+                    bits: 32,
+                    dir: Dir::Load,
+                    class: StrideClass::Frac { numer: 2, denom: 2 }
+                }
+            ) && !q.is_zero()
+        });
+        assert!(found);
+    }
+}

@@ -1,0 +1,225 @@
+//! Floating-point operation counting (paper §2.2, Algorithm 1).
+//!
+//! Walks instruction right-hand sides, inferring operand data types (the
+//! paper's "type inference pass") and attributing each float operation to
+//! its execution scope: the projection of the kernel domain onto the
+//! instruction's inames plus any enclosing reduction inames.
+
+use crate::lpir::{DType, Expr, Insn, Kernel, OpKind};
+use crate::qpoly::PwQPoly;
+use std::collections::BTreeMap;
+
+/// Infer the result dtype of an expression. `None` means "type-neutral"
+/// (literals adapt to their context); integer index values are treated as
+/// 32-bit floats because every use in a value context implies a
+/// conversion to the surrounding float computation.
+pub fn infer_dtype(kernel: &Kernel, e: &Expr) -> Option<DType> {
+    match e {
+        Expr::Lit(_) => None,
+        Expr::Idx(_) => Some(DType::F32),
+        Expr::Load(a) => kernel.array(&a.array).map(|arr| arr.dtype),
+        Expr::Cast(dt, _) => Some(*dt),
+        Expr::Un(_, x) => infer_dtype(kernel, x),
+        Expr::Bin(_, a, b) => match (infer_dtype(kernel, a), infer_dtype(kernel, b)) {
+            (Some(x), Some(y)) => Some(DType::promote(x, y)),
+            (Some(x), None) | (None, Some(x)) => Some(x),
+            (None, None) => None,
+        },
+        Expr::Reduce(_, _, body) => infer_dtype(kernel, body),
+    }
+}
+
+/// Operation-size bucket (bits) and SIMD width multiplier for a dtype.
+fn op_bits(dt: DType) -> (u32, f64) {
+    match dt {
+        DType::F32 | DType::I32 => (32, 1.0),
+        DType::F64 => (64, 1.0),
+        // a 4-wide vector op performs 4 scalar f32 operations
+        DType::F32x4 => (32, 4.0),
+    }
+}
+
+/// Count the floating-point operations of one instruction, keyed by
+/// (operation kind, operand bits), as symbolic execution counts.
+pub fn count_insn_ops(
+    kernel: &Kernel,
+    insn: &Insn,
+) -> BTreeMap<(OpKind, u32), PwQPoly> {
+    let mut out: BTreeMap<(OpKind, u32), PwQPoly> = BTreeMap::new();
+
+    // scope multiplier, memoized per reduction-iname stack: every op in
+    // the same scope shares one symbolic projection count (a reduce body
+    // with k ops would otherwise recount the same domain k times)
+    let mut memo: BTreeMap<Vec<String>, PwQPoly> = BTreeMap::new();
+    let mut scope_count = move |red: &[String]| -> PwQPoly {
+        if let Some(q) = memo.get(red) {
+            return q.clone();
+        }
+        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+        for r in red {
+            if !names.contains(&r.as_str()) {
+                names.push(r);
+            }
+        }
+        let q = kernel.domain.project_onto(&names).count();
+        memo.insert(red.to_vec(), q.clone());
+        q
+    };
+
+    fn add(
+        out: &mut BTreeMap<(OpKind, u32), PwQPoly>,
+        kind: OpKind,
+        bits: u32,
+        width: f64,
+        scope: &PwQPoly,
+    ) {
+        let entry = out.entry((kind, bits)).or_insert_with(PwQPoly::zero);
+        *entry = entry.add(&scope.scale(width));
+    }
+
+    fn walk(
+        kernel: &Kernel,
+        e: &Expr,
+        red: &mut Vec<String>,
+        scope_count: &mut dyn FnMut(&[String]) -> PwQPoly,
+        out: &mut BTreeMap<(OpKind, u32), PwQPoly>,
+    ) {
+        match e {
+            Expr::Lit(_) | Expr::Idx(_) | Expr::Load(_) => {}
+            Expr::Cast(_, x) => walk(kernel, x, red, scope_count, out),
+            Expr::Un(op, x) => {
+                if let Some(dt) = infer_dtype(kernel, e) {
+                    if dt.is_float() {
+                        let (bits, width) = op_bits(dt);
+                        let scope = scope_count(red);
+                        add(out, op.op_kind(), bits, width, &scope);
+                    }
+                }
+                walk(kernel, x, red, scope_count, out);
+            }
+            Expr::Bin(op, a, b) => {
+                if let Some(dt) = infer_dtype(kernel, e) {
+                    if dt.is_float() {
+                        let (bits, width) = op_bits(dt);
+                        let scope = scope_count(red);
+                        add(out, op.op_kind(), bits, width, &scope);
+                    }
+                }
+                walk(kernel, a, red, scope_count, out);
+                walk(kernel, b, red, scope_count, out);
+            }
+            Expr::Reduce(_, iname, body) => {
+                // the reduction combine: one add/sub per reduced element
+                red.push(iname.clone());
+                if let Some(dt) = infer_dtype(kernel, body) {
+                    if dt.is_float() {
+                        let (bits, width) = op_bits(dt);
+                        let scope = scope_count(red);
+                        add(out, OpKind::AddSub, bits, width, &scope);
+                    }
+                }
+                walk(kernel, body, red, scope_count, out);
+                red.pop();
+            }
+        }
+    }
+
+    walk(kernel, &insn.rhs, &mut Vec::new(), &mut scope_count, &mut out);
+
+    // update instructions (`lhs += rhs`) perform one combine per execution
+    if insn.is_update {
+        if let Some(dt) = infer_dtype(kernel, &insn.rhs)
+            .or_else(|| kernel.array(&insn.lhs.array).map(|a| a.dtype))
+        {
+            if dt.is_float() {
+                let (bits, width) = op_bits(dt);
+                let scope = scope_count(&[]);
+                add(&mut out, OpKind::AddSub, bits, width, &scope);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+    use crate::lpir::{Access, Layout, UnOp};
+    use crate::qpoly::{env, LinExpr};
+
+    fn simple_kernel(rhs: Expr) -> Kernel {
+        KernelBuilder::new("k", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .red_dim("r", LinExpr::var("m"))
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("d", DType::F64, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(Access::new("out", vec![gid_lin_1d(256)]), rhs, &["g0", "l0"], &[])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn counts_simple_mul() {
+        // out[i] = 2 * a[i] -> one f32 mul per point
+        let k = simple_kernel(Expr::mul(Expr::lit(2.0), Expr::load("a", vec![gid_lin_1d(256)])));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        let e = env(&[("n", 1024), ("m", 4)]);
+        assert_eq!(ops[&(OpKind::Mul, 32)].eval(&e).unwrap(), 1024.0);
+        assert_eq!(ops.len(), 1);
+    }
+
+    #[test]
+    fn promotes_to_f64() {
+        // out[i] = a[i] + d[i] -> one f64 add
+        let k = simple_kernel(Expr::add(
+            Expr::load("a", vec![gid_lin_1d(256)]),
+            Expr::load("d", vec![gid_lin_1d(256)]),
+        ));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        let e = env(&[("n", 512), ("m", 4)]);
+        assert_eq!(ops[&(OpKind::AddSub, 64)].eval(&e).unwrap(), 512.0);
+    }
+
+    #[test]
+    fn reduction_scope_multiplies() {
+        // out[i] = sum(r, a[i] * 1.5): per point, m muls + m reduction adds
+        let k = simple_kernel(Expr::sum(
+            "r",
+            Expr::mul(Expr::load("a", vec![gid_lin_1d(256)]), Expr::lit(1.5)),
+        ));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        let e = env(&[("n", 256), ("m", 8)]);
+        assert_eq!(ops[&(OpKind::Mul, 32)].eval(&e).unwrap(), 256.0 * 8.0);
+        assert_eq!(ops[&(OpKind::AddSub, 32)].eval(&e).unwrap(), 256.0 * 8.0);
+    }
+
+    #[test]
+    fn special_functions_categorized() {
+        let k = simple_kernel(Expr::un(UnOp::Rsqrt, Expr::load("a", vec![gid_lin_1d(256)])));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        let e = env(&[("n", 512), ("m", 1)]);
+        assert_eq!(ops[&(OpKind::Special, 32)].eval(&e).unwrap(), 512.0);
+    }
+
+    #[test]
+    fn cast_not_counted_but_typed() {
+        // out[i] = cast<f64>(idx) / 3.0 -> one f64 div, no other ops
+        let k = simple_kernel(Expr::div(
+            Expr::cast(DType::F64, Expr::Idx(gid_lin_1d(256))),
+            Expr::lit(3.0),
+        ));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        let e = env(&[("n", 256), ("m", 1)]);
+        assert_eq!(ops[&(OpKind::Div, 64)].eval(&e).unwrap(), 256.0);
+        assert_eq!(ops.len(), 1);
+    }
+
+    #[test]
+    fn index_store_has_no_float_ops() {
+        let k = simple_kernel(Expr::Idx(gid_lin_1d(256)));
+        let ops = count_insn_ops(&k, &k.insns[0]);
+        assert!(ops.is_empty());
+    }
+}

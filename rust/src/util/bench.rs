@@ -1,0 +1,168 @@
+//! Mini-criterion: warmup + sampled wall-clock timing with summary
+//! statistics. All `benches/*.rs` use `harness = false` and drive this.
+//!
+//! Output format is one line per benchmark:
+//! `bench <name> ... median 1.234 ms  mean 1.240 ms ± 0.5%  (20 samples)`
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: usize,
+}
+
+impl Sample {
+    pub fn report_line(&self) -> String {
+        let rel = if self.mean_ns > 0.0 { 100.0 * self.stddev_ns / self.mean_ns } else { 0.0 };
+        format!(
+            "bench {:<44} median {:>12}  mean {:>12} ± {:>4.1}%  ({} samples)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            rel,
+            self.samples
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like warmup/measure phases.
+pub struct Bench {
+    /// minimum time spent warming up
+    pub warmup: Duration,
+    /// number of measured samples
+    pub samples: usize,
+    /// minimum total measurement time; iterations per sample are scaled so
+    /// a sample takes at least `min_sample`.
+    pub min_sample: Duration,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 15,
+            min_sample: Duration::from_millis(20),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast profile for expensive end-to-end benches.
+    pub fn end_to_end() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample: Duration::from_millis(1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly, returning and recording stats. The closure's
+    /// return value is consumed through `std::hint::black_box` so the
+    /// optimizer cannot elide the work.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        // Warmup and calibration: figure out iterations per sample.
+        let warm_start = Instant::now();
+        let mut one = Duration::ZERO;
+        while warm_start.elapsed() < self.warmup {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = t.elapsed();
+            if one > self.warmup {
+                break; // single run longer than entire warmup budget
+            }
+        }
+        let per_iter = one.max(Duration::from_nanos(1));
+        let iters = (self.min_sample.as_nanos() / per_iter.as_nanos()).max(1) as usize;
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var =
+            times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let s = Sample {
+            name: name.to_string(),
+            median_ns: median,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            samples: times.len(),
+        };
+        println!("{}", s.report_line());
+        self.results.push(s.clone());
+        s
+    }
+
+    /// All recorded samples.
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Print a footer; call at the end of a bench binary.
+    pub fn finish(&self, suite: &str) {
+        println!("--- {suite}: {} benchmarks complete ---", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_sample: Duration::from_micros(200),
+            results: Vec::new(),
+        };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median_ns > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny command-line parser (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, and
+//! positional arguments; generates usage text from registered specs.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for parsing + usage generation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true -> boolean flag, false -> takes a value
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse `argv` (without the program name) against `specs`.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+    let mut args = Args::default();
+    for s in specs {
+        if let (false, Some(d)) = (s.is_flag, s.default) {
+            args.opts.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown option --{name}"))?;
+            if spec.is_flag {
+                if inline_val.is_some() {
+                    return Err(format!("--{name} is a flag and takes no value"));
+                }
+                args.flags.push(name.to_string());
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i).cloned().ok_or_else(|| format!("--{name} expects a value"))?
+                    }
+                };
+                args.opts.insert(name.to_string(), val);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let head = if spec.is_flag {
+            format!("  --{}", spec.name)
+        } else {
+            format!("  --{} <value>", spec.name)
+        };
+        s.push_str(&format!("{head:<28}{}", spec.help));
+        if let Some(d) = spec.default {
+            s.push_str(&format!(" [default: {d}]"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "device", help: "device name", is_flag: false, default: Some("titan_x") },
+            OptSpec { name: "runs", help: "number of runs", is_flag: false, default: Some("30") },
+            OptSpec { name: "verbose", help: "chatty", is_flag: true, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("device"), Some("titan_x"));
+        assert_eq!(a.get_usize("runs", 0).unwrap(), 30);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&sv(&["--device", "k40c", "--runs=10", "--verbose", "pos"]), &specs()).unwrap();
+        assert_eq!(a.get("device"), Some("k40c"));
+        assert_eq!(a.get_usize("runs", 0).unwrap(), 10);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos".to_string()]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&sv(&["--device"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+        assert!(parse(&sv(&["--runs", "abc"]), &specs()).unwrap().get_usize("runs", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all() {
+        let u = usage("fit", "fit a device", &specs());
+        for name in ["device", "runs", "verbose"] {
+            assert!(u.contains(name));
+        }
+    }
+}

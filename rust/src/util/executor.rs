@@ -1,0 +1,88 @@
+//! Fixed-size thread pool with a scoped parallel `map` (offline stand-in
+//! for `tokio`/`rayon`). The coordinator's workload — running measurement
+//! campaigns across simulated devices — is CPU-bound fan-out, which maps
+//! cleanly onto scoped threads and channels.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f` over `items` with up to `workers` OS threads, preserving input
+/// order in the output. Uses `std::thread::scope`, so `f` may borrow from
+/// the caller.
+pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue = Arc::new(Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || loop {
+                let next = queue.lock().unwrap().pop();
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("worker died before producing result")).collect()
+    })
+}
+
+/// Default worker count: one per available core, at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map((0..100).collect::<Vec<i64>>(), 8, |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(par_map(vec![1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
+        assert_eq!(par_map(Vec::<i32>::new(), 4, |x| x), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn can_borrow_environment() {
+        let base = 10;
+        let out = par_map(vec![1, 2, 3], 3, |x| x + base);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = par_map(vec![5], 16, |x| x * 2);
+        assert_eq!(out, vec![10]);
+    }
+}

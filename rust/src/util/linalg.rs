@@ -1,0 +1,339 @@
+//! Dense linear algebra for the native fitting path.
+//!
+//! The model's weights solve a relative-error least-squares problem
+//! (paper §4.3). The production path runs the AOT-compiled JAX/Pallas
+//! artifact through [`crate::runtime`]; this module provides the
+//! cross-checked native implementation (Gram + Cholesky with ridge, and a
+//! Householder-QR fallback for ill-conditioned systems).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self^T * self` (Gram matrix), the hot kernel of the fit. Blocked
+    /// over rows for cache friendliness; mirrors the L1 Pallas kernel.
+    pub fn gram(&self) -> Mat {
+        let p = self.cols;
+        let mut g = Mat::zeros(p, p);
+        const RB: usize = 64;
+        let mut r0 = 0;
+        while r0 < self.rows {
+            let r1 = (r0 + RB).min(self.rows);
+            for r in r0..r1 {
+                let row = self.row(r);
+                // upper triangle only
+                for i in 0..p {
+                    let ri = row[i];
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut g.data[i * p..(i + 1) * p];
+                    for j in i..p {
+                        grow[j] += ri * row[j];
+                    }
+                }
+            }
+            r0 = r1;
+        }
+        // mirror
+        for i in 0..p {
+            for j in 0..i {
+                g.data[i * p + j] = g.data[j * p + i];
+            }
+        }
+        g
+    }
+
+    /// `self^T * v`.
+    pub fn t_mul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for (r, &vr) in v.iter().enumerate() {
+            if vr == 0.0 {
+                continue;
+            }
+            let row = self.row(r);
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += vr * x;
+            }
+        }
+        out
+    }
+
+    /// `self * v`.
+    pub fn mul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation — the model-evaluation inner product is
+    // the paper's "rapid evaluation" claim; keep it tight.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Solve `(A + ridge*I) x = b` for symmetric positive-definite `A` via
+/// Cholesky. Returns `None` if the factorization breaks down.
+pub fn cholesky_solve(a: &Mat, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) + if i == j { ridge } else { 0.0 };
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // forward substitution L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // back substitution L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Least squares `min ||A x - b||` via Householder QR with column norms
+/// guarding rank deficiency (tiny diagonal -> zero weight). Used when the
+/// Gram system is too ill-conditioned for Cholesky.
+pub fn qr_solve(a: &Mat, b: &[f64]) -> Vec<f64> {
+    let m = a.rows;
+    let n = a.cols;
+    assert!(m >= n, "qr_solve requires rows >= cols");
+    let mut r = a.clone();
+    let mut qtb = b.to_vec();
+    for k in 0..n {
+        // Householder vector for column k
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r.at(i, k) * r.at(i, k);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r.at(k, k) > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m];
+        for i in k..m {
+            v[i] = r.at(i, k);
+        }
+        v[k] -= alpha;
+        let vtv = v[k..].iter().map(|x| x * x).sum::<f64>();
+        if vtv < 1e-300 {
+            continue;
+        }
+        // apply H = I - 2 v v^T / v^T v to R and qtb
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i] * r.at(i, j);
+            }
+            let s = 2.0 * s / vtv;
+            for i in k..m {
+                *r.at_mut(i, j) -= s * v[i];
+            }
+        }
+        let mut s = 0.0;
+        for i in k..m {
+            s += v[i] * qtb[i];
+        }
+        let s = 2.0 * s / vtv;
+        for i in k..m {
+            qtb[i] -= s * v[i];
+        }
+    }
+    // back substitution on the upper-triangular R
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let d = r.at(i, i);
+        if d.abs() < 1e-12 {
+            x[i] = 0.0; // rank-deficient column -> zero weight
+            continue;
+        }
+        let mut s = qtb[i];
+        for j in i + 1..n {
+            s -= r.at(i, j) * x[j];
+        }
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Geometric mean of strictly positive values (Fleming & Wallace, the
+/// paper's §5 summary statistic). Zero values are clamped to `1e-12`.
+pub fn geometric_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_matches_naive() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![0.0, 1.0, -1.0],
+            vec![2.0, 0.5, 0.0],
+            vec![1.0, 1.0, 1.0],
+        ]);
+        let g = a.gram();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want: f64 = (0..4).map(|r| a.at(r, i) * a.at(r, j)).sum();
+                assert!((g.at(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = M^T M + I is SPD
+        let m = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let mut g = m.gram();
+        *g.at_mut(0, 0) += 1.0;
+        *g.at_mut(1, 1) += 1.0;
+        let x_true = vec![0.3, -0.7];
+        let b = g.mul_vec(&x_true);
+        let x = cholesky_solve(&g, &b, 0.0).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 0.0).is_none());
+    }
+
+    #[test]
+    fn qr_matches_cholesky_on_well_conditioned() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0, 1.0],
+            vec![1.0, 1.0, 0.0],
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+            vec![2.0, 0.0, 0.5],
+        ]);
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let xq = qr_solve(&a, &b);
+        let g = a.gram();
+        let atb = a.t_mul_vec(&b);
+        let xc = cholesky_solve(&g, &atb, 0.0).unwrap();
+        for (q, c) in xq.iter().zip(&xc) {
+            assert!((q - c).abs() < 1e-8, "{xq:?} vs {xc:?}");
+        }
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // third column = first + second
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0, 1.0],
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 1.0, 2.0],
+            vec![2.0, 1.0, 3.0],
+        ]);
+        let b = vec![1.0, 1.0, 2.0, 3.0];
+        let x = qr_solve(&a, &b);
+        // residual should still be (near) zero since b is in the column space
+        let r: f64 = a
+            .mul_vec(&x)
+            .iter()
+            .zip(&b)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum();
+        assert!(r < 1e-16, "residual {r}");
+    }
+
+    #[test]
+    fn geomean_examples() {
+        assert!((geometric_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geometric_mean(&[0.16, 0.14, 0.06, 0.42])
+            - (0.16f64 * 0.14 * 0.06 * 0.42).powf(0.25))
+        .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f64> = (0..37).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+}

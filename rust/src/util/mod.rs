@@ -1,0 +1,27 @@
+//! Small in-tree substrates for facilities that would normally come from
+//! crates.io (the build environment is offline; only the `xla` closure is
+//! vendored). Each submodule is a deliberately minimal but real
+//! implementation, unit-tested like the rest of the library:
+//!
+//! * [`rng`] — deterministic xorshift/splitmix RNG with normal/log-normal
+//!   sampling (no `rand`).
+//! * [`json`] — JSON value model, serializer and recursive-descent parser
+//!   (no `serde_json`), used for campaign persistence.
+//! * [`cli`] — flag/option command-line parser (no `clap`).
+//! * [`bench`] — a mini-criterion: warmup + sampled timing with
+//!   mean/median/stddev reporting, used by all `benches/*.rs`
+//!   (`harness = false`).
+//! * [`prop`] — property-based testing harness (no `proptest`): seeded
+//!   generators + failure-case reporting with linear shrinking.
+//! * [`executor`] — fixed thread pool with a scoped `map` primitive (no
+//!   `tokio`; the coordinator's parallelism is CPU-bound fan-out, for
+//!   which threads are the right tool).
+//! * [`linalg`] — dense matrices, Cholesky and QR solves for the native
+//!   fitting path.
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod bench;
+pub mod prop;
+pub mod executor;
+pub mod linalg;

@@ -1,0 +1,101 @@
+//! Property-based testing harness (offline stand-in for `proptest`).
+//!
+//! A property is a closure from a seeded [`Rng`](crate::util::rng::Rng) to
+//! `Result<(), String>`. The runner executes `cases` random cases; on the
+//! first failure it re-derives the failing case seed and panics with a
+//! reproduction line. Generators are free functions over `Rng`, so
+//! properties compose naturally.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Fixed default seed -> deterministic CI; override locally to fuzz.
+        Config { cases: 256, seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` independent cases. Each case gets an `Rng`
+/// seeded from (seed, case index) so any failure is reproducible from the
+/// printed line alone.
+pub fn check(name: &str, cfg: Config, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{}: {msg}\n  reproduce: seed={case_seed:#x}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quickcheck(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check(name, Config::default(), prop);
+}
+
+/// Assert helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generator: small usize in [lo, hi).
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    rng.range_u64(lo as u64, hi as u64) as usize
+}
+
+/// Generator: f64 in [lo, hi).
+pub fn gen_f64(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + rng.f64() * (hi - lo)
+}
+
+/// Generator: vector of f64.
+pub fn gen_vec_f64(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| gen_f64(rng, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck("add_commutes", |rng| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_reports() {
+        check("always_fails", Config { cases: 3, seed: 1 }, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        quickcheck("gen_bounds", |rng| {
+            let u = gen_usize(rng, 2, 10);
+            prop_assert!((2..10).contains(&u), "u={u}");
+            let f = gen_f64(rng, -1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f={f}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module integration tests: the full pipeline, backend agreement,
+//! persistence round trips, and the paper's qualitative claims.
+
+use uniperf::coordinator::{run_device, run_pipeline, Config, FitBackend};
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{campaign_from_json, campaign_to_json, run_campaign, Protocol};
+use uniperf::perfmodel::{fit, Model, NativeSolver, Solver};
+use uniperf::report::{Table1, Table1Entry};
+use uniperf::runtime::XlaSolver;
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::json::Json;
+
+fn workers() -> usize {
+    uniperf::util::executor::default_workers()
+}
+
+#[test]
+fn full_pipeline_two_devices_reproduces_error_structure() {
+    let cfg = Config {
+        devices: vec!["k40c".into(), "r9_fury".into()],
+        backend: FitBackend::Native,
+        ..Config::default()
+    };
+    let result = run_pipeline(&cfg).expect("pipeline");
+    assert_eq!(result.per_device.len(), 2);
+    let t1 = &result.table1;
+    // 2 devices x 4 kernels x 4 cases
+    assert_eq!(t1.entries.len(), 32);
+    // the regular device fits better than the irregular one (paper §5)
+    let k40 = t1.device_err("k40c");
+    let fury = t1.device_err("r9_fury");
+    assert!(k40 < fury, "k40c {k40} should beat r9_fury {fury}");
+    // overall error in a plausible band (paper: 0.11 overall)
+    assert!(t1.overall_err() < 0.40, "overall {}", t1.overall_err());
+}
+
+#[test]
+fn campaign_persists_and_refits_identically() {
+    let gpu = SimGpu::named("c2070").unwrap();
+    let schema = Schema::full();
+    // a cut-down campaign for speed: one class
+    let cases: Vec<_> = uniperf::kernels::measurement_suite("c2070")
+        .into_iter()
+        .filter(|c| c.label.starts_with("sg_") || c.label.starts_with("empty/"))
+        .collect();
+    let (pm, overhead) = run_campaign(
+        &gpu,
+        &cases,
+        &schema,
+        &Protocol::default(),
+        ExtractOpts::default(),
+        workers(),
+    )
+    .expect("campaign");
+    let j = campaign_to_json(&pm, "c2070", overhead);
+    let (pm2, dev, ovh) = campaign_from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+    assert_eq!(dev, "c2070");
+    assert_eq!(ovh, overhead);
+    let m1 = fit("c2070", &pm, &schema, &NativeSolver::new()).unwrap();
+    let m2 = fit("c2070", &pm2, &schema, &NativeSolver::new()).unwrap();
+    assert_eq!(m1.weights, m2.weights);
+}
+
+#[test]
+fn model_json_file_roundtrip() {
+    let schema = Schema::full();
+    let gpu = SimGpu::named("titan_x").unwrap();
+    let cases: Vec<_> = uniperf::kernels::measurement_suite("titan_x")
+        .into_iter()
+        .filter(|c| c.label.starts_with("sg_") || c.label.starts_with("empty/"))
+        .collect();
+    let (pm, _) = run_campaign(
+        &gpu,
+        &cases,
+        &schema,
+        &Protocol::default(),
+        ExtractOpts::default(),
+        workers(),
+    )
+    .unwrap();
+    let model = fit("titan_x", &pm, &schema, &NativeSolver::new()).unwrap();
+    let dir = std::env::temp_dir().join("uniperf_test_model");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    std::fs::write(&path, model.to_json(&schema).pretty()).unwrap();
+    let loaded =
+        Model::from_json(&Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap(), &schema)
+            .unwrap();
+    for c in &pm.cases {
+        assert!((model.predict(&c.props) - loaded.predict(&c.props)).abs() < 1e-18);
+    }
+}
+
+#[test]
+fn xla_and_native_solvers_agree_on_campaign_data() {
+    let Ok(xla) = XlaSolver::from_artifacts() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let gpu = SimGpu::named("k40c").unwrap();
+    let schema = Schema::full();
+    let cases = uniperf::kernels::measurement_suite("k40c");
+    let (pm, _) = run_campaign(
+        &gpu,
+        &cases,
+        &schema,
+        &Protocol::default(),
+        ExtractOpts::default(),
+        workers(),
+    )
+    .unwrap();
+    let mn = fit("k40c", &pm, &schema, &NativeSolver::new()).unwrap();
+    let mx = fit("k40c", &pm, &schema, &xla).unwrap();
+    // same predictions to floating-point agreement on every training case
+    for c in &pm.cases {
+        let (a, b) = (mn.predict(&c.props), mx.predict(&c.props));
+        assert!(
+            (a - b).abs() / a.abs().max(1e-12) < 1e-6,
+            "{}: native {a} vs xla {b}",
+            c.label
+        );
+    }
+}
+
+#[test]
+fn run_device_writes_results_dir() {
+    let out = std::env::temp_dir().join("uniperf_test_results");
+    let _ = std::fs::remove_dir_all(&out);
+    let cfg = Config {
+        devices: vec!["c2070".into()],
+        backend: FitBackend::Native,
+        out_dir: Some(out.clone()),
+        ..Config::default()
+    };
+    let schema = Schema::full();
+    run_device("c2070", &schema, &cfg).unwrap();
+    assert!(out.join("campaign_c2070.json").exists());
+    assert!(out.join("model_c2070.json").exists());
+}
+
+#[test]
+fn table1_render_is_stable_shape() {
+    let mut t = Table1::default();
+    for dev in ["titan_x", "k40c"] {
+        for k in ["fd5", "nbody"] {
+            for (i, case) in ["a", "b", "c", "d"].iter().enumerate() {
+                t.push(Table1Entry {
+                    device: dev.into(),
+                    kernel: k.into(),
+                    case: case.to_string(),
+                    predicted_s: 1e-3 * (i + 1) as f64,
+                    actual_s: 1.1e-3 * (i + 1) as f64,
+                });
+            }
+        }
+    }
+    let r = t.render();
+    assert_eq!(r.matches("a.").count(), 2); // one per kernel
+    assert!(t.overall_err() > 0.0 && t.overall_err() < 0.2);
+}
+
+#[test]
+fn unknown_device_is_an_error() {
+    let cfg = Config {
+        devices: vec!["gtx480".into()],
+        backend: FitBackend::Native,
+        ..Config::default()
+    };
+    assert!(run_pipeline(&cfg).is_err());
+}
+
+#[test]
+fn xla_solver_name_reported_in_model() {
+    let Ok(xla) = XlaSolver::from_artifacts() else {
+        return;
+    };
+    assert_eq!(xla.name(), "xla-pallas-aot");
+}

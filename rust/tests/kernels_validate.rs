@@ -1,0 +1,172 @@
+//! Numeric validation sweep: every kernel class in the library executes
+//! correctly on the simulated device at small sizes, across all the
+//! group shapes the paper's configuration tables use.
+
+use uniperf::gpusim::{execute, seed_value};
+use uniperf::kernels::measure::{
+    arith, filled, global_access, mm_naive, mm_tiled, transpose, vsadd, ArithType,
+    GlobalAccessConfig, TransposeVariant,
+};
+use uniperf::kernels::testks::{
+    conv_reference, convolution, fd_reference, fd_stencil, nbody, nbody_reference,
+};
+use uniperf::qpoly::env;
+
+/// All 2-D group shapes appearing in the six group sets.
+const SHAPES_2D: [(i64, i64); 5] = [(16, 12), (16, 14), (16, 16), (24, 16), (32, 16)];
+
+#[test]
+fn mm_tiled_all_group_shapes() {
+    for (gx, gy) in SHAPES_2D {
+        let k = mm_tiled(gx, gy);
+        let (n, m, l) = (2 * gy, 2 * gx, 2 * gx);
+        let e = env(&[("n", n), ("m", m), ("l", l)]);
+        let st = execute(&k, &e).unwrap_or_else(|err| panic!("{gx}x{gy}: {err}"));
+        let cc = st.get("cc").unwrap();
+        for i in 0..n as usize {
+            for j in 0..l as usize {
+                let want: f64 = (0..m as usize)
+                    .map(|kk| {
+                        seed_value("a", i * m as usize + kk) * seed_value("b", kk * l as usize + j)
+                    })
+                    .sum();
+                assert!(
+                    (cc[i * l as usize + j] - want).abs() < 1e-9,
+                    "mm_tiled {gx}x{gy} at ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn transpose_all_variants_and_shapes() {
+    for (gx, gy) in SHAPES_2D {
+        for variant in [
+            TransposeVariant::Tiled,
+            TransposeVariant::CoalescedWrite,
+            TransposeVariant::CoalescedRead,
+        ] {
+            let k = transpose(variant, gx, gy);
+            // size divisible by both tile and lane shapes
+            let n = 2 * gx * gy / gcd(gx, gy);
+            let e = env(&[("n", n)]);
+            let st = execute(&k, &e).unwrap_or_else(|err| panic!("{variant:?} {gx}x{gy}: {err}"));
+            let out = st.get("out").unwrap();
+            let pitch = n as usize;
+            for i in 0..n as usize {
+                for j in 0..n as usize {
+                    assert_eq!(
+                        out[j * pitch + i],
+                        seed_value("a", i * pitch + j),
+                        "{variant:?} {gx}x{gy} at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn vsadd_and_global_access_all_lsizes() {
+    for lsize in [128i64, 192, 224, 256, 384, 512] {
+        for s in 1..=3i64 {
+            let k = vsadd(s, lsize);
+            let e = env(&[("nt", lsize)]);
+            let st = execute(&k, &e).unwrap();
+            let out = st.get("out").unwrap();
+            let (s1, s2) = (seed_value("s1", 0), seed_value("s2", 0));
+            for i in 0..lsize as usize {
+                let idx = s as usize * i;
+                let want = s1 * seed_value("x", idx) + s2 * seed_value("y", idx);
+                assert!((out[idx] - want).abs() < 1e-12, "vsadd s={s} l={lsize}");
+            }
+        }
+        for cfg in
+            [GlobalAccessConfig::Copy, GlobalAccessConfig::Add4, GlobalAccessConfig::StoreIndex]
+        {
+            let k = global_access(cfg, lsize);
+            let e = env(&[("n", 2 * lsize)]);
+            execute(&k, &e).unwrap_or_else(|err| panic!("{cfg:?} l={lsize}: {err}"));
+        }
+    }
+}
+
+#[test]
+fn filled_and_arith_classes() {
+    for lsize in [128i64, 256] {
+        for s in [2i64, 3] {
+            let k = filled(s, lsize);
+            let st = execute(&k, &env(&[("nt", lsize)])).unwrap();
+            let out = st.get("out").unwrap();
+            for i in 0..lsize as usize {
+                let tuple: f64 =
+                    (0..s as usize).map(|c| seed_value("x", c + s as usize * i)).sum();
+                assert!((out[i] - 256.0 * tuple).abs() < 1e-9, "filled s={s}");
+            }
+        }
+    }
+    for ty in ArithType::all() {
+        let k = arith(ty, 16, 16);
+        let st = execute(&k, &env(&[("n", 16), ("k", 32)])).unwrap();
+        assert!(st.get("out").unwrap().iter().all(|x| x.is_finite()), "{ty:?}");
+    }
+}
+
+#[test]
+fn test_kernels_all_device_group_configs() {
+    // fd across the three 256-thread shapes used by §5 configs
+    for (gx, gy) in [(16, 16), (16, 16), (16, 16)] {
+        let k = fd_stencil(gx, gy);
+        let n = 2 * gx.max(gy);
+        let st = execute(&k, &env(&[("n", n)])).unwrap();
+        let want = fd_reference(n as usize);
+        let out = st.get("out").unwrap();
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "fd {gx}x{gy} i={i}");
+        }
+    }
+    // conv at the small end
+    let k = convolution(16, 16);
+    let n = 16usize;
+    let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+    let want = conv_reference(n);
+    let out = st.get("out").unwrap();
+    for i in 0..want.len() {
+        assert!((out[i] - want[i]).abs() < 1e-9, "conv i={i}");
+    }
+    // nbody across 1-D lane sizes
+    for lsize in [192i64, 256] {
+        let k = nbody(lsize);
+        let n = 2 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap();
+        let want = nbody_reference(n as usize);
+        let out = st.get("out").unwrap();
+        for i in 0..n as usize {
+            assert!(
+                (out[i] - want[i]).abs() / want[i] < 1e-10,
+                "nbody l={lsize} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mm_naive_matches_tiled() {
+    let e_naive = env(&[("n", 32)]);
+    let st1 = execute(&mm_naive(16, 16), &e_naive).unwrap();
+    let e_tiled = env(&[("n", 32), ("m", 32), ("l", 32)]);
+    let st2 = execute(&mm_tiled(16, 16), &e_tiled).unwrap();
+    let (c1, c2) = (st1.get("cc").unwrap(), st2.get("cc").unwrap());
+    for i in 0..32 * 32 {
+        assert!((c1[i] - c2[i]).abs() < 1e-9, "naive vs tiled at {i}");
+    }
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}

@@ -1,0 +1,217 @@
+//! Property-based tests over the analysis substrates, using the in-tree
+//! harness (`uniperf::util::prop`). Each property runs 256 seeded cases.
+
+use uniperf::isl::{box_to_trip_set, BoxDomain, Dim};
+use uniperf::lpir::builder::{gid_lin_1d, KernelBuilder};
+use uniperf::lpir::{Access, DType, Expr, Layout};
+use uniperf::perfmodel::{NativeSolver, Solver};
+use uniperf::prop_assert;
+use uniperf::qpoly::{env, Atom, LinExpr, QPoly};
+use uniperf::stats::{extract, ExtractOpts, Schema};
+use uniperf::util::linalg::{dot, Mat};
+use uniperf::util::prop::{check, gen_usize, quickcheck, Config};
+use uniperf::util::rng::Rng;
+
+#[test]
+fn qpoly_arithmetic_is_a_homomorphism_under_eval() {
+    quickcheck("qpoly_homomorphism", |rng| {
+        // random small qpolys over {n, m}
+        let rand_qpoly = |rng: &mut Rng| {
+            let mut q = QPoly::constant(rng.range_i64(-3, 4) as f64);
+            for _ in 0..gen_usize(rng, 0, 4) {
+                let atom = if rng.f64() < 0.7 {
+                    QPoly::param(if rng.f64() < 0.5 { "n" } else { "m" })
+                } else {
+                    QPoly::from_atom(Atom::FloorDiv(
+                        LinExpr::var("n").add(&LinExpr::constant(rng.range_i64(0, 16))),
+                        rng.range_i64(1, 8),
+                    ))
+                };
+                q = q.mul(&atom).add(&QPoly::constant(rng.range_i64(-2, 3) as f64));
+            }
+            q
+        };
+        let a = rand_qpoly(rng);
+        let b = rand_qpoly(rng);
+        let e = env(&[("n", rng.range_i64(0, 100)), ("m", rng.range_i64(0, 100))]);
+        let (av, bv) = (a.eval(&e).unwrap(), b.eval(&e).unwrap());
+        let sum = a.add(&b).eval(&e).unwrap();
+        let prod = a.mul(&b).eval(&e).unwrap();
+        prop_assert!((sum - (av + bv)).abs() < 1e-6, "add: {sum} vs {}", av + bv);
+        // products of counts can be large; compare with relative tolerance
+        let want = av * bv;
+        prop_assert!(
+            (prod - want).abs() <= 1e-9 * want.abs().max(1.0),
+            "mul: {prod} vs {want}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn symbolic_box_count_matches_enumeration() {
+    quickcheck("box_count_vs_enumeration", |rng| {
+        let mut dims = Vec::new();
+        for i in 0..gen_usize(rng, 1, 4) {
+            let name = format!("d{i}");
+            match rng.range_i64(0, 3) {
+                0 => dims.push(Dim::simple(&name, LinExpr::var("n"))),
+                1 => dims.push(Dim::strided(&name, LinExpr::var("n"), rng.range_i64(1, 5))),
+                _ => dims.push(Dim::tiles(&name, LinExpr::var("n"), rng.range_i64(1, 9))),
+            }
+        }
+        let b = BoxDomain::new(dims);
+        let e = env(&[("n", rng.range_i64(1, 30))]);
+        let sym = b.count().eval(&e).unwrap();
+        let enumerated = box_to_trip_set(&b).count_at(&e).unwrap() as f64;
+        prop_assert!(sym == enumerated, "sym {sym} vs enum {enumerated}");
+        Ok(())
+    });
+}
+
+#[test]
+fn extraction_is_deterministic_and_size_consistent() {
+    quickcheck("extract_deterministic", |rng| {
+        let lsize = *rng.choose(&[64i64, 128, 256]);
+        let stride = rng.range_i64(1, 4);
+        let k = KernelBuilder::new("k", &["n"])
+            .group_dims_1d(LinExpr::var("n"), lsize)
+            .global_array(
+                "a",
+                DType::F32,
+                vec![LinExpr::var("n").scale(stride)],
+                Layout::RowMajor,
+                false,
+            )
+            .global_array("o", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("o", vec![gid_lin_1d(lsize)]),
+                Expr::load("a", vec![gid_lin_1d(lsize).scale(stride)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let e1 = env(&[("n", lsize * rng.range_i64(8, 64))]);
+        let p1 = extract(&k, &e1, ExtractOpts::default()).map_err(|e| e)?;
+        let p2 = extract(&k, &e1, ExtractOpts::default()).map_err(|e| e)?;
+        let schema = Schema::full();
+        let (v1, v2) = (p1.eval(&schema, &e1).unwrap(), p2.eval(&schema, &e1).unwrap());
+        prop_assert!(v1 == v2, "extraction not deterministic");
+        // doubling n doubles every count except Const
+        let mut e2 = e1.clone();
+        e2.insert("n".into(), e1["n"] * 2);
+        let v3 = p1.eval(&schema, &e2).unwrap();
+        for (i, p) in schema.props().iter().enumerate() {
+            if v1[i] == 0.0 {
+                continue;
+            }
+            let factor = v3[i] / v1[i];
+            let want = if matches!(p, uniperf::stats::Prop::Const) { 1.0 } else { 2.0 };
+            prop_assert!(
+                (factor - want).abs() < 1e-9,
+                "{}: factor {factor}, want {want}",
+                p.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fit_recovers_generating_weights() {
+    check("fit_recovery", Config { cases: 64, ..Config::default() }, |rng| {
+        let n_props = gen_usize(rng, 1, 8);
+        let n_cases = n_props + gen_usize(rng, 4, 40);
+        let true_w: Vec<f64> =
+            (0..n_props).map(|_| 10f64.powf(-12.0 + 4.0 * rng.f64())).collect();
+        let mut rows = Vec::new();
+        for _ in 0..n_cases {
+            let props: Vec<f64> =
+                true_w.iter().map(|_| (rng.range_u64(1, 1000) * 100) as f64).collect();
+            let t: f64 = props.iter().zip(&true_w).map(|(p, w)| p * w).sum();
+            rows.push(props.iter().map(|p| p / t).collect::<Vec<f64>>());
+        }
+        let b = Mat::from_rows(rows);
+        let w = NativeSolver::new().solve(&b).map_err(|e| e)?;
+        // the fitted weights must reproduce every training time
+        for i in 0..b.rows {
+            let pred = dot(&w, b.row(i));
+            prop_assert!((pred - 1.0).abs() < 1e-6, "row {i}: scaled pred {pred}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulated_times_are_positive_monotone_in_size() {
+    check("sim_monotone", Config { cases: 32, ..Config::default() }, |rng| {
+        let devices = ["titan_x", "k40c", "c2070", "r9_fury"];
+        let gpu = uniperf::gpusim::SimGpu::named(*rng.choose(&devices)).unwrap();
+        let k = uniperf::kernels::measure::global_access(
+            uniperf::kernels::measure::GlobalAccessConfig::Copy,
+            256,
+        );
+        let p = rng.range_i64(16, 22);
+        let t1 = gpu.breakdown(&k, &env(&[("n", 1 << p)])).map_err(|e| e)?.total;
+        let t2 = gpu.breakdown(&k, &env(&[("n", 1 << (p + 2))])).map_err(|e| e)?.total;
+        prop_assert!(t1 > 0.0 && t2 > t1, "t1={t1} t2={t2}");
+        // 4x the data must approach 4x the time once the launch overhead
+        // stops dominating
+        if t1 > 4.0 * gpu.profile.launch_base {
+            prop_assert!(t2 > 1.5 * t1, "above overhead: t1={t1} t2={t2}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn schedule_never_unbalances_loops() {
+    quickcheck("schedule_balanced", |rng| {
+        // random chain of instructions across a sequential loop
+        let use_seq = rng.f64() < 0.5;
+        let n = LinExpr::var("n");
+        let mut b = KernelBuilder::new("k", &["n"])
+            .group_dims_1d(n.clone(), 128)
+            .global_array("a", DType::F32, vec![n.clone()], Layout::RowMajor, false)
+            .global_array("o", DType::F32, vec![n.clone()], Layout::RowMajor, true)
+            .local_array("t", DType::F32, &[128]);
+        if use_seq {
+            b = b.seq_dim("s", LinExpr::constant(rng.range_i64(1, 5)));
+        }
+        let within: Vec<&str> =
+            if use_seq { vec!["g0", "l0", "s"] } else { vec!["g0", "l0"] };
+        let k = b
+            .insn(
+                Access::new("t", vec![LinExpr::var("l0")]),
+                Expr::load("a", vec![gid_lin_1d(128)]),
+                &within,
+                &[],
+            )
+            .insn(
+                Access::new("o", vec![gid_lin_1d(128)]),
+                Expr::load(
+                    "t",
+                    vec![LinExpr::constant(127).sub(&LinExpr::var("l0"))],
+                ),
+                &within,
+                &[0],
+            )
+            .build()
+            .unwrap();
+        let s = uniperf::schedule::schedule(&k).map_err(|e| e)?;
+        let mut depth = 0i64;
+        for item in &s.items {
+            match item {
+                uniperf::schedule::SchedItem::OpenLoop(_) => depth += 1,
+                uniperf::schedule::SchedItem::CloseLoop(_) => depth -= 1,
+                _ => {}
+            }
+            prop_assert!(depth >= 0, "negative loop depth");
+        }
+        prop_assert!(depth == 0, "unbalanced loops");
+        // the cross-lane read needs at least one barrier
+        prop_assert!(s.barrier_sites() >= 1, "missing barrier");
+        Ok(())
+    });
+}
