@@ -27,7 +27,8 @@ fn test_err(
     for case in kernels::test_suite(gpu.profile.name) {
         let props = cache.props_for(&case, extract_opts).unwrap();
         let pred = model.predict_kernel(schema, &props, &case.env).unwrap();
-        let actual = protocol.reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).unwrap());
+        let actual =
+            protocol.reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).unwrap()).unwrap();
         errs.push((pred - actual).abs() / actual);
     }
     geometric_mean(&errs)

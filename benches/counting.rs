@@ -48,5 +48,5 @@ fn main() {
     let w: Vec<f64> = (0..schema.len()).map(|i| 1e-12 * (i + 1) as f64).collect();
     b.run("counting/predict-inner-product", || dot(&w, &v));
 
-    b.finish("counting");
+    b.finish_json("counting");
 }

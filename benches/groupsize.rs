@@ -63,7 +63,7 @@ fn main() {
     ] {
         let times: Vec<f64> = cases
             .iter()
-            .map(|(k, e, _)| protocol.reduce(&gpu.time(k, e, protocol.runs).unwrap()))
+            .map(|(k, e, _)| protocol.reduce(&gpu.time(k, e, protocol.runs).unwrap()).unwrap())
             .collect();
         let (lo, hi) = (
             times.iter().cloned().fold(f64::INFINITY, f64::min),
@@ -89,7 +89,7 @@ fn main() {
     for (gx, gy) in shapes {
         let k = measure::mm_tiled(gx, gy);
         let e = env(&[("n", 528), ("m", 544), ("l", 528)]);
-        sim_times.push(protocol.reduce(&gpu.time(&k, &e, protocol.runs).unwrap()));
+        sim_times.push(protocol.reduce(&gpu.time(&k, &e, protocol.runs).unwrap()).unwrap());
         let props = extract(&k, &e, ExtractOpts::default()).unwrap();
         let v = props.eval(&schema, &e).unwrap();
         // total global loads as the traffic proxy

@@ -23,8 +23,8 @@ fn main() {
         let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
         let e = env(&[("n", 1 << 24)]);
         let times = gpu.time(&k, &e, protocol.runs).unwrap();
-        let mn = protocol.reduce(&times);
-        let mean = protocol.reduce_mean(&times);
+        let mn = protocol.reduce(&times).unwrap();
+        let mean = protocol.reduce_mean(&times).unwrap();
         let dev = (mean - mn) / mn;
         println!(
             "{:<10} min {:>10.4} ms   mean {:>10.4} ms   delta {:>5.2}%  {}",
@@ -45,7 +45,7 @@ fn main() {
         let mut line = format!("{:<10}", d.name);
         for p in [8i64, 10, 12] {
             let e = env(&[("n", 1 << p)]);
-            let t = protocol.reduce(&gpu.time(&k, &e, protocol.runs).unwrap());
+            let t = protocol.reduce(&gpu.time(&k, &e, protocol.runs).unwrap()).unwrap();
             line += &format!("  2^{p}: {:>8.2} µs", t * 1e6);
             monotone &= t > prev;
             prev = t;

@@ -42,7 +42,9 @@ fn main() {
             let props = cache.props_for(&case, ExtractOpts::default()).expect("props");
             let pred = dr.model.predict_kernel(&schema, &props, &case.env).expect("predict");
             let actual =
-                protocol.reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).expect("time"));
+                protocol
+                .reduce(&gpu.time(&case.kernel, &case.env, protocol.runs).expect("time"))
+                .expect("reduce");
             rows.push((case.label, pred, actual));
         }
         let mut by_pred = rows.clone();

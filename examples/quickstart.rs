@@ -69,7 +69,7 @@ fn main() {
         let e = env(&[("n", 1i64 << p)]);
         let pred = dr.model.predict_kernel(&schema, &props, &e).expect("predict");
         let times = gpu.time(&kernel, &e, protocol.runs).expect("time");
-        let actual = protocol.reduce(&times);
+        let actual = protocol.reduce(&times).expect("reduce");
         println!(
             "2^{p:<10} {:>12.1} {:>12.1} {:>7.1}%",
             pred * 1e6,

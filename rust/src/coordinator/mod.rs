@@ -111,7 +111,7 @@ pub fn run_device(
         let props = cache.props_for(&case, cfg.extract)?;
         let predicted = model.predict_kernel(schema, &props, &case.env)?;
         let times = gpu.time(&case.kernel, &case.env, cfg.protocol.runs)?;
-        let actual = cfg.protocol.reduce(&times);
+        let actual = cfg.protocol.reduce(&times)?;
         // label format: "<kernel>/<letter>/..."
         let mut parts = case.label.split('/');
         let kname = parts.next().unwrap_or("?").to_string();

@@ -8,11 +8,17 @@
 //! Used to *validate* every kernel in the library against a plain
 //! reference implementation — the simulator must run the same computation
 //! the paper's OpenCL kernels ran, not just time a description of it.
+//!
+//! Execution is two-phase: the kernel is first *compiled* against the
+//! parameter binding — array names resolve to dense indices, affine
+//! index expressions become [`LinTape`]s over symbol slots, loop bounds
+//! fold to concrete integers — and the per-lane inner loop then runs
+//! against a flat [`Env`] slot frame with no string-keyed map lookups.
 
-use crate::lpir::{Access, DType, Expr, IdxTag, Kernel, MemSpace, RedOp, UnOp};
-#[cfg(test)]
-use crate::qpoly::LinExpr;
+use crate::lpir::{BinOp, DType, Expr, IdxTag, Kernel, MemSpace, RedOp, UnOp};
+use crate::qpoly::tape::LinTape;
 use crate::schedule::{schedule, SchedItem, Schedule};
+use crate::util::intern::{Env, Sym};
 use std::collections::BTreeMap;
 
 /// Global-array storage after execution.
@@ -42,26 +48,151 @@ pub fn seed_value(array: &str, flat: usize) -> f64 {
     ((h >> 44) as i64 - (1 << 19)) as f64 / (1 << 19) as f64
 }
 
-/// Tree form of a schedule (loops re-nested for recursive execution).
+/// Compiled array access: dense array index + slot-indexed affine tapes.
+struct CAccess {
+    array: usize,
+    idx: Vec<LinTape>,
+}
+
+/// Compiled right-hand-side expression.
+enum CExpr {
+    Lit(f64),
+    Idx(LinTape),
+    Load(CAccess),
+    Cast(DType, Box<CExpr>),
+    Un(UnOp, Box<CExpr>),
+    Bin(BinOp, Box<CExpr>, Box<CExpr>),
+    Reduce {
+        op: RedOp,
+        iname: Sym,
+        lo: i64,
+        hi: i64,
+        step: i64,
+        body: Box<CExpr>,
+    },
+}
+
+struct CInsn {
+    lhs: CAccess,
+    rhs: CExpr,
+    is_update: bool,
+}
+
+/// Tree form of a schedule with concrete loop bounds.
 enum Node {
-    Loop(String, Vec<Node>),
+    Loop { iname: Sym, lo: i64, hi: i64, step: i64, body: Vec<Node> },
     Run(usize),
     Barrier,
 }
 
-fn build_tree(sched: &Schedule) -> Vec<Node> {
-    fn go(items: &[SchedItem], pos: &mut usize) -> Vec<Node> {
+/// Per-array static info at the compiled binding.
+struct ArrInfo {
+    name: Sym,
+    space: MemSpace,
+    extents: Vec<i64>,
+    strides: Vec<i64>,
+    total: usize,
+    is_output: bool,
+}
+
+/// A kernel compiled against one parameter binding.
+struct Compiled {
+    kernel_name: String,
+    arrays: Vec<ArrInfo>,
+    insns: Vec<CInsn>,
+    tree: Vec<Node>,
+    /// lane local-id tuples, l0-major
+    lanes: Vec<(i64, i64)>,
+    l0: Option<Sym>,
+    l1: Option<Sym>,
+    g0: Option<Sym>,
+    g1: Option<Sym>,
+    g0_extent: i64,
+    g1_extent: i64,
+}
+
+/// Mutable array storage, indexed like `Compiled::arrays`.
+struct MachineState {
+    /// global arrays (empty Vec for non-global slots)
+    global: Vec<Vec<f64>>,
+    /// local arrays, re-zeroed per group
+    local: Vec<Vec<f64>>,
+    /// private arrays: lane-major [lane][elem]
+    private: Vec<Vec<Vec<f64>>>,
+}
+
+fn compile_access(
+    acc: &crate::lpir::Access,
+    index: &BTreeMap<Sym, usize>,
+) -> Result<CAccess, String> {
+    let array = *index
+        .get(&acc.array)
+        .ok_or_else(|| format!("unknown array '{}'", acc.array))?;
+    Ok(CAccess { array, idx: acc.idx.iter().map(LinTape::compile).collect() })
+}
+
+fn compile_expr(
+    kernel: &Kernel,
+    env: &Env,
+    index: &BTreeMap<Sym, usize>,
+    e: &Expr,
+) -> Result<CExpr, String> {
+    Ok(match e {
+        Expr::Lit(x) => CExpr::Lit(*x),
+        Expr::Idx(le) => CExpr::Idx(LinTape::compile(le)),
+        Expr::Load(a) => CExpr::Load(compile_access(a, index)?),
+        Expr::Cast(dt, x) => CExpr::Cast(*dt, Box::new(compile_expr(kernel, env, index, x)?)),
+        Expr::Un(op, x) => CExpr::Un(*op, Box::new(compile_expr(kernel, env, index, x)?)),
+        Expr::Bin(op, a, b) => CExpr::Bin(
+            *op,
+            Box::new(compile_expr(kernel, env, index, a)?),
+            Box::new(compile_expr(kernel, env, index, b)?),
+        ),
+        Expr::Reduce(op, iname, body) => {
+            let dim = kernel
+                .domain
+                .dim(*iname)
+                .ok_or_else(|| format!("unknown reduction iname '{iname}'"))?;
+            CExpr::Reduce {
+                op: *op,
+                iname: *iname,
+                lo: dim.lo.eval(env)?,
+                hi: dim.hi.eval(env)?,
+                step: dim.step,
+                body: Box::new(compile_expr(kernel, env, index, body)?),
+            }
+        }
+    })
+}
+
+fn build_tree(kernel: &Kernel, env: &Env, sched: &Schedule) -> Result<Vec<Node>, String> {
+    fn go(
+        kernel: &Kernel,
+        env: &Env,
+        items: &[SchedItem],
+        pos: &mut usize,
+    ) -> Result<Vec<Node>, String> {
         let mut out = Vec::new();
         while *pos < items.len() {
             match &items[*pos] {
                 SchedItem::OpenLoop(name) => {
                     *pos += 1;
-                    let body = go(items, pos);
-                    out.push(Node::Loop(name.clone(), body));
+                    let body = go(kernel, env, items, pos)?;
+                    let dim = kernel
+                        .domain
+                        .dim(*name)
+                        .ok_or_else(|| format!("unknown loop iname '{name}'"))?;
+                    out.push(Node::Loop {
+                        iname: *name,
+                        lo: dim.lo.eval(env)?,
+                        hi: dim.hi.eval(env)?,
+                        step: dim.step,
+                        body,
+                    });
                 }
                 SchedItem::CloseLoop(_) => {
                     *pos += 1;
-                    return out;
+                    return Ok(out);
                 }
                 SchedItem::RunInsn(id) => {
                     out.push(Node::Run(*id));
@@ -73,320 +204,325 @@ fn build_tree(sched: &Schedule) -> Vec<Node> {
                 }
             }
         }
-        out
+        Ok(out)
     }
     let mut pos = 0;
-    go(&sched.items, &mut pos)
+    go(kernel, env, &sched.items, &mut pos)
 }
 
-struct Machine<'a> {
-    kernel: &'a Kernel,
-    env: &'a BTreeMap<String, i64>,
-    /// concrete extents and element strides per array
-    extents: BTreeMap<String, Vec<i64>>,
-    strides: BTreeMap<String, Vec<i64>>,
-    global: BTreeMap<String, Vec<f64>>,
-    /// local arrays, re-zeroed per group
-    local: BTreeMap<String, Vec<f64>>,
-    /// private arrays: lane-major [lane][elem]
-    private: BTreeMap<String, Vec<Vec<f64>>>,
-    lanes: Vec<(i64, i64)>,
-    l0_name: Option<String>,
-    l1_name: Option<String>,
-}
-
-impl<'a> Machine<'a> {
-    fn flat_index(&self, acc: &Access, ienv: &BTreeMap<String, i64>) -> Result<usize, String> {
-        let strides = &self.strides[&acc.array];
-        let extents = &self.extents[&acc.array];
-        let mut flat: i64 = 0;
-        for ((e, &st), &ext) in acc.idx.iter().zip(strides).zip(extents) {
-            let v = e.eval(ienv)?;
-            if v < 0 || v >= ext {
-                return Err(format!(
-                    "out-of-bounds access {}[..{v}..] (extent {ext}) in kernel '{}'",
-                    acc.array, self.kernel.name
-                ));
-            }
-            flat += v * st;
-        }
-        Ok(flat as usize)
-    }
-
-    fn read(&self, acc: &Access, lane: usize, ienv: &BTreeMap<String, i64>) -> Result<f64, String> {
-        let arr = self.kernel.array(&acc.array).unwrap();
-        let flat = self.flat_index(acc, ienv)?;
-        Ok(match arr.space {
-            MemSpace::Global => self.global[&acc.array][flat],
-            MemSpace::Local => self.local[&acc.array][flat],
-            MemSpace::Private => self.private[&acc.array][lane][flat],
-        })
-    }
-
-    fn write(
-        &mut self,
-        acc: &Access,
-        lane: usize,
-        ienv: &BTreeMap<String, i64>,
-        value: f64,
-        is_update: bool,
-    ) -> Result<(), String> {
-        let arr = self.kernel.array(&acc.array).unwrap();
-        let space = arr.space;
-        let flat = self.flat_index(acc, ienv)?;
-        let slot = match space {
-            MemSpace::Global => &mut self.global.get_mut(&acc.array).unwrap()[flat],
-            MemSpace::Local => &mut self.local.get_mut(&acc.array).unwrap()[flat],
-            MemSpace::Private => &mut self.private.get_mut(&acc.array).unwrap()[lane][flat],
-        };
-        if is_update {
-            *slot += value;
-        } else {
-            *slot = value;
-        }
-        Ok(())
-    }
-
-    fn eval(
-        &self,
-        e: &Expr,
-        lane: usize,
-        ienv: &mut BTreeMap<String, i64>,
-    ) -> Result<f64, String> {
-        Ok(match e {
-            Expr::Lit(x) => *x,
-            Expr::Idx(le) => le.eval(ienv)? as f64,
-            Expr::Load(a) => self.read(a, lane, ienv)?,
-            Expr::Cast(dt, x) => {
-                let v = self.eval(x, lane, ienv)?;
-                match dt {
-                    DType::F32 | DType::F32x4 => v as f32 as f64,
-                    _ => v,
-                }
-            }
-            Expr::Un(op, x) => {
-                let v = self.eval(x, lane, ienv)?;
-                match op {
-                    UnOp::Neg => -v,
-                    UnOp::Sqrt => v.sqrt(),
-                    UnOp::Rsqrt => 1.0 / v.sqrt(),
-                    UnOp::Exp => v.exp(),
-                    UnOp::Sin => v.sin(),
-                    UnOp::Cos => v.cos(),
-                    UnOp::Abs => v.abs(),
-                }
-            }
-            Expr::Bin(op, a, b) => {
-                use crate::lpir::BinOp::*;
-                let x = self.eval(a, lane, ienv)?;
-                let y = self.eval(b, lane, ienv)?;
-                match op {
-                    Add => x + y,
-                    Sub => x - y,
-                    Mul => x * y,
-                    Div => x / y,
-                    Pow => x.powf(y),
-                    Min => x.min(y),
-                    Max => x.max(y),
-                }
-            }
-            Expr::Reduce(op, iname, body) => {
-                let dim = self
-                    .kernel
-                    .domain
-                    .dim(iname)
-                    .ok_or_else(|| format!("unknown reduction iname '{iname}'"))?;
-                let lo = dim.lo.eval(self.env)?;
-                let hi = dim.hi.eval(self.env)?;
-                let mut acc = match op {
-                    RedOp::Sum => 0.0,
-                    RedOp::Max => f64::NEG_INFINITY,
-                };
-                let mut v = lo;
-                while v < hi {
-                    let prev = ienv.insert(iname.clone(), v);
-                    let x = self.eval(body, lane, ienv)?;
-                    match prev {
-                        Some(p) => {
-                            ienv.insert(iname.clone(), p);
-                        }
-                        None => {
-                            ienv.remove(iname);
-                        }
-                    }
-                    match op {
-                        RedOp::Sum => acc += x,
-                        RedOp::Max => acc = acc.max(x),
-                    }
-                    v += dim.step;
-                }
-                acc
-            }
-        })
-    }
-
-    fn run_nodes(
-        &mut self,
-        nodes: &[Node],
-        ienv: &mut BTreeMap<String, i64>,
-    ) -> Result<(), String> {
-        for node in nodes {
-            match node {
-                Node::Barrier => {}
-                Node::Run(id) => {
-                    let insn = self.kernel.insns[*id].clone();
-                    // lanes not listed in `within` still execute the
-                    // instruction redundantly on real hardware; values are
-                    // identical, so executing all lanes is equivalent.
-                    for (lane, &(v0, v1)) in self.lanes.clone().iter().enumerate() {
-                        if let Some(n0) = &self.l0_name {
-                            ienv.insert(n0.clone(), v0);
-                        }
-                        if let Some(n1) = &self.l1_name {
-                            ienv.insert(n1.clone(), v1);
-                        }
-                        let value = self.eval(&insn.rhs, lane, ienv)?;
-                        self.write(&insn.lhs, lane, ienv, value, insn.is_update)?;
-                    }
-                }
-                Node::Loop(name, body) => {
-                    let dim = self
-                        .kernel
-                        .domain
-                        .dim(name)
-                        .ok_or_else(|| format!("unknown loop iname '{name}'"))?;
-                    let lo = dim.lo.eval(self.env)?;
-                    let hi = dim.hi.eval(self.env)?;
-                    let mut v = lo;
-                    while v < hi {
-                        ienv.insert(name.clone(), v);
-                        self.run_nodes(body, ienv)?;
-                        v += dim.step;
-                    }
-                    ienv.remove(name);
-                }
-            }
-        }
-        Ok(())
-    }
-}
-
-/// Execute a kernel, returning final global-array storage. Inputs are
-/// seeded with [`seed_value`]; outputs (and local/private scratch) start
-/// at zero.
-pub fn execute(kernel: &Kernel, env: &BTreeMap<String, i64>) -> Result<Storage, String> {
-    kernel.validate()?;
+fn compile(kernel: &Kernel, env: &Env) -> Result<Compiled, String> {
     let sched = schedule(kernel)?;
-    let tree = build_tree(&sched);
 
-    // allocate arrays
-    let mut extents = BTreeMap::new();
-    let mut strides = BTreeMap::new();
-    let mut global = BTreeMap::new();
-    for arr in &kernel.arrays {
-        let ext = arr.extents_at(env)?;
-        let total: i64 = ext.iter().product::<i64>().max(0);
-        let st: Vec<i64> = arr
+    // arrays: dense indices in declaration order
+    let mut index: BTreeMap<Sym, usize> = BTreeMap::new();
+    let mut arrays = Vec::with_capacity(kernel.arrays.len());
+    for (i, arr) in kernel.arrays.iter().enumerate() {
+        index.insert(arr.name, i);
+        let extents = arr.extents_at(env)?;
+        let total: i64 = extents.iter().product::<i64>().max(0);
+        let strides: Vec<i64> = arr
             .elem_strides()
             .iter()
             .map(|q| q.eval(env).map(|x| x as i64))
             .collect::<Result<_, _>>()?;
-        if arr.space == MemSpace::Global {
-            let mut data = vec![0.0; total as usize];
-            if !arr.is_output {
-                for (i, d) in data.iter_mut().enumerate() {
-                    *d = seed_value(&arr.name, i);
-                }
-            }
-            global.insert(arr.name.clone(), data);
-        }
-        extents.insert(arr.name.clone(), ext);
-        strides.insert(arr.name.clone(), st);
+        arrays.push(ArrInfo {
+            name: arr.name,
+            space: arr.space,
+            extents,
+            strides,
+            total: total as usize,
+            is_output: arr.is_output,
+        });
     }
+
+    let insns = kernel
+        .insns
+        .iter()
+        .map(|insn| {
+            Ok(CInsn {
+                lhs: compile_access(&insn.lhs, &index)?,
+                rhs: compile_expr(kernel, env, &index, &insn.rhs)?,
+                is_update: insn.is_update,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+
+    let tree = build_tree(kernel, env, &sched)?;
 
     // grid setup
     let locals = kernel.local_inames();
     let groups_map = kernel.group_inames();
-    let l0 = locals.get(&0).cloned();
-    let l1 = locals.get(&1).cloned();
-    let l0_extent = match &l0 {
-        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
-        None => 1,
+    let l0 = locals.get(&0).copied();
+    let l1 = locals.get(&1).copied();
+    let trip = |name: Option<Sym>| -> Result<i64, String> {
+        match name {
+            Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env),
+            None => Ok(1),
+        }
     };
-    let l1_extent = match &l1 {
-        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
-        None => 1,
-    };
+    let l0_extent = trip(l0)?;
+    let l1_extent = trip(l1)?;
     let mut lanes = Vec::with_capacity((l0_extent * l1_extent) as usize);
     for v1 in 0..l1_extent {
         for v0 in 0..l0_extent {
             lanes.push((v0, v1));
         }
     }
+    let g0 = groups_map.get(&0).copied();
+    let g1 = groups_map.get(&1).copied();
+    let g0_extent = trip(g0)?;
+    let g1_extent = trip(g1)?;
 
-    let mut machine = Machine {
-        kernel,
-        env,
-        extents,
-        strides,
-        global,
-        local: BTreeMap::new(),
-        private: BTreeMap::new(),
+    Ok(Compiled {
+        kernel_name: kernel.name.clone(),
+        arrays,
+        insns,
+        tree,
         lanes,
-        l0_name: l0,
-        l1_name: l1,
-    };
+        l0,
+        l1,
+        g0,
+        g1,
+        g0_extent,
+        g1_extent,
+    })
+}
 
-    // iterate groups
-    let g0 = groups_map.get(&0).cloned();
-    let g1 = groups_map.get(&1).cloned();
-    let g0_extent = match &g0 {
-        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
-        None => 1,
-    };
-    let g1_extent = match &g1 {
-        Some(n) => kernel.domain.dim(n).unwrap().trip_count_at(env)?,
-        None => 1,
-    };
+#[inline]
+fn flat_index(c: &Compiled, acc: &CAccess, ienv: &Env) -> Result<usize, String> {
+    let info = &c.arrays[acc.array];
+    let mut flat: i64 = 0;
+    for ((tape, &st), &ext) in acc.idx.iter().zip(&info.strides).zip(&info.extents) {
+        let v = tape.eval(ienv)?;
+        if v < 0 || v >= ext {
+            return Err(format!(
+                "out-of-bounds access {}[..{v}..] (extent {ext}) in kernel '{}'",
+                info.name, c.kernel_name
+            ));
+        }
+        flat += v * st;
+    }
+    Ok(flat as usize)
+}
 
-    let n_lanes = machine.lanes.len();
-    for gv1 in 0..g1_extent {
-        for gv0 in 0..g0_extent {
-            // fresh local/private storage per group
-            machine.local.clear();
-            machine.private.clear();
-            for arr in &kernel.arrays {
-                let total: i64 = machine.extents[&arr.name].iter().product();
-                match arr.space {
-                    MemSpace::Local => {
-                        machine.local.insert(arr.name.clone(), vec![0.0; total as usize]);
+fn read(
+    c: &Compiled,
+    st: &MachineState,
+    acc: &CAccess,
+    lane: usize,
+    ienv: &Env,
+) -> Result<f64, String> {
+    let flat = flat_index(c, acc, ienv)?;
+    Ok(match c.arrays[acc.array].space {
+        MemSpace::Global => st.global[acc.array][flat],
+        MemSpace::Local => st.local[acc.array][flat],
+        MemSpace::Private => st.private[acc.array][lane][flat],
+    })
+}
+
+fn write(
+    c: &Compiled,
+    st: &mut MachineState,
+    acc: &CAccess,
+    lane: usize,
+    ienv: &Env,
+    value: f64,
+    is_update: bool,
+) -> Result<(), String> {
+    let flat = flat_index(c, acc, ienv)?;
+    let slot = match c.arrays[acc.array].space {
+        MemSpace::Global => &mut st.global[acc.array][flat],
+        MemSpace::Local => &mut st.local[acc.array][flat],
+        MemSpace::Private => &mut st.private[acc.array][lane][flat],
+    };
+    if is_update {
+        *slot += value;
+    } else {
+        *slot = value;
+    }
+    Ok(())
+}
+
+fn eval(
+    c: &Compiled,
+    st: &MachineState,
+    e: &CExpr,
+    lane: usize,
+    ienv: &mut Env,
+) -> Result<f64, String> {
+    Ok(match e {
+        CExpr::Lit(x) => *x,
+        CExpr::Idx(tape) => tape.eval(ienv)? as f64,
+        CExpr::Load(a) => read(c, st, a, lane, ienv)?,
+        CExpr::Cast(dt, x) => {
+            let v = eval(c, st, x, lane, ienv)?;
+            match dt {
+                DType::F32 | DType::F32x4 => v as f32 as f64,
+                _ => v,
+            }
+        }
+        CExpr::Un(op, x) => {
+            let v = eval(c, st, x, lane, ienv)?;
+            match op {
+                UnOp::Neg => -v,
+                UnOp::Sqrt => v.sqrt(),
+                UnOp::Rsqrt => 1.0 / v.sqrt(),
+                UnOp::Exp => v.exp(),
+                UnOp::Sin => v.sin(),
+                UnOp::Cos => v.cos(),
+                UnOp::Abs => v.abs(),
+            }
+        }
+        CExpr::Bin(op, a, b) => {
+            let x = eval(c, st, a, lane, ienv)?;
+            let y = eval(c, st, b, lane, ienv)?;
+            match op {
+                BinOp::Add => x + y,
+                BinOp::Sub => x - y,
+                BinOp::Mul => x * y,
+                BinOp::Div => x / y,
+                BinOp::Pow => x.powf(y),
+                BinOp::Min => x.min(y),
+                BinOp::Max => x.max(y),
+            }
+        }
+        CExpr::Reduce { op, iname, lo, hi, step, body } => {
+            let prev = ienv.get(*iname);
+            let mut acc = match op {
+                RedOp::Sum => 0.0,
+                RedOp::Max => f64::NEG_INFINITY,
+            };
+            let mut v = *lo;
+            while v < *hi {
+                ienv.bind(*iname, v);
+                let x = eval(c, st, body, lane, ienv)?;
+                match op {
+                    RedOp::Sum => acc += x,
+                    RedOp::Max => acc = acc.max(x),
+                }
+                v += step;
+            }
+            match prev {
+                Some(p) => ienv.bind(*iname, p),
+                None => ienv.unbind(*iname),
+            }
+            acc
+        }
+    })
+}
+
+fn run_nodes(
+    c: &Compiled,
+    st: &mut MachineState,
+    nodes: &[Node],
+    ienv: &mut Env,
+) -> Result<(), String> {
+    for node in nodes {
+        match node {
+            Node::Barrier => {}
+            Node::Run(id) => {
+                let insn = &c.insns[*id];
+                // lanes not listed in `within` still execute the
+                // instruction redundantly on real hardware; values are
+                // identical, so executing all lanes is equivalent.
+                for (lane, &(v0, v1)) in c.lanes.iter().enumerate() {
+                    if let Some(n0) = c.l0 {
+                        ienv.bind(n0, v0);
                     }
-                    MemSpace::Private => {
-                        machine
-                            .private
-                            .insert(arr.name.clone(), vec![vec![0.0; total as usize]; n_lanes]);
+                    if let Some(n1) = c.l1 {
+                        ienv.bind(n1, v1);
                     }
-                    MemSpace::Global => {}
+                    let value = eval(c, st, &insn.rhs, lane, ienv)?;
+                    write(c, st, &insn.lhs, lane, ienv, value, insn.is_update)?;
                 }
             }
-            let mut ienv: BTreeMap<String, i64> = env.clone();
-            if let Some(n) = &g0 {
-                ienv.insert(n.clone(), gv0);
+            Node::Loop { iname, lo, hi, step, body } => {
+                let mut v = *lo;
+                while v < *hi {
+                    ienv.bind(*iname, v);
+                    run_nodes(c, st, body, ienv)?;
+                    v += step;
+                }
+                ienv.unbind(*iname);
             }
-            if let Some(n) = &g1 {
-                ienv.insert(n.clone(), gv1);
-            }
-            machine.run_nodes(&tree, &mut ienv)?;
         }
     }
-    Ok(Storage { arrays: machine.global })
+    Ok(())
+}
+
+/// Execute a kernel, returning final global-array storage. Inputs are
+/// seeded with [`seed_value`]; outputs (and local/private scratch) start
+/// at zero.
+pub fn execute(kernel: &Kernel, env: &Env) -> Result<Storage, String> {
+    kernel.validate()?;
+    let c = compile(kernel, env)?;
+    let n_lanes = c.lanes.len();
+
+    let mut st = MachineState {
+        global: Vec::with_capacity(c.arrays.len()),
+        local: Vec::with_capacity(c.arrays.len()),
+        private: Vec::with_capacity(c.arrays.len()),
+    };
+    for info in &c.arrays {
+        let mut global = Vec::new();
+        let mut local = Vec::new();
+        let mut private = Vec::new();
+        match info.space {
+            MemSpace::Global => {
+                let mut data = vec![0.0; info.total];
+                if !info.is_output {
+                    let name = info.name.as_str();
+                    for (i, d) in data.iter_mut().enumerate() {
+                        *d = seed_value(name, i);
+                    }
+                }
+                global = data;
+            }
+            MemSpace::Local => local = vec![0.0; info.total],
+            MemSpace::Private => private = vec![vec![0.0; info.total]; n_lanes],
+        }
+        st.global.push(global);
+        st.local.push(local);
+        st.private.push(private);
+    }
+
+    // iterate groups
+    for gv1 in 0..c.g1_extent {
+        for gv0 in 0..c.g0_extent {
+            // fresh local/private storage per group
+            for v in st.local.iter_mut() {
+                v.fill(0.0);
+            }
+            for lanes in st.private.iter_mut() {
+                for v in lanes.iter_mut() {
+                    v.fill(0.0);
+                }
+            }
+            let mut ienv = env.clone();
+            if let Some(n) = c.g0 {
+                ienv.bind(n, gv0);
+            }
+            if let Some(n) = c.g1 {
+                ienv.bind(n, gv1);
+            }
+            run_nodes(&c, &mut st, &c.tree, &mut ienv)?;
+        }
+    }
+
+    let mut arrays = BTreeMap::new();
+    for (info, data) in c.arrays.iter().zip(st.global.into_iter()) {
+        if info.space == MemSpace::Global {
+            arrays.insert(info.name.as_str().to_string(), data);
+        }
+    }
+    Ok(Storage { arrays })
 }
 
 /// `IdxTag` re-export guard: interpreting a kernel whose sequential dims
 /// carry grid tags would double-count; assert the invariant here.
 pub fn check_grid_tags(kernel: &Kernel) -> Result<(), String> {
     for d in &kernel.domain.dims {
-        if matches!(kernel.tag(&d.name), IdxTag::Group(a) | IdxTag::Local(a) if a > 1) {
+        if matches!(kernel.tag(d.name), IdxTag::Group(a) | IdxTag::Local(a) if a > 1) {
             return Err(format!("iname '{}' uses unsupported grid axis > 1", d.name));
         }
     }
@@ -397,8 +533,8 @@ pub fn check_grid_tags(kernel: &Kernel) -> Result<(), String> {
 mod tests {
     use super::*;
     use crate::lpir::builder::{gid, gid_lin_1d, KernelBuilder};
-    use crate::lpir::Layout;
-    use crate::qpoly::env;
+    use crate::lpir::{Access, Layout};
+    use crate::qpoly::{env, LinExpr};
 
     #[test]
     fn seed_value_is_deterministic_and_bounded() {

@@ -23,7 +23,7 @@ pub use interp::{execute, seed_value, Storage};
 pub use timing::{base_time, run_times, Breakdown};
 
 use crate::lpir::Kernel;
-use std::collections::BTreeMap;
+use crate::util::intern::Env;
 
 /// A simulated GPU: a profile plus a noise seed.
 #[derive(Clone, Debug)]
@@ -46,7 +46,7 @@ impl SimGpu {
     pub fn time(
         &self,
         kernel: &Kernel,
-        env: &BTreeMap<String, i64>,
+        env: &Env,
         runs: usize,
     ) -> Result<Vec<f64>, String> {
         run_times(&self.profile, kernel, env, runs, self.seed)
@@ -57,7 +57,7 @@ impl SimGpu {
     pub fn breakdown(
         &self,
         kernel: &Kernel,
-        env: &BTreeMap<String, i64>,
+        env: &Env,
     ) -> Result<Breakdown, String> {
         base_time(&self.profile, kernel, env)
     }
@@ -66,7 +66,7 @@ impl SimGpu {
     pub fn execute(
         &self,
         kernel: &Kernel,
-        env: &BTreeMap<String, i64>,
+        env: &Env,
     ) -> Result<Storage, String> {
         execute(kernel, env)
     }

@@ -19,7 +19,9 @@
 
 use super::device::DeviceProfile;
 use crate::lpir::{Insn, Kernel, MemSpace};
+use crate::qpoly::tape::LinTape;
 use crate::qpoly::LinExpr;
+use crate::util::intern::{Env, Sym};
 use std::collections::BTreeMap;
 
 /// Cost breakdown for one kernel launch (seconds unless noted).
@@ -57,21 +59,21 @@ fn warp_lines(
     idx: &[LinExpr],
     axis_strides: &[i64],
     elem_bytes: i64,
-    red: &[String],
-    env: &BTreeMap<String, i64>,
+    red: &[Sym],
+    env: &Env,
     profile: &DeviceProfile,
 ) -> Result<(f64, bool), String> {
     // inames the access ranges over: instruction inames + reduction scope
-    let mut names: Vec<String> = insn.within.clone();
+    let mut names: Vec<Sym> = insn.within.clone();
     for r in red {
         if !names.contains(r) {
-            names.push(r.clone());
+            names.push(*r);
         }
     }
     // lane axes
     let locals = kernel.local_inames();
-    let l0 = locals.get(&0);
-    let l1 = locals.get(&1);
+    let l0 = locals.get(&0).copied();
+    let l1 = locals.get(&1).copied();
     let l0_ext = match l0 {
         Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
         None => 1,
@@ -86,37 +88,39 @@ fn warp_lines(
     let mut total_lines = 0.0;
     let mut samples = 0usize;
     let mut all_broadcast = true;
-    // one reusable iname environment for the whole sampling loop
+    // one reusable slot-frame environment for the whole sampling loop,
+    // and the index expressions compiled to tapes once per access
     let mut ienv = env.clone();
+    let tapes: Vec<LinTape> = idx.iter().map(LinTape::compile).collect();
     let mut addrs: Vec<i64> = Vec::with_capacity(warp as usize);
     for (si, frac) in SAMPLE_FRACS.iter().enumerate() {
         // fix non-lane inames at a sampled position in their range
         for name in &names {
-            if Some(name) == l0 || Some(name) == l1 {
+            if Some(*name) == l0 || Some(*name) == l1 {
                 continue;
             }
-            let dim = match kernel.domain.dim(name) {
+            let dim = match kernel.domain.dim(*name) {
                 Some(d) => d,
                 None => continue,
             };
             let trip = dim.trip_count_at(env)?;
             let lo = dim.lo.eval(env)?;
             let t = ((frac * (trip - 1).max(0) as f64).floor() as i64).clamp(0, (trip - 1).max(0));
-            ienv.insert(name.clone(), lo + dim.step * t);
+            ienv.bind(*name, lo + dim.step * t);
         }
         // one warp: linear local ids [w0, w0 + warp)
         let w0 = if si % 2 == 0 { 0 } else { ((threads / warp).max(1) - 1) * warp };
         addrs.clear();
         for lid in w0..(w0 + warp) {
             if let Some(n0) = l0 {
-                ienv.insert(n0.clone(), lid % l0_ext);
+                ienv.bind(n0, lid % l0_ext);
             }
             if let Some(n1) = l1 {
-                ienv.insert(n1.clone(), (lid / l0_ext) % l1_ext.max(1));
+                ienv.bind(n1, (lid / l0_ext) % l1_ext.max(1));
             }
             let mut flat: i64 = 0;
-            for (e, &st) in idx.iter().zip(axis_strides) {
-                flat += e.eval(&ienv)? * st;
+            for (tape, &st) in tapes.iter().zip(axis_strides) {
+                flat += tape.eval(&ienv)? * st;
             }
             addrs.push(flat * elem_bytes);
         }
@@ -141,16 +145,16 @@ fn warp_lines(
 /// Analyze all global accesses of a kernel into DRAM traffic estimates.
 fn access_costs(
     kernel: &Kernel,
-    env: &BTreeMap<String, i64>,
+    env: &Env,
     profile: &DeviceProfile,
 ) -> Result<Vec<AccessCost>, String> {
     let mut costs = Vec::new();
     // per-array total requested bytes, for cache smoothing
-    let mut requested: BTreeMap<String, f64> = BTreeMap::new();
-    let mut raw: Vec<(String, f64, bool)> = Vec::new(); // (array, line-bytes, uncoalesced)
+    let mut requested: BTreeMap<Sym, f64> = BTreeMap::new();
+    let mut raw: Vec<(Sym, f64, bool)> = Vec::new(); // (array, line-bytes, uncoalesced)
     // per-array flattened accesses with group inames pinned (for the
     // per-group unique-working-set estimate)
-    let mut group_flats: BTreeMap<String, Vec<crate::stats::footprint::FlatAccess>> =
+    let mut group_flats: BTreeMap<Sym, Vec<crate::stats::footprint::FlatAccess>> =
         BTreeMap::new();
 
     let locals = kernel.local_inames();
@@ -166,7 +170,7 @@ fn access_costs(
     let warp = (profile.warp_size as i64).min(threads) as f64;
 
     for insn in &kernel.insns {
-        let mut handle = |idx: &[LinExpr], array: &str, red: &[String]| -> Result<(), String> {
+        let mut handle = |idx: &[LinExpr], array: Sym, red: &[Sym]| -> Result<(), String> {
             let arr = match kernel.array(array) {
                 Some(a) => a,
                 None => return Ok(()),
@@ -180,10 +184,10 @@ fn access_costs(
                 .map(|q| q.eval(env).map(|x| x as i64))
                 .collect::<Result<_, _>>()?;
             let elem_bytes = arr.dtype.size_bytes() as i64;
-            let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+            let mut names: Vec<Sym> = insn.within.clone();
             for r in red {
-                if !names.contains(&r.as_str()) {
-                    names.push(r);
+                if !names.contains(r) {
+                    names.push(*r);
                 }
             }
             let execs = kernel.domain.project_onto(&names).count_at(env)? as f64;
@@ -198,8 +202,8 @@ fn access_costs(
             // ideal fully-coalesced line count for this access width
             let ideal = (warp * elem_bytes as f64 / profile.line_bytes as f64).max(1.0);
             let uncoalesced = lines_per_warp > 2.5 * ideal;
-            *requested.entry(array.to_string()).or_insert(0.0) += bytes;
-            raw.push((array.to_string(), bytes, uncoalesced));
+            *requested.entry(array).or_insert(0.0) += bytes;
+            raw.push((array, bytes, uncoalesced));
             // flattened access with group inames pinned to group 0
             let mut flat =
                 crate::stats::footprint::flatten_access(kernel, idx, &axis_strides, env)?;
@@ -207,17 +211,17 @@ fn access_costs(
                 flat.coeffs.remove(&gname);
                 flat.ranges.remove(&gname);
             }
-            group_flats.entry(array.to_string()).or_default().push(flat);
+            group_flats.entry(array).or_default().push(flat);
             Ok(())
         };
-        handle(&insn.lhs.idx, &insn.lhs.array, &[])?;
+        handle(&insn.lhs.idx, insn.lhs.array, &[])?;
         if insn.is_update {
-            handle(&insn.lhs.idx, &insn.lhs.array, &[])?;
+            handle(&insn.lhs.idx, insn.lhs.array, &[])?;
         }
         let mut err: Option<String> = None;
         insn.rhs.visit_loads(&mut |a, red| {
             if err.is_none() {
-                err = handle(&a.idx, &a.array, red).err();
+                err = handle(&a.idx, a.array, red).err();
             }
         });
         if let Some(e) = err {
@@ -237,14 +241,14 @@ fn access_costs(
     let (gs0, gs1) = kernel.group_size_at(env)?;
     let concurrent = profile.concurrent_groups(gs0 * gs1) as f64;
     // per-array unique bytes one group touches
-    let mut group_unique: BTreeMap<String, f64> = BTreeMap::new();
+    let mut group_unique: BTreeMap<Sym, f64> = BTreeMap::new();
     for (array, flats) in &group_flats {
-        let arr = kernel.array(array).unwrap();
+        let arr = kernel.array(*array).unwrap();
         let cells = crate::stats::footprint::unique_cells(flats) as f64;
-        group_unique.insert(array.clone(), cells * arr.dtype.size_bytes() as f64);
+        group_unique.insert(*array, cells * arr.dtype.size_bytes() as f64);
     }
     for (array, bytes, uncoalesced) in raw {
-        let arr = kernel.array(&array).unwrap();
+        let arr = kernel.array(array).unwrap();
         let footprint: f64 = arr
             .extents_at(env)?
             .iter()
@@ -283,7 +287,7 @@ fn ripple(profile: &DeviceProfile, dram_bytes: f64) -> f64 {
 pub fn base_time(
     profile: &DeviceProfile,
     kernel: &Kernel,
-    env: &BTreeMap<String, i64>,
+    env: &Env,
 ) -> Result<Breakdown, String> {
     let (gs0, gs1) = kernel.group_size_at(env)?;
     let group_size = gs0 * gs1;
@@ -315,9 +319,9 @@ pub fn base_time(
     // serializes a warp's access gcd(s, 32)-fold; strides 0 (broadcast)
     // and 1 are conflict-free. The linear model can optionally bin local
     // loads by this stride (paper §6.2 future work; ExtractOpts).
-    let lane0 = kernel.local_inames().get(&0).cloned();
-    let conflict_factor = |arr_name: &str, idx: &[LinExpr]| -> Result<f64, String> {
-        let Some(lane) = &lane0 else { return Ok(1.0) };
+    let lane0 = kernel.local_inames().get(&0).copied();
+    let conflict_factor = |arr_name: Sym, idx: &[LinExpr]| -> Result<f64, String> {
+        let Some(lane) = lane0 else { return Ok(1.0) };
         let arr = kernel.array(arr_name).unwrap();
         let axis_strides: Vec<i64> = arr
             .elem_strides()
@@ -336,12 +340,12 @@ pub fn base_time(
     let mut local_bytes = 0.0;
     for insn in &kernel.insns {
         // stores to local
-        if let Some(arr) = kernel.array(&insn.lhs.array) {
+        if let Some(arr) = kernel.array(insn.lhs.array) {
             if arr.space == MemSpace::Local {
                 let execs = kernel.insn_domain(insn, false).count_at(env)? as f64;
                 local_bytes += execs
                     * arr.dtype.size_bytes() as f64
-                    * conflict_factor(&insn.lhs.array, &insn.lhs.idx)?;
+                    * conflict_factor(insn.lhs.array, &insn.lhs.idx)?;
             }
         }
         let mut err: Option<String> = None;
@@ -349,16 +353,15 @@ pub fn base_time(
             if err.is_some() {
                 return;
             }
-            if let Some(arr) = kernel.array(&a.array) {
+            if let Some(arr) = kernel.array(a.array) {
                 if arr.space == MemSpace::Local {
-                    let mut names: Vec<&str> =
-                        insn.within.iter().map(|s| s.as_str()).collect();
+                    let mut names: Vec<Sym> = insn.within.clone();
                     for r in red {
-                        if !names.contains(&r.as_str()) {
-                            names.push(r);
+                        if !names.contains(r) {
+                            names.push(*r);
                         }
                     }
-                    let factor = match conflict_factor(&a.array, &a.idx) {
+                    let factor = match conflict_factor(a.array, &a.idx) {
                         Ok(f) => f,
                         Err(e) => {
                             err = Some(e);
@@ -423,21 +426,25 @@ pub fn base_time(
 pub fn run_times(
     profile: &DeviceProfile,
     kernel: &Kernel,
-    env: &BTreeMap<String, i64>,
+    env: &Env,
     runs: usize,
     seed: u64,
 ) -> Result<Vec<f64>, String> {
     let base = base_time(profile, kernel, env)?;
-    // stable per-(device, kernel, env) stream
+    // stable per-(device, kernel, env) stream; bindings are hashed in
+    // name order so the stream matches the historical string-keyed maps
     let mut h: u64 = seed ^ 0x9E37_79B9_97F4_A7C1;
     for b in profile.name.bytes().chain(kernel.name.bytes()) {
         h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
     }
-    for (k, v) in env {
+    let mut pairs: Vec<(&'static str, i64)> =
+        env.iter().map(|(s, v)| (s.as_str(), v)).collect();
+    pairs.sort();
+    for (k, v) in pairs {
         for b in k.bytes() {
             h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
         }
-        h = (h ^ *v as u64).wrapping_mul(0x100_0000_01b3);
+        h = (h ^ v as u64).wrapping_mul(0x100_0000_01b3);
     }
     let mut rng = crate::util::rng::Rng::new(h);
     let mut out = Vec::with_capacity(runs);

@@ -19,6 +19,7 @@ use crate::util::executor::par_map;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+
 /// The §4.2 timing protocol.
 #[derive(Clone, Copy, Debug)]
 pub struct Protocol {
@@ -38,20 +39,31 @@ impl Default for Protocol {
 }
 
 impl Protocol {
+    /// The runs retained after the warmup discard. Degenerate input —
+    /// an empty `times` slice — is an explicit error rather than the
+    /// silent `+inf`/`NaN` the naive fold would produce; when fewer
+    /// runs than `discard` exist, the final run is retained so the
+    /// reduction always has at least one sample.
+    fn retained<'a>(&self, times: &'a [f64]) -> Result<&'a [f64], String> {
+        if times.is_empty() {
+            return Err("timing protocol: no runs to reduce".into());
+        }
+        Ok(&times[self.discard.min(times.len() - 1)..])
+    }
+
     /// Reduce raw per-run times to the reported wall time: minimum of the
     /// retained runs (§4.2; the minimum and the mean differ by <5% when
     /// times exceed the overhead — validated in `benches/protocol.rs`).
-    pub fn reduce(&self, times: &[f64]) -> f64 {
-        times[self.discard.min(times.len().saturating_sub(1))..]
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min)
+    /// Errors on empty input.
+    pub fn reduce(&self, times: &[f64]) -> Result<f64, String> {
+        Ok(self.retained(times)?.iter().cloned().fold(f64::INFINITY, f64::min))
     }
 
     /// Mean of the retained runs (for the §4.2 min-vs-mean validation).
-    pub fn reduce_mean(&self, times: &[f64]) -> f64 {
-        let kept = &times[self.discard.min(times.len().saturating_sub(1))..];
-        kept.iter().sum::<f64>() / kept.len() as f64
+    /// Errors on empty input.
+    pub fn reduce_mean(&self, times: &[f64]) -> Result<f64, String> {
+        let kept = self.retained(times)?;
+        Ok(kept.iter().sum::<f64>() / kept.len() as f64)
     }
 }
 
@@ -69,7 +81,7 @@ pub fn calibrate_overhead(gpu: &SimGpu, protocol: &Protocol) -> Result<f64, Stri
     let k = crate::kernels::measure::empty(16, 16);
     let env = crate::qpoly::env(&[("n", 256)]);
     let times = gpu.time(&k, &env, protocol.runs)?;
-    Ok(protocol.reduce(&times))
+    protocol.reduce(&times)
 }
 
 /// Extraction cache: symbolic properties are computed once per distinct
@@ -128,7 +140,7 @@ pub fn run_campaign(
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
         let times = gpu.time(&case.kernel, &case.env, protocol.runs)?;
-        let time_s = protocol.reduce(&times);
+        let time_s = protocol.reduce(&times)?;
         let props = sym[i].eval(schema, &case.env)?;
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
@@ -206,9 +218,22 @@ mod tests {
         let p = Protocol::default();
         let mut times = vec![10.0, 5.0, 1.5, 1.4]; // discarded
         times.extend(vec![1.2, 1.1, 1.3, 1.15]);
-        assert_eq!(p.reduce(&times), 1.1);
-        let mean = p.reduce_mean(&times);
+        assert_eq!(p.reduce(&times).unwrap(), 1.1);
+        let mean = p.reduce_mean(&times).unwrap();
         assert!((mean - 1.1875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn protocol_reduce_rejects_empty_and_handles_short_input() {
+        let p = Protocol::default();
+        // degenerate: no runs at all -> error, not +inf/NaN
+        assert!(p.reduce(&[]).is_err());
+        assert!(p.reduce_mean(&[]).is_err());
+        // fewer runs than the discard window: the last run is retained
+        assert_eq!(p.reduce(&[3.0, 2.0]).unwrap(), 2.0);
+        assert_eq!(p.reduce_mean(&[3.0, 2.0]).unwrap(), 2.0);
+        // exactly one run
+        assert_eq!(p.reduce(&[7.0]).unwrap(), 7.0);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! by the footprint analysis ([`progression`]).
 
 use crate::qpoly::{Atom, Guard, LinExpr, PwQPoly, QPoly};
-use std::collections::BTreeMap;
+use crate::util::intern::{Env, Sym};
 
 pub mod progression;
 
@@ -39,7 +39,7 @@ impl CeilDiv {
         CeilDiv { num, den }
     }
 
-    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn eval(&self, env: &Env) -> Result<i64, String> {
         let n = self.num.eval(env)?;
         Ok(div_ceil(n, self.den))
     }
@@ -67,7 +67,7 @@ pub fn div_ceil(a: i64, b: i64) -> i64 {
 /// `ceil((hi - lo)/step)` with `hi = ceil(num/den)`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Dim {
-    pub name: String,
+    pub name: Sym,
     /// inclusive lower bound (affine in parameters)
     pub lo: LinExpr,
     /// exclusive upper bound, possibly a ceil-division (tile counts)
@@ -79,19 +79,19 @@ pub struct Dim {
 impl Dim {
     /// `0 <= name < hi`, step 1.
     pub fn simple(name: &str, hi: LinExpr) -> Dim {
-        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step: 1 }
+        Dim { name: Sym::intern(name), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step: 1 }
     }
 
     /// `0 <= name < ceil(num/den)`, step 1 — tile loops.
     pub fn tiles(name: &str, num: LinExpr, den: i64) -> Dim {
         assert!(den >= 1);
-        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::new(num, den), step: 1 }
+        Dim { name: Sym::intern(name), lo: LinExpr::constant(0), hi: CeilDiv::new(num, den), step: 1 }
     }
 
     /// `0 <= name < hi` visiting every `step`-th point — strided loops.
     pub fn strided(name: &str, hi: LinExpr, step: i64) -> Dim {
         assert!(step >= 1);
-        Dim { name: name.into(), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step }
+        Dim { name: Sym::intern(name), lo: LinExpr::constant(0), hi: CeilDiv::affine(hi), step }
     }
 
     /// Symbolic trip count.
@@ -143,7 +143,7 @@ impl Dim {
     }
 
     /// Concrete trip count.
-    pub fn trip_count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn trip_count_at(&self, env: &Env) -> Result<i64, String> {
         let hi = self.hi.eval(env)?;
         let lo = self.lo.eval(env)?;
         Ok((div_ceil(hi - lo, self.step)).max(0))
@@ -164,15 +164,16 @@ impl BoxDomain {
         BoxDomain { dims }
     }
 
-    pub fn dim(&self, name: &str) -> Option<&Dim> {
-        self.dims.iter().find(|d| d.name == name)
+    pub fn dim<S: Into<Sym>>(&self, name: S) -> Option<&Dim> {
+        let sym = name.into();
+        self.dims.iter().find(|d| d.name == sym)
     }
 
     /// Project onto the named dimensions (drop the rest). Valid because
     /// dims are independent.
-    pub fn project_onto(&self, names: &[&str]) -> BoxDomain {
+    pub fn project_onto(&self, names: &[Sym]) -> BoxDomain {
         BoxDomain {
-            dims: self.dims.iter().filter(|d| names.contains(&d.name.as_str())).cloned().collect(),
+            dims: self.dims.iter().filter(|d| names.contains(&d.name)).cloned().collect(),
         }
     }
 
@@ -199,7 +200,7 @@ impl BoxDomain {
     }
 
     /// Concrete point count (cross-check for `count`).
-    pub fn count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn count_at(&self, env: &Env) -> Result<i64, String> {
         let mut n = 1i64;
         for d in &self.dims {
             n *= d.trip_count_at(env)?;
@@ -224,12 +225,12 @@ pub struct Conjunct {
 /// concrete binding.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Set {
-    pub dims: Vec<String>,
+    pub dims: Vec<Sym>,
     pub disjuncts: Vec<Conjunct>,
 }
 
 impl Set {
-    pub fn new(dims: Vec<String>) -> Set {
+    pub fn new(dims: Vec<Sym>) -> Set {
         Set { dims, disjuncts: vec![Conjunct::default()] }
     }
 
@@ -255,14 +256,14 @@ impl Set {
         &self,
         conj: &Conjunct,
         i: usize,
-        fixed: &BTreeMap<String, i64>,
+        fixed: &Env,
     ) -> Result<Option<(i64, i64)>, String> {
-        let name = &self.dims[i];
-        let later: Vec<&String> = self.dims[i + 1..].iter().collect();
+        let name = self.dims[i];
+        let later = &self.dims[i + 1..];
         let (mut lo, mut hi) = (i64::MIN / 4, i64::MAX / 4);
         let mut bounded = false;
         for c in &conj.constraints {
-            if later.iter().any(|d| c.coeff(d) != 0) {
+            if later.iter().any(|d| c.coeff(*d) != 0) {
                 continue;
             }
             let k = c.coeff(name);
@@ -271,7 +272,7 @@ impl Set {
             }
             // Evaluate the rest of the constraint with fixed values.
             let mut rest = c.clone();
-            rest.terms.remove(name);
+            rest.terms.remove(&name);
             let r = rest.eval(fixed)?;
             if k > 0 {
                 // k*v + r >= 0  ->  v >= ceil(-r/k)
@@ -291,7 +292,7 @@ impl Set {
         Ok(Some((lo, hi)))
     }
 
-    fn conj_holds(conj: &Conjunct, env: &BTreeMap<String, i64>) -> Result<bool, String> {
+    fn conj_holds(conj: &Conjunct, env: &Env) -> Result<bool, String> {
         for c in &conj.constraints {
             if c.eval(env)? < 0 {
                 return Ok(false);
@@ -305,12 +306,17 @@ impl Set {
         &self,
         conj: &Conjunct,
         i: usize,
-        fixed: &mut BTreeMap<String, i64>,
+        fixed: &mut Env,
         out: &mut Vec<Vec<i64>>,
     ) -> Result<(), String> {
         if i == self.dims.len() {
             if Self::conj_holds(conj, fixed)? {
-                out.push(self.dims.iter().map(|d| fixed[d]).collect());
+                out.push(
+                    self.dims
+                        .iter()
+                        .map(|d| fixed.get(*d).expect("enumerated dim is bound"))
+                        .collect(),
+                );
             }
             return Ok(());
         }
@@ -318,16 +324,16 @@ impl Set {
             return Ok(());
         };
         for v in lo..=hi {
-            fixed.insert(self.dims[i].clone(), v);
+            fixed.bind(self.dims[i], v);
             self.enumerate_conj(conj, i + 1, fixed, out)?;
         }
-        fixed.remove(&self.dims[i]);
+        fixed.unbind(self.dims[i]);
         Ok(())
     }
 
     /// Count points at a concrete parameter binding. Handles overlapping
     /// disjuncts by deduplicating enumerated points.
-    pub fn count_at(&self, params: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn count_at(&self, params: &Env) -> Result<i64, String> {
         let mut all: Vec<Vec<i64>> = Vec::new();
         for conj in &self.disjuncts {
             let mut fixed = params.clone();
@@ -345,23 +351,25 @@ impl Set {
 /// strided dim `v in {0, s, 2s, ...} ∩ [0, hi)` is represented by dim `t`
 /// with `v = s*t`, so the Set uses the *trip space*.
 pub fn box_to_trip_set(b: &BoxDomain) -> Set {
-    let mut s = Set::new(b.dims.iter().map(|d| format!("t_{}", d.name)).collect());
+    let mut s = Set::new(
+        b.dims.iter().map(|d| Sym::intern(&format!("t_{}", d.name))).collect(),
+    );
     for d in &b.dims {
-        let t = format!("t_{}", d.name);
+        let t = Sym::intern(&format!("t_{}", d.name));
         // t >= 0
-        s = s.constrain(LinExpr::var(&t));
+        s = s.constrain(LinExpr::scaled_var(t.as_str(), 1));
         // lo + step*t < hi  ->  hi_num - den*(lo + step*t) - 1 >= 0
         // (for den = 1 this is hi - lo - step*t - 1 >= 0; exact for den>=1
         //  because t < ceil(num/den) <=> den*t < num  when lo = 0 and
         //  step = 1; for general lo/step we require den == 1.)
         if d.hi.den == 1 {
             let mut e = d.hi.num.sub(&d.lo).add(&LinExpr::constant(-1));
-            e.add_term(&t, -d.step);
+            e.add_term(t, -d.step);
             s = s.constrain(e);
         } else {
             assert!(d.lo.is_constant() && d.lo.c == 0 && d.step == 1);
             let mut e = d.hi.num.clone();
-            e.add_term(&t, -d.hi.den);
+            e.add_term(t, -d.hi.den);
             // den*t < num  <=>  num - den*t - 1 >= 0
             s = s.constrain(e.add(&LinExpr::constant(-1)));
         }
@@ -413,7 +421,7 @@ mod tests {
             Dim::simple("j", LinExpr::var("m")),
             Dim::simple("k", LinExpr::var("l")),
         ]);
-        let p = b.project_onto(&["i", "k"]);
+        let p = b.project_onto(&["i".into(), "k".into()]);
         assert_eq!(p.dims.len(), 2);
         assert_eq!(p.count().eval(&env(&[("n", 3), ("l", 5)])).unwrap(), 15.0);
     }

@@ -19,13 +19,13 @@ pub mod measure;
 pub mod testks;
 
 use crate::lpir::Kernel;
-use std::collections::BTreeMap;
+use crate::util::intern::Env;
 
 /// A concrete benchmarkable case: kernel + parameter binding.
 #[derive(Clone, Debug)]
 pub struct KernelCase {
     pub kernel: Kernel,
-    pub env: BTreeMap<String, i64>,
+    pub env: Env,
     /// e.g. `mm_square/p=9/t=1/g=16x16`
     pub label: String,
     /// work-group shape used to build the kernel

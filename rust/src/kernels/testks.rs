@@ -106,7 +106,7 @@ pub fn skinny_mm(gx: i64, gy: i64) -> Kernel {
 }
 
 /// Parameter binding for the skinny shape at base size `n`.
-pub fn skinny_env(n: i64, gx: i64, gy: i64) -> std::collections::BTreeMap<String, i64> {
+pub fn skinny_env(n: i64, gx: i64, gy: i64) -> crate::util::intern::Env {
     let n_ = snap(n, gy);
     let m_ = snap(8 * n, gx);
     let l_ = snap(n, gx);

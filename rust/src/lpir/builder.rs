@@ -9,6 +9,7 @@ use super::expr::{Access, DType, Expr};
 use super::{ArrayDecl, IdxTag, Insn, Kernel, Layout, MemSpace};
 use crate::isl::{BoxDomain, Dim};
 use crate::qpoly::LinExpr;
+use crate::util::intern::Sym;
 use std::collections::BTreeMap;
 
 /// Global-index expression `lsize * g<axis> + l<axis>`.
@@ -24,9 +25,9 @@ pub fn gid_lin_1d(lsize: i64) -> LinExpr {
 /// Builder for [`Kernel`].
 pub struct KernelBuilder {
     name: String,
-    params: Vec<String>,
+    params: Vec<Sym>,
     dims: Vec<Dim>,
-    tags: BTreeMap<String, IdxTag>,
+    tags: BTreeMap<Sym, IdxTag>,
     arrays: Vec<ArrayDecl>,
     insns: Vec<Insn>,
 }
@@ -35,7 +36,7 @@ impl KernelBuilder {
     pub fn new(name: &str, params: &[&str]) -> KernelBuilder {
         KernelBuilder {
             name: name.into(),
-            params: params.iter().map(|s| s.to_string()).collect(),
+            params: params.iter().map(|s| Sym::intern(s)).collect(),
             dims: Vec::new(),
             tags: BTreeMap::new(),
             arrays: Vec::new(),
@@ -184,7 +185,7 @@ impl KernelBuilder {
             id,
             lhs,
             rhs,
-            within: within.iter().map(|s| s.to_string()).collect(),
+            within: within.iter().map(|s| Sym::intern(s)).collect(),
             deps: deps.to_vec(),
             is_update: false,
         });
@@ -204,7 +205,7 @@ impl KernelBuilder {
             id,
             lhs,
             rhs,
-            within: within.iter().map(|s| s.to_string()).collect(),
+            within: within.iter().map(|s| Sym::intern(s)).collect(),
             deps: deps.to_vec(),
             is_update: true,
         });

@@ -6,6 +6,7 @@
 //! ([`LinExpr`]) so the polyhedral analyses stay exact.
 
 use crate::qpoly::LinExpr;
+use crate::util::intern::Sym;
 use std::fmt;
 
 /// Scalar element types. The paper's model classifies operations and
@@ -136,13 +137,13 @@ pub enum RedOp {
 /// An array access with affine index expressions (over inames + params).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Access {
-    pub array: String,
+    pub array: Sym,
     pub idx: Vec<LinExpr>,
 }
 
 impl Access {
     pub fn new(array: &str, idx: Vec<LinExpr>) -> Access {
-        Access { array: array.into(), idx }
+        Access { array: Sym::intern(array), idx }
     }
 }
 
@@ -175,7 +176,7 @@ pub enum Expr {
     Cast(DType, Box<Expr>),
     /// `reduce(op, iname, body)` — body evaluated over the reduction
     /// iname's domain slice
-    Reduce(RedOp, String, Box<Expr>),
+    Reduce(RedOp, Sym, Box<Expr>),
 }
 
 impl Expr {
@@ -212,7 +213,7 @@ impl Expr {
     }
 
     pub fn sum(iname: &str, body: Expr) -> Expr {
-        Expr::Reduce(RedOp::Sum, iname.into(), Box::new(body))
+        Expr::Reduce(RedOp::Sum, Sym::intern(iname), Box::new(body))
     }
 
     pub fn cast(dtype: DType, e: Expr) -> Expr {
@@ -220,11 +221,11 @@ impl Expr {
     }
 
     /// Visit every load access, with the set of enclosing reduction inames.
-    pub fn visit_loads<'a>(&'a self, f: &mut impl FnMut(&'a Access, &[String])) {
+    pub fn visit_loads<'a>(&'a self, f: &mut impl FnMut(&'a Access, &[Sym])) {
         fn go<'a>(
             e: &'a Expr,
-            red: &mut Vec<String>,
-            f: &mut impl FnMut(&'a Access, &[String]),
+            red: &mut Vec<Sym>,
+            f: &mut impl FnMut(&'a Access, &[Sym]),
         ) {
             match e {
                 Expr::Lit(_) | Expr::Idx(_) => {}
@@ -235,7 +236,7 @@ impl Expr {
                     go(b, red, f);
                 }
                 Expr::Reduce(_, iname, body) => {
-                    red.push(iname.clone());
+                    red.push(*iname);
                     go(body, red, f);
                     red.pop();
                 }
@@ -245,9 +246,9 @@ impl Expr {
     }
 
     /// Reduction inames used anywhere in this expression.
-    pub fn reduction_inames(&self) -> Vec<String> {
+    pub fn reduction_inames(&self) -> Vec<Sym> {
         let mut out = Vec::new();
-        fn go(e: &Expr, out: &mut Vec<String>) {
+        fn go(e: &Expr, out: &mut Vec<Sym>) {
             match e {
                 Expr::Un(_, x) | Expr::Cast(_, x) => go(x, out),
                 Expr::Bin(_, a, b) => {
@@ -256,7 +257,7 @@ impl Expr {
                 }
                 Expr::Reduce(_, iname, body) => {
                     if !out.contains(iname) {
-                        out.push(iname.clone());
+                        out.push(*iname);
                     }
                     go(body, out);
                 }
@@ -317,11 +318,11 @@ mod tests {
             Expr::load("c", vec![LinExpr::var("i")]),
         );
         let mut seen = Vec::new();
-        e.visit_loads(&mut |a, red| seen.push((a.array.clone(), red.to_vec())));
+        e.visit_loads(&mut |a, red| seen.push((a.array, red.to_vec())));
         assert_eq!(seen.len(), 3);
-        assert_eq!(seen[0], ("a".into(), vec!["k".to_string()]));
-        assert_eq!(seen[1], ("b".into(), vec!["k".to_string()]));
-        assert_eq!(seen[2], ("c".into(), vec![]));
-        assert_eq!(e.reduction_inames(), vec!["k".to_string()]);
+        assert_eq!(seen[0], (Sym::intern("a"), vec![Sym::intern("k")]));
+        assert_eq!(seen[1], (Sym::intern("b"), vec![Sym::intern("k")]));
+        assert_eq!(seen[2], (Sym::intern("c"), vec![]));
+        assert_eq!(e.reduction_inames(), vec![Sym::intern("k")]);
     }
 }

@@ -21,6 +21,7 @@ pub use expr::{Access, BinOp, DType, Expr, OpKind, RedOp, UnOp};
 
 use crate::isl::BoxDomain;
 use crate::qpoly::LinExpr;
+use crate::util::intern::{Env, Sym};
 use std::collections::BTreeMap;
 
 /// How an iname maps onto the execution grid.
@@ -58,7 +59,7 @@ pub enum Layout {
 /// An array declaration (kernel argument or temporary).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArrayDecl {
-    pub name: String,
+    pub name: Sym,
     pub dtype: DType,
     /// per-axis extents, affine in the kernel parameters
     pub shape: Vec<LinExpr>,
@@ -91,7 +92,7 @@ impl ArrayDecl {
     }
 
     /// Concrete extents at a parameter binding.
-    pub fn extents_at(&self, env: &BTreeMap<String, i64>) -> Result<Vec<i64>, String> {
+    pub fn extents_at(&self, env: &Env) -> Result<Vec<i64>, String> {
         self.shape.iter().map(|e| e.eval(env)).collect()
     }
 }
@@ -105,7 +106,7 @@ pub struct Insn {
     /// inames the instruction is nested within (its execution domain is
     /// the projection of the kernel domain onto these); reduction inames
     /// inside `rhs` are *not* listed here
-    pub within: Vec<String>,
+    pub within: Vec<Sym>,
     /// instruction dependencies (must be scheduled earlier)
     pub deps: Vec<usize>,
     /// update (`lhs op= rhs`) rather than plain assignment — used for
@@ -118,39 +119,40 @@ pub struct Insn {
 pub struct Kernel {
     pub name: String,
     /// size parameters (`n`, `m`, ...)
-    pub params: Vec<String>,
+    pub params: Vec<Sym>,
     pub domain: BoxDomain,
-    pub tags: BTreeMap<String, IdxTag>,
+    pub tags: BTreeMap<Sym, IdxTag>,
     pub arrays: Vec<ArrayDecl>,
     pub insns: Vec<Insn>,
 }
 
 impl Kernel {
-    pub fn array(&self, name: &str) -> Option<&ArrayDecl> {
-        self.arrays.iter().find(|a| a.name == name)
+    pub fn array<S: Into<Sym>>(&self, name: S) -> Option<&ArrayDecl> {
+        let sym = name.into();
+        self.arrays.iter().find(|a| a.name == sym)
     }
 
-    pub fn tag(&self, iname: &str) -> IdxTag {
-        self.tags.get(iname).copied().unwrap_or(IdxTag::Seq)
+    pub fn tag<S: Into<Sym>>(&self, iname: S) -> IdxTag {
+        self.tags.get(&iname.into()).copied().unwrap_or(IdxTag::Seq)
     }
 
     /// inames tagged `Local(axis)`, keyed by axis.
-    pub fn local_inames(&self) -> BTreeMap<usize, String> {
+    pub fn local_inames(&self) -> BTreeMap<usize, Sym> {
         self.tags
             .iter()
             .filter_map(|(n, t)| match t {
-                IdxTag::Local(a) => Some((*a, n.clone())),
+                IdxTag::Local(a) => Some((*a, *n)),
                 _ => None,
             })
             .collect()
     }
 
     /// inames tagged `Group(axis)`, keyed by axis.
-    pub fn group_inames(&self) -> BTreeMap<usize, String> {
+    pub fn group_inames(&self) -> BTreeMap<usize, Sym> {
         self.tags
             .iter()
             .filter_map(|(n, t)| match t {
-                IdxTag::Group(a) => Some((*a, n.clone())),
+                IdxTag::Group(a) => Some((*a, *n)),
                 _ => None,
             })
             .collect()
@@ -158,13 +160,13 @@ impl Kernel {
 
     /// Work-group size `(local0, local1)` at a parameter binding. Axes
     /// without a local iname have extent 1.
-    pub fn group_size_at(&self, env: &BTreeMap<String, i64>) -> Result<(i64, i64), String> {
+    pub fn group_size_at(&self, env: &Env) -> Result<(i64, i64), String> {
         let locals = self.local_inames();
         let mut out = [1i64, 1];
         for (axis, iname) in locals {
             let dim = self
                 .domain
-                .dim(&iname)
+                .dim(iname)
                 .ok_or_else(|| format!("local iname '{iname}' not in domain"))?;
             out[axis.min(1)] = dim.trip_count_at(env)?;
         }
@@ -172,13 +174,13 @@ impl Kernel {
     }
 
     /// Number of work groups launched at a parameter binding.
-    pub fn group_count_at(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn group_count_at(&self, env: &Env) -> Result<i64, String> {
         let groups = self.group_inames();
         let mut n = 1i64;
         for (_, iname) in groups {
             let dim = self
                 .domain
-                .dim(&iname)
+                .dim(iname)
                 .ok_or_else(|| format!("group iname '{iname}' not in domain"))?;
             n *= dim.trip_count_at(env)?;
         }
@@ -191,7 +193,7 @@ impl Kernel {
         let mut q = QPoly::one();
         let mut guards = Vec::new();
         for (_, iname) in self.group_inames() {
-            if let Some(dim) = self.domain.dim(&iname) {
+            if let Some(dim) = self.domain.dim(iname) {
                 q = q.mul(&dim.trip_count());
                 let g = dim.nonempty_guard();
                 if !g.0.is_constant() {
@@ -207,11 +209,10 @@ impl Kernel {
     /// (Algorithm 1 of the paper takes the projection onto the "relevant
     /// set of loop indices").
     pub fn insn_domain(&self, insn: &Insn, include_reductions: bool) -> BoxDomain {
-        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
-        let red = insn.rhs.reduction_inames();
+        let mut names: Vec<Sym> = insn.within.clone();
         if include_reductions {
-            for r in &red {
-                if !names.contains(&r.as_str()) {
+            for r in insn.rhs.reduction_inames() {
+                if !names.contains(&r) {
                     names.push(r);
                 }
             }
@@ -226,7 +227,7 @@ impl Kernel {
         let ids: Vec<usize> = self.insns.iter().map(|i| i.id).collect();
         for insn in &self.insns {
             for w in &insn.within {
-                if self.domain.dim(w).is_none() {
+                if self.domain.dim(*w).is_none() {
                     return Err(format!(
                         "insn {} references unknown iname '{w}'",
                         insn.id
@@ -240,7 +241,7 @@ impl Kernel {
             }
             let check_access = |a: &Access| -> Result<(), String> {
                 let arr = self
-                    .array(&a.array)
+                    .array(a.array)
                     .ok_or_else(|| format!("unknown array '{}'", a.array))?;
                 if arr.shape.len() != a.idx.len() {
                     return Err(format!(
@@ -263,7 +264,7 @@ impl Kernel {
                 return Err(e);
             }
             for r in insn.rhs.reduction_inames() {
-                if self.domain.dim(&r).is_none() {
+                if self.domain.dim(r).is_none() {
                     return Err(format!(
                         "insn {} reduces over unknown iname '{r}'",
                         insn.id
@@ -300,7 +301,7 @@ mod tests {
     #[test]
     fn double_kernel_validates() {
         let k = double_kernel();
-        assert_eq!(k.params, vec!["n".to_string()]);
+        assert_eq!(k.params, vec![crate::util::intern::Sym::intern("n")]);
         assert!(k.validate().is_ok());
     }
 

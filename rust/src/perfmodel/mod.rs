@@ -24,7 +24,6 @@
 use crate::stats::{KernelProps, Schema};
 use crate::util::json::Json;
 use crate::util::linalg::{cholesky_solve, dot, qr_solve, Mat};
-use std::collections::BTreeMap;
 
 /// One measured case: a kernel's dense property vector + wall time.
 #[derive(Clone, Debug)]
@@ -167,7 +166,7 @@ impl Model {
         &self,
         schema: &Schema,
         props: &KernelProps,
-        env: &BTreeMap<String, i64>,
+        env: &crate::util::intern::Env,
     ) -> Result<f64, String> {
         Ok(self.predict(&props.eval(schema, env)?))
     }

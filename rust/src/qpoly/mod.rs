@@ -12,15 +12,25 @@
 //! parameter binding, which is all the model needs: property expressions
 //! `p_i(n)` are built symbolically once and cheaply re-evaluated for
 //! changed `n` (the paper's "fully parametric" claim).
+//!
+//! Identifiers are interned [`Sym`]s and bindings are dense [`Env`]
+//! slot frames, so evaluation never touches string keys. For the
+//! hottest re-evaluation paths, [`tape`] compiles expressions into flat
+//! postfix tapes over slot indices ([`tape::LinTape`] /
+//! [`tape::PwTape`]).
 
 use std::collections::BTreeMap;
 use std::fmt;
 
+pub mod tape;
+
+pub use crate::util::intern::{Env, Sym};
+
 /// Affine integer expression: `Σ c_v · v + c0` over named parameters.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct LinExpr {
-    /// parameter name -> coefficient (zero coefficients are not stored)
-    pub terms: BTreeMap<String, i64>,
+    /// parameter symbol -> coefficient (zero coefficients are not stored)
+    pub terms: BTreeMap<Sym, i64>,
     /// constant term
     pub c: i64,
 }
@@ -32,7 +42,7 @@ impl LinExpr {
 
     pub fn var(name: &str) -> LinExpr {
         let mut terms = BTreeMap::new();
-        terms.insert(name.to_string(), 1);
+        terms.insert(Sym::intern(name), 1);
         LinExpr { terms, c: 0 }
     }
 
@@ -42,14 +52,15 @@ impl LinExpr {
         e
     }
 
-    pub fn add_term(&mut self, name: &str, k: i64) {
+    pub fn add_term<S: Into<Sym>>(&mut self, name: S, k: i64) {
         if k == 0 {
             return;
         }
-        let entry = self.terms.entry(name.to_string()).or_insert(0);
+        let sym = name.into();
+        let entry = self.terms.entry(sym).or_insert(0);
         *entry += k;
         if *entry == 0 {
-            self.terms.remove(name);
+            self.terms.remove(&sym);
         }
     }
 
@@ -57,7 +68,7 @@ impl LinExpr {
         let mut out = self.clone();
         out.c += other.c;
         for (v, k) in &other.terms {
-            out.add_term(v, *k);
+            out.add_term(*v, *k);
         }
         out
     }
@@ -68,7 +79,7 @@ impl LinExpr {
 
     pub fn neg(&self) -> LinExpr {
         LinExpr {
-            terms: self.terms.iter().map(|(v, k)| (v.clone(), -k)).collect(),
+            terms: self.terms.iter().map(|(v, k)| (*v, -k)).collect(),
             c: -self.c,
         }
     }
@@ -78,7 +89,7 @@ impl LinExpr {
             return LinExpr::constant(0);
         }
         LinExpr {
-            terms: self.terms.iter().map(|(v, c)| (v.clone(), c * k)).collect(),
+            terms: self.terms.iter().map(|(v, c)| (*v, c * k)).collect(),
             c: self.c * k,
         }
     }
@@ -88,28 +99,31 @@ impl LinExpr {
     }
 
     /// Coefficient of a parameter (0 if absent).
-    pub fn coeff(&self, name: &str) -> i64 {
-        self.terms.get(name).copied().unwrap_or(0)
+    pub fn coeff<S: Into<Sym>>(&self, name: S) -> i64 {
+        self.terms.get(&name.into()).copied().unwrap_or(0)
     }
 
     /// Evaluate with a parameter binding; errors on unbound parameters.
-    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn eval(&self, env: &Env) -> Result<i64, String> {
         let mut acc = self.c;
         for (v, k) in &self.terms {
-            let val = env.get(v).ok_or_else(|| format!("unbound parameter '{v}'"))?;
+            let val = env
+                .get(*v)
+                .ok_or_else(|| format!("unbound parameter '{v}'"))?;
             acc += k * val;
         }
         Ok(acc)
     }
 
     /// Substitute a parameter with an affine expression.
-    pub fn substitute(&self, name: &str, with: &LinExpr) -> LinExpr {
-        let k = self.coeff(name);
+    pub fn substitute<S: Into<Sym>>(&self, name: S, with: &LinExpr) -> LinExpr {
+        let sym = name.into();
+        let k = self.coeff(sym);
         if k == 0 {
             return self.clone();
         }
         let mut out = self.clone();
-        out.terms.remove(name);
+        out.terms.remove(&sym);
         out.add(&with.scale(k))
     }
 }
@@ -148,16 +162,16 @@ impl fmt::Display for LinExpr {
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Atom {
     /// a bare parameter
-    Param(String),
+    Param(Sym),
     /// `floor(num / den)`, `den > 0`
     FloorDiv(LinExpr, i64),
 }
 
 impl Atom {
-    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64, String> {
+    pub fn eval(&self, env: &Env) -> Result<i64, String> {
         match self {
             Atom::Param(p) => {
-                env.get(p).copied().ok_or_else(|| format!("unbound parameter '{p}'"))
+                env.get(*p).ok_or_else(|| format!("unbound parameter '{p}'"))
             }
             Atom::FloorDiv(num, den) => {
                 let n = num.eval(env)?;
@@ -206,7 +220,7 @@ impl QPoly {
     }
 
     pub fn param(name: &str) -> QPoly {
-        QPoly::from_atom(Atom::Param(name.to_string()))
+        QPoly::from_atom(Atom::Param(Sym::intern(name)))
     }
 
     pub fn from_atom(a: Atom) -> QPoly {
@@ -227,7 +241,7 @@ impl QPoly {
     pub fn from_lin(e: &LinExpr) -> QPoly {
         let mut q = QPoly::constant(e.c as f64);
         for (v, k) in &e.terms {
-            q = q.add(&QPoly::param(v).scale(*k as f64));
+            q = q.add(&QPoly::from_atom(Atom::Param(*v)).scale(*k as f64));
         }
         q
     }
@@ -297,7 +311,7 @@ impl QPoly {
     }
 
     /// Evaluate at a concrete parameter binding.
-    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<f64, String> {
+    pub fn eval(&self, env: &Env) -> Result<f64, String> {
         let mut acc = 0.0;
         for (m, c) in &self.terms {
             let mut term = *c;
@@ -356,7 +370,7 @@ impl fmt::Display for QPoly {
 pub struct Guard(pub LinExpr);
 
 impl Guard {
-    pub fn holds(&self, env: &BTreeMap<String, i64>) -> Result<bool, String> {
+    pub fn holds(&self, env: &Env) -> Result<bool, String> {
         Ok(self.0.eval(env)? >= 0)
     }
 }
@@ -382,7 +396,7 @@ impl PwQPoly {
         PwQPoly::from_qpoly(QPoly::constant(c))
     }
 
-    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<f64, String> {
+    pub fn eval(&self, env: &Env) -> Result<f64, String> {
         for (guards, q) in &self.pieces {
             let mut ok = true;
             for g in guards {
@@ -465,8 +479,8 @@ impl fmt::Display for PwQPoly {
 }
 
 /// Convenience: parameter environment builder.
-pub fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
-    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+pub fn env(pairs: &[(&str, i64)]) -> Env {
+    Env::from_pairs(pairs)
 }
 
 #[cfg(test)]

@@ -1,0 +1,266 @@
+//! Compiled evaluation tapes for affine expressions and (piecewise)
+//! quasi-polynomials.
+//!
+//! Symbolic property counts are built once per kernel and then
+//! re-evaluated for many parameter bindings (size sweeps, the
+//! measurement campaign, autotuning loops, prediction serving). The
+//! tree-walking evaluators in [`crate::qpoly`] are exact but chase
+//! `BTreeMap` nodes on every call; this module flattens an expression
+//! into contiguous arrays of slot-indexed operations that evaluate with
+//! a single linear pass over the tape and O(1) [`Env`] slot loads — no
+//! string comparison, no map probing, no per-eval allocation (atom
+//! scratch lives in a thread-local buffer).
+//!
+//! Compilation preserves the exact term/atom/guard ordering of the
+//! source object, so tape evaluation is bit-identical to the
+//! tree-walking path (verified by property tests in
+//! `rust/tests/properties.rs`).
+
+use super::{Atom, LinExpr, PwQPoly, QPoly};
+use crate::util::intern::{Env, Sym};
+use std::cell::RefCell;
+
+/// Compiled affine expression: `c + Σ coeff · frame[slot]`.
+#[derive(Clone, Debug, Default)]
+pub struct LinTape {
+    pub c: i64,
+    /// `(symbol slot id, coefficient)` pairs in symbol order
+    pub terms: Box<[(u32, i64)]>,
+}
+
+impl LinTape {
+    pub fn compile(e: &LinExpr) -> LinTape {
+        LinTape {
+            c: e.c,
+            terms: e.terms.iter().map(|(s, k)| (s.id(), *k)).collect(),
+        }
+    }
+
+    /// Evaluate against a slot frame; errors on unbound slots.
+    #[inline]
+    pub fn eval(&self, env: &Env) -> Result<i64, String> {
+        let mut acc = self.c;
+        for &(slot, k) in self.terms.iter() {
+            match env.get_id(slot) {
+                Some(v) => acc += k * v,
+                None => {
+                    return Err(format!(
+                        "unbound parameter '{}'",
+                        Sym::from_id(slot)
+                    ))
+                }
+            }
+        }
+        Ok(acc)
+    }
+}
+
+/// Compiled multiplicative atom.
+#[derive(Clone, Debug)]
+enum AtomTape {
+    /// bare parameter slot
+    Param(u32),
+    /// `floor(lin / den)`
+    FloorDiv(LinTape, i64),
+}
+
+impl AtomTape {
+    fn compile(a: &Atom) -> AtomTape {
+        match a {
+            Atom::Param(s) => AtomTape::Param(s.id()),
+            Atom::FloorDiv(num, den) => AtomTape::FloorDiv(LinTape::compile(num), *den),
+        }
+    }
+
+    #[inline]
+    fn eval(&self, env: &Env) -> Result<i64, String> {
+        match self {
+            AtomTape::Param(slot) => env.get_id(*slot).ok_or_else(|| {
+                format!("unbound parameter '{}'", Sym::from_id(*slot))
+            }),
+            AtomTape::FloorDiv(lin, den) => Ok(lin.eval(env)?.div_euclid(*den)),
+        }
+    }
+}
+
+/// Compiled quasi-polynomial: unique atoms are evaluated once into a
+/// scratch frame, then terms multiply slot-indexed factors.
+#[derive(Clone, Debug, Default)]
+pub struct PolyTape {
+    atoms: Box<[AtomTape]>,
+    term_coeff: Box<[f64]>,
+    /// factor-range offsets per term; `len == term_coeff.len() + 1`
+    term_off: Box<[u32]>,
+    /// `(atom index, exponent)` factor pool
+    factors: Box<[(u32, u32)]>,
+}
+
+impl PolyTape {
+    pub fn compile(q: &QPoly) -> PolyTape {
+        let mut atoms: Vec<AtomTape> = Vec::new();
+        let mut atom_index: Vec<(&Atom, u32)> = Vec::new();
+        let mut term_coeff = Vec::with_capacity(q.terms.len());
+        let mut term_off = vec![0u32];
+        let mut factors = Vec::new();
+        for (m, c) in &q.terms {
+            term_coeff.push(*c);
+            for (atom, e) in m {
+                let ai = match atom_index.iter().find(|(a, _)| *a == atom) {
+                    Some((_, i)) => *i,
+                    None => {
+                        let i = atoms.len() as u32;
+                        atoms.push(AtomTape::compile(atom));
+                        atom_index.push((atom, i));
+                        i
+                    }
+                };
+                factors.push((ai, *e));
+            }
+            term_off.push(factors.len() as u32);
+        }
+        PolyTape {
+            atoms: atoms.into(),
+            term_coeff: term_coeff.into(),
+            term_off: term_off.into(),
+            factors: factors.into(),
+        }
+    }
+
+    /// Evaluate with caller-provided atom scratch (cleared internally).
+    pub fn eval_with(&self, env: &Env, atom_vals: &mut Vec<f64>) -> Result<f64, String> {
+        atom_vals.clear();
+        for a in self.atoms.iter() {
+            atom_vals.push(a.eval(env)? as f64);
+        }
+        let mut acc = 0.0;
+        for t in 0..self.term_coeff.len() {
+            let mut term = self.term_coeff[t];
+            let lo = self.term_off[t] as usize;
+            let hi = self.term_off[t + 1] as usize;
+            for &(ai, e) in &self.factors[lo..hi] {
+                let v = atom_vals[ai as usize];
+                term *= if e == 1 { v } else { v.powi(e as i32) };
+            }
+            acc += term;
+        }
+        Ok(acc)
+    }
+}
+
+/// Compiled piecewise quasi-polynomial: guards as [`LinTape`]s, pieces
+/// evaluated first-match, 0 when no guard set holds.
+#[derive(Clone, Debug, Default)]
+pub struct PwTape {
+    pieces: Box<[(Box<[LinTape]>, PolyTape)]>,
+}
+
+thread_local! {
+    static ATOM_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+impl PwTape {
+    pub fn compile(p: &PwQPoly) -> PwTape {
+        PwTape {
+            pieces: p
+                .pieces
+                .iter()
+                .map(|(guards, q)| {
+                    (
+                        guards
+                            .iter()
+                            .map(|g| LinTape::compile(&g.0))
+                            .collect::<Box<[LinTape]>>(),
+                        PolyTape::compile(q),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// Allocation-free evaluation (scratch is a thread-local buffer).
+    pub fn eval(&self, env: &Env) -> Result<f64, String> {
+        ATOM_SCRATCH.with(|scratch| {
+            let mut buf = scratch.borrow_mut();
+            self.eval_with(env, &mut buf)
+        })
+    }
+
+    /// Evaluate with caller-provided scratch (for callers that manage
+    /// their own buffers).
+    pub fn eval_with(&self, env: &Env, atom_vals: &mut Vec<f64>) -> Result<f64, String> {
+        'piece: for (guards, poly) in self.pieces.iter() {
+            for g in guards.iter() {
+                if g.eval(env)? < 0 {
+                    continue 'piece;
+                }
+            }
+            return poly.eval_with(env, atom_vals);
+        }
+        Ok(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qpoly::{env, Guard};
+
+    #[test]
+    fn lintape_matches_linexpr() {
+        let e = LinExpr::var("n").scale(3).add(&LinExpr::var("m").scale(-2)).add(&LinExpr::constant(7));
+        let t = LinTape::compile(&e);
+        let b = env(&[("n", 11), ("m", 5)]);
+        assert_eq!(t.eval(&b).unwrap(), e.eval(&b).unwrap());
+        assert!(t.eval(&env(&[("n", 1)])).is_err());
+    }
+
+    #[test]
+    fn polytape_matches_qpoly() {
+        // (n*m + 2n + 1) * floor(n/2)
+        let p = QPoly::param("n")
+            .mul(&QPoly::param("m"))
+            .add(&QPoly::param("n").scale(2.0))
+            .add(&QPoly::one())
+            .mul(&QPoly::from_atom(Atom::FloorDiv(LinExpr::var("n"), 2)));
+        let t = PolyTape::compile(&p);
+        let mut scratch = Vec::new();
+        for (n, m) in [(9i64, 4i64), (0, 0), (100, 3), (7, 7)] {
+            let b = env(&[("n", n), ("m", m)]);
+            assert_eq!(
+                t.eval_with(&b, &mut scratch).unwrap(),
+                p.eval(&b).unwrap(),
+                "n={n} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn pwtape_respects_guards_and_default_zero() {
+        let pw = PwQPoly {
+            pieces: vec![(
+                vec![Guard(LinExpr::var("n").sub(&LinExpr::constant(4)))],
+                QPoly::param("n").mul(&QPoly::param("n")),
+            )],
+        };
+        let t = PwTape::compile(&pw);
+        assert_eq!(t.eval(&env(&[("n", 8)])).unwrap(), 64.0);
+        assert_eq!(t.eval(&env(&[("n", 2)])).unwrap(), 0.0);
+        assert!(t.eval(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn tape_reeval_over_sweep_matches() {
+        let q = QPoly::param("n")
+            .mul(&QPoly::param("n"))
+            .add(&QPoly::from_atom(Atom::FloorDiv(
+                LinExpr::var("n").add(&LinExpr::constant(15)),
+                16,
+            )));
+        let pw = PwQPoly::from_qpoly(q.clone());
+        let t = PwTape::compile(&pw);
+        for n in 0..200 {
+            let b = env(&[("n", n)]);
+            assert_eq!(t.eval(&b).unwrap(), q.eval(&b).unwrap(), "n={n}");
+        }
+    }
+}

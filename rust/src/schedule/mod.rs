@@ -19,14 +19,15 @@
 
 use crate::lpir::{IdxTag, Insn, Kernel, MemSpace};
 use crate::qpoly::{LinExpr, PwQPoly};
+use crate::util::intern::Sym;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// One element of the linearized schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SchedItem {
     /// open a sequential (or unrolled) loop over this iname
-    OpenLoop(String),
-    CloseLoop(String),
+    OpenLoop(Sym),
+    CloseLoop(Sym),
     /// execute an instruction for all lanes of the group
     RunInsn(usize),
     /// work-group barrier
@@ -45,17 +46,17 @@ impl Schedule {
     /// trip counts of its enclosing sequential loops.
     pub fn barriers_per_group(&self, kernel: &Kernel) -> PwQPoly {
         let mut total = PwQPoly::zero();
-        let mut stack: Vec<String> = Vec::new();
+        let mut stack: Vec<Sym> = Vec::new();
         for item in &self.items {
             match item {
-                SchedItem::OpenLoop(name) => stack.push(name.clone()),
+                SchedItem::OpenLoop(name) => stack.push(*name),
                 SchedItem::CloseLoop(_) => {
                     stack.pop();
                 }
                 SchedItem::Barrier => {
                     let mut q = PwQPoly::constant(1.0);
                     for iname in &stack {
-                        if let Some(dim) = kernel.domain.dim(iname) {
+                        if let Some(dim) = kernel.domain.dim(*iname) {
                             let tc = PwQPoly { pieces: vec![(Vec::new(), dim.trip_count())] };
                             q = q.mul(&tc);
                         }
@@ -75,21 +76,21 @@ impl Schedule {
 }
 
 /// Local-memory accesses of one instruction: (array, index, is_write).
-fn local_accesses(kernel: &Kernel, insn: &Insn) -> Vec<(String, Vec<LinExpr>, bool)> {
+fn local_accesses(kernel: &Kernel, insn: &Insn) -> Vec<(Sym, Vec<LinExpr>, bool)> {
     let mut out = Vec::new();
-    if let Some(arr) = kernel.array(&insn.lhs.array) {
+    if let Some(arr) = kernel.array(insn.lhs.array) {
         if arr.space == MemSpace::Local {
-            out.push((insn.lhs.array.clone(), insn.lhs.idx.clone(), true));
+            out.push((insn.lhs.array, insn.lhs.idx.clone(), true));
             // an update instruction also reads its LHS
             if insn.is_update {
-                out.push((insn.lhs.array.clone(), insn.lhs.idx.clone(), false));
+                out.push((insn.lhs.array, insn.lhs.idx.clone(), false));
             }
         }
     }
     insn.rhs.visit_loads(&mut |a, _| {
-        if let Some(arr) = kernel.array(&a.array) {
+        if let Some(arr) = kernel.array(a.array) {
             if arr.space == MemSpace::Local {
-                out.push((a.array.clone(), a.idx.clone(), false));
+                out.push((a.array, a.idx.clone(), false));
             }
         }
     });
@@ -103,9 +104,9 @@ fn local_accesses(kernel: &Kernel, insn: &Insn) -> Vec<(String, Vec<LinExpr>, bo
 #[derive(Default)]
 struct BarrierState {
     /// array -> index signatures written since last barrier
-    writes: BTreeMap<String, Vec<Vec<LinExpr>>>,
+    writes: BTreeMap<Sym, Vec<Vec<LinExpr>>>,
     /// array -> index signatures read since last barrier
-    reads: BTreeMap<String, Vec<Vec<LinExpr>>>,
+    reads: BTreeMap<Sym, Vec<Vec<LinExpr>>>,
 }
 
 impl BarrierState {
@@ -115,7 +116,7 @@ impl BarrierState {
     }
 
     /// Would executing `accesses` require a barrier first?
-    fn needs_barrier(&self, accesses: &[(String, Vec<LinExpr>, bool)]) -> bool {
+    fn needs_barrier(&self, accesses: &[(Sym, Vec<LinExpr>, bool)]) -> bool {
         for (arr, idx, is_write) in accesses {
             if *is_write {
                 // WAR: overwriting data other lanes may still be reading
@@ -142,7 +143,7 @@ impl BarrierState {
         false
     }
 
-    fn record(&mut self, accesses: Vec<(String, Vec<LinExpr>, bool)>) {
+    fn record(&mut self, accesses: Vec<(Sym, Vec<LinExpr>, bool)>) {
         for (arr, idx, is_write) in accesses {
             let slot = if is_write { &mut self.writes } else { &mut self.reads };
             let v = slot.entry(arr).or_default();
@@ -184,25 +185,25 @@ pub fn schedule(kernel: &Kernel) -> Result<Schedule, String> {
 
     // --- 2. loop nesting (stack discipline) -------------------------------
     // Required sequential loops per instruction, in domain order.
-    let seq_loops = |insn: &Insn| -> Vec<String> {
+    let seq_loops = |insn: &Insn| -> Vec<Sym> {
         kernel
             .domain
             .dims
             .iter()
             .filter(|d| {
                 insn.within.contains(&d.name)
-                    && matches!(kernel.tag(&d.name), IdxTag::Seq | IdxTag::Unroll)
+                    && matches!(kernel.tag(d.name), IdxTag::Seq | IdxTag::Unroll)
             })
-            .map(|d| d.name.clone())
+            .map(|d| d.name)
             .collect()
     };
 
     let mut items = Vec::new();
-    let mut stack: Vec<String> = Vec::new();
+    let mut stack: Vec<Sym> = Vec::new();
     let mut bstate = BarrierState::default();
     // loops whose current body contained a barrier: their close emits a
     // trailing barrier (iteration separation for local-memory reuse)
-    let mut loop_had_barrier: BTreeMap<String, bool> = BTreeMap::new();
+    let mut loop_had_barrier: BTreeMap<Sym, bool> = BTreeMap::new();
 
     for &id in &order {
         let insn = &kernel.insns[id];
@@ -223,9 +224,9 @@ pub fn schedule(kernel: &Kernel) -> Result<Schedule, String> {
         }
         // open the missing loops
         for iname in want.iter().skip(stack.len()) {
-            items.push(SchedItem::OpenLoop(iname.clone()));
-            stack.push(iname.clone());
-            loop_had_barrier.insert(iname.clone(), false);
+            items.push(SchedItem::OpenLoop(*iname));
+            stack.push(*iname);
+            loop_had_barrier.insert(*iname, false);
         }
 
         // --- 3. barrier insertion -----------------------------------------
@@ -234,7 +235,7 @@ pub fn schedule(kernel: &Kernel) -> Result<Schedule, String> {
             items.push(SchedItem::Barrier);
             bstate.clear();
             for iname in &stack {
-                loop_had_barrier.insert(iname.clone(), true);
+                loop_had_barrier.insert(*iname, true);
             }
         }
         bstate.record(accesses);

@@ -14,6 +14,7 @@
 
 use crate::lpir::Kernel;
 use crate::qpoly::LinExpr;
+use crate::util::intern::{Env, Sym};
 use std::collections::BTreeMap;
 
 /// Maximum number of enumerated iname tuples per access group.
@@ -68,11 +69,11 @@ fn analytic_unique(acc: &FlatAccess) -> Option<usize> {
 #[derive(Clone, Debug)]
 pub struct FlatAccess {
     /// coefficient of each iname in the flattened cell index
-    pub coeffs: BTreeMap<String, i64>,
+    pub coeffs: BTreeMap<Sym, i64>,
     /// constant offset of the flattened cell index
     pub offset: i64,
     /// iname -> (trip count, step) for inames appearing in `coeffs`
-    pub ranges: BTreeMap<String, (i64, i64)>,
+    pub ranges: BTreeMap<Sym, (i64, i64)>,
 }
 
 /// Result of the footprint analysis for one access group.
@@ -120,17 +121,19 @@ fn enumerate_access(acc: &FlatAccess, cells: &mut Vec<i64>) {
     // fine structure of the pattern and must be enumerated fully; large
     // coefficients (grid axes) merely translate the pattern and can be
     // truncated once the budget is exhausted.
-    let mut inames: Vec<(&String, i64)> =
-        acc.coeffs.iter().filter(|(_, &c)| c != 0).map(|(n, &c)| (n, c)).collect();
-    inames.sort_by_key(|(_, c)| c.abs());
+    let mut inames: Vec<(Sym, i64)> =
+        acc.coeffs.iter().filter(|(_, &c)| c != 0).map(|(n, &c)| (*n, c)).collect();
+    // tie-break equal-|coeff| inames by name: Sym ordering is interning
+    // order, which would make budget truncation process-history-dependent
+    inames.sort_by_key(|(n, c)| (c.abs(), n.as_str()));
 
     // Decide per-iname enumeration caps within the budget.
-    let mut caps: Vec<(String, i64, i64, i64)> = Vec::new(); // (name, coeff, cap, step)
+    let mut caps: Vec<(Sym, i64, i64, i64)> = Vec::new(); // (name, coeff, cap, step)
     let mut budget = WINDOW_BUDGET as i64;
     for (name, coeff) in inames {
-        let (trip, step) = acc.ranges.get(name).copied().unwrap_or((1, 1));
+        let (trip, step) = acc.ranges.get(&name).copied().unwrap_or((1, 1));
         let cap = trip.min(budget.max(1));
-        caps.push((name.clone(), coeff, cap, step));
+        caps.push((name, coeff, cap, step));
         budget /= cap.max(1);
         if budget < 1 {
             budget = 1;
@@ -138,7 +141,7 @@ fn enumerate_access(acc: &FlatAccess, cells: &mut Vec<i64>) {
     }
 
     // Recursive enumeration.
-    fn rec(caps: &[(String, i64, i64, i64)], base: i64, cells: &mut Vec<i64>) {
+    fn rec(caps: &[(Sym, i64, i64, i64)], base: i64, cells: &mut Vec<i64>) {
         match caps.split_first() {
             None => {
                 cells.push(base);
@@ -164,20 +167,19 @@ pub fn flatten_access(
     kernel: &Kernel,
     idx: &[LinExpr],
     axis_strides: &[i64],
-    env: &BTreeMap<String, i64>,
+    env: &Env,
 ) -> Result<FlatAccess, String> {
-    let mut coeffs: BTreeMap<String, i64> = BTreeMap::new();
+    let mut coeffs: BTreeMap<Sym, i64> = BTreeMap::new();
     let mut offset: i64 = 0;
     for (e, &stride) in idx.iter().zip(axis_strides) {
         offset += e.c * stride;
         for (name, k) in &e.terms {
-            if kernel.domain.dim(name).is_some() {
-                *coeffs.entry(name.clone()).or_insert(0) += k * stride;
+            if kernel.domain.dim(*name).is_some() {
+                *coeffs.entry(*name).or_insert(0) += k * stride;
             } else {
                 // a size parameter inside an index folds into the offset
                 let v = env
-                    .get(name)
-                    .copied()
+                    .get(*name)
                     .ok_or_else(|| format!("unbound parameter '{name}' in index"))?;
                 offset += k * v * stride;
             }
@@ -187,9 +189,9 @@ pub fn flatten_access(
     for name in coeffs.keys() {
         let dim = kernel
             .domain
-            .dim(name)
+            .dim(*name)
             .ok_or_else(|| format!("unknown iname '{name}'"))?;
-        ranges.insert(name.clone(), (dim.trip_count_at(env)?, dim.step));
+        ranges.insert(*name, (dim.trip_count_at(env)?, dim.step));
     }
     Ok(FlatAccess { coeffs, offset, ranges })
 }
@@ -200,9 +202,9 @@ mod tests {
 
     fn fa(coeffs: &[(&str, i64)], offset: i64, ranges: &[(&str, i64, i64)]) -> FlatAccess {
         FlatAccess {
-            coeffs: coeffs.iter().map(|(n, c)| (n.to_string(), *c)).collect(),
+            coeffs: coeffs.iter().map(|(n, c)| (Sym::intern(n), *c)).collect(),
             offset,
-            ranges: ranges.iter().map(|(n, t, s)| (n.to_string(), (*t, *s))).collect(),
+            ranges: ranges.iter().map(|(n, t, s)| (Sym::intern(n), (*t, *s))).collect(),
         }
     }
 
@@ -278,9 +280,9 @@ mod analytic_tests {
 
     fn fa2(coeffs: &[(&str, i64)], ranges: &[(&str, i64, i64)]) -> FlatAccess {
         FlatAccess {
-            coeffs: coeffs.iter().map(|(n, c)| (n.to_string(), *c)).collect(),
+            coeffs: coeffs.iter().map(|(n, c)| (Sym::intern(n), *c)).collect(),
             offset: 0,
-            ranges: ranges.iter().map(|(n, t, s)| (n.to_string(), (*t, *s))).collect(),
+            ranges: ranges.iter().map(|(n, t, s)| (Sym::intern(n), (*t, *s))).collect(),
         }
     }
 

@@ -17,10 +17,13 @@ pub mod ops;
 
 use crate::isl::progression::StrideClass;
 use crate::lpir::{Insn, Kernel, MemSpace, OpKind};
+use crate::qpoly::tape::PwTape;
 use crate::qpoly::PwQPoly;
 use crate::schedule::schedule;
+use crate::util::intern::{Env, Sym};
 use footprint::{flatten_access, utilization, FlatAccess};
 use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
 
 /// Memory-access direction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -162,24 +165,54 @@ pub struct ExtractOpts {
 }
 
 /// Symbolic property counts for one kernel.
+///
+/// Evaluation runs on compiled tapes ([`PwTape`]): the symbolic counts
+/// are flattened once (lazily, shared across clones) into slot-indexed
+/// postfix programs, so re-evaluating at a new parameter binding is a
+/// single allocation-free pass per property — the paper's "cheaply
+/// reevaluated for changed values of the parameter vector".
 #[derive(Clone, Debug)]
 pub struct KernelProps {
     pub kernel_name: String,
-    pub sym: BTreeMap<Prop, PwQPoly>,
+    /// symbolic counts; private because the compiled tape cache below
+    /// is derived from it once and shared across clones — mutating the
+    /// counts after compilation would silently desynchronize them
+    sym: BTreeMap<Prop, PwQPoly>,
+    /// lazily compiled evaluation tapes, shared across clones
+    tapes: Arc<OnceLock<Vec<(Prop, PwTape)>>>,
 }
 
 impl KernelProps {
+    pub fn new(kernel_name: String, sym: BTreeMap<Prop, PwQPoly>) -> KernelProps {
+        KernelProps { kernel_name, sym, tapes: Arc::new(OnceLock::new()) }
+    }
+
+    /// The symbolic property counts (read-only; construct a new
+    /// `KernelProps` to change them).
+    pub fn sym(&self) -> &BTreeMap<Prop, PwQPoly> {
+        &self.sym
+    }
+
+    fn tapes(&self) -> &[(Prop, PwTape)] {
+        self.tapes.get_or_init(|| {
+            self.sym
+                .iter()
+                .map(|(p, q)| (p.clone(), PwTape::compile(q)))
+                .collect()
+        })
+    }
+
     /// Dense property vector at a parameter binding, in schema order.
     /// `MemMin` entries are computed here (the min is not a polynomial).
     pub fn eval(
         &self,
         schema: &Schema,
-        env: &BTreeMap<String, i64>,
+        env: &Env,
     ) -> Result<Vec<f64>, String> {
         let mut v = vec![0.0; schema.len()];
-        for (p, q) in &self.sym {
+        for (p, t) in self.tapes() {
             if let Some(i) = schema.index_of(p) {
-                v[i] = q.eval(env)?;
+                v[i] = t.eval(env)?;
             }
         }
         // fill the roofline min(loads, stores) entries
@@ -227,7 +260,7 @@ struct GAccess {
 /// change across the size sweeps.)
 pub fn extract(
     kernel: &Kernel,
-    classify_env: &BTreeMap<String, i64>,
+    classify_env: &Env,
     opts: ExtractOpts,
 ) -> Result<KernelProps, String> {
     kernel.validate()?;
@@ -239,29 +272,28 @@ pub fn extract(
     }
 
     // lane (SIMD) iname: local axis 0
-    let lane_iname = kernel.local_inames().get(&0).cloned();
+    let lane_iname = kernel.local_inames().get(&0).copied();
 
     // ---- global memory accesses + local loads ---------------------------
-    let mut gaccesses: Vec<(String, GAccess)> = Vec::new(); // (array, access)
+    let mut gaccesses: Vec<(Sym, GAccess)> = Vec::new(); // (array, access)
     for insn in &kernel.insns {
-        collect_mem(kernel, insn, classify_env, lane_iname.as_deref(), &mut gaccesses)?;
+        collect_mem(kernel, insn, classify_env, lane_iname, &mut gaccesses)?;
 
         // local loads (RHS only). The base model does not track their
         // strides (§2.1 last paragraph); with `bin_local_strides` they
         // split into conflict-free vs. bank-conflicted classes (§6.2).
         insn.rhs.visit_loads(&mut |a, red| {
-            if let Some(arr) = kernel.array(&a.array) {
+            if let Some(arr) = kernel.array(a.array) {
                 if arr.space == MemSpace::Local {
-                    let mut names: Vec<&str> =
-                        insn.within.iter().map(|s| s.as_str()).collect();
+                    let mut names: Vec<Sym> = insn.within.clone();
                     for r in red {
-                        if !names.contains(&r.as_str()) {
-                            names.push(r);
+                        if !names.contains(r) {
+                            names.push(*r);
                         }
                     }
                     let count = kernel.domain.project_onto(&names).count();
                     let conflicted = opts.bin_local_strides
-                        && local_lane_stride(kernel, a, classify_env, lane_iname.as_deref())
+                        && local_lane_stride(kernel, a, classify_env, lane_iname)
                             .map(|s| s.abs() >= 2)
                             .unwrap_or(false);
                     let p = if conflicted {
@@ -277,14 +309,19 @@ pub fn extract(
     }
 
     // group accesses by (array, dir, bits, |lane stride|) and classify
-    let mut groups: BTreeMap<(String, Dir, u32, i64), Vec<GAccess>> = BTreeMap::new();
+    let mut groups: BTreeMap<(Sym, Dir, u32, i64), Vec<GAccess>> = BTreeMap::new();
     for (arr, acc) in gaccesses {
         groups
             .entry((arr, acc.dir, acc.bits, acc.lane_stride.abs()))
             .or_default()
             .push(acc);
     }
-    for ((_, dir, bits, stride), accs) in groups {
+    // merge groups in array-name order: Sym ordering is interning order
+    // (process-history-dependent), and same-Prop groups fold into one
+    // f64 accumulation whose order must be reproducible across runs
+    let mut merged: Vec<((Sym, Dir, u32, i64), Vec<GAccess>)> = groups.into_iter().collect();
+    merged.sort_by_key(|((arr, _, _, _), _)| arr.as_str());
+    for ((_, dir, bits, stride), accs) in merged {
         let class = classify_group(stride, &accs, opts);
         let mut count = PwQPoly::zero();
         for a in &accs {
@@ -307,7 +344,7 @@ pub fn extract(
         // threads per group (product of local trip counts; symbolic)
         let mut gsize = PwQPoly::constant(1.0);
         for (_, iname) in kernel.local_inames() {
-            if let Some(dim) = kernel.domain.dim(&iname) {
+            if let Some(dim) = kernel.domain.dim(iname) {
                 gsize = gsize.mul(&PwQPoly { pieces: vec![(Vec::new(), dim.trip_count())] });
             }
         }
@@ -318,18 +355,18 @@ pub fn extract(
     add(&mut sym, Prop::WorkGroups, kernel.group_count());
     add(&mut sym, Prop::Const, PwQPoly::constant(1.0));
 
-    Ok(KernelProps { kernel_name: kernel.name.clone(), sym })
+    Ok(KernelProps::new(kernel.name.clone(), sym))
 }
 
 /// Lane stride (in elements) of a local-memory access.
 fn local_lane_stride(
     kernel: &Kernel,
     access: &crate::lpir::Access,
-    env: &BTreeMap<String, i64>,
-    lane_iname: Option<&str>,
+    env: &Env,
+    lane_iname: Option<Sym>,
 ) -> Option<i64> {
     let lane = lane_iname?;
-    let arr = kernel.array(&access.array)?;
+    let arr = kernel.array(access.array)?;
     let axis_strides: Vec<i64> = arr
         .elem_strides()
         .iter()
@@ -346,23 +383,23 @@ fn local_lane_stride(
 fn collect_mem(
     kernel: &Kernel,
     insn: &Insn,
-    env: &BTreeMap<String, i64>,
-    lane_iname: Option<&str>,
-    out: &mut Vec<(String, GAccess)>,
+    env: &Env,
+    lane_iname: Option<Sym>,
+    out: &mut Vec<(Sym, GAccess)>,
 ) -> Result<(), String> {
-    let mut push = |array: &str,
+    let mut push = |array: Sym,
                     idx: &[crate::qpoly::LinExpr],
                     dir: Dir,
-                    red: &[String]|
+                    red: &[Sym]|
      -> Result<(), String> {
         let arr = kernel.array(array).ok_or_else(|| format!("unknown array '{array}'"))?;
         if arr.space != MemSpace::Global {
             return Ok(());
         }
-        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+        let mut names: Vec<Sym> = insn.within.clone();
         for r in red {
-            if !names.contains(&r.as_str()) {
-                names.push(r);
+            if !names.contains(r) {
+                names.push(*r);
             }
         }
         let count = kernel.domain.project_onto(&names).count();
@@ -374,25 +411,25 @@ fn collect_mem(
             .collect::<Result<_, _>>()?;
         let flat = flatten_access(kernel, idx, &axis_strides, env)?;
         let lane_stride = lane_iname
-            .map(|l| flat.coeffs.get(l).copied().unwrap_or(0))
+            .map(|l| flat.coeffs.get(&l).copied().unwrap_or(0))
             .unwrap_or(0);
         out.push((
-            array.to_string(),
+            array,
             GAccess { bits: arr.dtype.access_bits(), dir, count, flat, lane_stride },
         ));
         Ok(())
     };
 
     // stores: LHS (update instructions also read their LHS)
-    push(&insn.lhs.array, &insn.lhs.idx, Dir::Store, &[])?;
+    push(insn.lhs.array, &insn.lhs.idx, Dir::Store, &[])?;
     if insn.is_update {
-        push(&insn.lhs.array, &insn.lhs.idx, Dir::Load, &[])?;
+        push(insn.lhs.array, &insn.lhs.idx, Dir::Load, &[])?;
     }
     // loads: RHS
     let mut err: Option<String> = None;
     insn.rhs.visit_loads(&mut |a, red| {
         if err.is_none() {
-            err = push(&a.array, &a.idx, Dir::Load, red).err();
+            err = push(a.array, &a.idx, Dir::Load, red).err();
         }
     });
     match err {
@@ -499,7 +536,7 @@ mod tests {
             .unwrap();
         let e = env(&[("n", 1 << 18)]);
         let props = extract(&k, &e, ExtractOpts::default()).unwrap();
-        let has = props.sym.iter().any(|(p, q)| {
+        let has = props.sym().iter().any(|(p, q)| {
             matches!(
                 p,
                 Prop::MemGlobal {
@@ -576,7 +613,7 @@ mod tests {
             .unwrap();
         let e = env(&[("n", 4096), ("m", 512)]);
         let props = extract(&k, &e, ExtractOpts::default()).unwrap();
-        let found = props.sym.iter().any(|(p, q)| {
+        let found = props.sym().iter().any(|(p, q)| {
             matches!(
                 p,
                 Prop::MemGlobal { bits: 32, dir: Dir::Load, class: StrideClass::FracGt4 { numer: 1 } }
@@ -790,7 +827,7 @@ mod tests {
         let props =
             extract(&k, &e, ExtractOpts { collapse_utilization: true, ..Default::default() }).unwrap();
         // under the ablation, the stride-2 load lands in 2/2
-        let found = props.sym.iter().any(|(p, q)| {
+        let found = props.sym().iter().any(|(p, q)| {
             matches!(
                 p,
                 Prop::MemGlobal {

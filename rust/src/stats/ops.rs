@@ -7,6 +7,7 @@
 
 use crate::lpir::{DType, Expr, Insn, Kernel, OpKind};
 use crate::qpoly::PwQPoly;
+use crate::util::intern::Sym;
 use std::collections::BTreeMap;
 
 /// Infer the result dtype of an expression. `None` means "type-neutral"
@@ -50,15 +51,15 @@ pub fn count_insn_ops(
     // scope multiplier, memoized per reduction-iname stack: every op in
     // the same scope shares one symbolic projection count (a reduce body
     // with k ops would otherwise recount the same domain k times)
-    let mut memo: BTreeMap<Vec<String>, PwQPoly> = BTreeMap::new();
-    let mut scope_count = move |red: &[String]| -> PwQPoly {
+    let mut memo: BTreeMap<Vec<Sym>, PwQPoly> = BTreeMap::new();
+    let mut scope_count = move |red: &[Sym]| -> PwQPoly {
         if let Some(q) = memo.get(red) {
             return q.clone();
         }
-        let mut names: Vec<&str> = insn.within.iter().map(|s| s.as_str()).collect();
+        let mut names: Vec<Sym> = insn.within.clone();
         for r in red {
-            if !names.contains(&r.as_str()) {
-                names.push(r);
+            if !names.contains(r) {
+                names.push(*r);
             }
         }
         let q = kernel.domain.project_onto(&names).count();
@@ -80,8 +81,8 @@ pub fn count_insn_ops(
     fn walk(
         kernel: &Kernel,
         e: &Expr,
-        red: &mut Vec<String>,
-        scope_count: &mut dyn FnMut(&[String]) -> PwQPoly,
+        red: &mut Vec<Sym>,
+        scope_count: &mut dyn FnMut(&[Sym]) -> PwQPoly,
         out: &mut BTreeMap<(OpKind, u32), PwQPoly>,
     ) {
         match e {
@@ -110,7 +111,7 @@ pub fn count_insn_ops(
             }
             Expr::Reduce(_, iname, body) => {
                 // the reduction combine: one add/sub per reduced element
-                red.push(iname.clone());
+                red.push(*iname);
                 if let Some(dt) = infer_dtype(kernel, body) {
                     if dt.is_float() {
                         let (bits, width) = op_bits(dt);
@@ -129,7 +130,7 @@ pub fn count_insn_ops(
     // update instructions (`lhs += rhs`) perform one combine per execution
     if insn.is_update {
         if let Some(dt) = infer_dtype(kernel, &insn.rhs)
-            .or_else(|| kernel.array(&insn.lhs.array).map(|a| a.dtype))
+            .or_else(|| kernel.array(insn.lhs.array).map(|a| a.dtype))
         {
             if dt.is_float() {
                 let (bits, width) = op_bits(dt);

@@ -133,6 +133,44 @@ impl Bench {
     pub fn finish(&self, suite: &str) {
         println!("--- {suite}: {} benchmarks complete ---", self.results.len());
     }
+
+    /// Serialize all recorded samples to a JSON value (the shape the CI
+    /// perf-trajectory artifacts use).
+    pub fn to_json(&self, suite: &str) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("suite", Json::Str(suite.to_string())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                ("median_ns", Json::Num(s.median_ns)),
+                                ("mean_ns", Json::Num(s.mean_ns)),
+                                ("stddev_ns", Json::Num(s.stddev_ns)),
+                                ("samples", Json::Num(s.samples as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print the footer and persist results to `BENCH_<suite>.json` in
+    /// the current directory, so the perf trajectory is recorded run
+    /// over run (consumed by CI).
+    pub fn finish_json(&self, suite: &str) {
+        self.finish(suite);
+        let path = format!("BENCH_{suite}.json");
+        match std::fs::write(&path, self.to_json(suite).pretty()) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
 }
 
 #[cfg(test)]

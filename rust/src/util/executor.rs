@@ -1,10 +1,17 @@
 //! Fixed-size thread pool with a scoped parallel `map` (offline stand-in
 //! for `tokio`/`rayon`). The coordinator's workload — running measurement
 //! campaigns across simulated devices — is CPU-bound fan-out, which maps
-//! cleanly onto scoped threads and channels.
+//! cleanly onto scoped threads.
+//!
+//! Work is dispatched by a single shared atomic cursor over a slice of
+//! item slots: each worker claims the next index with `fetch_add` and
+//! takes the item out of its slot. Compared to a `Mutex<Vec<_>>` queue
+//! this removes all lock contention from dispatch (each slot mutex is
+//! touched exactly once, uncontended) and processes items front-to-back
+//! instead of the queue's back-to-front pop order.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Run `f` over `items` with up to `workers` OS threads, preserving input
 /// order in the output. Uses `std::thread::scope`, so `f` may borrow from
@@ -23,33 +30,34 @@ where
     if workers == 1 {
         return items.into_iter().map(f).collect();
     }
-    let queue = Arc::new(Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>()));
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let f = &f;
-            scope.spawn(move || loop {
-                let next = queue.lock().unwrap().pop();
-                match next {
-                    Some((i, item)) => {
-                        let r = f(item);
-                        if tx.send((i, r)).is_err() {
-                            return;
-                        }
-                    }
-                    None => return,
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
                 }
+                let item = slots[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("work item claimed twice");
+                let r = f(item);
+                *out[i].lock().unwrap() = Some(r);
             });
         }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("worker died before producing result")).collect()
-    })
+    });
+    out.into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("worker died before producing result")
+        })
+        .collect()
 }
 
 /// Default worker count: one per available core, at least 1.
@@ -60,6 +68,7 @@ pub fn default_workers() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn preserves_order() {
@@ -84,5 +93,39 @@ mod tests {
     fn more_workers_than_items() {
         let out = par_map(vec![5], 16, |x| x * 2);
         assert_eq!(out, vec![10]);
+    }
+
+    #[test]
+    fn stress_many_items_many_workers() {
+        // far more items than workers, and far more workers than cores:
+        // every item must run exactly once and land at its own index.
+        let n = 10_000usize;
+        let executions = AtomicUsize::new(0);
+        let out = par_map((0..n as i64).collect::<Vec<i64>>(), 32, |x| {
+            executions.fetch_add(1, Ordering::Relaxed);
+            // a little work so workers genuinely interleave
+            let mut acc = x;
+            for i in 0..50 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            (x, acc)
+        });
+        assert_eq!(executions.load(Ordering::Relaxed), n);
+        assert_eq!(out.len(), n);
+        for (i, (x, _)) in out.iter().enumerate() {
+            assert_eq!(*x, i as i64, "result out of order at {i}");
+        }
+    }
+
+    #[test]
+    fn uneven_work_is_load_balanced_correctly() {
+        // items with wildly different costs still produce ordered output
+        let out = par_map((0..200i64).collect::<Vec<_>>(), 7, |x| {
+            if x % 13 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            x * 2
+        });
+        assert_eq!(out, (0..200i64).map(|x| x * 2).collect::<Vec<_>>());
     }
 }

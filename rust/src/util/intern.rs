@@ -1,0 +1,359 @@
+//! Global symbol interning and dense symbol-keyed environments.
+//!
+//! Every identifier the analysis layers juggle — size parameters (`n`),
+//! inames (`g0`, `l0`, `kt`), array names (`a`, `tile`) — is interned
+//! once into a process-global table and thereafter carried as a
+//! [`Sym`]: a `Copy` 32-bit handle. Comparing, hashing and map-keying
+//! symbols costs one integer op instead of a string walk, and a
+//! parameter binding becomes an [`Env`]: a dense `Vec<i64>` indexed by
+//! symbol id, so the evaluation hot paths (qpoly re-evaluation, the
+//! simulator's per-lane interpreter, the timing engine's warp sampler)
+//! index a flat slot frame instead of probing `BTreeMap<String, i64>`.
+//!
+//! The intern table is append-only; symbol strings are leaked (their
+//! total size is bounded by the distinct identifiers ever seen, a few
+//! hundred in any realistic run) so `as_str` can hand out `&'static
+//! str` without holding a lock for the caller's lifetime.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+/// An interned identifier. `Ord`/`Hash` operate on the 32-bit id, so
+/// symbol-keyed `BTreeMap`s iterate in *interning* order, not
+/// lexicographic order — callers that need name order must sort by
+/// [`Sym::as_str`] explicitly.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Sym(u32);
+
+struct Interner {
+    lookup: HashMap<&'static str, u32>,
+    names: Vec<&'static str>,
+}
+
+fn interner() -> &'static RwLock<Interner> {
+    static TABLE: OnceLock<RwLock<Interner>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        RwLock::new(Interner { lookup: HashMap::new(), names: Vec::new() })
+    })
+}
+
+impl Sym {
+    /// Intern a string, returning its stable handle. Idempotent and
+    /// thread-safe; the read path is lock-shared and allocation-free.
+    pub fn intern(name: &str) -> Sym {
+        {
+            let table = interner().read().unwrap();
+            if let Some(&id) = table.lookup.get(name) {
+                return Sym(id);
+            }
+        }
+        let mut table = interner().write().unwrap();
+        if let Some(&id) = table.lookup.get(name) {
+            return Sym(id);
+        }
+        let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+        let id = table.names.len() as u32;
+        table.names.push(leaked);
+        table.lookup.insert(leaked, id);
+        Sym(id)
+    }
+
+    /// Look up an already-interned string without interning it. Returns
+    /// `None` for names the process has never interned — use this for
+    /// query paths (e.g. [`Env::get_name`]) so probing with arbitrary
+    /// strings cannot grow the intern table.
+    pub fn lookup(name: &str) -> Option<Sym> {
+        interner().read().unwrap().lookup.get(name).map(|&id| Sym(id))
+    }
+
+    /// The interned string.
+    pub fn as_str(self) -> &'static str {
+        interner().read().unwrap().names[self.0 as usize]
+    }
+
+    /// Raw slot id (index into dense [`Env`] frames and compiled tapes).
+    #[inline]
+    pub fn id(self) -> u32 {
+        self.0
+    }
+
+    /// Reconstruct a `Sym` from a raw id previously obtained via
+    /// [`Sym::id`]. The id must have come from this process's interner.
+    #[inline]
+    pub fn from_id(id: u32) -> Sym {
+        Sym(id)
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl From<&Sym> for Sym {
+    fn from(s: &Sym) -> Sym {
+        *s
+    }
+}
+
+/// NOTE: converting a `&str` interns it. Lookup-style APIs bounded on
+/// `Into<Sym>` (`BoxDomain::dim`, `Kernel::array`, …) therefore grow
+/// the intern table when probed with a novel string; when querying
+/// with dynamic, possibly-missing names, resolve through
+/// [`Sym::lookup`] first so misses stay allocation-free.
+impl From<&str> for Sym {
+    fn from(s: &str) -> Sym {
+        Sym::intern(s)
+    }
+}
+
+impl From<&String> for Sym {
+    fn from(s: &String) -> Sym {
+        Sym::intern(s)
+    }
+}
+
+impl From<String> for Sym {
+    fn from(s: String) -> Sym {
+        Sym::intern(&s)
+    }
+}
+
+/// A parameter/iname binding: a dense slot frame indexed by symbol id.
+///
+/// `get`/`bind` are O(1) array indexing — this is the "flat `Vec<i64>`
+/// environment" the compiled evaluation tapes and the simulator's
+/// per-lane interpreter run against.
+#[derive(Clone, Default)]
+pub struct Env {
+    vals: Vec<i64>,
+    set: Vec<bool>,
+}
+
+impl Env {
+    pub fn new() -> Env {
+        Env::default()
+    }
+
+    /// Build from `(name, value)` pairs.
+    pub fn from_pairs(pairs: &[(&str, i64)]) -> Env {
+        let mut e = Env::new();
+        for (k, v) in pairs {
+            e.bind(Sym::intern(k), *v);
+        }
+        e
+    }
+
+    /// Bind `sym` to `v` (growing the frame if needed).
+    #[inline]
+    pub fn bind(&mut self, sym: Sym, v: i64) {
+        let i = sym.id() as usize;
+        if i >= self.vals.len() {
+            self.vals.resize(i + 1, 0);
+            self.set.resize(i + 1, false);
+        }
+        self.vals[i] = v;
+        self.set[i] = true;
+    }
+
+    /// Name-based insert; returns the previous binding, if any.
+    pub fn insert<S: Into<Sym>>(&mut self, name: S, v: i64) -> Option<i64> {
+        let s = name.into();
+        let prev = self.get(s);
+        self.bind(s, v);
+        prev
+    }
+
+    /// Remove a binding (the slot stays allocated).
+    #[inline]
+    pub fn unbind(&mut self, sym: Sym) {
+        if let Some(flag) = self.set.get_mut(sym.id() as usize) {
+            *flag = false;
+        }
+    }
+
+    /// Value bound to `sym`, if any. O(1).
+    #[inline]
+    pub fn get(&self, sym: Sym) -> Option<i64> {
+        self.get_id(sym.id())
+    }
+
+    /// Value bound to the raw slot id, if any. O(1).
+    #[inline]
+    pub fn get_id(&self, id: u32) -> Option<i64> {
+        let i = id as usize;
+        if *self.set.get(i)? {
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+
+    /// Name-based lookup. Does not intern: a name nothing has bound
+    /// cannot have a value, so unseen names simply return `None`.
+    pub fn get_name(&self, name: &str) -> Option<i64> {
+        self.get(Sym::lookup(name)?)
+    }
+
+    /// Iterate bound `(sym, value)` pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (Sym, i64)> + '_ {
+        self.vals
+            .iter()
+            .zip(self.set.iter())
+            .enumerate()
+            .filter(|(_, (_, &s))| s)
+            .map(|(i, (&v, _))| (Sym::from_id(i as u32), v))
+    }
+
+    /// Mutable iteration over bound values (binding set is unchanged).
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut i64> + '_ {
+        self.vals
+            .iter_mut()
+            .zip(self.set.iter())
+            .filter(|(_, &s)| s)
+            .map(|(v, _)| v)
+    }
+
+    /// Number of bound symbols.
+    pub fn len(&self) -> usize {
+        self.set.iter().filter(|&&s| s).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.set.iter().any(|&s| s)
+    }
+}
+
+impl PartialEq for Env {
+    fn eq(&self, other: &Env) -> bool {
+        // compare bindings only; stale slot values must not matter
+        let n = self.set.len().max(other.set.len());
+        for i in 0..n {
+            let a = self.get_id(i as u32);
+            let b = other.get_id(i as u32);
+            if a != b {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl Eq for Env {}
+
+impl std::ops::Index<&str> for Env {
+    type Output = i64;
+
+    fn index(&self, name: &str) -> &i64 {
+        let sym = Sym::lookup(name).unwrap_or_else(|| panic!("unbound parameter '{name}'"));
+        let i = sym.id() as usize;
+        assert!(
+            self.set.get(i).copied().unwrap_or(false),
+            "unbound parameter '{name}'"
+        );
+        &self.vals[i]
+    }
+}
+
+impl fmt::Debug for Env {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut pairs: Vec<(&'static str, i64)> =
+            self.iter().map(|(s, v)| (s.as_str(), v)).collect();
+        pairs.sort();
+        f.debug_map().entries(pairs).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_distinct() {
+        let a = Sym::intern("alpha_test_sym");
+        let b = Sym::intern("alpha_test_sym");
+        let c = Sym::intern("beta_test_sym");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.as_str(), "alpha_test_sym");
+        assert_eq!(Sym::from_id(a.id()), a);
+    }
+
+    #[test]
+    fn env_bind_get_unbind() {
+        let mut e = Env::new();
+        let n = Sym::intern("env_test_n");
+        assert_eq!(e.get(n), None);
+        e.bind(n, 42);
+        assert_eq!(e.get(n), Some(42));
+        assert_eq!(e["env_test_n"], 42);
+        e.unbind(n);
+        assert_eq!(e.get(n), None);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn env_equality_ignores_stale_slots() {
+        let n = Sym::intern("env_eq_n");
+        let m = Sym::intern("env_eq_m");
+        let mut a = Env::new();
+        a.bind(n, 1);
+        a.bind(m, 9);
+        a.unbind(m);
+        let mut b = Env::new();
+        b.bind(n, 1);
+        assert_eq!(a, b);
+        b.bind(m, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn env_iteration_and_values_mut() {
+        let mut e = Env::from_pairs(&[("env_it_x", 3), ("env_it_y", 4)]);
+        assert_eq!(e.len(), 2);
+        for v in e.values_mut() {
+            *v *= 10;
+        }
+        assert_eq!(e.get_name("env_it_x"), Some(30));
+        assert_eq!(e.get_name("env_it_y"), Some(40));
+        let names: Vec<&str> = e.iter().map(|(s, _)| s.as_str()).collect();
+        assert!(names.contains(&"env_it_x") && names.contains(&"env_it_y"));
+    }
+
+    #[test]
+    fn lookup_does_not_intern() {
+        assert!(Sym::lookup("lookup_never_interned_a").is_none());
+        let e = Env::new();
+        assert_eq!(e.get_name("lookup_never_interned_b"), None);
+        // the probe above must not have interned the name
+        assert!(Sym::lookup("lookup_never_interned_b").is_none());
+        let s = Sym::intern("lookup_interned");
+        assert_eq!(Sym::lookup("lookup_interned"), Some(s));
+    }
+
+    #[test]
+    fn concurrent_interning_agrees() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..100)
+                        .map(|i| Sym::intern(&format!("conc_sym_{i}")))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let results: Vec<Vec<Sym>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+}

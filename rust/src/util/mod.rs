@@ -18,6 +18,10 @@
 //!   which threads are the right tool).
 //! * [`linalg`] — dense matrices, Cholesky and QR solves for the native
 //!   fitting path.
+//! * [`intern`] — global symbol interner ([`intern::Sym`]) and dense
+//!   symbol-indexed environments ([`intern::Env`]); the substrate for
+//!   the compiled evaluation tapes in [`crate::qpoly::tape`].
+pub mod intern;
 pub mod rng;
 pub mod json;
 pub mod cli;

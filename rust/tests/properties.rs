@@ -100,7 +100,7 @@ fn extraction_is_deterministic_and_size_consistent() {
         prop_assert!(v1 == v2, "extraction not deterministic");
         // doubling n doubles every count except Const
         let mut e2 = e1.clone();
-        e2.insert("n".into(), e1["n"] * 2);
+        e2.insert("n", e1["n"] * 2);
         let v3 = p1.eval(&schema, &e2).unwrap();
         for (i, p) in schema.props().iter().enumerate() {
             if v1[i] == 0.0 {
@@ -214,4 +214,166 @@ fn schedule_never_unbalances_loops() {
         prop_assert!(s.barrier_sites() >= 1, "missing barrier");
         Ok(())
     });
+}
+
+/// Reference (pre-interning) string-keyed evaluation of a [`LinExpr`]:
+/// the seed implementation probed a `BTreeMap<String, i64>` per term.
+fn string_keyed_lin_eval(
+    e: &LinExpr,
+    env: &std::collections::BTreeMap<String, i64>,
+) -> Result<i64, String> {
+    let mut acc = e.c;
+    for (v, k) in &e.terms {
+        let val = env
+            .get(v.as_str())
+            .ok_or_else(|| format!("unbound parameter '{v}'"))?;
+        acc += k * val;
+    }
+    Ok(acc)
+}
+
+/// Reference string-keyed evaluation of a [`QPoly`].
+fn string_keyed_qpoly_eval(
+    q: &QPoly,
+    env: &std::collections::BTreeMap<String, i64>,
+) -> Result<f64, String> {
+    let mut acc = 0.0;
+    for (m, c) in &q.terms {
+        let mut term = *c;
+        for (atom, e) in m {
+            let v = match atom {
+                Atom::Param(p) => *env
+                    .get(p.as_str())
+                    .ok_or_else(|| format!("unbound parameter '{p}'"))?,
+                Atom::FloorDiv(num, den) => {
+                    string_keyed_lin_eval(num, env)?.div_euclid(*den)
+                }
+            } as f64;
+            term *= v.powi(*e as i32);
+        }
+        acc += term;
+    }
+    Ok(acc)
+}
+
+#[test]
+fn interned_env_eval_agrees_with_string_keyed_path() {
+    use uniperf::qpoly::tape::{LinTape, PwTape};
+    use uniperf::qpoly::PwQPoly;
+    quickcheck("interned_vs_string_keyed", |rng| {
+        // random affine expression over {n, m, q}
+        let names = ["n", "m", "q"];
+        let mut lin = LinExpr::constant(rng.range_i64(-10, 11));
+        for name in &names {
+            lin.add_term(*name, rng.range_i64(-5, 6));
+        }
+        // random qpoly mixing params and floor-div atoms
+        let mut poly = QPoly::constant(rng.range_i64(-3, 4) as f64);
+        for _ in 0..gen_usize(rng, 0, 4) {
+            let atom = if rng.f64() < 0.6 {
+                QPoly::param(rng.choose(&names))
+            } else {
+                QPoly::from_atom(Atom::FloorDiv(
+                    LinExpr::var(rng.choose(&names))
+                        .add(&LinExpr::constant(rng.range_i64(0, 16))),
+                    rng.range_i64(1, 8),
+                ))
+            };
+            poly = poly.mul(&atom).add(&QPoly::constant(rng.range_i64(-2, 3) as f64));
+        }
+        // one binding, realized both as an interned Env and a String map
+        let vals: Vec<i64> = names.iter().map(|_| rng.range_i64(0, 200)).collect();
+        let interned = env(&[
+            ("n", vals[0]),
+            ("m", vals[1]),
+            ("q", vals[2]),
+        ]);
+        let strings: std::collections::BTreeMap<String, i64> = names
+            .iter()
+            .zip(&vals)
+            .map(|(n, v)| (n.to_string(), *v))
+            .collect();
+
+        // LinExpr: interned eval == string-keyed reference == compiled tape
+        let a = lin.eval(&interned)?;
+        let b = string_keyed_lin_eval(&lin, &strings)?;
+        let t = LinTape::compile(&lin).eval(&interned)?;
+        prop_assert!(a == b, "lin interned {a} vs string {b}");
+        prop_assert!(a == t, "lin interned {a} vs tape {t}");
+
+        // QPoly: interned eval == string-keyed reference == compiled tape
+        let qa = poly.eval(&interned)?;
+        let qb = string_keyed_qpoly_eval(&poly, &strings)?;
+        let qt = PwTape::compile(&PwQPoly::from_qpoly(poly.clone())).eval(&interned)?;
+        prop_assert!(qa == qb, "qpoly interned {qa} vs string {qb}");
+        prop_assert!(qa == qt, "qpoly interned {qa} vs tape {qt}");
+
+        // unbound parameters error identically on both paths
+        let partial = env(&[("n", vals[0])]);
+        if lin.coeff("m") != 0 {
+            prop_assert!(lin.eval(&partial).is_err(), "missing binding not detected");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_props_tape_eval_matches_symbolic_eval() {
+    use uniperf::stats::Prop;
+    // tapes (used by KernelProps::eval) must agree with direct PwQPoly
+    // evaluation on every extracted property of a real kernel
+    let k = uniperf::kernels::measure::mm_tiled(16, 16);
+    let e0 = env(&[("n", 256), ("m", 256), ("l", 256)]);
+    let props = extract(&k, &e0, ExtractOpts::default()).unwrap();
+    let schema = Schema::full();
+    for nn in [64i64, 128, 512, 1024] {
+        let e = env(&[("n", nn), ("m", nn), ("l", nn)]);
+        let dense = props.eval(&schema, &e).unwrap();
+        for (p, q) in props.sym() {
+            if let Some(i) = schema.index_of(p) {
+                if matches!(p, Prop::MemMin { .. }) {
+                    continue; // filled from the min rule, not the tape
+                }
+                let direct = q.eval(&e).unwrap();
+                assert_eq!(dense[i], direct, "{} at n={nn}", p.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn interpreter_matches_references_on_library_kernels() {
+    // the compiled (slot-frame) interpreter must reproduce the plain
+    // reference implementations on two library kernels
+    use uniperf::gpusim::{execute, seed_value};
+
+    // 1. tiled matrix multiply
+    let k = uniperf::kernels::measure::mm_tiled(16, 16);
+    let (n, m, l) = (32i64, 32i64, 32i64);
+    let st = execute(&k, &env(&[("n", n), ("m", m), ("l", l)])).unwrap();
+    let cc = st.get("cc").unwrap();
+    for i in 0..n as usize {
+        for j in 0..l as usize {
+            let want: f64 = (0..m as usize)
+                .map(|kk| {
+                    seed_value("a", i * m as usize + kk)
+                        * seed_value("b", kk * l as usize + j)
+                })
+                .sum();
+            assert!(
+                (cc[i * l as usize + j] - want).abs() < 1e-9,
+                "mm_tiled at ({i},{j})"
+            );
+        }
+    }
+
+    // 2. finite-difference stencil
+    let k = uniperf::kernels::testks::fd_stencil(16, 16);
+    let n = 32usize;
+    let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+    let want = uniperf::kernels::testks::fd_reference(n);
+    let out = st.get("out").unwrap();
+    for i in 0..want.len() {
+        assert!((out[i] - want[i]).abs() < 1e-9, "fd at {i}");
+    }
 }
