@@ -1,0 +1,64 @@
+//! Crossval smoke: run the held-out cross-validation subsystem in quick
+//! mode, record its wall time (the CI perf-trajectory artifact
+//! `BENCH_crossval.json`), and hard-fail if any fold errors out or
+//! produces a degenerate prediction.
+
+use uniperf::coordinator::{Config, FitBackend};
+use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
+use uniperf::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::end_to_end();
+    // each timed iteration is a full (quick) campaign + 18 folds; a few
+    // samples suffice for the trajectory without dragging CI out
+    b.samples = 3;
+
+    // timed: quick leave-one-kernel-out on two devices
+    let timed = CrossvalOpts {
+        base: Config {
+            devices: vec!["titan_x".into(), "r9_fury".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneKernelOut,
+        quick: true,
+    };
+    b.run("crossval/loko/quick/2dev", || {
+        run_crossval(&timed).expect("crossval fold failed")
+    });
+
+    // verification run: all four devices, both splits, quick mode — any
+    // fold error panics, which fails the CI job
+    let mut opts = CrossvalOpts {
+        base: Config { backend: FitBackend::Native, ..Config::default() },
+        split: Split::LeaveOneKernelOut,
+        quick: true,
+    };
+    let loko = run_crossval(&opts).expect("crossval fold failed");
+    println!("{}", loko.render());
+    assert_eq!(loko.folds.len(), 9 * 4, "one fold per (kernel, device)");
+    for f in &loko.folds {
+        assert!(!f.entries.is_empty(), "empty fold {}/{}", f.device, f.fold);
+        for e in &f.entries {
+            assert!(
+                e.predicted_s.is_finite() && e.actual_s > 0.0,
+                "degenerate prediction for {}/{}/{}",
+                e.device,
+                e.kernel,
+                e.case
+            );
+        }
+    }
+
+    opts.split = Split::LeaveOneSizeCaseOut;
+    let loso = run_crossval(&opts).expect("crossval fold failed");
+    println!("{}", loso.render());
+    assert_eq!(loso.folds.len(), 2 * 4, "quick mode keeps size cases a/b");
+
+    println!(
+        "held-out geomean relative error: kernel-split {:.3}, case-split {:.3}",
+        loko.overall_err(),
+        loso.overall_err()
+    );
+    b.finish_json("crossval");
+}

@@ -37,6 +37,9 @@ pub struct Config {
     /// results directory (None = don't persist)
     pub out_dir: Option<PathBuf>,
     pub workers: usize,
+    /// evaluate the full 9-class evaluation-kernel zoo (§5 test kernels
+    /// plus the zoo expansion) instead of the four §5 test kernels
+    pub eval_zoo: bool,
 }
 
 impl Default for Config {
@@ -53,6 +56,7 @@ impl Default for Config {
             extract: ExtractOpts::default(),
             out_dir: None,
             workers: default_workers(),
+            eval_zoo: false,
         }
     }
 }
@@ -75,7 +79,10 @@ pub struct PipelineResult {
     pub table1: Table1,
 }
 
-fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver>, String> {
+/// Instantiate the fit backend (shared with [`crate::crossval`], which
+/// holds one solver per device across its fold fan-out — hence the
+/// thread-safety bounds).
+pub fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver + Send + Sync>, String> {
     match backend {
         FitBackend::Native => Ok(Box::new(NativeSolver::new())),
         FitBackend::Xla => Ok(Box::new(crate::runtime::XlaSolver::from_artifacts()?)),
@@ -104,19 +111,23 @@ pub fn run_device(
     let solver = make_solver(cfg.backend)?;
     let model = perfmodel::fit(device, &pm, schema, solver.as_ref())?;
 
-    // 3. test kernels (§5): predict + measure
+    // 3. test kernels (§5, or the full zoo behind `eval_zoo`): predict
+    //    + measure, through the same parallel measurement path the
+    //    cross-validation subsystem uses
+    let suite = if cfg.eval_zoo {
+        kernels::eval_suite(device)
+    } else {
+        kernels::test_suite(device)
+    };
+    let measurements =
+        harness::measure_cases(&gpu, &suite, schema, &cfg.protocol, cfg.extract, cfg.workers)?;
     let mut tests = Vec::new();
-    let mut cache = harness::PropsCache::default();
-    for case in kernels::test_suite(device) {
-        let props = cache.props_for(&case, cfg.extract)?;
-        let predicted = model.predict_kernel(schema, &props, &case.env)?;
-        let times = gpu.time(&case.kernel, &case.env, cfg.protocol.runs)?;
-        let actual = cfg.protocol.reduce(&times)?;
+    for (case, m) in suite.iter().zip(&measurements) {
         // label format: "<kernel>/<letter>/..."
         let mut parts = case.label.split('/');
         let kname = parts.next().unwrap_or("?").to_string();
         let letter = parts.next().unwrap_or("?").to_string();
-        tests.push((kname, letter, predicted, actual));
+        tests.push((kname, letter, model.predict(&m.props), m.time_s));
     }
 
     // 4. optional persistence

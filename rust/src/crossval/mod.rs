@@ -1,0 +1,407 @@
+//! Cross-validation evaluation subsystem: the paper's *predictive* claim
+//! tested on genuinely held-out work.
+//!
+//! The pipeline's Table 1 reports error on the §5 test kernels, but the
+//! model is fitted on the measurement suite alone — nothing in the repo
+//! tested what happens when kernels the fit *has* seen are held out
+//! systematically. Following the cross-machine follow-up work (Stevens &
+//! Klöckner, arXiv:1904.09538; Braun et al., arXiv:2001.07104), this
+//! module treats the evaluation-kernel zoo ([`crate::kernels::eval_suite`],
+//! 9 classes × 4 size cases) as data and evaluates two splits per device:
+//!
+//! * **leave-one-kernel-out** — fit on the measurement campaign plus all
+//!   zoo cases except one kernel class; predict that class's cases;
+//! * **leave-one-size-case-out** — fit on the campaign plus all zoo
+//!   cases except one size-case letter (`a`–`d`); predict that letter.
+//!
+//! Per device the campaign and the zoo measurements run **once** (with
+//! symbolic extraction cached through [`crate::harness::PropsCache`] via
+//! [`crate::harness::measure_cases`]); the (device × fold) fit/predict
+//! jobs then fan out on [`crate::util::executor::par_map`]. Results are
+//! collected into a [`crate::report::Table1`] of held-out predictions
+//! and rendered Table-1-style by [`crate::report::render_crossval`].
+
+use crate::coordinator::{make_solver, Config};
+use crate::gpusim::SimGpu;
+use crate::harness::{measure_cases, run_campaign};
+use crate::kernels;
+use crate::perfmodel::{self, PropertyMatrix, Solver};
+use crate::report::{render_crossval, Table1, Table1Entry};
+use crate::stats::Schema;
+use crate::util::executor::par_map;
+use crate::util::linalg::geometric_mean;
+use std::fmt::Write as _;
+
+/// Which hold-out scheme to evaluate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// hold out one kernel class per fold (9 folds per device)
+    LeaveOneKernelOut,
+    /// hold out one size-case letter per fold (4 folds per device)
+    LeaveOneSizeCaseOut,
+}
+
+impl Split {
+    /// Human-readable name for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Split::LeaveOneKernelOut => "leave-one-kernel-out",
+            Split::LeaveOneSizeCaseOut => "leave-one-size-case-out",
+        }
+    }
+
+    /// The fold key of a zoo case under this split.
+    fn key<'a>(&self, kernel: &'a str, case: &'a str) -> &'a str {
+        match self {
+            Split::LeaveOneKernelOut => kernel,
+            Split::LeaveOneSizeCaseOut => case,
+        }
+    }
+}
+
+/// Cross-validation options on top of the pipeline [`Config`] (devices,
+/// protocol, fit backend, extraction options, worker count).
+#[derive(Clone, Debug)]
+pub struct CrossvalOpts {
+    pub base: Config,
+    pub split: Split,
+    /// smoke mode: cut the campaign down to the classes that still cover
+    /// every property family the zoo exercises, and keep only the `a`/`b`
+    /// size cases of the zoo
+    pub quick: bool,
+}
+
+impl Default for CrossvalOpts {
+    fn default() -> Self {
+        CrossvalOpts {
+            base: Config::default(),
+            split: Split::LeaveOneKernelOut,
+            quick: false,
+        }
+    }
+}
+
+/// One measured zoo case, ready for fold assembly.
+#[derive(Clone, Debug)]
+struct ZooCase {
+    kernel: String,
+    case: String,
+    label: String,
+    props: Vec<f64>,
+    time_s: f64,
+}
+
+/// Per-device measurements (and the fit backend) shared by every fold
+/// of that device — the solver is instantiated once here rather than
+/// per fold, so an XLA artifact is loaded at most once per device.
+struct DeviceCtx {
+    device: String,
+    campaign: PropertyMatrix,
+    overhead: f64,
+    zoo: Vec<ZooCase>,
+    solver: Box<dyn Solver + Send + Sync>,
+}
+
+/// Outcome of one (device, fold) fit.
+#[derive(Clone, Debug)]
+pub struct FoldResult {
+    pub device: String,
+    /// held-out kernel name or size-case letter
+    pub fold: String,
+    /// training cases (campaign + retained zoo cases)
+    pub n_train: usize,
+    /// training-set geomean relative error of the fold's model
+    pub train_err: f64,
+    /// held-out predictions
+    pub entries: Vec<Table1Entry>,
+}
+
+impl FoldResult {
+    /// Geomean relative error over this fold's held-out cases.
+    pub fn heldout_err(&self) -> f64 {
+        let errs: Vec<f64> = self.entries.iter().map(Table1Entry::rel_err).collect();
+        geometric_mean(&errs)
+    }
+}
+
+/// Full cross-validation output.
+#[derive(Debug)]
+pub struct CrossvalResult {
+    pub split: Split,
+    pub folds: Vec<FoldResult>,
+    /// all held-out predictions, Table-1 shaped
+    pub table: Table1,
+}
+
+impl CrossvalResult {
+    /// Overall held-out geomean relative error across kernels and devices.
+    pub fn overall_err(&self) -> f64 {
+        self.table.overall_err()
+    }
+
+    /// Held-out geomean relative error for one device.
+    pub fn device_err(&self, device: &str) -> f64 {
+        self.table.device_err(device)
+    }
+
+    /// Render the Table-1-style held-out error report plus per-fold
+    /// diagnostics.
+    pub fn render(&self) -> String {
+        let mut s = render_crossval(self.split.label(), &self.table);
+        s.push('\n');
+        s.push_str("fold        device      train  train-gm  heldout-gm\n");
+        for f in &self.folds {
+            let _ = writeln!(
+                s,
+                "{:<12}{:<12}{:>5} {:>9.3} {:>11.3}",
+                f.fold,
+                f.device,
+                f.n_train,
+                f.train_err,
+                f.heldout_err()
+            );
+        }
+        s
+    }
+}
+
+/// Cut-down campaign filter for quick mode: the retained classes keep
+/// every property family that the *full* §4.1 suite covers and the
+/// evaluation zoo exercises — unit, strided and uniform global traffic
+/// (`sg_*`, `vsadd`), local-memory staging with barriers
+/// (`transpose_tiled`), uncoalesced classes (`transpose_cw`/`cr`),
+/// every float-op kind including the n-body kernel's rsqrt (`arith_*`),
+/// and the launch-overhead columns (`empty`). Known gap inherited from
+/// the paper's suite (full mode included): no measurement kernel emits
+/// uniform-class global *stores*, so reduce_tree's per-group result
+/// store fits to weight 0 in its own hold-out fold (see ROADMAP).
+/// Public so tests exercising "the quick campaign" reuse this exact
+/// predicate instead of a drifting copy.
+pub fn quick_campaign_case(label: &str) -> bool {
+    label.starts_with("sg_")
+        || label.starts_with("vsadd")
+        || label.starts_with("transpose")
+        || label.starts_with("arith_")
+        || label.starts_with("empty/")
+}
+
+/// Quick-mode zoo filter: keep the `a` and `b` size cases.
+fn quick_zoo_case(label: &str) -> bool {
+    let mut parts = label.split('/');
+    let _ = parts.next();
+    matches!(parts.next(), Some("a") | Some("b"))
+}
+
+/// Measure one device: run the (possibly cut-down) measurement campaign
+/// and the evaluation-kernel zoo once.
+fn build_ctx(
+    device: &str,
+    schema: &Schema,
+    opts: &CrossvalOpts,
+    workers: usize,
+) -> Result<DeviceCtx, String> {
+    let cfg = &opts.base;
+    let gpu = SimGpu::named(device).ok_or_else(|| format!("unknown device '{device}'"))?;
+    let mut cases = kernels::measurement_suite(device);
+    if opts.quick {
+        cases.retain(|c| quick_campaign_case(&c.label));
+    }
+    let (campaign, overhead) =
+        run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, workers)?;
+
+    let mut zoo_cases = kernels::eval_suite(device);
+    if opts.quick {
+        zoo_cases.retain(|c| quick_zoo_case(&c.label));
+    }
+    let measurements =
+        measure_cases(&gpu, &zoo_cases, schema, &cfg.protocol, cfg.extract, workers)?;
+    let zoo = zoo_cases
+        .iter()
+        .zip(measurements)
+        .map(|(c, m)| {
+            let mut parts = c.label.split('/');
+            let kernel = parts.next().unwrap_or("?").to_string();
+            let case = parts.next().unwrap_or("?").to_string();
+            ZooCase { kernel, case, label: m.label, props: m.props, time_s: m.time_s }
+        })
+        .collect();
+    Ok(DeviceCtx {
+        device: device.to_string(),
+        campaign,
+        overhead,
+        zoo,
+        solver: make_solver(cfg.backend)?,
+    })
+}
+
+/// Fit and evaluate one fold on one device: train on the campaign plus
+/// every zoo case outside the fold (the minimum-size floor of §4.2
+/// applies to training cases only), predict the held-out cases.
+fn run_fold(
+    ctx: &DeviceCtx,
+    fold: &str,
+    schema: &Schema,
+    opts: &CrossvalOpts,
+) -> Result<FoldResult, String> {
+    let floor = opts.base.protocol.min_time_factor * ctx.overhead;
+    let mut pm = ctx.campaign.clone();
+    let mut held: Vec<&ZooCase> = Vec::new();
+    for z in &ctx.zoo {
+        if opts.split.key(&z.kernel, &z.case) == fold {
+            held.push(z);
+        } else if z.time_s >= floor {
+            pm.push(z.label.clone(), z.props.clone(), z.time_s);
+        }
+    }
+    if held.is_empty() {
+        return Err(format!("fold '{fold}' holds out no cases on {}", ctx.device));
+    }
+    let model = perfmodel::fit(&ctx.device, &pm, schema, ctx.solver.as_ref())?;
+    let entries = held
+        .iter()
+        .map(|z| Table1Entry {
+            device: ctx.device.clone(),
+            kernel: z.kernel.clone(),
+            case: z.case.clone(),
+            predicted_s: model.predict(&z.props),
+            actual_s: z.time_s,
+        })
+        .collect();
+    Ok(FoldResult {
+        device: ctx.device.clone(),
+        fold: fold.to_string(),
+        n_train: pm.n_cases(),
+        train_err: model.train_rel_err_geomean,
+        entries,
+    })
+}
+
+/// Run cross-validation over all configured devices.
+///
+/// Stage 1 measures each device once (parallel over devices); stage 2
+/// fans the (device × fold) fit/predict jobs out over the worker pool.
+/// Job order — and therefore the assembled table — is deterministic:
+/// `par_map` preserves input order regardless of scheduling.
+pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
+    let cfg = &opts.base;
+    if cfg.devices.is_empty() {
+        return Err("no devices configured".into());
+    }
+    let schema = Schema::full();
+
+    let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
+    let inner_workers = (cfg.workers / device_workers).max(1);
+    let ctxs = par_map(cfg.devices.clone(), device_workers, |dev| {
+        build_ctx(&dev, &schema, opts, inner_workers)
+    });
+    let mut contexts = Vec::with_capacity(ctxs.len());
+    for c in ctxs {
+        contexts.push(c?);
+    }
+
+    // fold keys per device, in first-seen (suite) order
+    let mut jobs: Vec<(usize, String)> = Vec::new();
+    for (di, ctx) in contexts.iter().enumerate() {
+        let mut keys: Vec<&str> = Vec::new();
+        for z in &ctx.zoo {
+            let key = opts.split.key(&z.kernel, &z.case);
+            if !keys.contains(&key) {
+                keys.push(key);
+            }
+        }
+        for key in keys {
+            jobs.push((di, key.to_string()));
+        }
+    }
+    let results = par_map(jobs, cfg.workers.max(1), |(di, fold)| {
+        run_fold(&contexts[di], &fold, &schema, opts)
+    });
+    let mut folds = Vec::with_capacity(results.len());
+    for r in results {
+        folds.push(r?);
+    }
+
+    let mut table = Table1::default();
+    for f in &folds {
+        for e in &f.entries {
+            table.push(e.clone());
+        }
+    }
+    let result = CrossvalResult { split: opts.split, folds, table };
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let name = match opts.split {
+            Split::LeaveOneKernelOut => "crossval_kernel.txt",
+            Split::LeaveOneSizeCaseOut => "crossval_case.txt",
+        };
+        std::fs::write(dir.join(name), result.render()).map_err(|e| e.to_string())?;
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FitBackend;
+
+    #[test]
+    fn split_keys_and_labels() {
+        assert_eq!(Split::LeaveOneKernelOut.key("fd5", "a"), "fd5");
+        assert_eq!(Split::LeaveOneSizeCaseOut.key("fd5", "a"), "a");
+        assert!(Split::LeaveOneKernelOut.label().contains("kernel"));
+        assert!(Split::LeaveOneSizeCaseOut.label().contains("size-case"));
+    }
+
+    #[test]
+    fn quick_filters_keep_coverage_classes() {
+        assert!(quick_campaign_case("sg_copy/t=0/n=4096/g=256"));
+        assert!(quick_campaign_case("vsadd/s=2/t=1/n=65536/g=256"));
+        assert!(quick_campaign_case("transpose_tiled/n=1024/g=16x16"));
+        // rsqrt coverage: without arith_* the nbody LOKO fold would fit
+        // the Special-op column as all-zero
+        assert!(quick_campaign_case("arith_rsqrt/n=256/k=256/g=16x16"));
+        assert!(quick_campaign_case("empty/n=512/g=16x16"));
+        assert!(!quick_campaign_case("mm_tiled/square/b=256/g=16x16"));
+        assert!(quick_zoo_case("reduce_tree/a/n=2097152"));
+        assert!(quick_zoo_case("bmm8/b/nb=32768"));
+        assert!(!quick_zoo_case("st3d7/c/n=256"));
+    }
+
+    #[test]
+    fn no_devices_is_an_error() {
+        let opts = CrossvalOpts {
+            base: Config { devices: Vec::new(), ..Config::default() },
+            ..CrossvalOpts::default()
+        };
+        assert!(run_crossval(&opts).is_err());
+    }
+
+    /// One-device leave-one-size-case-out smoke (the cheapest end-to-end
+    /// path: quick campaign, zoo cases a/b, 2 folds). The heavier
+    /// multi-device runs live in `rust/tests/crossval.rs`.
+    #[test]
+    fn quick_loso_single_device() {
+        let opts = CrossvalOpts {
+            base: Config {
+                devices: vec!["k40c".into()],
+                backend: FitBackend::Native,
+                ..Config::default()
+            },
+            split: Split::LeaveOneSizeCaseOut,
+            quick: true,
+        };
+        let r = run_crossval(&opts).unwrap();
+        assert_eq!(r.folds.len(), 2); // letters a and b
+        for f in &r.folds {
+            assert_eq!(f.entries.len(), 9, "fold {}", f.fold);
+            for e in &f.entries {
+                assert_eq!(e.case, f.fold);
+                assert!(e.predicted_s.is_finite(), "{}/{}", e.kernel, e.case);
+                assert!(e.actual_s > 0.0);
+            }
+        }
+        assert!(r.overall_err().is_finite());
+        let rendered = r.render();
+        assert!(rendered.contains("reduce_tree") && rendered.contains("overall"));
+    }
+}

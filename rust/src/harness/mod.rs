@@ -116,19 +116,20 @@ impl PropsCache {
     }
 }
 
-/// Run a measurement campaign: time every case with the protocol, extract
-/// property vectors, apply the minimum-size filter, and assemble the
-/// [`PropertyMatrix`] for fitting.
-pub fn run_campaign(
+/// Measure a set of cases (timing + dense property evaluation) without
+/// the minimum-size filter, returning one [`Measurement`] per input case
+/// in order. Symbolic extraction runs once per distinct kernel through a
+/// [`PropsCache`]; timing and tape evaluation fan out over `workers`.
+/// Used by [`run_campaign`] and by the cross-validation subsystem
+/// ([`crate::crossval`]) to measure the evaluation-kernel zoo.
+pub fn measure_cases(
     gpu: &SimGpu,
     cases: &[KernelCase],
     schema: &Schema,
     protocol: &Protocol,
     opts: ExtractOpts,
     workers: usize,
-) -> Result<(PropertyMatrix, f64), String> {
-    let overhead = calibrate_overhead(gpu, protocol)?;
-
+) -> Result<Vec<Measurement>, String> {
     // symbolic extraction once per kernel (sequential: the cache is shared)
     let mut cache = PropsCache::default();
     let mut sym: Vec<KernelProps> = Vec::with_capacity(cases.len());
@@ -144,10 +145,24 @@ pub fn run_campaign(
         let props = sym[i].eval(schema, &case.env)?;
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
+    results.into_iter().collect()
+}
 
+/// Run a measurement campaign: time every case with the protocol, extract
+/// property vectors, apply the minimum-size filter, and assemble the
+/// [`PropertyMatrix`] for fitting.
+pub fn run_campaign(
+    gpu: &SimGpu,
+    cases: &[KernelCase],
+    schema: &Schema,
+    protocol: &Protocol,
+    opts: ExtractOpts,
+    workers: usize,
+) -> Result<(PropertyMatrix, f64), String> {
+    let overhead = calibrate_overhead(gpu, protocol)?;
+    let measurements = measure_cases(gpu, cases, schema, protocol, opts, workers)?;
     let mut pm = PropertyMatrix::default();
-    for r in results {
-        let m = r?;
+    for m in measurements {
         let is_empty_kernel = m.label.starts_with("empty/");
         if !is_empty_kernel && m.time_s < protocol.min_time_factor * overhead {
             continue; // below the reliable-timing floor (§4.2)
@@ -273,6 +288,38 @@ mod tests {
         assert!(pm.n_cases() >= 3, "kept {}", pm.n_cases());
         // larger sizes must be kept; tiny ones may be filtered
         assert!(pm.cases.iter().any(|c| c.label.contains("n=4194304")));
+    }
+
+    #[test]
+    fn measure_cases_keeps_every_case_in_order() {
+        let gpu = SimGpu::named("titan_x").unwrap();
+        let schema = Schema::full();
+        let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
+        let mut cases = Vec::new();
+        for t in 0..5 {
+            // includes tiny sizes that run_campaign would filter out
+            let n = 1i64 << (10 + 2 * t);
+            cases.push(KernelCase {
+                kernel: k.clone(),
+                env: env(&[("n", n)]),
+                label: format!("sg_copy/n={n}/g=256"),
+                group: (256, 1),
+            });
+        }
+        let ms = measure_cases(
+            &gpu,
+            &cases,
+            &schema,
+            &Protocol::default(),
+            ExtractOpts::default(),
+            2,
+        )
+        .unwrap();
+        assert_eq!(ms.len(), cases.len());
+        for (m, c) in ms.iter().zip(&cases) {
+            assert_eq!(m.label, c.label);
+            assert!(m.time_s > 0.0);
+        }
     }
 
     #[test]

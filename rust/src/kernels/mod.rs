@@ -6,9 +6,12 @@
 //!   variants, stride-1 global access, stride-2/3 filled access, five
 //!   arithmetic-operation kernels, and the empty kernel), each swept over
 //!   the paper's size and work-group-size cases per device.
-//! * [`testks`] — the four test kernels (finite-difference stencil,
-//!   skinny matrix multiplication, 7×7×3 convolution, n-body), with the
-//!   per-device problem/group sizes of §5.
+//! * [`testks`] — the evaluation-kernel zoo: the four §5 test kernels
+//!   (finite-difference stencil, skinny matrix multiplication, 7×7×3
+//!   convolution, n-body) with the per-device problem/group sizes of §5,
+//!   plus five zoo kernels (tree reduction, inclusive scan, 3-D stencil,
+//!   batched small matmul, strided gather) used for held-out
+//!   cross-validation ([`crate::crossval`]).
 //!
 //! Sizes are *snapped* to the nearest multiple of the work-group tile so
 //! kernels stay guard-free (the paper's OpenCL emits boundary guards
@@ -81,6 +84,12 @@ pub fn measurement_suite(device: &str) -> Vec<KernelCase> {
 /// cases (`a.`–`d.`) each.
 pub fn test_suite(device: &str) -> Vec<KernelCase> {
     testks::suite(device)
+}
+
+/// The full evaluation-kernel zoo for a device: the four §5 test kernels
+/// plus the five expansion kernels (9 classes × 4 size cases).
+pub fn eval_suite(device: &str) -> Vec<KernelCase> {
+    testks::eval_suite(device)
 }
 
 #[cfg(test)]

@@ -1,6 +1,13 @@
-//! The four test kernels of §5: finite-difference stencil, skinny matrix
-//! multiplication, 7×7×3 convolution, and n-body. Results for these are
-//! what Table 1 reports.
+//! The evaluation kernels: the four test kernels of §5 (finite-difference
+//! stencil, skinny matrix multiplication, 7×7×3 convolution, n-body) whose
+//! results Table 1 reports, plus the expanded evaluation-kernel *zoo*
+//! (work-group tree reduction, Hillis–Steele inclusive scan, 7-point 3-D
+//! stencil, batched small matrix multiplication, and an ELL/"spmv-like"
+//! strided gather) used by the cross-validation subsystem
+//! ([`crate::crossval`]) and, behind `Config::eval_zoo`, by the pipeline.
+//!
+//! Every kernel has a scalar reference implementation and a paper-style
+//! per-device (group set, size exponent) configuration table.
 
 use super::{measure::mm_tiled, snap, GroupSet, KernelCase};
 use crate::lpir::builder::{gid, KernelBuilder};
@@ -298,6 +305,369 @@ pub fn nbody_reference(n: usize) -> Vec<f64> {
 }
 
 // ---------------------------------------------------------------------------
+// Zoo kernel 1: work-group tree reduction
+// ---------------------------------------------------------------------------
+
+/// Number of halving steps a work-group tree reduction or scan over
+/// `lsize` lanes needs: the smallest `k` with `2^k >= lsize`.
+pub fn reduce_steps(lsize: i64) -> i64 {
+    let mut k = 0;
+    while (1i64 << k) < lsize {
+        k += 1;
+    }
+    k
+}
+
+/// Work-group tree reduction: each group stages `lsize` elements of `rin`
+/// into local memory and halves pairwise (`dst[i] = src[2i] + src[2i+1]`)
+/// for [`reduce_steps`] ping-pong steps, then writes the group sum to
+/// `rout[g0]`.
+///
+/// Guard-free trick: both ping-pong buffers are `2·lsize` cells with a
+/// zero upper half, so inactive lanes sum zeros into cells that stay
+/// zero — no boundary control flow, and the polyhedral analyses remain
+/// exact. Every step reads its source under a different lane mapping, so
+/// the schedule places one barrier per step (plus one before the final
+/// cross-lane read of cell 0).
+pub fn reduce_tree(lsize: i64) -> Kernel {
+    let steps = reduce_steps(lsize);
+    let i = gid(0, lsize);
+    let mut b = KernelBuilder::new("reduce_tree", &["n"])
+        .group_dims_1d(v("n"), lsize)
+        .global_array("rin", DType::F32, vec![v("n")], Layout::RowMajor, false)
+        .global_array("rout", DType::F32, vec![v("n")], Layout::RowMajor, true)
+        .local_array("ra", DType::F32, &[2 * lsize])
+        .local_array("rb", DType::F32, &[2 * lsize])
+        .insn(
+            Access::new("ra", vec![v("l0")]),
+            Expr::load("rin", vec![i]),
+            &["g0", "l0"],
+            &[],
+        );
+    let (mut src, mut dst) = ("ra", "rb");
+    for _ in 0..steps {
+        let prev = b_len(&b) - 1;
+        b = b.insn(
+            Access::new(dst, vec![v("l0")]),
+            Expr::add(
+                Expr::load(src, vec![v("l0").scale(2)]),
+                Expr::load(src, vec![v("l0").scale(2).add(&c(1))]),
+            ),
+            &["g0", "l0"],
+            &[prev],
+        );
+        std::mem::swap(&mut src, &mut dst);
+    }
+    let prev = b_len(&b) - 1;
+    b.insn(
+        Access::new("rout", vec![v("g0")]),
+        Expr::load(src, vec![c(0)]),
+        &["g0", "l0"],
+        &[prev],
+    )
+    .build()
+    .expect("reduce_tree builds")
+}
+
+/// Reference implementation of [`reduce_tree`]: one sum per work group
+/// (`n` must be a multiple of `lsize`).
+pub fn reduce_reference(n: usize, lsize: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    (0..n / lsize)
+        .map(|g| (0..lsize).map(|i| seed_value("rin", g * lsize + i)).sum())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Zoo kernel 2: Hillis–Steele inclusive scan
+// ---------------------------------------------------------------------------
+
+/// Work-group inclusive prefix sum (Hillis–Steele): each group stages
+/// `lsize` elements of `sin` into the upper window `[lsize, 2·lsize)` of
+/// a local buffer and runs [`reduce_steps`] doubling-offset steps
+/// (`dst[w+i] = src[w+i] + src[w+i−2^s]`), ping-ponging between two
+/// buffers; lanes whose shifted read falls below the window read the
+/// zeroed pad (the scan identity), so no guards are needed. The scanned
+/// window is written to `sout`.
+pub fn scan_hs(lsize: i64) -> Kernel {
+    let steps = reduce_steps(lsize);
+    let i = gid(0, lsize);
+    let w = lsize;
+    let mut b = KernelBuilder::new("scan_hs", &["n"])
+        .group_dims_1d(v("n"), lsize)
+        .global_array("sin", DType::F32, vec![v("n")], Layout::RowMajor, false)
+        .global_array("sout", DType::F32, vec![v("n")], Layout::RowMajor, true)
+        .local_array("sa", DType::F32, &[2 * lsize])
+        .local_array("sb", DType::F32, &[2 * lsize])
+        .insn(
+            Access::new("sa", vec![v("l0").add(&c(w))]),
+            Expr::load("sin", vec![i.clone()]),
+            &["g0", "l0"],
+            &[],
+        );
+    let (mut src, mut dst) = ("sa", "sb");
+    for s in 0..steps {
+        let prev = b_len(&b) - 1;
+        let off = 1i64 << s;
+        b = b.insn(
+            Access::new(dst, vec![v("l0").add(&c(w))]),
+            Expr::add(
+                Expr::load(src, vec![v("l0").add(&c(w))]),
+                Expr::load(src, vec![v("l0").add(&c(w - off))]),
+            ),
+            &["g0", "l0"],
+            &[prev],
+        );
+        std::mem::swap(&mut src, &mut dst);
+    }
+    let prev = b_len(&b) - 1;
+    b.insn(
+        Access::new("sout", vec![i]),
+        Expr::load(src, vec![v("l0").add(&c(w))]),
+        &["g0", "l0"],
+        &[prev],
+    )
+    .build()
+    .expect("scan_hs builds")
+}
+
+/// Reference implementation of [`scan_hs`]: per-group inclusive prefix
+/// sums (`n` must be a multiple of `lsize`).
+pub fn scan_reference(n: usize, lsize: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let mut out = vec![0.0; n];
+    for g in 0..n / lsize {
+        let mut acc = 0.0;
+        for i in 0..lsize {
+            acc += seed_value("sin", g * lsize + i);
+            out[g * lsize + i] = acc;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Zoo kernel 3: 7-point 3-D stencil
+// ---------------------------------------------------------------------------
+
+/// Neighbor weight of the 3-D stencil.
+pub const ST3D_W: f64 = 0.125;
+
+/// 7-point stencil on an `n×n×n` grid: the 2-D grid covers an x/y tile,
+/// a sequential loop walks z. The input is halo-padded to `(n+2)³`, so
+/// the kernel is guard-free; all seven loads (six neighbors + one
+/// center) are lane-stride-1.
+///
+/// `o3[z,y,x] = (1 − 6w)·c + w·Σ_6 neighbors` with `c` the center value
+/// (the usual `c + w·(Σ_6 − 6c)` form refactored to load `c` once).
+pub fn stencil3d(gx: i64, gy: i64) -> Kernel {
+    let np2 = v("n").add(&c(2));
+    let u3 = |dz: i64, dy: i64, dx: i64| {
+        Expr::load(
+            "u3",
+            vec![
+                v("z").add(&c(1 + dz)),
+                gid(1, gy).add(&c(1 + dy)),
+                gid(0, gx).add(&c(1 + dx)),
+            ],
+        )
+    };
+    let sum6 = Expr::add(
+        Expr::add(
+            Expr::add(u3(0, 0, 1), u3(0, 0, -1)),
+            Expr::add(u3(0, 1, 0), u3(0, -1, 0)),
+        ),
+        Expr::add(u3(1, 0, 0), u3(-1, 0, 0)),
+    );
+    let rhs = Expr::add(
+        Expr::mul(Expr::lit(1.0 - 6.0 * ST3D_W), u3(0, 0, 0)),
+        Expr::mul(Expr::lit(ST3D_W), sum6),
+    );
+    KernelBuilder::new("st3d7", &["n"])
+        .group_dims_2d(v("n"), gx, v("n"), gy)
+        .seq_dim("z", v("n"))
+        .global_array(
+            "u3",
+            DType::F32,
+            vec![np2.clone(), np2.clone(), np2],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array("o3", DType::F32, vec![v("n"), v("n"), v("n")], Layout::RowMajor, true)
+        .insn(
+            Access::new("o3", vec![v("z"), gid(1, gy), gid(0, gx)]),
+            rhs,
+            &["g0", "g1", "l0", "l1", "z"],
+            &[],
+        )
+        .build()
+        .expect("st3d7 builds")
+}
+
+/// Reference implementation of [`stencil3d`].
+pub fn stencil3d_reference(n: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let np2 = n + 2;
+    let u = |z: usize, y: usize, x: usize| seed_value("u3", (z * np2 + y) * np2 + x);
+    let mut out = vec![0.0; n * n * n];
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let ctr = u(z + 1, y + 1, x + 1);
+                let sum6 = u(z + 1, y + 1, x + 2)
+                    + u(z + 1, y + 1, x)
+                    + u(z + 1, y + 2, x + 1)
+                    + u(z + 1, y, x + 1)
+                    + u(z + 2, y + 1, x + 1)
+                    + u(z, y + 1, x + 1);
+                out[(z * n + y) * n + x] = (1.0 - 6.0 * ST3D_W) * ctr + ST3D_W * sum6;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Zoo kernel 4: batched small matrix multiplication
+// ---------------------------------------------------------------------------
+
+/// Matrix dimension of the batched small matmul.
+pub const BMM_D: i64 = 8;
+
+/// Batched small matmul: `nb` independent 8×8 products, one whole
+/// product per thread. Arrays are batch-innermost (`[8, 8, nb]`
+/// row-major), so every load and store is lane-stride-1 — the classic
+/// "struct of arrays" batched-BLAS layout.
+pub fn bmm(lsize: i64) -> Kernel {
+    let bi = gid(0, lsize);
+    KernelBuilder::new("bmm8", &["nb"])
+        .group_dims_1d(v("nb"), lsize)
+        .seq_dim("i", c(BMM_D))
+        .seq_dim("j", c(BMM_D))
+        .red_dim("kk", c(BMM_D))
+        .global_array(
+            "ba",
+            DType::F32,
+            vec![c(BMM_D), c(BMM_D), v("nb")],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array(
+            "bb",
+            DType::F32,
+            vec![c(BMM_D), c(BMM_D), v("nb")],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array(
+            "bc",
+            DType::F32,
+            vec![c(BMM_D), c(BMM_D), v("nb")],
+            Layout::RowMajor,
+            true,
+        )
+        .insn(
+            Access::new("bc", vec![v("i"), v("j"), bi.clone()]),
+            Expr::sum(
+                "kk",
+                Expr::mul(
+                    Expr::load("ba", vec![v("i"), v("kk"), bi.clone()]),
+                    Expr::load("bb", vec![v("kk"), v("j"), bi]),
+                ),
+            ),
+            &["g0", "l0", "i", "j"],
+            &[],
+        )
+        .build()
+        .expect("bmm8 builds")
+}
+
+/// Reference implementation of [`bmm`].
+pub fn bmm_reference(nb: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let d = BMM_D as usize;
+    let a = |i: usize, kk: usize, b: usize| seed_value("ba", (i * d + kk) * nb + b);
+    let bb = |kk: usize, j: usize, b: usize| seed_value("bb", (kk * d + j) * nb + b);
+    let mut out = vec![0.0; d * d * nb];
+    for i in 0..d {
+        for j in 0..d {
+            for b in 0..nb {
+                let acc: f64 = (0..d).map(|kk| a(i, kk, b) * bb(kk, j, b)).sum();
+                out[(i * d + j) * nb + b] = acc;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Zoo kernel 5: strided gather ("spmv-like" ELL band)
+// ---------------------------------------------------------------------------
+
+/// Number of ELL diagonals of the strided gather.
+pub const GATHER_DIAGS: i64 = 8;
+/// Flat-index offset between consecutive diagonals.
+pub const GATHER_OFF: i64 = 32;
+
+/// ELL-style banded "spmv": `ey[i] = Σ_j ev[j, i] · ex[2i + j·32]`.
+/// Coefficient loads are lane-stride-1; the gather reads `ex` at lane
+/// stride 2 across eight shifted diagonals — since both the lane stride
+/// and the diagonal offsets are even, only every other cell is ever
+/// touched, exercising the model's half-utilization stride class.
+pub fn gather_strided(lsize: i64) -> Kernel {
+    let i = gid(0, lsize);
+    KernelBuilder::new("gather_s2", &["n"])
+        .group_dims_1d(v("n"), lsize)
+        .red_dim("jd", c(GATHER_DIAGS))
+        .global_array(
+            "ev",
+            DType::F32,
+            vec![c(GATHER_DIAGS), v("n")],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array(
+            "ex",
+            DType::F32,
+            vec![v("n").scale(2).add(&c(GATHER_DIAGS * GATHER_OFF))],
+            Layout::RowMajor,
+            false,
+        )
+        .global_array("ey", DType::F32, vec![v("n")], Layout::RowMajor, true)
+        .insn(
+            Access::new("ey", vec![i.clone()]),
+            Expr::sum(
+                "jd",
+                Expr::mul(
+                    Expr::load("ev", vec![v("jd"), i.clone()]),
+                    Expr::load(
+                        "ex",
+                        vec![i.scale(2).add(&LinExpr::scaled_var("jd", GATHER_OFF))],
+                    ),
+                ),
+            ),
+            &["g0", "l0"],
+            &[],
+        )
+        .build()
+        .expect("gather_s2 builds")
+}
+
+/// Reference implementation of [`gather_strided`].
+pub fn gather_reference(n: usize) -> Vec<f64> {
+    use crate::gpusim::seed_value;
+    let kd = GATHER_DIAGS as usize;
+    let off = GATHER_OFF as usize;
+    (0..n)
+        .map(|i| {
+            (0..kd)
+                .map(|j| seed_value("ev", j * n + i) * seed_value("ex", 2 * i + j * off))
+                .sum()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
 // Per-device test suite (§5)
 // ---------------------------------------------------------------------------
 
@@ -385,6 +755,121 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
             group: (lsize, 1),
         });
     }
+    out
+}
+
+/// Per-device configuration of the five zoo kernels, in order:
+/// reduce_tree, scan_hs, st3d7, bmm8, gather_s2. Group sets mirror the
+/// §5 table (small sets on the R9 Fury, which caps work groups at 256
+/// threads; large on the Titan X); size exponents are chosen so every
+/// case runs well above the device's launch-overhead floor.
+fn zoo_cfg(device: &str) -> [(GroupSet, i64); 5] {
+    match device {
+        "r9_fury" => [
+            (GroupSet::OneDSmall, 21),
+            (GroupSet::OneDSmall, 21),
+            (GroupSet::TwoDSmall, 6),
+            (GroupSet::OneDSmall, 14),
+            (GroupSet::OneDSmall, 19),
+        ],
+        "c2070" => [
+            (GroupSet::OneDMed, 20),
+            (GroupSet::OneDMed, 20),
+            (GroupSet::TwoDMed, 5),
+            (GroupSet::OneDMed, 14),
+            (GroupSet::OneDMed, 19),
+        ],
+        "k40c" => [
+            (GroupSet::OneDMed, 21),
+            (GroupSet::OneDMed, 21),
+            (GroupSet::TwoDMed, 6),
+            (GroupSet::OneDMed, 14),
+            (GroupSet::OneDMed, 19),
+        ],
+        _ => [
+            (GroupSet::OneDLarge, 22),
+            (GroupSet::OneDLarge, 22),
+            (GroupSet::TwoDLarge, 6),
+            (GroupSet::OneDLarge, 15),
+            (GroupSet::OneDLarge, 20),
+        ],
+    }
+}
+
+/// The five zoo kernels with their 256-thread group configuration and
+/// four size cases (`a.`–`d.`) each — the expansion half of the
+/// evaluation-kernel zoo.
+pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
+    let [rd_c, sc_c, st_c, bm_c, ga_c] = zoo_cfg(device);
+    let mut out = Vec::new();
+
+    let (lsize, _) = rd_c.0.g256();
+    let k = reduce_tree(lsize);
+    for t in 0..4 {
+        let n = snap(1i64 << (rd_c.1 + t), lsize);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("reduce_tree/{}/n={n}", case_letter(t)),
+            group: (lsize, 1),
+        });
+    }
+
+    let (lsize, _) = sc_c.0.g256();
+    let k = scan_hs(lsize);
+    for t in 0..4 {
+        let n = snap(1i64 << (sc_c.1 + t), lsize);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("scan_hs/{}/n={n}", case_letter(t)),
+            group: (lsize, 1),
+        });
+    }
+
+    let (gx, gy) = st_c.0.g256();
+    let k = stencil3d(gx, gy);
+    for t in 0..4 {
+        let n = snap(1i64 << (st_c.1 + t), lcm(gx, gy));
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("st3d7/{}/n={n}", case_letter(t)),
+            group: (gx, gy),
+        });
+    }
+
+    let (lsize, _) = bm_c.0.g256();
+    let k = bmm(lsize);
+    for t in 0..4 {
+        let nb = snap(1i64 << (bm_c.1 + t), lsize);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("nb", nb)]),
+            label: format!("bmm8/{}/nb={nb}", case_letter(t)),
+            group: (lsize, 1),
+        });
+    }
+
+    let (lsize, _) = ga_c.0.g256();
+    let k = gather_strided(lsize);
+    for t in 0..4 {
+        let n = snap(1i64 << (ga_c.1 + t), lsize);
+        out.push(KernelCase {
+            kernel: k.clone(),
+            env: env(&[("n", n)]),
+            label: format!("gather_s2/{}/n={n}", case_letter(t)),
+            group: (lsize, 1),
+        });
+    }
+    out
+}
+
+/// The full evaluation-kernel zoo for a device: the four §5 test kernels
+/// plus the five zoo kernels — 9 classes × 4 size cases.
+pub fn eval_suite(device: &str) -> Vec<KernelCase> {
+    let mut out = suite(device);
+    out.extend(zoo_suite(device));
     out
 }
 
@@ -478,6 +963,106 @@ mod tests {
                 assert_eq!(case.group.0 * case.group.1, 256, "{}", case.label);
             }
         }
+    }
+
+    #[test]
+    fn eval_suite_has_36_cases_over_9_classes() {
+        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+            let s = eval_suite(dev);
+            assert_eq!(s.len(), 36, "{dev}");
+            let mut classes: Vec<&str> =
+                s.iter().map(|c| c.label.split('/').next().unwrap()).collect();
+            classes.sort();
+            classes.dedup();
+            assert_eq!(classes.len(), 9, "{dev}: {classes:?}");
+            for case in &s {
+                assert_eq!(case.group.0 * case.group.1, 256, "{}", case.label);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_steps_covers_all_group_sizes() {
+        for (lsize, k) in [(128i64, 7i64), (192, 8), (224, 8), (256, 8), (384, 9), (512, 9)] {
+            assert_eq!(reduce_steps(lsize), k, "lsize={lsize}");
+        }
+    }
+
+    #[test]
+    fn reduce_tree_matches_reference() {
+        let lsize = 16i64;
+        let k = reduce_tree(lsize);
+        let n = 4 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap();
+        let out = st.get("rout").unwrap();
+        let want = reduce_reference(n as usize, lsize as usize);
+        for (g, w) in want.iter().enumerate() {
+            assert!((out[g] - w).abs() < 1e-9, "group {g}: {} vs {w}", out[g]);
+        }
+    }
+
+    #[test]
+    fn scan_matches_reference() {
+        let lsize = 16i64;
+        let k = scan_hs(lsize);
+        let n = 3 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap();
+        let out = st.get("sout").unwrap();
+        let want = scan_reference(n as usize, lsize as usize);
+        for i in 0..n as usize {
+            assert!((out[i] - want[i]).abs() < 1e-9, "i={i}: {} vs {}", out[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn stencil3d_matches_reference() {
+        let k = stencil3d(8, 4);
+        let n = 8usize;
+        let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+        let out = st.get("o3").unwrap();
+        let want = stencil3d_reference(n);
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn bmm_matches_reference() {
+        let k = bmm(16);
+        let nb = 32usize;
+        let st = execute(&k, &env(&[("nb", nb as i64)])).unwrap();
+        let out = st.get("bc").unwrap();
+        let want = bmm_reference(nb);
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn gather_matches_reference() {
+        let k = gather_strided(16);
+        let n = 48usize;
+        let st = execute(&k, &env(&[("n", n as i64)])).unwrap();
+        let out = st.get("ey").unwrap();
+        let want = gather_reference(n);
+        for i in 0..n {
+            assert!((out[i] - want[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn reduce_and_scan_insert_per_step_barriers() {
+        use crate::schedule::schedule;
+        let lsize = 256i64;
+        let k = reduce_steps(lsize) as usize;
+        // reduce: one barrier per halving step + one before the final
+        // cross-lane read of cell 0
+        let s = schedule(&reduce_tree(lsize)).unwrap();
+        assert_eq!(s.barrier_sites(), k + 1);
+        // scan: one barrier per doubling step; the final read is under
+        // the same lane mapping as the last write
+        let s = schedule(&scan_hs(lsize)).unwrap();
+        assert_eq!(s.barrier_sites(), k);
     }
 
     #[test]

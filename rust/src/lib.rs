@@ -24,6 +24,8 @@
 //!    loaded through [`runtime`]).
 //! 5. Predict test-kernel run times and report the paper's tables
 //!    ([`report`], [`coordinator`]).
+//! 6. Evaluate the model on *held-out* kernels and size cases over the
+//!    expanded evaluation-kernel zoo ([`crossval`]).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -39,6 +41,7 @@ pub mod perfmodel;
 pub mod harness;
 pub mod runtime;
 pub mod coordinator;
+pub mod crossval;
 pub mod report;
 
 /// Library version (mirrors Cargo.toml).

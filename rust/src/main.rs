@@ -2,13 +2,17 @@
 //! performance model end to end.
 //!
 //! Subcommands:
-//! * `pipeline` — full Figure-1 pipeline over all devices (Table 1 + 2)
+//! * `pipeline` — full Figure-1 pipeline over all devices (Table 1 + 2);
+//!   `--zoo` evaluates the full 9-class kernel zoo instead of the §5 four
+//! * `crossval` — held-out cross-validation over the evaluation-kernel
+//!   zoo (`--split kernel|case`, `--quick` for the smoke campaign)
 //! * `fit`      — calibrate one device and print its weight table
 //! * `predict`  — predict + measure the §5 test kernels on one device
 //! * `devices`  — list the simulated device profiles
-//! * `props`    — show extracted properties for one test kernel
+//! * `props`    — show extracted properties for one evaluation kernel
 
 use uniperf::coordinator::{run_device, run_pipeline, Config, FitBackend};
+use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
 use uniperf::gpusim::all_devices;
 use uniperf::harness::Protocol;
 use uniperf::report::render_table2;
@@ -22,9 +26,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "runs", help: "timing runs per case", is_flag: false, default: Some("30") },
         OptSpec { name: "out", help: "results directory", is_flag: false, default: None },
         OptSpec { name: "workers", help: "worker threads", is_flag: false, default: None },
-        OptSpec { name: "kernel", help: "test kernel: fd5|mm_skinny|conv7|nbody", is_flag: false, default: Some("fd5") },
+        OptSpec { name: "kernel", help: "evaluation kernel: fd5|mm_skinny|conv7|nbody|reduce_tree|scan_hs|st3d7|bmm8|gather_s2", is_flag: false, default: Some("fd5") },
         OptSpec { name: "collapse-utilization", help: "ablation: ignore utilization ratios", is_flag: true, default: None },
         OptSpec { name: "bin-local-strides", help: "extension (§6.2): bin local loads by bank-conflict stride", is_flag: true, default: None },
+        OptSpec { name: "zoo", help: "pipeline: evaluate the full 9-class kernel zoo", is_flag: true, default: None },
+        OptSpec { name: "split", help: "crossval split: kernel|case", is_flag: false, default: Some("kernel") },
+        OptSpec { name: "quick", help: "crossval: cut-down smoke campaign", is_flag: true, default: None },
     ]
 }
 
@@ -58,7 +65,7 @@ fn print_help() {
         uniperf::VERSION
     );
     println!();
-    println!("subcommands: pipeline | fit | predict | devices | props");
+    println!("subcommands: pipeline | crossval | fit | predict | devices | props");
     println!();
     println!("{}", usage("uniperf <subcommand>", "options", &specs()));
 }
@@ -77,6 +84,7 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().map_err(|_| "bad --workers")?;
     }
+    cfg.eval_zoo = args.has_flag("zoo");
     Ok(cfg)
 }
 
@@ -98,6 +106,20 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                 );
             }
             println!("pipeline completed in {:.1}s", t0.elapsed().as_secs_f64());
+            Ok(())
+        }
+        "crossval" => {
+            let cfg = make_config(&args)?;
+            let split = match args.get_or("split", "kernel") {
+                "kernel" => Split::LeaveOneKernelOut,
+                "case" => Split::LeaveOneSizeCaseOut,
+                other => return Err(format!("unknown split '{other}' (kernel|case)")),
+            };
+            let opts = CrossvalOpts { base: cfg, split, quick: args.has_flag("quick") };
+            let t0 = std::time::Instant::now();
+            let result = run_crossval(&opts)?;
+            println!("{}", result.render());
+            println!("crossval completed in {:.1}s", t0.elapsed().as_secs_f64());
             Ok(())
         }
         "fit" => {
@@ -150,7 +172,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
         "props" => {
             let device = args.get_or("device", "k40c").to_string();
             let kernel_name = args.get_or("kernel", "fd5");
-            let suite = uniperf::kernels::test_suite(&device);
+            let suite = uniperf::kernels::eval_suite(&device);
             let case = suite
                 .iter()
                 .find(|c| c.kernel.name == kernel_name)

@@ -173,7 +173,17 @@ impl Model {
 
     /// Relative absolute error |pred - actual| / actual (the paper's
     /// error measure).
+    ///
+    /// A non-positive or non-finite `actual` has no meaningful relative
+    /// error; instead of dividing by zero (which yields `inf` or `NaN`
+    /// depending on `pred`) the documented sentinel `f64::INFINITY` is
+    /// returned, which propagates visibly through
+    /// [`crate::util::linalg::geometric_mean`] rather than poisoning it
+    /// as `NaN`.
     pub fn rel_err(pred: f64, actual: f64) -> f64 {
+        if !actual.is_finite() || actual <= 0.0 {
+            return f64::INFINITY;
+        }
         (pred - actual).abs() / actual
     }
 
@@ -393,5 +403,19 @@ mod tests {
     fn rel_err_definition() {
         assert_eq!(Model::rel_err(1.5, 1.0), 0.5);
         assert_eq!(Model::rel_err(0.5, 1.0), 0.5);
+    }
+
+    #[test]
+    fn rel_err_guards_degenerate_actual() {
+        // zero, negative, NaN and infinite actuals all yield the
+        // documented sentinel instead of a division by zero
+        assert!(Model::rel_err(1.0, 0.0).is_infinite());
+        assert!(Model::rel_err(0.0, 0.0).is_infinite()); // naive 0/0 = NaN
+        assert!(Model::rel_err(1.0, -2.0).is_infinite());
+        assert!(Model::rel_err(1.0, f64::NAN).is_infinite());
+        assert!(Model::rel_err(1.0, f64::INFINITY).is_infinite());
+        // the sentinel flows through a geomean as inf, not NaN
+        let g = crate::util::linalg::geometric_mean(&[0.1, Model::rel_err(1.0, 0.0)]);
+        assert!(g.is_infinite() && g > 0.0);
     }
 }

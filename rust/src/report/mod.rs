@@ -171,6 +171,47 @@ impl Table1 {
     }
 }
 
+/// Render a cross-validation summary: a Table-1-style matrix of
+/// *held-out* geometric-mean relative errors (kernel × device) with the
+/// cross-kernel and cross-GPU marginals and the overall geomean. The
+/// entries of `t` are predictions from models that never saw the
+/// corresponding kernel (or size case) during fitting.
+pub fn render_crossval(split_label: &str, t: &Table1) -> String {
+    let devices = t.devices();
+    let kernels = t.kernels();
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Cross-validation ({split_label}): held-out geometric-mean relative error"
+    );
+    let _ = write!(s, "{:<14}", "Kernel");
+    for d in &devices {
+        let _ = write!(s, " | {:>9}", d);
+    }
+    let _ = writeln!(s, " | cross-GPU");
+    let line_len = 14 + devices.len() * 12 + 12;
+    let _ = writeln!(s, "{}", "-".repeat(line_len));
+    for k in &kernels {
+        let _ = write!(s, "{:<14}", k);
+        for d in &devices {
+            let _ = write!(s, " | {:>9.3}", t.kernel_device_err(k, d));
+        }
+        let _ = writeln!(s, " | {:>9.3}", t.kernel_err(k));
+    }
+    let _ = writeln!(s, "{}", "-".repeat(line_len));
+    let _ = write!(s, "{:<14}", "cross-kernel");
+    for d in &devices {
+        let _ = write!(s, " | {:>9.3}", t.device_err(d));
+    }
+    let _ = writeln!(s, " | {:>9.3}", t.overall_err());
+    let _ = writeln!(
+        s,
+        "overall held-out geomean relative error: {:.3}",
+        t.overall_err()
+    );
+    s
+}
+
 /// Render the paper's Table 2: the fitted weight vector with
 /// per-property labels, in units of seconds per operation.
 pub fn render_table2(model: &Model, schema: &Schema) -> String {
@@ -231,6 +272,23 @@ mod tests {
     fn render_contains_all_sections() {
         let r = sample_table().render();
         for needle in ["fd5", "nbody", "titan_x", "k40c", "cross-kernel", "a.", "b."] {
+            assert!(r.contains(needle), "missing {needle}:\n{r}");
+        }
+    }
+
+    #[test]
+    fn render_crossval_has_matrix_and_marginals() {
+        let r = render_crossval("leave-one-kernel-out", &sample_table());
+        for needle in [
+            "leave-one-kernel-out",
+            "fd5",
+            "nbody",
+            "titan_x",
+            "k40c",
+            "cross-GPU",
+            "cross-kernel",
+            "overall held-out geomean",
+        ] {
             assert!(r.contains(needle), "missing {needle}:\n{r}");
         }
     }

@@ -15,6 +15,8 @@
 //! * `predict.hlo.txt`: P (MAX_BATCH × MAX_PROPS) f64, w (MAX_PROPS)
 //!   → times (MAX_BATCH)
 
+mod xla;
+
 use crate::perfmodel::Solver;
 use crate::util::linalg::Mat;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,123 @@
+//! Minimal in-tree stand-in for the vendored `xla`/PJRT bindings.
+//!
+//! The build environment is offline and the vendored xla closure is not
+//! present in this tree, so this module presents exactly the API surface
+//! [`super`] (the PJRT loader) consumes and reports unavailability from
+//! every entry point that would need the real runtime. The error string
+//! is surfaced through `XlaSolver::from_artifacts`, where
+//! `FitBackend::Auto` (and the integration tests) already treat it as
+//! "artifacts not built" and fall back to the native solver. Dropping
+//! the vendored closure into the tree and re-pointing this `mod` at it
+//! restores the production path without touching the loader.
+
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "vendored xla/PJRT closure not present in this tree (native solver fallback applies)";
+
+/// Error type mirroring the vendored bindings' (only `Display` is
+/// consumed by the loader).
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Host literal (flat f64 buffer + shape).
+pub struct Literal {
+    data: Vec<f64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { data: data.to_vec() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone() })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailability() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("fit.hlo.txt")).is_err());
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[2, 2]).is_ok());
+        assert!(lit.reshape(&[3, 2]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<f64>().is_err());
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("native solver fallback"));
+    }
+}

@@ -229,12 +229,29 @@ pub fn qr_solve(a: &Mat, b: &[f64]) -> Vec<f64> {
 }
 
 /// Geometric mean of strictly positive values (Fleming & Wallace, the
-/// paper's §5 summary statistic). Zero values are clamped to `1e-12`.
+/// paper's §5 summary statistic). Degenerate entries are handled
+/// explicitly rather than silently corrupting the mean:
+///
+/// * non-positive values are clamped to `1e-12` (a zero error would
+///   otherwise annihilate the whole mean);
+/// * `+inf` entries (the `Model::rel_err` sentinel for a degenerate
+///   measurement) propagate to an infinite mean so the failure stays
+///   visible;
+/// * `NaN` entries (e.g. predictions from a broken fit) are treated
+///   like the `+inf` sentinel — the mean becomes `+inf` rather than
+///   the `NaN` poisoning every comparison, and unlike skipping, the
+///   failure cannot masquerade as a perfect score.
 pub fn geometric_mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let s: f64 = xs.iter().map(|&x| x.max(1e-12).ln()).sum();
+    let mut s = 0.0;
+    for &x in xs {
+        if x.is_nan() {
+            return f64::INFINITY;
+        }
+        s += x.max(1e-12).ln();
+    }
     (s / xs.len() as f64).exp()
 }
 
@@ -327,6 +344,24 @@ mod tests {
             - (0.16f64 * 0.14 * 0.06 * 0.42).powf(0.25))
         .abs()
             < 1e-12);
+    }
+
+    #[test]
+    fn geomean_zero_and_nan_edge_cases() {
+        // empty slices carry no information
+        assert_eq!(geometric_mean(&[]), 0.0);
+        // NaN entries surface as the inf sentinel, never as NaN (which
+        // would poison comparisons) or as a skipped perfect score
+        let g = geometric_mean(&[4.0, f64::NAN, 1.0]);
+        assert!(g.is_infinite() && g > 0.0, "{g}");
+        let g = geometric_mean(&[f64::NAN, f64::NAN]);
+        assert!(g.is_infinite() && g > 0.0, "{g}");
+        // zeros clamp to 1e-12 instead of annihilating the mean
+        let z = geometric_mean(&[0.0, 0.0]);
+        assert!(z > 0.9e-12 && z < 1.1e-12, "{z}");
+        assert!(geometric_mean(&[1.0, 0.0]) > 0.0);
+        // the rel_err inf sentinel stays visible
+        assert!(geometric_mean(&[1.0, f64::INFINITY]).is_infinite());
     }
 
     #[test]

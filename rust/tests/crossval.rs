@@ -1,0 +1,160 @@
+//! Integration tests for the cross-validation subsystem and the PR-1
+//! reproducibility invariants: held-out evaluation over the expanded
+//! kernel zoo, the `eval_zoo` pipeline flag, and golden determinism of
+//! campaign → fit → report under reruns and JSON persistence.
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::crossval::{quick_campaign_case, run_crossval, CrossvalOpts, Split};
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{campaign_from_json, campaign_to_json, measure_cases, run_campaign, Protocol};
+use uniperf::perfmodel::{fit, NativeSolver};
+use uniperf::report::{Table1, Table1Entry};
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::json::Json;
+
+fn workers() -> usize {
+    uniperf::util::executor::default_workers()
+}
+
+/// The cut-down campaign used by the golden-determinism tests: the same
+/// predicate quick-mode crossval uses, so the golden pins the campaign
+/// that actually runs in CI's smoke step.
+fn small_campaign_cases(device: &str) -> Vec<uniperf::kernels::KernelCase> {
+    uniperf::kernels::measurement_suite(device)
+        .into_iter()
+        .filter(|c| quick_campaign_case(&c.label))
+        .collect()
+}
+
+#[test]
+fn quick_crossval_loko_two_devices() {
+    let opts = CrossvalOpts {
+        base: Config {
+            devices: vec!["k40c".into(), "r9_fury".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneKernelOut,
+        quick: true,
+    };
+    let r = run_crossval(&opts).expect("crossval");
+    // 9 kernel classes held out once per device
+    assert_eq!(r.folds.len(), 18);
+    for f in &r.folds {
+        assert!(!f.entries.is_empty(), "empty fold {}/{}", f.device, f.fold);
+        for e in &f.entries {
+            assert_eq!(e.kernel, f.fold, "fold must hold out exactly its kernel");
+            assert!(e.predicted_s.is_finite(), "{}/{}/{}", e.device, e.kernel, e.case);
+            assert!(e.actual_s > 0.0);
+        }
+        assert!(f.n_train > f.entries.len(), "training set must dominate the fold");
+    }
+    // the table covers all 9 classes on both devices
+    assert_eq!(r.table.kernels().len(), 9);
+    assert_eq!(r.table.devices().len(), 2);
+    assert!(r.overall_err().is_finite());
+    let rendered = r.render();
+    for needle in ["reduce_tree", "scan_hs", "st3d7", "bmm8", "gather_s2", "overall"] {
+        assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
+    }
+}
+
+#[test]
+fn crossval_is_deterministic_across_runs() {
+    let opts = CrossvalOpts {
+        base: Config {
+            devices: vec!["c2070".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneSizeCaseOut,
+        quick: true,
+    };
+    let r1 = run_crossval(&opts).expect("crossval run 1");
+    let r2 = run_crossval(&opts).expect("crossval run 2");
+    assert_eq!(r1.table.error_matrix(), r2.table.error_matrix());
+    assert_eq!(r1.render(), r2.render());
+}
+
+#[test]
+fn pipeline_eval_zoo_flag_expands_test_suite() {
+    let cfg = Config {
+        devices: vec!["k40c".into()],
+        backend: FitBackend::Native,
+        eval_zoo: true,
+        ..Config::default()
+    };
+    let schema = Schema::full();
+    let dr = run_device("k40c", &schema, &cfg).expect("pipeline");
+    // 9 kernel classes x 4 size cases
+    assert_eq!(dr.tests.len(), 36);
+    let mut table = Table1::default();
+    for (kernel, case, pred, act) in &dr.tests {
+        assert!(pred.is_finite() && *act > 0.0, "{kernel}/{case}");
+        table.push(Table1Entry {
+            device: "k40c".into(),
+            kernel: kernel.clone(),
+            case: case.clone(),
+            predicted_s: *pred,
+            actual_s: *act,
+        });
+    }
+    assert_eq!(table.kernels().len(), 9);
+    let rendered = table.render();
+    for needle in ["fd5", "nbody", "reduce_tree", "scan_hs", "st3d7", "bmm8", "gather_s2"] {
+        assert!(rendered.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn golden_determinism_campaign_fit_and_table() {
+    let schema = Schema::full();
+    let protocol = Protocol::default();
+    let opts = ExtractOpts::default();
+    let device = "c2070";
+
+    // the same cut-down campaign, run twice from scratch
+    let run_once = || {
+        let gpu = SimGpu::named(device).unwrap();
+        let cases = small_campaign_cases(device);
+        let (pm, overhead) =
+            run_campaign(&gpu, &cases, &schema, &protocol, opts, workers()).expect("campaign");
+        let model = fit(device, &pm, &schema, &NativeSolver::new()).expect("fit");
+        // predict + measure a slice of the evaluation zoo
+        let zoo: Vec<_> = uniperf::kernels::eval_suite(device)
+            .into_iter()
+            .filter(|c| c.label.split('/').nth(1) == Some("a"))
+            .collect();
+        let ms = measure_cases(&gpu, &zoo, &schema, &protocol, opts, workers()).unwrap();
+        let mut table = Table1::default();
+        for (c, m) in zoo.iter().zip(&ms) {
+            let mut parts = c.label.split('/');
+            table.push(Table1Entry {
+                device: device.into(),
+                kernel: parts.next().unwrap().into(),
+                case: parts.next().unwrap().into(),
+                predicted_s: model.predict(&m.props),
+                actual_s: m.time_s,
+            });
+        }
+        (pm, overhead, model, table)
+    };
+    let (pm1, overhead1, model1, table1) = run_once();
+    let (pm2, _, model2, table2) = run_once();
+
+    // byte-identical model serialization across reruns
+    let j1 = model1.to_json(&schema).pretty();
+    let j2 = model2.to_json(&schema).pretty();
+    assert_eq!(j1, j2, "model JSON must be byte-identical across reruns");
+    // identical error matrices and rendering
+    assert_eq!(table1.error_matrix(), table2.error_matrix());
+    assert_eq!(table1.render(), table2.render());
+
+    // JSON persistence round trip refits to the byte-identical model
+    let cj = campaign_to_json(&pm1, device, overhead1);
+    let (pm3, dev, _) = campaign_from_json(&Json::parse(&cj.pretty()).unwrap()).unwrap();
+    assert_eq!(dev, device);
+    assert_eq!(pm3.n_cases(), pm2.n_cases());
+    let model3 = fit(device, &pm3, &schema, &NativeSolver::new()).unwrap();
+    assert_eq!(j1, model3.to_json(&schema).pretty(), "round-trip model JSON differs");
+}

@@ -8,12 +8,18 @@ use uniperf::kernels::measure::{
     GlobalAccessConfig, TransposeVariant,
 };
 use uniperf::kernels::testks::{
-    conv_reference, convolution, fd_reference, fd_stencil, nbody, nbody_reference,
+    bmm, bmm_reference, conv_reference, convolution, fd_reference, fd_stencil,
+    gather_reference, gather_strided, nbody, nbody_reference, reduce_reference, reduce_tree,
+    scan_hs, scan_reference, stencil3d, stencil3d_reference,
 };
 use uniperf::qpoly::env;
 
 /// All 2-D group shapes appearing in the six group sets.
 const SHAPES_2D: [(i64, i64); 5] = [(16, 12), (16, 14), (16, 16), (24, 16), (32, 16)];
+
+/// All 1-D group sizes appearing in the three 1-D group sets (and hence
+/// in the zoo kernels' configuration tables).
+const SHAPES_1D: [i64; 6] = [128, 192, 224, 256, 384, 512];
 
 #[test]
 fn mm_tiled_all_group_shapes() {
@@ -147,6 +153,92 @@ fn test_kernels_all_device_group_configs() {
                 (out[i] - want[i]).abs() / want[i] < 1e-10,
                 "nbody l={lsize} i={i}"
             );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Numeric-conformance sweep for the zoo kernels: execute at small sizes
+// across every group shape their configuration tables use and compare
+// elementwise against the scalar references (the mm_tiled pattern above).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reduce_tree_all_group_shapes() {
+    for lsize in SHAPES_1D {
+        let k = reduce_tree(lsize);
+        let n = 3 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap_or_else(|e| panic!("l={lsize}: {e}"));
+        let out = st.get("rout").unwrap();
+        let want = reduce_reference(n as usize, lsize as usize);
+        for (g, w) in want.iter().enumerate() {
+            assert!(
+                (out[g] - w).abs() < 1e-9,
+                "reduce_tree l={lsize} group {g}: {} vs {w}",
+                out[g]
+            );
+        }
+    }
+}
+
+#[test]
+fn scan_all_group_shapes() {
+    for lsize in SHAPES_1D {
+        let k = scan_hs(lsize);
+        let n = 2 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap_or_else(|e| panic!("l={lsize}: {e}"));
+        let out = st.get("sout").unwrap();
+        let want = scan_reference(n as usize, lsize as usize);
+        for i in 0..n as usize {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-9,
+                "scan_hs l={lsize} i={i}: {} vs {}",
+                out[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn stencil3d_all_group_shapes() {
+    for (gx, gy) in SHAPES_2D {
+        let k = stencil3d(gx, gy);
+        // smallest size divisible by both group extents
+        let n = gx * gy / gcd(gx, gy);
+        let st = execute(&k, &env(&[("n", n)])).unwrap_or_else(|e| panic!("{gx}x{gy}: {e}"));
+        let out = st.get("o3").unwrap();
+        let want = stencil3d_reference(n as usize);
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "st3d7 {gx}x{gy} i={i}");
+        }
+    }
+}
+
+#[test]
+fn bmm_all_group_shapes() {
+    for lsize in SHAPES_1D {
+        let k = bmm(lsize);
+        let nb = 2 * lsize;
+        let st = execute(&k, &env(&[("nb", nb)])).unwrap_or_else(|e| panic!("l={lsize}: {e}"));
+        let out = st.get("bc").unwrap();
+        let want = bmm_reference(nb as usize);
+        for i in 0..want.len() {
+            assert!((out[i] - want[i]).abs() < 1e-9, "bmm8 l={lsize} i={i}");
+        }
+    }
+}
+
+#[test]
+fn gather_all_group_shapes() {
+    for lsize in SHAPES_1D {
+        let k = gather_strided(lsize);
+        let n = 2 * lsize;
+        let st = execute(&k, &env(&[("n", n)])).unwrap_or_else(|e| panic!("l={lsize}: {e}"));
+        let out = st.get("ey").unwrap();
+        let want = gather_reference(n as usize);
+        for i in 0..n as usize {
+            assert!((out[i] - want[i]).abs() < 1e-9, "gather_s2 l={lsize} i={i}");
         }
     }
 }

@@ -342,6 +342,109 @@ fn kernel_props_tape_eval_matches_symbolic_eval() {
 }
 
 #[test]
+fn zoo_kernel_counts_match_closed_forms() {
+    // Each zoo kernel's extracted op/byte counts (evaluated through the
+    // compiled tapes of KernelProps::eval) must equal hand-derived
+    // closed-form counts at randomized parameter values.
+    use uniperf::isl::progression::StrideClass;
+    use uniperf::kernels::testks as tk;
+    use uniperf::lpir::OpKind;
+    use uniperf::stats::{Dir, Prop};
+    quickcheck("zoo_closed_form_counts", |rng| {
+        let schema = Schema::full();
+        let eval = |k: &uniperf::lpir::Kernel,
+                    e: &uniperf::util::intern::Env|
+         -> Result<Vec<f64>, String> {
+            extract(k, e, ExtractOpts::default())?.eval(&schema, e)
+        };
+        let idx = |p: &Prop| schema.index_of(p).unwrap();
+        let load = |class: StrideClass| Prop::MemGlobal { bits: 32, dir: Dir::Load, class };
+        let store = |class: StrideClass| Prop::MemGlobal { bits: 32, dir: Dir::Store, class };
+        let chk = |got: f64, want: f64, what: &str| -> Result<(), String> {
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{what}: got {got}, want {want}"))
+            }
+        };
+
+        // --- reduce_tree: k halving steps over lsize lanes ----------------
+        let lsize = *rng.choose(&[128i64, 192, 224, 256, 384, 512]);
+        let groups = rng.range_i64(1, 9);
+        let n = (lsize * groups) as f64;
+        let steps = tk::reduce_steps(lsize) as f64;
+        let e = env(&[("n", lsize * groups)]);
+        let v = eval(&tk::reduce_tree(lsize), &e)?;
+        chk(v[idx(&Prop::LocalLoad { bits: 32 })], (2.0 * steps + 1.0) * n, "reduce local")?;
+        chk(v[idx(&Prop::Op { kind: OpKind::AddSub, bits: 32 })], steps * n, "reduce adds")?;
+        chk(v[idx(&load(StrideClass::Unit))], n, "reduce unit loads")?;
+        chk(v[idx(&store(StrideClass::Uniform))], n, "reduce uniform stores")?;
+        chk(v[idx(&Prop::Barriers)], (steps + 1.0) * n, "reduce barriers")?;
+        chk(v[idx(&Prop::WorkGroups)], groups as f64, "reduce groups")?;
+
+        // --- scan_hs: k doubling steps, barrier-free final read -----------
+        let v = eval(&tk::scan_hs(lsize), &e)?;
+        chk(v[idx(&Prop::LocalLoad { bits: 32 })], (2.0 * steps + 1.0) * n, "scan local")?;
+        chk(v[idx(&Prop::Op { kind: OpKind::AddSub, bits: 32 })], steps * n, "scan adds")?;
+        chk(v[idx(&load(StrideClass::Unit))], n, "scan unit loads")?;
+        chk(v[idx(&store(StrideClass::Unit))], n, "scan unit stores")?;
+        chk(v[idx(&Prop::Barriers)], steps * n, "scan barriers")?;
+        chk(v[idx(&Prop::WorkGroups)], groups as f64, "scan groups")?;
+
+        // --- st3d7: 6 adds (5 in Σ_6 + the final combine), 2 muls,
+        //     7 unit loads per grid point -----------------------------------
+        let (gx, gy) = (16i64, 16i64);
+        let nn = 16 * rng.range_i64(1, 5);
+        let n3 = (nn * nn * nn) as f64;
+        let e = env(&[("n", nn)]);
+        let v = eval(&tk::stencil3d(gx, gy), &e)?;
+        chk(v[idx(&Prop::Op { kind: OpKind::AddSub, bits: 32 })], 6.0 * n3, "st3d adds")?;
+        chk(v[idx(&Prop::Op { kind: OpKind::Mul, bits: 32 })], 2.0 * n3, "st3d muls")?;
+        chk(v[idx(&load(StrideClass::Unit))], 7.0 * n3, "st3d loads")?;
+        chk(v[idx(&store(StrideClass::Unit))], n3, "st3d stores")?;
+        chk(v[idx(&Prop::Barriers)], 0.0, "st3d barriers")?;
+        chk(v[idx(&Prop::WorkGroups)], ((nn / gx) * (nn / gy)) as f64, "st3d groups")?;
+
+        // --- bmm8: one 8x8x8 product per thread, batch-innermost ----------
+        let nb = lsize * rng.range_i64(1, 9);
+        let d3 = (tk::BMM_D * tk::BMM_D * tk::BMM_D) as f64; // 512
+        let e = env(&[("nb", nb)]);
+        let v = eval(&tk::bmm(lsize), &e)?;
+        chk(v[idx(&Prop::Op { kind: OpKind::Mul, bits: 32 })], d3 * nb as f64, "bmm muls")?;
+        chk(v[idx(&Prop::Op { kind: OpKind::AddSub, bits: 32 })], d3 * nb as f64, "bmm adds")?;
+        chk(v[idx(&load(StrideClass::Unit))], 2.0 * d3 * nb as f64, "bmm loads")?;
+        chk(
+            v[idx(&store(StrideClass::Unit))],
+            (tk::BMM_D * tk::BMM_D * nb) as f64,
+            "bmm stores",
+        )?;
+        chk(v[idx(&Prop::WorkGroups)], (nb / lsize) as f64, "bmm groups")?;
+
+        // --- gather_s2: 8 unit coefficient loads + 8 half-utilized
+        //     stride-2 gather loads per row --------------------------------
+        let n = lsize * rng.range_i64(1, 9);
+        let diags = tk::GATHER_DIAGS as f64;
+        let e = env(&[("n", n)]);
+        let v = eval(&tk::gather_strided(lsize), &e)?;
+        chk(v[idx(&Prop::Op { kind: OpKind::Mul, bits: 32 })], diags * n as f64, "ell muls")?;
+        chk(
+            v[idx(&Prop::Op { kind: OpKind::AddSub, bits: 32 })],
+            diags * n as f64,
+            "ell adds",
+        )?;
+        chk(v[idx(&load(StrideClass::Unit))], diags * n as f64, "ell unit loads")?;
+        chk(
+            v[idx(&load(StrideClass::Frac { numer: 1, denom: 2 }))],
+            diags * n as f64,
+            "ell stride-2 gather loads",
+        )?;
+        chk(v[idx(&store(StrideClass::Unit))], n as f64, "ell stores")?;
+        chk(v[idx(&Prop::WorkGroups)], (n / lsize) as f64, "ell groups")?;
+        Ok(())
+    });
+}
+
+#[test]
 fn interpreter_matches_references_on_library_kernels() {
     // the compiled (slot-frame) interpreter must reproduce the plain
     // reference implementations on two library kernels
