@@ -24,7 +24,7 @@ fn test_err(
     let protocol = Protocol::default();
     let mut cache = PropsCache::default();
     let mut errs = Vec::new();
-    for case in kernels::test_suite(gpu.profile.name) {
+    for case in kernels::test_suite(&gpu.profile) {
         let props = cache.props_for(&case, extract_opts).unwrap();
         let pred = model.predict_kernel(schema, &props, &case.env).unwrap();
         let actual =
@@ -60,7 +60,7 @@ fn main() {
     let solver = NativeSolver::new();
     let workers = uniperf::util::executor::default_workers();
 
-    let cases = kernels::measurement_suite(device);
+    let cases = kernels::measurement_suite(&gpu.profile);
     let (pm, _) =
         run_campaign(&gpu, &cases, &schema, &protocol, ExtractOpts::default(), workers).unwrap();
 

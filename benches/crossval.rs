@@ -1,11 +1,14 @@
 //! Crossval smoke: run the held-out cross-validation subsystem in quick
-//! mode, record its wall time (the CI perf-trajectory artifact
-//! `BENCH_crossval.json`), and hard-fail if any fold errors out or
-//! produces a degenerate prediction.
+//! mode, record its wall time plus every fold's fitted weight table
+//! (the CI perf-trajectory artifact `BENCH_crossval.json`, which
+//! thereby doubles as the weight-drift record across PRs), and
+//! hard-fail if any fold errors out or produces a degenerate
+//! prediction.
 
 use uniperf::coordinator::{Config, FitBackend};
 use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
 use uniperf::util::bench::Bench;
+use uniperf::util::json::Json;
 
 fn main() {
     let mut b = Bench::end_to_end();
@@ -60,5 +63,23 @@ fn main() {
         loko.overall_err(),
         loso.overall_err()
     );
-    b.finish_json("crossval");
+    // the kernel-split must see a non-zero uniform-store weight on at
+    // least one device now that sg_storeuni closed the §4.1 gap
+    let uniform_store_fitted = loko.folds.iter().any(|f| {
+        f.weights
+            .iter()
+            .any(|(label, w)| label.contains("stride-0 stores") && *w != 0.0)
+    });
+    assert!(uniform_store_fitted, "no fold fitted the uniform-store column");
+
+    // persist timings + the per-fold fitted weight tables (and held-out
+    // errors) so weight drift is trackable across PRs from the artifact
+    b.finish("crossval");
+    let mut j = b.to_json("crossval");
+    if let Json::Obj(m) = &mut j {
+        m.insert("crossval_kernel".into(), loko.to_json());
+        m.insert("crossval_case".into(), loso.to_json());
+    }
+    std::fs::write("BENCH_crossval.json", j.pretty()).expect("write BENCH_crossval.json");
+    println!("wrote BENCH_crossval.json");
 }

@@ -15,7 +15,7 @@ fn main() {
     let mut b = Bench::new();
     let schema = Schema::full();
     let gpu = SimGpu::named("r9_fury").unwrap();
-    let cases = uniperf::kernels::measurement_suite("r9_fury");
+    let cases = uniperf::kernels::measurement_suite(&gpu.profile);
     let (pm, _) = run_campaign(
         &gpu,
         &cases,

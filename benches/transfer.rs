@@ -1,0 +1,76 @@
+//! Transfer smoke: leave-one-device-out cross-validation over the full
+//! widened device registry (the four paper devices plus the four
+//! synthetic cross-generation parts) in quick mode. Records wall time,
+//! the device×device transfer-error matrix and every source fold's
+//! fitted weight table to `BENCH_transfer.json`, and hard-fails if any
+//! fold errors out or produces a degenerate prediction.
+
+use uniperf::coordinator::{Config, FitBackend};
+use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
+use uniperf::gpusim::registry;
+use uniperf::util::bench::Bench;
+use uniperf::util::json::Json;
+
+fn main() {
+    let mut b = Bench::end_to_end();
+    // one timed iteration is 8 quick campaigns + 8 transfer folds
+    b.samples = 2;
+
+    let devices = registry::builtins().names();
+    let n_devices = devices.len();
+    assert!(n_devices >= 8, "widened registry should hold >= 8 devices");
+    let opts = CrossvalOpts {
+        base: Config {
+            devices,
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneDeviceOut,
+        quick: true,
+    };
+    // keep the last timed result for verification instead of paying for
+    // an extra untimed run (the transfer split is deterministic, so any
+    // iteration's result is *the* result)
+    let mut last = None;
+    b.run("transfer/lodo/quick/registry", || {
+        last = Some(run_crossval(&opts).expect("transfer fold failed"));
+    });
+    let r = last.expect("bench ran at least once");
+    println!("{}", r.render());
+    assert_eq!(r.folds.len(), n_devices, "one fold per source device");
+    let tm = r.transfer.as_ref().expect("device split yields a transfer matrix");
+    assert_eq!(tm.devices.len(), n_devices);
+    for f in &r.folds {
+        assert!(!f.entries.is_empty(), "empty fold {}", f.fold);
+        assert!(!f.weights.is_empty(), "fold {} lost its weight table", f.fold);
+        for e in &f.entries {
+            assert!(
+                e.predicted_s.is_finite() && e.actual_s > 0.0,
+                "degenerate prediction for {}->{}/{}/{}",
+                f.fold,
+                e.device,
+                e.kernel,
+                e.case
+            );
+        }
+    }
+    for (si, row) in tm.err.iter().enumerate() {
+        for (ti, cell) in row.iter().enumerate() {
+            if si == ti {
+                assert!(cell.is_none(), "diagonal ({si},{ti}) must be held out");
+            } else {
+                let e = cell.expect("off-diagonal cell missing");
+                assert!(e.is_finite(), "transfer error ({si},{ti}) not finite");
+            }
+        }
+    }
+    println!("overall transfer geomean relative error: {:.3}", tm.overall_err());
+
+    b.finish("transfer");
+    let mut j = b.to_json("transfer");
+    if let Json::Obj(m) = &mut j {
+        m.insert("crossval_device".into(), r.to_json());
+    }
+    std::fs::write("BENCH_transfer.json", j.pretty()).expect("write BENCH_transfer.json");
+    println!("wrote BENCH_transfer.json");
+}

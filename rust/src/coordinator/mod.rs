@@ -7,7 +7,7 @@
 //! over cases. Results (campaigns, models, tables) can be persisted to a
 //! JSON results directory.
 
-use crate::gpusim::SimGpu;
+use crate::gpusim::{registry, DeviceRegistry, SimGpu};
 use crate::harness::{self, Protocol};
 use crate::kernels;
 use crate::perfmodel::{self, Model, NativeSolver, Solver};
@@ -30,7 +30,12 @@ pub enum FitBackend {
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// devices to run, by name; resolved through [`Config::registry`]
     pub devices: Vec<String>,
+    /// the device catalogue names resolve against. Defaults to the
+    /// built-in registry; the CLI's `--devices <profiles.json>` flag
+    /// extends it with user profiles at runtime.
+    pub registry: DeviceRegistry,
     pub protocol: Protocol,
     pub backend: FitBackend,
     pub extract: ExtractOpts,
@@ -51,6 +56,7 @@ impl Default for Config {
                 "k40c".into(),
                 "r9_fury".into(),
             ],
+            registry: registry::builtins().clone(),
             protocol: Protocol::default(),
             backend: FitBackend::Auto,
             extract: ExtractOpts::default(),
@@ -100,10 +106,16 @@ pub fn run_device(
     schema: &Schema,
     cfg: &Config,
 ) -> Result<DeviceResult, String> {
-    let gpu = SimGpu::named(device).ok_or_else(|| format!("unknown device '{device}'"))?;
+    let profile = cfg
+        .registry
+        .get(device)
+        .cloned()
+        .ok_or_else(|| format!("unknown device '{device}'"))?;
+    let gpu = SimGpu::new(profile);
 
-    // 1. measurement campaign (§4.1 + §4.2)
-    let cases = kernels::measurement_suite(device);
+    // 1. measurement campaign (§4.1 + §4.2), capability-derived from
+    //    the profile
+    let cases = kernels::measurement_suite(&gpu.profile);
     let (pm, overhead) =
         harness::run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, cfg.workers)?;
 
@@ -115,9 +127,9 @@ pub fn run_device(
     //    + measure, through the same parallel measurement path the
     //    cross-validation subsystem uses
     let suite = if cfg.eval_zoo {
-        kernels::eval_suite(device)
+        kernels::eval_suite(&gpu.profile)
     } else {
-        kernels::test_suite(device)
+        kernels::test_suite(&gpu.profile)
     };
     let measurements =
         harness::measure_cases(&gpu, &suite, schema, &cfg.protocol, cfg.extract, cfg.workers)?;

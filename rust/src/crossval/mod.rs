@@ -7,28 +7,38 @@
 //! systematically. Following the cross-machine follow-up work (Stevens &
 //! Klöckner, arXiv:1904.09538; Braun et al., arXiv:2001.07104), this
 //! module treats the evaluation-kernel zoo ([`crate::kernels::eval_suite`],
-//! 9 classes × 4 size cases) as data and evaluates two splits per device:
+//! 9 classes × 4 size cases) as data and evaluates three splits:
 //!
 //! * **leave-one-kernel-out** — fit on the measurement campaign plus all
 //!   zoo cases except one kernel class; predict that class's cases;
 //! * **leave-one-size-case-out** — fit on the campaign plus all zoo
-//!   cases except one size-case letter (`a`–`d`); predict that letter.
+//!   cases except one size-case letter (`a`–`d`); predict that letter;
+//! * **leave-one-device-out** — fit on one *source* device's campaign
+//!   plus its own zoo, then predict every **other** device's held-out
+//!   zoo timings with those weights (the property vectors are
+//!   hardware-independent; only the weights carry the device), yielding
+//!   a device×device transfer-error matrix
+//!   ([`crate::report::TransferMatrix`]).
 //!
 //! Per device the campaign and the zoo measurements run **once** (with
 //! symbolic extraction cached through [`crate::harness::PropsCache`] via
-//! [`crate::harness::measure_cases`]); the (device × fold) fit/predict
-//! jobs then fan out on [`crate::util::executor::par_map`]. Results are
-//! collected into a [`crate::report::Table1`] of held-out predictions
-//! and rendered Table-1-style by [`crate::report::render_crossval`].
+//! [`crate::harness::measure_cases`]); the (device × fold) — or, for the
+//! device split, (source × target) — jobs then fan out on
+//! [`crate::util::executor::par_map`]. Results are collected into a
+//! [`crate::report::Table1`] of held-out predictions and rendered by
+//! [`crate::report::render_crossval`] / [`crate::report::render_transfer`].
+//! Every fold also retains its fitted weight table, persisted in the
+//! crossval JSON output for weight-drift analysis across PRs.
 
 use crate::coordinator::{make_solver, Config};
-use crate::gpusim::SimGpu;
+use crate::gpusim::{DeviceProfile, SimGpu};
 use crate::harness::{measure_cases, run_campaign};
 use crate::kernels;
 use crate::perfmodel::{self, PropertyMatrix, Solver};
-use crate::report::{render_crossval, Table1, Table1Entry};
+use crate::report::{render_crossval, render_transfer, Table1, Table1Entry, TransferMatrix};
 use crate::stats::Schema;
 use crate::util::executor::par_map;
+use crate::util::json::Json;
 use crate::util::linalg::geometric_mean;
 use std::fmt::Write as _;
 
@@ -39,6 +49,9 @@ pub enum Split {
     LeaveOneKernelOut,
     /// hold out one size-case letter per fold (4 folds per device)
     LeaveOneSizeCaseOut,
+    /// one fold per *source* device: fit there, predict every other
+    /// device's zoo (cross-device transfer)
+    LeaveOneDeviceOut,
 }
 
 impl Split {
@@ -47,13 +60,15 @@ impl Split {
         match self {
             Split::LeaveOneKernelOut => "leave-one-kernel-out",
             Split::LeaveOneSizeCaseOut => "leave-one-size-case-out",
+            Split::LeaveOneDeviceOut => "leave-one-device-out",
         }
     }
 
-    /// The fold key of a zoo case under this split.
+    /// The fold key of a zoo case under the per-device splits (the
+    /// device split keys folds by device, not by case).
     fn key<'a>(&self, kernel: &'a str, case: &'a str) -> &'a str {
         match self {
-            Split::LeaveOneKernelOut => kernel,
+            Split::LeaveOneKernelOut | Split::LeaveOneDeviceOut => kernel,
             Split::LeaveOneSizeCaseOut => case,
         }
     }
@@ -102,16 +117,21 @@ struct DeviceCtx {
     solver: Box<dyn Solver + Send + Sync>,
 }
 
-/// Outcome of one (device, fold) fit.
+/// Outcome of one fold's fit: a (device, held-out key) pair for the
+/// per-device splits, or a source device for the transfer split.
 #[derive(Clone, Debug)]
 pub struct FoldResult {
+    /// device the fold's weights were fitted on
     pub device: String,
-    /// held-out kernel name or size-case letter
+    /// held-out kernel name, size-case letter, or source device name
     pub fold: String,
     /// training cases (campaign + retained zoo cases)
     pub n_train: usize,
     /// training-set geomean relative error of the fold's model
     pub train_err: f64,
+    /// the fold's fitted weight table (property label → weight), kept
+    /// for weight-drift analysis across PRs
+    pub weights: Vec<(String, f64)>,
     /// held-out predictions
     pub entries: Vec<Table1Entry>,
 }
@@ -122,6 +142,31 @@ impl FoldResult {
         let errs: Vec<f64> = self.entries.iter().map(Table1Entry::rel_err).collect();
         geometric_mean(&errs)
     }
+
+    /// JSON form: fold identity, errors and the fitted weight table.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", Json::Str(self.device.clone())),
+            ("fold", Json::Str(self.fold.clone())),
+            ("n_train", Json::Num(self.n_train as f64)),
+            ("train_err", Json::Num(self.train_err)),
+            ("heldout_err", Json::Num(self.heldout_err())),
+            (
+                "weights",
+                Json::Arr(
+                    self.weights
+                        .iter()
+                        .map(|(label, w)| {
+                            Json::obj(vec![
+                                ("prop", Json::Str(label.clone())),
+                                ("weight", Json::Num(*w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// Full cross-validation output.
@@ -131,6 +176,8 @@ pub struct CrossvalResult {
     pub folds: Vec<FoldResult>,
     /// all held-out predictions, Table-1 shaped
     pub table: Table1,
+    /// the device×device matrix (present for the device split only)
+    pub transfer: Option<TransferMatrix>,
 }
 
 impl CrossvalResult {
@@ -144,10 +191,14 @@ impl CrossvalResult {
         self.table.device_err(device)
     }
 
-    /// Render the Table-1-style held-out error report plus per-fold
+    /// Render the held-out error report — the Table-1-style matrix (or
+    /// the transfer matrix for the device split) — plus per-fold
     /// diagnostics.
     pub fn render(&self) -> String {
-        let mut s = render_crossval(self.split.label(), &self.table);
+        let mut s = match &self.transfer {
+            Some(tm) => render_transfer(tm),
+            None => render_crossval(self.split.label(), &self.table),
+        };
         s.push('\n');
         s.push_str("fold        device      train  train-gm  heldout-gm\n");
         for f in &self.folds {
@@ -163,6 +214,25 @@ impl CrossvalResult {
         }
         s
     }
+
+    /// JSON form: split, per-fold weight tables (the drift-analysis
+    /// record persisted into `BENCH_crossval.json` /
+    /// `BENCH_transfer.json` and the results directory), and the
+    /// transfer matrix when present.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("split", Json::Str(self.split.label().to_string())),
+            ("overall_err", Json::Num(self.overall_err())),
+            (
+                "folds",
+                Json::Arr(self.folds.iter().map(FoldResult::to_json).collect()),
+            ),
+        ];
+        if let Some(tm) = &self.transfer {
+            pairs.push(("transfer", tm.to_json()));
+        }
+        Json::obj(pairs)
+    }
 }
 
 /// Cut-down campaign filter for quick mode: the retained classes keep
@@ -171,10 +241,10 @@ impl CrossvalResult {
 /// (`sg_*`, `vsadd`), local-memory staging with barriers
 /// (`transpose_tiled`), uncoalesced classes (`transpose_cw`/`cr`),
 /// every float-op kind including the n-body kernel's rsqrt (`arith_*`),
-/// and the launch-overhead columns (`empty`). Known gap inherited from
-/// the paper's suite (full mode included): no measurement kernel emits
-/// uniform-class global *stores*, so reduce_tree's per-group result
-/// store fits to weight 0 in its own hold-out fold (see ROADMAP).
+/// and the launch-overhead columns (`empty`). The uniform-class global
+/// *store* gap the ROADMAP used to name is closed: `sg_storeuni`
+/// matches the `sg_` prefix, so even the quick campaign exercises the
+/// column reduce_tree's per-group result store needs.
 /// Public so tests exercising "the quick campaign" reuse this exact
 /// predicate instead of a drifting copy.
 pub fn quick_campaign_case(label: &str) -> bool {
@@ -195,21 +265,21 @@ fn quick_zoo_case(label: &str) -> bool {
 /// Measure one device: run the (possibly cut-down) measurement campaign
 /// and the evaluation-kernel zoo once.
 fn build_ctx(
-    device: &str,
+    profile: &DeviceProfile,
     schema: &Schema,
     opts: &CrossvalOpts,
     workers: usize,
 ) -> Result<DeviceCtx, String> {
     let cfg = &opts.base;
-    let gpu = SimGpu::named(device).ok_or_else(|| format!("unknown device '{device}'"))?;
-    let mut cases = kernels::measurement_suite(device);
+    let gpu = SimGpu::new(profile.clone());
+    let mut cases = kernels::measurement_suite(&gpu.profile);
     if opts.quick {
         cases.retain(|c| quick_campaign_case(&c.label));
     }
     let (campaign, overhead) =
         run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, workers)?;
 
-    let mut zoo_cases = kernels::eval_suite(device);
+    let mut zoo_cases = kernels::eval_suite(&gpu.profile);
     if opts.quick {
         zoo_cases.retain(|c| quick_zoo_case(&c.label));
     }
@@ -226,7 +296,7 @@ fn build_ctx(
         })
         .collect();
     Ok(DeviceCtx {
-        device: device.to_string(),
+        device: profile.name.clone(),
         campaign,
         overhead,
         zoo,
@@ -234,28 +304,42 @@ fn build_ctx(
     })
 }
 
+/// Assemble a fold's training set: the device's campaign plus every zoo
+/// case passing `keep`. The §4.2 minimum-size floor applies to training
+/// cases only — held-out cases are never floor-filtered — and this is
+/// the single place the rule lives, shared by every split.
+fn training_matrix(
+    ctx: &DeviceCtx,
+    opts: &CrossvalOpts,
+    keep: impl Fn(&ZooCase) -> bool,
+) -> PropertyMatrix {
+    let floor = opts.base.protocol.min_time_factor * ctx.overhead;
+    let mut pm = ctx.campaign.clone();
+    for z in &ctx.zoo {
+        if keep(z) && z.time_s >= floor {
+            pm.push(z.label.clone(), z.props.clone(), z.time_s);
+        }
+    }
+    pm
+}
+
 /// Fit and evaluate one fold on one device: train on the campaign plus
-/// every zoo case outside the fold (the minimum-size floor of §4.2
-/// applies to training cases only), predict the held-out cases.
+/// every zoo case outside the fold, predict the held-out cases.
 fn run_fold(
     ctx: &DeviceCtx,
     fold: &str,
     schema: &Schema,
     opts: &CrossvalOpts,
 ) -> Result<FoldResult, String> {
-    let floor = opts.base.protocol.min_time_factor * ctx.overhead;
-    let mut pm = ctx.campaign.clone();
-    let mut held: Vec<&ZooCase> = Vec::new();
-    for z in &ctx.zoo {
-        if opts.split.key(&z.kernel, &z.case) == fold {
-            held.push(z);
-        } else if z.time_s >= floor {
-            pm.push(z.label.clone(), z.props.clone(), z.time_s);
-        }
-    }
+    let held: Vec<&ZooCase> = ctx
+        .zoo
+        .iter()
+        .filter(|z| opts.split.key(&z.kernel, &z.case) == fold)
+        .collect();
     if held.is_empty() {
         return Err(format!("fold '{fold}' holds out no cases on {}", ctx.device));
     }
+    let pm = training_matrix(ctx, opts, |z| opts.split.key(&z.kernel, &z.case) != fold);
     let model = perfmodel::fit(&ctx.device, &pm, schema, ctx.solver.as_ref())?;
     let entries = held
         .iter()
@@ -272,50 +356,116 @@ fn run_fold(
         fold: fold.to_string(),
         n_train: pm.n_cases(),
         train_err: model.train_rel_err_geomean,
+        weights: model.weight_report(schema),
         entries,
     })
 }
 
-/// Run cross-validation over all configured devices.
+/// One transfer fold: fit on the source device's campaign plus its own
+/// zoo, then predict every *other* device's zoo cases with the source
+/// weights. The targets' zoo timings are genuinely held out — the
+/// source model has never seen that hardware.
+fn run_transfer_fold(
+    contexts: &[DeviceCtx],
+    si: usize,
+    schema: &Schema,
+    opts: &CrossvalOpts,
+) -> Result<FoldResult, String> {
+    let src = &contexts[si];
+    let pm = training_matrix(src, opts, |_| true);
+    let model = perfmodel::fit(&src.device, &pm, schema, src.solver.as_ref())?;
+    let mut entries = Vec::new();
+    for (ti, tgt) in contexts.iter().enumerate() {
+        if ti == si {
+            continue;
+        }
+        for z in &tgt.zoo {
+            entries.push(Table1Entry {
+                device: tgt.device.clone(),
+                kernel: z.kernel.clone(),
+                case: z.case.clone(),
+                predicted_s: model.predict(&z.props),
+                actual_s: z.time_s,
+            });
+        }
+    }
+    if entries.is_empty() {
+        return Err(format!("transfer fold '{}' has no target cases", src.device));
+    }
+    Ok(FoldResult {
+        device: src.device.clone(),
+        fold: src.device.clone(),
+        n_train: pm.n_cases(),
+        train_err: model.train_rel_err_geomean,
+        weights: model.weight_report(schema),
+        entries,
+    })
+}
+
+/// Run cross-validation over all configured devices (resolved through
+/// the [`Config`]'s device registry, so JSON-loaded profiles
+/// participate).
 ///
 /// Stage 1 measures each device once (parallel over devices); stage 2
-/// fans the (device × fold) fit/predict jobs out over the worker pool.
-/// Job order — and therefore the assembled table — is deterministic:
+/// fans the (device × fold) — or, for the device split, per-source —
+/// fit/predict jobs out over the worker pool. Job order — and therefore
+/// the assembled table and transfer matrix — is deterministic:
 /// `par_map` preserves input order regardless of scheduling.
 pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
     let cfg = &opts.base;
     if cfg.devices.is_empty() {
         return Err("no devices configured".into());
     }
+    if opts.split == Split::LeaveOneDeviceOut && cfg.devices.len() < 2 {
+        return Err("leave-one-device-out needs at least two devices".into());
+    }
     let schema = Schema::full();
 
-    let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
+    let mut profiles = Vec::with_capacity(cfg.devices.len());
+    for name in &cfg.devices {
+        profiles.push(
+            cfg.registry
+                .get(name)
+                .cloned()
+                .ok_or_else(|| format!("unknown device '{name}'"))?,
+        );
+    }
+
+    let device_workers = cfg.workers.min(profiles.len()).max(1);
     let inner_workers = (cfg.workers / device_workers).max(1);
-    let ctxs = par_map(cfg.devices.clone(), device_workers, |dev| {
-        build_ctx(&dev, &schema, opts, inner_workers)
+    let ctxs = par_map(profiles, device_workers, |p| {
+        build_ctx(&p, &schema, opts, inner_workers)
     });
     let mut contexts = Vec::with_capacity(ctxs.len());
     for c in ctxs {
         contexts.push(c?);
     }
 
-    // fold keys per device, in first-seen (suite) order
-    let mut jobs: Vec<(usize, String)> = Vec::new();
-    for (di, ctx) in contexts.iter().enumerate() {
-        let mut keys: Vec<&str> = Vec::new();
-        for z in &ctx.zoo {
-            let key = opts.split.key(&z.kernel, &z.case);
-            if !keys.contains(&key) {
-                keys.push(key);
+    let results = if opts.split == Split::LeaveOneDeviceOut {
+        // one fold per source device, each predicting all other devices
+        let sources: Vec<usize> = (0..contexts.len()).collect();
+        par_map(sources, cfg.workers.max(1), |si| {
+            run_transfer_fold(&contexts, si, &schema, opts)
+        })
+    } else {
+        // fold keys per device, in first-seen (suite) order
+        let mut jobs: Vec<(usize, String)> = Vec::new();
+        for (di, ctx) in contexts.iter().enumerate() {
+            let mut keys: Vec<&str> = Vec::new();
+            for z in &ctx.zoo {
+                let key = opts.split.key(&z.kernel, &z.case);
+                if !keys.contains(&key) {
+                    keys.push(key);
+                }
+            }
+            for key in keys {
+                jobs.push((di, key.to_string()));
             }
         }
-        for key in keys {
-            jobs.push((di, key.to_string()));
-        }
-    }
-    let results = par_map(jobs, cfg.workers.max(1), |(di, fold)| {
-        run_fold(&contexts[di], &fold, &schema, opts)
-    });
+        par_map(jobs, cfg.workers.max(1), |(di, fold)| {
+            run_fold(&contexts[di], &fold, &schema, opts)
+        })
+    };
     let mut folds = Vec::with_capacity(results.len());
     for r in results {
         folds.push(r?);
@@ -327,14 +477,41 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
             table.push(e.clone());
         }
     }
-    let result = CrossvalResult { split: opts.split, folds, table };
+    let transfer = if opts.split == Split::LeaveOneDeviceOut {
+        let devices: Vec<String> = contexts.iter().map(|c| c.device.clone()).collect();
+        let n = devices.len();
+        let mut err = vec![vec![None; n]; n];
+        for (si, f) in folds.iter().enumerate() {
+            for (ti, d) in devices.iter().enumerate() {
+                if ti == si {
+                    continue;
+                }
+                let errs: Vec<f64> = f
+                    .entries
+                    .iter()
+                    .filter(|e| &e.device == d)
+                    .map(Table1Entry::rel_err)
+                    .collect();
+                err[si][ti] = Some(geometric_mean(&errs));
+            }
+        }
+        Some(TransferMatrix { devices, err })
+    } else {
+        None
+    };
+    let result = CrossvalResult { split: opts.split, folds, table, transfer };
     if let Some(dir) = &cfg.out_dir {
         std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        let name = match opts.split {
-            Split::LeaveOneKernelOut => "crossval_kernel.txt",
-            Split::LeaveOneSizeCaseOut => "crossval_case.txt",
+        let stem = match opts.split {
+            Split::LeaveOneKernelOut => "crossval_kernel",
+            Split::LeaveOneSizeCaseOut => "crossval_case",
+            Split::LeaveOneDeviceOut => "crossval_device",
         };
-        std::fs::write(dir.join(name), result.render()).map_err(|e| e.to_string())?;
+        std::fs::write(dir.join(format!("{stem}.txt")), result.render())
+            .map_err(|e| e.to_string())?;
+        // fold weight tables (+ transfer matrix) for drift analysis
+        std::fs::write(dir.join(format!("{stem}.json")), result.to_json().pretty())
+            .map_err(|e| e.to_string())?;
     }
     Ok(result)
 }
@@ -350,6 +527,18 @@ mod tests {
         assert_eq!(Split::LeaveOneSizeCaseOut.key("fd5", "a"), "a");
         assert!(Split::LeaveOneKernelOut.label().contains("kernel"));
         assert!(Split::LeaveOneSizeCaseOut.label().contains("size-case"));
+        assert!(Split::LeaveOneDeviceOut.label().contains("device"));
+    }
+
+    #[test]
+    fn device_split_needs_two_devices() {
+        let opts = CrossvalOpts {
+            base: Config { devices: vec!["k40c".into()], ..Config::default() },
+            split: Split::LeaveOneDeviceOut,
+            quick: true,
+        };
+        let e = run_crossval(&opts).unwrap_err();
+        assert!(e.contains("two devices"), "{e}");
     }
 
     #[test]

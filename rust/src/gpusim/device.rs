@@ -11,13 +11,20 @@
 //! The constants are drawn from the public spec sheets of the real parts
 //! (bandwidth, SM/CU counts, clocks, FP64 ratios) so that simulated times
 //! land in the same millisecond ranges as the paper's Table 1.
+//!
+//! Profiles are plain owned values that round-trip through
+//! [`crate::util::json`]; the full device catalogue (the four paper
+//! parts plus the synthetic generation/vendor spread, user-extensible
+//! from JSON) lives in [`super::registry`].
+
+use crate::util::json::Json;
 
 /// A simulated GPU.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeviceProfile {
-    pub name: &'static str,
+    pub name: String,
     /// marketing name for reports
-    pub full_name: &'static str,
+    pub full_name: String,
     /// streaming multiprocessors (Nvidia) / compute units (AMD)
     pub sms: u32,
     /// shader clock in Hz
@@ -77,21 +84,25 @@ pub struct DeviceProfile {
     pub uncoalesced_penalty: f64,
 }
 
-/// The four devices of the paper's evaluation.
+/// The four devices of the paper's evaluation (§5). The widened
+/// catalogue — these four plus the synthetic cross-generation parts —
+/// is served by [`super::registry::builtins`].
 pub fn all_devices() -> Vec<DeviceProfile> {
     vec![titan_x(), k40c(), c2070(), r9_fury()]
 }
 
-/// Look up a device profile by short name.
+/// Look up a device profile by short name, through the cached built-in
+/// registry (the catalogue is constructed once per process, not
+/// rebuilt per lookup).
 pub fn device(name: &str) -> Option<DeviceProfile> {
-    all_devices().into_iter().find(|d| d.name == name)
+    super::registry::builtins().get(name).cloned()
 }
 
 /// Nvidia GTX Titan X (Maxwell, GM200).
 pub fn titan_x() -> DeviceProfile {
     DeviceProfile {
-        name: "titan_x",
-        full_name: "Nvidia GTX Titan X",
+        name: "titan_x".into(),
+        full_name: "Nvidia GTX Titan X".into(),
         sms: 24,
         clock_hz: 1.0e9,
         cores_per_sm: 128,
@@ -126,8 +137,8 @@ pub fn titan_x() -> DeviceProfile {
 /// Nvidia Tesla K40c (Kepler, GK110B).
 pub fn k40c() -> DeviceProfile {
     DeviceProfile {
-        name: "k40c",
-        full_name: "Nvidia Tesla K40",
+        name: "k40c".into(),
+        full_name: "Nvidia Tesla K40".into(),
         sms: 15,
         clock_hz: 745.0e6,
         cores_per_sm: 192,
@@ -162,8 +173,8 @@ pub fn k40c() -> DeviceProfile {
 /// Nvidia Tesla C2070 (Fermi, GF100).
 pub fn c2070() -> DeviceProfile {
     DeviceProfile {
-        name: "c2070",
-        full_name: "Nvidia Tesla C2070",
+        name: "c2070".into(),
+        full_name: "Nvidia Tesla C2070".into(),
         sms: 14,
         clock_hz: 1.15e9,
         cores_per_sm: 32,
@@ -202,8 +213,8 @@ pub fn c2070() -> DeviceProfile {
 /// uncoalesced-access penalties.
 pub fn r9_fury() -> DeviceProfile {
     DeviceProfile {
-        name: "r9_fury",
-        full_name: "AMD Radeon R9 Fury",
+        name: "r9_fury".into(),
+        full_name: "AMD Radeon R9 Fury".into(),
         sms: 56,
         clock_hz: 1.0e9,
         cores_per_sm: 64,
@@ -263,6 +274,159 @@ impl DeviceProfile {
         let per_sm = by_threads.min(self.max_groups_per_sm as i64);
         per_sm * self.sms as i64
     }
+
+    /// The launch-overhead floor: the fixed per-launch cost (launch base
+    /// plus the pipeline-latency floor) that the §4.2 timing protocol
+    /// must comfortably exceed. The capability-derived suite
+    /// configuration ([`crate::kernels`]) sizes every case against this.
+    pub fn launch_floor_s(&self) -> f64 {
+        self.launch_base + self.wave_latency
+    }
+
+    /// Sanity-check a profile (used when loading user-supplied JSON):
+    /// positive rates/counts and a group-size cap the capability
+    /// derivation can work with (≥ 64, multiple of 16, within the
+    /// per-SM thread budget).
+    pub fn validate(&self) -> Result<(), String> {
+        let err = |m: &str| Err(format!("device '{}': {m}", self.name));
+        if self.name.is_empty() {
+            return Err("device profile with empty name".into());
+        }
+        if self.sms == 0 || self.cores_per_sm == 0 || self.warp_size == 0 {
+            return err("sms, cores_per_sm and warp_size must be positive");
+        }
+        if !(self.clock_hz > 0.0 && self.dram_bw > 0.0 && self.local_bw > 0.0) {
+            return err("clock_hz, dram_bw and local_bw must be positive");
+        }
+        if self.line_bytes < 4 {
+            return err("line_bytes must be at least one f32");
+        }
+        if self.max_group_size < 64 || self.max_group_size % 16 != 0 {
+            return err("max_group_size must be a multiple of 16, at least 64");
+        }
+        if self.threads_per_sm < self.max_group_size {
+            return err("threads_per_sm must admit at least one maximal group");
+        }
+        if self.max_groups_per_sm == 0 {
+            return err("max_groups_per_sm must be positive");
+        }
+        if !(self.launch_base >= 0.0 && self.launch_per_group >= 0.0 && self.wave_latency >= 0.0)
+        {
+            return err("launch overheads must be non-negative");
+        }
+        if !(0.0..=1.0).contains(&self.overlap) {
+            return err("overlap must be in [0, 1]");
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (one object per profile; field names match the
+    /// struct). Emits every field, so [`DeviceProfile::from_json`]
+    /// round-trips exactly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("full_name", Json::Str(self.full_name.clone())),
+            ("sms", Json::Num(self.sms as f64)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("cores_per_sm", Json::Num(self.cores_per_sm as f64)),
+            ("warp_size", Json::Num(self.warp_size as f64)),
+            ("dram_bw", Json::Num(self.dram_bw)),
+            ("line_bytes", Json::Num(self.line_bytes as f64)),
+            ("l2_bytes", Json::Num(self.l2_bytes as f64)),
+            ("l1_bytes", Json::Num(self.l1_bytes as f64)),
+            ("l2_bw_mult", Json::Num(self.l2_bw_mult)),
+            ("local_bw", Json::Num(self.local_bw)),
+            ("cyc_mad", Json::Num(self.cyc_mad)),
+            ("cyc_div", Json::Num(self.cyc_div)),
+            ("cyc_exp", Json::Num(self.cyc_exp)),
+            ("cyc_special", Json::Num(self.cyc_special)),
+            ("f64_ratio", Json::Num(self.f64_ratio)),
+            ("cyc_barrier", Json::Num(self.cyc_barrier)),
+            ("launch_base", Json::Num(self.launch_base)),
+            ("launch_per_group", Json::Num(self.launch_per_group)),
+            ("threads_per_sm", Json::Num(self.threads_per_sm as f64)),
+            ("max_groups_per_sm", Json::Num(self.max_groups_per_sm as f64)),
+            ("max_group_size", Json::Num(self.max_group_size as f64)),
+            ("wave_latency", Json::Num(self.wave_latency)),
+            ("overlap", Json::Num(self.overlap)),
+            ("noise_sigma", Json::Num(self.noise_sigma)),
+            ("first_touch_factor", Json::Num(self.first_touch_factor)),
+            ("second_run_sigma", Json::Num(self.second_run_sigma)),
+            ("irregularity", Json::Num(self.irregularity)),
+            ("uncoalesced_penalty", Json::Num(self.uncoalesced_penalty)),
+        ])
+    }
+
+    /// Deserialize from JSON produced by [`DeviceProfile::to_json`] or
+    /// hand-written for `--devices`. Hardware fields are required; the
+    /// measurement-artifact fields (noise, first-touch, ripple) default
+    /// to a well-behaved device when omitted. The result is
+    /// [`DeviceProfile::validate`]d.
+    pub fn from_json(j: &Json) -> Result<DeviceProfile, String> {
+        let name = j
+            .get_str("name")
+            .ok_or("device profile: missing 'name'")?
+            .to_string();
+        let req = |key: &str| -> Result<f64, String> {
+            j.get_f64(key)
+                .ok_or_else(|| format!("device '{name}': missing numeric field '{key}'"))
+        };
+        // integer counts load strictly: fractional or out-of-range
+        // values would otherwise truncate/saturate silently through
+        // `as` casts and defeat validation
+        let req_u32 = |key: &str| -> Result<u32, String> {
+            let v = req(key)?;
+            if v.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&v) {
+                return Err(format!("device '{name}': field '{key}' must be a u32 integer"));
+            }
+            Ok(v as u32)
+        };
+        let req_u64 = |key: &str| -> Result<u64, String> {
+            let v = req(key)?;
+            if v.fract() != 0.0 || v < 0.0 || v >= 9_007_199_254_740_992.0 {
+                return Err(format!(
+                    "device '{name}': field '{key}' must be an exactly-representable integer"
+                ));
+            }
+            Ok(v as u64)
+        };
+        let opt = |key: &str, default: f64| -> f64 { j.get_f64(key).unwrap_or(default) };
+        let p = DeviceProfile {
+            full_name: j.get_str("full_name").unwrap_or(&name).to_string(),
+            sms: req_u32("sms")?,
+            clock_hz: req("clock_hz")?,
+            cores_per_sm: req_u32("cores_per_sm")?,
+            warp_size: req_u32("warp_size")?,
+            dram_bw: req("dram_bw")?,
+            line_bytes: req_u32("line_bytes")?,
+            l2_bytes: req_u64("l2_bytes")?,
+            l1_bytes: req_u64("l1_bytes")?,
+            l2_bw_mult: opt("l2_bw_mult", 2.5),
+            local_bw: req("local_bw")?,
+            cyc_mad: opt("cyc_mad", 1.0),
+            cyc_div: opt("cyc_div", 10.0),
+            cyc_exp: opt("cyc_exp", 16.0),
+            cyc_special: opt("cyc_special", 4.0),
+            f64_ratio: opt("f64_ratio", 16.0),
+            cyc_barrier: opt("cyc_barrier", 40.0),
+            launch_base: req("launch_base")?,
+            launch_per_group: opt("launch_per_group", 2.0e-9),
+            threads_per_sm: req_u32("threads_per_sm")?,
+            max_groups_per_sm: req_u32("max_groups_per_sm")?,
+            max_group_size: req_u32("max_group_size")?,
+            wave_latency: opt("wave_latency", 3.0e-6),
+            overlap: opt("overlap", 0.65),
+            noise_sigma: opt("noise_sigma", 0.015),
+            first_touch_factor: opt("first_touch_factor", 1.8),
+            second_run_sigma: opt("second_run_sigma", 0.05),
+            irregularity: opt("irregularity", 0.0),
+            uncoalesced_penalty: opt("uncoalesced_penalty", 1.0),
+            name,
+        };
+        p.validate()?;
+        Ok(p)
+    }
 }
 
 #[cfg(test)]
@@ -270,11 +434,53 @@ mod tests {
     use super::*;
 
     #[test]
-    fn four_devices_registered() {
-        let names: Vec<&str> = all_devices().iter().map(|d| d.name).collect();
+    fn four_paper_devices_and_registry_lookup() {
+        let names: Vec<&str> = all_devices().iter().map(|d| d.name.as_str()).collect();
         assert_eq!(names, vec!["titan_x", "k40c", "c2070", "r9_fury"]);
         assert!(device("k40c").is_some());
         assert!(device("gtx480").is_none());
+    }
+
+    #[test]
+    fn profile_json_roundtrip_exact() {
+        for d in all_devices() {
+            let j = d.to_json().pretty();
+            let parsed = Json::parse(&j).unwrap();
+            let back = DeviceProfile::from_json(&parsed).unwrap();
+            assert_eq!(back, d, "{} did not round-trip", d.name);
+        }
+    }
+
+    #[test]
+    fn from_json_defaults_and_validation() {
+        // minimal hardware-only profile: artifact fields take defaults
+        let text = r#"{
+            "name": "toy", "sms": 4, "clock_hz": 1e9, "cores_per_sm": 32,
+            "warp_size": 32, "dram_bw": 5e10, "line_bytes": 64,
+            "l2_bytes": 524288, "l1_bytes": 16384, "local_bw": 1e11,
+            "launch_base": 1e-5, "threads_per_sm": 1024,
+            "max_groups_per_sm": 8, "max_group_size": 256
+        }"#;
+        let p = DeviceProfile::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(p.full_name, "toy");
+        assert_eq!(p.irregularity, 0.0);
+        assert!(p.noise_sigma > 0.0);
+        assert!(p.validate().is_ok());
+        // an undersized group cap is rejected
+        let bad = text.replace("\"max_group_size\": 256", "\"max_group_size\": 48");
+        assert!(DeviceProfile::from_json(&Json::parse(&bad).unwrap()).is_err());
+        // a missing hardware field is rejected with the field name
+        let missing = text.replace("\"dram_bw\": 5e10,", "");
+        let e = DeviceProfile::from_json(&Json::parse(&missing).unwrap()).unwrap_err();
+        assert!(e.contains("dram_bw"), "{e}");
+        // fractional and oversized integer counts are rejected, not
+        // silently truncated/saturated
+        let frac = text.replace("\"sms\": 4,", "\"sms\": 2.7,");
+        let e = DeviceProfile::from_json(&Json::parse(&frac).unwrap()).unwrap_err();
+        assert!(e.contains("sms"), "{e}");
+        let huge = text.replace("\"threads_per_sm\": 1024,", "\"threads_per_sm\": 1e19,");
+        let e = DeviceProfile::from_json(&Json::parse(&huge).unwrap()).unwrap_err();
+        assert!(e.contains("threads_per_sm"), "{e}");
     }
 
     #[test]

@@ -16,10 +16,12 @@
 
 pub mod device;
 pub mod interp;
+pub mod registry;
 pub mod timing;
 
 pub use device::{all_devices, device, DeviceProfile};
 pub use interp::{execute, seed_value, Storage};
+pub use registry::DeviceRegistry;
 pub use timing::{base_time, run_times, Breakdown};
 
 use crate::lpir::Kernel;

@@ -1,0 +1,354 @@
+//! The data-driven device registry: every simulated GPU the pipeline
+//! can target, addressable by name and extensible at runtime.
+//!
+//! The built-in catalogue holds the paper's four evaluation devices
+//! ([`super::device`]) plus four synthetic profiles spanning
+//! generations and vendors — a Pascal-class HBM part, a Vega-class
+//! part, a low-power integrated part and a modern wide-bus part — so
+//! the cross-GPU axis is wider than the paper's and the
+//! leave-one-device-out transfer split ([`crate::crossval`]) has a
+//! meaningful spread to work with. User profiles load from JSON (the
+//! `--devices <profiles.json>` CLI flag) through
+//! [`DeviceRegistry::extend_from_json`]; because every kernel suite is
+//! capability-derived from the profile ([`crate::kernels`]), a loaded
+//! profile runs the full pipeline with no further configuration.
+
+use super::device::{all_devices, DeviceProfile};
+use crate::util::json::Json;
+use std::sync::OnceLock;
+
+/// An ordered, name-addressed collection of device profiles.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceRegistry {
+    profiles: Vec<DeviceProfile>,
+}
+
+impl DeviceRegistry {
+    /// An empty registry.
+    pub fn empty() -> DeviceRegistry {
+        DeviceRegistry::default()
+    }
+
+    /// The built-in catalogue: the four paper devices followed by the
+    /// four synthetic cross-generation profiles.
+    pub fn with_builtins() -> DeviceRegistry {
+        let mut r = DeviceRegistry::empty();
+        for p in all_devices()
+            .into_iter()
+            .chain([p100(), vega64(), igp620(), rtx4090()])
+        {
+            r.register(p).expect("built-in profiles validate");
+        }
+        r
+    }
+
+    /// Look up a profile by short name.
+    pub fn get(&self, name: &str) -> Option<&DeviceProfile> {
+        self.profiles.iter().find(|p| p.name == name)
+    }
+
+    /// Registry order (insertion order; built-ins first).
+    pub fn names(&self) -> Vec<String> {
+        self.profiles.iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// Iterate profiles in registry order.
+    pub fn iter(&self) -> impl Iterator<Item = &DeviceProfile> {
+        self.profiles.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Add a profile after validating it. A profile with an existing
+    /// name *replaces* the old entry (in place, keeping its position),
+    /// so a JSON file can override a built-in for what-if studies.
+    pub fn register(&mut self, profile: DeviceProfile) -> Result<(), String> {
+        profile.validate()?;
+        match self.profiles.iter_mut().find(|p| p.name == profile.name) {
+            Some(slot) => *slot = profile,
+            None => self.profiles.push(profile),
+        }
+        Ok(())
+    }
+
+    /// Extend the registry from a JSON document: either a top-level
+    /// array of profile objects or an object with a `"devices"` array.
+    /// Returns the names of the loaded profiles in document order.
+    pub fn extend_from_json(&mut self, j: &Json) -> Result<Vec<String>, String> {
+        let arr = match (j.as_arr(), j.get("devices").and_then(Json::as_arr)) {
+            (Some(a), _) => a,
+            (None, Some(a)) => a,
+            (None, None) => {
+                return Err(
+                    "device file must be a JSON array of profiles or {\"devices\": [...]}"
+                        .into(),
+                )
+            }
+        };
+        let mut names = Vec::with_capacity(arr.len());
+        for entry in arr {
+            let p = DeviceProfile::from_json(entry)?;
+            names.push(p.name.clone());
+            self.register(p)?;
+        }
+        Ok(names)
+    }
+
+    /// Serialize the whole registry (the `--devices` file format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "devices",
+            Json::Arr(self.profiles.iter().map(DeviceProfile::to_json).collect()),
+        )])
+    }
+}
+
+/// The process-wide built-in catalogue, constructed once. Name lookups
+/// (`gpusim::device`, `SimGpu::named`) go through this instead of
+/// rebuilding the profile vector per call.
+pub fn builtins() -> &'static DeviceRegistry {
+    static REGISTRY: OnceLock<DeviceRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(DeviceRegistry::with_builtins)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic cross-generation profiles
+// ---------------------------------------------------------------------------
+
+/// Nvidia Tesla P100 (Pascal, GP100): the HBM2 datacenter part — high
+/// sustained bandwidth, full-rate f64, small per-SM lane count.
+pub fn p100() -> DeviceProfile {
+    DeviceProfile {
+        name: "p100".into(),
+        full_name: "Nvidia Tesla P100".into(),
+        sms: 56,
+        clock_hz: 1.3e9,
+        cores_per_sm: 64,
+        warp_size: 32,
+        dram_bw: 0.75 * 732.0e9,
+        line_bytes: 128,
+        l2_bytes: 4 << 20,
+        l1_bytes: 24 << 10,
+        l2_bw_mult: 3.0,
+        local_bw: 56.0 * 128.0 * 1.3e9,
+        cyc_mad: 1.0,
+        cyc_div: 10.0,
+        cyc_exp: 16.0,
+        cyc_special: 4.0,
+        f64_ratio: 2.0, // 1:2 f64 — the datacenter configuration
+        cyc_barrier: 32.0,
+        launch_base: 5.0e-6,
+        launch_per_group: 1.5e-9,
+        threads_per_sm: 2048,
+        max_groups_per_sm: 32,
+        max_group_size: 1024,
+        wave_latency: 2.2e-6,
+        overlap: 0.72,
+        noise_sigma: 0.013,
+        first_touch_factor: 1.8,
+        second_run_sigma: 0.05,
+        irregularity: 0.0,
+        uncoalesced_penalty: 1.0,
+    }
+}
+
+/// AMD Radeon RX Vega 64 (Vega 10): HBM2, 64-lane wavefronts, the
+/// 256-thread group cap and a milder version of the Fury's launch
+/// overhead and bandwidth ripple.
+pub fn vega64() -> DeviceProfile {
+    DeviceProfile {
+        name: "vega64".into(),
+        full_name: "AMD Radeon RX Vega 64".into(),
+        sms: 64,
+        clock_hz: 1.4e9,
+        cores_per_sm: 64,
+        warp_size: 64,
+        dram_bw: 0.65 * 484.0e9,
+        line_bytes: 64,
+        l2_bytes: 4 << 20,
+        l1_bytes: 16 << 10,
+        l2_bw_mult: 2.2,
+        local_bw: 64.0 * 128.0 * 1.4e9,
+        cyc_mad: 1.0,
+        cyc_div: 10.0,
+        cyc_exp: 16.0,
+        cyc_special: 4.0,
+        f64_ratio: 16.0,
+        cyc_barrier: 40.0,
+        launch_base: 30.0e-6,
+        launch_per_group: 5.0e-9,
+        threads_per_sm: 2560,
+        max_groups_per_sm: 40,
+        max_group_size: 256,
+        wave_latency: 4.0e-6,
+        overlap: 0.60,
+        noise_sigma: 0.018,
+        first_touch_factor: 2.0,
+        second_run_sigma: 0.08,
+        irregularity: 0.25,
+        uncoalesced_penalty: 1.5,
+    }
+}
+
+/// A low-power integrated GPU (Gen9-class, UHD-620-like): shared DDR4
+/// bandwidth, SIMD-16 scheduling, driver-heavy launches, noisy timing —
+/// the opposite corner of the hardware space from the discrete parts.
+pub fn igp620() -> DeviceProfile {
+    DeviceProfile {
+        name: "igp620".into(),
+        full_name: "Integrated Gen9 GT2 (UHD 620 class)".into(),
+        sms: 3, // subslices
+        clock_hz: 1.0e9,
+        cores_per_sm: 64, // 8 EUs x SIMD-8 FPUs per subslice
+        warp_size: 16,
+        dram_bw: 0.60 * 34.1e9, // dual-channel DDR4-2133, shared with the CPU
+        line_bytes: 64,
+        l2_bytes: 512 << 10,
+        l1_bytes: 32 << 10,
+        l2_bw_mult: 2.0,
+        local_bw: 3.0 * 64.0 * 1.0e9, // SLM lives next to L3 — slow
+        cyc_mad: 1.0,
+        cyc_div: 14.0,
+        cyc_exp: 22.0,
+        cyc_special: 8.0,
+        f64_ratio: 4.0,
+        cyc_barrier: 48.0,
+        launch_base: 25.0e-6, // driver-dominated submission path
+        launch_per_group: 8.0e-9,
+        threads_per_sm: 512,
+        max_groups_per_sm: 16,
+        max_group_size: 256,
+        wave_latency: 8.0e-6,
+        overlap: 0.50,
+        noise_sigma: 0.030, // shares memory and power budget with the CPU
+        first_touch_factor: 2.5,
+        second_run_sigma: 0.12,
+        irregularity: 0.15,
+        uncoalesced_penalty: 1.4,
+    }
+}
+
+/// A modern wide-bus consumer flagship (Ada-class, RTX-4090-like):
+/// ~1 TB/s GDDR6X, a huge L2 that smooths most re-walked footprints,
+/// tiny launch overheads and strong overlap.
+pub fn rtx4090() -> DeviceProfile {
+    DeviceProfile {
+        name: "rtx4090".into(),
+        full_name: "Nvidia GeForce RTX 4090".into(),
+        sms: 128,
+        clock_hz: 2.2e9,
+        cores_per_sm: 128,
+        warp_size: 32,
+        dram_bw: 0.78 * 1008.0e9,
+        line_bytes: 128,
+        l2_bytes: 72 << 20,
+        l1_bytes: 128 << 10,
+        l2_bw_mult: 4.0,
+        local_bw: 128.0 * 128.0 * 2.2e9,
+        cyc_mad: 1.0,
+        cyc_div: 8.0,
+        cyc_exp: 14.0,
+        cyc_special: 4.0,
+        f64_ratio: 64.0, // consumer f64 rate
+        cyc_barrier: 24.0,
+        launch_base: 4.0e-6,
+        launch_per_group: 1.0e-9,
+        threads_per_sm: 1536,
+        max_groups_per_sm: 24,
+        max_group_size: 1024,
+        wave_latency: 1.8e-6,
+        overlap: 0.80,
+        noise_sigma: 0.012,
+        first_touch_factor: 1.7,
+        second_run_sigma: 0.04,
+        irregularity: 0.0,
+        uncoalesced_penalty: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_catalogue_spans_eight_devices() {
+        let r = builtins();
+        assert!(r.len() >= 8, "registry has {} devices", r.len());
+        for name in [
+            "titan_x", "k40c", "c2070", "r9_fury", "p100", "vega64", "igp620", "rtx4090",
+        ] {
+            assert!(r.get(name).is_some(), "missing built-in '{name}'");
+        }
+        // paper devices come first, in the paper's order
+        assert_eq!(&r.names()[..4], &["titan_x", "k40c", "c2070", "r9_fury"]);
+        for p in r.iter() {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn synthetic_profiles_span_the_axes() {
+        // generations/vendors: HBM datacenter, Vega, integrated, wide-bus
+        assert!(p100().f64_ratio < titan_x_ratio());
+        assert_eq!(vega64().warp_size, 64);
+        assert_eq!(vega64().max_group_size, 256);
+        let igp = igp620();
+        let wide = rtx4090();
+        // the integrated part is the slowest by an order of magnitude,
+        // the wide-bus part the fastest
+        for other in builtins().iter() {
+            if other.name != igp.name {
+                assert!(other.dram_bw > 2.0 * igp.dram_bw, "{}", other.name);
+            }
+            if other.name != wide.name {
+                assert!(wide.dram_bw > other.dram_bw, "{}", other.name);
+            }
+        }
+    }
+
+    fn titan_x_ratio() -> f64 {
+        super::super::device::titan_x().f64_ratio
+    }
+
+    #[test]
+    fn register_replaces_by_name_and_validates() {
+        let mut r = DeviceRegistry::with_builtins();
+        let n = r.len();
+        let mut p = p100();
+        p.sms = 60;
+        r.register(p).unwrap();
+        assert_eq!(r.len(), n, "replacement must not grow the registry");
+        assert_eq!(r.get("p100").unwrap().sms, 60);
+        let mut bad = igp620();
+        bad.max_group_size = 40;
+        assert!(r.register(bad).is_err());
+    }
+
+    #[test]
+    fn registry_json_roundtrip_and_extension() {
+        let r = DeviceRegistry::with_builtins();
+        let j = r.to_json().pretty();
+        let mut r2 = DeviceRegistry::empty();
+        let names = r2
+            .extend_from_json(&crate::util::json::Json::parse(&j).unwrap())
+            .unwrap();
+        assert_eq!(names, r.names());
+        for p in r.iter() {
+            assert_eq!(r2.get(&p.name), Some(p));
+        }
+        // a bare array works too
+        let arr = crate::util::json::Json::Arr(vec![p100().to_json()]);
+        let mut r3 = DeviceRegistry::empty();
+        assert_eq!(r3.extend_from_json(&arr).unwrap(), vec!["p100".to_string()]);
+        // scalars are rejected
+        assert!(r3
+            .extend_from_json(&crate::util::json::Json::Num(3.0))
+            .is_err());
+    }
+}

@@ -76,10 +76,15 @@ pub struct Measurement {
 }
 
 /// Calibrate the device's launch overhead by timing the empty kernel at
-/// its smallest configuration (§4.2).
+/// its smallest configuration (§4.2). The group shape is the device's
+/// standard 2-D shape ((16, 16) on every part admitting 256-thread
+/// groups), so calibration works for any registry profile, including
+/// ones with smaller group caps.
 pub fn calibrate_overhead(gpu: &SimGpu, protocol: &Protocol) -> Result<f64, String> {
-    let k = crate::kernels::measure::empty(16, 16);
-    let env = crate::qpoly::env(&[("n", 256)]);
+    let (gx, gy) = crate::kernels::two_d_groups(&gpu.profile).standard();
+    let k = crate::kernels::measure::empty(gx, gy);
+    let n = crate::kernels::snap(16 * gx.max(gy), crate::kernels::lcm(gx, gy));
+    let env = crate::qpoly::env(&[("n", n)]);
     let times = gpu.time(&k, &env, protocol.runs)?;
     protocol.reduce(&times)
 }

@@ -1,12 +1,18 @@
-//! The nine measurement-kernel classes of §4.1.
+//! The measurement-kernel classes of §4.1 (plus the uniform-class
+//! global-store kernel that closes the suite's coverage gap).
 //!
-//! Every class is a parameterized [`Kernel`] builder plus the paper's
-//! per-device sweep (size exponents, shape cases, work-group sets). The
-//! builders avoid data-dependent control flow — boundary coverage uses
-//! unrolled cooperative loads into padded arrays instead of guards, which
-//! keeps the polyhedral analyses exact.
+//! Every class is a parameterized [`Kernel`] builder plus a per-device
+//! sweep (size exponents, shape cases, work-group sets) **derived from
+//! the device profile's capabilities** — group sets from the group-size
+//! cap and occupancy headroom, size exponents from a per-class cost
+//! sketch against the launch-overhead floor (see [`crate::kernels`]).
+//! The builders avoid data-dependent control flow — boundary coverage
+//! uses unrolled cooperative loads into padded arrays instead of guards,
+//! which keeps the polyhedral analyses exact.
 
-use super::{snap, GroupSet, KernelCase};
+use super::{lcm, one_d_groups, size_exp, snap, t_case, t_sweep, two_d_groups, GroupSet,
+    KernelCase};
+use crate::gpusim::DeviceProfile;
 use crate::lpir::builder::{gid, KernelBuilder};
 use crate::lpir::{Access, DType, Expr, Kernel, Layout, UnOp};
 use crate::qpoly::{env, LinExpr};
@@ -313,6 +319,12 @@ pub enum GlobalAccessConfig {
     Add4,
     /// 0 loads, 1 store
     StoreIndex,
+    /// 0 loads, 1 *uniform-class* store: every lane of a group writes
+    /// the group's cell `out[g0]`. This is the §4.1 coverage gap the
+    /// ROADMAP names — without it no measurement kernel emits
+    /// uniform-class global stores, so the per-group result store of
+    /// `reduce_tree` fits to weight zero in its own hold-out fold.
+    StoreUniform,
 }
 
 /// Stride-1 global-access kernels over `n`-element arrays.
@@ -323,6 +335,7 @@ pub fn global_access(cfg: GlobalAccessConfig, lsize: i64) -> Kernel {
             GlobalAccessConfig::Copy => "sg_copy",
             GlobalAccessConfig::Add4 => "sg_add4",
             GlobalAccessConfig::StoreIndex => "sg_storeidx",
+            GlobalAccessConfig::StoreUniform => "sg_storeuni",
         },
         &["n"],
     )
@@ -361,6 +374,16 @@ pub fn global_access(cfg: GlobalAccessConfig, lsize: i64) -> Kernel {
         GlobalAccessConfig::StoreIndex => b
             .global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true)
             .insn(Access::new("out", vec![idx.clone()]), Expr::Idx(idx), &["g0", "l0"], &[]),
+        GlobalAccessConfig::StoreUniform => b
+            // the array is over-allocated to n cells; only the n/lsize
+            // per-group cells are written (all lanes store one value)
+            .global_array("out", DType::F32, vec![v("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![v("g0")]),
+                Expr::Idx(v("g0")),
+                &["g0", "l0"],
+                &[],
+            ),
     }
     .build()
     .expect("global_access builds")
@@ -508,85 +531,83 @@ pub fn empty(gx: i64, gy: i64) -> Kernel {
 // Per-device sweeps (§4.1)
 // ---------------------------------------------------------------------------
 
-/// Per-device configuration of one measurement class.
+/// Configuration of one measurement class: a capability-derived group
+/// set and a base size exponent solved from the class's cost sketch.
 struct ClassCfg {
     group_set: GroupSet,
     p: i64,
 }
 
-fn mm_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
-        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 7 },
-        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
-        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 9 },
+/// Tiled MM moves `2·b³` flops per base size `b`.
+fn mm_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: two_d_groups(d),
+        p: size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 11),
     }
 }
 
-fn mm_naive_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
-        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 6 },
-        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
-        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 9 },
+fn mm_naive_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: two_d_groups(d),
+        p: size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 10),
     }
 }
 
-fn vsadd_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 20 },
-        "c2070" => ClassCfg { group_set: GroupSet::OneDLarge, p: 18 },
-        "k40c" => ClassCfg { group_set: GroupSet::OneDLarge, p: 20 },
-        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 21 },
+/// vsadd streams 3 arrays × 4 bytes per thread.
+fn vsadd_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: one_d_groups(d),
+        p: size_exp(d.dram_bw, 12.0, 1, t_sweep(d), 16, 24),
     }
 }
 
-fn transpose_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 10 },
-        "c2070" | "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 10 },
-        _ => ClassCfg { group_set: GroupSet::TwoDMed, p: 11 },
+/// Transpose moves 8 bytes per cell of an `n×n` matrix.
+fn transpose_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: two_d_groups(d),
+        p: size_exp(d.dram_bw, 8.0, 2, t_case(d), 8, 12),
     }
 }
 
-fn global_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 18 },
-        "c2070" => ClassCfg { group_set: GroupSet::OneDMed, p: 17 },
-        "k40c" => ClassCfg { group_set: GroupSet::OneDMed, p: 18 },
-        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 19 },
+/// Stride-1 global access moves ~8 bytes per thread (copy).
+fn global_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: one_d_groups(d),
+        p: size_exp(d.dram_bw, 8.0, 1, t_sweep(d), 14, 22),
     }
 }
 
-fn filled_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::OneDSmall, p: 16 },
-        "c2070" => ClassCfg { group_set: GroupSet::OneDMed, p: 15 },
-        "k40c" => ClassCfg { group_set: GroupSet::OneDMed, p: 16 },
-        _ => ClassCfg { group_set: GroupSet::OneDLarge, p: 17 },
+/// Filled strided access re-reads its tuples 256×, mostly from cache —
+/// start two octaves under the stride-1 class.
+fn filled_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: one_d_groups(d),
+        p: (global_cfg(d).p - 2).clamp(12, 20),
     }
 }
 
-fn arith_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 8 },
-        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 7 },
-        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
-        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 8 },
+/// Arithmetic chains execute ~8·k ≈ 4096 flops per grid point at the
+/// middle reduction depth.
+fn arith_cfg(d: &DeviceProfile) -> ClassCfg {
+    ClassCfg {
+        group_set: two_d_groups(d),
+        p: size_exp(d.peak_f32(), 4096.0, 2, t_case(d), 6, 10),
     }
 }
 
-fn empty_cfg(device: &str) -> ClassCfg {
-    match device {
-        "r9_fury" => ClassCfg { group_set: GroupSet::TwoDSmall, p: 9 },
-        "c2070" => ClassCfg { group_set: GroupSet::TwoDMed, p: 8 },
-        "k40c" => ClassCfg { group_set: GroupSet::TwoDMed, p: 9 },
-        _ => ClassCfg { group_set: GroupSet::TwoDLarge, p: 10 },
-    }
+/// The empty kernel sweeps group counts around the point where the
+/// per-group launch term matches the fixed launch base, so the fit can
+/// separate the two overhead columns.
+fn empty_cfg(d: &DeviceProfile) -> ClassCfg {
+    let group_set = two_d_groups(d);
+    let (gx, gy) = group_set.standard();
+    let ratio = (gx * gy) as f64 * d.launch_base / d.launch_per_group.max(1e-12);
+    let p = ((ratio.max(1.0).log2() / 2.0).ceil() as i64).clamp(7, 11);
+    ClassCfg { group_set, p }
 }
 
 /// Assemble the full §4.1 measurement suite for a device.
-pub fn suite(device: &str) -> Vec<KernelCase> {
+pub fn suite(device: &DeviceProfile) -> Vec<KernelCase> {
     let mut out = Vec::new();
 
     // 1. tiled MM: 4 shapes x 4 sizes x 3 groups
@@ -661,12 +682,16 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
         }
     }
 
-    // 5. stride-1 global access: 3 configs x 9 sizes x 3 groups
+    // 5. stride-1 global access (+ the uniform-class store):
+    //    4 configs x 9 sizes x 3 groups
     let cfg = global_cfg(device);
     for (lsize, _) in cfg.group_set.sizes() {
-        for gac in
-            [GlobalAccessConfig::Copy, GlobalAccessConfig::Add4, GlobalAccessConfig::StoreIndex]
-        {
+        for gac in [
+            GlobalAccessConfig::Copy,
+            GlobalAccessConfig::Add4,
+            GlobalAccessConfig::StoreIndex,
+            GlobalAccessConfig::StoreUniform,
+        ] {
             let k = global_access(gac, lsize);
             for t in 0..9 {
                 let n = snap(1i64 << (cfg.p + t).min(26), lsize);
@@ -732,18 +757,6 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
     }
 
     out
-}
-
-fn gcd(a: i64, b: i64) -> i64 {
-    if b == 0 {
-        a
-    } else {
-        gcd(b, a % b)
-    }
-}
-
-fn lcm(a: i64, b: i64) -> i64 {
-    a / gcd(a, b) * b
 }
 
 #[cfg(test)]
@@ -872,6 +885,30 @@ mod tests {
         assert!((st.get("out").unwrap()[9] - want).abs() < 1e-12);
         let st = execute(&global_access(GlobalAccessConfig::StoreIndex, 64), &e).unwrap();
         assert_eq!(st.get("out").unwrap()[100], 100.0);
+        // uniform store: one cell per group, holding the group id
+        let st = execute(&global_access(GlobalAccessConfig::StoreUniform, 64), &e).unwrap();
+        let out = st.get("out").unwrap();
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 1.0);
+    }
+
+    #[test]
+    fn store_uniform_emits_uniform_class_global_stores() {
+        use crate::isl::progression::StrideClass;
+        use crate::stats::{extract, Dir, ExtractOpts, Prop, Schema};
+        let k = global_access(GlobalAccessConfig::StoreUniform, 256);
+        let e = env(&[("n", 4096)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let v = props.eval(&schema, &e).unwrap();
+        let uni_store = v[schema
+            .index_of(&Prop::MemGlobal {
+                bits: 32,
+                dir: Dir::Store,
+                class: StrideClass::Uniform,
+            })
+            .unwrap()];
+        assert!(uni_store > 0.0, "sg_storeuni must exercise the uniform-store class");
     }
 
     #[test]
@@ -932,16 +969,25 @@ mod tests {
 
     #[test]
     fn suite_sizes_per_device() {
-        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+        for dev in crate::gpusim::registry::builtins().iter() {
             let suite = suite(dev);
-            // 48 mm + 12 naive + 36 vsadd + 36 transpose + 81 global
-            // + 24 filled + 135 arith + 18 empty = 390
-            assert_eq!(suite.len(), 390, "{dev}");
+            // 48 mm + 12 naive + 36 vsadd + 36 transpose + 108 global
+            // + 24 filled + 135 arith + 18 empty = 417
+            assert_eq!(suite.len(), 417, "{}", dev.name);
             // labels unique
             let mut labels: Vec<&String> = suite.iter().map(|c| &c.label).collect();
             labels.sort();
             labels.dedup();
-            assert_eq!(labels.len(), 390, "{dev}: duplicate labels");
+            assert_eq!(labels.len(), 417, "{}: duplicate labels", dev.name);
+            // every case respects the device's group-size cap
+            for case in &suite {
+                assert!(
+                    case.group.0 * case.group.1 <= dev.max_group_size as i64,
+                    "{}: {}",
+                    dev.name,
+                    case.label
+                );
+            }
         }
     }
 }

@@ -1,17 +1,26 @@
 //! The kernel library: the paper's measurement-kernel classes (§4.1) and
 //! test kernels (§5), expressed as [`crate::lpir`] builders.
 //!
-//! * [`measure`] — the nine measurement classes (tiled & naive matrix
+//! * [`measure`] — the measurement classes (tiled & naive matrix
 //!   multiplication, vector scale-and-add at strides 1–3, three transpose
-//!   variants, stride-1 global access, stride-2/3 filled access, five
-//!   arithmetic-operation kernels, and the empty kernel), each swept over
-//!   the paper's size and work-group-size cases per device.
+//!   variants, stride-1 global access including the uniform-class store,
+//!   stride-2/3 filled access, five arithmetic-operation kernels, and the
+//!   empty kernel), each swept over size and work-group-size cases.
 //! * [`testks`] — the evaluation-kernel zoo: the four §5 test kernels
 //!   (finite-difference stencil, skinny matrix multiplication, 7×7×3
-//!   convolution, n-body) with the per-device problem/group sizes of §5,
-//!   plus five zoo kernels (tree reduction, inclusive scan, 3-D stencil,
-//!   batched small matmul, strided gather) used for held-out
-//!   cross-validation ([`crate::crossval`]).
+//!   convolution, n-body) plus five zoo kernels (tree reduction,
+//!   inclusive scan, 3-D stencil, batched small matmul, strided gather)
+//!   used for held-out cross-validation ([`crate::crossval`]).
+//!
+//! Per-device configuration is **capability-derived**: work-group sets
+//! come from the profile's group-size cap, warp width and occupancy
+//! headroom ([`one_d_groups`]/[`two_d_groups`]), and size exponents are
+//! solved from a per-class cost sketch against the profile's
+//! launch-overhead floor ([`size_exp`]) — so *any* profile served by the
+//! device registry ([`crate::gpusim::registry`]), including ones loaded
+//! from JSON, automatically gets a valid measurement campaign and zoo
+//! suite. The paper's four devices land on exactly the six group sets
+//! the paper tabulates.
 //!
 //! Sizes are *snapped* to the nearest multiple of the work-group tile so
 //! kernels stay guard-free (the paper's OpenCL emits boundary guards
@@ -21,6 +30,7 @@
 pub mod measure;
 pub mod testks;
 
+use crate::gpusim::DeviceProfile;
 use crate::lpir::Kernel;
 use crate::util::intern::Env;
 
@@ -35,38 +45,104 @@ pub struct KernelCase {
     pub group: (i64, i64),
 }
 
-/// The paper's six work-group-size sets (§4.1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum GroupSet {
-    OneDSmall,
-    OneDMed,
-    OneDLarge,
-    TwoDSmall,
-    TwoDMed,
-    TwoDLarge,
+/// A set of work-group shapes for one device, derived from its
+/// capabilities (replaces the paper's six hand-tabulated sets).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupSet {
+    shapes: Vec<(i64, i64)>,
 }
 
 impl GroupSet {
-    /// The three work-group shapes of the set.
-    pub fn sizes(&self) -> Vec<(i64, i64)> {
-        match self {
-            GroupSet::OneDSmall => vec![(192, 1), (224, 1), (256, 1)],
-            GroupSet::OneDMed => vec![(128, 1), (256, 1), (384, 1)],
-            GroupSet::OneDLarge => vec![(256, 1), (384, 1), (512, 1)],
-            GroupSet::TwoDSmall => vec![(16, 12), (16, 14), (16, 16)],
-            GroupSet::TwoDMed => vec![(16, 12), (16, 16), (32, 16)],
-            GroupSet::TwoDLarge => vec![(16, 16), (24, 16), (32, 16)],
-        }
+    pub fn new(shapes: Vec<(i64, i64)>) -> GroupSet {
+        assert!(!shapes.is_empty(), "a group set needs at least one shape");
+        GroupSet { shapes }
     }
 
-    /// The 256-thread member of the set (the configuration the paper
-    /// reports test-kernel results for).
-    pub fn g256(&self) -> (i64, i64) {
-        self.sizes()
-            .into_iter()
-            .find(|(a, b)| a * b == 256)
-            .expect("every group set contains a 256-thread shape")
+    /// The work-group shapes of the set.
+    pub fn sizes(&self) -> Vec<(i64, i64)> {
+        self.shapes.clone()
     }
+
+    /// The *standard* member: the largest shape of at most 256 threads
+    /// — the 256-thread configuration the paper reports test-kernel
+    /// results for on every device that admits 256-thread groups, and
+    /// the device's largest shape on smaller parts.
+    pub fn standard(&self) -> (i64, i64) {
+        self.shapes
+            .iter()
+            .copied()
+            .filter(|(a, b)| a * b <= 256)
+            .max_by_key(|(a, b)| a * b)
+            .or_else(|| self.shapes.first().copied())
+            .expect("non-empty group set")
+    }
+}
+
+/// The 1-D work-group set for a profile. Parts capped at 256 threads or
+/// fewer pack three shapes up against the cap (the Fury's published
+/// `{192, 224, 256}`); caps between 256 and 512 anchor the 256-thread
+/// standard and reach up to the cap; larger parts get the paper's
+/// medium or large set depending on resident-group headroom. Every set
+/// contains a 256-thread shape whenever the cap admits one, so
+/// [`GroupSet::standard`] is well-defined on any valid profile.
+pub fn one_d_groups(p: &DeviceProfile) -> GroupSet {
+    let cap = p.max_group_size as i64;
+    if cap <= 256 {
+        let step = (cap / 8).min(32).max(1);
+        GroupSet::new(vec![(cap - 2 * step, 1), (cap - step, 1), (cap, 1)])
+    } else if cap < 512 {
+        GroupSet::new(vec![(128, 1), (256, 1), (cap.min(384), 1)])
+    } else if p.max_groups_per_sm >= 24 {
+        GroupSet::new(vec![(256, 1), (384, 1), (512, 1)])
+    } else {
+        GroupSet::new(vec![(128, 1), (256, 1), (384, 1)])
+    }
+}
+
+/// The 2-D work-group set for a profile. Derived shapes keep lane
+/// (x) extent at 16 (8 on sub-192 parts) so tiled kernels' cooperative
+/// loads stay legal (`2·gy ≥ gx`), and always include the standard
+/// shape of [`GroupSet::standard`] (the 256-thread `(16, 16)` whenever
+/// the cap admits it).
+pub fn two_d_groups(p: &DeviceProfile) -> GroupSet {
+    let cap = p.max_group_size as i64;
+    if cap < 192 {
+        let c = cap / 8;
+        GroupSet::new(vec![(8, c - 2), (8, c - 1), (8, c)])
+    } else if cap <= 256 {
+        let c = cap / 16;
+        GroupSet::new(vec![(16, c - 4), (16, c - 2), (16, c)])
+    } else if cap < 512 {
+        GroupSet::new(vec![(16, 12), (16, 16), (16, cap / 16)])
+    } else if p.max_groups_per_sm >= 24 {
+        GroupSet::new(vec![(16, 16), (24, 16), (32, 16)])
+    } else {
+        GroupSet::new(vec![(16, 12), (16, 16), (32, 16)])
+    }
+}
+
+/// Target wall time for classes that sweep a wide size range (the small
+/// end may fall under the harness's reliable-timing filter; that is the
+/// sweep's job).
+pub(crate) fn t_sweep(p: &DeviceProfile) -> f64 {
+    (2.5 * p.launch_floor_s()).max(25e-6)
+}
+
+/// Target wall time for the evaluation classes whose *smallest* case
+/// must itself clear the launch floor comfortably.
+pub(crate) fn t_case(p: &DeviceProfile) -> f64 {
+    (10.0 * p.launch_floor_s()).max(150e-6)
+}
+
+/// Solve a per-class cost sketch for the base size exponent: the
+/// smallest `e` (clamped to `[lo, hi]`) such that a problem of
+/// `2^(dims·e)` cost units of `unit` each, executed at `rate` units/s,
+/// runs for at least `t_min` seconds. `rate` is the profile's DRAM
+/// bandwidth for memory-bound classes (unit = bytes) or its peak f32
+/// rate for compute-bound ones (unit = flops).
+pub(crate) fn size_exp(rate: f64, unit: f64, dims: i64, t_min: f64, lo: i64, hi: i64) -> i64 {
+    let target = (t_min * rate / unit).max(1.0);
+    ((target.log2() / dims as f64).ceil() as i64).clamp(lo, hi)
 }
 
 /// Snap `n` to the nearest positive multiple of `q`.
@@ -74,42 +150,117 @@ pub fn snap(n: i64, q: i64) -> i64 {
     (((n + q / 2) / q).max(1)) * q
 }
 
-/// Full measurement suite for a device (§4.1): all nine classes with the
-/// paper's per-device group sets and size exponents.
-pub fn measurement_suite(device: &str) -> Vec<KernelCase> {
+pub(crate) fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Least common multiple (used to snap sizes to 2-D tile shapes).
+pub(crate) fn lcm(a: i64, b: i64) -> i64 {
+    a / gcd(a, b) * b
+}
+
+/// Full measurement suite for a device (§4.1): all classes with
+/// capability-derived group sets and size exponents.
+pub fn measurement_suite(device: &DeviceProfile) -> Vec<KernelCase> {
     measure::suite(device)
 }
 
-/// The four test kernels for a device (§5), 256-thread groups, four size
-/// cases (`a.`–`d.`) each.
-pub fn test_suite(device: &str) -> Vec<KernelCase> {
+/// The four test kernels for a device (§5), standard-size groups, four
+/// size cases (`a.`–`d.`) each.
+pub fn test_suite(device: &DeviceProfile) -> Vec<KernelCase> {
     testks::suite(device)
 }
 
 /// The full evaluation-kernel zoo for a device: the four §5 test kernels
 /// plus the five expansion kernels (9 classes × 4 size cases).
-pub fn eval_suite(device: &str) -> Vec<KernelCase> {
+pub fn eval_suite(device: &DeviceProfile) -> Vec<KernelCase> {
     testks::eval_suite(device)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gpusim::registry::builtins;
 
     #[test]
-    fn group_sets_have_three_shapes_and_a_256(){
-        for gs in [
-            GroupSet::OneDSmall,
-            GroupSet::OneDMed,
-            GroupSet::OneDLarge,
-            GroupSet::TwoDSmall,
-            GroupSet::TwoDMed,
-            GroupSet::TwoDLarge,
-        ] {
-            assert_eq!(gs.sizes().len(), 3);
-            let (a, b) = gs.g256();
-            assert_eq!(a * b, 256);
+    fn paper_devices_derive_the_published_group_sets() {
+        let one = |n: &str| one_d_groups(builtins().get(n).unwrap()).sizes();
+        let two = |n: &str| two_d_groups(builtins().get(n).unwrap()).sizes();
+        // the derivation reproduces the paper's six tabulated sets
+        assert_eq!(one("r9_fury"), vec![(192, 1), (224, 1), (256, 1)]);
+        assert_eq!(one("k40c"), vec![(128, 1), (256, 1), (384, 1)]);
+        assert_eq!(one("c2070"), vec![(128, 1), (256, 1), (384, 1)]);
+        assert_eq!(one("titan_x"), vec![(256, 1), (384, 1), (512, 1)]);
+        assert_eq!(two("r9_fury"), vec![(16, 12), (16, 14), (16, 16)]);
+        assert_eq!(two("k40c"), vec![(16, 12), (16, 16), (32, 16)]);
+        assert_eq!(two("titan_x"), vec![(16, 16), (24, 16), (32, 16)]);
+    }
+
+    #[test]
+    fn derived_sets_valid_on_every_builtin() {
+        for p in builtins().iter() {
+            for gs in [one_d_groups(p), two_d_groups(p)] {
+                assert_eq!(gs.sizes().len(), 3, "{}", p.name);
+                for (a, b) in gs.sizes() {
+                    assert!(a > 0 && b > 0, "{}", p.name);
+                    assert!(a * b <= p.max_group_size as i64, "{}: {a}x{b}", p.name);
+                }
+                // every built-in admits 256-thread groups
+                let (a, b) = gs.standard();
+                assert_eq!(a * b, 256, "{}", p.name);
+            }
         }
+    }
+
+    #[test]
+    fn mid_caps_keep_the_256_thread_standard() {
+        // caps strictly between 256 and 512 must still anchor a
+        // 256-thread standard shape while reaching up to the cap
+        for cap in [272u32, 336, 384, 496] {
+            let mut p = builtins().get("r9_fury").unwrap().clone();
+            p.max_group_size = cap;
+            p.threads_per_sm = 2048;
+            for gs in [one_d_groups(&p), two_d_groups(&p)] {
+                let (a, b) = gs.standard();
+                assert_eq!(a * b, 256, "cap={cap}: {:?}", gs.sizes());
+                for (x, y) in gs.sizes() {
+                    assert!(x * y <= cap as i64, "cap={cap}: {x}x{y}");
+                }
+            }
+            assert!(one_d_groups(&p).sizes().iter().any(|&(x, _)| x > 256), "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn standard_shape_of_small_caps() {
+        // a hypothetical 128-thread-capped part still gets a usable set
+        let mut p = builtins().get("igp620").unwrap().clone();
+        p.max_group_size = 128;
+        let one = one_d_groups(&p);
+        assert_eq!(one.sizes(), vec![(96, 1), (112, 1), (128, 1)]);
+        assert_eq!(one.standard(), (128, 1));
+        let two = two_d_groups(&p);
+        assert_eq!(two.sizes(), vec![(8, 14), (8, 15), (8, 16)]);
+        assert_eq!(two.standard(), (8, 16));
+        // tiled transpose's cooperative-load precondition holds
+        for (gx, gy) in two.sizes() {
+            assert!(2 * gy >= gx);
+        }
+    }
+
+    #[test]
+    fn size_exp_solves_and_clamps() {
+        // 100 µs at 100 GB/s over 12-byte elements -> 2^20
+        assert_eq!(size_exp(100e9, 12.0, 1, 100e-6, 1, 63), 20);
+        // cubic classes take the exponent per axis
+        assert_eq!(size_exp(1e12, 2.0, 3, 100e-6, 1, 63), 9);
+        // clamps apply
+        assert_eq!(size_exp(100e9, 12.0, 1, 100e-6, 1, 15), 15);
+        assert_eq!(size_exp(100e9, 12.0, 1, 100e-6, 22, 63), 22);
     }
 
     #[test]

@@ -6,10 +6,15 @@
 //! strided gather) used by the cross-validation subsystem
 //! ([`crate::crossval`]) and, behind `Config::eval_zoo`, by the pipeline.
 //!
-//! Every kernel has a scalar reference implementation and a paper-style
-//! per-device (group set, size exponent) configuration table.
+//! Every kernel has a scalar reference implementation. Per-device
+//! (group set, size exponent) configuration is **derived from the
+//! device profile's capabilities** — no name-matched tables — so any
+//! registry device, including profiles loaded from JSON, gets a valid
+//! evaluation suite (see [`crate::kernels`]).
 
-use super::{measure::mm_tiled, snap, GroupSet, KernelCase};
+use super::{lcm, measure::mm_tiled, one_d_groups, size_exp, snap, t_case, two_d_groups,
+    GroupSet, KernelCase};
+use crate::gpusim::DeviceProfile;
 use crate::lpir::builder::{gid, KernelBuilder};
 use crate::lpir::{Access, DType, Expr, Kernel, Layout, UnOp};
 use crate::qpoly::{env, LinExpr};
@@ -671,44 +676,31 @@ pub fn gather_reference(n: usize) -> Vec<f64> {
 // Per-device test suite (§5)
 // ---------------------------------------------------------------------------
 
-/// §5 per-device configuration: (group set, p) for each test kernel.
-fn cfg(device: &str) -> [(GroupSet, i64); 4] {
+/// §5 per-device configuration: (group set, base size exponent) for
+/// each test kernel, derived from the profile's capabilities. Cost
+/// sketches per class: fd5 streams ~8 bytes per grid cell (n²);
+/// mm_skinny executes 16·n³ flops; conv7 executes ~2646 flops per n²
+/// grid point; n-body ~10 flops per n² pair. Exponents are solved
+/// against the launch-overhead floor so the smallest (`a.`) case is
+/// still comfortably measurable.
+fn cfg(d: &DeviceProfile) -> [(GroupSet, i64); 4] {
+    let t = t_case(d);
     // order: fd, skinny_mm, conv, nbody
-    match device {
-        "r9_fury" => [
-            (GroupSet::TwoDSmall, 10),
-            (GroupSet::TwoDSmall, 9),
-            (GroupSet::TwoDSmall, 7),
-            (GroupSet::OneDSmall, 10),
-        ],
-        "c2070" => [
-            (GroupSet::TwoDMed, 10),
-            (GroupSet::TwoDMed, 9),
-            (GroupSet::TwoDMed, 6),
-            (GroupSet::OneDMed, 11),
-        ],
-        "k40c" => [
-            (GroupSet::TwoDMed, 11),
-            (GroupSet::TwoDMed, 9),
-            (GroupSet::TwoDMed, 7),
-            (GroupSet::OneDMed, 11),
-        ],
-        _ => [
-            (GroupSet::TwoDLarge, 11),
-            (GroupSet::TwoDLarge, 10),
-            (GroupSet::TwoDLarge, 8),
-            (GroupSet::OneDLarge, 11),
-        ],
-    }
+    [
+        (two_d_groups(d), size_exp(d.dram_bw, 8.0, 2, t, 8, 12)),
+        (two_d_groups(d), size_exp(d.peak_f32(), 16.0, 3, t, 8, 11)),
+        (two_d_groups(d), size_exp(d.peak_f32(), 2646.0, 2, t, 5, 9)),
+        (one_d_groups(d), size_exp(d.peak_f32(), 10.0, 2, t, 9, 12)),
+    ]
 }
 
-/// The four §5 test kernels with their 256-thread group configuration and
-/// four size cases (`a.`–`d.`, i.e. t = 0..4) each.
-pub fn suite(device: &str) -> Vec<KernelCase> {
+/// The four §5 test kernels with their standard-size group configuration
+/// and four size cases (`a.`–`d.`, i.e. t = 0..4) each.
+pub fn suite(device: &DeviceProfile) -> Vec<KernelCase> {
     let [fd_c, mm_c, cv_c, nb_c] = cfg(device);
     let mut out = Vec::new();
 
-    let (gx, gy) = fd_c.0.g256();
+    let (gx, gy) = fd_c.0.standard();
     let k = fd_stencil(gx, gy);
     for t in 0..4 {
         let n = snap(1i64 << (fd_c.1 + t), lcm(gx, gy));
@@ -720,7 +712,7 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (gx, gy) = mm_c.0.g256();
+    let (gx, gy) = mm_c.0.standard();
     let k = skinny_mm(gx, gy);
     for t in 0..4 {
         let n = 1i64 << (mm_c.1 + t);
@@ -732,7 +724,7 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (gx, gy) = cv_c.0.g256();
+    let (gx, gy) = cv_c.0.standard();
     let k = convolution(gx, gy);
     for t in 0..4 {
         let n = snap(1i64 << (cv_c.1 + t), lcm(gx, gy));
@@ -744,7 +736,7 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (lsize, _) = nb_c.0.g256();
+    let (lsize, _) = nb_c.0.standard();
     let k = nbody(lsize);
     for t in 0..4 {
         let n = snap(1i64 << (nb_c.1 + t), lsize);
@@ -759,51 +751,33 @@ pub fn suite(device: &str) -> Vec<KernelCase> {
 }
 
 /// Per-device configuration of the five zoo kernels, in order:
-/// reduce_tree, scan_hs, st3d7, bmm8, gather_s2. Group sets mirror the
-/// §5 table (small sets on the R9 Fury, which caps work groups at 256
-/// threads; large on the Titan X); size exponents are chosen so every
-/// case runs well above the device's launch-overhead floor.
-fn zoo_cfg(device: &str) -> [(GroupSet, i64); 5] {
-    match device {
-        "r9_fury" => [
-            (GroupSet::OneDSmall, 21),
-            (GroupSet::OneDSmall, 21),
-            (GroupSet::TwoDSmall, 6),
-            (GroupSet::OneDSmall, 14),
-            (GroupSet::OneDSmall, 19),
-        ],
-        "c2070" => [
-            (GroupSet::OneDMed, 20),
-            (GroupSet::OneDMed, 20),
-            (GroupSet::TwoDMed, 5),
-            (GroupSet::OneDMed, 14),
-            (GroupSet::OneDMed, 19),
-        ],
-        "k40c" => [
-            (GroupSet::OneDMed, 21),
-            (GroupSet::OneDMed, 21),
-            (GroupSet::TwoDMed, 6),
-            (GroupSet::OneDMed, 14),
-            (GroupSet::OneDMed, 19),
-        ],
-        _ => [
-            (GroupSet::OneDLarge, 22),
-            (GroupSet::OneDLarge, 22),
-            (GroupSet::TwoDLarge, 6),
-            (GroupSet::OneDLarge, 15),
-            (GroupSet::OneDLarge, 20),
-        ],
-    }
+/// reduce_tree, scan_hs, st3d7, bmm8, gather_s2 — derived from the
+/// profile like [`cfg`]. Cost sketches: the reduction and scan stream
+/// ~4 bytes per element; the 3-D stencil ~8 bytes per n³ cell; bmm8
+/// touches ~3 KB per batch (the 8×8×8 reduction re-reads its operands
+/// lane-coalesced, well beyond the 768-byte footprint); the gather
+/// touches ~100 bytes per row across its half-utilized diagonals.
+/// Exponents are solved against the launch floor so even the smallest
+/// case is well above it.
+fn zoo_cfg(d: &DeviceProfile) -> [(GroupSet, i64); 5] {
+    let t = t_case(d);
+    [
+        (one_d_groups(d), size_exp(d.dram_bw, 4.0, 1, t, 18, 23)),
+        (one_d_groups(d), size_exp(d.dram_bw, 4.0, 1, t, 18, 23)),
+        (two_d_groups(d), size_exp(d.dram_bw, 8.0, 3, t, 4, 8)),
+        (one_d_groups(d), size_exp(d.dram_bw, 3072.0, 1, t, 12, 16)),
+        (one_d_groups(d), size_exp(d.dram_bw, 100.0, 1, t, 16, 21)),
+    ]
 }
 
-/// The five zoo kernels with their 256-thread group configuration and
+/// The five zoo kernels with their standard-size group configuration and
 /// four size cases (`a.`–`d.`) each — the expansion half of the
 /// evaluation-kernel zoo.
-pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
+pub fn zoo_suite(device: &DeviceProfile) -> Vec<KernelCase> {
     let [rd_c, sc_c, st_c, bm_c, ga_c] = zoo_cfg(device);
     let mut out = Vec::new();
 
-    let (lsize, _) = rd_c.0.g256();
+    let (lsize, _) = rd_c.0.standard();
     let k = reduce_tree(lsize);
     for t in 0..4 {
         let n = snap(1i64 << (rd_c.1 + t), lsize);
@@ -815,7 +789,7 @@ pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (lsize, _) = sc_c.0.g256();
+    let (lsize, _) = sc_c.0.standard();
     let k = scan_hs(lsize);
     for t in 0..4 {
         let n = snap(1i64 << (sc_c.1 + t), lsize);
@@ -827,7 +801,7 @@ pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (gx, gy) = st_c.0.g256();
+    let (gx, gy) = st_c.0.standard();
     let k = stencil3d(gx, gy);
     for t in 0..4 {
         let n = snap(1i64 << (st_c.1 + t), lcm(gx, gy));
@@ -839,7 +813,7 @@ pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (lsize, _) = bm_c.0.g256();
+    let (lsize, _) = bm_c.0.standard();
     let k = bmm(lsize);
     for t in 0..4 {
         let nb = snap(1i64 << (bm_c.1 + t), lsize);
@@ -851,7 +825,7 @@ pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
         });
     }
 
-    let (lsize, _) = ga_c.0.g256();
+    let (lsize, _) = ga_c.0.standard();
     let k = gather_strided(lsize);
     for t in 0..4 {
         let n = snap(1i64 << (ga_c.1 + t), lsize);
@@ -867,7 +841,7 @@ pub fn zoo_suite(device: &str) -> Vec<KernelCase> {
 
 /// The full evaluation-kernel zoo for a device: the four §5 test kernels
 /// plus the five zoo kernels — 9 classes × 4 size cases.
-pub fn eval_suite(device: &str) -> Vec<KernelCase> {
+pub fn eval_suite(device: &DeviceProfile) -> Vec<KernelCase> {
     let mut out = suite(device);
     out.extend(zoo_suite(device));
     out
@@ -876,18 +850,6 @@ pub fn eval_suite(device: &str) -> Vec<KernelCase> {
 /// Table-1 row letters for the four size cases.
 pub fn case_letter(t: i64) -> &'static str {
     ["a", "b", "c", "d"][t as usize]
-}
-
-fn gcd(a: i64, b: i64) -> i64 {
-    if b == 0 {
-        a
-    } else {
-        gcd(b, a % b)
-    }
-}
-
-fn lcm(a: i64, b: i64) -> i64 {
-    a / gcd(a, b) * b
 }
 
 #[cfg(test)]
@@ -955,28 +917,28 @@ mod tests {
 
     #[test]
     fn test_suite_has_16_cases_per_device() {
-        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+        for dev in crate::gpusim::registry::builtins().iter() {
             let s = suite(dev);
-            assert_eq!(s.len(), 16, "{dev}");
-            // 4 kernels x 4 size cases with 256-thread groups
+            assert_eq!(s.len(), 16, "{}", dev.name);
+            // 4 kernels x 4 size cases with 256-thread (standard) groups
             for case in &s {
-                assert_eq!(case.group.0 * case.group.1, 256, "{}", case.label);
+                assert_eq!(case.group.0 * case.group.1, 256, "{}: {}", dev.name, case.label);
             }
         }
     }
 
     #[test]
     fn eval_suite_has_36_cases_over_9_classes() {
-        for dev in ["titan_x", "k40c", "c2070", "r9_fury"] {
+        for dev in crate::gpusim::registry::builtins().iter() {
             let s = eval_suite(dev);
-            assert_eq!(s.len(), 36, "{dev}");
+            assert_eq!(s.len(), 36, "{}", dev.name);
             let mut classes: Vec<&str> =
                 s.iter().map(|c| c.label.split('/').next().unwrap()).collect();
             classes.sort();
             classes.dedup();
-            assert_eq!(classes.len(), 9, "{dev}: {classes:?}");
+            assert_eq!(classes.len(), 9, "{}: {classes:?}", dev.name);
             for case in &s {
-                assert_eq!(case.group.0 * case.group.1, 256, "{}", case.label);
+                assert_eq!(case.group.0 * case.group.1, 256, "{}: {}", dev.name, case.label);
             }
         }
     }

@@ -24,8 +24,10 @@
 //!    loaded through [`runtime`]).
 //! 5. Predict test-kernel run times and report the paper's tables
 //!    ([`report`], [`coordinator`]).
-//! 6. Evaluate the model on *held-out* kernels and size cases over the
-//!    expanded evaluation-kernel zoo ([`crossval`]).
+//! 6. Evaluate the model on *held-out* kernels, size cases and devices
+//!    over the expanded evaluation-kernel zoo ([`crossval`]) — the
+//!    device split transfers weights across the registry's widened
+//!    hardware axis ([`gpusim::registry`]).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

@@ -5,15 +5,24 @@
 //! * `pipeline` — full Figure-1 pipeline over all devices (Table 1 + 2);
 //!   `--zoo` evaluates the full 9-class kernel zoo instead of the §5 four
 //! * `crossval` — held-out cross-validation over the evaluation-kernel
-//!   zoo (`--split kernel|case`, `--quick` for the smoke campaign)
+//!   zoo (`--split kernel|case|device`, `--quick` for the smoke
+//!   campaign; the `device` split reports a device×device
+//!   transfer-error matrix)
 //! * `fit`      — calibrate one device and print its weight table
 //! * `predict`  — predict + measure the §5 test kernels on one device
-//! * `devices`  — list the simulated device profiles
+//! * `devices`  — list the device registry (built-ins + `--devices` file)
 //! * `props`    — show extracted properties for one evaluation kernel
+//!
+//! `--devices <profiles.json>` extends the device registry with
+//! user-defined profiles (a JSON array of profile objects, or
+//! `{"devices": [...]}`; see `DeviceProfile::to_json` for the field
+//! set) and adds them to the run — every kernel suite is derived from
+//! profile capabilities, so a loaded device runs the full pipeline
+//! end to end.
 
 use uniperf::coordinator::{run_device, run_pipeline, Config, FitBackend};
 use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
-use uniperf::gpusim::all_devices;
+use uniperf::util::json::Json;
 use uniperf::harness::Protocol;
 use uniperf::report::render_table2;
 use uniperf::stats::{extract, ExtractOpts, Schema};
@@ -21,7 +30,8 @@ use uniperf::util::cli::{parse, usage, OptSpec};
 
 fn specs() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "device", help: "device name (titan_x|k40c|c2070|r9_fury)", is_flag: false, default: Some("k40c") },
+        OptSpec { name: "device", help: "device name (see the 'devices' subcommand)", is_flag: false, default: Some("k40c") },
+        OptSpec { name: "devices", help: "JSON file of extra device profiles to register and run", is_flag: false, default: None },
         OptSpec { name: "backend", help: "fit backend: native|xla|auto", is_flag: false, default: Some("auto") },
         OptSpec { name: "runs", help: "timing runs per case", is_flag: false, default: Some("30") },
         OptSpec { name: "out", help: "results directory", is_flag: false, default: None },
@@ -30,7 +40,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "collapse-utilization", help: "ablation: ignore utilization ratios", is_flag: true, default: None },
         OptSpec { name: "bin-local-strides", help: "extension (§6.2): bin local loads by bank-conflict stride", is_flag: true, default: None },
         OptSpec { name: "zoo", help: "pipeline: evaluate the full 9-class kernel zoo", is_flag: true, default: None },
-        OptSpec { name: "split", help: "crossval split: kernel|case", is_flag: false, default: Some("kernel") },
+        OptSpec { name: "split", help: "crossval split: kernel|case|device", is_flag: false, default: Some("kernel") },
         OptSpec { name: "quick", help: "crossval: cut-down smoke campaign", is_flag: true, default: None },
     ]
 }
@@ -85,6 +95,21 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
         cfg.workers = w.parse().map_err(|_| "bad --workers")?;
     }
     cfg.eval_zoo = args.has_flag("zoo");
+    if let Some(path) = args.get("devices") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("--devices {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("--devices {path}: {e}"))?;
+        let loaded = cfg
+            .registry
+            .extend_from_json(&doc)
+            .map_err(|e| format!("--devices {path}: {e}"))?;
+        // loaded profiles join the run (deduplicated against defaults)
+        for name in loaded {
+            if !cfg.devices.contains(&name) {
+                cfg.devices.push(name);
+            }
+        }
+    }
     Ok(cfg)
 }
 
@@ -113,7 +138,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             let split = match args.get_or("split", "kernel") {
                 "kernel" => Split::LeaveOneKernelOut,
                 "case" => Split::LeaveOneSizeCaseOut,
-                other => return Err(format!("unknown split '{other}' (kernel|case)")),
+                "device" => Split::LeaveOneDeviceOut,
+                other => return Err(format!("unknown split '{other}' (kernel|case|device)")),
             };
             let opts = CrossvalOpts { base: cfg, split, quick: args.has_flag("quick") };
             let t0 = std::time::Instant::now();
@@ -152,27 +178,35 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "devices" => {
+            let cfg = make_config(&args)?;
             println!(
-                "{:<10} {:<24} {:>5} {:>10} {:>10} {:>9}",
-                "name", "full name", "SMs", "clock", "BW (GB/s)", "warp"
+                "{:<10} {:<36} {:>5} {:>10} {:>10} {:>5} {:>6} {:>10}",
+                "name", "full name", "SMs", "clock", "BW (GB/s)", "warp", "maxg", "launch"
             );
-            for d in all_devices() {
+            for d in cfg.registry.iter() {
                 println!(
-                    "{:<10} {:<24} {:>5} {:>7.2}GHz {:>10.0} {:>9}",
+                    "{:<10} {:<36} {:>5} {:>7.2}GHz {:>10.0} {:>5} {:>6} {:>8.1}µs",
                     d.name,
                     d.full_name,
                     d.sms,
                     d.clock_hz / 1e9,
                     d.dram_bw / 1e9,
-                    d.warp_size
+                    d.warp_size,
+                    d.max_group_size,
+                    d.launch_base * 1e6
                 );
             }
             Ok(())
         }
         "props" => {
+            let cfg = make_config(&args)?;
             let device = args.get_or("device", "k40c").to_string();
             let kernel_name = args.get_or("kernel", "fd5");
-            let suite = uniperf::kernels::eval_suite(&device);
+            let profile = cfg
+                .registry
+                .get(&device)
+                .ok_or_else(|| format!("unknown device '{device}'"))?;
+            let suite = uniperf::kernels::eval_suite(profile);
             let case = suite
                 .iter()
                 .find(|c| c.kernel.name == kernel_name)

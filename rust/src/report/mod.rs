@@ -1,8 +1,11 @@
 //! Report generation: the paper's Table 1 (predicted vs. actual times +
-//! geometric-mean relative errors) and Table 2 (fitted weights).
+//! geometric-mean relative errors), Table 2 (fitted weights), the
+//! held-out cross-validation matrix and the cross-device transfer-error
+//! matrix.
 
 use crate::perfmodel::Model;
 use crate::stats::Schema;
+use crate::util::json::Json;
 use crate::util::linalg::geometric_mean;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -212,6 +215,104 @@ pub fn render_crossval(split_label: &str, t: &Table1) -> String {
     s
 }
 
+/// Cross-device transfer errors: `err[source][target]` is the
+/// geometric-mean relative error of predicting the *target* device's
+/// held-out zoo timings with weights fitted on the *source* device
+/// (leave-one-device-out, in the spirit of the cross-machine follow-up
+/// work arXiv:1904.09538). The diagonal is `None` — a device's own zoo
+/// is in its training set under this split.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransferMatrix {
+    /// row/column order (sources and targets are the same device list)
+    pub devices: Vec<String>,
+    /// `err[source_index][target_index]`
+    pub err: Vec<Vec<Option<f64>>>,
+}
+
+impl TransferMatrix {
+    /// Transfer error from `source` to `target`, if both are present
+    /// and distinct.
+    pub fn get(&self, source: &str, target: &str) -> Option<f64> {
+        let si = self.devices.iter().position(|d| d == source)?;
+        let ti = self.devices.iter().position(|d| d == target)?;
+        self.err[si][ti]
+    }
+
+    /// Geomean transfer error over all (source, target) pairs.
+    pub fn overall_err(&self) -> f64 {
+        let errs: Vec<f64> = self.err.iter().flatten().filter_map(|e| *e).collect();
+        geometric_mean(&errs)
+    }
+
+    /// JSON form (persisted with the crossval output for drift
+    /// analysis; `null` on the diagonal).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| Json::Str(d.clone())).collect()),
+            ),
+            (
+                "err",
+                Json::Arr(
+                    self.err
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(
+                                row.iter()
+                                    .map(|e| e.map(Json::Num).unwrap_or(Json::Null))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Render the device×device transfer-error matrix: rows are the fitted
+/// (source) devices, columns the predicted (target) devices, plus the
+/// per-source and per-target geomean marginals.
+pub fn render_transfer(t: &TransferMatrix) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Cross-device transfer (leave-one-device-out): geometric-mean relative error"
+    );
+    let _ = writeln!(s, "rows: fitted on (source) | columns: predicted (target)");
+    let _ = write!(s, "{:<12}", "fit \\ pred");
+    for d in &t.devices {
+        let _ = write!(s, " | {:>9}", d);
+    }
+    let _ = writeln!(s, " | {:>9}", "geomean");
+    let line_len = 12 + (t.devices.len() + 1) * 12;
+    let _ = writeln!(s, "{}", "-".repeat(line_len));
+    for (si, src) in t.devices.iter().enumerate() {
+        let _ = write!(s, "{:<12}", src);
+        for e in &t.err[si] {
+            match e {
+                Some(x) => {
+                    let _ = write!(s, " | {:>9.3}", x);
+                }
+                None => {
+                    let _ = write!(s, " | {:>9}", "-");
+                }
+            }
+        }
+        let row: Vec<f64> = t.err[si].iter().filter_map(|e| *e).collect();
+        let _ = writeln!(s, " | {:>9.3}", geometric_mean(&row));
+    }
+    let _ = writeln!(s, "{}", "-".repeat(line_len));
+    let _ = write!(s, "{:<12}", "geomean");
+    for ti in 0..t.devices.len() {
+        let col: Vec<f64> = t.err.iter().filter_map(|row| row[ti]).collect();
+        let _ = write!(s, " | {:>9.3}", geometric_mean(&col));
+    }
+    let _ = writeln!(s, " | {:>9.3}", t.overall_err());
+    s
+}
+
 /// Render the paper's Table 2: the fitted weight vector with
 /// per-property labels, in units of seconds per operation.
 pub fn render_table2(model: &Model, schema: &Schema) -> String {
@@ -298,5 +399,43 @@ mod tests {
         let t = sample_table();
         assert_eq!(t.devices(), vec!["titan_x".to_string(), "k40c".to_string()]);
         assert_eq!(t.kernels(), vec!["fd5".to_string(), "nbody".to_string()]);
+    }
+
+    fn sample_transfer() -> TransferMatrix {
+        TransferMatrix {
+            devices: vec!["titan_x".into(), "k40c".into()],
+            err: vec![vec![None, Some(0.2)], vec![Some(0.4), None]],
+        }
+    }
+
+    #[test]
+    fn transfer_matrix_lookup_and_marginals() {
+        let t = sample_transfer();
+        assert_eq!(t.get("titan_x", "k40c"), Some(0.2));
+        assert_eq!(t.get("k40c", "titan_x"), Some(0.4));
+        assert_eq!(t.get("titan_x", "titan_x"), None);
+        assert_eq!(t.get("titan_x", "gtx480"), None);
+        let want = (0.2f64 * 0.4).sqrt();
+        assert!((t.overall_err() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_transfer_has_matrix_shape() {
+        let r = render_transfer(&sample_transfer());
+        for needle in ["titan_x", "k40c", "fit \\ pred", "geomean", "0.200", "0.400"] {
+            assert!(r.contains(needle), "missing {needle}:\n{r}");
+        }
+        // one dash cell per diagonal entry
+        assert_eq!(r.matches(" |         -").count(), 2, "{r}");
+    }
+
+    #[test]
+    fn transfer_matrix_json_shape() {
+        let j = sample_transfer().to_json();
+        let devs = j.get("devices").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(devs.len(), 2);
+        let err = j.get("err").and_then(crate::util::json::Json::as_arr).unwrap();
+        assert_eq!(err[0].as_arr().unwrap()[0], crate::util::json::Json::Null);
+        assert_eq!(err[0].as_arr().unwrap()[1].as_f64(), Some(0.2));
     }
 }

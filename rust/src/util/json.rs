@@ -32,6 +32,19 @@ impl Json {
         }
     }
 
+    /// Numeric object field (`None` for missing keys, non-objects and
+    /// non-numeric values). Shorthand for `get(key).and_then(as_f64)`
+    /// used by record loaders like `DeviceProfile::from_json`.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// String object field (`None` for missing keys, non-objects and
+    /// non-string values).
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -382,5 +395,15 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(30.0).compact(), "30");
         assert_eq!(Json::Num(0.5).compact(), "0.5");
+    }
+
+    #[test]
+    fn object_field_helpers() {
+        let v = Json::obj(vec![("a", Json::Num(2.0)), ("b", Json::Str("x".into()))]);
+        assert_eq!(v.get_f64("a"), Some(2.0));
+        assert_eq!(v.get_str("b"), Some("x"));
+        assert_eq!(v.get_f64("b"), None);
+        assert_eq!(v.get_str("missing"), None);
+        assert_eq!(Json::Num(1.0).get_f64("a"), None);
     }
 }

@@ -20,7 +20,8 @@ fn workers() -> usize {
 /// predicate quick-mode crossval uses, so the golden pins the campaign
 /// that actually runs in CI's smoke step.
 fn small_campaign_cases(device: &str) -> Vec<uniperf::kernels::KernelCase> {
-    uniperf::kernels::measurement_suite(device)
+    let profile = uniperf::gpusim::device(device).unwrap();
+    uniperf::kernels::measurement_suite(&profile)
         .into_iter()
         .filter(|c| quick_campaign_case(&c.label))
         .collect()
@@ -57,6 +58,80 @@ fn quick_crossval_loko_two_devices() {
     for needle in ["reduce_tree", "scan_hs", "st3d7", "bmm8", "gather_s2", "overall"] {
         assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
     }
+}
+
+#[test]
+fn transfer_split_builds_device_matrix() {
+    let opts = CrossvalOpts {
+        base: Config {
+            devices: vec!["k40c".into(), "r9_fury".into(), "p100".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneDeviceOut,
+        quick: true,
+    };
+    let r = run_crossval(&opts).expect("transfer crossval");
+    // one fold per source device, each predicting the other two
+    assert_eq!(r.folds.len(), 3);
+    let tm = r.transfer.as_ref().expect("device split yields a transfer matrix");
+    assert_eq!(tm.devices, vec!["k40c", "r9_fury", "p100"]);
+    for (si, f) in r.folds.iter().enumerate() {
+        assert_eq!(f.fold, tm.devices[si], "fold order must follow device order");
+        assert!(!f.weights.is_empty(), "fold {} lost its weight table", f.fold);
+        // 2 target devices x 9 kernels x 2 quick size cases
+        assert_eq!(f.entries.len(), 2 * 18, "fold {}", f.fold);
+        for e in &f.entries {
+            assert_ne!(e.device, f.fold, "a fold must not predict its own device");
+            assert!(e.predicted_s.is_finite() && e.actual_s > 0.0, "{}/{}", e.device, e.kernel);
+        }
+    }
+    for si in 0..3 {
+        for ti in 0..3 {
+            let cell = tm.err[si][ti];
+            if si == ti {
+                assert!(cell.is_none(), "diagonal must be held out");
+            } else {
+                assert!(cell.unwrap().is_finite(), "({si},{ti})");
+            }
+        }
+    }
+    // named lookup works for off-diagonal pairs
+    let regular = tm.get("k40c", "p100").unwrap();
+    assert!(regular.is_finite() && regular >= 0.0);
+    let rendered = r.render();
+    for needle in ["fit \\ pred", "k40c", "r9_fury", "p100", "geomean"] {
+        assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
+    }
+    // the JSON record carries per-fold weights and the matrix
+    let j = r.to_json();
+    assert!(j.get("transfer").is_some());
+    let folds = j.get("folds").and_then(Json::as_arr).unwrap();
+    assert_eq!(folds.len(), 3);
+    assert!(folds[0]
+        .get("weights")
+        .and_then(Json::as_arr)
+        .map(|w| !w.is_empty())
+        .unwrap_or(false));
+}
+
+#[test]
+fn transfer_matrix_deterministic_across_reruns() {
+    let opts = CrossvalOpts {
+        base: Config {
+            devices: vec!["c2070".into(), "vega64".into()],
+            backend: FitBackend::Native,
+            ..Config::default()
+        },
+        split: Split::LeaveOneDeviceOut,
+        quick: true,
+    };
+    let r1 = run_crossval(&opts).expect("transfer run 1");
+    let r2 = run_crossval(&opts).expect("transfer run 2");
+    // golden-determinism pin: byte-identical matrix and render
+    assert_eq!(r1.transfer, r2.transfer);
+    assert_eq!(r1.render(), r2.render());
+    assert_eq!(r1.to_json().pretty(), r2.to_json().pretty());
 }
 
 #[test]
@@ -121,7 +196,7 @@ fn golden_determinism_campaign_fit_and_table() {
             run_campaign(&gpu, &cases, &schema, &protocol, opts, workers()).expect("campaign");
         let model = fit(device, &pm, &schema, &NativeSolver::new()).expect("fit");
         // predict + measure a slice of the evaluation zoo
-        let zoo: Vec<_> = uniperf::kernels::eval_suite(device)
+        let zoo: Vec<_> = uniperf::kernels::eval_suite(&gpu.profile)
             .into_iter()
             .filter(|c| c.label.split('/').nth(1) == Some("a"))
             .collect();

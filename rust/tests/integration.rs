@@ -39,7 +39,7 @@ fn campaign_persists_and_refits_identically() {
     let gpu = SimGpu::named("c2070").unwrap();
     let schema = Schema::full();
     // a cut-down campaign for speed: one class
-    let cases: Vec<_> = uniperf::kernels::measurement_suite("c2070")
+    let cases: Vec<_> = uniperf::kernels::measurement_suite(&gpu.profile)
         .into_iter()
         .filter(|c| c.label.starts_with("sg_") || c.label.starts_with("empty/"))
         .collect();
@@ -65,7 +65,7 @@ fn campaign_persists_and_refits_identically() {
 fn model_json_file_roundtrip() {
     let schema = Schema::full();
     let gpu = SimGpu::named("titan_x").unwrap();
-    let cases: Vec<_> = uniperf::kernels::measurement_suite("titan_x")
+    let cases: Vec<_> = uniperf::kernels::measurement_suite(&gpu.profile)
         .into_iter()
         .filter(|c| c.label.starts_with("sg_") || c.label.starts_with("empty/"))
         .collect();
@@ -99,7 +99,7 @@ fn xla_and_native_solvers_agree_on_campaign_data() {
     };
     let gpu = SimGpu::named("k40c").unwrap();
     let schema = Schema::full();
-    let cases = uniperf::kernels::measurement_suite("k40c");
+    let cases = uniperf::kernels::measurement_suite(&gpu.profile);
     let (pm, _) = run_campaign(
         &gpu,
         &cases,

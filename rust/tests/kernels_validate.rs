@@ -88,9 +88,12 @@ fn vsadd_and_global_access_all_lsizes() {
                 assert!((out[idx] - want).abs() < 1e-12, "vsadd s={s} l={lsize}");
             }
         }
-        for cfg in
-            [GlobalAccessConfig::Copy, GlobalAccessConfig::Add4, GlobalAccessConfig::StoreIndex]
-        {
+        for cfg in [
+            GlobalAccessConfig::Copy,
+            GlobalAccessConfig::Add4,
+            GlobalAccessConfig::StoreIndex,
+            GlobalAccessConfig::StoreUniform,
+        ] {
             let k = global_access(cfg, lsize);
             let e = env(&[("n", 2 * lsize)]);
             execute(&k, &e).unwrap_or_else(|err| panic!("{cfg:?} l={lsize}: {err}"));

@@ -1,0 +1,177 @@
+//! Integration tests for the data-driven device registry: profile JSON
+//! round-trips (property-tested), capability-derived suite validity on
+//! every registry device, and the acceptance path — a profile loaded
+//! from JSON running the full pipeline end to end with derived kernel
+//! configurations.
+
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::gpusim::{registry, DeviceProfile, DeviceRegistry, SimGpu};
+use uniperf::kernels;
+use uniperf::prop_assert;
+use uniperf::stats::Schema;
+use uniperf::util::json::Json;
+use uniperf::util::prop::{check, gen_f64, Config as PropConfig};
+
+/// Randomize a profile's numeric fields around a base profile,
+/// keeping it valid (positive rates, legal group cap).
+fn random_profile(rng: &mut uniperf::util::rng::Rng, idx: u32) -> DeviceProfile {
+    let names = registry::builtins().names();
+    let pick = rng.range_u64(0, names.len() as u64) as usize;
+    let base = registry::builtins().get(&names[pick]).unwrap().clone();
+    DeviceProfile {
+        name: format!("rand_{idx}"),
+        full_name: format!("Randomized {}", base.full_name),
+        sms: rng.range_u64(1, 200) as u32,
+        clock_hz: gen_f64(rng, 0.3e9, 3.0e9),
+        cores_per_sm: rng.range_u64(8, 256) as u32,
+        warp_size: [8u32, 16, 32, 64][rng.range_u64(0, 4) as usize],
+        dram_bw: gen_f64(rng, 5e9, 2e12),
+        line_bytes: [32u32, 64, 128][rng.range_u64(0, 3) as usize],
+        l2_bytes: rng.range_u64(1, 256) * (1 << 18),
+        l1_bytes: rng.range_u64(1, 16) * (8 << 10),
+        l2_bw_mult: gen_f64(rng, 1.5, 5.0),
+        local_bw: gen_f64(rng, 1e11, 5e13),
+        cyc_mad: 1.0,
+        cyc_div: gen_f64(rng, 4.0, 20.0),
+        cyc_exp: gen_f64(rng, 8.0, 30.0),
+        cyc_special: gen_f64(rng, 2.0, 12.0),
+        f64_ratio: gen_f64(rng, 2.0, 64.0),
+        cyc_barrier: gen_f64(rng, 16.0, 64.0),
+        launch_base: gen_f64(rng, 1e-6, 6e-5),
+        launch_per_group: gen_f64(rng, 5e-10, 1e-8),
+        max_groups_per_sm: rng.range_u64(4, 64) as u32,
+        max_group_size: 16 * rng.range_u64(4, 65) as u32, // 64..=1024
+        threads_per_sm: 2048,
+        wave_latency: gen_f64(rng, 1e-6, 1e-5),
+        overlap: gen_f64(rng, 0.0, 1.0),
+        noise_sigma: gen_f64(rng, 0.005, 0.05),
+        first_touch_factor: gen_f64(rng, 1.2, 3.0),
+        second_run_sigma: gen_f64(rng, 0.02, 0.2),
+        irregularity: gen_f64(rng, 0.0, 0.5),
+        uncoalesced_penalty: gen_f64(rng, 1.0, 2.0),
+    }
+}
+
+#[test]
+fn device_profile_json_roundtrip_property() {
+    let mut idx = 0u32;
+    check("profile_json_roundtrip", PropConfig { cases: 64, seed: 0xDE71CE }, |rng| {
+        idx += 1;
+        let p = random_profile(rng, idx);
+        prop_assert!(p.validate().is_ok(), "{}: generated profile invalid", p.name);
+        let text = p.to_json().pretty();
+        let back = DeviceProfile::from_json(
+            &Json::parse(&text).map_err(|e| format!("parse: {e}"))?,
+        )
+        .map_err(|e| format!("from_json: {e}"))?;
+        prop_assert!(back == p, "{}: round-trip mismatch", p.name);
+        // compact form round-trips too
+        let back2 = DeviceProfile::from_json(
+            &Json::parse(&p.to_json().compact()).map_err(|e| format!("parse: {e}"))?,
+        )
+        .map_err(|e| format!("from_json: {e}"))?;
+        prop_assert!(back2 == p, "{}: compact round-trip mismatch", p.name);
+        Ok(())
+    });
+}
+
+/// Every registry device — including the synthetic parts — gets a valid
+/// capability-derived campaign and evaluation suite: group shapes
+/// respect the device's cap, labels are unique, and every evaluation
+/// case (whose smallest size must itself be measurable) simulates well
+/// above the launch-overhead floor.
+#[test]
+fn capability_derived_suites_valid_on_every_registry_device() {
+    for profile in registry::builtins().iter() {
+        let cap = profile.max_group_size as i64;
+        let campaign = kernels::measurement_suite(profile);
+        let mut labels: Vec<&String> = campaign.iter().map(|c| &c.label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), campaign.len(), "{}: duplicate labels", profile.name);
+        for case in &campaign {
+            assert!(
+                case.group.0 * case.group.1 <= cap,
+                "{}: campaign case {} exceeds the group cap",
+                profile.name,
+                case.label
+            );
+        }
+
+        let gpu = SimGpu::new(profile.clone());
+        let floor = profile.launch_floor_s();
+        for case in kernels::eval_suite(profile) {
+            assert!(case.group.0 * case.group.1 <= cap, "{}: {}", profile.name, case.label);
+            let bd = gpu
+                .breakdown(&case.kernel, &case.env)
+                .unwrap_or_else(|e| panic!("{}: {}: {e}", profile.name, case.label));
+            assert!(
+                bd.total >= 1.3 * floor,
+                "{}: {} runs at {:.1} µs, under 1.3x the {:.1} µs launch floor",
+                profile.name,
+                case.label,
+                bd.total * 1e6,
+                floor * 1e6
+            );
+        }
+    }
+}
+
+/// The acceptance path: a device that exists only in a JSON file —
+/// with a group-size cap (128) no built-in has — is registered via the
+/// registry extension hook and runs the full pipeline end to end on
+/// purely capability-derived kernel configurations.
+#[test]
+fn json_loaded_profile_runs_pipeline_end_to_end() {
+    let custom = r#"{"devices": [{
+        "name": "jsonpart",
+        "full_name": "JSON-defined test part",
+        "sms": 10, "clock_hz": 9.0e8, "cores_per_sm": 64, "warp_size": 32,
+        "dram_bw": 8.0e10, "line_bytes": 64,
+        "l2_bytes": 1048576, "l1_bytes": 32768, "local_bw": 5.0e11,
+        "launch_base": 1.2e-5, "launch_per_group": 3.0e-9,
+        "threads_per_sm": 1024, "max_groups_per_sm": 12,
+        "max_group_size": 128
+    }]}"#;
+    let mut reg = DeviceRegistry::with_builtins();
+    let loaded = reg.extend_from_json(&Json::parse(custom).unwrap()).unwrap();
+    assert_eq!(loaded, vec!["jsonpart".to_string()]);
+
+    let profile = reg.get("jsonpart").unwrap();
+    // capability derivation copes with the 128-thread cap: every shape
+    // fits, and the standard shape uses the full 128 threads
+    let suite = kernels::eval_suite(profile);
+    assert_eq!(suite.len(), 36);
+    for case in &suite {
+        assert!(case.group.0 * case.group.1 <= 128, "{}", case.label);
+    }
+
+    let cfg = Config {
+        devices: vec!["jsonpart".into()],
+        registry: reg,
+        backend: FitBackend::Native,
+        ..Config::default()
+    };
+    let schema = Schema::full();
+    let dr = run_device("jsonpart", &schema, &cfg).expect("JSON device pipeline");
+    assert_eq!(dr.tests.len(), 16);
+    assert!(dr.launch_overhead_s > 0.0);
+    assert!(dr.n_measurement_cases > 100, "{}", dr.n_measurement_cases);
+    for (k, c, pred, act) in &dr.tests {
+        assert!(pred.is_finite() && *act > 0.0, "{k}/{c}: pred={pred} act={act}");
+    }
+    // the fit is a real model, not a degenerate one
+    assert!(
+        dr.model.train_rel_err_geomean < 0.5,
+        "train geomean {}",
+        dr.model.train_rel_err_geomean
+    );
+}
+
+/// An unregistered device stays an error even with a custom registry.
+#[test]
+fn unknown_device_rejected_through_registry() {
+    let cfg = Config { backend: FitBackend::Native, ..Config::default() };
+    let schema = Schema::full();
+    assert!(run_device("gtx480", &schema, &cfg).is_err());
+}
