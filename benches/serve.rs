@@ -1,0 +1,143 @@
+//! Serve smoke + throughput bench: fit two devices, stand up the
+//! prediction service, and push the full evaluation zoo through it
+//! cold (extraction on every new kernel structure) and warm (pure
+//! cache-hit tape evaluation). Records cold/warm throughput, the
+//! latency percentiles and the cache counters to `BENCH_serve.json`,
+//! and hard-fails if any request errors, if the warm path does not
+//! beat the cold path, or if the warm pass ever misses the cache.
+
+use std::time::Instant;
+use uniperf::coordinator::{fit_models, Config, FitBackend};
+use uniperf::gpusim::registry::builtins;
+use uniperf::harness::Protocol;
+use uniperf::report::render_service;
+use uniperf::service::{Service, ServiceConfig};
+use uniperf::util::json::Json;
+
+fn main() {
+    let cfg = Config {
+        devices: vec!["k40c".into(), "titan_x".into()],
+        backend: FitBackend::Native,
+        protocol: Protocol { runs: 8, ..Protocol::default() },
+        ..Config::default()
+    };
+    let t_fit = Instant::now();
+    let store = fit_models(&cfg).expect("fit --save flow failed");
+    let fit_s = t_fit.elapsed().as_secs_f64();
+    println!(
+        "fitted {} devices in {fit_s:.1}s (one-time artifact cost)",
+        store.len()
+    );
+    let svc = Service::new(store, builtins().clone(), ServiceConfig::default())
+        .expect("artifact must validate against the registry it was fitted on");
+
+    // request stream: all 9 zoo classes x 4 size cases x both devices
+    let kernels = [
+        "fd5", "mm_skinny", "conv7", "nbody", "reduce_tree", "scan_hs", "st3d7", "bmm8",
+        "gather_s2",
+    ];
+    let mut lines = Vec::new();
+    for dev in ["k40c", "titan_x"] {
+        for k in kernels {
+            for case in ["a", "b", "c", "d"] {
+                lines.push(format!(
+                    r#"{{"device": "{dev}", "kernel": "{k}", "case": "{case}"}}"#
+                ));
+            }
+        }
+    }
+    let n = lines.len();
+
+    // cold pass: every distinct kernel structure pays one extraction
+    let t0 = Instant::now();
+    let cold_out = svc.run_batch(lines.clone());
+    let cold_s = t0.elapsed().as_secs_f64();
+    for r in &cold_out {
+        assert!(r.get("error").is_none(), "cold-pass request errored: {r}");
+    }
+    let misses_after_cold = svc.cache().misses();
+    assert!(misses_after_cold > 0, "cold pass must extract something");
+    assert!(
+        (misses_after_cold as usize) <= kernels.len(),
+        "structural sharing must dedupe cases and devices: {misses_after_cold} misses \
+         for {} classes",
+        kernels.len()
+    );
+
+    // warm passes: best of 5, every request a cache hit
+    let mut warm_s = f64::INFINITY;
+    let mut warm_out = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        warm_out = svc.run_batch(lines.clone());
+        warm_s = warm_s.min(t0.elapsed().as_secs_f64());
+        for r in &warm_out {
+            assert!(r.get("error").is_none(), "warm-pass request errored: {r}");
+            assert_eq!(
+                r.get_str("cache"),
+                Some("hit"),
+                "warm request re-ran extraction: {r}"
+            );
+        }
+    }
+    assert_eq!(
+        svc.cache().misses(),
+        misses_after_cold,
+        "warm passes must not add cache misses"
+    );
+    // deterministic predictions: warm answers equal cold answers
+    for (c, w) in cold_out.iter().zip(&warm_out) {
+        assert_eq!(c.get_f64("predicted_s"), w.get_f64("predicted_s"), "{c} vs {w}");
+    }
+
+    let cold_rps = n as f64 / cold_s;
+    let warm_rps = n as f64 / warm_s;
+    println!(
+        "cold: {n} requests in {:.1} ms ({cold_rps:.0} req/s)",
+        cold_s * 1e3
+    );
+    println!(
+        "warm: {n} requests in {:.3} ms ({warm_rps:.0} req/s, {:.1}x cold)",
+        warm_s * 1e3,
+        warm_rps / cold_rps
+    );
+    assert!(
+        warm_rps > cold_rps,
+        "warm-cache throughput ({warm_rps:.0} req/s) must beat the cold path \
+         ({cold_rps:.0} req/s)"
+    );
+
+    let summary = svc.summary();
+    print!("{}", render_service(&summary));
+    assert_eq!(summary.errors, 0, "no request may error");
+    assert!(summary.cache_hits > 0, "cache-hit counter must register warm traffic");
+    assert_eq!(
+        summary.cache_hits + summary.cache_misses,
+        summary.requests,
+        "every request either hits or misses"
+    );
+
+    let j = Json::obj(vec![
+        ("suite", Json::Str("serve".into())),
+        ("fit_s", Json::Num(fit_s)),
+        ("requests_per_pass", Json::Num(n as f64)),
+        (
+            "cold",
+            Json::obj(vec![
+                ("seconds", Json::Num(cold_s)),
+                ("rps", Json::Num(cold_rps)),
+            ]),
+        ),
+        (
+            "warm",
+            Json::obj(vec![
+                ("seconds", Json::Num(warm_s)),
+                ("rps", Json::Num(warm_rps)),
+            ]),
+        ),
+        ("warm_over_cold", Json::Num(warm_rps / cold_rps)),
+        ("service", summary.to_json()),
+    ]);
+    std::fs::write("BENCH_serve.json", j.pretty()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

@@ -99,13 +99,16 @@ pub fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver + Send + Sync>,
     }
 }
 
-/// Run the full per-device pipeline: measurement campaign → fit → test
-/// kernels → Table-1 entries.
-pub fn run_device(
+/// The campaign + fit prefix shared by [`run_device`] and
+/// [`fit_models`]: simulate the device, run the §4.1/§4.2 measurement
+/// campaign, and fit the §4.3 weights. Returns the simulated device,
+/// the (filtered) property matrix, the fitted model and the calibrated
+/// launch overhead.
+fn campaign_and_fit(
     device: &str,
     schema: &Schema,
     cfg: &Config,
-) -> Result<DeviceResult, String> {
+) -> Result<(SimGpu, perfmodel::PropertyMatrix, Model, f64), String> {
     let profile = cfg
         .registry
         .get(device)
@@ -122,6 +125,17 @@ pub fn run_device(
     // 2. fit (§4.3)
     let solver = make_solver(cfg.backend)?;
     let model = perfmodel::fit(device, &pm, schema, solver.as_ref())?;
+    Ok((gpu, pm, model, overhead))
+}
+
+/// Run the full per-device pipeline: measurement campaign → fit → test
+/// kernels → Table-1 entries.
+pub fn run_device(
+    device: &str,
+    schema: &Schema,
+    cfg: &Config,
+) -> Result<DeviceResult, String> {
+    let (gpu, pm, model, overhead) = campaign_and_fit(device, schema, cfg)?;
 
     // 3. test kernels (§5, or the full zoo behind `eval_zoo`): predict
     //    + measure, through the same parallel measurement path the
@@ -162,6 +176,32 @@ pub fn run_device(
         n_measurement_cases: pm.n_cases(),
         tests,
     })
+}
+
+/// Fit every configured device and assemble a persistable model store
+/// (the `fit --save` flow of [`crate::service`]): one measurement
+/// campaign + fit per device — and nothing else; the test-kernel
+/// evaluation pass of [`run_device`] contributes nothing to an
+/// artifact and is skipped — fanned out on the executor, each weight
+/// table fingerprinted against the profile and capability-derived
+/// suite that produced it. The returned store is what `predict
+/// --models` and `serve` answer from, so saving it is the boundary
+/// between the batch pipeline and the serving system.
+pub fn fit_models(cfg: &Config) -> Result<crate::service::ModelStore, String> {
+    use crate::service::{ModelStore, StoredModel};
+    let schema = Schema::full();
+    let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
+    let results = par_map(cfg.devices.clone(), device_workers, |dev| {
+        campaign_and_fit(&dev, &schema, cfg).map(|(gpu, pm, model, overhead)| {
+            (gpu.profile, pm.n_cases(), model, overhead)
+        })
+    });
+    let mut store = ModelStore::new(&schema, cfg.extract);
+    for r in results {
+        let (profile, n_cases, model, overhead) = r?;
+        store.insert(StoredModel::new(model, overhead, n_cases, &profile));
+    }
+    Ok(store)
 }
 
 /// Run the pipeline across all configured devices (in parallel) and

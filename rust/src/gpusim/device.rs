@@ -18,6 +18,25 @@
 //! from JSON) lives in [`super::registry`].
 
 use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The measurement/evaluation kernel classes whose base size exponent a
+/// profile may override via its `size_exp` table (JSON key `"size_exp"`:
+/// `{"<class>": <exponent>}`). Unknown class names are a validation
+/// error — a typo must not silently leave the capability-derived value
+/// in place.
+pub const SIZE_EXP_CLASSES: &[&str] = &[
+    // §4.1 measurement classes
+    "mm_tiled", "mm_naive", "vsadd", "transpose", "sg", "sg_filled", "arith", "empty",
+    // §5 test kernels
+    "fd5", "mm_skinny", "conv7", "nbody",
+    // evaluation-zoo expansion
+    "reduce_tree", "scan_hs", "st3d7", "bmm8", "gather_s2",
+];
+
+/// Override exponents outside this range would create degenerate or
+/// absurdly large sweeps (sizes are `2^p`-based with up to +8 octaves).
+pub const SIZE_EXP_RANGE: (i64, i64) = (1, 26);
 
 /// A simulated GPU.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,6 +101,11 @@ pub struct DeviceProfile {
     pub irregularity: f64,
     /// extra penalty multiplier on uncoalesced (large-stride) traffic
     pub uncoalesced_penalty: f64,
+    /// per-class base size-exponent overrides, layered over the
+    /// capability-derived solver ([`crate::kernels::size_exp`]): class
+    /// name ([`SIZE_EXP_CLASSES`]) -> exponent. Empty for every
+    /// built-in; user profiles opt in via the JSON `"size_exp"` object.
+    pub size_exp: BTreeMap<String, i64>,
 }
 
 /// The four devices of the paper's evaluation (§5). The widened
@@ -131,6 +155,7 @@ pub fn titan_x() -> DeviceProfile {
         second_run_sigma: 0.06,
         irregularity: 0.0,
         uncoalesced_penalty: 1.0,
+        size_exp: BTreeMap::new(),
     }
 }
 
@@ -167,6 +192,7 @@ pub fn k40c() -> DeviceProfile {
         second_run_sigma: 0.05,
         irregularity: 0.0,
         uncoalesced_penalty: 1.1,
+        size_exp: BTreeMap::new(),
     }
 }
 
@@ -203,6 +229,7 @@ pub fn c2070() -> DeviceProfile {
         second_run_sigma: 0.07,
         irregularity: 0.0,
         uncoalesced_penalty: 1.3, // weaker coalescing hardware
+        size_exp: BTreeMap::new(),
     }
 }
 
@@ -243,6 +270,7 @@ pub fn r9_fury() -> DeviceProfile {
         second_run_sigma: 0.10,
         irregularity: 0.35,
         uncoalesced_penalty: 1.6,
+        size_exp: BTreeMap::new(),
     }
 }
 
@@ -283,6 +311,14 @@ impl DeviceProfile {
         self.launch_base + self.wave_latency
     }
 
+    /// The base size exponent for a kernel class: the profile's
+    /// `size_exp` override when present, the capability-`derived` value
+    /// otherwise. Class names are validated at profile load/registration
+    /// time ([`SIZE_EXP_CLASSES`]), so a present key is authoritative.
+    pub fn class_size_exp(&self, class: &str, derived: i64) -> i64 {
+        self.size_exp.get(class).copied().unwrap_or(derived)
+    }
+
     /// Sanity-check a profile (used when loading user-supplied JSON):
     /// positive rates/counts and a group-size cap the capability
     /// derivation can work with (≥ 64, multiple of 16, within the
@@ -317,6 +353,24 @@ impl DeviceProfile {
         if !(0.0..=1.0).contains(&self.overlap) {
             return err("overlap must be in [0, 1]");
         }
+        for (class, &p) in &self.size_exp {
+            if !SIZE_EXP_CLASSES.contains(&class.as_str()) {
+                return Err(format!(
+                    "device '{}': size_exp override for unknown class '{class}' \
+                     (known: {})",
+                    self.name,
+                    SIZE_EXP_CLASSES.join(", ")
+                ));
+            }
+            let (lo, hi) = SIZE_EXP_RANGE;
+            if !(lo..=hi).contains(&p) {
+                return Err(format!(
+                    "device '{}': size_exp override for '{class}' is {p}, \
+                     outside [{lo}, {hi}]",
+                    self.name
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -324,7 +378,7 @@ impl DeviceProfile {
     /// struct). Emits every field, so [`DeviceProfile::from_json`]
     /// round-trips exactly.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("full_name", Json::Str(self.full_name.clone())),
             ("sms", Json::Num(self.sms as f64)),
@@ -355,7 +409,19 @@ impl DeviceProfile {
             ("second_run_sigma", Json::Num(self.second_run_sigma)),
             ("irregularity", Json::Num(self.irregularity)),
             ("uncoalesced_penalty", Json::Num(self.uncoalesced_penalty)),
-        ])
+        ];
+        if !self.size_exp.is_empty() {
+            pairs.push((
+                "size_exp",
+                Json::Obj(
+                    self.size_exp
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     /// Deserialize from JSON produced by [`DeviceProfile::to_json`] or
@@ -392,6 +458,31 @@ impl DeviceProfile {
             Ok(v as u64)
         };
         let opt = |key: &str, default: f64| -> f64 { j.get_f64(key).unwrap_or(default) };
+        let size_exp = match j.get("size_exp") {
+            None => BTreeMap::new(),
+            Some(Json::Obj(m)) => {
+                let mut out = BTreeMap::new();
+                for (class, v) in m {
+                    match v.as_i64() {
+                        Some(n) => {
+                            out.insert(class.clone(), n);
+                        }
+                        None => {
+                            return Err(format!(
+                                "device '{name}': size_exp entry '{class}' must be an \
+                                 integer exponent"
+                            ))
+                        }
+                    }
+                }
+                out
+            }
+            Some(_) => {
+                return Err(format!(
+                    "device '{name}': 'size_exp' must be an object of class -> exponent"
+                ))
+            }
+        };
         let p = DeviceProfile {
             full_name: j.get_str("full_name").unwrap_or(&name).to_string(),
             sms: req_u32("sms")?,
@@ -422,6 +513,7 @@ impl DeviceProfile {
             second_run_sigma: opt("second_run_sigma", 0.05),
             irregularity: opt("irregularity", 0.0),
             uncoalesced_penalty: opt("uncoalesced_penalty", 1.0),
+            size_exp,
             name,
         };
         p.validate()?;
@@ -481,6 +573,53 @@ mod tests {
         let huge = text.replace("\"threads_per_sm\": 1024,", "\"threads_per_sm\": 1e19,");
         let e = DeviceProfile::from_json(&Json::parse(&huge).unwrap()).unwrap_err();
         assert!(e.contains("threads_per_sm"), "{e}");
+    }
+
+    #[test]
+    fn size_exp_overrides_roundtrip_and_validate() {
+        // a profile with overrides round-trips exactly
+        let mut p = k40c();
+        p.size_exp.insert("mm_tiled".into(), 7);
+        p.size_exp.insert("fd5".into(), 9);
+        p.validate().unwrap();
+        let back = DeviceProfile::from_json(&Json::parse(&p.to_json().pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.class_size_exp("mm_tiled", 11), 7);
+        assert_eq!(back.class_size_exp("vsadd", 20), 20, "no override -> derived");
+        // built-ins emit no size_exp key at all
+        assert!(k40c().to_json().get("size_exp").is_none());
+
+        // unknown class names are a validation error, not a silent no-op
+        let mut bad = k40c();
+        bad.size_exp.insert("mm_tyled".into(), 7);
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("mm_tyled") && e.contains("known:"), "{e}");
+
+        // out-of-range exponents are rejected
+        let mut bad = k40c();
+        bad.size_exp.insert("fd5".into(), 40);
+        assert!(bad.validate().unwrap_err().contains("outside"), "{}",
+            bad.validate().unwrap_err());
+
+        // JSON-side: non-integer exponents and non-object tables
+        let text = r#"{
+            "name": "toy", "sms": 4, "clock_hz": 1e9, "cores_per_sm": 32,
+            "warp_size": 32, "dram_bw": 5e10, "line_bytes": 64,
+            "l2_bytes": 524288, "l1_bytes": 16384, "local_bw": 1e11,
+            "launch_base": 1e-5, "threads_per_sm": 1024,
+            "max_groups_per_sm": 8, "max_group_size": 256,
+            "size_exp": {"nbody": 10}
+        }"#;
+        let p = DeviceProfile::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(p.class_size_exp("nbody", 12), 10);
+        let frac = text.replace("\"nbody\": 10", "\"nbody\": 10.5");
+        assert!(DeviceProfile::from_json(&Json::parse(&frac).unwrap()).is_err());
+        let scalar = text.replace("{\"nbody\": 10}", "7");
+        assert!(DeviceProfile::from_json(&Json::parse(&scalar).unwrap()).is_err());
+        let unknown = text.replace("\"nbody\"", "\"warpshuffle\"");
+        let e = DeviceProfile::from_json(&Json::parse(&unknown).unwrap()).unwrap_err();
+        assert!(e.contains("warpshuffle"), "{e}");
     }
 
     #[test]

@@ -109,6 +109,68 @@ impl DeviceRegistry {
     }
 }
 
+/// A commented, directly loadable `--devices` template (the `devices
+/// --export` subcommand): one complete built-in profile to copy from,
+/// plus a skeleton carrying only the required hardware fields. JSON has
+/// no comment syntax, so guidance rides in `_comment` keys, which the
+/// profile loader ignores like any unknown field — the emitted file
+/// round-trips through [`DeviceRegistry::extend_from_json`] unchanged.
+pub fn export_template() -> Json {
+    let mut full = match builtins().get("k40c").expect("built-in").to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("profiles serialize to objects"),
+    };
+    full.insert(
+        "_comment".into(),
+        Json::Str(
+            "complete profile (the built-in k40c): every field the simulator reads. \
+             Loading a profile under an existing name overrides the built-in."
+                .into(),
+        ),
+    );
+    let skeleton = Json::obj(vec![
+        (
+            "_comment",
+            Json::Str(
+                "minimal profile: only the required hardware fields. Omitted \
+                 measurement-artifact fields (noise_sigma, first_touch_factor, \
+                 second_run_sigma, irregularity, ...) default to a well-behaved \
+                 device; 'size_exp' optionally overrides per-class base size \
+                 exponents layered over the capability-derived solver."
+                    .into(),
+            ),
+        ),
+        ("name", Json::Str("my_device".into())),
+        ("full_name", Json::Str("My Custom GPU".into())),
+        ("sms", Json::Num(16.0)),
+        ("clock_hz", Json::Num(1.2e9)),
+        ("cores_per_sm", Json::Num(64.0)),
+        ("warp_size", Json::Num(32.0)),
+        ("dram_bw", Json::Num(2.0e11)),
+        ("line_bytes", Json::Num(128.0)),
+        ("l2_bytes", Json::Num((2u64 << 20) as f64)),
+        ("l1_bytes", Json::Num((32u64 << 10) as f64)),
+        ("local_bw", Json::Num(1.0e12)),
+        ("launch_base", Json::Num(8.0e-6)),
+        ("threads_per_sm", Json::Num(2048.0)),
+        ("max_groups_per_sm", Json::Num(16.0)),
+        ("max_group_size", Json::Num(512.0)),
+        ("size_exp", Json::obj(vec![("mm_tiled", Json::Num(8.0))])),
+    ]);
+    Json::obj(vec![
+        (
+            "_comment",
+            Json::Str(
+                "uniperf --devices template: {\"devices\": [...]} or a bare JSON \
+                 array of profile objects (see DeviceProfile::from_json for the \
+                 field set); '_comment' keys are ignored."
+                    .into(),
+            ),
+        ),
+        ("devices", Json::Arr(vec![Json::Obj(full), skeleton])),
+    ])
+}
+
 /// The process-wide built-in catalogue, constructed once. Name lookups
 /// (`gpusim::device`, `SimGpu::named`) go through this instead of
 /// rebuilding the profile vector per call.
@@ -155,6 +217,7 @@ pub fn p100() -> DeviceProfile {
         second_run_sigma: 0.05,
         irregularity: 0.0,
         uncoalesced_penalty: 1.0,
+        size_exp: std::collections::BTreeMap::new(),
     }
 }
 
@@ -193,6 +256,7 @@ pub fn vega64() -> DeviceProfile {
         second_run_sigma: 0.08,
         irregularity: 0.25,
         uncoalesced_penalty: 1.5,
+        size_exp: std::collections::BTreeMap::new(),
     }
 }
 
@@ -231,6 +295,7 @@ pub fn igp620() -> DeviceProfile {
         second_run_sigma: 0.12,
         irregularity: 0.15,
         uncoalesced_penalty: 1.4,
+        size_exp: std::collections::BTreeMap::new(),
     }
 }
 
@@ -269,6 +334,7 @@ pub fn rtx4090() -> DeviceProfile {
         second_run_sigma: 0.04,
         irregularity: 0.0,
         uncoalesced_penalty: 1.0,
+        size_exp: std::collections::BTreeMap::new(),
     }
 }
 
@@ -328,6 +394,28 @@ mod tests {
         let mut bad = igp620();
         bad.max_group_size = 40;
         assert!(r.register(bad).is_err());
+    }
+
+    #[test]
+    fn export_template_is_commented_and_loadable() {
+        let t = export_template();
+        let text = t.pretty();
+        // the template parses back and loads as a --devices file as-is
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let mut r = DeviceRegistry::empty();
+        let names = r.extend_from_json(&parsed).unwrap();
+        assert_eq!(names, vec!["k40c".to_string(), "my_device".to_string()]);
+        // the full profile matches the built-in exactly
+        assert_eq!(r.get("k40c"), builtins().get("k40c"));
+        // the skeleton validates, takes artifact defaults, and carries
+        // a legal size_exp override example
+        let sk = r.get("my_device").unwrap();
+        sk.validate().unwrap();
+        assert!(sk.noise_sigma > 0.0);
+        assert_eq!(sk.class_size_exp("mm_tiled", 11), 8);
+        // guidance is present for humans
+        assert!(text.contains("_comment"));
+        assert!(text.contains("size_exp"));
     }
 
     #[test]

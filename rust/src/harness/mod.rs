@@ -67,6 +67,52 @@ impl Protocol {
     }
 }
 
+/// One timing observation for protocol reduction: either a genuinely
+/// timed run, or a **zero-cost cache hit** (the work was answered from a
+/// cache/artifact and nothing ran). Cache hits used to be tempting to
+/// record as `0.0` seconds, which silently poisons min-of-runs
+/// statistics (the minimum becomes 0 and every real sample is
+/// discarded); the distinct marker makes them reportable without
+/// entering the reduction. Used by the prediction service's per-request
+/// extraction-time accounting ([`crate::service`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sample {
+    /// a real wall-time observation, in seconds
+    Timed(f64),
+    /// answered from cache; excluded from timing reductions
+    Cached,
+}
+
+impl Sample {
+    /// The wall time, if this sample was actually timed.
+    pub fn timed(&self) -> Option<f64> {
+        match self {
+            Sample::Timed(t) => Some(*t),
+            Sample::Cached => None,
+        }
+    }
+
+    pub fn is_cached(&self) -> bool {
+        matches!(self, Sample::Cached)
+    }
+}
+
+impl Protocol {
+    /// Reduce a mixed stream of [`Sample`]s: `Cached` markers are
+    /// excluded *before* the warmup discard and min-of-runs reduction
+    /// (they are not fast runs — they are non-runs). Errors when no
+    /// timed sample remains.
+    pub fn reduce_samples(&self, samples: &[Sample]) -> Result<f64, String> {
+        let times: Vec<f64> = samples.iter().filter_map(Sample::timed).collect();
+        if times.is_empty() {
+            return Err(
+                "timing protocol: only cached samples (no timed run to reduce)".into()
+            );
+        }
+        self.reduce(&times)
+    }
+}
+
 /// One measured + extracted case.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -254,6 +300,41 @@ mod tests {
         assert_eq!(p.reduce_mean(&[3.0, 2.0]).unwrap(), 2.0);
         // exactly one run
         assert_eq!(p.reduce(&[7.0]).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn cached_samples_carry_a_marker_not_a_zero() {
+        let p = Protocol { runs: 8, discard: 2, min_time_factor: 2.0 };
+        // the naive encoding of a cache hit — a 0-second sample —
+        // poisons the min-of-runs statistic:
+        assert_eq!(p.reduce(&[3.0, 2.5, 2.0, 0.0, 2.1]).unwrap(), 0.0);
+        // the distinct marker keeps hits out of the reduction entirely
+        let samples = [
+            Sample::Timed(3.0),
+            Sample::Timed(2.5),
+            Sample::Cached,
+            Sample::Timed(2.0),
+            Sample::Cached,
+            Sample::Timed(2.1),
+        ];
+        let timed: Vec<f64> = samples.iter().filter_map(Sample::timed).collect();
+        assert_eq!(
+            p.reduce_samples(&samples).unwrap(),
+            p.reduce(&timed).unwrap()
+        );
+        assert_eq!(p.reduce_samples(&samples).unwrap(), 2.0);
+        // marker bookkeeping
+        assert!(Sample::Cached.is_cached());
+        assert_eq!(Sample::Timed(1.5).timed(), Some(1.5));
+        assert_eq!(Sample::Cached.timed(), None);
+    }
+
+    #[test]
+    fn all_cached_is_an_error_not_a_degenerate_min() {
+        let p = Protocol::default();
+        let e = p.reduce_samples(&[Sample::Cached, Sample::Cached]).unwrap_err();
+        assert!(e.contains("cached"), "{e}");
+        assert!(p.reduce_samples(&[]).is_err());
     }
 
     #[test]

@@ -542,14 +542,14 @@ struct ClassCfg {
 fn mm_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: two_d_groups(d),
-        p: size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 11),
+        p: d.class_size_exp("mm_tiled", size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 11)),
     }
 }
 
 fn mm_naive_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: two_d_groups(d),
-        p: size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 10),
+        p: d.class_size_exp("mm_naive", size_exp(d.peak_f32(), 2.0, 3, t_case(d), 6, 10)),
     }
 }
 
@@ -557,7 +557,7 @@ fn mm_naive_cfg(d: &DeviceProfile) -> ClassCfg {
 fn vsadd_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: one_d_groups(d),
-        p: size_exp(d.dram_bw, 12.0, 1, t_sweep(d), 16, 24),
+        p: d.class_size_exp("vsadd", size_exp(d.dram_bw, 12.0, 1, t_sweep(d), 16, 24)),
     }
 }
 
@@ -565,7 +565,7 @@ fn vsadd_cfg(d: &DeviceProfile) -> ClassCfg {
 fn transpose_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: two_d_groups(d),
-        p: size_exp(d.dram_bw, 8.0, 2, t_case(d), 8, 12),
+        p: d.class_size_exp("transpose", size_exp(d.dram_bw, 8.0, 2, t_case(d), 8, 12)),
     }
 }
 
@@ -573,7 +573,7 @@ fn transpose_cfg(d: &DeviceProfile) -> ClassCfg {
 fn global_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: one_d_groups(d),
-        p: size_exp(d.dram_bw, 8.0, 1, t_sweep(d), 14, 22),
+        p: d.class_size_exp("sg", size_exp(d.dram_bw, 8.0, 1, t_sweep(d), 14, 22)),
     }
 }
 
@@ -582,7 +582,7 @@ fn global_cfg(d: &DeviceProfile) -> ClassCfg {
 fn filled_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: one_d_groups(d),
-        p: (global_cfg(d).p - 2).clamp(12, 20),
+        p: d.class_size_exp("sg_filled", (global_cfg(d).p - 2).clamp(12, 20)),
     }
 }
 
@@ -591,7 +591,7 @@ fn filled_cfg(d: &DeviceProfile) -> ClassCfg {
 fn arith_cfg(d: &DeviceProfile) -> ClassCfg {
     ClassCfg {
         group_set: two_d_groups(d),
-        p: size_exp(d.peak_f32(), 4096.0, 2, t_case(d), 6, 10),
+        p: d.class_size_exp("arith", size_exp(d.peak_f32(), 4096.0, 2, t_case(d), 6, 10)),
     }
 }
 
@@ -603,7 +603,7 @@ fn empty_cfg(d: &DeviceProfile) -> ClassCfg {
     let (gx, gy) = group_set.standard();
     let ratio = (gx * gy) as f64 * d.launch_base / d.launch_per_group.max(1e-12);
     let p = ((ratio.max(1.0).log2() / 2.0).ceil() as i64).clamp(7, 11);
-    ClassCfg { group_set, p }
+    ClassCfg { group_set, p: d.class_size_exp("empty", p) }
 }
 
 /// Assemble the full §4.1 measurement suite for a device.

@@ -264,6 +264,27 @@ mod tests {
     }
 
     #[test]
+    fn size_exp_overrides_reshape_the_suites() {
+        let base = builtins().get("k40c").unwrap().clone();
+        let mut tuned = base.clone();
+        tuned.size_exp.insert("fd5".into(), 9);
+        tuned.size_exp.insert("sg".into(), 15);
+        tuned.validate().unwrap();
+        let labels = |cases: &[KernelCase], prefix: &str| -> Vec<String> {
+            cases.iter().filter(|c| c.label.starts_with(prefix)).map(|c| c.label.clone()).collect()
+        };
+        // the overridden evaluation class moves, untouched classes don't
+        let (tb, tt) = (test_suite(&base), test_suite(&tuned));
+        assert_ne!(labels(&tb, "fd5/"), labels(&tt, "fd5/"));
+        assert_eq!(labels(&tb, "nbody/"), labels(&tt, "nbody/"));
+        // same for the measurement campaign's stride-1 global class
+        let (mb, mt) = (measurement_suite(&base), measurement_suite(&tuned));
+        assert_ne!(labels(&mb, "sg_copy/"), labels(&mt, "sg_copy/"));
+        assert_eq!(labels(&mb, "mm_tiled/"), labels(&mt, "mm_tiled/"));
+        assert_eq!(mb.len(), mt.len(), "overrides move sizes, not case counts");
+    }
+
+    #[test]
     fn snap_behaviour() {
         assert_eq!(snap(128, 16), 128);
         assert_eq!(snap(128, 12), 132);

@@ -687,10 +687,10 @@ fn cfg(d: &DeviceProfile) -> [(GroupSet, i64); 4] {
     let t = t_case(d);
     // order: fd, skinny_mm, conv, nbody
     [
-        (two_d_groups(d), size_exp(d.dram_bw, 8.0, 2, t, 8, 12)),
-        (two_d_groups(d), size_exp(d.peak_f32(), 16.0, 3, t, 8, 11)),
-        (two_d_groups(d), size_exp(d.peak_f32(), 2646.0, 2, t, 5, 9)),
-        (one_d_groups(d), size_exp(d.peak_f32(), 10.0, 2, t, 9, 12)),
+        (two_d_groups(d), d.class_size_exp("fd5", size_exp(d.dram_bw, 8.0, 2, t, 8, 12))),
+        (two_d_groups(d), d.class_size_exp("mm_skinny", size_exp(d.peak_f32(), 16.0, 3, t, 8, 11))),
+        (two_d_groups(d), d.class_size_exp("conv7", size_exp(d.peak_f32(), 2646.0, 2, t, 5, 9))),
+        (one_d_groups(d), d.class_size_exp("nbody", size_exp(d.peak_f32(), 10.0, 2, t, 9, 12))),
     ]
 }
 
@@ -762,11 +762,11 @@ pub fn suite(device: &DeviceProfile) -> Vec<KernelCase> {
 fn zoo_cfg(d: &DeviceProfile) -> [(GroupSet, i64); 5] {
     let t = t_case(d);
     [
-        (one_d_groups(d), size_exp(d.dram_bw, 4.0, 1, t, 18, 23)),
-        (one_d_groups(d), size_exp(d.dram_bw, 4.0, 1, t, 18, 23)),
-        (two_d_groups(d), size_exp(d.dram_bw, 8.0, 3, t, 4, 8)),
-        (one_d_groups(d), size_exp(d.dram_bw, 3072.0, 1, t, 12, 16)),
-        (one_d_groups(d), size_exp(d.dram_bw, 100.0, 1, t, 16, 21)),
+        (one_d_groups(d), d.class_size_exp("reduce_tree", size_exp(d.dram_bw, 4.0, 1, t, 18, 23))),
+        (one_d_groups(d), d.class_size_exp("scan_hs", size_exp(d.dram_bw, 4.0, 1, t, 18, 23))),
+        (two_d_groups(d), d.class_size_exp("st3d7", size_exp(d.dram_bw, 8.0, 3, t, 4, 8))),
+        (one_d_groups(d), d.class_size_exp("bmm8", size_exp(d.dram_bw, 3072.0, 1, t, 12, 16))),
+        (one_d_groups(d), d.class_size_exp("gather_s2", size_exp(d.dram_bw, 100.0, 1, t, 16, 21))),
     ]
 }
 

@@ -28,6 +28,9 @@
 //!    over the expanded evaluation-kernel zoo ([`crossval`]) — the
 //!    device split transfers weights across the registry's widened
 //!    hardware axis ([`gpusim::registry`]).
+//! 7. Persist fitted weight tables as fingerprinted artifacts and serve
+//!    predictions from them — batched, structurally cached, without
+//!    re-running a measurement campaign ([`service`]).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -45,6 +48,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod crossval;
 pub mod report;
+pub mod service;
 
 /// Library version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -8,9 +8,19 @@
 //!   zoo (`--split kernel|case|device`, `--quick` for the smoke
 //!   campaign; the `device` split reports a device×device
 //!   transfer-error matrix)
-//! * `fit`      — calibrate one device and print its weight table
-//! * `predict`  — predict + measure the §5 test kernels on one device
-//! * `devices`  — list the device registry (built-ins + `--devices` file)
+//! * `fit`      — calibrate one device and print its weight table;
+//!   `--save <models.json>` instead fits *all* configured devices and
+//!   persists their weight tables as a fingerprinted artifact
+//! * `predict`  — with `--models <models.json>`: answer predictions
+//!   from a saved artifact (one-shot via `--kernel`/`--case`/`--env`,
+//!   or a whole `--requests` file of line-delimited JSON); without
+//!   `--models`: legacy predict + measure of the §5 test kernels
+//! * `serve`    — the prediction server: line-delimited JSON requests
+//!   on stdin (responses on stdout, summary on stderr), or a TCP
+//!   listener with `--port`; requires `--models`
+//! * `devices`  — list the device registry (built-ins + `--devices`
+//!   file); `--export <path>` writes a commented, loadable
+//!   `profiles.json` template instead
 //! * `props`    — show extracted properties for one evaluation kernel
 //!
 //! `--devices <profiles.json>` extends the device registry with
@@ -20,28 +30,42 @@
 //! profile capabilities, so a loaded device runs the full pipeline
 //! end to end.
 
-use uniperf::coordinator::{run_device, run_pipeline, Config, FitBackend};
+use std::path::Path;
+use uniperf::coordinator::{fit_models, run_device, run_pipeline, Config, FitBackend};
 use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
-use uniperf::util::json::Json;
+use uniperf::gpusim::registry;
 use uniperf::harness::Protocol;
-use uniperf::report::render_table2;
+use uniperf::report::{render_service, render_table2};
+use uniperf::service::{ModelStore, Service, ServiceConfig};
 use uniperf::stats::{extract, ExtractOpts, Schema};
-use uniperf::util::cli::{parse, usage, OptSpec};
+use uniperf::util::cli::{parse, usage, Args, OptSpec};
+use uniperf::util::json::Json;
 
 fn specs() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "device", help: "device name (see the 'devices' subcommand)", is_flag: false, default: Some("k40c") },
+        // no parser-level default: `fit --save`/`pipeline` treat an
+        // explicit --device differently from its absence; single-device
+        // subcommands default to k40c at their use sites via get_or
+        OptSpec { name: "device", help: "device name, default k40c (see the 'devices' subcommand)", is_flag: false, default: None },
         OptSpec { name: "devices", help: "JSON file of extra device profiles to register and run", is_flag: false, default: None },
         OptSpec { name: "backend", help: "fit backend: native|xla|auto", is_flag: false, default: Some("auto") },
         OptSpec { name: "runs", help: "timing runs per case", is_flag: false, default: Some("30") },
         OptSpec { name: "out", help: "results directory", is_flag: false, default: None },
         OptSpec { name: "workers", help: "worker threads", is_flag: false, default: None },
-        OptSpec { name: "kernel", help: "evaluation kernel: fd5|mm_skinny|conv7|nbody|reduce_tree|scan_hs|st3d7|bmm8|gather_s2", is_flag: false, default: Some("fd5") },
+        OptSpec { name: "kernel", help: "evaluation kernel (default fd5): fd5|mm_skinny|conv7|nbody|reduce_tree|scan_hs|st3d7|bmm8|gather_s2", is_flag: false, default: None },
         OptSpec { name: "collapse-utilization", help: "ablation: ignore utilization ratios", is_flag: true, default: None },
         OptSpec { name: "bin-local-strides", help: "extension (§6.2): bin local loads by bank-conflict stride", is_flag: true, default: None },
         OptSpec { name: "zoo", help: "pipeline: evaluate the full 9-class kernel zoo", is_flag: true, default: None },
         OptSpec { name: "split", help: "crossval split: kernel|case|device", is_flag: false, default: Some("kernel") },
         OptSpec { name: "quick", help: "crossval: cut-down smoke campaign", is_flag: true, default: None },
+        OptSpec { name: "save", help: "fit: persist weight tables (all configured devices, or just --device) to this artifact", is_flag: false, default: None },
+        OptSpec { name: "models", help: "serve/predict: model artifact written by 'fit --save'", is_flag: false, default: None },
+        OptSpec { name: "case", help: "predict: size-case letter (a-d)", is_flag: false, default: None },
+        OptSpec { name: "env", help: "predict: size bindings, e.g. n=4096 or n=512,m=64", is_flag: false, default: None },
+        OptSpec { name: "requests", help: "predict: answer a file of line-delimited JSON requests", is_flag: false, default: None },
+        OptSpec { name: "port", help: "serve: listen on 127.0.0.1:<port> instead of stdin/stdout", is_flag: false, default: None },
+        OptSpec { name: "batch", help: "serve: requests per executor batch", is_flag: false, default: Some("64") },
+        OptSpec { name: "export", help: "devices: write a commented profiles.json template to this path", is_flag: false, default: None },
     ]
 }
 
@@ -75,7 +99,7 @@ fn print_help() {
         uniperf::VERSION
     );
     println!();
-    println!("subcommands: pipeline | crossval | fit | predict | devices | props");
+    println!("subcommands: pipeline | crossval | fit | predict | serve | devices | props");
     println!();
     println!("{}", usage("uniperf <subcommand>", "options", &specs()));
 }
@@ -111,6 +135,48 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
         }
     }
     Ok(cfg)
+}
+
+/// Load a model artifact and stand up a validated [`Service`] over the
+/// run's registry (including any `--devices` extensions).
+fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, String> {
+    let schema = Schema::full();
+    let store = ModelStore::load(Path::new(models), &schema)?;
+    let svc_cfg = ServiceConfig {
+        batch: args.get_usize("batch", 64)?,
+        workers: cfg.workers,
+        extract: cfg.extract,
+    };
+    Service::new(store, cfg.registry.clone(), svc_cfg)
+}
+
+/// Assemble the one-shot `predict` request line from CLI flags.
+fn one_shot_request(args: &Args) -> Result<String, String> {
+    let mut pairs = vec![
+        ("device", Json::Str(args.get_or("device", "k40c").to_string())),
+        ("kernel", Json::Str(args.get_or("kernel", "fd5").to_string())),
+    ];
+    if let Some(case) = args.get("case") {
+        pairs.push(("case", Json::Str(case.to_string())));
+    }
+    if let Some(env) = args.get("env") {
+        let mut bindings = Vec::new();
+        for part in env.split(',') {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--env expects k=v pairs, got '{part}'"))?;
+            let n: i64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("--env {k}: integer expected, got '{v}'"))?;
+            bindings.push((k.trim().to_string(), Json::Num(n as f64)));
+        }
+        pairs.push((
+            "env",
+            Json::Obj(bindings.into_iter().collect()),
+        ));
+    }
+    Ok(Json::obj(pairs).compact())
 }
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
@@ -150,6 +216,35 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
         }
         "fit" => {
             let cfg = make_config(&args)?;
+            if let Some(path) = args.get("save") {
+                // fit --save: all configured devices -> persisted
+                // artifact; an explicit --device narrows the fit to
+                // that one device instead of being silently ignored
+                let mut cfg = cfg;
+                if let Some(device) = args.get("device") {
+                    cfg.devices = vec![device.to_string()];
+                }
+                let t0 = std::time::Instant::now();
+                let store = fit_models(&cfg)?;
+                let schema = Schema::full();
+                store.save(Path::new(path), &schema)?;
+                for d in store.devices() {
+                    let sm = store.get(&d).unwrap();
+                    println!(
+                        "{d}: {} cases, train geomean {:.1}%, profile fp {}, suite fp {}",
+                        sm.n_measurement_cases,
+                        100.0 * sm.model.train_rel_err_geomean,
+                        sm.profile_fp,
+                        sm.suite_fp
+                    );
+                }
+                println!(
+                    "saved {} fitted device models to {path} in {:.1}s",
+                    store.len(),
+                    t0.elapsed().as_secs_f64()
+                );
+                return Ok(());
+            }
             let device = args.get_or("device", "k40c").to_string();
             let schema = Schema::full();
             let dr = run_device(&device, &schema, &cfg)?;
@@ -158,6 +253,50 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
         }
         "predict" => {
             let cfg = make_config(&args)?;
+            if args.get("models").is_none() {
+                // the artifact-backed flags must not be silently dropped
+                // by the legacy measure-everything path
+                for flag in ["requests", "case", "env"] {
+                    if args.get(flag).is_some() {
+                        return Err(format!(
+                            "--{flag} requires --models <models.json> (create one \
+                             with 'fit --save')"
+                        ));
+                    }
+                }
+            }
+            if let Some(models) = args.get("models") {
+                // artifact-backed predict: no measurement, no refit
+                let svc = load_service(models, &cfg, &args)?;
+                if let Some(reqfile) = args.get("requests") {
+                    // a requests file carries its own device/kernel/case
+                    // per line; one-shot flags cannot be honored and
+                    // must not be silently dropped
+                    for flag in ["device", "kernel", "case", "env"] {
+                        if args.get(flag).is_some() {
+                            return Err(format!(
+                                "--{flag} does not combine with --requests (each \
+                                 request line names its own device/kernel)"
+                            ));
+                        }
+                    }
+                    let text = std::fs::read_to_string(reqfile)
+                        .map_err(|e| format!("--requests {reqfile}: {e}"))?;
+                    let out = std::io::stdout();
+                    let summary = svc.serve(text.as_bytes(), out.lock())?;
+                    eprint!("{}", render_service(&summary));
+                } else {
+                    let line = one_shot_request(&args)?;
+                    let resp = svc.respond(&line);
+                    println!("{}", resp.compact());
+                    // scripted callers rely on the exit status: a failed
+                    // one-shot prediction is a CLI error, not a 0-exit
+                    if let Some(e) = resp.get_str("error") {
+                        return Err(format!("prediction failed: {e}"));
+                    }
+                }
+                return Ok(());
+            }
             let device = args.get_or("device", "k40c").to_string();
             let schema = Schema::full();
             let dr = run_device(&device, &schema, &cfg)?;
@@ -177,8 +316,72 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
+        "serve" => {
+            let cfg = make_config(&args)?;
+            let models = args.get("models").ok_or(
+                "serve requires --models <models.json> (create one with 'fit --save')",
+            )?;
+            let svc = load_service(models, &cfg, &args)?;
+            match args.get("port") {
+                None => {
+                    let stdin = std::io::stdin();
+                    let out = std::io::stdout();
+                    let summary = svc.serve(stdin.lock(), out.lock())?;
+                    eprint!("{}", render_service(&summary));
+                }
+                Some(p) => {
+                    let port: u16 =
+                        p.parse().map_err(|_| format!("bad --port '{p}'"))?;
+                    let listener = std::net::TcpListener::bind(("127.0.0.1", port))
+                        .map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
+                    eprintln!(
+                        "uniperf serve: listening on 127.0.0.1:{port} \
+                         (line-delimited JSON requests, one response line each)"
+                    );
+                    for stream in listener.incoming() {
+                        // a failed accept (client reset mid-handshake,
+                        // transient fd exhaustion) must not take the
+                        // long-running listener down
+                        let stream = match stream {
+                            Ok(s) => s,
+                            Err(e) => {
+                                eprintln!("accept failed: {e}");
+                                continue;
+                            }
+                        };
+                        let reader = match stream.try_clone() {
+                            Ok(s) => std::io::BufReader::new(s),
+                            Err(e) => {
+                                eprintln!("connection setup failed: {e}");
+                                continue;
+                            }
+                        };
+                        // conversational loop: every request line is
+                        // answered before the next read, so request/
+                        // response clients never deadlock on the batch
+                        // window. Stats accumulate across connections;
+                        // a broken client must not take the listener
+                        // down.
+                        match svc.serve_interactive(reader, stream) {
+                            Ok(summary) => eprint!("{}", render_service(&summary)),
+                            Err(e) => eprintln!("connection error: {e}"),
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
         "devices" => {
             let cfg = make_config(&args)?;
+            if let Some(path) = args.get("export") {
+                std::fs::write(path, registry::export_template().pretty())
+                    .map_err(|e| format!("write {path}: {e}"))?;
+                println!(
+                    "wrote device-profile template to {path} \
+                     (edit it, then load with --devices {path})"
+                );
+                return Ok(());
+            }
             println!(
                 "{:<10} {:<36} {:>5} {:>10} {:>10} {:>5} {:>6} {:>10}",
                 "name", "full name", "SMs", "clock", "BW (GB/s)", "warp", "maxg", "launch"

@@ -239,6 +239,17 @@ impl Model {
             weights[idx] = val;
             active.push(idx);
         }
+        // preserve the stored solver name verbatim so serialization is
+        // a fixed point (required by the persisted model artifacts of
+        // [`crate::service::store`]: re-emitting a loaded store must
+        // reproduce the file byte for byte) — including names of
+        // solvers this build does not know, which go through the
+        // global interner for true leak-once-per-distinct-name
+        // `&'static str` semantics.
+        let solver = match j.get("solver").and_then(Json::as_str) {
+            Some(name) => crate::util::intern::Sym::intern(name).as_str(),
+            None => "loaded",
+        };
         Ok(Model {
             device,
             weights,
@@ -247,7 +258,7 @@ impl Model {
                 .get("train_rel_err_geomean")
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
-            solver: "loaded",
+            solver,
         })
     }
 }

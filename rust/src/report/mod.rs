@@ -313,6 +313,97 @@ pub fn render_transfer(t: &TransferMatrix) -> String {
     s
 }
 
+/// Aggregate accounting of one prediction-service run (assembled by
+/// [`crate::service::Service::summary`]): request/batch/error counts,
+/// props-cache effectiveness, request-latency percentiles and the
+/// extraction-time floor with cache hits excluded via the
+/// [`crate::harness::Sample`] marker (a hit is a non-run, not a 0 s
+/// run).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceSummary {
+    pub requests: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// distinct kernel structures extracted and cached
+    pub distinct_kernels: usize,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    /// minimum symbolic-extraction time over the *timed* (cache-miss)
+    /// extractions; `None` when every request hit the cache
+    pub min_extract_us: Option<f64>,
+}
+
+impl ServiceSummary {
+    /// Cache hit rate in [0, 1]; 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("distinct_kernels", Json::Num(self.distinct_kernels as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+            ("latency_p50_us", Json::Num(self.latency_p50_us)),
+            ("latency_p99_us", Json::Num(self.latency_p99_us)),
+            ("latency_mean_us", Json::Num(self.latency_mean_us)),
+            (
+                "min_extract_us",
+                self.min_extract_us.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Render the prediction-service summary.
+pub fn render_service(s: &ServiceSummary) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "Prediction service summary");
+    let _ = writeln!(
+        out,
+        "requests {}  errors {}  batches {}",
+        s.requests, s.errors, s.batches
+    );
+    let _ = writeln!(
+        out,
+        "props cache: {} distinct kernels, {} hits / {} misses ({:.1}% hit rate)",
+        s.distinct_kernels,
+        s.cache_hits,
+        s.cache_misses,
+        100.0 * s.hit_rate()
+    );
+    let _ = writeln!(
+        out,
+        "latency: p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
+        s.latency_p50_us, s.latency_p99_us, s.latency_mean_us
+    );
+    match s.min_extract_us {
+        Some(t) => {
+            let _ = writeln!(
+                out,
+                "extraction: min {:.1} µs over {} timed extractions ({} cached hits excluded)",
+                t, s.cache_misses, s.cache_hits
+            );
+        }
+        None => {
+            let _ = writeln!(out, "extraction: all requests served from cache");
+        }
+    }
+    out
+}
+
 /// Render the paper's Table 2: the fitted weight vector with
 /// per-property labels, in units of seconds per operation.
 pub fn render_table2(model: &Model, schema: &Schema) -> String {
@@ -427,6 +518,40 @@ mod tests {
         }
         // one dash cell per diagonal entry
         assert_eq!(r.matches(" |         -").count(), 2, "{r}");
+    }
+
+    #[test]
+    fn render_service_reports_cache_and_latency() {
+        let s = ServiceSummary {
+            requests: 288,
+            errors: 0,
+            batches: 5,
+            cache_hits: 270,
+            cache_misses: 18,
+            distinct_kernels: 18,
+            latency_p50_us: 12.3,
+            latency_p99_us: 180.0,
+            latency_mean_us: 20.1,
+            min_extract_us: Some(812.0),
+        };
+        assert!((s.hit_rate() - 270.0 / 288.0).abs() < 1e-12);
+        let r = render_service(&s);
+        for needle in [
+            "requests 288",
+            "batches 5",
+            "270 hits / 18 misses",
+            "p50 12.3",
+            "p99 180.0",
+            "min 812.0",
+            "cached hits excluded",
+        ] {
+            assert!(r.contains(needle), "missing {needle}:\n{r}");
+        }
+        // an all-hit run has no timed extraction to report
+        let warm = ServiceSummary { min_extract_us: None, ..s };
+        assert!(render_service(&warm).contains("all requests served from cache"));
+        assert_eq!(ServiceSummary::default().hit_rate(), 0.0);
+        assert_eq!(warm.to_json().get("min_extract_us"), Some(&Json::Null));
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Sharded, structurally-keyed property cache for the prediction
+//! service.
+//!
+//! The harness's per-campaign [`crate::harness::PropsCache`] keys on
+//! kernel *name* + group shape and lives for one campaign; the service
+//! needs a long-lived, concurrently shared cache that also recognizes
+//! *inline* kernels clients submit under arbitrary names. Keys are
+//! therefore the structural kernel hash ([`super::hash::structural_hash`])
+//! plus the extraction options, and the map is sharded: each shard is an
+//! independent mutex, so worker threads handling a batch only contend
+//! when their kernels land in the same shard.
+//!
+//! A miss extracts *under the shard lock*: concurrent requests for the
+//! same new kernel serialize, every later one observes a hit, and the
+//! hit/miss counters are deterministic for a given request stream
+//! (asserted by `benches/serve.rs`).
+//!
+//! Keying has one subtlety: `stats::extract` uses its classification
+//! binding to bucket accesses into stride classes, and for the library
+//! kernels those classes are *structural* (size sweeps never change
+//! them), so named-kernel entries share one extraction across all size
+//! cases and devices. Client-submitted inline kernels carry no such
+//! guarantee — a parameter-dependent array stride can legitimately
+//! classify differently at different sizes — so inline lookups salt
+//! the key with a digest of the classification binding
+//! (`env_fingerprint`): a repeated request still hits, but a different
+//! size never inherits another size's classification.
+
+use super::hash::structural_hash;
+use crate::lpir::Kernel;
+use crate::stats::{extract, ExtractOpts, KernelProps};
+use crate::util::fnv::Fnv64;
+use crate::util::intern::Env;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const SHARDS: usize = 16;
+
+/// Cache key: structural hash + the extraction options that shaped the
+/// symbolic counts (the whole struct, so new option fields extend the
+/// key automatically) + the classification-binding salt (0 for trusted
+/// structural kernels, an env digest for untrusted bindings).
+type Key = (u64, ExtractOpts, u64);
+
+/// Digest of a classification binding (sorted name/value pairs).
+pub fn env_fingerprint(env: &Env) -> u64 {
+    let mut binds: Vec<(&str, i64)> = env.iter().map(|(s, v)| (s.as_str(), v)).collect();
+    binds.sort();
+    let mut h = Fnv64::new();
+    h.write_u64(binds.len() as u64);
+    for (name, v) in binds {
+        h.write_str(name);
+        h.write_i64(v);
+    }
+    h.finish()
+}
+
+/// A concurrently shared symbolic-extraction cache.
+pub struct SharedPropsCache {
+    shards: Vec<Mutex<BTreeMap<Key, Arc<KernelProps>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SharedPropsCache {
+    fn default() -> Self {
+        SharedPropsCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SharedPropsCache {
+    pub fn new() -> SharedPropsCache {
+        SharedPropsCache::default()
+    }
+
+    /// Extracted properties for a kernel, from cache when its structure
+    /// has been seen before. Returns `(props, hit)`.
+    ///
+    /// `env_keyed` selects the keying mode (see module docs): `false`
+    /// for library kernels whose stride classes are size-structural
+    /// (one entry serves every size case and device), `true` for
+    /// untrusted inline kernels (the classification binding joins the
+    /// key, so differently-sized requests never share a
+    /// classification).
+    pub fn props_for(
+        &self,
+        kernel: &Kernel,
+        classify_env: &Env,
+        opts: ExtractOpts,
+        env_keyed: bool,
+    ) -> Result<(Arc<KernelProps>, bool), String> {
+        let key = (
+            structural_hash(kernel),
+            opts,
+            if env_keyed { env_fingerprint(classify_env) } else { 0 },
+        );
+        let shard = &self.shards[(key.0 as usize) % SHARDS];
+        let mut map = shard.lock().unwrap();
+        if let Some(p) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(p), true));
+        }
+        // extract under the shard lock: the first requester pays, every
+        // concurrent duplicate waits and then hits
+        let props = Arc::new(extract(kernel, classify_env, opts)?);
+        map.insert(key, Arc::clone(&props));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((props, false))
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct (kernel structure, options) entries currently cached.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+    use crate::lpir::{Access, DType, Expr, Layout};
+    use crate::qpoly::{env, LinExpr};
+
+    fn scale_kernel(name: &str, array: &str) -> Kernel {
+        KernelBuilder::new(name, &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array(array, DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("out", vec![gid_lin_1d(256)]),
+                Expr::mul(Expr::lit(2.0), Expr::load(array, vec![gid_lin_1d(256)])),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn structural_sharing_across_names() {
+        let cache = SharedPropsCache::new();
+        let e = env(&[("n", 1 << 16)]);
+        let (_, hit) = cache
+            .props_for(&scale_kernel("k1", "a"), &e, ExtractOpts::default(), false)
+            .unwrap();
+        assert!(!hit);
+        // same structure under different kernel/array names: a hit
+        let (_, hit) = cache
+            .props_for(&scale_kernel("another", "buf"), &e, ExtractOpts::default(), false)
+            .unwrap();
+        assert!(hit);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn extraction_options_split_entries() {
+        let cache = SharedPropsCache::new();
+        let e = env(&[("n", 1 << 16)]);
+        let k = scale_kernel("k", "a");
+        cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+        let (_, hit) = cache
+            .props_for(
+                &k,
+                &e,
+                ExtractOpts { collapse_utilization: true, ..Default::default() },
+                false,
+            )
+            .unwrap();
+        assert!(!hit, "different extraction options must not share entries");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn env_keyed_lookups_split_by_binding_but_repeat_hits() {
+        let cache = SharedPropsCache::new();
+        let k = scale_kernel("inline_k", "a");
+        let small = env(&[("n", 2)]);
+        let big = env(&[("n", 1 << 20)]);
+        // untrusted inline path: each distinct binding classifies afresh
+        let (_, hit) = cache.props_for(&k, &small, ExtractOpts::default(), true).unwrap();
+        assert!(!hit);
+        let (_, hit) = cache.props_for(&k, &big, ExtractOpts::default(), true).unwrap();
+        assert!(!hit, "a different size must not inherit another size's classification");
+        // ...while the identical request still hits
+        let (_, hit) = cache.props_for(&k, &big, ExtractOpts::default(), true).unwrap();
+        assert!(hit);
+        // and env-keyed entries never alias the structural entry
+        let (_, hit) = cache.props_for(&k, &big, ExtractOpts::default(), false).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn shared_arc_points_at_one_extraction() {
+        let cache = SharedPropsCache::new();
+        let e = env(&[("n", 4096)]);
+        let (p1, _) = cache
+            .props_for(&scale_kernel("k", "a"), &e, ExtractOpts::default(), false)
+            .unwrap();
+        let (p2, _) = cache
+            .props_for(&scale_kernel("k", "a"), &e, ExtractOpts::default(), false)
+            .unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+    }
+}

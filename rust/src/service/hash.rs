@@ -1,0 +1,343 @@
+//! Structural kernel hashing: a process-independent digest of a
+//! [`Kernel`] that is invariant under *renaming* of inames, arrays and
+//! the kernel itself, but changes whenever the loop domain, grid
+//! mapping, array declarations, accesses or operations change.
+//!
+//! The service's property cache ([`super::cache::SharedPropsCache`])
+//! keys extracted [`crate::stats::KernelProps`] by this hash: two
+//! requests carrying structurally identical inline kernels (or the same
+//! named kernel) share one symbolic extraction, regardless of what the
+//! client called its loops and buffers.
+//!
+//! Canonicalization: every [`Sym`] is replaced by its *position* —
+//! parameters by index in `kernel.params`, inames by index in the
+//! domain's dimension order, arrays by index in declaration order. All
+//! structure is then folded into an FNV-1a 64-bit stream with
+//! type/variant tags and length prefixes, so the encoding is
+//! prefix-free and stable across processes (interning order never
+//! leaks into the digest).
+
+use crate::lpir::{Expr, IdxTag, Kernel};
+use crate::qpoly::LinExpr;
+use crate::util::fnv::Fnv64;
+use crate::util::intern::Sym;
+use std::collections::BTreeMap;
+
+/// Canonical identity of a symbol within one kernel.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Canon {
+    Param(usize),
+    Iname(usize),
+    /// not declared anywhere in the kernel (invalid kernels only);
+    /// falls back to the raw name so hashing still terminates
+    Free,
+}
+
+struct Canonicalizer {
+    /// the *variable* namespace of index/bound expressions: params,
+    /// shadowed by same-named domain dims. Array names deliberately do
+    /// NOT live here — arrays occupy a separate namespace (the array
+    /// position of an access), so an array that happens to share a
+    /// variable's name cannot hijack its canonical identity.
+    vars: BTreeMap<Sym, Canon>,
+    /// array name -> declaration index
+    arrays: BTreeMap<Sym, usize>,
+}
+
+impl Canonicalizer {
+    fn new(kernel: &Kernel) -> Canonicalizer {
+        let mut vars = BTreeMap::new();
+        for (i, p) in kernel.params.iter().enumerate() {
+            vars.insert(*p, Canon::Param(i));
+        }
+        // inserted after params: dims shadow same-named params
+        for (i, d) in kernel.domain.dims.iter().enumerate() {
+            vars.insert(d.name, Canon::Iname(i));
+        }
+        let arrays = kernel
+            .arrays
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name, i))
+            .collect();
+        Canonicalizer { vars, arrays }
+    }
+
+    /// A symbol in variable position (LinExpr term, reduction iname,
+    /// `within` entry).
+    fn write_var(&self, h: &mut Fnv64, s: Sym) {
+        match self.vars.get(&s).copied().unwrap_or(Canon::Free) {
+            Canon::Param(i) => {
+                h.write_u8(1).write_u64(i as u64);
+            }
+            Canon::Iname(i) => {
+                h.write_u8(2).write_u64(i as u64);
+            }
+            Canon::Free => {
+                h.write_u8(4).write_str(s.as_str());
+            }
+        }
+    }
+
+    /// A symbol in array position (the `array` of an access).
+    fn write_array(&self, h: &mut Fnv64, s: Sym) {
+        match self.arrays.get(&s) {
+            Some(&i) => {
+                h.write_u8(3).write_u64(i as u64);
+            }
+            // undeclared array (invalid kernels only): raw name
+            None => {
+                h.write_u8(4).write_str(s.as_str());
+            }
+        }
+    }
+
+    fn write_lin(&self, h: &mut Fnv64, e: &LinExpr) {
+        // canonical term order: sort by canonical id, not by interning
+        // order (BTreeMap<Sym, _> iterates in interning order, which is
+        // process-history-dependent)
+        let mut terms: Vec<(Canon, Sym, i64)> = e
+            .terms
+            .iter()
+            .map(|(s, k)| (self.vars.get(s).copied().unwrap_or(Canon::Free), *s, *k))
+            .collect();
+        terms.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.as_str().cmp(b.1.as_str())));
+        h.write_u64(terms.len() as u64);
+        for (_, s, k) in terms {
+            self.write_var(h, s);
+            h.write_i64(k);
+        }
+        h.write_i64(e.c);
+    }
+
+    fn write_expr(&self, h: &mut Fnv64, e: &Expr) {
+        match e {
+            Expr::Lit(x) => {
+                h.write_u8(10).write_f64(*x);
+            }
+            Expr::Idx(l) => {
+                h.write_u8(11);
+                self.write_lin(h, l);
+            }
+            Expr::Load(a) => {
+                h.write_u8(12);
+                self.write_array(h, a.array);
+                h.write_u64(a.idx.len() as u64);
+                for i in &a.idx {
+                    self.write_lin(h, i);
+                }
+            }
+            Expr::Un(op, x) => {
+                h.write_u8(13).write_u8(*op as u8);
+                self.write_expr(h, x);
+            }
+            Expr::Bin(op, a, b) => {
+                h.write_u8(14).write_u8(*op as u8);
+                self.write_expr(h, a);
+                self.write_expr(h, b);
+            }
+            Expr::Cast(dt, x) => {
+                h.write_u8(15).write_u8(*dt as u8);
+                self.write_expr(h, x);
+            }
+            Expr::Reduce(op, iname, body) => {
+                h.write_u8(16).write_u8(*op as u8);
+                self.write_var(h, *iname);
+                self.write_expr(h, body);
+            }
+        }
+    }
+}
+
+fn tag_code(t: IdxTag) -> u8 {
+    match t {
+        IdxTag::Group(a) => 20 + (a as u8).min(7),
+        IdxTag::Local(a) => 30 + (a as u8).min(7),
+        IdxTag::Seq => 40,
+        IdxTag::Unroll => 41,
+    }
+}
+
+/// Structural digest of a kernel (see module docs). The kernel *name*
+/// is deliberately excluded; callers that want per-name separation key
+/// on `(name, hash)` themselves.
+pub fn structural_hash(kernel: &Kernel) -> u64 {
+    let c = Canonicalizer::new(kernel);
+    let mut h = Fnv64::new();
+
+    h.write_u64(kernel.params.len() as u64);
+
+    // loop domain: each dim's bounds, tiling denominator, stride, and
+    // its grid tag — by position, never by name
+    h.write_u64(kernel.domain.dims.len() as u64);
+    for d in &kernel.domain.dims {
+        c.write_lin(&mut h, &d.lo);
+        c.write_lin(&mut h, &d.hi.num);
+        h.write_i64(d.hi.den);
+        h.write_i64(d.step);
+        h.write_u8(tag_code(kernel.tag(d.name)));
+    }
+
+    // arrays: dtype, shape, space, layout, output flag — by position
+    h.write_u64(kernel.arrays.len() as u64);
+    for a in &kernel.arrays {
+        h.write_u8(a.dtype as u8);
+        h.write_u64(a.shape.len() as u64);
+        for s in &a.shape {
+            c.write_lin(&mut h, s);
+        }
+        h.write_u8(a.space as u8);
+        h.write_u8(a.layout as u8);
+        h.write_u8(a.is_output as u8);
+    }
+
+    // instructions: lhs access, rhs tree, nest, deps, update flag
+    h.write_u64(kernel.insns.len() as u64);
+    for insn in &kernel.insns {
+        h.write_u64(insn.id as u64);
+        c.write_array(&mut h, insn.lhs.array);
+        h.write_u64(insn.lhs.idx.len() as u64);
+        for i in &insn.lhs.idx {
+            c.write_lin(&mut h, i);
+        }
+        c.write_expr(&mut h, &insn.rhs);
+        h.write_u64(insn.within.len() as u64);
+        for w in &insn.within {
+            c.write_var(&mut h, *w);
+        }
+        h.write_u64(insn.deps.len() as u64);
+        for d in &insn.deps {
+            h.write_u64(*d as u64);
+        }
+        h.write_u8(insn.is_update as u8);
+    }
+
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isl::{BoxDomain, Dim};
+    use crate::lpir::builder::gid_lin_1d;
+    use crate::lpir::{Access, ArrayDecl, DType, IdxTag, Insn, Kernel, Layout, MemSpace};
+    use crate::qpoly::LinExpr;
+
+    /// A copy kernel with caller-chosen iname/array names — the rename
+    /// axis the hash must be invariant along.
+    fn copy_kernel(g: &str, l: &str, a: &str, b: &str, lsize: i64) -> Kernel {
+        let idx = LinExpr::scaled_var(g, lsize).add(&LinExpr::var(l));
+        let k = Kernel {
+            name: format!("copy_{g}_{a}"),
+            params: vec!["n".into()],
+            domain: BoxDomain::new(vec![
+                Dim::tiles(g, LinExpr::var("n"), lsize),
+                Dim::simple(l, LinExpr::constant(lsize)),
+            ]),
+            tags: [(g.into(), IdxTag::Group(0)), (l.into(), IdxTag::Local(0))]
+                .into_iter()
+                .collect(),
+            arrays: vec![
+                ArrayDecl {
+                    name: a.into(),
+                    dtype: DType::F32,
+                    shape: vec![LinExpr::var("n")],
+                    space: MemSpace::Global,
+                    layout: Layout::RowMajor,
+                    is_output: false,
+                },
+                ArrayDecl {
+                    name: b.into(),
+                    dtype: DType::F32,
+                    shape: vec![LinExpr::var("n")],
+                    space: MemSpace::Global,
+                    layout: Layout::RowMajor,
+                    is_output: true,
+                },
+            ],
+            insns: vec![Insn {
+                id: 0,
+                lhs: Access { array: b.into(), idx: vec![idx.clone()] },
+                rhs: Expr::Load(Access { array: a.into(), idx: vec![idx] }),
+                within: vec![g.into(), l.into()],
+                deps: vec![],
+                is_update: false,
+            }],
+        };
+        k.validate().unwrap();
+        k
+    }
+
+    #[test]
+    fn rename_invariant() {
+        let base = structural_hash(&copy_kernel("g0", "l0", "a", "b", 256));
+        // renamed inames, renamed arrays, renamed kernel: same structure
+        assert_eq!(base, structural_hash(&copy_kernel("grp", "lane", "src", "dst", 256)));
+        assert_eq!(base, structural_hash(&copy_kernel("g0", "l0", "x", "y", 256)));
+    }
+
+    #[test]
+    fn array_names_live_in_their_own_namespace() {
+        // an array that shares the param's name ("n") must not hijack
+        // the param's canonical identity: renaming that array keeps the
+        // hash, exactly like any other array rename
+        let shadowed = structural_hash(&copy_kernel("g0", "l0", "n", "b", 256));
+        assert_eq!(shadowed, structural_hash(&copy_kernel("g0", "l0", "a", "b", 256)));
+        // and an array sharing an iname's name behaves the same
+        let iname_shadow = structural_hash(&copy_kernel("g0", "l0", "l0_buf", "g0", 256));
+        assert_eq!(iname_shadow, structural_hash(&copy_kernel("g0", "l0", "x", "y", 256)));
+    }
+
+    #[test]
+    fn structural_changes_change_the_hash() {
+        let base = structural_hash(&copy_kernel("g0", "l0", "a", "b", 256));
+        // different group size -> different domain bounds
+        assert_ne!(base, structural_hash(&copy_kernel("g0", "l0", "a", "b", 128)));
+        // different access pattern
+        let mut strided = copy_kernel("g0", "l0", "a", "b", 256);
+        strided.insns[0].rhs = Expr::load("a", vec![gid_lin_1d(256).scale(2)]);
+        assert_ne!(base, structural_hash(&strided));
+        // extra operation on the rhs
+        let mut scaled = copy_kernel("g0", "l0", "a", "b", 256);
+        scaled.insns[0].rhs =
+            Expr::mul(Expr::lit(2.0), Expr::load("a", vec![gid_lin_1d(256)]));
+        assert_ne!(base, structural_hash(&scaled));
+        // different literal constant
+        let mut scaled3 = copy_kernel("g0", "l0", "a", "b", 256);
+        scaled3.insns[0].rhs =
+            Expr::mul(Expr::lit(3.0), Expr::load("a", vec![gid_lin_1d(256)]));
+        assert_ne!(structural_hash(&scaled), structural_hash(&scaled3));
+        // dtype change
+        let mut f64k = copy_kernel("g0", "l0", "a", "b", 256);
+        f64k.arrays[0].dtype = DType::F64;
+        assert_ne!(base, structural_hash(&f64k));
+        // update-vs-assign flag
+        let mut upd = copy_kernel("g0", "l0", "a", "b", 256);
+        upd.insns[0].is_update = true;
+        assert_ne!(base, structural_hash(&upd));
+        // grid tag change (sequential instead of local)
+        let mut seq = copy_kernel("g0", "l0", "a", "b", 256);
+        seq.tags.insert("l0".into(), IdxTag::Seq);
+        assert_ne!(base, structural_hash(&seq));
+    }
+
+    #[test]
+    fn builder_kernels_hash_deterministically() {
+        // same builder invocation twice -> identical kernels -> equal hash
+        let mk = || {
+            crate::lpir::builder::KernelBuilder::new("scale", &["n"])
+                .group_dims_1d(LinExpr::var("n"), 128)
+                .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+                .global_array("o", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+                .insn(
+                    Access::new("o", vec![gid_lin_1d(128)]),
+                    Expr::mul(Expr::lit(3.0), Expr::load("a", vec![gid_lin_1d(128)])),
+                    &["g0", "l0"],
+                    &[],
+                )
+                .build()
+                .unwrap()
+        };
+        assert_eq!(structural_hash(&mk()), structural_hash(&mk()));
+    }
+}

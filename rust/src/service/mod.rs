@@ -1,0 +1,668 @@
+//! `service` — the batched, cached kernel-runtime prediction server.
+//!
+//! Everything upstream of this module is a *batch reproduction*
+//! pipeline: measure, fit, report. This subsystem turns the fitted
+//! model into a queryable artifact, per the ROADMAP north star (serve
+//! heavy traffic as fast as the hardware allows):
+//!
+//! 1. **Artifacts** ([`store`]) — `fit --save models.json` persists one
+//!    weight table per device, fingerprinted against the schema, the
+//!    device profile and the capability-derived measurement suite;
+//!    [`Service::new`] refuses stale artifacts.
+//! 2. **Requests** ([`request`]) — line-delimited JSON naming either an
+//!    evaluation-zoo kernel or an inline `lpir` kernel spec ([`spec`]).
+//! 3. **Caching** ([`cache`]) — symbolic extraction is the expensive
+//!    step (milliseconds); results are shared through a sharded cache
+//!    keyed by the *structural* kernel hash ([`hash`]), so a warm
+//!    request never re-runs extraction and drops straight onto the
+//!    compiled [`crate::qpoly::tape::PwTape`] fast path (microseconds).
+//! 4. **Batching** ([`Service::serve`]) — requests drain in
+//!    deterministic batches onto [`crate::util::executor::par_map`];
+//!    responses preserve input order, and per-request latency plus
+//!    cache-hit accounting surface in a
+//!    [`crate::report::render_service`] summary. Cache hits are
+//!    excluded from the extraction-time floor entirely — a hit is a
+//!    non-run, not a 0-second run (the exclusion rule
+//!    [`crate::harness::Sample::Cached`] /
+//!    [`crate::harness::Protocol::reduce_samples`] define and
+//!    unit-test).
+//!
+//! Property vectors are hardware-independent (the cross-machine result
+//! of arXiv:1904.09538), so one cached extraction answers queries for
+//! *every* registered device; only the weight table is per-device.
+
+pub mod cache;
+pub mod hash;
+pub mod request;
+pub mod spec;
+pub mod store;
+
+pub use cache::SharedPropsCache;
+pub use request::{KernelRef, Request};
+pub use store::{ModelStore, StoredModel};
+
+use crate::gpusim::DeviceRegistry;
+use crate::kernels::{self, KernelCase};
+use crate::report::ServiceSummary;
+use crate::stats::{ExtractOpts, Schema};
+use crate::util::executor::{default_workers, par_map};
+use crate::util::intern::Env;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// requests per batch handed to the executor (order-preserving)
+    pub batch: usize,
+    /// worker threads per batch
+    pub workers: usize,
+    /// extraction options (must match how the model was fitted)
+    pub extract: ExtractOpts,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { batch: 64, workers: default_workers(), extract: ExtractOpts::default() }
+    }
+}
+
+/// Once this many latency samples are held, the buffer is decimated
+/// (every 2nd sample dropped) and the recording stride doubles — a
+/// server answering millions of requests keeps percentile-grade
+/// coverage of its whole history in bounded memory.
+const LATENCY_CAP: usize = 1 << 14;
+
+#[derive(Default)]
+struct LatencyBuf {
+    samples: Vec<f64>,
+    /// record every `stride`-th observation (doubles on decimation)
+    stride: u64,
+    seen: u64,
+}
+
+impl LatencyBuf {
+    fn push(&mut self, us: f64) {
+        self.seen += 1;
+        let stride = self.stride.max(1);
+        if self.seen % stride != 0 {
+            return;
+        }
+        self.samples.push(us);
+        if self.samples.len() >= LATENCY_CAP {
+            let mut keep = false;
+            self.samples.retain(|_| {
+                keep = !keep;
+                keep
+            });
+            self.stride = stride * 2;
+        }
+    }
+}
+
+#[derive(Default)]
+struct Stats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    latencies_us: Mutex<LatencyBuf>,
+    /// exact running floor over every *timed* extraction. Cache hits
+    /// contribute nothing — the 0-second-sample pollution that
+    /// [`crate::harness::Sample::Cached`] /
+    /// [`crate::harness::Protocol::reduce_samples`] define and
+    /// unit-test the exclusion rule for — so this is bounded state
+    /// with an exact answer, even for miss-heavy inline workloads.
+    min_extract_s: Mutex<Option<f64>>,
+}
+
+/// The prediction server: a validated model store + device registry +
+/// shared props cache, answering requests concurrently.
+pub struct Service {
+    registry: DeviceRegistry,
+    store: ModelStore,
+    schema: Schema,
+    cache: SharedPropsCache,
+    cfg: ServiceConfig,
+    /// per-device evaluation-zoo suites, precomputed for every device
+    /// the store holds weights for (named-kernel resolution)
+    suites: BTreeMap<String, Vec<KernelCase>>,
+    stats: Stats,
+}
+
+struct Prediction {
+    id: Option<Json>,
+    device: String,
+    kernel: String,
+    case: Option<String>,
+    predicted_s: f64,
+    cache_hit: bool,
+    extract_s: Option<f64>,
+}
+
+impl Service {
+    /// Build a service over a loaded artifact. The store is
+    /// staleness-validated against `registry` (profile + suite + schema
+    /// fingerprints) before anything is served.
+    pub fn new(
+        store: ModelStore,
+        registry: DeviceRegistry,
+        cfg: ServiceConfig,
+    ) -> Result<Service, String> {
+        let schema = Schema::full();
+        store.validate_against(&registry, &schema)?;
+        if store.extract != cfg.extract {
+            return Err(format!(
+                "model artifact was fitted under extraction options {:?} but the \
+                 service was configured with {:?} — serve with matching flags or \
+                 re-run `fit --save`",
+                store.extract, cfg.extract
+            ));
+        }
+        if store.is_empty() {
+            return Err("model artifact holds no fitted devices".into());
+        }
+        let mut suites = BTreeMap::new();
+        for device in store.devices() {
+            let profile = registry.get(&device).expect("validated above");
+            suites.insert(device.clone(), kernels::eval_suite(profile));
+        }
+        Ok(Service {
+            registry,
+            store,
+            schema,
+            cache: SharedPropsCache::new(),
+            cfg,
+            suites,
+            stats: Stats::default(),
+        })
+    }
+
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    pub fn cache(&self) -> &SharedPropsCache {
+        &self.cache
+    }
+
+    /// Resolve + predict one parsed request.
+    fn predict_request(&self, req: &Request) -> Result<Prediction, String> {
+        let profile = self
+            .registry
+            .get(&req.device)
+            .ok_or_else(|| format!("unknown device '{}'", req.device))?;
+        let sm = self.store.get(&req.device).ok_or_else(|| {
+            format!(
+                "no fitted model for device '{}' in the artifact (have: {})",
+                req.device,
+                self.store.devices().join(", ")
+            )
+        })?;
+
+        // resolve the kernel + parameter binding
+        let user_env = |pairs: &[(String, i64)]| {
+            let mut e = Env::new();
+            for (k, v) in pairs {
+                e.insert(k.as_str(), *v);
+            }
+            e
+        };
+        let (kernel, env, kname, case_letter) = match &req.kref {
+            KernelRef::Named { name, case } => {
+                let suite = self.suites.get(&req.device).expect("suites cover store devices");
+                let cases: Vec<&KernelCase> =
+                    suite.iter().filter(|c| c.kernel.name == *name).collect();
+                if cases.is_empty() {
+                    let mut known: Vec<&str> = Vec::new();
+                    for c in suite {
+                        if !known.contains(&c.kernel.name.as_str()) {
+                            known.push(&c.kernel.name);
+                        }
+                    }
+                    return Err(format!(
+                        "unknown kernel '{name}' (known: {})",
+                        known.join(", ")
+                    ));
+                }
+                let (kernel, env, case_letter) = match (case, &req.env) {
+                    (Some(letter), _) => {
+                        let found = cases
+                            .iter()
+                            .find(|c| c.label.split('/').nth(1) == Some(letter.as_str()))
+                            .ok_or_else(|| {
+                                format!("kernel '{name}' has no size case '{letter}' (a-d)")
+                            })?;
+                        (&found.kernel, found.env.clone(), Some(letter.clone()))
+                    }
+                    (None, Some(pairs)) => (&cases[0].kernel, user_env(pairs), None),
+                    (None, None) => {
+                        // default: the smallest (`a`) size case
+                        let found = cases
+                            .iter()
+                            .find(|c| c.label.split('/').nth(1) == Some("a"))
+                            .unwrap_or(&cases[0]);
+                        (
+                            &found.kernel,
+                            found.env.clone(),
+                            found.label.split('/').nth(1).map(|s| s.to_string()),
+                        )
+                    }
+                };
+                (kernel, env, name.clone(), case_letter)
+            }
+            KernelRef::Inline(k) => (
+                k.as_ref(),
+                user_env(req.env.as_ref().expect("parser enforces env for inline")),
+                k.name.clone(),
+                None,
+            ),
+        };
+
+        // every size parameter must be bound
+        for p in &kernel.params {
+            if env.get(*p).is_none() {
+                return Err(format!("kernel '{kname}' requires parameter '{p}' in env"));
+            }
+        }
+        // reject launches the target device cannot run
+        let (gs0, gs1) = kernel.group_size_at(&env)?;
+        if gs0 * gs1 > profile.max_group_size as i64 {
+            return Err(format!(
+                "group size {}x{} exceeds {}'s limit of {}",
+                gs0, gs1, profile.name, profile.max_group_size
+            ));
+        }
+
+        // cached symbolic extraction -> tape evaluation -> inner product.
+        // Suite-configured library cases share one entry across sizes
+        // and devices (their stride classes are size-structural by
+        // construction); any request supplying its *own* binding —
+        // inline kernels and named kernels with a user env — is
+        // additionally keyed by that binding, so a degenerate size
+        // cannot poison the shared classification.
+        let env_keyed =
+            matches!(&req.kref, KernelRef::Inline(_)) || req.env.is_some();
+        let t0 = Instant::now();
+        let (props, hit) = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed)?;
+        let extract_s = (!hit).then(|| t0.elapsed().as_secs_f64());
+        let v = props.eval(&self.schema, &env)?;
+        Ok(Prediction {
+            id: req.id.clone(),
+            device: req.device.clone(),
+            kernel: kname,
+            case: case_letter,
+            predicted_s: sm.model.predict(&v),
+            cache_hit: hit,
+            extract_s,
+        })
+    }
+
+    /// Handle one request line: parse, predict, account, and render the
+    /// response object. Never panics on malformed input — errors come
+    /// back as `{"error": ...}` responses (echoing `id` when it parsed).
+    pub fn respond(&self, line: &str) -> Json {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let error_resp = |id: Option<&Json>, msg: String| {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let mut pairs = vec![("error", Json::Str(msg))];
+            if let Some(id) = id {
+                pairs.push(("id", id.clone()));
+            }
+            Json::obj(pairs)
+        };
+        let resp = match Request::parse(line) {
+            Err(e) => {
+                // salvage the id for correlation even when the request
+                // is otherwise malformed (documented id-echo contract)
+                let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
+                error_resp(id.as_ref(), e)
+            }
+            Ok(req) => match self.predict_request(&req) {
+                Err(e) => error_resp(req.id.as_ref(), e),
+                Ok(p) => {
+                    // a cache hit is a non-run: `extract_s` is `None`
+                    // (the `harness::Sample::Cached` exclusion rule),
+                    // so it contributes nothing to the floor instead
+                    // of entering it as a 0-second sample
+                    if let Some(t) = p.extract_s {
+                        let mut m = self.stats.min_extract_s.lock().unwrap();
+                        *m = Some(m.map_or(t, |x| x.min(t)));
+                    }
+                    let mut pairs = vec![
+                        ("device", Json::Str(p.device)),
+                        ("kernel", Json::Str(p.kernel)),
+                        ("predicted_s", Json::Num(p.predicted_s)),
+                        (
+                            "cache",
+                            Json::Str(if p.cache_hit { "hit".into() } else { "miss".into() }),
+                        ),
+                    ];
+                    if let Some(c) = p.case {
+                        pairs.push(("case", Json::Str(c)));
+                    }
+                    if let Some(id) = p.id {
+                        pairs.push(("id", id));
+                    }
+                    Json::obj(pairs)
+                }
+            },
+        };
+        self.stats
+            .latencies_us
+            .lock()
+            .unwrap()
+            .push(t0.elapsed().as_secs_f64() * 1e6);
+        resp
+    }
+
+    #[cfg(test)]
+    fn latency_samples_held(&self) -> usize {
+        self.stats.latencies_us.lock().unwrap().samples.len()
+    }
+
+    /// Handle one deterministic batch: responses come back in request
+    /// order regardless of which worker answered which request.
+    pub fn run_batch(&self, lines: Vec<String>) -> Vec<Json> {
+        if lines.is_empty() {
+            return Vec::new();
+        }
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        par_map(lines, self.cfg.workers, |l| self.respond(&l))
+    }
+
+    /// The piped serving loop (stdin, `--requests` files): read request
+    /// lines, drain them in batches of `cfg.batch`, write one response
+    /// line per request in order. Returns the run's summary at end of
+    /// stream. Batching trades latency for throughput, so this loop is
+    /// for EOF-bounded streams; a conversational peer that waits for
+    /// each answer before sending more must use
+    /// [`Service::serve_interactive`].
+    pub fn serve<R: BufRead, W: Write>(
+        &self,
+        reader: R,
+        mut out: W,
+    ) -> Result<ServiceSummary, String> {
+        self.serve_batched(reader, &mut out, self.cfg.batch)?;
+        Ok(self.summary())
+    }
+
+    /// The conversational serving loop (TCP connections): every request
+    /// line is answered and flushed before the next read, so a client
+    /// that blocks on the response never deadlocks against the batch
+    /// window. Each request is still accounted as a (size-1) batch.
+    pub fn serve_interactive<R: BufRead, W: Write>(
+        &self,
+        reader: R,
+        mut out: W,
+    ) -> Result<ServiceSummary, String> {
+        self.serve_batched(reader, &mut out, 1)?;
+        Ok(self.summary())
+    }
+
+    fn serve_batched<R: BufRead>(
+        &self,
+        reader: R,
+        out: &mut impl Write,
+        batch: usize,
+    ) -> Result<(), String> {
+        let mut pending: Vec<String> = Vec::new();
+        for line in reader.lines() {
+            let line = line.map_err(|e| format!("read request stream: {e}"))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            pending.push(line);
+            if pending.len() >= batch.max(1) {
+                self.flush(&mut pending, out)?;
+            }
+        }
+        self.flush(&mut pending, out)
+    }
+
+    fn flush(&self, pending: &mut Vec<String>, out: &mut impl Write) -> Result<(), String> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        for resp in self.run_batch(std::mem::take(pending)) {
+            writeln!(out, "{}", resp.compact()).map_err(|e| format!("write response: {e}"))?;
+        }
+        out.flush().map_err(|e| format!("flush responses: {e}"))
+    }
+
+    /// Aggregate accounting so far. Latency percentiles come from the
+    /// bounded sample buffer (exact below [`LATENCY_CAP`] requests,
+    /// uniformly subsampled beyond).
+    pub fn summary(&self) -> ServiceSummary {
+        let mut lat = self.stats.latencies_us.lock().unwrap().samples.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[(((lat.len() - 1) as f64) * p).round() as usize]
+            }
+        };
+        let mean = if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+        // min extraction time over timed extractions only; cache hits
+        // were Sample::Cached markers and never entered the floor
+        let min_extract_us =
+            self.stats.min_extract_s.lock().unwrap().map(|s| s * 1e6);
+        ServiceSummary {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            errors: self.stats.errors.load(Ordering::Relaxed),
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            distinct_kernels: self.cache.len(),
+            latency_p50_us: pct(0.50),
+            latency_p99_us: pct(0.99),
+            latency_mean_us: mean,
+            min_extract_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::registry::builtins;
+    use crate::perfmodel::Model;
+    use crate::stats::extract;
+
+    /// A store with hand-made (but valid) weights for one device — unit
+    /// tests exercise resolution/caching/accounting without paying for
+    /// a fit; end-to-end fidelity lives in `rust/tests/service.rs`.
+    fn toy_service() -> Service {
+        let schema = Schema::full();
+        let mut weights = vec![0.0; schema.len()];
+        // weight only the launch-overhead columns: prediction =
+        // 2e-9 * workgroups + 5e-6
+        weights[schema.len() - 2] = 2e-9;
+        weights[schema.len() - 1] = 5e-6;
+        let model = Model {
+            device: "k40c".into(),
+            weights,
+            active: vec![schema.len() - 2, schema.len() - 1],
+            train_rel_err_geomean: 0.1,
+            solver: "native-cholesky",
+        };
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+        // single worker: the per-response `cache` field reflects actual
+        // execution, and two identical requests racing on a cold cache
+        // within one concurrent batch would otherwise flip which one
+        // reports the miss (the predictions are identical either way) —
+        // these unit tests assert exact hit/miss sequences
+        let cfg = ServiceConfig { workers: 1, ..ServiceConfig::default() };
+        Service::new(store, builtins().clone(), cfg).unwrap()
+    }
+
+    #[test]
+    fn named_case_request_predicts_and_caches() {
+        let svc = toy_service();
+        let r1 = svc.respond(r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        assert_eq!(r1.get_str("cache"), Some("miss"), "{r1}");
+        assert_eq!(r1.get_str("case"), Some("a"));
+        assert_eq!(r1.get("id"), Some(&Json::Num(1.0)));
+        let pred = r1.get_f64("predicted_s").unwrap();
+        assert!(pred > 0.0 && pred.is_finite());
+        // same kernel structure again: a hit, same prediction
+        let r2 = svc.respond(r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        assert_eq!(r2.get_str("cache"), Some("hit"));
+        assert_eq!(r2.get_f64("predicted_s"), Some(pred));
+        // cross-check against a direct extraction + inner product
+        let suite = kernels::eval_suite(builtins().get("k40c").unwrap());
+        let case = suite
+            .iter()
+            .find(|c| c.label.starts_with("fd5/a/"))
+            .unwrap();
+        let props = extract(&case.kernel, &case.env, ExtractOpts::default()).unwrap();
+        let v = props.eval(&Schema::full(), &case.env).unwrap();
+        let expect = svc.store().get("k40c").unwrap().model.predict(&v);
+        assert_eq!(pred, expect);
+        let s = svc.summary();
+        assert_eq!((s.requests, s.errors, s.cache_hits, s.cache_misses), (2, 0, 1, 1));
+        assert!(s.min_extract_us.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn named_env_and_default_case() {
+        let svc = toy_service();
+        let r = svc.respond(r#"{"device": "k40c", "kernel": "fd5", "env": {"n": 4096}}"#);
+        assert!(r.get("error").is_none(), "{r}");
+        assert!(r.get("case").is_none(), "custom env has no case letter");
+        // default case is `a`
+        let r = svc.respond(r#"{"device": "k40c", "kernel": "fd5"}"#);
+        assert_eq!(r.get_str("case"), Some("a"));
+        // missing parameter is a per-request error, not a crash
+        let r = svc.respond(r#"{"device": "k40c", "kernel": "mm_skinny", "env": {"n": 512}}"#);
+        assert!(r.get_str("error").unwrap().contains("requires parameter"), "{r}");
+    }
+
+    #[test]
+    fn error_responses_echo_id_and_count() {
+        let svc = toy_service();
+        let r = svc.respond(r#"{"id": "q7", "device": "k40c", "kernel": "nope"}"#);
+        assert!(r.get_str("error").unwrap().contains("unknown kernel"), "{r}");
+        assert_eq!(r.get_str("id"), Some("q7"));
+        let r = svc.respond(r#"{"device": "quadro", "kernel": "fd5"}"#);
+        assert!(r.get_str("error").unwrap().contains("unknown device"), "{r}");
+        // device in registry but not in the store
+        let r = svc.respond(r#"{"device": "titan_x", "kernel": "fd5"}"#);
+        assert!(r.get_str("error").unwrap().contains("no fitted model"), "{r}");
+        let r = svc.respond("garbage");
+        assert!(r.get("error").is_some());
+        assert_eq!(svc.summary().errors, 4);
+    }
+
+    #[test]
+    fn batch_preserves_order_and_counts_batches() {
+        let svc = toy_service();
+        let lines: Vec<String> = (0..6)
+            .map(|i| {
+                let case = ["a", "b"][i % 2];
+                format!(r#"{{"id": {i}, "device": "k40c", "kernel": "fd5", "case": "{case}"}}"#)
+            })
+            .collect();
+        let out = svc.run_batch(lines);
+        assert_eq!(out.len(), 6);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.get_f64("id"), Some(i as f64), "{r}");
+        }
+        assert_eq!(svc.summary().batches, 1);
+    }
+
+    #[test]
+    fn serve_loop_roundtrips_ldjson() {
+        let svc = toy_service();
+        let input = "\n".to_string()
+            + r#"{"id": 1, "device": "k40c", "kernel": "nbody", "case": "a"}"#
+            + "\n"
+            + r#"{"id": 2, "device": "k40c", "kernel": "nbody", "case": "a"}"#
+            + "\n";
+        let mut out = Vec::new();
+        let summary = svc.serve(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let r1 = Json::parse(lines[0]).unwrap();
+        let r2 = Json::parse(lines[1]).unwrap();
+        assert_eq!(r1.get_str("cache"), Some("miss"));
+        assert_eq!(r2.get_str("cache"), Some("hit"));
+        assert_eq!(r1.get_f64("predicted_s"), r2.get_f64("predicted_s"));
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.cache_hits, 1);
+    }
+
+    #[test]
+    fn latency_buffer_stays_bounded_under_heavy_traffic() {
+        let mut buf = LatencyBuf::default();
+        for i in 0..10 * LATENCY_CAP {
+            buf.push(i as f64);
+        }
+        assert!(buf.samples.len() < LATENCY_CAP, "held {}", buf.samples.len());
+        assert!(buf.stride > 1, "decimation must have kicked in");
+        assert_eq!(buf.seen, (10 * LATENCY_CAP) as u64);
+        // below the cap, recording is exact
+        let mut small = LatencyBuf::default();
+        for i in 0..100 {
+            small.push(i as f64);
+        }
+        assert_eq!(small.samples.len(), 100);
+        // the service-side accessor reports the bounded count
+        let svc = toy_service();
+        svc.respond(r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        assert_eq!(svc.latency_samples_held(), 1);
+    }
+
+    #[test]
+    fn interactive_loop_answers_every_line_as_its_own_batch() {
+        let svc = toy_service();
+        let input = r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#.to_string()
+            + "\n"
+            + r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#
+            + "\n";
+        let mut out = Vec::new();
+        let summary = svc.serve_interactive(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        // each line was flushed as its own (size-1) batch — the
+        // conversational guarantee a blocking TCP client relies on
+        assert_eq!(summary.batches, 2);
+        assert_eq!(summary.requests, 2);
+    }
+
+    #[test]
+    fn oversized_inline_group_rejected_for_device() {
+        // r9_fury caps groups at 256; a 512-lane inline kernel must be
+        // rejected for it (after adding fury weights to the store)
+        let schema = Schema::full();
+        let mut weights = vec![0.0; schema.len()];
+        weights[schema.len() - 1] = 1e-6;
+        let model = Model {
+            device: "r9_fury".into(),
+            weights,
+            active: vec![schema.len() - 1],
+            train_rel_err_geomean: 0.1,
+            solver: "native-cholesky",
+        };
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(model, 45e-6, 300, builtins().get("r9_fury").unwrap()));
+        let svc =
+            Service::new(store, builtins().clone(), ServiceConfig::default()).unwrap();
+        let spec = r#"{"params": ["n"],
+            "dims": [{"iname": "g0", "tag": "group0", "hi": "n", "tiles": 512},
+                     {"iname": "l0", "tag": "local0", "hi": 512}],
+            "arrays": [{"name": "o", "dtype": "f32", "shape": ["n"], "output": true}],
+            "insns": [{"store": "o", "idx": ["512*g0 + l0"], "expr": {"lit": 1},
+                       "within": ["g0", "l0"]}]}"#;
+        let line = format!(r#"{{"device": "r9_fury", "lpir": {spec}, "env": {{"n": 8192}}}}"#);
+        let r = svc.respond(&line);
+        assert!(r.get_str("error").unwrap().contains("exceeds"), "{r}");
+    }
+}

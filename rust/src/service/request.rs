@@ -1,0 +1,175 @@
+//! Line-delimited JSON prediction requests.
+//!
+//! One request per line, one response per line, order preserved:
+//!
+//! ```json
+//! {"id": 1, "device": "k40c", "kernel": "fd5", "case": "b"}
+//! {"id": 2, "device": "titan_x", "kernel": "nbody", "env": {"n": 65536}}
+//! {"id": 3, "device": "p100", "lpir": { ...kernel spec... }, "env": {"n": 4096}}
+//! ```
+//!
+//! * `device` (required) — a registry device the model store holds
+//!   weights for.
+//! * `kernel` — a named evaluation-zoo kernel; combined with either
+//!   `case` (size-case letter `a`–`d`, default `a`) or an explicit
+//!   `env` binding all of the kernel's size parameters.
+//! * `lpir` — an inline kernel spec ([`super::spec`]); requires `env`.
+//! * `id` — any JSON value, echoed verbatim in the response.
+
+use super::spec;
+use crate::lpir::Kernel;
+use crate::util::json::Json;
+
+/// What a request asks to have predicted.
+#[derive(Clone, Debug)]
+pub enum KernelRef {
+    /// a named evaluation-zoo kernel (resolved against the device's
+    /// capability-derived suite)
+    Named { name: String, case: Option<String> },
+    /// an inline kernel spec
+    Inline(Box<Kernel>),
+}
+
+/// A parsed prediction request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// echoed back in the response (absent -> no `id` field emitted)
+    pub id: Option<Json>,
+    pub device: String,
+    pub kref: KernelRef,
+    /// explicit parameter binding (name -> value), if given
+    pub env: Option<Vec<(String, i64)>>,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad request JSON: {e}"))?;
+        Request::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        if !matches!(j, Json::Obj(_)) {
+            return Err("request must be a JSON object".into());
+        }
+        let device = j
+            .get_str("device")
+            .ok_or("request: missing 'device'")?
+            .to_string();
+        let env = match j.get("env") {
+            None => None,
+            Some(Json::Obj(m)) => {
+                let mut pairs = Vec::with_capacity(m.len());
+                for (k, v) in m {
+                    match v.as_i64() {
+                        Some(n) => pairs.push((k.clone(), n)),
+                        None => {
+                            return Err(format!(
+                                "request: env binding '{k}' must be an integer"
+                            ))
+                        }
+                    }
+                }
+                Some(pairs)
+            }
+            Some(_) => return Err("request: 'env' must be an object".into()),
+        };
+        let kref = match (j.get("kernel"), j.get("lpir")) {
+            (Some(_), Some(_)) => {
+                return Err("request: give either 'kernel' or 'lpir', not both".into())
+            }
+            (None, None) => {
+                return Err("request: missing 'kernel' (named) or 'lpir' (inline spec)".into())
+            }
+            (Some(k), None) => {
+                let name = k
+                    .as_str()
+                    .ok_or("request: 'kernel' must be a string name")?
+                    .to_string();
+                let case = match j.get("case") {
+                    None => None,
+                    Some(c) => Some(
+                        c.as_str()
+                            .ok_or("request: 'case' must be a string letter")?
+                            .to_string(),
+                    ),
+                };
+                if case.is_some() && env.is_some() {
+                    return Err("request: give either 'case' or 'env', not both".into());
+                }
+                KernelRef::Named { name, case }
+            }
+            (None, Some(l)) => {
+                if j.get("case").is_some() {
+                    return Err("request: 'case' only applies to named kernels".into());
+                }
+                if env.is_none() {
+                    return Err("request: inline 'lpir' kernels require 'env'".into());
+                }
+                KernelRef::Inline(Box::new(spec::kernel_from_json(l)?))
+            }
+        };
+        Ok(Request { id: j.get("id").cloned(), device, kref, env })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_case_request() {
+        let r = Request::parse(r#"{"id": 7, "device": "k40c", "kernel": "fd5", "case": "b"}"#)
+            .unwrap();
+        assert_eq!(r.device, "k40c");
+        assert_eq!(r.id, Some(Json::Num(7.0)));
+        match r.kref {
+            KernelRef::Named { name, case } => {
+                assert_eq!(name, "fd5");
+                assert_eq!(case.as_deref(), Some("b"));
+            }
+            _ => panic!("expected a named kernel"),
+        }
+        assert!(r.env.is_none());
+    }
+
+    #[test]
+    fn named_env_request() {
+        let r = Request::parse(r#"{"device": "titan_x", "kernel": "nbody", "env": {"n": 65536}}"#)
+            .unwrap();
+        assert!(r.id.is_none());
+        assert_eq!(r.env, Some(vec![("n".to_string(), 65536)]));
+    }
+
+    #[test]
+    fn inline_request_requires_env() {
+        let spec = r#"{"params": ["n"],
+            "dims": [{"iname": "g0", "tag": "group0", "hi": "n", "tiles": 64},
+                     {"iname": "l0", "tag": "local0", "hi": 64}],
+            "arrays": [{"name": "o", "dtype": "f32", "shape": ["n"], "output": true}],
+            "insns": [{"store": "o", "idx": ["64*g0 + l0"], "expr": {"lit": 1},
+                       "within": ["g0", "l0"]}]}"#;
+        let line = format!(r#"{{"device": "k40c", "lpir": {spec}, "env": {{"n": 4096}}}}"#);
+        let r = Request::parse(&line).unwrap();
+        assert!(matches!(r.kref, KernelRef::Inline(_)));
+        // missing env -> rejected
+        let line = format!(r#"{{"device": "k40c", "lpir": {spec}}}"#);
+        assert!(Request::parse(&line).unwrap_err().contains("require 'env'"));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("[1]").is_err());
+        assert!(Request::parse(r#"{"kernel": "fd5"}"#).unwrap_err().contains("device"));
+        assert!(Request::parse(r#"{"device": "k40c"}"#).unwrap_err().contains("kernel"));
+        assert!(Request::parse(
+            r#"{"device": "k40c", "kernel": "fd5", "case": "a", "env": {"n": 1}}"#
+        )
+        .unwrap_err()
+        .contains("not both"));
+        assert!(Request::parse(r#"{"device": "k40c", "kernel": "fd5", "env": {"n": 1.5}}"#)
+            .unwrap_err()
+            .contains("integer"));
+    }
+}

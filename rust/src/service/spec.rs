@@ -1,0 +1,533 @@
+//! Inline `lpir` kernel specs: a JSON encoding of [`Kernel`] so service
+//! clients can request predictions for kernels the library has never
+//! seen, without recompiling anything.
+//!
+//! ```json
+//! {
+//!   "name": "scale2",
+//!   "params": ["n"],
+//!   "dims": [
+//!     {"iname": "g0", "tag": "group0", "hi": "n", "tiles": 256},
+//!     {"iname": "l0", "tag": "local0", "hi": 256}
+//!   ],
+//!   "arrays": [
+//!     {"name": "a", "dtype": "f32", "shape": ["n"]},
+//!     {"name": "b", "dtype": "f32", "shape": ["n"], "output": true}
+//!   ],
+//!   "insns": [
+//!     {"store": "b", "idx": ["256*g0 + l0"],
+//!      "expr": {"mul": [{"lit": 2}, {"load": {"array": "a", "idx": ["256*g0 + l0"]}}]},
+//!      "within": ["g0", "l0"]}
+//!   ]
+//! }
+//! ```
+//!
+//! Index and shape entries are affine strings over parameters and
+//! inames (`"256*g0 + l0 - 1"`) or plain numbers. Expression objects
+//! carry exactly one operative key: `lit`, `idx`, `load`, the binary
+//! ops `add|sub|mul|div|pow|min|max` (a two-element array), the unary
+//! ops `neg|sqrt|rsqrt|exp|sin|cos|abs`, the reductions `sum|rmax`
+//! (`{"iname": ..., "body": ...}`) and `cast`
+//! (`{"dtype": ..., "expr": ...}`). The assembled kernel passes
+//! [`Kernel::validate`] before it is accepted.
+
+use crate::isl::{BoxDomain, CeilDiv, Dim};
+use crate::lpir::{
+    Access, ArrayDecl, BinOp, DType, Expr, IdxTag, Insn, Kernel, Layout, MemSpace, RedOp,
+    UnOp,
+};
+use crate::qpoly::LinExpr;
+use crate::util::json::Json;
+use crate::util::intern::Sym;
+use std::collections::BTreeMap;
+
+/// Parse an affine expression string: a `+`/`-` separated sum of terms,
+/// each a product of integers and at most one identifier.
+pub fn parse_affine(s: &str) -> Result<LinExpr, String> {
+    #[derive(PartialEq)]
+    enum Tok {
+        Num(i64),
+        Ident(String),
+        Plus,
+        Minus,
+        Star,
+    }
+    let mut toks = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b' ' | b'\t' => i += 1,
+            b'+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            b'*' => {
+                toks.push(Tok::Star);
+                i += 1;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let n: i64 = s[start..i]
+                    .parse()
+                    .map_err(|_| format!("affine '{s}': number out of range"))?;
+                toks.push(Tok::Num(n));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(s[start..i].to_string()));
+            }
+            c => return Err(format!("affine '{s}': unexpected character '{}'", c as char)),
+        }
+    }
+
+    if toks.is_empty() {
+        return Err(format!("empty affine expression '{s}'"));
+    }
+    let mut out = LinExpr::constant(0);
+    let mut pos = 0usize;
+    loop {
+        // sign
+        let mut sign = 1i64;
+        while pos < toks.len() && matches!(toks[pos], Tok::Plus | Tok::Minus) {
+            if toks[pos] == Tok::Minus {
+                sign = -sign;
+            }
+            pos += 1;
+        }
+        if pos >= toks.len() {
+            return Err(format!("affine '{s}': dangling sign"));
+        }
+        // term: factors joined by '*'
+        let mut coeff = 1i64;
+        let mut ident: Option<String> = None;
+        loop {
+            match &toks[pos] {
+                Tok::Num(n) => coeff = coeff.checked_mul(*n).ok_or("affine overflow")?,
+                Tok::Ident(name) => {
+                    if ident.is_some() {
+                        return Err(format!(
+                            "affine '{s}': product of two identifiers is not affine"
+                        ));
+                    }
+                    ident = Some(name.clone());
+                }
+                _ => return Err(format!("affine '{s}': expected a number or identifier")),
+            }
+            pos += 1;
+            if pos < toks.len() && toks[pos] == Tok::Star {
+                pos += 1;
+                if pos >= toks.len() {
+                    return Err(format!("affine '{s}': dangling '*'"));
+                }
+                continue;
+            }
+            break;
+        }
+        match ident {
+            Some(name) => out.add_term(name.as_str(), sign * coeff),
+            None => out = out.add(&LinExpr::constant(sign * coeff)),
+        }
+        if pos >= toks.len() {
+            break;
+        }
+        if !matches!(toks[pos], Tok::Plus | Tok::Minus) {
+            return Err(format!("affine '{s}': expected '+' or '-'"));
+        }
+    }
+    Ok(out)
+}
+
+/// An affine field: a string expression or a literal integer.
+fn affine_of(j: &Json, what: &str) -> Result<LinExpr, String> {
+    if let Json::Str(s) = j {
+        return parse_affine(s);
+    }
+    j.as_i64()
+        .map(LinExpr::constant)
+        .ok_or_else(|| format!("{what}: expected an affine string or integer, got {j}"))
+}
+
+fn int_of(j: &Json, what: &str) -> Result<i64, String> {
+    j.as_i64()
+        .ok_or_else(|| format!("{what}: expected an integer, got {j}"))
+}
+
+fn dtype_of(s: &str) -> Result<DType, String> {
+    match s {
+        "f32" => Ok(DType::F32),
+        "f64" => Ok(DType::F64),
+        "f32x4" => Ok(DType::F32x4),
+        "i32" => Ok(DType::I32),
+        other => Err(format!("unknown dtype '{other}' (f32|f64|f32x4|i32)")),
+    }
+}
+
+fn tag_of(s: &str) -> Result<IdxTag, String> {
+    match s {
+        "group0" => Ok(IdxTag::Group(0)),
+        "group1" => Ok(IdxTag::Group(1)),
+        "local0" => Ok(IdxTag::Local(0)),
+        "local1" => Ok(IdxTag::Local(1)),
+        "seq" => Ok(IdxTag::Seq),
+        "unroll" => Ok(IdxTag::Unroll),
+        other => Err(format!(
+            "unknown dim tag '{other}' (group0|group1|local0|local1|seq|unroll)"
+        )),
+    }
+}
+
+fn idx_list(j: Option<&Json>, what: &str) -> Result<Vec<LinExpr>, String> {
+    j.and_then(Json::as_arr)
+        .ok_or_else(|| format!("{what}: missing 'idx' array"))?
+        .iter()
+        .map(|e| affine_of(e, what))
+        .collect()
+}
+
+fn expr_of(j: &Json) -> Result<Expr, String> {
+    // conveniences: bare numbers are literals, bare strings affine
+    match j {
+        Json::Num(x) => return Ok(Expr::Lit(*x)),
+        Json::Str(s) => return Ok(Expr::Idx(parse_affine(s)?)),
+        Json::Obj(m) => {
+            if m.len() != 1 {
+                return Err(format!(
+                    "expression object must have exactly one operative key, got {j}"
+                ));
+            }
+        }
+        _ => return Err(format!("bad expression {j}")),
+    }
+    let (key, v) = match j {
+        Json::Obj(m) => m.iter().next().map(|(k, v)| (k.as_str(), v)).unwrap(),
+        _ => unreachable!(),
+    };
+    let bin = |op: BinOp, v: &Json| -> Result<Expr, String> {
+        let arr = v
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| format!("'{key}' expects a two-element array"))?;
+        Ok(Expr::bin(op, expr_of(&arr[0])?, expr_of(&arr[1])?))
+    };
+    let un = |op: UnOp, v: &Json| -> Result<Expr, String> { Ok(Expr::un(op, expr_of(v)?)) };
+    let red = |op: RedOp, v: &Json| -> Result<Expr, String> {
+        let iname = v
+            .get_str("iname")
+            .ok_or_else(|| format!("'{key}' expects {{\"iname\", \"body\"}}"))?;
+        let body = v
+            .get("body")
+            .ok_or_else(|| format!("'{key}' expects {{\"iname\", \"body\"}}"))?;
+        Ok(Expr::Reduce(op, Sym::intern(iname), Box::new(expr_of(body)?)))
+    };
+    match key {
+        "lit" => Ok(Expr::Lit(v.as_f64().ok_or("'lit' expects a number")?)),
+        "idx" => Ok(Expr::Idx(affine_of(v, "'idx'")?)),
+        "load" => {
+            let array = v.get_str("array").ok_or("'load' expects {\"array\", \"idx\"}")?;
+            Ok(Expr::Load(Access {
+                array: Sym::intern(array),
+                idx: idx_list(v.get("idx"), "'load'")?,
+            }))
+        }
+        "add" => bin(BinOp::Add, v),
+        "sub" => bin(BinOp::Sub, v),
+        "mul" => bin(BinOp::Mul, v),
+        "div" => bin(BinOp::Div, v),
+        "pow" => bin(BinOp::Pow, v),
+        "min" => bin(BinOp::Min, v),
+        "max" => bin(BinOp::Max, v),
+        "neg" => un(UnOp::Neg, v),
+        "sqrt" => un(UnOp::Sqrt, v),
+        "rsqrt" => un(UnOp::Rsqrt, v),
+        "exp" => un(UnOp::Exp, v),
+        "sin" => un(UnOp::Sin, v),
+        "cos" => un(UnOp::Cos, v),
+        "abs" => un(UnOp::Abs, v),
+        "sum" => red(RedOp::Sum, v),
+        "rmax" => red(RedOp::Max, v),
+        "cast" => {
+            let dt = dtype_of(v.get_str("dtype").ok_or("'cast' expects {\"dtype\", \"expr\"}")?)?;
+            let inner = v.get("expr").ok_or("'cast' expects {\"dtype\", \"expr\"}")?;
+            Ok(Expr::cast(dt, expr_of(inner)?))
+        }
+        other => Err(format!("unknown expression key '{other}'")),
+    }
+}
+
+/// Parse a full kernel spec (see module docs) and validate it.
+pub fn kernel_from_json(j: &Json) -> Result<Kernel, String> {
+    let name = j.get_str("name").unwrap_or("inline").to_string();
+    let params: Vec<Sym> = j
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or("kernel spec: missing 'params' array")?
+        .iter()
+        .map(|p| {
+            p.as_str()
+                .map(Sym::intern)
+                .ok_or_else(|| "kernel spec: params must be strings".to_string())
+        })
+        .collect::<Result<_, _>>()?;
+
+    let mut dims = Vec::new();
+    let mut tags: BTreeMap<Sym, IdxTag> = BTreeMap::new();
+    for d in j
+        .get("dims")
+        .and_then(Json::as_arr)
+        .ok_or("kernel spec: missing 'dims' array")?
+    {
+        let iname = d.get_str("iname").ok_or("dim: missing 'iname'")?;
+        let hi = affine_of(d.get("hi").ok_or_else(|| format!("dim '{iname}': missing 'hi'"))?,
+            &format!("dim '{iname}' hi"))?;
+        let tiles = match d.get("tiles") {
+            Some(t) => int_of(t, &format!("dim '{iname}' tiles"))?,
+            None => 1,
+        };
+        let step = match d.get("step") {
+            Some(t) => int_of(t, &format!("dim '{iname}' step"))?,
+            None => 1,
+        };
+        if tiles < 1 || step < 1 {
+            return Err(format!("dim '{iname}': tiles and step must be >= 1"));
+        }
+        dims.push(Dim {
+            name: Sym::intern(iname),
+            lo: LinExpr::constant(0),
+            hi: CeilDiv::new(hi, tiles),
+            step,
+        });
+        let tag = match d.get("tag") {
+            Some(t) => tag_of(t.as_str().ok_or_else(|| format!("dim '{iname}': bad tag"))?)?,
+            None => IdxTag::Seq,
+        };
+        tags.insert(Sym::intern(iname), tag);
+    }
+
+    let mut arrays = Vec::new();
+    for a in j
+        .get("arrays")
+        .and_then(Json::as_arr)
+        .ok_or("kernel spec: missing 'arrays' array")?
+    {
+        let aname = a.get_str("name").ok_or("array: missing 'name'")?;
+        let shape = a
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("array '{aname}': missing 'shape'"))?
+            .iter()
+            .map(|s| affine_of(s, &format!("array '{aname}' shape")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let space = match a.get_str("space").unwrap_or("global") {
+            "global" => MemSpace::Global,
+            "local" => MemSpace::Local,
+            "private" => MemSpace::Private,
+            other => {
+                return Err(format!(
+                    "array '{aname}': unknown space '{other}' (global|local|private)"
+                ))
+            }
+        };
+        let layout = match a.get_str("layout").unwrap_or("row") {
+            "row" => Layout::RowMajor,
+            "col" => Layout::ColMajor,
+            other => return Err(format!("array '{aname}': unknown layout '{other}' (row|col)")),
+        };
+        arrays.push(ArrayDecl {
+            name: Sym::intern(aname),
+            dtype: dtype_of(a.get_str("dtype").unwrap_or("f32"))?,
+            shape,
+            space,
+            layout,
+            is_output: a.get("output").and_then(Json::as_bool).unwrap_or(false),
+        });
+    }
+
+    let mut insns = Vec::new();
+    for (id, ij) in j
+        .get("insns")
+        .and_then(Json::as_arr)
+        .ok_or("kernel spec: missing 'insns' array")?
+        .iter()
+        .enumerate()
+    {
+        let store = ij.get_str("store").ok_or_else(|| format!("insn {id}: missing 'store'"))?;
+        let within = ij
+            .get("within")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("insn {id}: missing 'within' array"))?
+            .iter()
+            .map(|w| {
+                w.as_str()
+                    .map(Sym::intern)
+                    .ok_or_else(|| format!("insn {id}: 'within' entries must be strings"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let deps = match ij.get("deps").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|d| int_of(d, &format!("insn {id} deps")).map(|x| x as usize))
+                .collect::<Result<Vec<_>, _>>()?,
+            None => Vec::new(),
+        };
+        insns.push(Insn {
+            id,
+            lhs: Access {
+                array: Sym::intern(store),
+                idx: idx_list(ij.get("idx"), &format!("insn {id}"))?,
+            },
+            rhs: expr_of(ij.get("expr").ok_or_else(|| format!("insn {id}: missing 'expr'"))?)?,
+            within,
+            deps,
+            is_update: ij.get("update").and_then(Json::as_bool).unwrap_or(false),
+        });
+    }
+
+    let k = Kernel { name, params, domain: BoxDomain::new(dims), tags, arrays, insns };
+    k.validate()?;
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qpoly::env;
+
+    #[test]
+    fn affine_parser_basics() {
+        let e = parse_affine("256*g0 + l0").unwrap();
+        assert_eq!(e.eval(&env(&[("g0", 3), ("l0", 5)])).unwrap(), 773);
+        let e = parse_affine("2*n - 1").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 10)])).unwrap(), 19);
+        let e = parse_affine("-n + 4").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 1)])).unwrap(), 3);
+        let e = parse_affine("n*3").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 2)])).unwrap(), 6);
+        assert_eq!(parse_affine("42").unwrap(), LinExpr::constant(42));
+        // repeated terms fold
+        let e = parse_affine("n + n").unwrap();
+        assert_eq!(e.eval(&env(&[("n", 5)])).unwrap(), 10);
+    }
+
+    #[test]
+    fn affine_parser_rejects_nonaffine() {
+        assert!(parse_affine("n*m").is_err());
+        assert!(parse_affine("n +").is_err());
+        assert!(parse_affine("2 *").is_err());
+        assert!(parse_affine("").is_err());
+        assert!(parse_affine("n / 2").is_err());
+    }
+
+    fn scale_spec() -> Json {
+        Json::parse(
+            r#"{
+                "name": "scale2", "params": ["n"],
+                "dims": [
+                    {"iname": "g0", "tag": "group0", "hi": "n", "tiles": 256},
+                    {"iname": "l0", "tag": "local0", "hi": 256}
+                ],
+                "arrays": [
+                    {"name": "a", "dtype": "f32", "shape": ["n"]},
+                    {"name": "b", "dtype": "f32", "shape": ["n"], "output": true}
+                ],
+                "insns": [
+                    {"store": "b", "idx": ["256*g0 + l0"],
+                     "expr": {"mul": [{"lit": 2}, {"load": {"array": "a", "idx": ["256*g0 + l0"]}}]},
+                     "within": ["g0", "l0"]}
+                ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scale_kernel_parses_and_matches_builder() {
+        use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+        let k = kernel_from_json(&scale_spec()).unwrap();
+        let built = KernelBuilder::new("scale2", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 256)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(256)]),
+                Expr::mul(Expr::lit(2.0), Expr::load("a", vec![gid_lin_1d(256)])),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        // structurally identical to the builder-made kernel
+        assert_eq!(
+            super::super::hash::structural_hash(&k),
+            super::super::hash::structural_hash(&built)
+        );
+        let e = env(&[("n", 1024)]);
+        assert_eq!(k.group_count_at(&e).unwrap(), 4);
+        assert_eq!(k.group_size_at(&e).unwrap(), (256, 1));
+    }
+
+    #[test]
+    fn reduction_and_cast_specs_parse() {
+        let j = Json::parse(
+            r#"{
+                "name": "dotk", "params": ["n", "k"],
+                "dims": [
+                    {"iname": "g0", "tag": "group0", "hi": "n", "tiles": 128},
+                    {"iname": "l0", "tag": "local0", "hi": 128},
+                    {"iname": "r", "hi": "k"}
+                ],
+                "arrays": [
+                    {"name": "a", "dtype": "f64", "shape": ["n", "k"]},
+                    {"name": "o", "dtype": "f64", "shape": ["n"], "output": true}
+                ],
+                "insns": [
+                    {"store": "o", "idx": ["128*g0 + l0"],
+                     "expr": {"sum": {"iname": "r",
+                        "body": {"cast": {"dtype": "f64", "expr":
+                            {"load": {"array": "a", "idx": ["128*g0 + l0", "r"]}}}}}},
+                     "within": ["g0", "l0"]}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let k = kernel_from_json(&j).unwrap();
+        assert_eq!(k.insns[0].rhs.reduction_inames(), vec![Sym::intern("r")]);
+        let e = env(&[("n", 256), ("k", 8)]);
+        assert_eq!(k.insn_domain(&k.insns[0], true).count_at(&e).unwrap(), 2048);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_context() {
+        // unknown array in an access
+        let mut bad = scale_spec();
+        if let Json::Obj(m) = &mut bad {
+            m.insert(
+                "insns".into(),
+                Json::parse(
+                    r#"[{"store": "nope", "idx": ["l0"], "expr": {"lit": 1}, "within": ["g0", "l0"]}]"#,
+                )
+                .unwrap(),
+            );
+        }
+        assert!(kernel_from_json(&bad).unwrap_err().contains("nope"));
+        // unknown dtype
+        let bad = Json::parse(r#"{"params": [], "dims": [], "arrays": [{"name": "a", "dtype": "f16", "shape": [4]}], "insns": []}"#).unwrap();
+        assert!(kernel_from_json(&bad).unwrap_err().contains("f16"));
+        // ambiguous expression object
+        assert!(expr_of(&Json::parse(r#"{"lit": 1, "idx": "n"}"#).unwrap()).is_err());
+        // unknown operator
+        assert!(expr_of(&Json::parse(r#"{"mod": [1, 2]}"#).unwrap()).is_err());
+    }
+}

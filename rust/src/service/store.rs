@@ -1,0 +1,417 @@
+//! Persisted model artifacts: fitted per-device weight tables that can
+//! be saved once (`uniperf fit --save models.json`) and queried millions
+//! of times (`predict`/`serve`) without re-running a measurement
+//! campaign.
+//!
+//! Each stored model carries three fingerprints so a stale artifact is
+//! rejected instead of silently answering with wrong weights:
+//!
+//! * the **schema** fingerprint ([`crate::stats::Schema::fingerprint`]) —
+//!   weight indices are meaningless if the property column layout moved;
+//! * the **profile** fingerprint — the exact device profile the campaign
+//!   ran against (any hardware-parameter edit invalidates the fit);
+//! * the **suite** fingerprint — the capability-derived measurement
+//!   suite (kernel structures, group shapes, size cases) the weights
+//!   were fitted on.
+//!
+//! [`ModelStore::validate_against`] recomputes all three against the
+//! *current* registry/schema at load time; `serve`/`predict` refuse to
+//! start on any mismatch.
+
+use crate::gpusim::DeviceProfile;
+use crate::kernels;
+use crate::perfmodel::Model;
+use crate::stats::{ExtractOpts, Schema};
+use crate::util::fnv::Fnv64;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// The artifact format this build writes and reads.
+pub const FORMAT: &str = "uniperf-models-v1";
+
+/// Digest of a device profile (exact JSON form, every field).
+pub fn profile_fingerprint(p: &DeviceProfile) -> String {
+    let mut h = Fnv64::new();
+    h.write_str(&p.to_json().compact());
+    h.hex()
+}
+
+/// Digest of the capability-derived measurement suite for a profile:
+/// per case, the label, group shape, the parameter-binding digest
+/// ([`super::cache::env_fingerprint`]) and the structural kernel hash.
+pub fn suite_fingerprint(p: &DeviceProfile) -> String {
+    let mut h = Fnv64::new();
+    let cases = kernels::measurement_suite(p);
+    h.write_u64(cases.len() as u64);
+    for case in &cases {
+        h.write_str(&case.label);
+        h.write_i64(case.group.0);
+        h.write_i64(case.group.1);
+        h.write_u64(super::cache::env_fingerprint(&case.env));
+        h.write_u64(super::hash::structural_hash(&case.kernel));
+    }
+    h.hex()
+}
+
+/// One device's persisted fit.
+#[derive(Clone, Debug)]
+pub struct StoredModel {
+    pub model: Model,
+    pub launch_overhead_s: f64,
+    pub n_measurement_cases: usize,
+    pub profile_fp: String,
+    pub suite_fp: String,
+}
+
+impl StoredModel {
+    /// Assemble from a fitted model + the profile it was fitted on.
+    pub fn new(
+        model: Model,
+        launch_overhead_s: f64,
+        n_measurement_cases: usize,
+        profile: &DeviceProfile,
+    ) -> StoredModel {
+        StoredModel {
+            model,
+            launch_overhead_s,
+            n_measurement_cases,
+            profile_fp: profile_fingerprint(profile),
+            suite_fp: suite_fingerprint(profile),
+        }
+    }
+
+    pub fn device(&self) -> &str {
+        &self.model.device
+    }
+}
+
+/// A set of persisted per-device models (the `models.json` artifact).
+#[derive(Clone, Debug)]
+pub struct ModelStore {
+    /// fingerprint of the schema the weight vectors are laid out in
+    pub schema_fp: String,
+    /// the extraction options every model in this store was fitted
+    /// under — serving with different options would evaluate property
+    /// vectors the weights were never fitted against, so the service
+    /// refuses a mismatch at construction
+    pub extract: ExtractOpts,
+    models: Vec<StoredModel>,
+}
+
+impl ModelStore {
+    pub fn new(schema: &Schema, extract: ExtractOpts) -> ModelStore {
+        ModelStore { schema_fp: schema.fingerprint(), extract, models: Vec::new() }
+    }
+
+    /// Add or replace (by device name) a stored model.
+    pub fn insert(&mut self, sm: StoredModel) {
+        match self.models.iter_mut().find(|m| m.device() == sm.device()) {
+            Some(slot) => *slot = sm,
+            None => self.models.push(sm),
+        }
+    }
+
+    pub fn get(&self, device: &str) -> Option<&StoredModel> {
+        self.models.iter().find(|m| m.device() == device)
+    }
+
+    pub fn devices(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.device().to_string()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Staleness validation: every stored model's device must exist in
+    /// `registry` with an *identical* profile fingerprint, its suite
+    /// fingerprint must match the suite that profile derives today, and
+    /// the schema fingerprint must match `schema`. Errors name the
+    /// first offending device and fingerprint kind.
+    pub fn validate_against(
+        &self,
+        registry: &crate::gpusim::DeviceRegistry,
+        schema: &Schema,
+    ) -> Result<(), String> {
+        if self.schema_fp != schema.fingerprint() {
+            return Err(format!(
+                "model artifact is stale: schema fingerprint {} does not match the \
+                 current property schema {} — re-run `fit --save`",
+                self.schema_fp,
+                schema.fingerprint()
+            ));
+        }
+        for sm in &self.models {
+            let profile = registry.get(sm.device()).ok_or_else(|| {
+                format!(
+                    "model artifact references unknown device '{}' (not in the registry)",
+                    sm.device()
+                )
+            })?;
+            if sm.profile_fp != profile_fingerprint(profile) {
+                return Err(format!(
+                    "model artifact for '{}' is stale: device profile changed since the \
+                     fit (fingerprint {} vs current {}) — re-run `fit --save`",
+                    sm.device(),
+                    sm.profile_fp,
+                    profile_fingerprint(profile)
+                ));
+            }
+            let current_suite = suite_fingerprint(profile);
+            if sm.suite_fp != current_suite {
+                return Err(format!(
+                    "model artifact for '{}' is stale: measurement suite changed since \
+                     the fit (fingerprint {} vs current {}) — re-run `fit --save`",
+                    sm.device(),
+                    sm.suite_fp,
+                    current_suite
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self, schema: &Schema) -> Json {
+        // exhaustive destructure: a future ExtractOpts field fails to
+        // compile here instead of being silently dropped from the
+        // artifact (and from the staleness gate that reads it back)
+        let ExtractOpts { collapse_utilization, bin_local_strides } = self.extract;
+        Json::obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("schema_fp", Json::Str(self.schema_fp.clone())),
+            (
+                "extract",
+                Json::obj(vec![
+                    ("collapse_utilization", Json::Bool(collapse_utilization)),
+                    ("bin_local_strides", Json::Bool(bin_local_strides)),
+                ]),
+            ),
+            (
+                "models",
+                Json::Arr(
+                    self.models
+                        .iter()
+                        .map(|sm| {
+                            Json::obj(vec![
+                                ("device", Json::Str(sm.device().to_string())),
+                                ("profile_fp", Json::Str(sm.profile_fp.clone())),
+                                ("suite_fp", Json::Str(sm.suite_fp.clone())),
+                                ("launch_overhead_s", Json::Num(sm.launch_overhead_s)),
+                                (
+                                    "n_measurement_cases",
+                                    Json::Num(sm.n_measurement_cases as f64),
+                                ),
+                                ("model", sm.model.to_json(schema)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json, schema: &Schema) -> Result<ModelStore, String> {
+        // the version tag gates loading, so a future v2 artifact fails
+        // with a clear message instead of a fingerprint riddle
+        match j.get_str("format") {
+            Some(FORMAT) => {}
+            Some(other) => {
+                return Err(format!(
+                    "unsupported model artifact format '{other}' (this build reads \
+                     '{FORMAT}')"
+                ))
+            }
+            None => return Err(format!("model artifact: missing 'format' (expected '{FORMAT}')")),
+        }
+        let schema_fp = j
+            .get_str("schema_fp")
+            .ok_or("model artifact: missing 'schema_fp'")?
+            .to_string();
+        let ej = j.get("extract").ok_or("model artifact: missing 'extract' options")?;
+        let extract_flag = |key: &str| -> Result<bool, String> {
+            ej.get(key)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("model artifact: missing boolean 'extract.{key}'"))
+        };
+        let extract = ExtractOpts {
+            collapse_utilization: extract_flag("collapse_utilization")?,
+            bin_local_strides: extract_flag("bin_local_strides")?,
+        };
+        let mut store = ModelStore { schema_fp, extract, models: Vec::new() };
+        for entry in j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or("model artifact: missing 'models' array")?
+        {
+            let device = entry
+                .get_str("device")
+                .ok_or("model artifact entry: missing 'device'")?;
+            let model = Model::from_json(
+                entry.get("model").ok_or("model artifact entry: missing 'model'")?,
+                schema,
+            )?;
+            if model.device != device {
+                return Err(format!(
+                    "model artifact entry for '{device}' wraps a model fitted for '{}'",
+                    model.device
+                ));
+            }
+            store.insert(StoredModel {
+                model,
+                launch_overhead_s: entry
+                    .get_f64("launch_overhead_s")
+                    .ok_or("model artifact entry: missing 'launch_overhead_s'")?,
+                n_measurement_cases: entry
+                    .get_i64("n_measurement_cases")
+                    .filter(|n| *n >= 0)
+                    .ok_or(
+                        "model artifact entry: 'n_measurement_cases' must be a \
+                         non-negative integer",
+                    )? as usize,
+                profile_fp: entry
+                    .get_str("profile_fp")
+                    .ok_or("model artifact entry: missing 'profile_fp'")?
+                    .to_string(),
+                suite_fp: entry
+                    .get_str("suite_fp")
+                    .ok_or("model artifact entry: missing 'suite_fp'")?
+                    .to_string(),
+            });
+        }
+        Ok(store)
+    }
+
+    /// Write the artifact to disk (pretty JSON, diff-friendly).
+    pub fn save(&self, path: &Path, schema: &Schema) -> Result<(), String> {
+        std::fs::write(path, self.to_json(schema).pretty())
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load an artifact from disk (no staleness validation yet; call
+    /// [`ModelStore::validate_against`] before serving from it).
+    pub fn load(path: &Path, schema: &Schema) -> Result<ModelStore, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let doc =
+            Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        ModelStore::from_json(&doc, schema)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::registry::builtins;
+
+    fn toy_model(device: &str, schema: &Schema) -> Model {
+        let mut weights = vec![0.0; schema.len()];
+        weights[0] = 1.5e-9;
+        weights[schema.len() - 1] = 2.0e-6;
+        Model {
+            device: device.into(),
+            weights,
+            active: vec![0, schema.len() - 1],
+            train_rel_err_geomean: 0.12,
+            solver: "native-cholesky",
+        }
+    }
+
+    #[test]
+    fn store_roundtrip_preserves_predictions_bit_exactly() {
+        let schema = Schema::full();
+        let profile = builtins().get("k40c").unwrap();
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(toy_model("k40c", &schema), 8e-6, 400, profile));
+        let text = store.to_json(&schema).pretty();
+        let back = ModelStore::from_json(&Json::parse(&text).unwrap(), &schema).unwrap();
+        assert_eq!(back.devices(), vec!["k40c".to_string()]);
+        let (a, b) = (store.get("k40c").unwrap(), back.get("k40c").unwrap());
+        assert_eq!(a.model.weights, b.model.weights);
+        assert_eq!(a.profile_fp, b.profile_fp);
+        assert_eq!(a.suite_fp, b.suite_fp);
+        // serialization is a fixed point: re-emitting the loaded store
+        // reproduces the artifact byte for byte
+        assert_eq!(text, back.to_json(&schema).pretty());
+        back.validate_against(builtins(), &schema).unwrap();
+    }
+
+    #[test]
+    fn stale_profile_and_suite_are_rejected() {
+        let schema = Schema::full();
+        let profile = builtins().get("k40c").unwrap();
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(toy_model("k40c", &schema), 8e-6, 400, profile));
+
+        // tampered profile fingerprint
+        let mut bad = store.clone();
+        bad.models[0].profile_fp = "0000000000000000".into();
+        let e = bad.validate_against(builtins(), &schema).unwrap_err();
+        assert!(e.contains("profile changed"), "{e}");
+
+        // tampered suite fingerprint
+        let mut bad = store.clone();
+        bad.models[0].suite_fp = "0000000000000000".into();
+        let e = bad.validate_against(builtins(), &schema).unwrap_err();
+        assert!(e.contains("suite changed"), "{e}");
+
+        // unknown device
+        let mut bad = store.clone();
+        bad.models[0].model.device = "gtx480".into();
+        let e = bad.validate_against(builtins(), &schema).unwrap_err();
+        assert!(e.contains("unknown device"), "{e}");
+
+        // schema drift
+        let mut bad = store;
+        bad.schema_fp = "0000000000000000".into();
+        let e = bad.validate_against(builtins(), &schema).unwrap_err();
+        assert!(e.contains("schema fingerprint"), "{e}");
+    }
+
+    #[test]
+    fn unknown_artifact_formats_are_rejected_at_load() {
+        let schema = Schema::full();
+        let profile = builtins().get("k40c").unwrap();
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(toy_model("k40c", &schema), 8e-6, 400, profile));
+        let good = store.to_json(&schema).pretty();
+        // a v2 artifact fails with a format message, not a fingerprint one
+        let v2 = good.replace("uniperf-models-v1", "uniperf-models-v2");
+        let e = ModelStore::from_json(&Json::parse(&v2).unwrap(), &schema).unwrap_err();
+        assert!(e.contains("uniperf-models-v2") && e.contains("format"), "{e}");
+        // and a tagless blob is refused too
+        let tagless = good.replace("\"format\": \"uniperf-models-v1\",", "");
+        let e = ModelStore::from_json(&Json::parse(&tagless).unwrap(), &schema).unwrap_err();
+        assert!(e.contains("format"), "{e}");
+    }
+
+    #[test]
+    fn fingerprints_react_to_profile_edits() {
+        let p = builtins().get("titan_x").unwrap().clone();
+        let base_p = profile_fingerprint(&p);
+        let base_s = suite_fingerprint(&p);
+        let mut edited = p.clone();
+        edited.dram_bw *= 1.01;
+        assert_ne!(base_p, profile_fingerprint(&edited));
+        // the suite is capability-derived: a group-cap change reshapes it
+        let mut capped = p;
+        capped.max_group_size = 256;
+        assert_ne!(base_s, suite_fingerprint(&capped));
+    }
+
+    #[test]
+    fn insert_replaces_by_device() {
+        let schema = Schema::full();
+        let profile = builtins().get("k40c").unwrap();
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(toy_model("k40c", &schema), 8e-6, 400, profile));
+        let mut m2 = toy_model("k40c", &schema);
+        m2.weights[0] = 9e-9;
+        store.insert(StoredModel::new(m2, 9e-6, 410, profile));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get("k40c").unwrap().model.weights[0], 9e-9);
+    }
+}

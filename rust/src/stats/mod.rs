@@ -151,10 +151,28 @@ impl Schema {
     pub fn index_of(&self, p: &Prop) -> Option<usize> {
         self.index.get(p).copied()
     }
+
+    /// Process-independent digest of the property ordering (length +
+    /// every label, in order). Persisted model artifacts
+    /// ([`crate::service::store`]) record this so that weight vectors
+    /// are never applied against a schema whose column layout changed.
+    pub fn fingerprint(&self) -> String {
+        let mut h = crate::util::fnv::Fnv64::new();
+        h.write_u64(self.props.len() as u64);
+        for p in &self.props {
+            h.write_str(&p.label());
+        }
+        h.hex()
+    }
 }
 
-/// Extraction options (ablations).
-#[derive(Clone, Copy, Debug, Default)]
+/// Extraction options (ablations). `Eq`/`Ord` because persisted model
+/// artifacts record the options they were fitted under and the serving
+/// layer refuses a mismatch ([`crate::service::store`]), and the
+/// service's props cache embeds the whole struct in its map key — a
+/// future option field then extends the key automatically instead of
+/// silently aliasing entries ([`crate::service::cache`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ExtractOpts {
     /// collapse utilization-ratio classes onto the fully-utilized class
     /// of the same stride (ablation A2)
@@ -801,6 +819,20 @@ mod tests {
             v[schema.index_of(&Prop::LocalLoadConflict { bits: 32 }).unwrap()],
             4096.0
         );
+    }
+
+    #[test]
+    fn schema_fingerprint_stable_and_layout_sensitive() {
+        let a = Schema::full().fingerprint();
+        let b = Schema::full().fingerprint();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        // a schema with a different column layout fingerprints differently
+        let mut props = Schema::full().props().to_vec();
+        props.swap(0, 1);
+        let index = props.iter().cloned().enumerate().map(|(i, p)| (p, i)).collect();
+        let swapped = Schema { props, index };
+        assert_ne!(a, swapped.fingerprint());
     }
 
     #[test]

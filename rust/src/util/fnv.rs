@@ -1,0 +1,114 @@
+//! FNV-1a 64-bit hashing, as a tiny incremental writer.
+//!
+//! Used wherever the repo needs a *stable, process-independent* digest
+//! of structured data: the service layer's structural kernel hash
+//! ([`crate::service::hash`]), the model-artifact fingerprints
+//! ([`crate::service::store`]) and the property-schema fingerprint
+//! ([`crate::stats::Schema::fingerprint`]). `std::hash::Hasher`
+//! implementations (SipHash) are randomly keyed per process and so
+//! cannot be persisted; FNV-1a over an explicit byte encoding can.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const PRIME: u64 = 0x100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64(OFFSET)
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(PRIME);
+        }
+        self
+    }
+
+    /// Hash a string *with* its length prefix, so consecutive strings
+    /// cannot alias ("ab","c" vs "a","bc").
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes())
+    }
+
+    pub fn write_u64(&mut self, x: u64) -> &mut Self {
+        self.write_bytes(&x.to_le_bytes())
+    }
+
+    pub fn write_i64(&mut self, x: i64) -> &mut Self {
+        self.write_bytes(&x.to_le_bytes())
+    }
+
+    pub fn write_u8(&mut self, x: u8) -> &mut Self {
+        self.write_bytes(&[x])
+    }
+
+    /// Hash an `f64` by bit pattern (exact, round-trip stable).
+    pub fn write_f64(&mut self, x: f64) -> &mut Self {
+        self.write_u64(x.to_bits())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// The digest as fixed-width lowercase hex (fingerprint form).
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// One-shot digest of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn length_prefix_prevents_aliasing() {
+        let mut a = Fnv64::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        assert_eq!(Fnv64::new().hex().len(), 16);
+        let mut h = Fnv64::new();
+        h.write_u64(7);
+        assert_eq!(h.hex().len(), 16);
+    }
+
+    #[test]
+    fn f64_bit_exact() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.1 + 0.2);
+        let mut b = Fnv64::new();
+        b.write_f64(0.3);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -52,6 +52,25 @@ impl Json {
         }
     }
 
+    /// Integer value of a JSON number: `Some` only when the value is
+    /// integral and exactly representable (|x| < 2^53), so the cast can
+    /// neither truncate a fraction nor round a too-large magnitude.
+    /// The shared coercion for every loader that reads integer fields
+    /// (kernel specs, request envs, profile override tables).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && x.abs() < 9_007_199_254_740_992.0 => {
+                Some(*x as i64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Integer object field (see [`Json::as_i64`] for the coercion).
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Json::as_i64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -144,10 +163,14 @@ impl Json {
     }
 
     /// Parse a JSON document (must consume all non-whitespace input).
+    /// Nesting is capped at [`MAX_DEPTH`]: the parser is recursive
+    /// descent, and untrusted input (the prediction service reads
+    /// request lines off sockets) must produce an `Err`, not a stack
+    /// overflow that aborts the process.
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.i != p.b.len() {
             return Err(format!("trailing data at byte {}", p.i));
@@ -178,6 +201,14 @@ impl fmt::Display for Json {
     }
 }
 
+/// Maximum container nesting [`Json::parse`] accepts. Far above any
+/// legitimate document in this repo (campaigns, model artifacts,
+/// kernel specs nest a handful of levels; expression trees a few
+/// dozen) and far below the thread-stack budget of the recursive
+/// parser and the recursive consumers downstream of it
+/// (`service::spec::expr_of`, `service::hash`).
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -203,11 +234,14 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.i));
+        }
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -293,7 +327,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
@@ -302,7 +336,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(v));
         }
         loop {
-            v.push(self.value()?);
+            v.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => {
@@ -317,7 +351,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -330,7 +364,7 @@ impl<'a> Parser<'a> {
             let k = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             m.insert(k, v);
             self.skip_ws();
             match self.peek() {
@@ -385,6 +419,19 @@ mod tests {
     }
 
     #[test]
+    fn nesting_is_depth_capped_not_stack_overflowed() {
+        // far past the cap: a clean error, not a process abort
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.contains("nesting"), "{e}");
+        let deep_obj = "{\"a\":".repeat(5_000) + "1" + &"}".repeat(5_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // comfortably nested documents still parse
+        let ok = "[".repeat(40) + "1" + &"]".repeat(40);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
     fn rejects_trailing_garbage() {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1,]").is_err());
@@ -405,5 +452,19 @@ mod tests {
         assert_eq!(v.get_f64("b"), None);
         assert_eq!(v.get_str("missing"), None);
         assert_eq!(Json::Num(1.0).get_f64("a"), None);
+        assert_eq!(v.get_i64("a"), Some(2));
+        assert_eq!(v.get_i64("b"), None);
+    }
+
+    #[test]
+    fn as_i64_rejects_fractions_and_unrepresentable_magnitudes() {
+        assert_eq!(Json::Num(42.0).as_i64(), Some(42));
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::Num(2.5).as_i64(), None);
+        assert_eq!(Json::Str("7".into()).as_i64(), None);
+        // 2^53 is the first integer whose neighbors alias in f64
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_i64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_i64(), Some(9_007_199_254_740_991));
+        assert_eq!(Json::Num(1e300).as_i64(), None);
     }
 }

@@ -21,6 +21,9 @@
 //! * [`intern`] — global symbol interner ([`intern::Sym`]) and dense
 //!   symbol-indexed environments ([`intern::Env`]); the substrate for
 //!   the compiled evaluation tapes in [`crate::qpoly::tape`].
+//! * [`fnv`] — FNV-1a 64-bit hashing for process-independent digests
+//!   (structural kernel hashes, model-artifact fingerprints).
+pub mod fnv;
 pub mod intern;
 pub mod rng;
 pub mod json;

@@ -18,7 +18,7 @@ fn random_profile(rng: &mut uniperf::util::rng::Rng, idx: u32) -> DeviceProfile 
     let names = registry::builtins().names();
     let pick = rng.range_u64(0, names.len() as u64) as usize;
     let base = registry::builtins().get(&names[pick]).unwrap().clone();
-    DeviceProfile {
+    let mut p = DeviceProfile {
         name: format!("rand_{idx}"),
         full_name: format!("Randomized {}", base.full_name),
         sms: rng.range_u64(1, 200) as u32,
@@ -49,7 +49,16 @@ fn random_profile(rng: &mut uniperf::util::rng::Rng, idx: u32) -> DeviceProfile 
         second_run_sigma: gen_f64(rng, 0.02, 0.2),
         irregularity: gen_f64(rng, 0.0, 0.5),
         uncoalesced_penalty: gen_f64(rng, 1.0, 2.0),
+        size_exp: std::collections::BTreeMap::new(),
+    };
+    // half the profiles opt into a per-class size-exponent override, so
+    // the round-trip property covers the optional table too
+    if rng.range_u64(0, 2) == 1 {
+        let classes = uniperf::gpusim::device::SIZE_EXP_CLASSES;
+        let class = classes[rng.range_u64(0, classes.len() as u64) as usize];
+        p.size_exp.insert(class.to_string(), rng.range_u64(1, 27) as i64);
     }
+    p
 }
 
 #[test]

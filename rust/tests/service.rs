@@ -1,0 +1,265 @@
+//! End-to-end tests of the prediction service: the `fit --save` →
+//! `predict --models` round trip (pinned bit-identical to the
+//! in-memory pipeline), artifact staleness rejection, structural cache
+//! sharing across renamed inline kernels, and concurrent store/cache
+//! access from multiple worker threads.
+
+use uniperf::coordinator::{fit_models, run_device, Config, FitBackend};
+use uniperf::gpusim::registry::{builtins, DeviceRegistry};
+use uniperf::harness::Protocol;
+use uniperf::perfmodel::Model;
+use uniperf::service::{ModelStore, Service, ServiceConfig, StoredModel};
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::json::Json;
+
+/// One-device config with a shortened (but still protocol-shaped)
+/// timing run count; the simulator is deterministic, so every fit over
+/// this config produces the identical model.
+fn quick_config() -> Config {
+    Config {
+        devices: vec!["k40c".into()],
+        backend: FitBackend::Native,
+        protocol: Protocol { runs: 8, ..Protocol::default() },
+        workers: 4,
+        ..Config::default()
+    }
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("uniperf_service_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// A service over hand-made weights (no campaign) for cheap tests.
+fn toy_service(workers: usize) -> Service {
+    let schema = Schema::full();
+    let mut weights = vec![0.0; schema.len()];
+    weights[schema.len() - 2] = 2e-9; // work groups
+    weights[schema.len() - 1] = 5e-6; // const
+    let model = Model {
+        device: "k40c".into(),
+        weights,
+        active: vec![schema.len() - 2, schema.len() - 1],
+        train_rel_err_geomean: 0.1,
+        solver: "native-cholesky",
+    };
+    let mut store = ModelStore::new(&schema, ExtractOpts::default());
+    store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+    let cfg = ServiceConfig { workers, ..ServiceConfig::default() };
+    Service::new(store, builtins().clone(), cfg).unwrap()
+}
+
+/// The ISSUE's acceptance pin: `fit --save models.json` then `predict
+/// --models models.json` answers with exactly what the in-memory
+/// pipeline produces — bit-identical response JSON through the file
+/// round trip, and predictions equal to `run_device`'s own
+/// `model.predict` on the §5 suite.
+#[test]
+fn fit_save_predict_roundtrips_bit_identically() {
+    let cfg = quick_config();
+    let schema = Schema::full();
+
+    // fit --save
+    let store_mem = fit_models(&cfg).unwrap();
+    let path = temp_path("models.json");
+    store_mem.save(&path, &schema).unwrap();
+
+    // load for serving; the artifact is a serialization fixed point
+    let store_loaded = ModelStore::load(&path, &schema).unwrap();
+    assert_eq!(
+        store_mem.to_json(&schema).pretty(),
+        store_loaded.to_json(&schema).pretty(),
+        "save/load must be byte-stable"
+    );
+
+    let svc_mem =
+        Service::new(store_mem, builtins().clone(), ServiceConfig::default()).unwrap();
+    let svc_loaded =
+        Service::new(store_loaded, builtins().clone(), ServiceConfig::default()).unwrap();
+
+    // bit-identical responses between the in-memory store and the file
+    // round trip, over named cases and a custom env
+    let mut lines: Vec<String> = Vec::new();
+    for kernel in ["fd5", "mm_skinny", "conv7", "nbody", "reduce_tree", "bmm8"] {
+        for case in ["a", "b", "c", "d"] {
+            lines.push(format!(
+                r#"{{"device": "k40c", "kernel": "{kernel}", "case": "{case}"}}"#
+            ));
+        }
+    }
+    lines.push(r#"{"device": "k40c", "kernel": "fd5", "env": {"n": 4096}}"#.into());
+    for line in &lines {
+        let (a, b) = (svc_mem.respond(line), svc_loaded.respond(line));
+        assert!(a.get("error").is_none(), "{line} -> {a}");
+        assert_eq!(a.compact(), b.compact(), "{line}");
+    }
+
+    // ...and the served predictions equal the in-memory pipeline's own
+    // test-kernel predictions (same weights, same property vectors)
+    let dr = run_device("k40c", &schema, &cfg).unwrap();
+    for (kernel, case, pred, _actual) in &dr.tests {
+        let line = format!(
+            r#"{{"device": "k40c", "kernel": "{kernel}", "case": "{case}"}}"#
+        );
+        let resp = svc_loaded.respond(&line);
+        assert_eq!(
+            resp.get_f64("predicted_s"),
+            Some(*pred),
+            "{kernel}/{case}: served prediction diverged from the pipeline"
+        );
+    }
+}
+
+#[test]
+fn stale_artifacts_are_refused_at_service_construction() {
+    let schema = Schema::full();
+    let profile = builtins().get("k40c").unwrap().clone();
+    let mut weights = vec![0.0; schema.len()];
+    weights[schema.len() - 1] = 1e-6;
+    let model = Model {
+        device: "k40c".into(),
+        weights,
+        active: vec![schema.len() - 1],
+        train_rel_err_geomean: 0.1,
+        solver: "native-cholesky",
+    };
+    let mut store = ModelStore::new(&schema, ExtractOpts::default());
+    store.insert(StoredModel::new(model, 8e-6, 400, &profile));
+
+    // same registry: fine
+    Service::new(store.clone(), builtins().clone(), ServiceConfig::default()).unwrap();
+
+    // an artifact fitted under an ablation flag is refused by a
+    // default-configured service (the weights expect collapsed vectors)
+    let mut ablated = ModelStore::new(
+        &schema,
+        ExtractOpts { collapse_utilization: true, ..ExtractOpts::default() },
+    );
+    ablated.insert(store.get("k40c").unwrap().clone());
+    let e = Service::new(ablated, builtins().clone(), ServiceConfig::default()).unwrap_err();
+    assert!(e.contains("extraction options"), "{e}");
+
+    // a registry whose k40c profile was edited after the fit: refused
+    let mut edited = profile;
+    edited.dram_bw *= 1.05;
+    let mut registry = builtins().clone();
+    registry.register(edited).unwrap();
+    let e = Service::new(store, registry, ServiceConfig::default()).unwrap_err();
+    assert!(e.contains("stale"), "{e}");
+}
+
+/// Renamed inames/arrays in inline kernel specs share one cache entry
+/// (the structural hash ignores names), and the warm request skips
+/// extraction entirely.
+#[test]
+fn inline_kernels_share_cache_entries_across_renames() {
+    let svc = toy_service(2);
+    let spec_a = r#"{"name": "mine", "params": ["n"],
+        "dims": [{"iname": "g0", "tag": "group0", "hi": "n", "tiles": 128},
+                 {"iname": "l0", "tag": "local0", "hi": 128}],
+        "arrays": [{"name": "src", "dtype": "f32", "shape": ["n"]},
+                   {"name": "dst", "dtype": "f32", "shape": ["n"], "output": true}],
+        "insns": [{"store": "dst", "idx": ["128*g0 + l0"],
+                   "expr": {"load": {"array": "src", "idx": ["128*g0 + l0"]}},
+                   "within": ["g0", "l0"]}]}"#;
+    // same structure, every identifier renamed (quoted/expression forms
+    // only — "local0"/"group0" are tag keywords, not identifiers)
+    let spec_b = spec_a
+        .replace("mine", "yours")
+        .replace("\"g0\"", "\"grp\"")
+        .replace("*g0 +", "*grp +")
+        .replace("\"l0\"", "\"lane\"")
+        .replace("+ l0", "+ lane")
+        .replace("src", "input")
+        .replace("dst", "dest_buf");
+    let line_a = format!(r#"{{"device": "k40c", "lpir": {spec_a}, "env": {{"n": 65536}}}}"#);
+    let line_b = format!(r#"{{"device": "k40c", "lpir": {spec_b}, "env": {{"n": 65536}}}}"#);
+    let ra = svc.respond(&line_a);
+    let rb = svc.respond(&line_b);
+    assert!(ra.get("error").is_none(), "{ra}");
+    assert_eq!(ra.get_str("cache"), Some("miss"));
+    assert_eq!(rb.get_str("cache"), Some("hit"), "renamed twin must hit: {rb}");
+    assert_eq!(ra.get_f64("predicted_s"), rb.get_f64("predicted_s"));
+    assert_eq!(svc.cache().len(), 1);
+    // a structurally different kernel (wider group) is a new entry
+    let spec_c = spec_a.replace("128", "256");
+    let line_c = format!(r#"{{"device": "k40c", "lpir": {spec_c}, "env": {{"n": 65536}}}}"#);
+    assert_eq!(svc.respond(&line_c).get_str("cache"), Some("miss"));
+    assert_eq!(svc.cache().len(), 2);
+}
+
+/// Satellite: concurrent ModelStore + cache access from multiple
+/// service worker threads — many threads fire overlapping request
+/// streams at one service; every response must equal the
+/// single-threaded reference, and the cache counters must add up.
+#[test]
+fn concurrent_workers_agree_with_single_threaded_reference() {
+    let kernels = ["fd5", "nbody", "reduce_tree", "scan_hs", "bmm8", "gather_s2"];
+    let lines: Vec<String> = (0..48)
+        .map(|i| {
+            let k = kernels[i % kernels.len()];
+            let case = ["a", "b", "c", "d"][(i / kernels.len()) % 4];
+            format!(r#"{{"id": {i}, "device": "k40c", "kernel": "{k}", "case": "{case}"}}"#)
+        })
+        .collect();
+
+    // single-threaded reference
+    let reference: Vec<String> = {
+        let svc = toy_service(1);
+        lines.iter().map(|l| svc.respond(l).compact()).collect()
+    };
+
+    // 8 OS threads, each pushing the full stream through one shared
+    // service (on top of the service's own batch workers)
+    let svc = toy_service(4);
+    let n_threads = 8;
+    let all: Vec<Vec<Json>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| scope.spawn(|| svc.run_batch(lines.clone())))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
+    });
+    for out in &all {
+        assert_eq!(out.len(), lines.len());
+        for (resp, reference_resp) in out.iter().zip(&reference) {
+            let r = Json::parse(reference_resp).unwrap();
+            assert!(resp.get("error").is_none(), "{resp}");
+            assert_eq!(resp.get_f64("predicted_s"), r.get_f64("predicted_s"));
+            assert_eq!(resp.get_f64("id"), r.get_f64("id"));
+        }
+    }
+    // counters add up exactly: every request either hit or missed, and
+    // the distinct kernel structures were extracted exactly once each
+    let s = svc.summary();
+    let total = (n_threads * lines.len()) as u64;
+    assert_eq!(s.requests, total);
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.cache_hits + s.cache_misses, total);
+    assert_eq!(s.cache_misses as usize, kernels.len());
+    assert_eq!(s.distinct_kernels, kernels.len());
+    assert_eq!(s.batches, n_threads as u64);
+}
+
+/// The `--devices` template written by `devices --export` loads back
+/// and runs the service path for its skeleton device end to end (fit a
+/// toy store is out of scope here — just registry + suite validity).
+#[test]
+fn exported_template_joins_the_registry() {
+    let template = uniperf::gpusim::registry::export_template();
+    let path = temp_path("profiles_template.json");
+    std::fs::write(&path, template.pretty()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut registry = DeviceRegistry::empty();
+    let names = registry.extend_from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(names.len(), 2);
+    let custom = registry.get("my_device").unwrap();
+    // the skeleton's capability-derived suite is valid: every case
+    // respects the group cap
+    for case in uniperf::kernels::measurement_suite(custom) {
+        let (a, b) = case.group;
+        assert!(a * b <= custom.max_group_size as i64, "{}: {a}x{b}", case.label);
+    }
+    // and its size_exp override steers the mm_tiled class
+    assert_eq!(custom.class_size_exp("mm_tiled", 11), 8);
+}
