@@ -1,18 +1,40 @@
 //! Serve smoke + throughput bench: fit two devices, stand up the
 //! prediction service, and push the full evaluation zoo through it
-//! cold (extraction on every new kernel structure) and warm (pure
-//! cache-hit tape evaluation). Records cold/warm throughput, the
-//! latency percentiles and the cache counters to `BENCH_serve.json`,
-//! and hard-fails if any request errors, if the warm path does not
-//! beat the cold path, or if the warm pass ever misses the cache.
+//! cold (extraction on every new kernel structure), warm (pure
+//! cache-hit tape evaluation), and over TCP — the threaded
+//! per-connection listener against the serial conversational loop.
+//! Records cold/warm/threaded throughput, the latency percentiles and
+//! the cache counters (including evictions) to `BENCH_serve.json`, and
+//! hard-fails if any request errors, if the warm path does not beat
+//! the cold path, if the warm pass ever misses the cache, or if the
+//! threaded listener does not beat the serial loop.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::Instant;
 use uniperf::coordinator::{fit_models, Config, FitBackend};
 use uniperf::gpusim::registry::builtins;
 use uniperf::harness::Protocol;
 use uniperf::report::render_service;
-use uniperf::service::{Service, ServiceConfig};
+use uniperf::service::{tcp, Service, ServiceConfig};
 use uniperf::util::json::Json;
+
+/// Conversational TCP client: send each line, wait for its response.
+fn tcp_roundtrips(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+    let mut out = Vec::new();
+    for line in lines {
+        writeln!(stream, "{line}").expect("send");
+        stream.flush().expect("flush");
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("recv");
+        out.push(resp.trim_end().to_string());
+    }
+    out
+}
 
 fn main() {
     let cfg = Config {
@@ -107,14 +129,88 @@ fn main() {
          ({cold_rps:.0} req/s)"
     );
 
+    // --- threaded TCP listener vs the serial conversational loop ---
+    // Both paths answer the same warm request stream over real
+    // sockets, one round trip per request. The serial baseline is one
+    // client draining the whole stream alone (what the pre-refactor
+    // single-connection loop could sustain at best); the threaded pass
+    // runs N such clients concurrently on per-connection threads.
+    let svc = Arc::new(svc);
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().expect("listener addr");
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            tcp::serve_threaded(&svc, listener, 64).expect("threaded listener failed")
+        })
+    };
+
+    let t0 = Instant::now();
+    let serial_out = tcp_roundtrips(addr, &lines);
+    let serial_s = t0.elapsed().as_secs_f64();
+    for r in &serial_out {
+        assert!(
+            Json::parse(r).expect("response JSON").get("error").is_none(),
+            "serial TCP request errored: {r}"
+        );
+    }
+    let serial_rps = n as f64 / serial_s;
+
+    let n_clients = 4;
+    let t0 = Instant::now();
+    let all: Vec<Vec<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| scope.spawn(|| tcp_roundtrips(addr, &lines)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let threaded_s = t0.elapsed().as_secs_f64();
+    for responses in &all {
+        for r in responses {
+            assert!(
+                Json::parse(r).expect("response JSON").get("error").is_none(),
+                "threaded TCP request errored: {r}"
+            );
+        }
+    }
+    let threaded_rps = (n_clients * n) as f64 / threaded_s;
+    println!(
+        "serial TCP: {n} round trips in {:.1} ms ({serial_rps:.0} req/s)",
+        serial_s * 1e3
+    );
+    println!(
+        "threaded TCP: {n_clients} x {n} round trips in {:.1} ms \
+         ({threaded_rps:.0} req/s, {:.2}x serial)",
+        threaded_s * 1e3,
+        threaded_rps / serial_rps
+    );
+    assert!(
+        threaded_rps > serial_rps,
+        "threaded listener ({threaded_rps:.0} req/s) must beat the serial \
+         conversational loop ({serial_rps:.0} req/s)"
+    );
+
+    // deterministic drain: shutdown, then the listener joins every
+    // connection before returning
+    let bye = tcp_roundtrips(addr, &[r#"{"cmd": "shutdown"}"#.to_string()]);
+    assert_eq!(
+        Json::parse(&bye[0]).expect("shutdown response").get_str("ok"),
+        Some("shutdown")
+    );
+    server.join().expect("server thread");
+
     let summary = svc.summary();
     print!("{}", render_service(&summary));
     assert_eq!(summary.errors, 0, "no request may error");
     assert!(summary.cache_hits > 0, "cache-hit counter must register warm traffic");
     assert_eq!(
-        summary.cache_hits + summary.cache_misses,
+        summary.cache_hits + summary.cache_misses + 1,
         summary.requests,
-        "every request either hits or misses"
+        "every request either hits or misses, except the one shutdown command"
+    );
+    assert_eq!(
+        summary.cache_evictions, 0,
+        "the evaluation zoo must fit the default cache capacity"
     );
 
     let j = Json::obj(vec![
@@ -136,6 +232,22 @@ fn main() {
             ]),
         ),
         ("warm_over_cold", Json::Num(warm_rps / cold_rps)),
+        (
+            "tcp_serial",
+            Json::obj(vec![
+                ("seconds", Json::Num(serial_s)),
+                ("rps", Json::Num(serial_rps)),
+            ]),
+        ),
+        (
+            "tcp_threaded",
+            Json::obj(vec![
+                ("clients", Json::Num(n_clients as f64)),
+                ("seconds", Json::Num(threaded_s)),
+                ("rps", Json::Num(threaded_rps)),
+            ]),
+        ),
+        ("threaded_over_serial", Json::Num(threaded_rps / serial_rps)),
         ("service", summary.to_json()),
     ]);
     std::fs::write("BENCH_serve.json", j.pretty()).expect("write BENCH_serve.json");

@@ -1,82 +1,23 @@
-//! The pipeline coordinator: orchestrates measurement campaigns, fits and
-//! test-kernel evaluation across the simulated devices — the paper's
-//! Figure 1 wired end to end.
+//! The pipeline coordinator: orchestrates measurement campaigns, fits
+//! and test-kernel evaluation across the simulated devices — the
+//! paper's Figure 1 wired end to end.
 //!
-//! Devices are processed in parallel on a thread pool
-//! ([`crate::util::executor`]); within one device, timing runs fan out
-//! over cases. Results (campaigns, models, tables) can be persisted to a
-//! JSON results directory.
+//! Since the engine refactor this module is a thin layer over
+//! [`crate::engine::Engine`], which owns the shared
+//! measurement→extraction→fit→predict core (registry, props cache,
+//! suite construction, solver factory). The coordinator contributes
+//! the multi-device fan-out ([`run_pipeline`] — devices in parallel on
+//! [`crate::util::executor`]) and Table-1/Table-2 assembly +
+//! persistence. `Config`, `FitBackend`, `make_solver` and
+//! `DeviceResult` now live in `engine` and are re-exported here so
+//! existing call sites keep working.
 
-use crate::gpusim::{registry, DeviceRegistry, SimGpu};
-use crate::harness::{self, Protocol};
-use crate::kernels;
-use crate::perfmodel::{self, Model, NativeSolver, Solver};
+pub use crate::engine::{make_solver, Config, DeviceResult, FitBackend};
+
+use crate::engine::Engine;
 use crate::report::{render_table2, Table1, Table1Entry};
-use crate::stats::{ExtractOpts, Schema};
-use crate::util::executor::{default_workers, par_map};
-use std::path::PathBuf;
-
-/// Which fit backend to use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FitBackend {
-    /// in-process Cholesky/QR ([`NativeSolver`])
-    Native,
-    /// AOT-compiled JAX/Pallas artifact through PJRT
-    Xla,
-    /// try the artifact, fall back to native if unavailable
-    Auto,
-}
-
-/// Pipeline configuration.
-#[derive(Clone, Debug)]
-pub struct Config {
-    /// devices to run, by name; resolved through [`Config::registry`]
-    pub devices: Vec<String>,
-    /// the device catalogue names resolve against. Defaults to the
-    /// built-in registry; the CLI's `--devices <profiles.json>` flag
-    /// extends it with user profiles at runtime.
-    pub registry: DeviceRegistry,
-    pub protocol: Protocol,
-    pub backend: FitBackend,
-    pub extract: ExtractOpts,
-    /// results directory (None = don't persist)
-    pub out_dir: Option<PathBuf>,
-    pub workers: usize,
-    /// evaluate the full 9-class evaluation-kernel zoo (§5 test kernels
-    /// plus the zoo expansion) instead of the four §5 test kernels
-    pub eval_zoo: bool,
-}
-
-impl Default for Config {
-    fn default() -> Self {
-        Config {
-            devices: vec![
-                "titan_x".into(),
-                "c2070".into(),
-                "k40c".into(),
-                "r9_fury".into(),
-            ],
-            registry: registry::builtins().clone(),
-            protocol: Protocol::default(),
-            backend: FitBackend::Auto,
-            extract: ExtractOpts::default(),
-            out_dir: None,
-            workers: default_workers(),
-            eval_zoo: false,
-        }
-    }
-}
-
-/// Per-device pipeline output.
-#[derive(Clone, Debug)]
-pub struct DeviceResult {
-    pub device: String,
-    pub model: Model,
-    pub launch_overhead_s: f64,
-    pub n_measurement_cases: usize,
-    /// (kernel, case letter, predicted, actual) for the §5 test kernels
-    pub tests: Vec<(String, String, f64, f64)>,
-}
+use crate::stats::Schema;
+use crate::util::executor::par_map;
 
 /// Full pipeline output.
 #[derive(Debug)]
@@ -85,132 +26,48 @@ pub struct PipelineResult {
     pub table1: Table1,
 }
 
-/// Instantiate the fit backend (shared with [`crate::crossval`], which
-/// holds one solver per device across its fold fan-out — hence the
-/// thread-safety bounds).
-pub fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver + Send + Sync>, String> {
-    match backend {
-        FitBackend::Native => Ok(Box::new(NativeSolver::new())),
-        FitBackend::Xla => Ok(Box::new(crate::runtime::XlaSolver::from_artifacts()?)),
-        FitBackend::Auto => match crate::runtime::XlaSolver::from_artifacts() {
-            Ok(s) => Ok(Box::new(s)),
-            Err(_) => Ok(Box::new(NativeSolver::new())),
-        },
+/// Guard the historical `schema` parameter: the engine pins the full
+/// §2 schema (the only layout artifacts and suites are fingerprinted
+/// against), so a caller-supplied schema must be column-identical.
+fn check_schema(schema: &Schema, engine: &Engine) -> Result<(), String> {
+    if schema.fingerprint() != engine.schema().fingerprint() {
+        return Err(
+            "the engine-backed pipeline fits against the full property schema; \
+             a different column layout would silently misalign weights"
+                .into(),
+        );
     }
-}
-
-/// The campaign + fit prefix shared by [`run_device`] and
-/// [`fit_models`]: simulate the device, run the §4.1/§4.2 measurement
-/// campaign, and fit the §4.3 weights. Returns the simulated device,
-/// the (filtered) property matrix, the fitted model and the calibrated
-/// launch overhead.
-fn campaign_and_fit(
-    device: &str,
-    schema: &Schema,
-    cfg: &Config,
-) -> Result<(SimGpu, perfmodel::PropertyMatrix, Model, f64), String> {
-    let profile = cfg
-        .registry
-        .get(device)
-        .cloned()
-        .ok_or_else(|| format!("unknown device '{device}'"))?;
-    let gpu = SimGpu::new(profile);
-
-    // 1. measurement campaign (§4.1 + §4.2), capability-derived from
-    //    the profile
-    let cases = kernels::measurement_suite(&gpu.profile);
-    let (pm, overhead) =
-        harness::run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, cfg.workers)?;
-
-    // 2. fit (§4.3)
-    let solver = make_solver(cfg.backend)?;
-    let model = perfmodel::fit(device, &pm, schema, solver.as_ref())?;
-    Ok((gpu, pm, model, overhead))
+    Ok(())
 }
 
 /// Run the full per-device pipeline: measurement campaign → fit → test
-/// kernels → Table-1 entries.
+/// kernels → Table-1 entries. Delegates to [`Engine::run_device`] on a
+/// fresh engine over `cfg`.
 pub fn run_device(
     device: &str,
     schema: &Schema,
     cfg: &Config,
 ) -> Result<DeviceResult, String> {
-    let (gpu, pm, model, overhead) = campaign_and_fit(device, schema, cfg)?;
-
-    // 3. test kernels (§5, or the full zoo behind `eval_zoo`): predict
-    //    + measure, through the same parallel measurement path the
-    //    cross-validation subsystem uses
-    let suite = if cfg.eval_zoo {
-        kernels::eval_suite(&gpu.profile)
-    } else {
-        kernels::test_suite(&gpu.profile)
-    };
-    let measurements =
-        harness::measure_cases(&gpu, &suite, schema, &cfg.protocol, cfg.extract, cfg.workers)?;
-    let mut tests = Vec::new();
-    for (case, m) in suite.iter().zip(&measurements) {
-        // label format: "<kernel>/<letter>/..."
-        let mut parts = case.label.split('/');
-        let kname = parts.next().unwrap_or("?").to_string();
-        let letter = parts.next().unwrap_or("?").to_string();
-        tests.push((kname, letter, model.predict(&m.props), m.time_s));
-    }
-
-    // 4. optional persistence
-    if let Some(dir) = &cfg.out_dir {
-        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
-        let cj = harness::campaign_to_json(&pm, device, overhead);
-        std::fs::write(dir.join(format!("campaign_{device}.json")), cj.pretty())
-            .map_err(|e| e.to_string())?;
-        std::fs::write(
-            dir.join(format!("model_{device}.json")),
-            model.to_json(schema).pretty(),
-        )
-        .map_err(|e| e.to_string())?;
-    }
-
-    Ok(DeviceResult {
-        device: device.to_string(),
-        model,
-        launch_overhead_s: overhead,
-        n_measurement_cases: pm.n_cases(),
-        tests,
-    })
+    let engine = Engine::new(cfg.clone());
+    check_schema(schema, &engine)?;
+    engine.run_device(device)
 }
 
 /// Fit every configured device and assemble a persistable model store
-/// (the `fit --save` flow of [`crate::service`]): one measurement
-/// campaign + fit per device — and nothing else; the test-kernel
-/// evaluation pass of [`run_device`] contributes nothing to an
-/// artifact and is skipped — fanned out on the executor, each weight
-/// table fingerprinted against the profile and capability-derived
-/// suite that produced it. The returned store is what `predict
-/// --models` and `serve` answer from, so saving it is the boundary
-/// between the batch pipeline and the serving system.
+/// (the `fit --save` flow of [`crate::service`]). Delegates to
+/// [`Engine::fit_store`].
 pub fn fit_models(cfg: &Config) -> Result<crate::service::ModelStore, String> {
-    use crate::service::{ModelStore, StoredModel};
-    let schema = Schema::full();
-    let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
-    let results = par_map(cfg.devices.clone(), device_workers, |dev| {
-        campaign_and_fit(&dev, &schema, cfg).map(|(gpu, pm, model, overhead)| {
-            (gpu.profile, pm.n_cases(), model, overhead)
-        })
-    });
-    let mut store = ModelStore::new(&schema, cfg.extract);
-    for r in results {
-        let (profile, n_cases, model, overhead) = r?;
-        store.insert(StoredModel::new(model, overhead, n_cases, &profile));
-    }
-    Ok(store)
+    Engine::new(cfg.clone()).fit_store()
 }
 
-/// Run the pipeline across all configured devices (in parallel) and
-/// assemble Table 1.
+/// Run the pipeline across all configured devices (in parallel on one
+/// shared engine) and assemble Table 1.
 pub fn run_pipeline(cfg: &Config) -> Result<PipelineResult, String> {
+    let engine = Engine::new(cfg.clone());
     let schema = Schema::full();
     let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
     let results = par_map(cfg.devices.clone(), device_workers, |dev| {
-        run_device(&dev, &schema, cfg)
+        engine.run_device(&dev)
     });
     let mut per_device = Vec::new();
     for r in results {
@@ -245,6 +102,7 @@ pub fn run_pipeline(cfg: &Config) -> Result<PipelineResult, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::harness::Protocol;
 
     /// A reduced-scope end-to-end smoke test: one device, native solver.
     /// (The full 4-device pipeline runs in `rust/tests/` and the
@@ -271,5 +129,22 @@ mod tests {
         for (k, c, pred, act) in &dr.tests {
             assert!(pred.is_finite() && *act > 0.0, "{k}/{c}: pred={pred} act={act}");
         }
+    }
+
+    /// The engine wrappers guard the historical `schema` parameter by
+    /// fingerprint; column-identical layouts (every constructor the
+    /// crate exposes) pass.
+    #[test]
+    fn schema_fingerprint_guard_accepts_identical_layouts() {
+        let cfg = Config {
+            devices: vec!["k40c".into()],
+            backend: FitBackend::Native,
+            protocol: Protocol { runs: 6, ..Protocol::default() },
+            ..Config::default()
+        };
+        // Schema::without_utilization shares the full column layout by
+        // design, so it passes the fingerprint guard
+        let dr = run_device("k40c", &Schema::without_utilization(), &cfg);
+        assert!(dr.is_ok(), "{dr:?}");
     }
 }

@@ -20,23 +20,23 @@
 //!   a device×device transfer-error matrix
 //!   ([`crate::report::TransferMatrix`]).
 //!
-//! Per device the campaign and the zoo measurements run **once** (with
-//! symbolic extraction cached through [`crate::harness::PropsCache`] via
-//! [`crate::harness::measure_cases`]); the (device × fold) — or, for the
-//! device split, (source × target) — jobs then fan out on
-//! [`crate::util::executor::par_map`]. Results are collected into a
-//! [`crate::report::Table1`] of held-out predictions and rendered by
+//! The measurement→fit machinery is the shared engine core
+//! ([`crate::engine::Engine`]): per device the campaign and the zoo
+//! measurements run **once** ([`Engine::measure_fold_ctx`], parallel
+//! over devices), then every fold — (device × fold) for the per-device
+//! splits, (source × target) for the transfer split — is an engine job
+//! ([`Engine::fold_training_matrix`] + [`Engine::fit_fold_model`])
+//! fanned out on [`crate::util::executor::par_map`]. This module only
+//! owns the *split semantics* (which cases a fold holds out) and the
+//! reporting. Results are collected into a [`crate::report::Table1`] of
+//! held-out predictions and rendered by
 //! [`crate::report::render_crossval`] / [`crate::report::render_transfer`].
 //! Every fold also retains its fitted weight table, persisted in the
 //! crossval JSON output for weight-drift analysis across PRs.
 
-use crate::coordinator::{make_solver, Config};
-use crate::gpusim::{DeviceProfile, SimGpu};
-use crate::harness::{measure_cases, run_campaign};
-use crate::kernels;
-use crate::perfmodel::{self, PropertyMatrix, Solver};
+use crate::coordinator::Config;
+use crate::engine::{Engine, FoldCtx, ZooCase};
 use crate::report::{render_crossval, render_transfer, Table1, Table1Entry, TransferMatrix};
-use crate::stats::Schema;
 use crate::util::executor::par_map;
 use crate::util::json::Json;
 use crate::util::linalg::geometric_mean;
@@ -94,27 +94,6 @@ impl Default for CrossvalOpts {
             quick: false,
         }
     }
-}
-
-/// One measured zoo case, ready for fold assembly.
-#[derive(Clone, Debug)]
-struct ZooCase {
-    kernel: String,
-    case: String,
-    label: String,
-    props: Vec<f64>,
-    time_s: f64,
-}
-
-/// Per-device measurements (and the fit backend) shared by every fold
-/// of that device — the solver is instantiated once here rather than
-/// per fold, so an XLA artifact is loaded at most once per device.
-struct DeviceCtx {
-    device: String,
-    campaign: PropertyMatrix,
-    overhead: f64,
-    zoo: Vec<ZooCase>,
-    solver: Box<dyn Solver + Send + Sync>,
 }
 
 /// Outcome of one fold's fit: a (device, held-out key) pair for the
@@ -262,85 +241,27 @@ fn quick_zoo_case(label: &str) -> bool {
     matches!(parts.next(), Some("a") | Some("b"))
 }
 
-/// Measure one device: run the (possibly cut-down) measurement campaign
-/// and the evaluation-kernel zoo once.
-fn build_ctx(
-    profile: &DeviceProfile,
-    schema: &Schema,
-    opts: &CrossvalOpts,
-    workers: usize,
-) -> Result<DeviceCtx, String> {
-    let cfg = &opts.base;
-    let gpu = SimGpu::new(profile.clone());
-    let mut cases = kernels::measurement_suite(&gpu.profile);
-    if opts.quick {
-        cases.retain(|c| quick_campaign_case(&c.label));
-    }
-    let (campaign, overhead) =
-        run_campaign(&gpu, &cases, schema, &cfg.protocol, cfg.extract, workers)?;
-
-    let mut zoo_cases = kernels::eval_suite(&gpu.profile);
-    if opts.quick {
-        zoo_cases.retain(|c| quick_zoo_case(&c.label));
-    }
-    let measurements =
-        measure_cases(&gpu, &zoo_cases, schema, &cfg.protocol, cfg.extract, workers)?;
-    let zoo = zoo_cases
-        .iter()
-        .zip(measurements)
-        .map(|(c, m)| {
-            let mut parts = c.label.split('/');
-            let kernel = parts.next().unwrap_or("?").to_string();
-            let case = parts.next().unwrap_or("?").to_string();
-            ZooCase { kernel, case, label: m.label, props: m.props, time_s: m.time_s }
-        })
-        .collect();
-    Ok(DeviceCtx {
-        device: profile.name.clone(),
-        campaign,
-        overhead,
-        zoo,
-        solver: make_solver(cfg.backend)?,
-    })
-}
-
-/// Assemble a fold's training set: the device's campaign plus every zoo
-/// case passing `keep`. The §4.2 minimum-size floor applies to training
-/// cases only — held-out cases are never floor-filtered — and this is
-/// the single place the rule lives, shared by every split.
-fn training_matrix(
-    ctx: &DeviceCtx,
-    opts: &CrossvalOpts,
-    keep: impl Fn(&ZooCase) -> bool,
-) -> PropertyMatrix {
-    let floor = opts.base.protocol.min_time_factor * ctx.overhead;
-    let mut pm = ctx.campaign.clone();
-    for z in &ctx.zoo {
-        if keep(z) && z.time_s >= floor {
-            pm.push(z.label.clone(), z.props.clone(), z.time_s);
-        }
-    }
-    pm
-}
-
 /// Fit and evaluate one fold on one device: train on the campaign plus
-/// every zoo case outside the fold, predict the held-out cases.
+/// every zoo case outside the fold, predict the held-out cases. The
+/// training-matrix assembly (incl. the §4.2 floor rule) and the fit are
+/// engine jobs; this function owns the split's hold-out semantics.
 fn run_fold(
-    ctx: &DeviceCtx,
+    engine: &Engine,
+    ctx: &FoldCtx,
     fold: &str,
-    schema: &Schema,
-    opts: &CrossvalOpts,
+    split: Split,
 ) -> Result<FoldResult, String> {
     let held: Vec<&ZooCase> = ctx
         .zoo
         .iter()
-        .filter(|z| opts.split.key(&z.kernel, &z.case) == fold)
+        .filter(|z| split.key(&z.kernel, &z.case) == fold)
         .collect();
     if held.is_empty() {
         return Err(format!("fold '{fold}' holds out no cases on {}", ctx.device));
     }
-    let pm = training_matrix(ctx, opts, |z| opts.split.key(&z.kernel, &z.case) != fold);
-    let model = perfmodel::fit(&ctx.device, &pm, schema, ctx.solver.as_ref())?;
+    let pm =
+        engine.fold_training_matrix(ctx, &|z| split.key(&z.kernel, &z.case) != fold);
+    let model = engine.fit_fold_model(ctx, &pm)?;
     let entries = held
         .iter()
         .map(|z| Table1Entry {
@@ -356,7 +277,7 @@ fn run_fold(
         fold: fold.to_string(),
         n_train: pm.n_cases(),
         train_err: model.train_rel_err_geomean,
-        weights: model.weight_report(schema),
+        weights: model.weight_report(engine.schema()),
         entries,
     })
 }
@@ -366,14 +287,13 @@ fn run_fold(
 /// weights. The targets' zoo timings are genuinely held out — the
 /// source model has never seen that hardware.
 fn run_transfer_fold(
-    contexts: &[DeviceCtx],
+    engine: &Engine,
+    contexts: &[FoldCtx],
     si: usize,
-    schema: &Schema,
-    opts: &CrossvalOpts,
 ) -> Result<FoldResult, String> {
     let src = &contexts[si];
-    let pm = training_matrix(src, opts, |_| true);
-    let model = perfmodel::fit(&src.device, &pm, schema, src.solver.as_ref())?;
+    let pm = engine.fold_training_matrix(src, &|_| true);
+    let model = engine.fit_fold_model(src, &pm)?;
     let mut entries = Vec::new();
     for (ti, tgt) in contexts.iter().enumerate() {
         if ti == si {
@@ -397,7 +317,7 @@ fn run_transfer_fold(
         fold: src.device.clone(),
         n_train: pm.n_cases(),
         train_err: model.train_rel_err_geomean,
-        weights: model.weight_report(schema),
+        weights: model.weight_report(engine.schema()),
         entries,
     })
 }
@@ -406,11 +326,12 @@ fn run_transfer_fold(
 /// the [`Config`]'s device registry, so JSON-loaded profiles
 /// participate).
 ///
-/// Stage 1 measures each device once (parallel over devices); stage 2
-/// fans the (device × fold) — or, for the device split, per-source —
-/// fit/predict jobs out over the worker pool. Job order — and therefore
-/// the assembled table and transfer matrix — is deterministic:
-/// `par_map` preserves input order regardless of scheduling.
+/// Stage 1 measures each device once on the shared engine (parallel
+/// over devices); stage 2 fans the (device × fold) — or, for the
+/// device split, per-source — fit/predict jobs out over the worker
+/// pool. Job order — and therefore the assembled table and transfer
+/// matrix — is deterministic: `par_map` preserves input order
+/// regardless of scheduling.
 pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
     let cfg = &opts.base;
     if cfg.devices.is_empty() {
@@ -419,22 +340,22 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
     if opts.split == Split::LeaveOneDeviceOut && cfg.devices.len() < 2 {
         return Err("leave-one-device-out needs at least two devices".into());
     }
-    let schema = Schema::full();
+    let engine = Engine::new(cfg.clone());
 
     let mut profiles = Vec::with_capacity(cfg.devices.len());
     for name in &cfg.devices {
-        profiles.push(
-            cfg.registry
-                .get(name)
-                .cloned()
-                .ok_or_else(|| format!("unknown device '{name}'"))?,
-        );
+        profiles.push(engine.profile(name)?.clone());
     }
 
+    let keep_all = |_: &str| true;
+    let campaign_keep: &(dyn Fn(&str) -> bool + Sync) =
+        if opts.quick { &quick_campaign_case } else { &keep_all };
+    let zoo_keep: &(dyn Fn(&str) -> bool + Sync) =
+        if opts.quick { &quick_zoo_case } else { &keep_all };
     let device_workers = cfg.workers.min(profiles.len()).max(1);
     let inner_workers = (cfg.workers / device_workers).max(1);
     let ctxs = par_map(profiles, device_workers, |p| {
-        build_ctx(&p, &schema, opts, inner_workers)
+        engine.measure_fold_ctx(&p, campaign_keep, zoo_keep, inner_workers)
     });
     let mut contexts = Vec::with_capacity(ctxs.len());
     for c in ctxs {
@@ -445,7 +366,7 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
         // one fold per source device, each predicting all other devices
         let sources: Vec<usize> = (0..contexts.len()).collect();
         par_map(sources, cfg.workers.max(1), |si| {
-            run_transfer_fold(&contexts, si, &schema, opts)
+            run_transfer_fold(&engine, &contexts, si)
         })
     } else {
         // fold keys per device, in first-seen (suite) order
@@ -463,7 +384,7 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
             }
         }
         par_map(jobs, cfg.workers.max(1), |(di, fold)| {
-            run_fold(&contexts[di], &fold, &schema, opts)
+            run_fold(&engine, &contexts[di], &fold, opts.split)
         })
     };
     let mut folds = Vec::with_capacity(results.len());
@@ -567,7 +488,8 @@ mod tests {
 
     /// One-device leave-one-size-case-out smoke (the cheapest end-to-end
     /// path: quick campaign, zoo cases a/b, 2 folds). The heavier
-    /// multi-device runs live in `rust/tests/crossval.rs`.
+    /// multi-device runs live in `rust/tests/crossval.rs`, and the
+    /// engine-vs-hand-assembled parity pin in `rust/tests/engine.rs`.
     #[test]
     fn quick_loso_single_device() {
         let opts = CrossvalOpts {

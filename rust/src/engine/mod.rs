@@ -1,0 +1,641 @@
+//! `engine` — the one measurement→extraction→fit→predict core every
+//! entry point shares.
+//!
+//! Before this module existed the paper's pipeline (symbolic count
+//! extraction → linear fit → prediction) was re-assembled three
+//! slightly-different times: `coordinator::run_device`/`fit_models`,
+//! the per-fold jobs in `crossval`, and `service::Service` each wired
+//! registry lookup, suite construction, props caching and solver
+//! plumbing by hand. Following the cross-machine framing of the model
+//! as a reusable artifact (Stevens & Klöckner, arXiv:1904.09538) and
+//! the fast-portable-prediction product view (Braun et al.,
+//! arXiv:2001.07104), [`Engine`] now owns the shared state:
+//!
+//! * the **device registry** — the catalogue every device name
+//!   resolves against;
+//! * the **props cache** ([`crate::service::SharedPropsCache`]) — one
+//!   eviction-bounded, sharded symbolic-extraction cache shared by
+//!   every prediction path;
+//! * **suite construction** — capability-derived evaluation suites,
+//!   built lazily once per device and shared;
+//! * the **solver factory** ([`make_solver`]) — backend selection for
+//!   every fit;
+//! * an **atomically-swappable [`ModelStore`]** — the serving weights,
+//!   installed behind an `RwLock<Arc<…>>` so a hot reload
+//!   ([`Reloader`]) swaps a validated artifact in one store while
+//!   in-flight predictions keep the snapshot they started with.
+//!
+//! The batch pipelines ([`crate::coordinator`]), the cross-validation
+//! folds ([`crate::crossval`]) and the prediction server
+//! ([`crate::service`]) are all thin layers over the methods here —
+//! scaling work changes one place instead of three.
+
+pub mod pipeline;
+
+pub use pipeline::{DeviceResult, FoldCtx, ZooCase};
+
+use crate::gpusim::{registry, DeviceProfile, DeviceRegistry};
+use crate::harness::Protocol;
+use crate::kernels::{self, KernelCase};
+use crate::perfmodel::{NativeSolver, Solver};
+use crate::service::request::{KernelRef, MatrixRequest, PredictRequest};
+use crate::service::{ModelStore, SharedPropsCache};
+use crate::stats::{ExtractOpts, Schema};
+use crate::util::executor::{default_workers, par_map};
+use crate::util::intern::Env;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Instant, SystemTime};
+
+/// Which fit backend to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitBackend {
+    /// in-process Cholesky/QR ([`NativeSolver`])
+    Native,
+    /// AOT-compiled JAX/Pallas artifact through PJRT
+    Xla,
+    /// try the artifact, fall back to native if unavailable
+    Auto,
+}
+
+/// Pipeline configuration (shared by every engine entry point).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// devices to run, by name; resolved through [`Config::registry`]
+    pub devices: Vec<String>,
+    /// the device catalogue names resolve against. Defaults to the
+    /// built-in registry; the CLI's `--devices <profiles.json>` flag
+    /// extends it with user profiles at runtime.
+    pub registry: DeviceRegistry,
+    pub protocol: Protocol,
+    pub backend: FitBackend,
+    pub extract: ExtractOpts,
+    /// results directory (None = don't persist)
+    pub out_dir: Option<PathBuf>,
+    pub workers: usize,
+    /// evaluate the full 9-class evaluation-kernel zoo (§5 test kernels
+    /// plus the zoo expansion) instead of the four §5 test kernels
+    pub eval_zoo: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            devices: vec![
+                "titan_x".into(),
+                "c2070".into(),
+                "k40c".into(),
+                "r9_fury".into(),
+            ],
+            registry: registry::builtins().clone(),
+            protocol: Protocol::default(),
+            backend: FitBackend::Auto,
+            extract: ExtractOpts::default(),
+            out_dir: None,
+            workers: default_workers(),
+            eval_zoo: false,
+        }
+    }
+}
+
+/// Instantiate the fit backend. The engine holds one solver per
+/// measurement context rather than per fold, so an XLA artifact is
+/// loaded at most once per device — hence the thread-safety bounds.
+pub fn make_solver(backend: FitBackend) -> Result<Box<dyn Solver + Send + Sync>, String> {
+    match backend {
+        FitBackend::Native => Ok(Box::new(NativeSolver::new())),
+        FitBackend::Xla => Ok(Box::new(crate::runtime::XlaSolver::from_artifacts()?)),
+        FitBackend::Auto => match crate::runtime::XlaSolver::from_artifacts() {
+            Ok(s) => Ok(Box::new(s)),
+            Err(_) => Ok(Box::new(NativeSolver::new())),
+        },
+    }
+}
+
+/// One resolved + predicted request ([`Engine::predict`]).
+pub struct Prediction {
+    /// request `id`, echoed for correlation
+    pub id: Option<Json>,
+    pub device: String,
+    pub kernel: String,
+    /// size-case letter when the request resolved to a suite case
+    pub case: Option<String>,
+    pub predicted_s: f64,
+    pub cache_hit: bool,
+    /// wall time of the symbolic extraction, `None` on a cache hit (a
+    /// hit is a non-run — the [`crate::harness::Sample::Cached`] rule)
+    pub extract_s: Option<f64>,
+}
+
+/// One device×kernel matrix prediction ([`Engine::predict_matrix`]):
+/// the request parsed once, predicted across every named device.
+pub struct MatrixPrediction {
+    pub id: Option<Json>,
+    pub kernel: String,
+    /// the requested size-case letter (per-device resolutions carry
+    /// their own letter in [`Prediction::case`])
+    pub case: Option<String>,
+    /// per-device outcome, in request (or store) device order
+    pub per_device: Vec<(String, Result<Prediction, String>)>,
+}
+
+/// The shared pipeline core. See the module docs for the ownership
+/// graph. `Engine` is `Sync`: every entry point takes `&self`, so one
+/// `Arc<Engine>` serves the batch pipelines, all cross-validation
+/// folds and every server connection concurrently.
+pub struct Engine {
+    cfg: Config,
+    schema: Schema,
+    cache: SharedPropsCache,
+    /// the serving weights; `None` until a store is installed.
+    /// Swapped atomically under the write lock; readers clone the
+    /// `Arc` and keep their snapshot for the whole request.
+    store: RwLock<Option<Arc<ModelStore>>>,
+    /// lazily built, capability-derived evaluation suites per device
+    suites: RwLock<BTreeMap<String, Arc<Vec<KernelCase>>>>,
+}
+
+impl Engine {
+    /// Build an engine over a pipeline configuration with the default
+    /// props-cache capacity.
+    pub fn new(cfg: Config) -> Engine {
+        Engine::with_cache_capacity(cfg, crate::service::cache::DEFAULT_CAPACITY)
+    }
+
+    /// Build an engine whose props cache is bounded to roughly
+    /// `cache_capacity` entries (see
+    /// [`SharedPropsCache::with_capacity`]).
+    pub fn with_cache_capacity(cfg: Config, cache_capacity: usize) -> Engine {
+        Engine {
+            cfg,
+            schema: Schema::full(),
+            cache: SharedPropsCache::with_capacity(cache_capacity),
+            store: RwLock::new(None),
+            suites: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn registry(&self) -> &DeviceRegistry {
+        &self.cfg.registry
+    }
+
+    pub fn cache(&self) -> &SharedPropsCache {
+        &self.cache
+    }
+
+    /// Resolve a device name through the registry.
+    pub fn profile(&self, device: &str) -> Result<&DeviceProfile, String> {
+        self.cfg
+            .registry
+            .get(device)
+            .ok_or_else(|| format!("unknown device '{device}'"))
+    }
+
+    /// The capability-derived evaluation suite for a registry device,
+    /// built once and shared (named-kernel resolution for every
+    /// prediction path).
+    pub fn eval_suite_for(&self, device: &str) -> Result<Arc<Vec<KernelCase>>, String> {
+        if let Some(s) = self.suites.read().unwrap().get(device) {
+            return Ok(Arc::clone(s));
+        }
+        let profile = self.profile(device)?;
+        let suite = Arc::new(kernels::eval_suite(profile));
+        let mut map = self.suites.write().unwrap();
+        // a racing builder may have inserted meanwhile; keep the first
+        // so every caller shares one Arc
+        Ok(Arc::clone(
+            map.entry(device.to_string()).or_insert(suite),
+        ))
+    }
+
+    /// Validate a model store against this engine's registry, schema
+    /// and extraction options, then swap it in atomically. In-flight
+    /// predictions finish on the snapshot they started with; the next
+    /// request sees the new weights. On error nothing is swapped.
+    pub fn install_store(&self, store: ModelStore) -> Result<(), String> {
+        store.validate_for_serving(&self.cfg.registry, &self.schema, self.cfg.extract)?;
+        *self.store.write().unwrap() = Some(Arc::new(store));
+        Ok(())
+    }
+
+    /// The currently installed store, if any (an `Arc` snapshot — the
+    /// caller keeps it consistent across a whole request even if a
+    /// reload swaps the store mid-flight).
+    pub fn store_snapshot(&self) -> Option<Arc<ModelStore>> {
+        self.store.read().unwrap().clone()
+    }
+
+    fn store_required(&self) -> Result<Arc<ModelStore>, String> {
+        self.store_snapshot()
+            .ok_or_else(|| "no model artifact installed (run `fit --save`)".to_string())
+    }
+
+    /// Resolve + predict one parsed request against the installed
+    /// store: registry lookup, suite resolution, cached symbolic
+    /// extraction, tape evaluation, one inner product.
+    pub fn predict(&self, req: &PredictRequest) -> Result<Prediction, String> {
+        let store = self.store_required()?;
+        let profile = self.profile(&req.device)?;
+        let sm = store.get(&req.device).ok_or_else(|| {
+            format!(
+                "no fitted model for device '{}' in the artifact (have: {})",
+                req.device,
+                store.devices().join(", ")
+            )
+        })?;
+
+        // resolve the kernel + parameter binding
+        let user_env = |pairs: &[(String, i64)]| {
+            let mut e = Env::new();
+            for (k, v) in pairs {
+                e.insert(k.as_str(), *v);
+            }
+            e
+        };
+        let suite;
+        let (kernel, env, kname, case_letter) = match &req.kref {
+            KernelRef::Named { name, case } => {
+                suite = self.eval_suite_for(&req.device)?;
+                let cases: Vec<&KernelCase> =
+                    suite.iter().filter(|c| c.kernel.name == *name).collect();
+                if cases.is_empty() {
+                    let mut known: Vec<&str> = Vec::new();
+                    for c in suite.iter() {
+                        if !known.contains(&c.kernel.name.as_str()) {
+                            known.push(&c.kernel.name);
+                        }
+                    }
+                    return Err(format!(
+                        "unknown kernel '{name}' (known: {})",
+                        known.join(", ")
+                    ));
+                }
+                let (kernel, env, case_letter) = match (case, &req.env) {
+                    (Some(letter), _) => {
+                        let found = cases
+                            .iter()
+                            .find(|c| c.label.split('/').nth(1) == Some(letter.as_str()))
+                            .ok_or_else(|| {
+                                format!("kernel '{name}' has no size case '{letter}' (a-d)")
+                            })?;
+                        (&found.kernel, found.env.clone(), Some(letter.clone()))
+                    }
+                    (None, Some(pairs)) => (&cases[0].kernel, user_env(pairs), None),
+                    (None, None) => {
+                        // default: the smallest (`a`) size case
+                        let found = cases
+                            .iter()
+                            .find(|c| c.label.split('/').nth(1) == Some("a"))
+                            .unwrap_or(&cases[0]);
+                        (
+                            &found.kernel,
+                            found.env.clone(),
+                            found.label.split('/').nth(1).map(|s| s.to_string()),
+                        )
+                    }
+                };
+                (kernel, env, name.clone(), case_letter)
+            }
+            KernelRef::Inline(k) => (
+                k.as_ref(),
+                user_env(req.env.as_ref().expect("parser enforces env for inline")),
+                k.name.clone(),
+                None,
+            ),
+        };
+
+        // every size parameter must be bound
+        for p in &kernel.params {
+            if env.get(*p).is_none() {
+                return Err(format!("kernel '{kname}' requires parameter '{p}' in env"));
+            }
+        }
+        // reject launches the target device cannot run
+        let (gs0, gs1) = kernel.group_size_at(&env)?;
+        if gs0 * gs1 > profile.max_group_size as i64 {
+            return Err(format!(
+                "group size {}x{} exceeds {}'s limit of {}",
+                gs0, gs1, profile.name, profile.max_group_size
+            ));
+        }
+
+        // cached symbolic extraction -> tape evaluation -> inner product.
+        // Suite-configured library cases share one entry across sizes
+        // and devices (their stride classes are size-structural by
+        // construction); any request supplying its *own* binding —
+        // inline kernels and named kernels with a user env — is
+        // additionally keyed by that binding, so a degenerate size
+        // cannot poison the shared classification.
+        let env_keyed =
+            matches!(&req.kref, KernelRef::Inline(_)) || req.env.is_some();
+        let t0 = Instant::now();
+        let (props, hit) = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed)?;
+        let extract_s = (!hit).then(|| t0.elapsed().as_secs_f64());
+        let v = props.eval(&self.schema, &env)?;
+        Ok(Prediction {
+            id: req.id.clone(),
+            device: req.device.clone(),
+            kernel: kname,
+            case: case_letter,
+            predicted_s: sm.model.predict(&v),
+            cache_hit: hit,
+            extract_s,
+        })
+    }
+
+    /// Predict a batch of parsed requests on the executor, preserving
+    /// input order. The request-line serving loops
+    /// ([`crate::service::Service`]) ride this after parsing.
+    pub fn predict_batch(
+        &self,
+        reqs: Vec<PredictRequest>,
+        workers: usize,
+    ) -> Vec<Result<Prediction, String>> {
+        par_map(reqs, workers, |r| self.predict(&r))
+    }
+
+    /// One device×kernel matrix request: the kernel spec and binding
+    /// are parsed once (upstream), then predicted for every named
+    /// device — or, when the request names none, every device the
+    /// installed store holds weights for. Per-device failures (no
+    /// weights, group-size cap) are reported per cell; the call itself
+    /// only fails when nothing can be resolved at all.
+    pub fn predict_matrix(&self, req: &MatrixRequest) -> Result<MatrixPrediction, String> {
+        let store = self.store_required()?;
+        let devices = match &req.devices {
+            Some(d) => d.clone(),
+            None => store.devices(),
+        };
+        if devices.is_empty() {
+            return Err("matrix request: the model store holds no devices".into());
+        }
+        let kernel = match &req.kref {
+            KernelRef::Named { name, .. } => name.clone(),
+            KernelRef::Inline(k) => k.name.clone(),
+        };
+        let case = match &req.kref {
+            KernelRef::Named { case, .. } => case.clone(),
+            KernelRef::Inline(_) => None,
+        };
+        let per_device = devices
+            .into_iter()
+            .map(|device| {
+                let preq = PredictRequest {
+                    id: None,
+                    device: device.clone(),
+                    kref: req.kref.clone(),
+                    env: req.env.clone(),
+                };
+                let outcome = self.predict(&preq);
+                (device, outcome)
+            })
+            .collect();
+        Ok(MatrixPrediction { id: req.id.clone(), kernel, case, per_device })
+    }
+}
+
+/// Hot artifact reload: re-stat a `models.json` between batches or
+/// connections and atomically swap the validated store into an
+/// [`Engine`]. A bad new artifact (unparseable, stale fingerprints,
+/// mismatched extraction options) leaves the old store serving.
+pub struct Reloader {
+    path: PathBuf,
+    state: Mutex<ReloadState>,
+}
+
+struct ReloadState {
+    /// (mtime, length) of the artifact as last examined — length joins
+    /// the fingerprint so rewrites within one coarse mtime granule are
+    /// still noticed when they change the payload size
+    seen: Option<(SystemTime, u64)>,
+    /// the watch file was unstatable last poll (deleted mid-serve);
+    /// remembered so the condition is reported once, not per poll
+    stat_failed: bool,
+}
+
+impl Reloader {
+    /// Watch `path`, treating its *current* state as already loaded —
+    /// the first [`Reloader::maybe_reload`] only swaps if the file
+    /// changed after this call.
+    pub fn primed(path: &Path) -> Reloader {
+        let seen = std::fs::metadata(path)
+            .ok()
+            .and_then(|m| m.modified().ok().map(|t| (t, m.len())));
+        Reloader {
+            path: path.to_path_buf(),
+            state: Mutex::new(ReloadState { seen, stat_failed: false }),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// If the watched file changed since last examined, load + validate
+    /// + install it into `engine`. Returns `Ok(true)` when a new store
+    /// was swapped in, `Ok(false)` when the file is unchanged, and
+    /// `Err` when the changed file failed to stat, load or validate —
+    /// the previously installed store keeps serving, and the failed
+    /// state is remembered so the same broken artifact (or missing
+    /// file) is reported once, not re-examined on every poll.
+    ///
+    /// Non-blocking: when another thread is already mid-poll, this
+    /// returns `Ok(false)` immediately — concurrent per-connection
+    /// serving loops never serialize on the watch, and the one winner
+    /// pays for the stat (and, rarely, the load + validate) alone.
+    pub fn maybe_reload(&self, engine: &Engine) -> Result<bool, String> {
+        let Ok(mut state) = self.state.try_lock() else {
+            return Ok(false);
+        };
+        let meta = match std::fs::metadata(&self.path) {
+            Ok(m) => m,
+            Err(e) => {
+                if state.stat_failed {
+                    return Ok(false); // already reported
+                }
+                state.stat_failed = true;
+                return Err(format!("stat {}: {e}", self.path.display()));
+            }
+        };
+        state.stat_failed = false;
+        let cur = (
+            meta.modified()
+                .map_err(|e| format!("mtime {}: {e}", self.path.display()))?,
+            meta.len(),
+        );
+        if state.seen == Some(cur) {
+            return Ok(false);
+        }
+        // remember the state up front: a broken artifact is reported
+        // once and then ignored until it changes again
+        state.seen = Some(cur);
+        let store = ModelStore::load(&self.path, engine.schema())?;
+        engine.install_store(store)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::testutil;
+
+    /// A store whose prediction is exactly `const_w` for every case
+    /// (only the constant column is weighted).
+    fn toy_store(device: &str, const_w: f64) -> ModelStore {
+        testutil::toy_store(&[(device, 0.0, const_w)])
+    }
+
+    fn engine_with(device: &str, const_w: f64) -> Engine {
+        let engine = Engine::new(Config::default());
+        engine.install_store(toy_store(device, const_w)).unwrap();
+        engine
+    }
+
+    #[test]
+    fn predict_requires_an_installed_store() {
+        let engine = Engine::new(Config::default());
+        let req = PredictRequest {
+            id: None,
+            device: "k40c".into(),
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+        };
+        let e = engine.predict(&req).unwrap_err();
+        assert!(e.contains("no model artifact"), "{e}");
+        assert!(engine.store_snapshot().is_none());
+    }
+
+    #[test]
+    fn install_store_swaps_atomically_and_validates() {
+        let engine = engine_with("k40c", 5e-6);
+        let req = PredictRequest {
+            id: None,
+            device: "k40c".into(),
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+        };
+        let p1 = engine.predict(&req).unwrap().predicted_s;
+        assert_eq!(p1, 5e-6);
+        // swap in doubled weights: next prediction sees them
+        engine.install_store(toy_store("k40c", 1e-5)).unwrap();
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 1e-5);
+        // an invalid store is refused and the good one keeps serving
+        let mut bad = toy_store("k40c", 2e-5);
+        bad.schema_fp = "0000000000000000".into();
+        assert!(engine.install_store(bad).is_err());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 1e-5);
+    }
+
+    #[test]
+    fn eval_suites_are_built_once_and_shared() {
+        let engine = Engine::new(Config::default());
+        let a = engine.eval_suite_for("k40c").unwrap();
+        let b = engine.eval_suite_for("k40c").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(engine.eval_suite_for("gtx480").is_err());
+    }
+
+    #[test]
+    fn matrix_prediction_covers_store_devices_and_reports_cell_errors() {
+        let engine = Engine::new(Config::default());
+        let mut store = toy_store("k40c", 5e-6);
+        let titan = toy_store("titan_x", 7e-6);
+        store.insert(titan.get("titan_x").unwrap().clone());
+        engine.install_store(store).unwrap();
+
+        let req = MatrixRequest {
+            id: Some(Json::Num(9.0)),
+            devices: None,
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+        };
+        let mp = engine.predict_matrix(&req).unwrap();
+        assert_eq!(mp.kernel, "fd5");
+        assert_eq!(mp.case.as_deref(), Some("a"));
+        assert_eq!(mp.per_device.len(), 2);
+        let names: Vec<&str> = mp.per_device.iter().map(|(d, _)| d.as_str()).collect();
+        assert_eq!(names, vec!["k40c", "titan_x"]);
+        for (d, r) in &mp.per_device {
+            let p = r.as_ref().unwrap();
+            let want = if d == "k40c" { 5e-6 } else { 7e-6 };
+            assert_eq!(p.predicted_s, want, "{d}");
+        }
+
+        // an explicit device list may name devices without weights —
+        // that is a per-cell error, not a request failure
+        let req = MatrixRequest {
+            id: None,
+            devices: Some(vec!["k40c".into(), "c2070".into()]),
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+        };
+        let mp = engine.predict_matrix(&req).unwrap();
+        assert!(mp.per_device[0].1.is_ok());
+        let e = mp.per_device[1].1.as_ref().unwrap_err();
+        assert!(e.contains("no fitted model"), "{e}");
+    }
+
+    #[test]
+    fn reloader_swaps_on_change_and_keeps_old_store_on_bad_artifact() {
+        let dir = std::env::temp_dir()
+            .join(format!("uniperf_engine_reload_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("models.json");
+        let schema = Schema::full();
+        toy_store("k40c", 5e-6).save(&path, &schema).unwrap();
+
+        let engine = Engine::new(Config::default());
+        engine
+            .install_store(ModelStore::load(&path, &schema).unwrap())
+            .unwrap();
+        let reloader = Reloader::primed(&path);
+        let req = PredictRequest {
+            id: None,
+            device: "k40c".into(),
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+        };
+        // unchanged file: no reload
+        assert!(!reloader.maybe_reload(&engine).unwrap());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 5e-6);
+
+        // rewritten artifact (different weight -> different byte length
+        // too): swapped in atomically
+        toy_store("k40c", 1.25e-5).save(&path, &schema).unwrap();
+        assert!(reloader.maybe_reload(&engine).unwrap());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 1.25e-5);
+
+        // a garbage rewrite errors once, keeps the old store, and is
+        // not re-reported while unchanged
+        std::fs::write(&path, "{not json at all").unwrap();
+        assert!(reloader.maybe_reload(&engine).is_err());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 1.25e-5);
+        assert!(!reloader.maybe_reload(&engine).unwrap());
+
+        // recovery: a good artifact swaps in again
+        toy_store("k40c", 2e-6).save(&path, &schema).unwrap();
+        assert!(reloader.maybe_reload(&engine).unwrap());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 2e-6);
+
+        // a deleted watch file errors once, then goes quiet until it
+        // reappears (no per-poll report spam)
+        std::fs::remove_file(&path).unwrap();
+        assert!(reloader.maybe_reload(&engine).is_err());
+        assert_eq!(reloader.maybe_reload(&engine), Ok(false));
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 2e-6, "old store serves on");
+        toy_store("k40c", 3e-6).save(&path, &schema).unwrap();
+        assert!(reloader.maybe_reload(&engine).unwrap());
+        assert_eq!(engine.predict(&req).unwrap().predicted_s, 3e-6);
+    }
+}

@@ -1,0 +1,244 @@
+//! The engine's measurement→fit jobs: the campaign/fit prefix shared
+//! by `run_device` and `fit --save`, the full per-device pipeline, and
+//! the fold machinery the cross-validation splits fan out on the
+//! executor.
+//!
+//! Everything here takes `&Engine`, so one engine (one registry, one
+//! props cache, one solver factory) backs every job regardless of
+//! which entry point — `coordinator`, `crossval` or a test — issued
+//! it.
+
+use super::{make_solver, Engine};
+use crate::gpusim::{DeviceProfile, SimGpu};
+use crate::harness::{self, measure_cases, run_campaign};
+use crate::kernels;
+use crate::perfmodel::{self, Model, PropertyMatrix, Solver};
+use crate::service::{ModelStore, StoredModel};
+use crate::util::executor::par_map;
+
+/// Per-device pipeline output.
+#[derive(Clone, Debug)]
+pub struct DeviceResult {
+    pub device: String,
+    pub model: Model,
+    pub launch_overhead_s: f64,
+    pub n_measurement_cases: usize,
+    /// (kernel, case letter, predicted, actual) for the §5 test kernels
+    pub tests: Vec<(String, String, f64, f64)>,
+}
+
+/// One measured zoo case, ready for fold assembly.
+#[derive(Clone, Debug)]
+pub struct ZooCase {
+    pub kernel: String,
+    pub case: String,
+    pub label: String,
+    pub props: Vec<f64>,
+    pub time_s: f64,
+}
+
+/// Per-device measurements (and the fit backend) shared by every fold
+/// of that device — the solver is instantiated once here rather than
+/// per fold, so an XLA artifact is loaded at most once per device.
+pub struct FoldCtx {
+    pub device: String,
+    pub campaign: PropertyMatrix,
+    pub overhead: f64,
+    pub zoo: Vec<ZooCase>,
+    pub solver: Box<dyn Solver + Send + Sync>,
+}
+
+impl Engine {
+    /// The campaign + fit prefix shared by [`Engine::run_device`] and
+    /// [`Engine::fit_store`]: simulate the device, run the §4.1/§4.2
+    /// measurement campaign, and fit the §4.3 weights. Returns the
+    /// simulated device, the (filtered) property matrix, the fitted
+    /// model and the calibrated launch overhead.
+    pub fn campaign_and_fit(
+        &self,
+        device: &str,
+    ) -> Result<(SimGpu, PropertyMatrix, Model, f64), String> {
+        let cfg = self.config();
+        let profile = self.profile(device)?.clone();
+        let gpu = SimGpu::new(profile);
+
+        // 1. measurement campaign (§4.1 + §4.2), capability-derived
+        //    from the profile
+        let cases = kernels::measurement_suite(&gpu.profile);
+        let (pm, overhead) = run_campaign(
+            &gpu,
+            &cases,
+            self.schema(),
+            &cfg.protocol,
+            cfg.extract,
+            cfg.workers,
+        )?;
+
+        // 2. fit (§4.3)
+        let solver = make_solver(cfg.backend)?;
+        let model = perfmodel::fit(device, &pm, self.schema(), solver.as_ref())?;
+        Ok((gpu, pm, model, overhead))
+    }
+
+    /// Run the full per-device pipeline: measurement campaign → fit →
+    /// test kernels → Table-1-shaped entries.
+    pub fn run_device(&self, device: &str) -> Result<DeviceResult, String> {
+        let cfg = self.config();
+        let (gpu, pm, model, overhead) = self.campaign_and_fit(device)?;
+
+        // 3. test kernels (§5, or the full zoo behind `eval_zoo`):
+        //    predict + measure, through the same parallel measurement
+        //    path the cross-validation subsystem uses
+        let suite = if cfg.eval_zoo {
+            kernels::eval_suite(&gpu.profile)
+        } else {
+            kernels::test_suite(&gpu.profile)
+        };
+        let measurements = measure_cases(
+            &gpu,
+            &suite,
+            self.schema(),
+            &cfg.protocol,
+            cfg.extract,
+            cfg.workers,
+        )?;
+        let mut tests = Vec::new();
+        for (case, m) in suite.iter().zip(&measurements) {
+            // label format: "<kernel>/<letter>/..."
+            let mut parts = case.label.split('/');
+            let kname = parts.next().unwrap_or("?").to_string();
+            let letter = parts.next().unwrap_or("?").to_string();
+            tests.push((kname, letter, model.predict(&m.props), m.time_s));
+        }
+
+        // 4. optional persistence
+        if let Some(dir) = &cfg.out_dir {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            let cj = harness::campaign_to_json(&pm, device, overhead);
+            std::fs::write(dir.join(format!("campaign_{device}.json")), cj.pretty())
+                .map_err(|e| e.to_string())?;
+            std::fs::write(
+                dir.join(format!("model_{device}.json")),
+                model.to_json(self.schema()).pretty(),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+
+        Ok(DeviceResult {
+            device: device.to_string(),
+            model,
+            launch_overhead_s: overhead,
+            n_measurement_cases: pm.n_cases(),
+            tests,
+        })
+    }
+
+    /// Fit every configured device and assemble a persistable model
+    /// store (the `fit --save` flow): one measurement campaign + fit
+    /// per device — and nothing else; the test-kernel evaluation pass
+    /// of [`Engine::run_device`] contributes nothing to an artifact and
+    /// is skipped — fanned out on the executor, each weight table
+    /// fingerprinted against the profile and capability-derived suite
+    /// that produced it. The returned store is what `predict --models`
+    /// and `serve` answer from (install it with
+    /// [`Engine::install_store`] to serve it from this engine).
+    pub fn fit_store(&self) -> Result<ModelStore, String> {
+        let cfg = self.config();
+        let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
+        let results = par_map(cfg.devices.clone(), device_workers, |dev| {
+            self.campaign_and_fit(&dev).map(|(gpu, pm, model, overhead)| {
+                (gpu.profile, pm.n_cases(), model, overhead)
+            })
+        });
+        let mut store = ModelStore::new(self.schema(), cfg.extract);
+        for r in results {
+            let (profile, n_cases, model, overhead) = r?;
+            store.insert(StoredModel::new(model, overhead, n_cases, &profile));
+        }
+        Ok(store)
+    }
+
+    /// Measure one device for fold evaluation: run the (possibly
+    /// filtered) measurement campaign and the (possibly filtered)
+    /// evaluation-kernel zoo once, and instantiate the fold solver.
+    /// The filters receive case labels; cross-validation's quick mode
+    /// passes its coverage-preserving predicates here.
+    pub fn measure_fold_ctx(
+        &self,
+        profile: &DeviceProfile,
+        campaign_keep: &(dyn Fn(&str) -> bool + Sync),
+        zoo_keep: &(dyn Fn(&str) -> bool + Sync),
+        workers: usize,
+    ) -> Result<FoldCtx, String> {
+        let cfg = self.config();
+        let gpu = SimGpu::new(profile.clone());
+        let mut cases = kernels::measurement_suite(&gpu.profile);
+        cases.retain(|c| campaign_keep(&c.label));
+        let (campaign, overhead) = run_campaign(
+            &gpu,
+            &cases,
+            self.schema(),
+            &cfg.protocol,
+            cfg.extract,
+            workers,
+        )?;
+
+        let mut zoo_cases = kernels::eval_suite(&gpu.profile);
+        zoo_cases.retain(|c| zoo_keep(&c.label));
+        let measurements = measure_cases(
+            &gpu,
+            &zoo_cases,
+            self.schema(),
+            &cfg.protocol,
+            cfg.extract,
+            workers,
+        )?;
+        let zoo = zoo_cases
+            .iter()
+            .zip(measurements)
+            .map(|(c, m)| {
+                let mut parts = c.label.split('/');
+                let kernel = parts.next().unwrap_or("?").to_string();
+                let case = parts.next().unwrap_or("?").to_string();
+                ZooCase { kernel, case, label: m.label, props: m.props, time_s: m.time_s }
+            })
+            .collect();
+        Ok(FoldCtx {
+            device: profile.name.clone(),
+            campaign,
+            overhead,
+            zoo,
+            solver: make_solver(cfg.backend)?,
+        })
+    }
+
+    /// Assemble a fold's training set: the device's campaign plus every
+    /// zoo case passing `keep`. The §4.2 minimum-size floor applies to
+    /// training cases only — held-out cases are never floor-filtered —
+    /// and this is the single place the rule lives, shared by every
+    /// split.
+    pub fn fold_training_matrix(
+        &self,
+        ctx: &FoldCtx,
+        keep: &dyn Fn(&ZooCase) -> bool,
+    ) -> PropertyMatrix {
+        let floor = self.config().protocol.min_time_factor * ctx.overhead;
+        let mut pm = ctx.campaign.clone();
+        for z in &ctx.zoo {
+            if keep(z) && z.time_s >= floor {
+                pm.push(z.label.clone(), z.props.clone(), z.time_s);
+            }
+        }
+        pm
+    }
+
+    /// Fit one fold's model on an assembled training matrix, using the
+    /// context's per-device solver.
+    pub fn fit_fold_model(
+        &self,
+        ctx: &FoldCtx,
+        pm: &PropertyMatrix,
+    ) -> Result<Model, String> {
+        perfmodel::fit(&ctx.device, pm, self.schema(), ctx.solver.as_ref())
+    }
+}

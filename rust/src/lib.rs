@@ -32,6 +32,13 @@
 //!    predictions from them — batched, structurally cached, without
 //!    re-running a measurement campaign ([`service`]).
 //!
+//! Every entry point — the batch pipeline, cross-validation, and the
+//! threaded prediction server — shares one
+//! measurement→extraction→fit→predict core ([`engine`]): the device
+//! registry, the eviction-bounded props cache, capability-derived
+//! suite construction, the solver factory and an atomically
+//! hot-swappable model store live there.
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 pub mod util;
@@ -45,6 +52,7 @@ pub mod kernels;
 pub mod perfmodel;
 pub mod harness;
 pub mod runtime;
+pub mod engine;
 pub mod coordinator;
 pub mod crossval;
 pub mod report;

@@ -16,8 +16,13 @@
 //!   or a whole `--requests` file of line-delimited JSON); without
 //!   `--models`: legacy predict + measure of the §5 test kernels
 //! * `serve`    — the prediction server: line-delimited JSON requests
-//!   on stdin (responses on stdout, summary on stderr), or a TCP
-//!   listener with `--port`; requires `--models`
+//!   on stdin (responses on stdout, summary on stderr), or a threaded
+//!   TCP listener with `--port` (one thread per connection, shared
+//!   cache, `--max-conn` connection guard, drained by a
+//!   `{"cmd": "shutdown"}` request); requires `--models`. `--watch`
+//!   hot-reloads the artifact when the file changes (a bad rewrite
+//!   keeps the old models serving). Requests may also be batched
+//!   device×kernel matrices (`{"cmd": "matrix", ...}`)
 //! * `devices`  — list the device registry (built-ins + `--devices`
 //!   file); `--export <path>` writes a commented, loadable
 //!   `profiles.json` template instead
@@ -36,7 +41,7 @@ use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
 use uniperf::gpusim::registry;
 use uniperf::harness::Protocol;
 use uniperf::report::{render_service, render_table2};
-use uniperf::service::{ModelStore, Service, ServiceConfig};
+use uniperf::service::{tcp, ModelStore, Service, ServiceConfig};
 use uniperf::stats::{extract, ExtractOpts, Schema};
 use uniperf::util::cli::{parse, usage, Args, OptSpec};
 use uniperf::util::json::Json;
@@ -63,8 +68,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "case", help: "predict: size-case letter (a-d)", is_flag: false, default: None },
         OptSpec { name: "env", help: "predict: size bindings, e.g. n=4096 or n=512,m=64", is_flag: false, default: None },
         OptSpec { name: "requests", help: "predict: answer a file of line-delimited JSON requests", is_flag: false, default: None },
-        OptSpec { name: "port", help: "serve: listen on 127.0.0.1:<port> instead of stdin/stdout", is_flag: false, default: None },
+        OptSpec { name: "port", help: "serve: listen on 127.0.0.1:<port> instead of stdin/stdout (threaded, one connection per thread)", is_flag: false, default: None },
         OptSpec { name: "batch", help: "serve: requests per executor batch", is_flag: false, default: Some("64") },
+        OptSpec { name: "watch", help: "serve: hot-reload --models when the file changes (polled between batches/connections)", is_flag: true, default: None },
+        OptSpec { name: "max-conn", help: "serve --port: concurrent-connection guard", is_flag: false, default: Some("256") },
         OptSpec { name: "export", help: "devices: write a commented profiles.json template to this path", is_flag: false, default: None },
     ]
 }
@@ -146,6 +153,7 @@ fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, Stri
         batch: args.get_usize("batch", 64)?,
         workers: cfg.workers,
         extract: cfg.extract,
+        ..ServiceConfig::default()
     };
     Service::new(store, cfg.registry.clone(), svc_cfg)
 }
@@ -321,7 +329,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             let models = args.get("models").ok_or(
                 "serve requires --models <models.json> (create one with 'fit --save')",
             )?;
-            let svc = load_service(models, &cfg, &args)?;
+            let mut svc = load_service(models, &cfg, &args)?;
+            if args.has_flag("watch") {
+                // hot artifact reload: polled between batches (stdin
+                // loop) / before each connection (TCP); a bad rewrite
+                // keeps the old store serving
+                svc.watch(Path::new(models));
+            }
             match args.get("port") {
                 None => {
                     let stdin = std::io::stdin();
@@ -332,41 +346,21 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                 Some(p) => {
                     let port: u16 =
                         p.parse().map_err(|_| format!("bad --port '{p}'"))?;
+                    let max_conn = args.get_usize("max-conn", tcp::DEFAULT_MAX_CONNECTIONS)?;
                     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
                         .map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
                     eprintln!(
                         "uniperf serve: listening on 127.0.0.1:{port} \
-                         (line-delimited JSON requests, one response line each)"
+                         (line-delimited JSON requests, one response line each; \
+                         threaded, up to {max_conn} connections; send \
+                         {{\"cmd\": \"shutdown\"}} to drain)"
                     );
-                    for stream in listener.incoming() {
-                        // a failed accept (client reset mid-handshake,
-                        // transient fd exhaustion) must not take the
-                        // long-running listener down
-                        let stream = match stream {
-                            Ok(s) => s,
-                            Err(e) => {
-                                eprintln!("accept failed: {e}");
-                                continue;
-                            }
-                        };
-                        let reader = match stream.try_clone() {
-                            Ok(s) => std::io::BufReader::new(s),
-                            Err(e) => {
-                                eprintln!("connection setup failed: {e}");
-                                continue;
-                            }
-                        };
-                        // conversational loop: every request line is
-                        // answered before the next read, so request/
-                        // response clients never deadlock on the batch
-                        // window. Stats accumulate across connections;
-                        // a broken client must not take the listener
-                        // down.
-                        match svc.serve_interactive(reader, stream) {
-                            Ok(summary) => eprint!("{}", render_service(&summary)),
-                            Err(e) => eprintln!("connection error: {e}"),
-                        }
-                    }
+                    // per-connection threads over one shared service;
+                    // returns once a shutdown request drained every
+                    // connection
+                    let svc = std::sync::Arc::new(svc);
+                    let summary = tcp::serve_threaded(&svc, listener, max_conn)?;
+                    eprint!("{}", render_service(&summary));
                 }
             }
             Ok(())

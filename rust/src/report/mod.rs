@@ -326,6 +326,8 @@ pub struct ServiceSummary {
     pub batches: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// entries evicted by the props cache's second-chance policy
+    pub cache_evictions: u64,
     /// distinct kernel structures extracted and cached
     pub distinct_kernels: usize,
     pub latency_p50_us: f64,
@@ -354,6 +356,7 @@ impl ServiceSummary {
             ("batches", Json::Num(self.batches as f64)),
             ("cache_hits", Json::Num(self.cache_hits as f64)),
             ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
             ("distinct_kernels", Json::Num(self.distinct_kernels as f64)),
             ("hit_rate", Json::Num(self.hit_rate())),
             ("latency_p50_us", Json::Num(self.latency_p50_us)),
@@ -378,11 +381,13 @@ pub fn render_service(s: &ServiceSummary) -> String {
     );
     let _ = writeln!(
         out,
-        "props cache: {} distinct kernels, {} hits / {} misses ({:.1}% hit rate)",
+        "props cache: {} distinct kernels, {} hits / {} misses ({:.1}% hit rate), \
+         {} evictions",
         s.distinct_kernels,
         s.cache_hits,
         s.cache_misses,
-        100.0 * s.hit_rate()
+        100.0 * s.hit_rate(),
+        s.cache_evictions
     );
     let _ = writeln!(
         out,
@@ -528,7 +533,8 @@ mod tests {
             batches: 5,
             cache_hits: 270,
             cache_misses: 18,
-            distinct_kernels: 18,
+            cache_evictions: 3,
+            distinct_kernels: 15,
             latency_p50_us: 12.3,
             latency_p99_us: 180.0,
             latency_mean_us: 20.1,
@@ -540,6 +546,7 @@ mod tests {
             "requests 288",
             "batches 5",
             "270 hits / 18 misses",
+            "3 evictions",
             "p50 12.3",
             "p99 180.0",
             "min 812.0",

@@ -1,19 +1,30 @@
-//! Sharded, structurally-keyed property cache for the prediction
-//! service.
+//! Sharded, structurally-keyed, eviction-bounded property cache for the
+//! prediction engine.
 //!
 //! The harness's per-campaign [`crate::harness::PropsCache`] keys on
-//! kernel *name* + group shape and lives for one campaign; the service
-//! needs a long-lived, concurrently shared cache that also recognizes
-//! *inline* kernels clients submit under arbitrary names. Keys are
-//! therefore the structural kernel hash ([`super::hash::structural_hash`])
-//! plus the extraction options, and the map is sharded: each shard is an
-//! independent mutex, so worker threads handling a batch only contend
-//! when their kernels land in the same shard.
+//! kernel *name* + group shape and lives for one campaign; the serving
+//! path needs a long-lived, concurrently shared cache that also
+//! recognizes *inline* kernels clients submit under arbitrary names.
+//! Keys are therefore the structural kernel hash
+//! ([`super::hash::structural_hash`]) plus the extraction options, and
+//! the map is sharded: each shard is an independent mutex, so worker
+//! threads handling a batch only contend when their kernels land in the
+//! same shard.
 //!
 //! A miss extracts *under the shard lock*: concurrent requests for the
 //! same new kernel serialize, every later one observes a hit, and the
 //! hit/miss counters are deterministic for a given request stream
 //! (asserted by `benches/serve.rs`).
+//!
+//! **Eviction.** Each shard is capacity-bounded with a second-chance
+//! (clock) policy: a hit sets the entry's referenced bit; when a full
+//! shard needs room, the clock hand sweeps its ring, clearing bits
+//! until it finds an unreferenced entry to evict. Entries a live
+//! workload keeps touching therefore survive churn from one-off inline
+//! kernels, and a hostile client cycling unique kernel structures can
+//! grow the cache no further than its configured capacity. Evictions
+//! are counted ([`SharedPropsCache::evictions`]) and surface in the
+//! service summary and `BENCH_serve.json`.
 //!
 //! Keying has one subtlety: `stats::extract` uses its classification
 //! binding to bucket accesses into stride classes, and for the library
@@ -37,6 +48,12 @@ use std::sync::{Arc, Mutex};
 
 const SHARDS: usize = 16;
 
+/// Default total capacity (entries across all shards). Sized so the
+/// whole evaluation zoo, every measurement class and a healthy inline
+/// population fit without eviction, while a hostile unique-kernel
+/// stream stays bounded at a few MB of symbolic counts.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
 /// Cache key: structural hash + the extraction options that shaped the
 /// symbolic counts (the whole struct, so new option fields extend the
 /// key automatically) + the classification-binding salt (0 for trusted
@@ -56,26 +73,83 @@ pub fn env_fingerprint(env: &Env) -> u64 {
     h.finish()
 }
 
-/// A concurrently shared symbolic-extraction cache.
+/// One cached extraction plus its second-chance referenced bit.
+struct Entry {
+    props: Arc<KernelProps>,
+    referenced: bool,
+}
+
+/// One capacity-bounded shard: the lookup map plus the clock ring the
+/// eviction hand sweeps (insertion order; evicted keys leave the ring).
+#[derive(Default)]
+struct Shard {
+    map: BTreeMap<Key, Entry>,
+    ring: Vec<Key>,
+    hand: usize,
+}
+
+impl Shard {
+    /// Second-chance eviction: sweep from the hand, clearing referenced
+    /// bits; evict the first unreferenced entry. Terminates within two
+    /// passes (the first pass clears every bit it crosses).
+    fn evict_one(&mut self) {
+        loop {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let key = self.ring[self.hand];
+            let e = self.map.get_mut(&key).expect("ring tracks live keys");
+            if e.referenced {
+                e.referenced = false;
+                self.hand += 1;
+            } else {
+                self.map.remove(&key);
+                // the next candidate slides into the hand position
+                self.ring.remove(self.hand);
+                return;
+            }
+        }
+    }
+}
+
+/// A concurrently shared, eviction-bounded symbolic-extraction cache.
 pub struct SharedPropsCache {
-    shards: Vec<Mutex<BTreeMap<Key, Arc<KernelProps>>>>,
+    shards: Vec<Mutex<Shard>>,
+    /// per-shard entry bound (total capacity ≈ `SHARDS ×` this)
+    per_shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl Default for SharedPropsCache {
     fn default() -> Self {
-        SharedPropsCache {
-            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+        SharedPropsCache::with_capacity(DEFAULT_CAPACITY)
     }
 }
 
 impl SharedPropsCache {
     pub fn new() -> SharedPropsCache {
         SharedPropsCache::default()
+    }
+
+    /// A cache bounded to roughly `capacity` total entries (rounded up
+    /// to a multiple of the shard count; at least one entry per shard —
+    /// the hot entry of a request being answered can never be evicted
+    /// out from under it).
+    pub fn with_capacity(capacity: usize) -> SharedPropsCache {
+        SharedPropsCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap: capacity.div_ceil(SHARDS).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The total entry bound (`SHARDS ×` the per-shard capacity).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * SHARDS
     }
 
     /// Extracted properties for a kernel, from cache when its structure
@@ -100,15 +174,21 @@ impl SharedPropsCache {
             if env_keyed { env_fingerprint(classify_env) } else { 0 },
         );
         let shard = &self.shards[(key.0 as usize) % SHARDS];
-        let mut map = shard.lock().unwrap();
-        if let Some(p) = map.get(&key) {
+        let mut shard = shard.lock().unwrap();
+        if let Some(e) = shard.map.get_mut(&key) {
+            e.referenced = true;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((Arc::clone(p), true));
+            return Ok((Arc::clone(&e.props), true));
         }
         // extract under the shard lock: the first requester pays, every
         // concurrent duplicate waits and then hits
         let props = Arc::new(extract(kernel, classify_env, opts)?);
-        map.insert(key, Arc::clone(&props));
+        if shard.map.len() >= self.per_shard_cap {
+            shard.evict_one();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        shard.map.insert(key, Entry { props: Arc::clone(&props), referenced: false });
+        shard.ring.push(key);
         self.misses.fetch_add(1, Ordering::Relaxed);
         Ok((props, false))
     }
@@ -121,9 +201,14 @@ impl SharedPropsCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries evicted by the second-chance policy so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
     /// Distinct (kernel structure, options) entries currently cached.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -139,13 +224,20 @@ mod tests {
     use crate::qpoly::{env, LinExpr};
 
     fn scale_kernel(name: &str, array: &str) -> Kernel {
+        sized_kernel(name, array, 256)
+    }
+
+    /// A copy-scale kernel whose group width is part of its structure —
+    /// distinct `g` values produce distinct structural hashes, which the
+    /// eviction tests use to generate arbitrarily many cache entries.
+    fn sized_kernel(name: &str, array: &str, g: i64) -> Kernel {
         KernelBuilder::new(name, &["n"])
-            .group_dims_1d(LinExpr::var("n"), 256)
+            .group_dims_1d(LinExpr::var("n"), g)
             .global_array(array, DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
             .global_array("out", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
             .insn(
-                Access::new("out", vec![gid_lin_1d(256)]),
-                Expr::mul(Expr::lit(2.0), Expr::load(array, vec![gid_lin_1d(256)])),
+                Access::new("out", vec![gid_lin_1d(g)]),
+                Expr::mul(Expr::lit(2.0), Expr::load(array, vec![gid_lin_1d(g)])),
                 &["g0", "l0"],
                 &[],
             )
@@ -167,6 +259,7 @@ mod tests {
             .unwrap();
         assert!(hit);
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+        assert_eq!(cache.evictions(), 0);
     }
 
     #[test]
@@ -218,5 +311,60 @@ mod tests {
             .props_for(&scale_kernel("k", "a"), &e, ExtractOpts::default(), false)
             .unwrap();
         assert!(Arc::ptr_eq(&p1, &p2));
+    }
+
+    #[test]
+    fn capacity_bounds_the_cache_and_counts_evictions() {
+        // 64 total entries (4 per shard); push far more distinct
+        // structures through and the bound must hold exactly
+        let cache = SharedPropsCache::with_capacity(64);
+        assert_eq!(cache.capacity(), 64);
+        let e = env(&[("n", 1 << 16)]);
+        let n_structures = 200u64;
+        for g in 0..n_structures {
+            let k = sized_kernel("churn", "a", 8 + g as i64);
+            let (_, hit) = cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+            assert!(!hit, "every structure is distinct");
+        }
+        assert!(cache.len() <= cache.capacity(), "len {} over bound", cache.len());
+        assert!(cache.evictions() > 0, "churn past capacity must evict");
+        // conservation: everything inserted either lives or was evicted
+        assert_eq!(cache.misses(), cache.len() as u64 + cache.evictions());
+        assert_eq!(cache.misses(), n_structures);
+    }
+
+    #[test]
+    fn second_chance_keeps_the_hot_entry_alive_through_churn() {
+        let cache = SharedPropsCache::with_capacity(64);
+        let e = env(&[("n", 1 << 16)]);
+        let hot = sized_kernel("hot", "a", 256);
+        cache.props_for(&hot, &e, ExtractOpts::default(), false).unwrap();
+        // interleave: churn a distinct structure, then touch the hot
+        // one — its referenced bit is always set when the clock sweeps,
+        // so it survives every eviction pass
+        for g in 0..150 {
+            let k = sized_kernel("churn", "a", 300 + g);
+            cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+            let (_, hit) = cache.props_for(&hot, &e, ExtractOpts::default(), false).unwrap();
+            assert!(hit, "hot entry evicted after {g} churn inserts");
+        }
+        assert!(cache.evictions() > 0, "the churn stream must have evicted");
+    }
+
+    #[test]
+    fn tiny_capacity_still_serves_every_request() {
+        // pathological bound: one entry per shard; correctness (the
+        // right properties come back) must survive constant eviction
+        let cache = SharedPropsCache::with_capacity(1);
+        assert_eq!(cache.capacity(), SHARDS);
+        let e = env(&[("n", 4096)]);
+        for round in 0..3 {
+            for g in [64, 128, 256, 512] {
+                let k = sized_kernel("t", "a", g);
+                let (p, _) = cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+                assert_eq!(p.kernel_name, "t", "round {round} g {g}");
+            }
+        }
+        assert!(cache.len() <= cache.capacity());
     }
 }

@@ -1,31 +1,46 @@
 //! `service` — the batched, cached kernel-runtime prediction server.
 //!
-//! Everything upstream of this module is a *batch reproduction*
-//! pipeline: measure, fit, report. This subsystem turns the fitted
-//! model into a queryable artifact, per the ROADMAP north star (serve
-//! heavy traffic as fast as the hardware allows):
+//! Since the engine refactor this module is deliberately thin: it owns
+//! **request parsing** ([`request`], [`spec`]) and **response
+//! rendering + accounting**, and delegates every resolution,
+//! extraction, caching and weight decision to the shared
+//! [`crate::engine::Engine`]:
 //!
 //! 1. **Artifacts** ([`store`]) — `fit --save models.json` persists one
 //!    weight table per device, fingerprinted against the schema, the
 //!    device profile and the capability-derived measurement suite;
-//!    [`Service::new`] refuses stale artifacts.
-//! 2. **Requests** ([`request`]) — line-delimited JSON naming either an
-//!    evaluation-zoo kernel or an inline `lpir` kernel spec ([`spec`]).
+//!    [`crate::engine::Engine::install_store`] refuses stale artifacts,
+//!    and a [`crate::engine::Reloader`] can hot-swap a rewritten
+//!    artifact between batches/connections (`serve --watch`).
+//! 2. **Requests** ([`request`]) — line-delimited JSON: single-device
+//!    predictions (named zoo kernel or inline `lpir` spec), batched
+//!    device×kernel `matrix` requests (parsed once, predicted across
+//!    every named device), and a `shutdown` drain command.
 //! 3. **Caching** ([`cache`]) — symbolic extraction is the expensive
-//!    step (milliseconds); results are shared through a sharded cache
-//!    keyed by the *structural* kernel hash ([`hash`]), so a warm
-//!    request never re-runs extraction and drops straight onto the
-//!    compiled [`crate::qpoly::tape::PwTape`] fast path (microseconds).
+//!    step (milliseconds); results are shared through the engine's
+//!    sharded, eviction-bounded cache keyed by the *structural* kernel
+//!    hash ([`hash`]), so a warm request never re-runs extraction and
+//!    drops straight onto the compiled [`crate::qpoly::tape::PwTape`]
+//!    fast path (microseconds).
 //! 4. **Batching** ([`Service::serve`]) — requests drain in
 //!    deterministic batches onto [`crate::util::executor::par_map`];
 //!    responses preserve input order, and per-request latency plus
-//!    cache-hit accounting surface in a
+//!    cache-hit/eviction accounting surface in a
 //!    [`crate::report::render_service`] summary. Cache hits are
 //!    excluded from the extraction-time floor entirely — a hit is a
 //!    non-run, not a 0-second run (the exclusion rule
 //!    [`crate::harness::Sample::Cached`] /
 //!    [`crate::harness::Protocol::reduce_samples`] define and
 //!    unit-test).
+//! 5. **Hostile input** — request lines are length-capped
+//!    ([`ServiceConfig::max_line`]): an oversized line is answered with
+//!    an `{"error": ...}` (best-effort `id` echo from the retained
+//!    prefix) instead of buffering without bound, and the stream then
+//!    resumes at the next newline.
+//!
+//! The TCP listener ([`tcp`]) serves each connection on its own thread
+//! over one shared `Arc<Service>`; `{"cmd": "shutdown"}` drains it
+//! deterministically.
 //!
 //! Property vectors are hardware-independent (the cross-machine result
 //! of arXiv:1904.09538), so one cached extraction answers queries for
@@ -36,23 +51,28 @@ pub mod hash;
 pub mod request;
 pub mod spec;
 pub mod store;
+pub mod tcp;
 
 pub use cache::SharedPropsCache;
-pub use request::{KernelRef, Request};
+pub use request::{KernelRef, MatrixRequest, PredictRequest, Request};
 pub use store::{ModelStore, StoredModel};
 
+use crate::engine::{Config, Engine, Reloader};
 use crate::gpusim::DeviceRegistry;
-use crate::kernels::{self, KernelCase};
 use crate::report::ServiceSummary;
-use crate::stats::{ExtractOpts, Schema};
+use crate::stats::ExtractOpts;
 use crate::util::executor::{default_workers, par_map};
-use crate::util::intern::Env;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Default request-line length cap (bytes). Far above any legitimate
+/// inline kernel spec, far below what a hostile unterminated stream
+/// could otherwise make one connection buffer.
+pub const MAX_REQUEST_LINE: usize = 1 << 20;
 
 /// Serving configuration.
 #[derive(Clone, Copy, Debug)]
@@ -63,11 +83,22 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// extraction options (must match how the model was fitted)
     pub extract: ExtractOpts,
+    /// request-line length cap in bytes ([`MAX_REQUEST_LINE`] default)
+    pub max_line: usize,
+    /// props-cache entry bound (see
+    /// [`SharedPropsCache::with_capacity`])
+    pub cache_capacity: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { batch: 64, workers: default_workers(), extract: ExtractOpts::default() }
+        ServiceConfig {
+            batch: 64,
+            workers: default_workers(),
+            extract: ExtractOpts::default(),
+            max_line: MAX_REQUEST_LINE,
+            cache_capacity: cache::DEFAULT_CAPACITY,
+        }
     }
 }
 
@@ -119,191 +150,122 @@ struct Stats {
     min_extract_s: Mutex<Option<f64>>,
 }
 
-/// The prediction server: a validated model store + device registry +
-/// shared props cache, answering requests concurrently.
+/// The prediction server front end: request parsing + response
+/// rendering + accounting over a shared [`Engine`] (which owns the
+/// registry, the validated hot-swappable model store and the
+/// eviction-bounded props cache).
 pub struct Service {
-    registry: DeviceRegistry,
-    store: ModelStore,
-    schema: Schema,
-    cache: SharedPropsCache,
+    engine: Arc<Engine>,
     cfg: ServiceConfig,
-    /// per-device evaluation-zoo suites, precomputed for every device
-    /// the store holds weights for (named-kernel resolution)
-    suites: BTreeMap<String, Vec<KernelCase>>,
     stats: Stats,
-}
-
-struct Prediction {
-    id: Option<Json>,
-    device: String,
-    kernel: String,
-    case: Option<String>,
-    predicted_s: f64,
-    cache_hit: bool,
-    extract_s: Option<f64>,
+    /// set by a `{"cmd": "shutdown"}` request: serving loops stop
+    /// reading after their current batch, and the TCP listener drains
+    shutdown: AtomicBool,
+    /// `serve --watch`: hot artifact reload, polled between batches
+    /// and connections
+    reload: Option<Reloader>,
 }
 
 impl Service {
-    /// Build a service over a loaded artifact. The store is
-    /// staleness-validated against `registry` (profile + suite + schema
-    /// fingerprints) before anything is served.
+    /// Build a service over a loaded artifact. The store is validated
+    /// against `registry` (profile + suite + schema fingerprints and
+    /// the extraction options) and installed into a fresh engine.
     pub fn new(
         store: ModelStore,
         registry: DeviceRegistry,
         cfg: ServiceConfig,
     ) -> Result<Service, String> {
-        let schema = Schema::full();
-        store.validate_against(&registry, &schema)?;
-        if store.extract != cfg.extract {
+        let engine = Engine::with_cache_capacity(
+            Config { registry, extract: cfg.extract, workers: cfg.workers, ..Config::default() },
+            cfg.cache_capacity,
+        );
+        engine.install_store(store)?;
+        Service::over(Arc::new(engine), cfg)
+    }
+
+    /// Build a service front end over an existing engine (which must
+    /// already have a store installed). Lets tests and embedders share
+    /// one engine between the batch pipelines and the server.
+    pub fn over(engine: Arc<Engine>, cfg: ServiceConfig) -> Result<Service, String> {
+        if engine.store_snapshot().is_none() {
+            return Err("no model artifact installed (run `fit --save`)".into());
+        }
+        if engine.config().extract != cfg.extract {
             return Err(format!(
-                "model artifact was fitted under extraction options {:?} but the \
-                 service was configured with {:?} — serve with matching flags or \
-                 re-run `fit --save`",
-                store.extract, cfg.extract
+                "engine extraction options {:?} do not match the service \
+                 configuration {:?}",
+                engine.config().extract,
+                cfg.extract
             ));
         }
-        if store.is_empty() {
-            return Err("model artifact holds no fitted devices".into());
-        }
-        let mut suites = BTreeMap::new();
-        for device in store.devices() {
-            let profile = registry.get(&device).expect("validated above");
-            suites.insert(device.clone(), kernels::eval_suite(profile));
-        }
         Ok(Service {
-            registry,
-            store,
-            schema,
-            cache: SharedPropsCache::new(),
+            engine,
             cfg,
-            suites,
             stats: Stats::default(),
+            shutdown: AtomicBool::new(false),
+            reload: None,
         })
     }
 
-    pub fn store(&self) -> &ModelStore {
-        &self.store
+    /// The shared engine behind this service.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Snapshot of the currently installed model store.
+    pub fn store(&self) -> Arc<ModelStore> {
+        self.engine.store_snapshot().expect("service construction requires a store")
     }
 
     pub fn cache(&self) -> &SharedPropsCache {
-        &self.cache
+        self.engine.cache()
     }
 
-    /// Resolve + predict one parsed request.
-    fn predict_request(&self, req: &Request) -> Result<Prediction, String> {
-        let profile = self
-            .registry
-            .get(&req.device)
-            .ok_or_else(|| format!("unknown device '{}'", req.device))?;
-        let sm = self.store.get(&req.device).ok_or_else(|| {
-            format!(
-                "no fitted model for device '{}' in the artifact (have: {})",
-                req.device,
-                self.store.devices().join(", ")
-            )
-        })?;
-
-        // resolve the kernel + parameter binding
-        let user_env = |pairs: &[(String, i64)]| {
-            let mut e = Env::new();
-            for (k, v) in pairs {
-                e.insert(k.as_str(), *v);
-            }
-            e
-        };
-        let (kernel, env, kname, case_letter) = match &req.kref {
-            KernelRef::Named { name, case } => {
-                let suite = self.suites.get(&req.device).expect("suites cover store devices");
-                let cases: Vec<&KernelCase> =
-                    suite.iter().filter(|c| c.kernel.name == *name).collect();
-                if cases.is_empty() {
-                    let mut known: Vec<&str> = Vec::new();
-                    for c in suite {
-                        if !known.contains(&c.kernel.name.as_str()) {
-                            known.push(&c.kernel.name);
-                        }
-                    }
-                    return Err(format!(
-                        "unknown kernel '{name}' (known: {})",
-                        known.join(", ")
-                    ));
-                }
-                let (kernel, env, case_letter) = match (case, &req.env) {
-                    (Some(letter), _) => {
-                        let found = cases
-                            .iter()
-                            .find(|c| c.label.split('/').nth(1) == Some(letter.as_str()))
-                            .ok_or_else(|| {
-                                format!("kernel '{name}' has no size case '{letter}' (a-d)")
-                            })?;
-                        (&found.kernel, found.env.clone(), Some(letter.clone()))
-                    }
-                    (None, Some(pairs)) => (&cases[0].kernel, user_env(pairs), None),
-                    (None, None) => {
-                        // default: the smallest (`a`) size case
-                        let found = cases
-                            .iter()
-                            .find(|c| c.label.split('/').nth(1) == Some("a"))
-                            .unwrap_or(&cases[0]);
-                        (
-                            &found.kernel,
-                            found.env.clone(),
-                            found.label.split('/').nth(1).map(|s| s.to_string()),
-                        )
-                    }
-                };
-                (kernel, env, name.clone(), case_letter)
-            }
-            KernelRef::Inline(k) => (
-                k.as_ref(),
-                user_env(req.env.as_ref().expect("parser enforces env for inline")),
-                k.name.clone(),
-                None,
-            ),
-        };
-
-        // every size parameter must be bound
-        for p in &kernel.params {
-            if env.get(*p).is_none() {
-                return Err(format!("kernel '{kname}' requires parameter '{p}' in env"));
-            }
-        }
-        // reject launches the target device cannot run
-        let (gs0, gs1) = kernel.group_size_at(&env)?;
-        if gs0 * gs1 > profile.max_group_size as i64 {
-            return Err(format!(
-                "group size {}x{} exceeds {}'s limit of {}",
-                gs0, gs1, profile.name, profile.max_group_size
-            ));
-        }
-
-        // cached symbolic extraction -> tape evaluation -> inner product.
-        // Suite-configured library cases share one entry across sizes
-        // and devices (their stride classes are size-structural by
-        // construction); any request supplying its *own* binding —
-        // inline kernels and named kernels with a user env — is
-        // additionally keyed by that binding, so a degenerate size
-        // cannot poison the shared classification.
-        let env_keyed =
-            matches!(&req.kref, KernelRef::Inline(_)) || req.env.is_some();
-        let t0 = Instant::now();
-        let (props, hit) = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed)?;
-        let extract_s = (!hit).then(|| t0.elapsed().as_secs_f64());
-        let v = props.eval(&self.schema, &env)?;
-        Ok(Prediction {
-            id: req.id.clone(),
-            device: req.device.clone(),
-            kernel: kname,
-            case: case_letter,
-            predicted_s: sm.model.predict(&v),
-            cache_hit: hit,
-            extract_s,
-        })
+    /// Watch `path` (the `--models` artifact) for rewrites: the serving
+    /// loops re-stat it between batches and connections and atomically
+    /// swap a validated new store in ([`Reloader`]). The current file
+    /// state counts as already loaded.
+    pub fn watch(&mut self, path: &Path) {
+        self.reload = Some(Reloader::primed(path));
     }
 
-    /// Handle one request line: parse, predict, account, and render the
-    /// response object. Never panics on malformed input — errors come
-    /// back as `{"error": ...}` responses (echoing `id` when it parsed).
+    /// Has a `{"cmd": "shutdown"}` request asked the serving loops to
+    /// drain?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Poll the watched artifact now (no-op when not watching).
+    /// `Some(Ok(true))` means a new store was swapped in.
+    pub fn poll_reload(&self) -> Option<Result<bool, String>> {
+        self.reload.as_ref().map(|r| r.maybe_reload(&self.engine))
+    }
+
+    /// Between-batches reload tick: poll and log, never fail the
+    /// serving loop — a bad rewrite keeps the old store serving.
+    fn reload_tick(&self) {
+        match self.poll_reload() {
+            Some(Ok(true)) => eprintln!("uniperf serve: reloaded model artifact"),
+            Some(Err(e)) => {
+                eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}")
+            }
+            Some(Ok(false)) | None => {}
+        }
+    }
+
+    /// Record a timed extraction into the running floor (cache hits
+    /// pass `None` — the [`crate::harness::Sample::Cached`] rule).
+    fn note_extract(&self, extract_s: Option<f64>) {
+        if let Some(t) = extract_s {
+            let mut m = self.stats.min_extract_s.lock().unwrap();
+            *m = Some(m.map_or(t, |x| x.min(t)));
+        }
+    }
+
+    /// Handle one request line: parse, delegate to the engine, account,
+    /// and render the response object. Never panics on malformed input —
+    /// errors come back as `{"error": ...}` responses (echoing `id` when
+    /// it parsed).
     pub fn respond(&self, line: &str) -> Json {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -322,17 +284,20 @@ impl Service {
                 let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
                 error_resp(id.as_ref(), e)
             }
-            Ok(req) => match self.predict_request(&req) {
+            Ok(Request::Shutdown { id }) => {
+                // flag first: the loop that flushes this response stops
+                // reading right after
+                self.shutdown.store(true, Ordering::SeqCst);
+                let mut pairs = vec![("ok", Json::Str("shutdown".into()))];
+                if let Some(id) = id {
+                    pairs.push(("id", id));
+                }
+                Json::obj(pairs)
+            }
+            Ok(Request::Predict(req)) => match self.engine.predict(&req) {
                 Err(e) => error_resp(req.id.as_ref(), e),
                 Ok(p) => {
-                    // a cache hit is a non-run: `extract_s` is `None`
-                    // (the `harness::Sample::Cached` exclusion rule),
-                    // so it contributes nothing to the floor instead
-                    // of entering it as a 0-second sample
-                    if let Some(t) = p.extract_s {
-                        let mut m = self.stats.min_extract_s.lock().unwrap();
-                        *m = Some(m.map_or(t, |x| x.min(t)));
-                    }
+                    self.note_extract(p.extract_s);
                     let mut pairs = vec![
                         ("device", Json::Str(p.device)),
                         ("kernel", Json::Str(p.kernel)),
@@ -346,6 +311,45 @@ impl Service {
                         pairs.push(("case", Json::Str(c)));
                     }
                     if let Some(id) = p.id {
+                        pairs.push(("id", id));
+                    }
+                    Json::obj(pairs)
+                }
+            },
+            Ok(Request::Matrix(req)) => match self.engine.predict_matrix(&req) {
+                Err(e) => error_resp(req.id.as_ref(), e),
+                Ok(mp) => {
+                    let results = mp
+                        .per_device
+                        .into_iter()
+                        .map(|(device, outcome)| match outcome {
+                            Ok(p) => {
+                                self.note_extract(p.extract_s);
+                                Json::obj(vec![
+                                    ("device", Json::Str(device)),
+                                    ("predicted_s", Json::Num(p.predicted_s)),
+                                    (
+                                        "cache",
+                                        Json::Str(
+                                            if p.cache_hit { "hit".into() } else { "miss".into() },
+                                        ),
+                                    ),
+                                ])
+                            }
+                            Err(e) => Json::obj(vec![
+                                ("device", Json::Str(device)),
+                                ("error", Json::Str(e)),
+                            ]),
+                        })
+                        .collect();
+                    let mut pairs = vec![
+                        ("kernel", Json::Str(mp.kernel)),
+                        ("results", Json::Arr(results)),
+                    ];
+                    if let Some(c) = mp.case {
+                        pairs.push(("case", Json::Str(c)));
+                    }
+                    if let Some(id) = mp.id {
                         pairs.push(("id", id));
                     }
                     Json::obj(pairs)
@@ -404,23 +408,63 @@ impl Service {
         Ok(self.summary())
     }
 
-    fn serve_batched<R: BufRead>(
+    /// One TCP connection's serving loop (conversational, no summary —
+    /// the threaded listener prints one summary when it drains).
+    pub(crate) fn serve_connection<R: BufRead, W: Write>(
         &self,
         reader: R,
+        mut out: W,
+    ) -> Result<(), String> {
+        self.serve_batched(reader, &mut out, 1)
+    }
+
+    fn serve_batched<R: BufRead>(
+        &self,
+        mut reader: R,
         out: &mut impl Write,
         batch: usize,
     ) -> Result<(), String> {
         let mut pending: Vec<String> = Vec::new();
-        for line in reader.lines() {
-            let line = line.map_err(|e| format!("read request stream: {e}"))?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            pending.push(line);
-            if pending.len() >= batch.max(1) {
-                self.flush(&mut pending, out)?;
+        let interrupted = || self.shutdown_requested();
+        loop {
+            match read_request_line(&mut reader, self.cfg.max_line, &interrupted)? {
+                ReadLine::Eof => break,
+                ReadLine::Line(line) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    pending.push(line);
+                    if pending.len() >= batch.max(1) {
+                        self.reload_tick();
+                        self.flush(&mut pending, out)?;
+                        if self.shutdown_requested() {
+                            return Ok(());
+                        }
+                    }
+                }
+                ReadLine::Oversized { id } => {
+                    // answer in stream order: everything read before the
+                    // oversized line first, then its bounded error
+                    self.flush(&mut pending, out)?;
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let mut pairs = vec![(
+                        "error",
+                        Json::Str(format!(
+                            "request line exceeds the {} byte cap",
+                            self.cfg.max_line
+                        )),
+                    )];
+                    if let Some(id) = id {
+                        pairs.push(("id", id));
+                    }
+                    writeln!(out, "{}", Json::obj(pairs).compact())
+                        .map_err(|e| format!("write response: {e}"))?;
+                    out.flush().map_err(|e| format!("flush responses: {e}"))?;
+                }
             }
         }
+        self.reload_tick();
         self.flush(&mut pending, out)
     }
 
@@ -452,13 +496,15 @@ impl Service {
         // were Sample::Cached markers and never entered the floor
         let min_extract_us =
             self.stats.min_extract_s.lock().unwrap().map(|s| s * 1e6);
+        let cache = self.engine.cache();
         ServiceSummary {
             requests: self.stats.requests.load(Ordering::Relaxed),
             errors: self.stats.errors.load(Ordering::Relaxed),
             batches: self.stats.batches.load(Ordering::Relaxed),
-            cache_hits: self.cache.hits(),
-            cache_misses: self.cache.misses(),
-            distinct_kernels: self.cache.len(),
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+            cache_evictions: cache.evictions(),
+            distinct_kernels: cache.len(),
             latency_p50_us: pct(0.50),
             latency_p99_us: pct(0.99),
             latency_mean_us: mean,
@@ -467,39 +513,178 @@ impl Service {
     }
 }
 
+/// Outcome of one capped line read.
+enum ReadLine {
+    Eof,
+    Line(String),
+    /// the line blew the cap; only a prefix was retained (for the
+    /// best-effort `id` echo) and the rest was discarded to the newline
+    Oversized { id: Option<Json> },
+}
+
+/// Read one `\n`-terminated line, buffering at most `cap` bytes. An
+/// overlong line is consumed (without buffering) up to its newline so
+/// the stream stays line-synchronized.
+///
+/// Timeout-shaped read errors (`WouldBlock`/`TimedOut` — TCP
+/// connections carry a read timeout precisely for this) are not
+/// errors: they re-check `interrupted` and keep waiting, so a reader
+/// blocked on an idle socket observes a shutdown within one timeout
+/// tick instead of pinning its connection thread forever. An
+/// interrupted wait reads as end-of-stream.
+fn read_request_line<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    interrupted: &dyn Fn() -> bool,
+) -> Result<ReadLine, String> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut oversized = false;
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(e) => match e.kind() {
+                std::io::ErrorKind::Interrupted => continue,
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    if interrupted() {
+                        return Ok(ReadLine::Eof);
+                    }
+                    continue;
+                }
+                _ => return Err(format!("read request stream: {e}")),
+            },
+        };
+        if chunk.is_empty() {
+            // EOF
+            if buf.is_empty() && !oversized {
+                return Ok(ReadLine::Eof);
+            }
+            break;
+        }
+        let (take, found_newline) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => (pos, true),
+            None => (chunk.len(), false),
+        };
+        if !oversized {
+            if buf.len() + take > cap {
+                oversized = true;
+                let keep = cap - buf.len();
+                buf.extend_from_slice(&chunk[..keep]);
+            } else {
+                buf.extend_from_slice(&chunk[..take]);
+            }
+        }
+        let consumed = if found_newline { take + 1 } else { take };
+        r.consume(consumed);
+        if found_newline {
+            break;
+        }
+    }
+    if oversized {
+        return Ok(ReadLine::Oversized { id: salvage_id(&buf) });
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(ReadLine::Line(s)),
+        Err(_) => Err("read request stream: request line is not valid UTF-8".into()),
+    }
+}
+
+/// Shared fixtures for the in-crate serving tests (`service`, `tcp`,
+/// `engine`): hand-made — but registry-valid — stores that exercise
+/// resolution, caching and accounting without paying for a fit.
 #[cfg(test)]
-mod tests {
-    use super::*;
+pub(crate) mod testutil {
+    use super::{ModelStore, StoredModel};
     use crate::gpusim::registry::builtins;
     use crate::perfmodel::Model;
-    use crate::stats::extract;
+    use crate::stats::{ExtractOpts, Schema};
 
-    /// A store with hand-made (but valid) weights for one device — unit
-    /// tests exercise resolution/caching/accounting without paying for
-    /// a fit; end-to-end fidelity lives in `rust/tests/service.rs`.
-    fn toy_service() -> Service {
+    /// A store weighting only the work-group and constant columns:
+    /// prediction = `group_w · workgroups + const_w` per device.
+    pub(crate) fn toy_store(devices: &[(&str, f64, f64)]) -> ModelStore {
         let schema = Schema::full();
-        let mut weights = vec![0.0; schema.len()];
-        // weight only the launch-overhead columns: prediction =
-        // 2e-9 * workgroups + 5e-6
-        weights[schema.len() - 2] = 2e-9;
-        weights[schema.len() - 1] = 5e-6;
-        let model = Model {
-            device: "k40c".into(),
-            weights,
-            active: vec![schema.len() - 2, schema.len() - 1],
-            train_rel_err_geomean: 0.1,
-            solver: "native-cholesky",
-        };
         let mut store = ModelStore::new(&schema, ExtractOpts::default());
-        store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+        for (device, group_w, const_w) in devices {
+            let mut weights = vec![0.0; schema.len()];
+            weights[schema.len() - 2] = *group_w;
+            weights[schema.len() - 1] = *const_w;
+            let model = Model {
+                device: (*device).into(),
+                weights,
+                active: vec![schema.len() - 2, schema.len() - 1],
+                train_rel_err_geomean: 0.1,
+                solver: "native-cholesky",
+            };
+            store.insert(StoredModel::new(
+                model,
+                8e-6,
+                400,
+                builtins().get(device).unwrap(),
+            ));
+        }
+        store
+    }
+}
+
+/// Best-effort `id` recovery from the retained prefix of an oversized
+/// line: find the first `"id"` key and parse the simple scalar after
+/// it. Correlation-grade only — a quoted string containing `"id"`
+/// earlier in the line can defeat it, which costs nothing but the echo.
+fn salvage_id(prefix: &[u8]) -> Option<Json> {
+    let text = String::from_utf8_lossy(prefix);
+    let bytes = text.as_bytes();
+    let mut i = text.find("\"id\"")? + 4;
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b':' {
+        return None;
+    }
+    i += 1;
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= bytes.len() {
+        return None;
+    }
+    if bytes[i] == b'"' {
+        let start = i + 1;
+        let end = text[start..].find('"')? + start;
+        return Some(Json::Str(text[start..end].to_string()));
+    }
+    let start = i;
+    let mut j = i;
+    while j < bytes.len()
+        && (bytes[j].is_ascii_digit() || matches!(bytes[j], b'-' | b'+' | b'.' | b'e' | b'E'))
+    {
+        j += 1;
+    }
+    if j == start {
+        return None;
+    }
+    text[start..j].parse::<f64>().ok().map(Json::Num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::toy_store;
+    use super::*;
+    use crate::gpusim::registry::builtins;
+    use crate::kernels;
+    use crate::stats::{extract, Schema};
+
+    fn toy_service() -> Service {
         // single worker: the per-response `cache` field reflects actual
         // execution, and two identical requests racing on a cold cache
         // within one concurrent batch would otherwise flip which one
         // reports the miss (the predictions are identical either way) —
         // these unit tests assert exact hit/miss sequences
         let cfg = ServiceConfig { workers: 1, ..ServiceConfig::default() };
-        Service::new(store, builtins().clone(), cfg).unwrap()
+        Service::new(
+            toy_store(&[("k40c", 2e-9, 5e-6)]),
+            builtins().clone(),
+            cfg,
+        )
+        .unwrap()
     }
 
     #[test]
@@ -523,7 +708,8 @@ mod tests {
             .unwrap();
         let props = extract(&case.kernel, &case.env, ExtractOpts::default()).unwrap();
         let v = props.eval(&Schema::full(), &case.env).unwrap();
-        let expect = svc.store().get("k40c").unwrap().model.predict(&v);
+        let store = svc.store();
+        let expect = store.get("k40c").unwrap().model.predict(&v);
         assert_eq!(pred, expect);
         let s = svc.summary();
         assert_eq!((s.requests, s.errors, s.cache_hits, s.cache_misses), (2, 0, 1, 1));
@@ -640,21 +826,13 @@ mod tests {
     #[test]
     fn oversized_inline_group_rejected_for_device() {
         // r9_fury caps groups at 256; a 512-lane inline kernel must be
-        // rejected for it (after adding fury weights to the store)
-        let schema = Schema::full();
-        let mut weights = vec![0.0; schema.len()];
-        weights[schema.len() - 1] = 1e-6;
-        let model = Model {
-            device: "r9_fury".into(),
-            weights,
-            active: vec![schema.len() - 1],
-            train_rel_err_geomean: 0.1,
-            solver: "native-cholesky",
-        };
-        let mut store = ModelStore::new(&schema, ExtractOpts::default());
-        store.insert(StoredModel::new(model, 45e-6, 300, builtins().get("r9_fury").unwrap()));
-        let svc =
-            Service::new(store, builtins().clone(), ServiceConfig::default()).unwrap();
+        // rejected for it
+        let svc = Service::new(
+            toy_store(&[("r9_fury", 0.0, 1e-6)]),
+            builtins().clone(),
+            ServiceConfig::default(),
+        )
+        .unwrap();
         let spec = r#"{"params": ["n"],
             "dims": [{"iname": "g0", "tag": "group0", "hi": "n", "tiles": 512},
                      {"iname": "l0", "tag": "local0", "hi": 512}],
@@ -664,5 +842,140 @@ mod tests {
         let line = format!(r#"{{"device": "r9_fury", "lpir": {spec}, "env": {{"n": 8192}}}}"#);
         let r = svc.respond(&line);
         assert!(r.get_str("error").unwrap().contains("exceeds"), "{r}");
+    }
+
+    #[test]
+    fn matrix_request_predicts_across_store_devices() {
+        let svc = Service::new(
+            toy_store(&[("k40c", 2e-9, 5e-6), ("titan_x", 3e-9, 7e-6)]),
+            builtins().clone(),
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let r = svc.respond(r#"{"id": 11, "cmd": "matrix", "kernel": "fd5", "case": "a"}"#);
+        assert!(r.get("error").is_none(), "{r}");
+        assert_eq!(r.get_str("kernel"), Some("fd5"));
+        assert_eq!(r.get_str("case"), Some("a"));
+        assert_eq!(r.get_f64("id"), Some(11.0));
+        let results = r.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        // per-device predictions equal the single-device responses
+        for cell in results {
+            let device = cell.get_str("device").unwrap();
+            let single = svc.respond(&format!(
+                r#"{{"device": "{device}", "kernel": "fd5", "case": "a"}}"#
+            ));
+            assert_eq!(cell.get_f64("predicted_s"), single.get_f64("predicted_s"), "{device}");
+        }
+        // one env parse, one extraction: the structure is shared, so
+        // only the first device misses
+        let s = svc.summary();
+        assert_eq!(s.cache_misses, 1, "{s:?}");
+
+        // a named device without weights is a per-cell error
+        let r = svc.respond(
+            r#"{"cmd": "matrix", "devices": ["k40c", "c2070"], "kernel": "fd5", "case": "a"}"#,
+        );
+        let results = r.get("results").and_then(Json::as_arr).unwrap();
+        assert!(results[0].get("error").is_none());
+        assert!(results[1].get_str("error").unwrap().contains("no fitted model"));
+        // cell errors are partial results, not request errors
+        assert_eq!(svc.summary().errors, 0);
+    }
+
+    #[test]
+    fn shutdown_request_sets_the_drain_flag_and_stops_the_loop() {
+        let svc = toy_service();
+        assert!(!svc.shutdown_requested());
+        let input = r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#.to_string()
+            + "\n"
+            + r#"{"id": "bye", "cmd": "shutdown"}"#
+            + "\n"
+            + r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#
+            + "\n";
+        let mut out = Vec::new();
+        let summary = svc.serve_interactive(input.as_bytes(), &mut out).unwrap();
+        assert!(svc.shutdown_requested());
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // the request after the shutdown command was never read
+        assert_eq!(lines.len(), 2, "{text}");
+        let bye = Json::parse(lines[1]).unwrap();
+        assert_eq!(bye.get_str("ok"), Some("shutdown"));
+        assert_eq!(bye.get_str("id"), Some("bye"));
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.errors, 0);
+    }
+
+    #[test]
+    fn oversized_lines_get_a_bounded_error_and_the_stream_recovers() {
+        let svc = Service::new(
+            toy_store(&[("k40c", 2e-9, 5e-6)]),
+            builtins().clone(),
+            ServiceConfig { workers: 1, max_line: 512, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let padding = "x".repeat(2048);
+        let oversized =
+            format!(r#"{{"id": 42, "device": "k40c", "kernel": "fd5", "pad": "{padding}"}}"#);
+        let input = format!(
+            "{oversized}\n{}\n",
+            r#"{"id": 43, "device": "k40c", "kernel": "fd5", "case": "a"}"#,
+        );
+        let mut out = Vec::new();
+        let summary = svc.serve(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        let err = Json::parse(lines[0]).unwrap();
+        assert!(err.get_str("error").unwrap().contains("512 byte cap"), "{err}");
+        assert_eq!(err.get_f64("id"), Some(42.0), "id salvaged from the retained prefix");
+        // the stream resynchronized at the newline: the next request
+        // is answered normally
+        let ok = Json::parse(lines[1]).unwrap();
+        assert_eq!(ok.get_f64("id"), Some(43.0));
+        assert!(ok.get("error").is_none(), "{ok}");
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.errors, 1);
+    }
+
+    #[test]
+    fn salvage_id_handles_scalars_and_garbage() {
+        assert_eq!(salvage_id(br#"{"id": 7, "device"#), Some(Json::Num(7.0)));
+        assert_eq!(salvage_id(br#"{"id": -2.5e3,"#), Some(Json::Num(-2500.0)));
+        assert_eq!(
+            salvage_id(br#"{"device": "x", "id": "q-1", junk"#),
+            Some(Json::Str("q-1".into()))
+        );
+        assert_eq!(salvage_id(br#"{"device": "x""#), None);
+        assert_eq!(salvage_id(br#"{"id": "#), None);
+        assert_eq!(salvage_id(br#"{"id" "x""#), None);
+        assert_eq!(salvage_id(b"\xff\xfe"), None);
+    }
+
+    #[test]
+    fn capped_reader_handles_boundaries() {
+        // exactly at the cap: fine
+        let mut r = std::io::BufReader::new(&b"abcd\nefgh"[..]);
+        match read_request_line(&mut r, 4, &|| false).unwrap() {
+            ReadLine::Line(l) => assert_eq!(l, "abcd"),
+            _ => panic!("line at the cap must pass"),
+        }
+        // trailing line without newline
+        match read_request_line(&mut r, 4, &|| false).unwrap() {
+            ReadLine::Line(l) => assert_eq!(l, "efgh"),
+            _ => panic!("final unterminated line must pass"),
+        }
+        assert!(matches!(read_request_line(&mut r, 4, &|| false).unwrap(), ReadLine::Eof));
+        // one past the cap: oversized, and the stream resumes after
+        let mut r = std::io::BufReader::new(&b"abcde\nok\n"[..]);
+        assert!(matches!(
+            read_request_line(&mut r, 4, &|| false).unwrap(),
+            ReadLine::Oversized { .. }
+        ));
+        match read_request_line(&mut r, 4, &|| false).unwrap() {
+            ReadLine::Line(l) => assert_eq!(l, "ok"),
+            _ => panic!("stream must resynchronize at the newline"),
+        }
     }
 }

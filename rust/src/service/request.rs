@@ -6,15 +6,27 @@
 //! {"id": 1, "device": "k40c", "kernel": "fd5", "case": "b"}
 //! {"id": 2, "device": "titan_x", "kernel": "nbody", "env": {"n": 65536}}
 //! {"id": 3, "device": "p100", "lpir": { ...kernel spec... }, "env": {"n": 4096}}
+//! {"id": 4, "cmd": "matrix", "kernel": "fd5", "case": "b"}
+//! {"id": 5, "cmd": "shutdown"}
 //! ```
 //!
-//! * `device` (required) — a registry device the model store holds
-//!   weights for.
-//! * `kernel` — a named evaluation-zoo kernel; combined with either
-//!   `case` (size-case letter `a`–`d`, default `a`) or an explicit
-//!   `env` binding all of the kernel's size parameters.
-//! * `lpir` — an inline kernel spec ([`super::spec`]); requires `env`.
-//! * `id` — any JSON value, echoed verbatim in the response.
+//! The optional `cmd` field selects the request type:
+//!
+//! * absent or `"predict"` — a single-device prediction:
+//!   * `device` (required) — a registry device the model store holds
+//!     weights for;
+//!   * `kernel` — a named evaluation-zoo kernel; combined with either
+//!     `case` (size-case letter `a`–`d`, default `a`) or an explicit
+//!     `env` binding all of the kernel's size parameters;
+//!   * `lpir` — an inline kernel spec ([`super::spec`]); requires `env`.
+//! * `"matrix"` — a batched device×kernel matrix request: the same
+//!   `kernel`/`lpir` + `case`/`env` fields, parsed **once**, predicted
+//!   for every device in the optional `devices` array (default: every
+//!   device the installed model store holds weights for).
+//! * `"shutdown"` — ask the server to stop accepting work and drain
+//!   (the threaded TCP listener joins its connections and exits).
+//!
+//! `id` — any JSON value, echoed verbatim in the response.
 
 use super::spec;
 use crate::lpir::Kernel;
@@ -30,15 +42,144 @@ pub enum KernelRef {
     Inline(Box<Kernel>),
 }
 
-/// A parsed prediction request.
+/// A parsed single-device prediction request.
 #[derive(Clone, Debug)]
-pub struct Request {
+pub struct PredictRequest {
     /// echoed back in the response (absent -> no `id` field emitted)
     pub id: Option<Json>,
     pub device: String,
     pub kref: KernelRef,
     /// explicit parameter binding (name -> value), if given
     pub env: Option<Vec<(String, i64)>>,
+}
+
+/// A parsed device×kernel matrix request: one kernel (parsed once),
+/// predicted across many devices.
+#[derive(Clone, Debug)]
+pub struct MatrixRequest {
+    pub id: Option<Json>,
+    /// explicit target devices; `None` = every device in the store
+    pub devices: Option<Vec<String>>,
+    pub kref: KernelRef,
+    pub env: Option<Vec<(String, i64)>>,
+}
+
+/// Any parsed request line.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Predict(PredictRequest),
+    Matrix(MatrixRequest),
+    /// drain + stop the serving loop
+    Shutdown { id: Option<Json> },
+}
+
+/// Parse the optional `env` object into (name, value) bindings.
+fn parse_env(j: &Json) -> Result<Option<Vec<(String, i64)>>, String> {
+    match j.get("env") {
+        None => Ok(None),
+        Some(Json::Obj(m)) => {
+            let mut pairs = Vec::with_capacity(m.len());
+            for (k, v) in m {
+                match v.as_i64() {
+                    Some(n) => pairs.push((k.clone(), n)),
+                    None => {
+                        return Err(format!(
+                            "request: env binding '{k}' must be an integer"
+                        ))
+                    }
+                }
+            }
+            Ok(Some(pairs))
+        }
+        Some(_) => Err("request: 'env' must be an object".into()),
+    }
+}
+
+/// Parse the kernel reference (`kernel` + `case`, or inline `lpir`),
+/// enforcing the case/env exclusivity rules.
+fn parse_kref(j: &Json, env: &Option<Vec<(String, i64)>>) -> Result<KernelRef, String> {
+    match (j.get("kernel"), j.get("lpir")) {
+        (Some(_), Some(_)) => {
+            Err("request: give either 'kernel' or 'lpir', not both".into())
+        }
+        (None, None) => {
+            Err("request: missing 'kernel' (named) or 'lpir' (inline spec)".into())
+        }
+        (Some(k), None) => {
+            let name = k
+                .as_str()
+                .ok_or("request: 'kernel' must be a string name")?
+                .to_string();
+            let case = match j.get("case") {
+                None => None,
+                Some(c) => Some(
+                    c.as_str()
+                        .ok_or("request: 'case' must be a string letter")?
+                        .to_string(),
+                ),
+            };
+            if case.is_some() && env.is_some() {
+                return Err("request: give either 'case' or 'env', not both".into());
+            }
+            Ok(KernelRef::Named { name, case })
+        }
+        (None, Some(l)) => {
+            if j.get("case").is_some() {
+                return Err("request: 'case' only applies to named kernels".into());
+            }
+            if env.is_none() {
+                return Err("request: inline 'lpir' kernels require 'env'".into());
+            }
+            Ok(KernelRef::Inline(Box::new(spec::kernel_from_json(l)?)))
+        }
+    }
+}
+
+impl PredictRequest {
+    pub fn from_json(j: &Json) -> Result<PredictRequest, String> {
+        let device = j
+            .get_str("device")
+            .ok_or("request: missing 'device'")?
+            .to_string();
+        let env = parse_env(j)?;
+        let kref = parse_kref(j, &env)?;
+        Ok(PredictRequest { id: j.get("id").cloned(), device, kref, env })
+    }
+}
+
+impl MatrixRequest {
+    pub fn from_json(j: &Json) -> Result<MatrixRequest, String> {
+        let devices = match j.get("devices") {
+            None => None,
+            Some(Json::Arr(items)) => {
+                if items.is_empty() {
+                    return Err("matrix request: 'devices' must not be empty".into());
+                }
+                let mut names = Vec::with_capacity(items.len());
+                for d in items {
+                    names.push(
+                        d.as_str()
+                            .ok_or("matrix request: 'devices' entries must be strings")?
+                            .to_string(),
+                    );
+                }
+                Some(names)
+            }
+            Some(_) => {
+                return Err("matrix request: 'devices' must be an array of names".into())
+            }
+        };
+        if j.get("device").is_some() {
+            return Err(
+                "matrix request: use 'devices' (array), not 'device' — or drop \
+                 'cmd' for a single-device prediction"
+                    .into(),
+            );
+        }
+        let env = parse_env(j)?;
+        let kref = parse_kref(j, &env)?;
+        Ok(MatrixRequest { id: j.get("id").cloned(), devices, kref, env })
+    }
 }
 
 impl Request {
@@ -52,64 +193,18 @@ impl Request {
         if !matches!(j, Json::Obj(_)) {
             return Err("request must be a JSON object".into());
         }
-        let device = j
-            .get_str("device")
-            .ok_or("request: missing 'device'")?
-            .to_string();
-        let env = match j.get("env") {
-            None => None,
-            Some(Json::Obj(m)) => {
-                let mut pairs = Vec::with_capacity(m.len());
-                for (k, v) in m {
-                    match v.as_i64() {
-                        Some(n) => pairs.push((k.clone(), n)),
-                        None => {
-                            return Err(format!(
-                                "request: env binding '{k}' must be an integer"
-                            ))
-                        }
-                    }
-                }
-                Some(pairs)
-            }
-            Some(_) => return Err("request: 'env' must be an object".into()),
-        };
-        let kref = match (j.get("kernel"), j.get("lpir")) {
-            (Some(_), Some(_)) => {
-                return Err("request: give either 'kernel' or 'lpir', not both".into())
-            }
-            (None, None) => {
-                return Err("request: missing 'kernel' (named) or 'lpir' (inline spec)".into())
-            }
-            (Some(k), None) => {
-                let name = k
-                    .as_str()
-                    .ok_or("request: 'kernel' must be a string name")?
-                    .to_string();
-                let case = match j.get("case") {
-                    None => None,
-                    Some(c) => Some(
-                        c.as_str()
-                            .ok_or("request: 'case' must be a string letter")?
-                            .to_string(),
-                    ),
-                };
-                if case.is_some() && env.is_some() {
-                    return Err("request: give either 'case' or 'env', not both".into());
-                }
-                KernelRef::Named { name, case }
-            }
-            (None, Some(l)) => {
-                if j.get("case").is_some() {
-                    return Err("request: 'case' only applies to named kernels".into());
-                }
-                if env.is_none() {
-                    return Err("request: inline 'lpir' kernels require 'env'".into());
-                }
-                KernelRef::Inline(Box::new(spec::kernel_from_json(l)?))
-            }
-        };
-        Ok(Request { id: j.get("id").cloned(), device, kref, env })
+        match j.get("cmd") {
+            None => Ok(Request::Predict(PredictRequest::from_json(j)?)),
+            Some(c) => match c.as_str() {
+                Some("predict") => Ok(Request::Predict(PredictRequest::from_json(j)?)),
+                Some("matrix") => Ok(Request::Matrix(MatrixRequest::from_json(j)?)),
+                Some("shutdown") => Ok(Request::Shutdown { id: j.get("id").cloned() }),
+                Some(other) => Err(format!(
+                    "request: unknown cmd '{other}' (predict|matrix|shutdown)"
+                )),
+                None => Err("request: 'cmd' must be a string".into()),
+            },
+        }
     }
 }
 
@@ -117,10 +212,16 @@ impl Request {
 mod tests {
     use super::*;
 
+    fn parse_predict(line: &str) -> PredictRequest {
+        match Request::parse(line).unwrap() {
+            Request::Predict(p) => p,
+            other => panic!("expected a predict request, got {other:?}"),
+        }
+    }
+
     #[test]
     fn named_case_request() {
-        let r = Request::parse(r#"{"id": 7, "device": "k40c", "kernel": "fd5", "case": "b"}"#)
-            .unwrap();
+        let r = parse_predict(r#"{"id": 7, "device": "k40c", "kernel": "fd5", "case": "b"}"#);
         assert_eq!(r.device, "k40c");
         assert_eq!(r.id, Some(Json::Num(7.0)));
         match r.kref {
@@ -135,8 +236,8 @@ mod tests {
 
     #[test]
     fn named_env_request() {
-        let r = Request::parse(r#"{"device": "titan_x", "kernel": "nbody", "env": {"n": 65536}}"#)
-            .unwrap();
+        let r =
+            parse_predict(r#"{"device": "titan_x", "kernel": "nbody", "env": {"n": 65536}}"#);
         assert!(r.id.is_none());
         assert_eq!(r.env, Some(vec![("n".to_string(), 65536)]));
     }
@@ -150,7 +251,7 @@ mod tests {
             "insns": [{"store": "o", "idx": ["64*g0 + l0"], "expr": {"lit": 1},
                        "within": ["g0", "l0"]}]}"#;
         let line = format!(r#"{{"device": "k40c", "lpir": {spec}, "env": {{"n": 4096}}}}"#);
-        let r = Request::parse(&line).unwrap();
+        let r = parse_predict(&line);
         assert!(matches!(r.kref, KernelRef::Inline(_)));
         // missing env -> rejected
         let line = format!(r#"{{"device": "k40c", "lpir": {spec}}}"#);
@@ -171,5 +272,75 @@ mod tests {
         assert!(Request::parse(r#"{"device": "k40c", "kernel": "fd5", "env": {"n": 1.5}}"#)
             .unwrap_err()
             .contains("integer"));
+    }
+
+    #[test]
+    fn cmd_field_selects_request_type() {
+        // explicit predict behaves exactly like the bare form
+        let r = Request::parse(
+            r#"{"cmd": "predict", "device": "k40c", "kernel": "fd5", "case": "a"}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::Predict(_)));
+        // shutdown echoes its id
+        match Request::parse(r#"{"cmd": "shutdown", "id": "drain-1"}"#).unwrap() {
+            Request::Shutdown { id } => assert_eq!(id, Some(Json::Str("drain-1".into()))),
+            other => panic!("expected shutdown, got {other:?}"),
+        }
+        // unknown and non-string cmds are rejected
+        assert!(Request::parse(r#"{"cmd": "reboot"}"#).unwrap_err().contains("unknown cmd"));
+        assert!(Request::parse(r#"{"cmd": 3}"#).unwrap_err().contains("must be a string"));
+    }
+
+    #[test]
+    fn matrix_requests_parse_device_lists_and_reject_device() {
+        let m = match Request::parse(
+            r#"{"cmd": "matrix", "kernel": "fd5", "case": "b", "id": 4}"#,
+        )
+        .unwrap()
+        {
+            Request::Matrix(m) => m,
+            other => panic!("expected matrix, got {other:?}"),
+        };
+        assert!(m.devices.is_none());
+        assert_eq!(m.id, Some(Json::Num(4.0)));
+        match m.kref {
+            KernelRef::Named { ref name, ref case } => {
+                assert_eq!(name, "fd5");
+                assert_eq!(case.as_deref(), Some("b"));
+            }
+            _ => panic!("expected a named kernel"),
+        }
+
+        let m = match Request::parse(
+            r#"{"cmd": "matrix", "devices": ["k40c", "titan_x"], "kernel": "nbody"}"#,
+        )
+        .unwrap()
+        {
+            Request::Matrix(m) => m,
+            other => panic!("expected matrix, got {other:?}"),
+        };
+        assert_eq!(
+            m.devices,
+            Some(vec!["k40c".to_string(), "titan_x".to_string()])
+        );
+
+        // the predict-shaped 'device' key is rejected with guidance
+        let e = Request::parse(r#"{"cmd": "matrix", "device": "k40c", "kernel": "fd5"}"#)
+            .unwrap_err();
+        assert!(e.contains("'devices'"), "{e}");
+        // empty and non-string device lists are rejected
+        assert!(Request::parse(r#"{"cmd": "matrix", "devices": [], "kernel": "fd5"}"#)
+            .unwrap_err()
+            .contains("must not be empty"));
+        assert!(Request::parse(r#"{"cmd": "matrix", "devices": [1], "kernel": "fd5"}"#)
+            .unwrap_err()
+            .contains("strings"));
+        // matrix kernels obey the same case/env exclusivity
+        assert!(Request::parse(
+            r#"{"cmd": "matrix", "kernel": "fd5", "case": "a", "env": {"n": 1}}"#
+        )
+        .unwrap_err()
+        .contains("not both"));
     }
 }

@@ -175,6 +175,31 @@ impl ModelStore {
         Ok(())
     }
 
+    /// The full serving gate ([`crate::engine::Engine::install_store`]):
+    /// staleness validation plus the extraction-option match (serving
+    /// with different options would evaluate property vectors the
+    /// weights were never fitted against) and a non-emptiness check.
+    pub fn validate_for_serving(
+        &self,
+        registry: &crate::gpusim::DeviceRegistry,
+        schema: &Schema,
+        extract: ExtractOpts,
+    ) -> Result<(), String> {
+        self.validate_against(registry, schema)?;
+        if self.extract != extract {
+            return Err(format!(
+                "model artifact was fitted under extraction options {:?} but the \
+                 service was configured with {:?} — serve with matching flags or \
+                 re-run `fit --save`",
+                self.extract, extract
+            ));
+        }
+        if self.is_empty() {
+            return Err("model artifact holds no fitted devices".into());
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self, schema: &Schema) -> Json {
         // exhaustive destructure: a future ExtractOpts field fails to
         // compile here instead of being silently dropped from the

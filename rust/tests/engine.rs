@@ -1,0 +1,418 @@
+//! Engine parity and concurrency tests.
+//!
+//! **Parity.** The engine refactor moved the
+//! measurement→extraction→fit→predict pipeline out of `coordinator`,
+//! `crossval` and `service` into one shared core. These tests pin that
+//! the engine-routed paths emit *byte-identical* JSON/report output to
+//! the pre-refactor pipelines, which are re-assembled here by hand
+//! from the stable lower layers (`harness::run_campaign` /
+//! `measure_cases` + `perfmodel::fit`) exactly as the old
+//! `coordinator::run_device` and `crossval::build_ctx`/`run_fold`
+//! bodies did. The simulator is deterministic, so equality is exact —
+//! these hand-assembled references are the golden fixtures, rebuilt
+//! fresh each run instead of rotting on disk.
+//!
+//! **Concurrency.** The threaded TCP listener is pitted against a
+//! single-threaded reference service with exact cache
+//! hit/miss/eviction accounting, and drained deterministically via
+//! `{"cmd": "shutdown"}`.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::crossval::{
+    quick_campaign_case, run_crossval, CrossvalOpts, CrossvalResult, FoldResult, Split,
+};
+use uniperf::engine::Engine;
+use uniperf::gpusim::registry::builtins;
+use uniperf::gpusim::SimGpu;
+use uniperf::harness::{measure_cases, run_campaign, Protocol};
+use uniperf::kernels;
+use uniperf::perfmodel::{fit, Model, NativeSolver, PropertyMatrix};
+use uniperf::report::{Table1, Table1Entry};
+use uniperf::service::{
+    KernelRef, ModelStore, PredictRequest, Service, ServiceConfig, StoredModel,
+};
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::json::Json;
+
+fn quick_config() -> Config {
+    Config {
+        devices: vec!["k40c".into()],
+        backend: FitBackend::Native,
+        protocol: Protocol { runs: 8, ..Protocol::default() },
+        workers: 4,
+        ..Config::default()
+    }
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("uniperf_engine_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// The pre-refactor `coordinator::run_device` body, re-assembled from
+/// the lower layers: campaign → fit → test-kernel measure + predict.
+fn reference_run_device(
+    device: &str,
+    cfg: &Config,
+) -> (Model, f64, usize, Vec<(String, String, f64, f64)>) {
+    let schema = Schema::full();
+    let profile = cfg.registry.get(device).expect("device").clone();
+    let gpu = SimGpu::new(profile);
+    let cases = kernels::measurement_suite(&gpu.profile);
+    let (pm, overhead) =
+        run_campaign(&gpu, &cases, &schema, &cfg.protocol, cfg.extract, cfg.workers)
+            .expect("campaign");
+    let model = fit(device, &pm, &schema, &NativeSolver::new()).expect("fit");
+    let suite = kernels::test_suite(&gpu.profile);
+    let ms = measure_cases(&gpu, &suite, &schema, &cfg.protocol, cfg.extract, cfg.workers)
+        .expect("measure tests");
+    let tests = suite
+        .iter()
+        .zip(&ms)
+        .map(|(case, m)| {
+            let mut parts = case.label.split('/');
+            (
+                parts.next().unwrap_or("?").to_string(),
+                parts.next().unwrap_or("?").to_string(),
+                model.predict(&m.props),
+                m.time_s,
+            )
+        })
+        .collect();
+    (model, overhead, pm.n_cases(), tests)
+}
+
+/// Engine-routed `run_device` is byte-identical to the hand-assembled
+/// pre-refactor pipeline: same fitted weights (to_json bytes), same
+/// overhead, same case count, same test predictions bit for bit.
+#[test]
+fn engine_run_device_matches_hand_assembled_pipeline() {
+    let cfg = quick_config();
+    let schema = Schema::full();
+    let dr = run_device("k40c", &schema, &cfg).expect("engine-routed run_device");
+    let (model, overhead, n_cases, tests) = reference_run_device("k40c", &cfg);
+
+    assert_eq!(
+        dr.model.to_json(&schema).pretty(),
+        model.to_json(&schema).pretty(),
+        "fitted model diverged from the pre-refactor pipeline"
+    );
+    assert_eq!(dr.launch_overhead_s, overhead);
+    assert_eq!(dr.n_measurement_cases, n_cases);
+    assert_eq!(dr.tests, tests, "test-kernel predictions must be bit-identical");
+}
+
+/// Quick-mode zoo filter (the pre-refactor private predicate).
+fn reference_quick_zoo(label: &str) -> bool {
+    let mut parts = label.split('/');
+    let _ = parts.next();
+    matches!(parts.next(), Some("a") | Some("b"))
+}
+
+/// The pre-refactor `crossval` quick leave-one-size-case-out run on
+/// one device, re-assembled by hand: measure the cut-down campaign and
+/// zoo once, then per fold train on the retained cases (§4.2 floor on
+/// training cases only) and predict the held-out letter.
+fn reference_crossval_case_quick(cfg: &Config) -> CrossvalResult {
+    let schema = Schema::full();
+    let profile = cfg.registry.get(&cfg.devices[0]).expect("device").clone();
+    let gpu = SimGpu::new(profile);
+    let mut cases = kernels::measurement_suite(&gpu.profile);
+    cases.retain(|c| quick_campaign_case(&c.label));
+    let (campaign, overhead) =
+        run_campaign(&gpu, &cases, &schema, &cfg.protocol, cfg.extract, cfg.workers)
+            .expect("campaign");
+    let mut zoo_cases = kernels::eval_suite(&gpu.profile);
+    zoo_cases.retain(|c| reference_quick_zoo(&c.label));
+    let ms = measure_cases(&gpu, &zoo_cases, &schema, &cfg.protocol, cfg.extract, cfg.workers)
+        .expect("zoo");
+    struct Zc {
+        kernel: String,
+        case: String,
+        label: String,
+        props: Vec<f64>,
+        time_s: f64,
+    }
+    let zoo: Vec<Zc> = zoo_cases
+        .iter()
+        .zip(ms)
+        .map(|(c, m)| {
+            let mut parts = c.label.split('/');
+            Zc {
+                kernel: parts.next().unwrap_or("?").to_string(),
+                case: parts.next().unwrap_or("?").to_string(),
+                label: m.label,
+                props: m.props,
+                time_s: m.time_s,
+            }
+        })
+        .collect();
+
+    // fold keys in first-seen order
+    let mut letters: Vec<String> = Vec::new();
+    for z in &zoo {
+        if !letters.contains(&z.case) {
+            letters.push(z.case.clone());
+        }
+    }
+    let floor = cfg.protocol.min_time_factor * overhead;
+    let solver = NativeSolver::new();
+    let mut folds = Vec::new();
+    let mut table = Table1::default();
+    for letter in &letters {
+        let mut pm: PropertyMatrix = campaign.clone();
+        for z in &zoo {
+            if &z.case != letter && z.time_s >= floor {
+                pm.push(z.label.clone(), z.props.clone(), z.time_s);
+            }
+        }
+        let model = fit(&gpu.profile.name, &pm, &schema, &solver).expect("fold fit");
+        let entries: Vec<Table1Entry> = zoo
+            .iter()
+            .filter(|z| &z.case == letter)
+            .map(|z| Table1Entry {
+                device: gpu.profile.name.clone(),
+                kernel: z.kernel.clone(),
+                case: z.case.clone(),
+                predicted_s: model.predict(&z.props),
+                actual_s: z.time_s,
+            })
+            .collect();
+        for e in &entries {
+            table.push(e.clone());
+        }
+        folds.push(FoldResult {
+            device: gpu.profile.name.clone(),
+            fold: letter.clone(),
+            n_train: pm.n_cases(),
+            train_err: model.train_rel_err_geomean,
+            weights: model.weight_report(&schema),
+            entries,
+        });
+    }
+    CrossvalResult { split: Split::LeaveOneSizeCaseOut, folds, table, transfer: None }
+}
+
+/// Engine-routed `crossval --quick` (size-case split) emits the same
+/// JSON and the same rendered report, byte for byte, as the
+/// hand-assembled pre-refactor fold pipeline.
+#[test]
+fn engine_crossval_quick_matches_hand_assembled_folds() {
+    let cfg = quick_config();
+    let opts = CrossvalOpts {
+        base: cfg.clone(),
+        split: Split::LeaveOneSizeCaseOut,
+        quick: true,
+    };
+    let engine_routed = run_crossval(&opts).expect("engine-routed crossval");
+    let reference = reference_crossval_case_quick(&cfg);
+    assert_eq!(
+        engine_routed.to_json().pretty(),
+        reference.to_json().pretty(),
+        "crossval JSON diverged from the pre-refactor fold pipeline"
+    );
+    assert_eq!(
+        engine_routed.render(),
+        reference.render(),
+        "crossval report diverged from the pre-refactor fold pipeline"
+    );
+}
+
+/// The acceptance pin for the serving path: `fit → save → load →
+/// predict` through the engine answers with exactly the in-memory
+/// pipeline's predictions, and the file round trip changes nothing —
+/// byte-identical responses between the in-memory store and the loaded
+/// artifact.
+#[test]
+fn engine_fit_save_load_predict_is_bit_identical() {
+    let cfg = quick_config();
+    let schema = Schema::full();
+    let engine = Engine::new(cfg.clone());
+    let store = engine.fit_store().expect("fit");
+    let path = temp_path("models.json");
+    store.save(&path, &schema).expect("save");
+    engine.install_store(store).expect("install in-memory store");
+
+    let engine_loaded = Engine::new(cfg.clone());
+    engine_loaded
+        .install_store(ModelStore::load(&path, &schema).expect("load"))
+        .expect("install loaded store");
+
+    // engine predictions equal run_device's own test-kernel predictions
+    let dr = run_device("k40c", &schema, &cfg).expect("pipeline");
+    for (kernel, case, pred, _actual) in &dr.tests {
+        let req = PredictRequest {
+            id: None,
+            device: "k40c".into(),
+            kref: KernelRef::Named { name: kernel.clone(), case: Some(case.clone()) },
+            env: None,
+        };
+        let mem = engine.predict(&req).expect("predict (memory)");
+        let loaded = engine_loaded.predict(&req).expect("predict (loaded)");
+        assert_eq!(mem.predicted_s, *pred, "{kernel}/{case} diverged from run_device");
+        assert_eq!(loaded.predicted_s, *pred, "{kernel}/{case} diverged through the file");
+    }
+
+    // and the rendered service responses are byte-identical mem vs file
+    let svc_mem = Service::over(Arc::new(engine), ServiceConfig::default()).unwrap();
+    let svc_loaded =
+        Service::over(Arc::new(engine_loaded), ServiceConfig::default()).unwrap();
+    for kernel in ["fd5", "mm_skinny", "conv7", "nbody"] {
+        for case in ["a", "b", "c", "d"] {
+            let line =
+                format!(r#"{{"device": "k40c", "kernel": "{kernel}", "case": "{case}"}}"#);
+            let (a, b) = (svc_mem.respond(&line), svc_loaded.respond(&line));
+            assert!(a.get("error").is_none(), "{line} -> {a}");
+            assert_eq!(a.compact(), b.compact(), "{line}");
+        }
+    }
+}
+
+fn toy_store() -> ModelStore {
+    let schema = Schema::full();
+    let mut weights = vec![0.0; schema.len()];
+    weights[schema.len() - 2] = 2e-9;
+    weights[schema.len() - 1] = 5e-6;
+    let model = Model {
+        device: "k40c".into(),
+        weights,
+        active: vec![schema.len() - 2, schema.len() - 1],
+        train_rel_err_geomean: 0.1,
+        solver: "native-cholesky",
+    };
+    let mut store = ModelStore::new(&schema, ExtractOpts::default());
+    store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+    store
+}
+
+/// Conversational TCP client: send each line, read each response.
+fn tcp_client(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+    let mut out = Vec::new();
+    for line in lines {
+        writeln!(stream, "{line}").expect("send");
+        stream.flush().expect("flush");
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("recv");
+        out.push(resp.trim_end().to_string());
+    }
+    out
+}
+
+/// N concurrent TCP clients against the threaded listener: every
+/// response equals the single-threaded reference, the drain is
+/// deterministic, and the cache accounting is exact — each kernel
+/// class extracted exactly once across all connections, zero
+/// evictions at the default capacity.
+#[test]
+fn threaded_tcp_clients_agree_with_single_threaded_reference() {
+    let kernels = ["fd5", "nbody", "reduce_tree"];
+    let lines: Vec<String> = (0..24)
+        .map(|i| {
+            let k = kernels[i % kernels.len()];
+            let case = ["a", "b", "c", "d"][(i / kernels.len()) % 4];
+            format!(r#"{{"id": {i}, "device": "k40c", "kernel": "{k}", "case": "{case}"}}"#)
+        })
+        .collect();
+
+    // single-threaded reference
+    let reference: Vec<Json> = {
+        let svc = Service::new(
+            toy_store(),
+            builtins().clone(),
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        lines.iter().map(|l| svc.respond(l)).collect()
+    };
+
+    let svc = Arc::new(
+        Service::new(toy_store(), builtins().clone(), ServiceConfig::default()).unwrap(),
+    );
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            uniperf::service::tcp::serve_threaded(&svc, listener, 16).expect("serve")
+        })
+    };
+
+    let n_clients = 6;
+    let all: Vec<Vec<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| scope.spawn(|| tcp_client(addr, &lines)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).collect()
+    });
+    for responses in &all {
+        assert_eq!(responses.len(), lines.len());
+        for (resp, want) in responses.iter().zip(&reference) {
+            let got = Json::parse(resp).expect("response JSON");
+            assert!(got.get("error").is_none(), "{resp}");
+            // the `cache` field is advisory under cold-batch races;
+            // predictions and ids must match exactly
+            assert_eq!(got.get_f64("predicted_s"), want.get_f64("predicted_s"));
+            assert_eq!(got.get_f64("id"), want.get_f64("id"));
+        }
+    }
+
+    // deterministic drain
+    let bye = tcp_client(addr, &[r#"{"cmd": "shutdown"}"#.to_string()]);
+    assert_eq!(Json::parse(&bye[0]).unwrap().get_str("ok"), Some("shutdown"));
+    let summary = server.join().expect("server thread");
+
+    // exact accounting: every prediction either hit or missed; each
+    // kernel class was extracted exactly once across every connection;
+    // nothing was evicted at the default capacity
+    let total = (n_clients * lines.len()) as u64;
+    assert_eq!(summary.requests, total + 1, "predictions + the shutdown command");
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.cache_hits + summary.cache_misses, total);
+    assert_eq!(summary.cache_misses as usize, kernels.len());
+    assert_eq!(summary.distinct_kernels, kernels.len());
+    assert_eq!(summary.cache_evictions, 0);
+}
+
+/// Hot reload end to end through the service: a rewritten artifact
+/// swaps in between polls, a garbage rewrite keeps the old weights
+/// serving.
+#[test]
+fn service_watch_hot_reloads_rewritten_artifacts() {
+    let schema = Schema::full();
+    let path = temp_path("watch_models.json");
+    toy_store().save(&path, &schema).expect("save v1");
+    let mut svc = Service::new(
+        ModelStore::load(&path, &schema).unwrap(),
+        builtins().clone(),
+        ServiceConfig { workers: 1, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    svc.watch(&path);
+
+    let line = r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#;
+    let p1 = svc.respond(line).get_f64("predicted_s").unwrap();
+
+    // rewrite with doubled weights: the next poll swaps the store
+    let mut v2 = toy_store();
+    let mut m2 = v2.get("k40c").unwrap().clone();
+    for w in &mut m2.model.weights {
+        *w *= 2.0;
+    }
+    v2.insert(m2);
+    v2.save(&path, &schema).expect("save v2");
+    assert_eq!(svc.poll_reload(), Some(Ok(true)));
+    let p2 = svc.respond(line).get_f64("predicted_s").unwrap();
+    assert_eq!(p2, 2.0 * p1, "reloaded weights must serve");
+
+    // garbage rewrite: reload fails, old store keeps serving
+    std::fs::write(&path, "{broken").unwrap();
+    assert!(matches!(svc.poll_reload(), Some(Err(_))));
+    assert_eq!(svc.respond(line).get_f64("predicted_s"), Some(p2));
+}
