@@ -1,0 +1,186 @@
+//! Chaos smoke bench: the threaded prediction server under a
+//! deterministic fault plan (aborted + delayed connections, degraded
+//! predictions), driven by resilient reconnecting clients. Records
+//! throughput and the injection/robustness counters to
+//! `BENCH_chaos.json`, and hard-fails on any panic, any malformed
+//! response line, any unserved request, or accounting drift —
+//! "degrades loudly, never silently" as an executable check.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+use uniperf::coordinator::{fit_models, Config, FitBackend};
+use uniperf::engine::Engine;
+use uniperf::gpusim::registry::builtins;
+use uniperf::harness::Protocol;
+use uniperf::report::render_service;
+use uniperf::service::{tcp, Service, ServiceConfig};
+use uniperf::util::fault::FaultPlan;
+use uniperf::util::json::Json;
+
+/// A client that survives the `conn.abort` fault site: a connection the
+/// server drops unanswered is replaced and the current line resent.
+/// Aborts happen before anything is served, so no line is answered
+/// twice.
+fn resilient_client(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+    let connect = || {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        (stream, reader)
+    };
+    let (mut stream, mut reader) = connect();
+    let mut out = Vec::new();
+    for line in lines {
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            assert!(attempts <= 10, "line never served after 10 attempts: {line}");
+            let sent = writeln!(stream, "{line}").and_then(|_| stream.flush());
+            if sent.is_err() {
+                (stream, reader) = connect();
+                continue;
+            }
+            let mut resp = String::new();
+            match reader.read_line(&mut resp) {
+                Ok(0) | Err(_) => {
+                    (stream, reader) = connect();
+                }
+                Ok(_) => {
+                    out.push(resp.trim_end().to_string());
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    // one fitted device; titan_x requests are answered degraded from it
+    let fit_cfg = Config {
+        devices: vec!["k40c".into()],
+        backend: FitBackend::Native,
+        protocol: Protocol { runs: 8, ..Protocol::default() },
+        ..Config::default()
+    };
+    let t_fit = Instant::now();
+    let store = fit_models(&fit_cfg).expect("fit failed");
+    let fit_s = t_fit.elapsed().as_secs_f64();
+    println!("fitted {} device(s) in {fit_s:.1}s", store.len());
+
+    let plan = Arc::new(
+        FaultPlan::new(2024)
+            .site_max("conn.abort", 1.0, 2)
+            .site_max("conn.slow", 1.0, 2),
+    );
+    let engine = Engine::new(Config {
+        registry: builtins().clone(),
+        degraded: true,
+        faults: Some(plan.clone()),
+        ..Config::default()
+    });
+    engine.install_store(store).expect("artifact must validate");
+    let svc = Arc::new(
+        Service::over(Arc::new(engine), ServiceConfig::default()).expect("service"),
+    );
+
+    // request stream: all 9 zoo classes x 4 cases, fitted + degraded
+    let kernels = [
+        "fd5", "mm_skinny", "conv7", "nbody", "reduce_tree", "scan_hs", "st3d7", "bmm8",
+        "gather_s2",
+    ];
+    let mut lines = Vec::new();
+    for dev in ["k40c", "titan_x"] {
+        for k in kernels {
+            for case in ["a", "b", "c", "d"] {
+                lines.push(format!(
+                    r#"{{"device": "{dev}", "kernel": "{k}", "case": "{case}"}}"#
+                ));
+            }
+        }
+    }
+    let n = lines.len();
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            tcp::serve_threaded(&svc, listener, 64).expect("threaded listener failed")
+        })
+    };
+
+    let n_clients = 3;
+    let t0 = Instant::now();
+    let all: Vec<Vec<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| scope.spawn(|| resilient_client(addr, &lines)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let chaos_s = t0.elapsed().as_secs_f64();
+
+    // every request served exactly once, every line well-formed JSON,
+    // no errors — and titan_x answers carry the degraded flag
+    let mut degraded_seen = 0u64;
+    for responses in &all {
+        assert_eq!(responses.len(), n, "a client lost responses under chaos");
+        for r in responses {
+            let j = Json::parse(r)
+                .unwrap_or_else(|e| panic!("malformed response under chaos: {r}: {e}"));
+            assert!(j.get("error").is_none(), "request errored under chaos: {r}");
+            if j.get("degraded") == Some(&Json::Bool(true)) {
+                assert_eq!(j.get_str("served_by"), Some("k40c"), "{r}");
+                degraded_seen += 1;
+            }
+        }
+    }
+    assert_eq!(
+        degraded_seen,
+        (n_clients * n / 2) as u64,
+        "every titan_x answer must be flagged degraded"
+    );
+
+    // deterministic drain, then conserved accounting
+    let bye = resilient_client(addr, &[r#"{"cmd": "shutdown"}"#.to_string()]);
+    assert_eq!(
+        Json::parse(&bye[0]).expect("shutdown response").get_str("ok"),
+        Some("shutdown")
+    );
+    let summary = server.join().expect("server panicked under chaos");
+    print!("{}", render_service(&summary));
+    assert_eq!(
+        summary.requests,
+        (n_clients * n) as u64 + 1,
+        "aborted connections must not distort request accounting"
+    );
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.conn_aborted, plan.injected("conn.abort"));
+    assert_eq!(plan.injected("conn.abort"), 2, "both planned aborts must fire");
+    assert_eq!(summary.conn_slowed, plan.injected("conn.slow"));
+    assert_eq!(summary.degraded_served, degraded_seen);
+
+    let rps = (n_clients * n) as f64 / chaos_s;
+    println!(
+        "chaos: {n_clients} x {n} round trips in {:.1} ms ({rps:.0} req/s) with \
+         {} aborted + {} slowed connections",
+        chaos_s * 1e3,
+        summary.conn_aborted,
+        summary.conn_slowed
+    );
+
+    let j = Json::obj(vec![
+        ("suite", Json::Str("chaos".into())),
+        ("fit_s", Json::Num(fit_s)),
+        ("clients", Json::Num(n_clients as f64)),
+        ("requests_per_client", Json::Num(n as f64)),
+        ("seconds", Json::Num(chaos_s)),
+        ("rps", Json::Num(rps)),
+        ("degraded_served", Json::Num(summary.degraded_served as f64)),
+        ("faults", plan.counters_json()),
+        ("service", summary.to_json()),
+    ]);
+    std::fs::write("BENCH_chaos.json", j.pretty()).expect("write BENCH_chaos.json");
+    println!("wrote BENCH_chaos.json");
+}

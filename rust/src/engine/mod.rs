@@ -29,25 +29,49 @@
 //! folds ([`crate::crossval`]) and the prediction server
 //! ([`crate::service`]) are all thin layers over the methods here —
 //! scaling work changes one place instead of three.
+//!
+//! Serving code must not panic on poisoned locks or assumed invariants:
+//! `unwrap`/`expect` are denied throughout this module tree (test code
+//! opts back in per `mod tests`).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod pipeline;
 
-pub use pipeline::{DeviceResult, FoldCtx, ZooCase};
+pub use pipeline::{CampaignNotes, DeviceResult, FoldCtx, ZooCase};
 
-use crate::gpusim::{registry, DeviceProfile, DeviceRegistry};
+use crate::gpusim::{registry, DeviceProfile, DeviceRegistry, SimGpu};
 use crate::harness::Protocol;
 use crate::kernels::{self, KernelCase};
 use crate::perfmodel::{NativeSolver, Solver};
+use crate::service::hash::structural_hash;
 use crate::service::request::{KernelRef, MatrixRequest, PredictRequest};
 use crate::service::{ModelStore, SharedPropsCache};
 use crate::stats::{ExtractOpts, Schema};
 use crate::util::executor::{default_workers, par_map};
+use crate::util::fault::FaultPlan;
 use crate::util::intern::Env;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Instant, SystemTime};
+
+/// Poison-recovering lock acquisition: a thread that panicked while
+/// holding one of these locks leaves plain data (maps, counters, an
+/// `Arc` slot) in a consistent state, so serving continues instead of
+/// cascading the panic through every subsequent request.
+fn read_lock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn write_lock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn mutex_lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Which fit backend to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,6 +102,14 @@ pub struct Config {
     /// evaluate the full 9-class evaluation-kernel zoo (§5 test kernels
     /// plus the zoo expansion) instead of the four §5 test kernels
     pub eval_zoo: bool,
+    /// deterministic fault plan (chaos testing / the `--faults` flag);
+    /// `None` — the default — is a true no-op: no site is ever queried
+    pub faults: Option<Arc<FaultPlan>>,
+    /// degraded-mode prediction: when the installed store lacks the
+    /// requested device, answer from the nearest-capability device the
+    /// store *does* hold, flagging the response `degraded` (off by
+    /// default — a missing model is then an error, as before)
+    pub degraded: bool,
 }
 
 impl Default for Config {
@@ -96,6 +128,8 @@ impl Default for Config {
             out_dir: None,
             workers: default_workers(),
             eval_zoo: false,
+            faults: None,
+            degraded: false,
         }
     }
 }
@@ -127,6 +161,12 @@ pub struct Prediction {
     /// wall time of the symbolic extraction, `None` on a cache hit (a
     /// hit is a non-run — the [`crate::harness::Sample::Cached`] rule)
     pub extract_s: Option<f64>,
+    /// the answer came from another device's model ([`Config::degraded`]
+    /// fallback); advisory only — nothing degraded is ever cached, the
+    /// props cache is device-agnostic by construction
+    pub degraded: bool,
+    /// the store device that actually answered, when `degraded`
+    pub served_by: Option<String>,
 }
 
 /// One device×kernel matrix prediction ([`Engine::predict_matrix`]):
@@ -155,6 +195,29 @@ pub struct Engine {
     store: RwLock<Option<Arc<ModelStore>>>,
     /// lazily built, capability-derived evaluation suites per device
     suites: RwLock<BTreeMap<String, Arc<Vec<KernelCase>>>>,
+    /// robustness bookkeeping (quarantine counts, campaign warnings,
+    /// extraction circuit breakers) surfaced on the service health page
+    robust: RobustState,
+}
+
+/// Consecutive inline-extraction failures before the circuit opens for
+/// that kernel structure.
+const BREAKER_THRESHOLD: u32 = 3;
+
+/// Cap on retained campaign warnings (health surface; oldest dropped).
+const MAX_WARNINGS: usize = 32;
+
+#[derive(Default)]
+struct RobustState {
+    /// measurement cases quarantined across all campaigns on this engine
+    quarantined: AtomicU64,
+    /// campaign warnings (e.g. the zero-overhead calibration fallback)
+    warnings: Mutex<Vec<String>>,
+    /// consecutive inline-extraction failures per structural hash; an
+    /// entry at [`BREAKER_THRESHOLD`] or above is an open circuit
+    breakers: Mutex<BTreeMap<u64, u32>>,
+    /// times any circuit transitioned closed -> open
+    breaker_trips: AtomicU64,
 }
 
 impl Engine {
@@ -174,6 +237,7 @@ impl Engine {
             cache: SharedPropsCache::with_capacity(cache_capacity),
             store: RwLock::new(None),
             suites: RwLock::new(BTreeMap::new()),
+            robust: RobustState::default(),
         }
     }
 
@@ -205,12 +269,12 @@ impl Engine {
     /// built once and shared (named-kernel resolution for every
     /// prediction path).
     pub fn eval_suite_for(&self, device: &str) -> Result<Arc<Vec<KernelCase>>, String> {
-        if let Some(s) = self.suites.read().unwrap().get(device) {
+        if let Some(s) = read_lock(&self.suites).get(device) {
             return Ok(Arc::clone(s));
         }
         let profile = self.profile(device)?;
         let suite = Arc::new(kernels::eval_suite(profile));
-        let mut map = self.suites.write().unwrap();
+        let mut map = write_lock(&self.suites);
         // a racing builder may have inserted meanwhile; keep the first
         // so every caller shares one Arc
         Ok(Arc::clone(
@@ -224,7 +288,7 @@ impl Engine {
     /// request sees the new weights. On error nothing is swapped.
     pub fn install_store(&self, store: ModelStore) -> Result<(), String> {
         store.validate_for_serving(&self.cfg.registry, &self.schema, self.cfg.extract)?;
-        *self.store.write().unwrap() = Some(Arc::new(store));
+        *write_lock(&self.store) = Some(Arc::new(store));
         Ok(())
     }
 
@@ -232,12 +296,93 @@ impl Engine {
     /// caller keeps it consistent across a whole request even if a
     /// reload swaps the store mid-flight).
     pub fn store_snapshot(&self) -> Option<Arc<ModelStore>> {
-        self.store.read().unwrap().clone()
+        read_lock(&self.store).clone()
     }
 
     fn store_required(&self) -> Result<Arc<ModelStore>, String> {
         self.store_snapshot()
             .ok_or_else(|| "no model artifact installed (run `fit --save`)".to_string())
+    }
+
+    /// A [`SimGpu`] over `profile` carrying this engine's fault plan —
+    /// the one constructor every engine measurement path uses, so
+    /// `measure.*` sites cover campaigns and fold measurement alike.
+    pub fn sim_gpu(&self, profile: DeviceProfile) -> SimGpu {
+        SimGpu::new(profile).with_faults(self.cfg.faults.clone())
+    }
+
+    /// Instantiate the configured fit backend ([`make_solver`]), with
+    /// the `solver.make` fault site in front for chaos coverage of the
+    /// fit paths.
+    pub fn solver(&self) -> Result<Box<dyn Solver + Send + Sync>, String> {
+        if let Some(plan) = &self.cfg.faults {
+            if plan.should_inject("solver.make") {
+                return Err(
+                    "injected solver construction failure (fault site solver.make)".into(),
+                );
+            }
+        }
+        make_solver(self.cfg.backend)
+    }
+
+    /// Record a robust campaign's degradations (engine-level totals for
+    /// the health surface).
+    pub(crate) fn note_campaign(&self, notes: &CampaignNotes) {
+        self.robust
+            .quarantined
+            .fetch_add(notes.quarantined.len() as u64, Ordering::Relaxed);
+        if !notes.warnings.is_empty() {
+            let mut w = mutex_lock(&self.robust.warnings);
+            w.extend(notes.warnings.iter().cloned());
+            if w.len() > MAX_WARNINGS {
+                let drop_n = w.len() - MAX_WARNINGS;
+                w.drain(..drop_n);
+            }
+        }
+    }
+
+    /// Total measurement cases quarantined across this engine's
+    /// campaigns.
+    pub fn quarantined_total(&self) -> u64 {
+        self.robust.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Retained campaign warnings (most recent [`MAX_WARNINGS`]).
+    pub fn campaign_warnings(&self) -> Vec<String> {
+        mutex_lock(&self.robust.warnings).clone()
+    }
+
+    /// Currently open extraction circuits (structural hashes whose
+    /// consecutive failure count reached the threshold).
+    pub fn breaker_open_count(&self) -> u64 {
+        mutex_lock(&self.robust.breakers)
+            .values()
+            .filter(|f| **f >= BREAKER_THRESHOLD)
+            .count() as u64
+    }
+
+    /// Times any extraction circuit transitioned closed -> open.
+    pub fn breaker_trips(&self) -> u64 {
+        self.robust.breaker_trips.load(Ordering::Relaxed)
+    }
+
+    fn breaker_is_open(&self, structural: u64) -> bool {
+        mutex_lock(&self.robust.breakers)
+            .get(&structural)
+            .is_some_and(|f| *f >= BREAKER_THRESHOLD)
+    }
+
+    fn breaker_note(&self, structural: u64, failed: bool) {
+        let mut breakers = mutex_lock(&self.robust.breakers);
+        if failed {
+            let f = breakers.entry(structural).or_insert(0);
+            *f += 1;
+            if *f == BREAKER_THRESHOLD {
+                self.robust.breaker_trips.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            breakers.remove(&structural);
+        }
     }
 
     /// Resolve + predict one parsed request against the installed
@@ -246,13 +391,37 @@ impl Engine {
     pub fn predict(&self, req: &PredictRequest) -> Result<Prediction, String> {
         let store = self.store_required()?;
         let profile = self.profile(&req.device)?;
-        let sm = store.get(&req.device).ok_or_else(|| {
-            format!(
-                "no fitted model for device '{}' in the artifact (have: {})",
-                req.device,
-                store.devices().join(", ")
-            )
-        })?;
+        // degraded-mode resolution: a registry device the store has no
+        // weights for may be answered by the nearest-capability device
+        // the store *does* hold (when `Config::degraded` opts in) —
+        // flagged, never cached, and validated against the *requested*
+        // device's limits below
+        let (sm, served_by) = match store.get(&req.device) {
+            Some(sm) => (sm, None),
+            None if self.cfg.degraded => {
+                let nearest =
+                    nearest_capability(&store, &self.cfg.registry, profile).ok_or_else(
+                        || {
+                            format!(
+                                "no fitted model for device '{}' and no degraded \
+                                 fallback (the store is empty)",
+                                req.device
+                            )
+                        },
+                    )?;
+                let sm = store.get(&nearest).ok_or_else(|| {
+                    format!("degraded fallback '{nearest}' vanished from the store")
+                })?;
+                (sm, Some(nearest))
+            }
+            None => {
+                return Err(format!(
+                    "no fitted model for device '{}' in the artifact (have: {})",
+                    req.device,
+                    store.devices().join(", ")
+                ));
+            }
+        };
 
         // resolve the kernel + parameter binding
         let user_env = |pairs: &[(String, i64)]| {
@@ -306,12 +475,14 @@ impl Engine {
                 };
                 (kernel, env, name.clone(), case_letter)
             }
-            KernelRef::Inline(k) => (
-                k.as_ref(),
-                user_env(req.env.as_ref().expect("parser enforces env for inline")),
-                k.name.clone(),
-                None,
-            ),
+            KernelRef::Inline(k) => {
+                let pairs = req.env.as_ref().ok_or_else(|| {
+                    "inline kernel request is missing 'env' (the parser should \
+                     have rejected it)"
+                        .to_string()
+                })?;
+                (k.as_ref(), user_env(pairs), k.name.clone(), None)
+            }
         };
 
         // every size parameter must be bound
@@ -338,8 +509,30 @@ impl Engine {
         // cannot poison the shared classification.
         let env_keyed =
             matches!(&req.kref, KernelRef::Inline(_)) || req.env.is_some();
+        // circuit breaker on inline-spec extraction: a structure whose
+        // extraction keeps failing is refused fast instead of re-running
+        // the failing symbolic pass per request. Keyed by structural
+        // hash (same key as the props cache), inline requests only —
+        // suite kernels are extraction-validated at build time.
+        let breaker_key = match &req.kref {
+            KernelRef::Inline(k) => Some(structural_hash(k)),
+            KernelRef::Named { .. } => None,
+        };
+        if let Some(h) = breaker_key {
+            if self.breaker_is_open(h) {
+                return Err(format!(
+                    "extraction circuit open for kernel '{kname}' (structure \
+                     {h:016x} failed {BREAKER_THRESHOLD}+ consecutive \
+                     extractions; a successful extraction resets it)"
+                ));
+            }
+        }
         let t0 = Instant::now();
-        let (props, hit) = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed)?;
+        let extracted = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed);
+        if let Some(h) = breaker_key {
+            self.breaker_note(h, extracted.is_err());
+        }
+        let (props, hit) = extracted?;
         let extract_s = (!hit).then(|| t0.elapsed().as_secs_f64());
         let v = props.eval(&self.schema, &env)?;
         Ok(Prediction {
@@ -350,6 +543,8 @@ impl Engine {
             predicted_s: sm.model.predict(&v),
             cache_hit: hit,
             extract_s,
+            degraded: served_by.is_some(),
+            served_by,
         })
     }
 
@@ -395,6 +590,7 @@ impl Engine {
                     device: device.clone(),
                     kref: req.kref.clone(),
                     env: req.env.clone(),
+                    deadline_ms: None,
                 };
                 let outcome = self.predict(&preq);
                 (device, outcome)
@@ -404,6 +600,44 @@ impl Engine {
     }
 }
 
+/// Squared log-ratio distance between two device capability vectors:
+/// peak f32 throughput, DRAM bandwidth and local-memory bandwidth, each
+/// compared as `ln(a/b)²` so "half the bandwidth" and "double the
+/// bandwidth" are equally far and absolute scale cancels out.
+fn capability_distance(a: &DeviceProfile, b: &DeviceProfile) -> f64 {
+    let ln_ratio = |x: f64, y: f64| (x.max(1e-300) / y.max(1e-300)).ln();
+    let df = ln_ratio(a.peak_f32(), b.peak_f32());
+    let db = ln_ratio(a.dram_bw, b.dram_bw);
+    let dl = ln_ratio(a.local_bw, b.local_bw);
+    df * df + db * db + dl * dl
+}
+
+/// The store device whose registry profile is capability-nearest to
+/// `want` (degraded-mode fallback). Store order breaks ties, so the
+/// choice is deterministic; store devices missing from the registry
+/// (impossible for a serving-validated store) are skipped.
+fn nearest_capability(
+    store: &ModelStore,
+    registry: &DeviceRegistry,
+    want: &DeviceProfile,
+) -> Option<String> {
+    let mut best: Option<(f64, String)> = None;
+    for device in store.devices() {
+        let Some(profile) = registry.get(&device) else {
+            continue;
+        };
+        let d = capability_distance(want, profile);
+        let closer = match &best {
+            None => true,
+            Some((bd, _)) => d < *bd,
+        };
+        if closer {
+            best = Some((d, device));
+        }
+    }
+    best.map(|(_, device)| device)
+}
+
 /// Hot artifact reload: re-stat a `models.json` between batches or
 /// connections and atomically swap the validated store into an
 /// [`Engine`]. A bad new artifact (unparseable, stale fingerprints,
@@ -411,6 +645,9 @@ impl Engine {
 pub struct Reloader {
     path: PathBuf,
     state: Mutex<ReloadState>,
+    /// fault plan for the `reload.io` site (injected artifact I/O
+    /// errors once a change is detected)
+    faults: Option<Arc<FaultPlan>>,
 }
 
 struct ReloadState {
@@ -421,6 +658,11 @@ struct ReloadState {
     /// the watch file was unstatable last poll (deleted mid-serve);
     /// remembered so the condition is reported once, not per poll
     stat_failed: bool,
+    /// the most recent reload failure (stat, parse, validate or an
+    /// injected I/O fault) — errors are reported once and then
+    /// suppressed while the file is unchanged, so the health surface
+    /// keeps the last one visible here. Cleared by a successful swap.
+    last_error: Option<String>,
 }
 
 impl Reloader {
@@ -433,12 +675,30 @@ impl Reloader {
             .and_then(|m| m.modified().ok().map(|t| (t, m.len())));
         Reloader {
             path: path.to_path_buf(),
-            state: Mutex::new(ReloadState { seen, stat_failed: false }),
+            state: Mutex::new(ReloadState {
+                seen,
+                stat_failed: false,
+                last_error: None,
+            }),
+            faults: None,
         }
+    }
+
+    /// Attach a fault plan (builder-style; `None` detaches).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Reloader {
+        self.faults = faults;
+        self
     }
 
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// The most recent reload failure, including ones whose per-poll
+    /// reporting is already suppressed (`None` after a successful swap
+    /// or when nothing ever failed).
+    pub fn last_error(&self) -> Option<String> {
+        mutex_lock(&self.state).last_error.clone()
     }
 
     /// If the watched file changed since last examined, load + validate
@@ -464,13 +724,21 @@ impl Reloader {
                     return Ok(false); // already reported
                 }
                 state.stat_failed = true;
-                return Err(format!("stat {}: {e}", self.path.display()));
+                let msg = format!("stat {}: {e}", self.path.display());
+                state.last_error = Some(msg.clone());
+                return Err(msg);
             }
         };
         state.stat_failed = false;
         let cur = (
-            meta.modified()
-                .map_err(|e| format!("mtime {}: {e}", self.path.display()))?,
+            match meta.modified() {
+                Ok(t) => t,
+                Err(e) => {
+                    let msg = format!("mtime {}: {e}", self.path.display());
+                    state.last_error = Some(msg.clone());
+                    return Err(msg);
+                }
+            },
             meta.len(),
         );
         if state.seen == Some(cur) {
@@ -479,13 +747,33 @@ impl Reloader {
         // remember the state up front: a broken artifact is reported
         // once and then ignored until it changes again
         state.seen = Some(cur);
-        let store = ModelStore::load(&self.path, engine.schema())?;
-        engine.install_store(store)?;
-        Ok(true)
+        if let Some(plan) = &self.faults {
+            if plan.should_inject("reload.io") {
+                let msg = format!(
+                    "injected artifact I/O failure reading {} (fault site reload.io)",
+                    self.path.display()
+                );
+                state.last_error = Some(msg.clone());
+                return Err(msg);
+            }
+        }
+        let swap = ModelStore::load(&self.path, engine.schema())
+            .and_then(|store| engine.install_store(store));
+        match swap {
+            Ok(()) => {
+                state.last_error = None;
+                Ok(true)
+            }
+            Err(e) => {
+                state.last_error = Some(e.clone());
+                Err(e)
+            }
+        }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::service::testutil;
@@ -510,6 +798,7 @@ mod tests {
             device: "k40c".into(),
             kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
             env: None,
+            deadline_ms: None,
         };
         let e = engine.predict(&req).unwrap_err();
         assert!(e.contains("no model artifact"), "{e}");
@@ -524,6 +813,7 @@ mod tests {
             device: "k40c".into(),
             kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
             env: None,
+            deadline_ms: None,
         };
         let p1 = engine.predict(&req).unwrap().predicted_s;
         assert_eq!(p1, 5e-6);
@@ -559,6 +849,7 @@ mod tests {
             devices: None,
             kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
             env: None,
+            deadline_ms: None,
         };
         let mp = engine.predict_matrix(&req).unwrap();
         assert_eq!(mp.kernel, "fd5");
@@ -579,6 +870,7 @@ mod tests {
             devices: Some(vec!["k40c".into(), "c2070".into()]),
             kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
             env: None,
+            deadline_ms: None,
         };
         let mp = engine.predict_matrix(&req).unwrap();
         assert!(mp.per_device[0].1.is_ok());
@@ -605,6 +897,7 @@ mod tests {
             device: "k40c".into(),
             kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
             env: None,
+            deadline_ms: None,
         };
         // unchanged file: no reload
         assert!(!reloader.maybe_reload(&engine).unwrap());
@@ -637,5 +930,169 @@ mod tests {
         toy_store("k40c", 3e-6).save(&path, &schema).unwrap();
         assert!(reloader.maybe_reload(&engine).unwrap());
         assert_eq!(engine.predict(&req).unwrap().predicted_s, 3e-6);
+    }
+
+    fn predict_req(device: &str) -> PredictRequest {
+        PredictRequest {
+            id: None,
+            device: device.into(),
+            kref: KernelRef::Named { name: "fd5".into(), case: Some("a".into()) },
+            env: None,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn degraded_mode_answers_from_the_nearest_capability_device() {
+        // store holds k40c only; titan_x is in the registry but unfitted
+        let engine = Engine::new(Config { degraded: true, ..Config::default() });
+        engine.install_store(toy_store("k40c", 5e-6)).unwrap();
+
+        let p = engine.predict(&predict_req("titan_x")).unwrap();
+        assert!(p.degraded);
+        assert_eq!(p.served_by.as_deref(), Some("k40c"));
+        assert_eq!(p.device, "titan_x", "the response names the requested device");
+        assert_eq!(p.predicted_s, 5e-6);
+
+        // a direct hit is never flagged
+        let p = engine.predict(&predict_req("k40c")).unwrap();
+        assert!(!p.degraded);
+        assert!(p.served_by.is_none());
+
+        // nearest-capability: with two candidates, the requested
+        // device's own model wins over a farther one — and for c2070
+        // (no weights) the choice is deterministic
+        let mut store = toy_store("k40c", 5e-6);
+        store.insert(toy_store("titan_x", 7e-6).get("titan_x").unwrap().clone());
+        engine.install_store(store).unwrap();
+        let p = engine.predict(&predict_req("c2070")).unwrap();
+        assert!(p.degraded);
+        // c2070 (Fermi, 1 TFLOP/s, 144 GB/s) is capability-closer to
+        // k40c than to the much faster titan_x
+        assert_eq!(p.served_by.as_deref(), Some("k40c"));
+    }
+
+    #[test]
+    fn degraded_mode_off_by_default_keeps_the_error_contract() {
+        let engine = engine_with("k40c", 5e-6);
+        let e = engine.predict(&predict_req("titan_x")).unwrap_err();
+        assert!(e.contains("no fitted model"), "{e}");
+        // unknown devices stay errors even in degraded mode: the
+        // registry, not the store, defines what exists
+        let engine = Engine::new(Config { degraded: true, ..Config::default() });
+        engine.install_store(toy_store("k40c", 5e-6)).unwrap();
+        let e = engine.predict(&predict_req("gtx480")).unwrap_err();
+        assert!(e.contains("unknown device"), "{e}");
+    }
+
+    #[test]
+    fn extraction_breaker_opens_after_repeated_inline_failures() {
+        use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+        use crate::lpir::{Access, DType, Expr, Layout};
+        use crate::qpoly::LinExpr;
+        let engine = engine_with("k40c", 5e-6);
+        // a *structurally valid* kernel whose extraction fails: array
+        // `b`'s outer stride depends on `m`, which the kernel never
+        // declares as a parameter — build() passes (ranks and inames
+        // check out), the param-binding check passes (only `n` is
+        // declared), and stride evaluation then dies with "unbound
+        // parameter 'm'" on every request
+        let bad = KernelBuilder::new("badk", &["n"])
+            .group_dims_1d(LinExpr::var("n"), 64)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .global_array(
+                "b",
+                DType::F32,
+                vec![LinExpr::var("n"), LinExpr::var("m")],
+                Layout::RowMajor,
+                false,
+            )
+            .insn(
+                Access::new("a", vec![gid_lin_1d(64)]),
+                Expr::load("b", vec![gid_lin_1d(64), gid_lin_1d(64)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap();
+        let req = PredictRequest {
+            id: None,
+            device: "k40c".into(),
+            kref: KernelRef::Inline(Box::new(bad)),
+            env: Some(vec![("n".to_string(), 4096_i64)]),
+            deadline_ms: None,
+        };
+        let mut saw_breaker = false;
+        for _ in 0..BREAKER_THRESHOLD + 2 {
+            let e = engine.predict(&req).unwrap_err();
+            if e.contains("circuit open") {
+                saw_breaker = true;
+                break;
+            }
+        }
+        assert!(saw_breaker, "breaker never opened");
+        assert_eq!(engine.breaker_open_count(), 1);
+        assert_eq!(engine.breaker_trips(), 1);
+        // named-kernel requests are unaffected
+        assert!(engine.predict(&predict_req("k40c")).is_ok());
+    }
+
+    #[test]
+    fn solver_fault_site_fails_construction_deterministically() {
+        let plan = Arc::new(crate::util::fault::FaultPlan::new(1).site_max("solver.make", 1.0, 1));
+        let engine = Engine::new(Config {
+            backend: FitBackend::Native,
+            faults: Some(plan.clone()),
+            ..Config::default()
+        });
+        let e = engine.solver().unwrap_err();
+        assert!(e.contains("solver.make"), "{e}");
+        // ceiling reached: the next construction succeeds
+        assert!(engine.solver().is_ok());
+        assert_eq!(plan.injected("solver.make"), 1);
+    }
+
+    #[test]
+    fn reloader_records_last_error_for_the_health_surface() {
+        let dir = std::env::temp_dir()
+            .join(format!("uniperf_reloader_err_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("models.json");
+        let schema = Schema::full();
+        toy_store("k40c", 5e-6).save(&path, &schema).unwrap();
+
+        let engine = Engine::new(Config::default());
+        engine.install_store(ModelStore::load(&path, &schema).unwrap()).unwrap();
+        let reloader = Reloader::primed(&path);
+        assert!(reloader.last_error().is_none());
+
+        // a garbage rewrite: reported once, then suppressed — but the
+        // health surface still sees it
+        std::fs::write(&path, "{not json at all").unwrap();
+        assert!(reloader.maybe_reload(&engine).is_err());
+        assert!(!reloader.maybe_reload(&engine).unwrap());
+        let err = reloader.last_error().unwrap();
+        assert!(!err.is_empty());
+
+        // recovery clears it
+        toy_store("k40c", 6e-6).save(&path, &schema).unwrap();
+        assert!(reloader.maybe_reload(&engine).unwrap());
+        assert!(reloader.last_error().is_none());
+
+        // injected reload.io fault: change detected, read fails once
+        let plan = Arc::new(crate::util::fault::FaultPlan::new(3).site_max("reload.io", 1.0, 1));
+        let reloader = Reloader::primed(&path).with_faults(Some(plan.clone()));
+        toy_store("k40c", 7e-6).save(&path, &schema).unwrap();
+        let e = reloader.maybe_reload(&engine).unwrap_err();
+        assert!(e.contains("reload.io"), "{e}");
+        assert_eq!(engine.predict(&predict_req("k40c")).unwrap().predicted_s, 6e-6);
+        assert!(reloader.last_error().unwrap().contains("reload.io"));
+        assert_eq!(plan.injected("reload.io"), 1);
+        // the injected failure consumed the change; the *next* rewrite
+        // reloads cleanly (ceiling reached)
+        toy_store("k40c", 8e-6).save(&path, &schema).unwrap();
+        assert!(reloader.maybe_reload(&engine).unwrap());
+        assert!(reloader.last_error().is_none());
+        assert_eq!(engine.predict(&predict_req("k40c")).unwrap().predicted_s, 8e-6);
     }
 }

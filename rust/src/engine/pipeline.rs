@@ -8,9 +8,9 @@
 //! which entry point — `coordinator`, `crossval` or a test — issued
 //! it.
 
-use super::{make_solver, Engine};
+use super::Engine;
 use crate::gpusim::{DeviceProfile, SimGpu};
-use crate::harness::{self, measure_cases, run_campaign};
+use crate::harness::{self, measure_cases, run_campaign, run_campaign_robust};
 use crate::kernels;
 use crate::perfmodel::{self, Model, PropertyMatrix, Solver};
 use crate::service::{ModelStore, StoredModel};
@@ -25,6 +25,19 @@ pub struct DeviceResult {
     pub n_measurement_cases: usize,
     /// (kernel, case letter, predicted, actual) for the §5 test kernels
     pub tests: Vec<(String, String, f64, f64)>,
+    /// campaign warnings (e.g. the zero-overhead calibration fallback)
+    pub warnings: Vec<String>,
+    /// (case label, reason) for measurement cases quarantined from the
+    /// fit instead of aborting the campaign
+    pub quarantined: Vec<(String, String)>,
+}
+
+/// What a campaign degraded on, carried alongside the fit so callers
+/// can report it ([`DeviceResult`], the CLI, the service health page).
+#[derive(Clone, Debug, Default)]
+pub struct CampaignNotes {
+    pub warnings: Vec<String>,
+    pub quarantined: Vec<(String, String)>,
 }
 
 /// One measured zoo case, ready for fold assembly.
@@ -57,15 +70,17 @@ impl Engine {
     pub fn campaign_and_fit(
         &self,
         device: &str,
-    ) -> Result<(SimGpu, PropertyMatrix, Model, f64), String> {
+    ) -> Result<(SimGpu, PropertyMatrix, Model, f64, CampaignNotes), String> {
         let cfg = self.config();
         let profile = self.profile(device)?.clone();
-        let gpu = SimGpu::new(profile);
+        let gpu = self.sim_gpu(profile);
 
         // 1. measurement campaign (§4.1 + §4.2), capability-derived
-        //    from the profile
+        //    from the profile. The robust runner quarantines failing
+        //    cases and survives calibration failure; with no faults in
+        //    play it produces the same matrix as `run_campaign`.
         let cases = kernels::measurement_suite(&gpu.profile);
-        let (pm, overhead) = run_campaign(
+        let outcome = run_campaign_robust(
             &gpu,
             &cases,
             self.schema(),
@@ -73,18 +88,28 @@ impl Engine {
             cfg.extract,
             cfg.workers,
         )?;
+        let notes = CampaignNotes {
+            warnings: outcome.overhead_warning.clone().into_iter().collect(),
+            quarantined: outcome
+                .quarantined
+                .iter()
+                .map(|q| (q.label.clone(), q.reason.clone()))
+                .collect(),
+        };
+        self.note_campaign(&notes);
 
         // 2. fit (§4.3)
-        let solver = make_solver(cfg.backend)?;
-        let model = perfmodel::fit(device, &pm, self.schema(), solver.as_ref())?;
-        Ok((gpu, pm, model, overhead))
+        let solver = self.solver()?;
+        let model =
+            perfmodel::fit(device, &outcome.matrix, self.schema(), solver.as_ref())?;
+        Ok((gpu, outcome.matrix, model, outcome.overhead, notes))
     }
 
     /// Run the full per-device pipeline: measurement campaign → fit →
     /// test kernels → Table-1-shaped entries.
     pub fn run_device(&self, device: &str) -> Result<DeviceResult, String> {
         let cfg = self.config();
-        let (gpu, pm, model, overhead) = self.campaign_and_fit(device)?;
+        let (gpu, pm, model, overhead, notes) = self.campaign_and_fit(device)?;
 
         // 3. test kernels (§5, or the full zoo behind `eval_zoo`):
         //    predict + measure, through the same parallel measurement
@@ -130,6 +155,8 @@ impl Engine {
             launch_overhead_s: overhead,
             n_measurement_cases: pm.n_cases(),
             tests,
+            warnings: notes.warnings,
+            quarantined: notes.quarantined,
         })
     }
 
@@ -146,7 +173,7 @@ impl Engine {
         let cfg = self.config();
         let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
         let results = par_map(cfg.devices.clone(), device_workers, |dev| {
-            self.campaign_and_fit(&dev).map(|(gpu, pm, model, overhead)| {
+            self.campaign_and_fit(&dev).map(|(gpu, pm, model, overhead, _notes)| {
                 (gpu.profile, pm.n_cases(), model, overhead)
             })
         });
@@ -171,7 +198,7 @@ impl Engine {
         workers: usize,
     ) -> Result<FoldCtx, String> {
         let cfg = self.config();
-        let gpu = SimGpu::new(profile.clone());
+        let gpu = self.sim_gpu(profile.clone());
         let mut cases = kernels::measurement_suite(&gpu.profile);
         cases.retain(|c| campaign_keep(&c.label));
         let (campaign, overhead) = run_campaign(
@@ -208,7 +235,7 @@ impl Engine {
             campaign,
             overhead,
             zoo,
-            solver: make_solver(cfg.backend)?,
+            solver: self.solver()?,
         })
     }
 

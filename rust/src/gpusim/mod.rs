@@ -24,34 +24,54 @@ pub use interp::{execute, seed_value, Storage};
 pub use registry::DeviceRegistry;
 pub use timing::{base_time, run_times, Breakdown};
 
+use std::sync::Arc;
+
 use crate::lpir::Kernel;
+use crate::util::fault::FaultPlan;
 use crate::util::intern::Env;
 
-/// A simulated GPU: a profile plus a noise seed.
+/// A simulated GPU: a profile plus a noise seed, and optionally a fault
+/// plan whose `measure.*` sites corrupt the measurement channel.
 #[derive(Clone, Debug)]
 pub struct SimGpu {
     pub profile: DeviceProfile,
     pub seed: u64,
+    /// When set, `measure.fail` / `measure.outlier` faults apply to
+    /// every [`SimGpu::time`] call (see [`crate::util::fault`]). `None`
+    /// leaves timing byte-identical to the pre-fault-plane behavior.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl SimGpu {
     pub fn new(profile: DeviceProfile) -> SimGpu {
-        SimGpu { profile, seed: 0xD15C_0 }
+        SimGpu { profile, seed: 0xD15C_0, faults: None }
     }
 
     pub fn named(name: &str) -> Option<SimGpu> {
         device(name).map(SimGpu::new)
     }
 
+    /// Attach a fault plan (builder-style; `None` detaches).
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> SimGpu {
+        self.faults = faults;
+        self
+    }
+
     /// Time `runs` launches of a kernel (seconds per run), with the
-    /// §4.2 measurement artifacts.
+    /// §4.2 measurement artifacts. Fault sites apply *after* the noise
+    /// stream is drawn, so an installed plan never shifts the baseline
+    /// samples — it only fails the call or corrupts one sample.
     pub fn time(
         &self,
         kernel: &Kernel,
         env: &Env,
         runs: usize,
     ) -> Result<Vec<f64>, String> {
-        run_times(&self.profile, kernel, env, runs, self.seed)
+        let mut times = run_times(&self.profile, kernel, env, runs, self.seed)?;
+        if let Some(plan) = &self.faults {
+            timing::apply_measurement_faults(plan, &kernel.name, &mut times)?;
+        }
+        Ok(times)
     }
 
     /// Noise-free cost breakdown (for diagnostics and tests; the

@@ -464,6 +464,31 @@ pub fn run_times(
     Ok(out)
 }
 
+/// Apply measurement-channel fault sites to a completed timing run.
+///
+/// `measure.fail` aborts the whole run (the caller's retry budget deals
+/// with it); `measure.outlier` makes one deterministic sample spuriously
+/// *fast* (×0.04). Fast, not slow, is the adversarial direction here:
+/// the protocol reduces by min-of-runs, which is immune to slow
+/// outliers but poisoned by fast ones — exactly what the MAD rejection
+/// in [`crate::harness::Protocol`] exists to catch.
+pub fn apply_measurement_faults(
+    plan: &crate::util::fault::FaultPlan,
+    kernel_name: &str,
+    times: &mut [f64],
+) -> Result<(), String> {
+    if plan.should_inject("measure.fail") {
+        return Err(format!(
+            "injected measurement failure for '{kernel_name}' (fault site measure.fail)"
+        ));
+    }
+    if !times.is_empty() && plan.should_inject("measure.outlier") {
+        let i = (plan.draw("measure.outlier") % times.len() as u64) as usize;
+        times[i] *= 0.04;
+    }
+    Ok(())
+}
+
 fn gcd_i64(a: i64, b: i64) -> i64 {
     if b == 0 {
         a

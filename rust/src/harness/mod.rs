@@ -13,9 +13,11 @@
 
 use crate::gpusim::SimGpu;
 use crate::kernels::KernelCase;
+use crate::lpir::Kernel;
 use crate::perfmodel::PropertyMatrix;
 use crate::stats::{extract, ExtractOpts, KernelProps, Schema};
 use crate::util::executor::par_map;
+use crate::util::intern::Env;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -30,11 +32,59 @@ pub struct Protocol {
     /// cases faster than `min_time_factor · launch_overhead` are dropped
     /// (except the empty kernel, which *measures* the overhead)
     pub min_time_factor: f64,
+    /// extra attempts when a timing run fails outright (transient
+    /// measurement errors); 0 = fail on the first error
+    pub retries: usize,
+    /// MAD outlier rejection: retained samples more than `mad_k`
+    /// median-absolute-deviations from the median are dropped before
+    /// reduction. 0.0 (the default) disables the filter, keeping the
+    /// reduction byte-identical to the historical protocol. The filter
+    /// matters because the reduction is min-of-runs: a spuriously *fast*
+    /// sample (measurement glitch, cache artifact) poisons the minimum,
+    /// while slow outliers are already harmless.
+    pub mad_k: f64,
 }
 
 impl Default for Protocol {
     fn default() -> Self {
-        Protocol { runs: 30, discard: 4, min_time_factor: 2.0 }
+        Protocol {
+            runs: 30,
+            discard: 4,
+            min_time_factor: 2.0,
+            retries: 2,
+            mad_k: 0.0,
+        }
+    }
+}
+
+/// Reject samples more than `k` MADs from the median. The MAD scale is
+/// floored at a relative epsilon of the median so a perfectly-repeating
+/// stream (MAD = 0) doesn't reject every sample; if rejection would
+/// empty the input (pathological `k`), the input is returned unchanged.
+pub fn mad_filter(times: &[f64], k: f64) -> Vec<f64> {
+    fn median(sorted: &[f64]) -> f64 {
+        let n = sorted.len();
+        if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        }
+    }
+    if times.len() < 3 {
+        return times.to_vec();
+    }
+    let mut sorted = times.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let m = median(&sorted);
+    let mut dev: Vec<f64> = times.iter().map(|t| (t - m).abs()).collect();
+    dev.sort_by(f64::total_cmp);
+    let scale = median(&dev).max(1e-12 * m.abs());
+    let kept: Vec<f64> =
+        times.iter().cloned().filter(|t| (t - m).abs() <= k * scale).collect();
+    if kept.is_empty() {
+        times.to_vec()
+    } else {
+        kept
     }
 }
 
@@ -51,18 +101,30 @@ impl Protocol {
         Ok(&times[self.discard.min(times.len() - 1)..])
     }
 
+    /// The retained runs after warmup discard and (when `mad_k > 0`)
+    /// MAD outlier rejection.
+    fn kept(&self, times: &[f64]) -> Result<Vec<f64>, String> {
+        let retained = self.retained(times)?;
+        if self.mad_k > 0.0 {
+            Ok(mad_filter(retained, self.mad_k))
+        } else {
+            Ok(retained.to_vec())
+        }
+    }
+
     /// Reduce raw per-run times to the reported wall time: minimum of the
     /// retained runs (§4.2; the minimum and the mean differ by <5% when
-    /// times exceed the overhead — validated in `benches/protocol.rs`).
-    /// Errors on empty input.
+    /// times exceed the overhead — validated in `benches/protocol.rs`),
+    /// after MAD outlier rejection when `mad_k > 0`. Errors on empty
+    /// input.
     pub fn reduce(&self, times: &[f64]) -> Result<f64, String> {
-        Ok(self.retained(times)?.iter().cloned().fold(f64::INFINITY, f64::min))
+        Ok(self.kept(times)?.iter().cloned().fold(f64::INFINITY, f64::min))
     }
 
     /// Mean of the retained runs (for the §4.2 min-vs-mean validation).
     /// Errors on empty input.
     pub fn reduce_mean(&self, times: &[f64]) -> Result<f64, String> {
-        let kept = self.retained(times)?;
+        let kept = self.kept(times)?;
         Ok(kept.iter().sum::<f64>() / kept.len() as f64)
     }
 }
@@ -121,6 +183,28 @@ pub struct Measurement {
     pub time_s: f64,
 }
 
+/// Time one kernel configuration under the protocol's retry budget:
+/// outright timing failures (transient measurement errors, injected
+/// `measure.fail` faults) are retried up to `protocol.retries` extra
+/// times before the last error is surfaced.
+pub fn time_with_retry(
+    gpu: &SimGpu,
+    kernel: &Kernel,
+    env: &Env,
+    protocol: &Protocol,
+) -> Result<Vec<f64>, String> {
+    let budget = protocol.retries + 1;
+    let mut last = String::new();
+    for attempt in 1..=budget {
+        match gpu.time(kernel, env, protocol.runs) {
+            Ok(times) => return Ok(times),
+            Err(e) => last = e,
+        }
+        let _ = attempt;
+    }
+    Err(format!("measurement failed after {budget} attempt(s): {last}"))
+}
+
 /// Calibrate the device's launch overhead by timing the empty kernel at
 /// its smallest configuration (§4.2). The group shape is the device's
 /// standard 2-D shape ((16, 16) on every part admitting 256-thread
@@ -131,7 +215,7 @@ pub fn calibrate_overhead(gpu: &SimGpu, protocol: &Protocol) -> Result<f64, Stri
     let k = crate::kernels::measure::empty(gx, gy);
     let n = crate::kernels::snap(16 * gx.max(gy), crate::kernels::lcm(gx, gy));
     let env = crate::qpoly::env(&[("n", n)]);
-    let times = gpu.time(&k, &env, protocol.runs)?;
+    let times = time_with_retry(gpu, &k, &env, protocol)?;
     protocol.reduce(&times)
 }
 
@@ -191,7 +275,7 @@ pub fn measure_cases(
     // timing + evaluation in parallel over cases
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
-        let times = gpu.time(&case.kernel, &case.env, protocol.runs)?;
+        let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
         let time_s = protocol.reduce(&times)?;
         let props = sym[i].eval(schema, &case.env)?;
         Ok(Measurement { label: case.label.clone(), props, time_s })
@@ -224,6 +308,101 @@ pub fn run_campaign(
         return Err("all cases filtered out by the overhead floor".into());
     }
     Ok((pm, overhead))
+}
+
+/// A case excluded from a robust campaign, with the reason it failed
+/// (carried into the report instead of aborting the device).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quarantine {
+    pub label: String,
+    pub reason: String,
+}
+
+/// What a robust campaign produced: the fit-ready matrix plus the
+/// degradations that occurred along the way.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    pub matrix: PropertyMatrix,
+    pub overhead: f64,
+    /// `Some` when launch-overhead calibration failed and the campaign
+    /// fell back to the zero-overhead default (disabling the
+    /// minimum-size floor for this device).
+    pub overhead_warning: Option<String>,
+    /// Cases that failed measurement or extraction after the retry
+    /// budget, excluded from the fit.
+    pub quarantined: Vec<Quarantine>,
+}
+
+/// [`run_campaign`] with graceful degradation: calibration failure falls
+/// back to a zero launch overhead (with a warning — the minimum-size
+/// floor is disabled, so the fit sees every case and §4.2's
+/// unreliable-timing protection is lost for this device only), and a
+/// case that fails measurement or extraction after the retry budget is
+/// **quarantined** — recorded with its reason and excluded from the fit
+/// — instead of aborting the whole device campaign. Fault-free runs
+/// produce a matrix identical to [`run_campaign`]'s.
+///
+/// Errors only when *no* case survives: a fit needs at least one row.
+pub fn run_campaign_robust(
+    gpu: &SimGpu,
+    cases: &[KernelCase],
+    schema: &Schema,
+    protocol: &Protocol,
+    opts: ExtractOpts,
+    workers: usize,
+) -> Result<CampaignOutcome, String> {
+    let (overhead, overhead_warning) = match calibrate_overhead(gpu, protocol) {
+        Ok(o) => (o, None),
+        Err(e) => (
+            0.0,
+            Some(format!(
+                "launch-overhead calibration failed ({e}); falling back to the \
+                 zero-overhead default — the minimum-size floor is disabled for \
+                 this campaign"
+            )),
+        ),
+    };
+
+    // symbolic extraction once per kernel; a failure quarantines every
+    // case of that kernel rather than aborting
+    let mut cache = PropsCache::default();
+    let mut sym: Vec<Result<KernelProps, String>> = Vec::with_capacity(cases.len());
+    for case in cases {
+        sym.push(cache.props_for(case, opts));
+    }
+
+    let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
+    let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
+        let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
+        let time_s = protocol.reduce(&times)?;
+        let props = sym[i].as_ref().map_err(Clone::clone)?.eval(schema, &case.env)?;
+        Ok(Measurement { label: case.label.clone(), props, time_s })
+    });
+
+    let mut pm = PropertyMatrix::default();
+    let mut quarantined = Vec::new();
+    for (case, r) in cases.iter().zip(results) {
+        match r {
+            Ok(m) => {
+                let is_empty_kernel = m.label.starts_with("empty/");
+                if !is_empty_kernel && m.time_s < protocol.min_time_factor * overhead {
+                    continue; // below the reliable-timing floor (§4.2)
+                }
+                pm.push(m.label, m.props, m.time_s);
+            }
+            Err(reason) => {
+                quarantined.push(Quarantine { label: case.label.clone(), reason });
+            }
+        }
+    }
+    if pm.n_cases() == 0 {
+        return Err(format!(
+            "no usable measurement cases: {} quarantined, the rest filtered by \
+             the overhead floor",
+            quarantined.len()
+        ));
+    }
+    Ok(CampaignOutcome { matrix: pm, overhead, overhead_warning, quarantined })
 }
 
 /// Persist a campaign to JSON.
@@ -304,7 +483,7 @@ mod tests {
 
     #[test]
     fn cached_samples_carry_a_marker_not_a_zero() {
-        let p = Protocol { runs: 8, discard: 2, min_time_factor: 2.0 };
+        let p = Protocol { runs: 8, discard: 2, ..Protocol::default() };
         // the naive encoding of a cache hit — a 0-second sample —
         // poisons the min-of-runs statistic:
         assert_eq!(p.reduce(&[3.0, 2.5, 2.0, 0.0, 2.1]).unwrap(), 0.0);
@@ -421,6 +600,175 @@ mod tests {
         assert_eq!(pm2.n_cases(), 2);
         assert_eq!(pm2.cases[0].props, vec![1.0, 0.0, 2.0]);
         assert_eq!(pm2.cases[1].time_s, 2e-3);
+    }
+
+    #[test]
+    fn mad_filter_rejects_fast_outliers_min_would_keep() {
+        // a spuriously-fast sample poisons min-of-runs...
+        let times = [10.0, 5.0, 1.5, 1.4, 1.2, 1.1, 0.04, 1.15];
+        let plain = Protocol::default();
+        assert_eq!(plain.reduce(&times).unwrap(), 0.04);
+        // ...and MAD rejection recovers the honest minimum
+        let robust = Protocol { mad_k: 3.5, ..Protocol::default() };
+        assert_eq!(robust.reduce(&times).unwrap(), 1.1);
+        // mad_k = 0 stays byte-identical to the historical reduction
+        let zero = Protocol { mad_k: 0.0, ..Protocol::default() };
+        assert_eq!(zero.reduce(&times).unwrap(), plain.reduce(&times).unwrap());
+        // degenerate inputs: short slices and zero-MAD streams pass through
+        assert_eq!(mad_filter(&[1.0, 2.0], 3.0), vec![1.0, 2.0]);
+        assert_eq!(mad_filter(&[5.0, 5.0, 5.0, 5.0], 3.0), vec![5.0; 4]);
+    }
+
+    #[test]
+    fn mad_rejection_defeats_injected_outliers_end_to_end() {
+        use crate::util::fault::FaultPlan;
+        use std::sync::Arc;
+        let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
+        let env = env(&[("n", 1 << 22)]);
+        let clean_gpu = SimGpu::named("titan_x").unwrap();
+        let faulted_gpu = clean_gpu
+            .clone()
+            .with_faults(Some(Arc::new(FaultPlan::new(1).site("measure.outlier", 1.0))));
+        let p = Protocol { runs: 12, ..Protocol::default() };
+        let clean = p.reduce(&clean_gpu.time(&k, &env, p.runs).unwrap()).unwrap();
+        let corrupted = faulted_gpu.time(&k, &env, p.runs).unwrap();
+        // the outlier may land in the discard window; draw until it
+        // corrupts a retained sample so the assertion is meaningful
+        let (mut corrupted, mut tries) = (corrupted, 0);
+        while p.reduce(&corrupted).unwrap() > 0.5 * clean && tries < 32 {
+            corrupted = faulted_gpu.time(&k, &env, p.runs).unwrap();
+            tries += 1;
+        }
+        assert!(
+            p.reduce(&corrupted).unwrap() <= 0.05 * clean,
+            "outlier never landed in a retained sample"
+        );
+        let robust = Protocol { mad_k: 3.5, ..p };
+        let recovered = robust.reduce(&corrupted).unwrap();
+        assert!(
+            (recovered - clean).abs() <= 0.15 * clean,
+            "recovered {recovered} vs clean {clean}"
+        );
+    }
+
+    #[test]
+    fn retry_budget_survives_transient_measurement_failures() {
+        use crate::util::fault::FaultPlan;
+        use std::sync::Arc;
+        // first two attempts fail, the third succeeds: within budget
+        let plan = Arc::new(FaultPlan::new(2).site_max("measure.fail", 1.0, 2));
+        let gpu = SimGpu::named("k40c").unwrap().with_faults(Some(plan.clone()));
+        let p = Protocol { runs: 6, retries: 2, ..Protocol::default() };
+        let o = calibrate_overhead(&gpu, &p).unwrap();
+        assert!(o > 0.0);
+        assert_eq!(plan.injected("measure.fail"), 2);
+        // budget exhausted -> the error names the attempt count and site
+        let plan2 = Arc::new(FaultPlan::new(2).site("measure.fail", 1.0));
+        let gpu2 = SimGpu::named("k40c").unwrap().with_faults(Some(plan2));
+        let e = calibrate_overhead(&gpu2, &p).unwrap_err();
+        assert!(e.contains("3 attempt(s)") && e.contains("measure.fail"), "{e}");
+    }
+
+    fn copy_cases(n_cases: usize) -> Vec<KernelCase> {
+        let k = measure::global_access(measure::GlobalAccessConfig::Copy, 256);
+        (0..n_cases)
+            .map(|t| {
+                let n = 1i64 << (18 + t as u32);
+                KernelCase {
+                    kernel: k.clone(),
+                    env: env(&[("n", n)]),
+                    label: format!("sg_copy/n={n}/g=256"),
+                    group: (256, 1),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn robust_campaign_falls_back_when_calibration_fails() {
+        use crate::util::fault::FaultPlan;
+        use std::sync::Arc;
+        // exactly one timing call fails: calibration, which runs first
+        let plan = Arc::new(FaultPlan::new(5).site_max("measure.fail", 1.0, 1));
+        let gpu = SimGpu::named("titan_x").unwrap().with_faults(Some(plan));
+        let cases = copy_cases(5);
+        let p = Protocol { runs: 6, retries: 0, ..Protocol::default() };
+        let out = run_campaign_robust(
+            &gpu, &cases, &Schema::full(), &p, ExtractOpts::default(), 1,
+        )
+        .unwrap();
+        assert_eq!(out.overhead, 0.0);
+        let w = out.overhead_warning.as_deref().unwrap();
+        assert!(w.contains("zero-overhead default"), "{w}");
+        // the floor is disabled, so every case survives; none quarantined
+        assert_eq!(out.matrix.n_cases(), cases.len());
+        assert!(out.quarantined.is_empty());
+    }
+
+    #[test]
+    fn robust_campaign_quarantines_failing_cases_with_reasons() {
+        use crate::util::fault::FaultPlan;
+        use std::sync::Arc;
+        // first three timing calls fail with no retries: calibration
+        // (call 1) falls back, cases 0 and 1 (calls 2-3, sequential with
+        // workers=1) are quarantined, the rest are measured
+        let plan = Arc::new(FaultPlan::new(5).site_max("measure.fail", 1.0, 3));
+        let gpu = SimGpu::named("titan_x").unwrap().with_faults(Some(plan));
+        let cases = copy_cases(6);
+        let p = Protocol { runs: 6, retries: 0, ..Protocol::default() };
+        let out = run_campaign_robust(
+            &gpu, &cases, &Schema::full(), &p, ExtractOpts::default(), 1,
+        )
+        .unwrap();
+        assert!(out.overhead_warning.is_some());
+        assert_eq!(out.quarantined.len(), 2);
+        assert_eq!(out.quarantined[0].label, cases[0].label);
+        assert_eq!(out.quarantined[1].label, cases[1].label);
+        assert!(out.quarantined[0].reason.contains("measure.fail"));
+        assert_eq!(out.matrix.n_cases() + out.quarantined.len(), cases.len());
+        // every surviving case is absent from quarantine and vice versa
+        for q in &out.quarantined {
+            assert!(out.matrix.cases.iter().all(|c| c.label != q.label));
+        }
+    }
+
+    #[test]
+    fn robust_campaign_without_faults_matches_strict_campaign() {
+        let gpu = SimGpu::named("titan_x").unwrap();
+        let cases = copy_cases(5);
+        let p = Protocol { runs: 6, ..Protocol::default() };
+        let (pm, overhead) = run_campaign(
+            &gpu, &cases, &Schema::full(), &p, ExtractOpts::default(), 2,
+        )
+        .unwrap();
+        let out = run_campaign_robust(
+            &gpu, &cases, &Schema::full(), &p, ExtractOpts::default(), 2,
+        )
+        .unwrap();
+        assert_eq!(out.overhead, overhead);
+        assert!(out.overhead_warning.is_none());
+        assert!(out.quarantined.is_empty());
+        assert_eq!(out.matrix.n_cases(), pm.n_cases());
+        for (a, b) in out.matrix.cases.iter().zip(&pm.cases) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.time_s, b.time_s);
+            assert_eq!(a.props, b.props);
+        }
+    }
+
+    #[test]
+    fn all_cases_quarantined_is_an_error() {
+        use crate::util::fault::FaultPlan;
+        use std::sync::Arc;
+        let plan = Arc::new(FaultPlan::new(5).site("measure.fail", 1.0));
+        let gpu = SimGpu::named("titan_x").unwrap().with_faults(Some(plan));
+        let cases = copy_cases(3);
+        let p = Protocol { runs: 6, retries: 0, ..Protocol::default() };
+        let e = run_campaign_robust(
+            &gpu, &cases, &Schema::full(), &p, ExtractOpts::default(), 1,
+        )
+        .unwrap_err();
+        assert!(e.contains("3 quarantined"), "{e}");
     }
 
     #[test]

@@ -73,6 +73,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "watch", help: "serve: hot-reload --models when the file changes (polled between batches/connections)", is_flag: true, default: None },
         OptSpec { name: "max-conn", help: "serve --port: concurrent-connection guard", is_flag: false, default: Some("256") },
         OptSpec { name: "export", help: "devices: write a commented profiles.json template to this path", is_flag: false, default: None },
+        OptSpec { name: "faults", help: "chaos: deterministic fault-injection plan (JSON: {\"seed\", \"sites\": {\"<site>\": {\"rate\", \"max\"?}}})", is_flag: false, default: None },
+        OptSpec { name: "degraded", help: "serve/predict: answer for devices the artifact lacks from the nearest-capability fitted device (responses flagged \"degraded\")", is_flag: true, default: None },
     ]
 }
 
@@ -126,6 +128,12 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
         cfg.workers = w.parse().map_err(|_| "bad --workers")?;
     }
     cfg.eval_zoo = args.has_flag("zoo");
+    cfg.degraded = args.has_flag("degraded");
+    if let Some(path) = args.get("faults") {
+        let plan = uniperf::util::fault::FaultPlan::load(Path::new(path))?;
+        eprintln!("uniperf: fault injection armed (--faults {path}, seed {})", plan.seed());
+        cfg.faults = Some(std::sync::Arc::new(plan));
+    }
     if let Some(path) = args.get("devices") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("--devices {path}: {e}"))?;
@@ -155,7 +163,23 @@ fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, Stri
         extract: cfg.extract,
         ..ServiceConfig::default()
     };
-    Service::new(store, cfg.registry.clone(), svc_cfg)
+    // the serving engine is built here (not through `Service::new`) so
+    // it carries the run's fault plan and degraded-mode setting along
+    // with the registry — `ServiceConfig` is plain-`Copy` and cannot
+    // hold the `Arc`'d plan
+    let engine = uniperf::engine::Engine::with_cache_capacity(
+        Config {
+            registry: cfg.registry.clone(),
+            extract: cfg.extract,
+            workers: cfg.workers,
+            faults: cfg.faults.clone(),
+            degraded: cfg.degraded,
+            ..Config::default()
+        },
+        svc_cfg.cache_capacity,
+    );
+    engine.install_store(store)?;
+    Service::over(std::sync::Arc::new(engine), svc_cfg)
 }
 
 /// Assemble the one-shot `predict` request line from CLI flags.
@@ -203,6 +227,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                     dr.launch_overhead_s * 1e6,
                     100.0 * dr.model.train_rel_err_geomean
                 );
+                for w in &dr.warnings {
+                    eprintln!("  warning [{}]: {w}", dr.device);
+                }
+                for (label, reason) in &dr.quarantined {
+                    eprintln!("  quarantined [{}]: {label}: {reason}", dr.device);
+                }
             }
             println!("pipeline completed in {:.1}s", t0.elapsed().as_secs_f64());
             Ok(())
@@ -257,6 +287,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             let schema = Schema::full();
             let dr = run_device(&device, &schema, &cfg)?;
             println!("{}", render_table2(&dr.model, &schema));
+            for w in &dr.warnings {
+                eprintln!("warning: {w}");
+            }
+            for (label, reason) in &dr.quarantined {
+                eprintln!("quarantined: {label}: {reason}");
+            }
             Ok(())
         }
         "predict" => {

@@ -336,6 +336,18 @@ pub struct ServiceSummary {
     /// minimum symbolic-extraction time over the *timed* (cache-miss)
     /// extractions; `None` when every request hit the cache
     pub min_extract_us: Option<f64>,
+    /// requests shed by the bounded pending queue / connection guard
+    pub shed: u64,
+    /// requests answered with a `"reason": "deadline"` error
+    pub deadline_expired: u64,
+    /// predictions served by a degraded-mode fallback device
+    pub degraded_served: u64,
+    /// TCP connections dropped by the `conn.abort` fault site
+    pub conn_aborted: u64,
+    /// TCP connections delayed by the `conn.slow` fault site
+    pub conn_slowed: u64,
+    /// measurement cases quarantined by the engine's campaigns
+    pub quarantined: u64,
 }
 
 impl ServiceSummary {
@@ -366,7 +378,25 @@ impl ServiceSummary {
                 "min_extract_us",
                 self.min_extract_us.map(Json::Num).unwrap_or(Json::Null),
             ),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_expired", Json::Num(self.deadline_expired as f64)),
+            ("degraded_served", Json::Num(self.degraded_served as f64)),
+            ("conn_aborted", Json::Num(self.conn_aborted as f64)),
+            ("conn_slowed", Json::Num(self.conn_slowed as f64)),
+            ("quarantined", Json::Num(self.quarantined as f64)),
         ])
+    }
+
+    /// Anything the robustness layer had to absorb (shed load, expired
+    /// deadlines, degraded fallbacks, chaos-dropped connections,
+    /// quarantined measurements)?
+    pub fn any_degradation(&self) -> bool {
+        self.shed != 0
+            || self.deadline_expired != 0
+            || self.degraded_served != 0
+            || self.conn_aborted != 0
+            || self.conn_slowed != 0
+            || self.quarantined != 0
     }
 }
 
@@ -405,6 +435,21 @@ pub fn render_service(s: &ServiceSummary) -> String {
         None => {
             let _ = writeln!(out, "extraction: all requests served from cache");
         }
+    }
+    // only when something was absorbed: a healthy run's report is
+    // byte-identical to the pre-robustness format
+    if s.any_degradation() {
+        let _ = writeln!(
+            out,
+            "robustness: {} shed  {} deadline-expired  {} degraded  \
+             {} conn aborted  {} conn slowed  {} quarantined",
+            s.shed,
+            s.deadline_expired,
+            s.degraded_served,
+            s.conn_aborted,
+            s.conn_slowed,
+            s.quarantined
+        );
     }
     out
 }
@@ -539,9 +584,13 @@ mod tests {
             latency_p99_us: 180.0,
             latency_mean_us: 20.1,
             min_extract_us: Some(812.0),
+            ..ServiceSummary::default()
         };
         assert!((s.hit_rate() - 270.0 / 288.0).abs() < 1e-12);
         let r = render_service(&s);
+        // a healthy run shows no robustness line at all
+        assert!(!r.contains("robustness:"), "{r}");
+        assert!(!s.any_degradation());
         for needle in [
             "requests 288",
             "batches 5",
@@ -559,6 +608,13 @@ mod tests {
         assert!(render_service(&warm).contains("all requests served from cache"));
         assert_eq!(ServiceSummary::default().hit_rate(), 0.0);
         assert_eq!(warm.to_json().get("min_extract_us"), Some(&Json::Null));
+        // a degraded run reports what was absorbed
+        let rough = ServiceSummary { shed: 4, quarantined: 2, ..warm };
+        assert!(rough.any_degradation());
+        let r = render_service(&rough);
+        assert!(r.contains("robustness: 4 shed"), "{r}");
+        assert!(r.contains("2 quarantined"), "{r}");
+        assert_eq!(rough.to_json().get_f64("shed"), Some(4.0));
     }
 
     #[test]

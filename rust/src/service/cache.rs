@@ -94,11 +94,19 @@ impl Shard {
     /// passes (the first pass clears every bit it crosses).
     fn evict_one(&mut self) {
         loop {
+            if self.ring.is_empty() {
+                return;
+            }
             if self.hand >= self.ring.len() {
                 self.hand = 0;
             }
             let key = self.ring[self.hand];
-            let e = self.map.get_mut(&key).expect("ring tracks live keys");
+            let Some(e) = self.map.get_mut(&key) else {
+                // defensive: a ring key without a live entry is dropped
+                // from the ring instead of wedging the sweep
+                self.ring.remove(self.hand);
+                continue;
+            };
             if e.referenced {
                 e.referenced = false;
                 self.hand += 1;
@@ -110,6 +118,13 @@ impl Shard {
             }
         }
     }
+}
+
+/// Shard lock that survives a poisoned peer: an extraction that
+/// panicked on another thread must not wedge every later lookup that
+/// hashes into the same shard.
+fn locked(m: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// A concurrently shared, eviction-bounded symbolic-extraction cache.
@@ -174,7 +189,7 @@ impl SharedPropsCache {
             if env_keyed { env_fingerprint(classify_env) } else { 0 },
         );
         let shard = &self.shards[(key.0 as usize) % SHARDS];
-        let mut shard = shard.lock().unwrap();
+        let mut shard = locked(shard);
         if let Some(e) = shard.map.get_mut(&key) {
             e.referenced = true;
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -208,7 +223,7 @@ impl SharedPropsCache {
 
     /// Distinct (kernel structure, options) entries currently cached.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| locked(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -217,6 +232,7 @@ impl SharedPropsCache {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
@@ -349,6 +365,39 @@ mod tests {
             assert!(hit, "hot entry evicted after {g} churn inserts");
         }
         assert!(cache.evictions() > 0, "the churn stream must have evicted");
+    }
+
+    #[test]
+    fn concurrent_churn_conserves_accounting_at_tiny_capacity() {
+        // four threads hammer overlapping structure streams through a
+        // one-entry-per-shard cache: hits, misses, evictions and live
+        // entries must balance exactly no matter how lookups interleave
+        let cache = SharedPropsCache::with_capacity(1);
+        assert_eq!(cache.capacity(), SHARDS);
+        let e = env(&[("n", 1 << 12)]);
+        let threads: i64 = 4;
+        let per_thread: i64 = 60;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let cache = &cache;
+                let e = e.clone();
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        // overlapping streams: distinct threads revisit
+                        // the same 40 structures at staggered offsets
+                        let g = 8 + (i + 13 * t) % 40;
+                        let k = sized_kernel("churn", "a", g);
+                        cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+                    }
+                });
+            }
+        });
+        // every lookup is exactly one hit or one miss...
+        assert_eq!(cache.hits() + cache.misses(), (threads * per_thread) as u64);
+        // ...and every miss's entry either still lives or was evicted
+        assert_eq!(cache.misses(), cache.len() as u64 + cache.evictions());
+        assert!(cache.len() <= cache.capacity(), "len {} over bound", cache.len());
+        assert!(cache.evictions() > 0, "40 structures through 16 slots must evict");
     }
 
     #[test]

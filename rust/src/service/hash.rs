@@ -216,6 +216,7 @@ pub fn structural_hash(kernel: &Kernel) -> u64 {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::isl::{BoxDomain, Dim};

@@ -37,6 +37,16 @@
 //!    an `{"error": ...}` (best-effort `id` echo from the retained
 //!    prefix) instead of buffering without bound, and the stream then
 //!    resumes at the next newline.
+//! 6. **Degradation & health** (see `DESIGN.md` § Robustness) —
+//!    per-request `deadline_ms` budgets answered with
+//!    `"reason": "deadline"` errors once expired; a bounded pending
+//!    queue ([`ServiceConfig::queue_cap`]) that sheds overload with
+//!    `"reason": "overloaded"` + [`RETRY_AFTER_MS`]; degraded-mode
+//!    fallback predictions surfaced with `"degraded": true` +
+//!    `"served_by"`; and `{"cmd": "health"}` / `{"cmd": "stats"}`
+//!    introspection (store fingerprint, reloader state,
+//!    cache/quarantine/breaker counters, fault-injection tallies —
+//!    driven end to end by `rust/tests/chaos.rs`).
 //!
 //! The TCP listener ([`tcp`]) serves each connection on its own thread
 //! over one shared `Arc<Service>`; `{"cmd": "shutdown"}` drains it
@@ -45,6 +55,11 @@
 //! Property vectors are hardware-independent (the cross-machine result
 //! of arXiv:1904.09538), so one cached extraction answers queries for
 //! *every* registered device; only the weight table is per-device.
+
+// A serving loop must degrade, never panic: every fallible path in this
+// module tree answers with an `{"error": ...}` line instead of
+// unwinding a worker thread (tests opt back in per-module).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod cache;
 pub mod hash;
@@ -62,17 +77,30 @@ use crate::gpusim::DeviceRegistry;
 use crate::report::ServiceSummary;
 use crate::stats::ExtractOpts;
 use crate::util::executor::{default_workers, par_map};
+use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
 use std::io::{BufRead, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 /// Default request-line length cap (bytes). Far above any legitimate
 /// inline kernel spec, far below what a hostile unterminated stream
 /// could otherwise make one connection buffer.
 pub const MAX_REQUEST_LINE: usize = 1 << 20;
+
+/// Advisory client back-off (milliseconds) attached to every
+/// `"reason": "overloaded"` shed response (bounded queue and TCP
+/// connection guard alike).
+pub const RETRY_AFTER_MS: u64 = 50;
+
+/// Mutex lock that survives a poisoned peer: accounting state stays
+/// usable even if another worker thread panicked mid-update (a torn
+/// counter beats a cascading panic in a serving loop).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Serving configuration.
 #[derive(Clone, Copy, Debug)]
@@ -88,6 +116,11 @@ pub struct ServiceConfig {
     /// props-cache entry bound (see
     /// [`SharedPropsCache::with_capacity`])
     pub cache_capacity: usize,
+    /// pending-request queue bound for the batched serving loop: lines
+    /// beyond this many waiting requests are shed in stream order with
+    /// an `{"error": ..., "reason": "overloaded", "retry_after_ms":
+    /// ...}` response instead of queueing without bound
+    pub queue_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -98,6 +131,7 @@ impl Default for ServiceConfig {
             extract: ExtractOpts::default(),
             max_line: MAX_REQUEST_LINE,
             cache_capacity: cache::DEFAULT_CAPACITY,
+            queue_cap: 4096,
         }
     }
 }
@@ -148,6 +182,16 @@ struct Stats {
     /// unit-test the exclusion rule for — so this is bounded state
     /// with an exact answer, even for miss-heavy inline workloads.
     min_extract_s: Mutex<Option<f64>>,
+    /// requests shed by the bounded pending queue or connection guard
+    shed: AtomicU64,
+    /// requests answered with a deadline error instead of a prediction
+    deadline_expired: AtomicU64,
+    /// predictions served by a degraded-mode fallback device
+    degraded: AtomicU64,
+    /// TCP connections dropped by the `conn.abort` fault site
+    conn_aborted: AtomicU64,
+    /// TCP connections delayed by the `conn.slow` fault site
+    conn_slowed: AtomicU64,
 }
 
 /// The prediction server front end: request parsing + response
@@ -214,19 +258,46 @@ impl Service {
 
     /// Snapshot of the currently installed model store.
     pub fn store(&self) -> Arc<ModelStore> {
-        self.engine.store_snapshot().expect("service construction requires a store")
+        match self.engine.store_snapshot() {
+            Some(s) => s,
+            // Service::over refuses engines without a store
+            None => unreachable!("service construction requires a store"),
+        }
     }
 
     pub fn cache(&self) -> &SharedPropsCache {
         self.engine.cache()
     }
 
+    /// The fault plan threaded through the engine configuration
+    /// (`None` when chaos injection is off).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.engine.config().faults.clone()
+    }
+
+    /// TCP-layer accounting hooks ([`tcp`] owns the sockets, the
+    /// service owns the counters the health surface reports).
+    pub(crate) fn note_conn_aborted(&self) {
+        self.stats.conn_aborted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_conn_slowed(&self) {
+        self.stats.conn_slowed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_shed(&self) {
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Watch `path` (the `--models` artifact) for rewrites: the serving
     /// loops re-stat it between batches and connections and atomically
     /// swap a validated new store in ([`Reloader`]). The current file
-    /// state counts as already loaded.
+    /// state counts as already loaded. The engine's fault plan (if any)
+    /// rides along so `reload.io` faults exercise this reloader.
     pub fn watch(&mut self, path: &Path) {
-        self.reload = Some(Reloader::primed(path));
+        self.reload = Some(
+            Reloader::primed(path).with_faults(self.engine.config().faults.clone()),
+        );
     }
 
     /// Has a `{"cmd": "shutdown"}` request asked the serving loops to
@@ -257,9 +328,40 @@ impl Service {
     /// pass `None` — the [`crate::harness::Sample::Cached`] rule).
     fn note_extract(&self, extract_s: Option<f64>) {
         if let Some(t) = extract_s {
-            let mut m = self.stats.min_extract_s.lock().unwrap();
+            let mut m = locked(&self.stats.min_extract_s);
             *m = Some(m.map_or(t, |x| x.min(t)));
         }
+    }
+
+    /// `Some(response)` when the request's `deadline_ms` budget was
+    /// already spent by the time it reached execution (time in the
+    /// batch window counts; a zero budget always expires).
+    fn deadline_response(
+        &self,
+        deadline_ms: Option<f64>,
+        enqueued: Instant,
+        id: Option<&Json>,
+    ) -> Option<Json> {
+        let budget = deadline_ms?;
+        let waited = enqueued.elapsed().as_secs_f64() * 1e3;
+        if waited <= budget {
+            return None;
+        }
+        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let mut pairs = vec![
+            (
+                "error",
+                Json::Str(format!(
+                    "deadline exceeded: waited {waited:.3} ms against a {budget} ms budget"
+                )),
+            ),
+            ("reason", Json::Str("deadline".into())),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", id.clone()));
+        }
+        Some(Json::obj(pairs))
     }
 
     /// Handle one request line: parse, delegate to the engine, account,
@@ -267,6 +369,13 @@ impl Service {
     /// errors come back as `{"error": ...}` responses (echoing `id` when
     /// it parsed).
     pub fn respond(&self, line: &str) -> Json {
+        self.respond_at(line, Instant::now())
+    }
+
+    /// [`Service::respond`] with an explicit enqueue time: `deadline_ms`
+    /// budgets are measured from when the server first read the line,
+    /// so time spent waiting in a batch window counts against them.
+    fn respond_at(&self, line: &str, enqueued: Instant) -> Json {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let error_resp = |id: Option<&Json>, msg: String| {
@@ -294,89 +403,226 @@ impl Service {
                 }
                 Json::obj(pairs)
             }
-            Ok(Request::Predict(req)) => match self.engine.predict(&req) {
-                Err(e) => error_resp(req.id.as_ref(), e),
-                Ok(p) => {
-                    self.note_extract(p.extract_s);
-                    let mut pairs = vec![
-                        ("device", Json::Str(p.device)),
-                        ("kernel", Json::Str(p.kernel)),
-                        ("predicted_s", Json::Num(p.predicted_s)),
-                        (
-                            "cache",
-                            Json::Str(if p.cache_hit { "hit".into() } else { "miss".into() }),
-                        ),
-                    ];
-                    if let Some(c) = p.case {
-                        pairs.push(("case", Json::Str(c)));
-                    }
-                    if let Some(id) = p.id {
-                        pairs.push(("id", id));
-                    }
-                    Json::obj(pairs)
+            Ok(Request::Health { id }) => self.health_response(id),
+            Ok(Request::Stats { id }) => {
+                let mut pairs = vec![
+                    ("ok", Json::Str("stats".into())),
+                    ("summary", self.summary().to_json()),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", id));
                 }
-            },
-            Ok(Request::Matrix(req)) => match self.engine.predict_matrix(&req) {
-                Err(e) => error_resp(req.id.as_ref(), e),
-                Ok(mp) => {
-                    let results = mp
-                        .per_device
-                        .into_iter()
-                        .map(|(device, outcome)| match outcome {
-                            Ok(p) => {
-                                self.note_extract(p.extract_s);
-                                Json::obj(vec![
-                                    ("device", Json::Str(device)),
-                                    ("predicted_s", Json::Num(p.predicted_s)),
-                                    (
-                                        "cache",
-                                        Json::Str(
-                                            if p.cache_hit { "hit".into() } else { "miss".into() },
-                                        ),
-                                    ),
-                                ])
+                Json::obj(pairs)
+            }
+            Ok(Request::Predict(req)) => {
+                if let Some(expired) =
+                    self.deadline_response(req.deadline_ms, enqueued, req.id.as_ref())
+                {
+                    expired
+                } else {
+                    match self.engine.predict(&req) {
+                        Err(e) => error_resp(req.id.as_ref(), e),
+                        Ok(p) => {
+                            self.note_extract(p.extract_s);
+                            let mut pairs = vec![
+                                ("device", Json::Str(p.device)),
+                                ("kernel", Json::Str(p.kernel)),
+                                ("predicted_s", Json::Num(p.predicted_s)),
+                                (
+                                    "cache",
+                                    Json::Str(if p.cache_hit {
+                                        "hit".into()
+                                    } else {
+                                        "miss".into()
+                                    }),
+                                ),
+                            ];
+                            if p.degraded {
+                                self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                                pairs.push(("degraded", Json::Bool(true)));
                             }
-                            Err(e) => Json::obj(vec![
-                                ("device", Json::Str(device)),
-                                ("error", Json::Str(e)),
-                            ]),
-                        })
-                        .collect();
-                    let mut pairs = vec![
-                        ("kernel", Json::Str(mp.kernel)),
-                        ("results", Json::Arr(results)),
-                    ];
-                    if let Some(c) = mp.case {
-                        pairs.push(("case", Json::Str(c)));
+                            if let Some(sb) = p.served_by {
+                                pairs.push(("served_by", Json::Str(sb)));
+                            }
+                            if let Some(c) = p.case {
+                                pairs.push(("case", Json::Str(c)));
+                            }
+                            if let Some(id) = p.id {
+                                pairs.push(("id", id));
+                            }
+                            Json::obj(pairs)
+                        }
                     }
-                    if let Some(id) = mp.id {
-                        pairs.push(("id", id));
-                    }
-                    Json::obj(pairs)
                 }
-            },
+            }
+            Ok(Request::Matrix(req)) => {
+                if let Some(expired) =
+                    self.deadline_response(req.deadline_ms, enqueued, req.id.as_ref())
+                {
+                    expired
+                } else {
+                    match self.engine.predict_matrix(&req) {
+                        Err(e) => error_resp(req.id.as_ref(), e),
+                        Ok(mp) => {
+                            let results = mp
+                                .per_device
+                                .into_iter()
+                                .map(|(device, outcome)| match outcome {
+                                    Ok(p) => {
+                                        self.note_extract(p.extract_s);
+                                        let mut cell = vec![
+                                            ("device", Json::Str(device)),
+                                            ("predicted_s", Json::Num(p.predicted_s)),
+                                            (
+                                                "cache",
+                                                Json::Str(if p.cache_hit {
+                                                    "hit".into()
+                                                } else {
+                                                    "miss".into()
+                                                }),
+                                            ),
+                                        ];
+                                        if p.degraded {
+                                            self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                                            cell.push(("degraded", Json::Bool(true)));
+                                        }
+                                        if let Some(sb) = p.served_by {
+                                            cell.push(("served_by", Json::Str(sb)));
+                                        }
+                                        Json::obj(cell)
+                                    }
+                                    Err(e) => Json::obj(vec![
+                                        ("device", Json::Str(device)),
+                                        ("error", Json::Str(e)),
+                                    ]),
+                                })
+                                .collect();
+                            let mut pairs = vec![
+                                ("kernel", Json::Str(mp.kernel)),
+                                ("results", Json::Arr(results)),
+                            ];
+                            if let Some(c) = mp.case {
+                                pairs.push(("case", Json::Str(c)));
+                            }
+                            if let Some(id) = mp.id {
+                                pairs.push(("id", id));
+                            }
+                            Json::obj(pairs)
+                        }
+                    }
+                }
+            }
         };
-        self.stats
-            .latencies_us
-            .lock()
-            .unwrap()
-            .push(t0.elapsed().as_secs_f64() * 1e6);
+        locked(&self.stats.latencies_us).push(t0.elapsed().as_secs_f64() * 1e6);
         resp
+    }
+
+    /// The `{"cmd": "health"}` surface: component status without
+    /// touching the prediction path (safe to poll under load). Shape
+    /// documented in `DESIGN.md` § Robustness.
+    fn health_response(&self, id: Option<Json>) -> Json {
+        let store = self.store();
+        let cache = self.engine.cache();
+        let mut pairs = vec![
+            ("ok", Json::Str("health".into())),
+            (
+                "store",
+                Json::obj(vec![
+                    ("fingerprint", Json::Str(store.fingerprint())),
+                    (
+                        "devices",
+                        Json::Arr(store.devices().into_iter().map(Json::Str).collect()),
+                    ),
+                ]),
+            ),
+            (
+                "reloader",
+                Json::obj(vec![
+                    ("watching", Json::Bool(self.reload.is_some())),
+                    (
+                        "last_error",
+                        match self.reload.as_ref().and_then(|r| r.last_error()) {
+                            Some(e) => Json::Str(e),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(cache.hits() as f64)),
+                    ("misses", Json::Num(cache.misses() as f64)),
+                    ("evictions", Json::Num(cache.evictions() as f64)),
+                    ("entries", Json::Num(cache.len() as f64)),
+                    ("capacity", Json::Num(cache.capacity() as f64)),
+                ]),
+            ),
+            ("quarantined", Json::Num(self.engine.quarantined_total() as f64)),
+            (
+                "breakers",
+                Json::obj(vec![
+                    ("open", Json::Num(self.engine.breaker_open_count() as f64)),
+                    ("trips", Json::Num(self.engine.breaker_trips() as f64)),
+                ]),
+            ),
+            (
+                "counters",
+                Json::obj(vec![
+                    ("shed", Json::Num(self.stats.shed.load(Ordering::Relaxed) as f64)),
+                    (
+                        "deadline_expired",
+                        Json::Num(self.stats.deadline_expired.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degraded",
+                        Json::Num(self.stats.degraded.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "conn_aborted",
+                        Json::Num(self.stats.conn_aborted.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "conn_slowed",
+                        Json::Num(self.stats.conn_slowed.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "faults",
+                match self.engine.config().faults.as_ref() {
+                    Some(plan) => plan.counters_json(),
+                    None => Json::Null,
+                },
+            ),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
     }
 
     #[cfg(test)]
     fn latency_samples_held(&self) -> usize {
-        self.stats.latencies_us.lock().unwrap().samples.len()
+        locked(&self.stats.latencies_us).samples.len()
     }
 
     /// Handle one deterministic batch: responses come back in request
     /// order regardless of which worker answered which request.
     pub fn run_batch(&self, lines: Vec<String>) -> Vec<Json> {
+        let now = Instant::now();
+        self.run_batch_at(lines.into_iter().map(|l| (l, now)).collect())
+    }
+
+    /// [`Service::run_batch`] with per-line enqueue times (the batched
+    /// serving loop records when each line was read, so `deadline_ms`
+    /// budgets cover the wait in the batch window).
+    fn run_batch_at(&self, lines: Vec<(String, Instant)>) -> Vec<Json> {
         if lines.is_empty() {
             return Vec::new();
         }
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        par_map(lines, self.cfg.workers, |l| self.respond(&l))
+        par_map(lines, self.cfg.workers, |(l, t)| self.respond_at(&l, t))
     }
 
     /// The piped serving loop (stdin, `--requests` files): read request
@@ -424,7 +670,7 @@ impl Service {
         out: &mut impl Write,
         batch: usize,
     ) -> Result<(), String> {
-        let mut pending: Vec<String> = Vec::new();
+        let mut pending: Vec<Pending> = Vec::new();
         let interrupted = || self.shutdown_requested();
         loop {
             match read_request_line(&mut reader, self.cfg.max_line, &interrupted)? {
@@ -433,7 +679,19 @@ impl Service {
                     if line.trim().is_empty() {
                         continue;
                     }
-                    pending.push(line);
+                    if pending.len() >= self.cfg.queue_cap.max(1) {
+                        // shed: answered at the next flush, in stream
+                        // order, with a bounded error instead of
+                        // queueing without bound
+                        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        let id =
+                            Json::parse(&line).ok().and_then(|j| j.get("id").cloned());
+                        pending.push(Pending::Shed(id));
+                        continue;
+                    }
+                    pending.push(Pending::Line(line, Instant::now()));
                     if pending.len() >= batch.max(1) {
                         self.reload_tick();
                         self.flush(&mut pending, out)?;
@@ -468,22 +726,65 @@ impl Service {
         self.flush(&mut pending, out)
     }
 
-    fn flush(&self, pending: &mut Vec<String>, out: &mut impl Write) -> Result<(), String> {
+    fn flush(&self, pending: &mut Vec<Pending>, out: &mut impl Write) -> Result<(), String> {
         if pending.is_empty() {
             return Ok(());
         }
-        for resp in self.run_batch(std::mem::take(pending)) {
+        // split the queue while preserving stream positions: live lines
+        // go through the batch executor, shed slots render their
+        // overload error in place
+        let mut lines: Vec<(String, Instant)> = Vec::new();
+        let mut slots: Vec<Option<Json>> = Vec::with_capacity(pending.len());
+        for p in std::mem::take(pending) {
+            match p {
+                Pending::Line(l, t) => {
+                    lines.push((l, t));
+                    slots.push(None);
+                }
+                Pending::Shed(id) => slots.push(Some(self.shed_response(id))),
+            }
+        }
+        let mut answers = self.run_batch_at(lines).into_iter();
+        for slot in slots {
+            let resp = match slot {
+                Some(shed) => shed,
+                None => match answers.next() {
+                    Some(r) => r,
+                    // run_batch_at answers every line it was given
+                    None => unreachable!("one response per queued request"),
+                },
+            };
             writeln!(out, "{}", resp.compact()).map_err(|e| format!("write response: {e}"))?;
         }
         out.flush().map_err(|e| format!("flush responses: {e}"))
+    }
+
+    /// The bounded-queue shed response: the `"reason": "overloaded"` +
+    /// `retry_after_ms` contract chaos tests pin.
+    fn shed_response(&self, id: Option<Json>) -> Json {
+        let mut pairs = vec![
+            (
+                "error",
+                Json::Str(format!(
+                    "overloaded: the pending-request queue is full ({} waiting)",
+                    self.cfg.queue_cap
+                )),
+            ),
+            ("reason", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Num(RETRY_AFTER_MS as f64)),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
     }
 
     /// Aggregate accounting so far. Latency percentiles come from the
     /// bounded sample buffer (exact below [`LATENCY_CAP`] requests,
     /// uniformly subsampled beyond).
     pub fn summary(&self) -> ServiceSummary {
-        let mut lat = self.stats.latencies_us.lock().unwrap().samples.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut lat = locked(&self.stats.latencies_us).samples.clone();
+        lat.sort_by(f64::total_cmp);
         let pct = |p: f64| -> f64 {
             if lat.is_empty() {
                 0.0
@@ -494,8 +795,7 @@ impl Service {
         let mean = if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
         // min extraction time over timed extractions only; cache hits
         // were Sample::Cached markers and never entered the floor
-        let min_extract_us =
-            self.stats.min_extract_s.lock().unwrap().map(|s| s * 1e6);
+        let min_extract_us = locked(&self.stats.min_extract_s).map(|s| s * 1e6);
         let cache = self.engine.cache();
         ServiceSummary {
             requests: self.stats.requests.load(Ordering::Relaxed),
@@ -509,8 +809,23 @@ impl Service {
             latency_p99_us: pct(0.99),
             latency_mean_us: mean,
             min_extract_us,
+            shed: self.stats.shed.load(Ordering::Relaxed),
+            deadline_expired: self.stats.deadline_expired.load(Ordering::Relaxed),
+            degraded_served: self.stats.degraded.load(Ordering::Relaxed),
+            conn_aborted: self.stats.conn_aborted.load(Ordering::Relaxed),
+            conn_slowed: self.stats.conn_slowed.load(Ordering::Relaxed),
+            quarantined: self.engine.quarantined_total(),
         }
     }
+}
+
+/// One queued slot of the batched serving loop: a request waiting to
+/// execute (with its enqueue time, for deadline budgets) or a request
+/// already shed by the queue bound (answered at flush, in stream
+/// order).
+enum Pending {
+    Line(String, Instant),
+    Shed(Option<Json>),
 }
 
 /// Outcome of one capped line read.
@@ -592,6 +907,7 @@ fn read_request_line<R: BufRead>(
 /// `engine`): hand-made — but registry-valid — stores that exercise
 /// resolution, caching and accounting without paying for a fit.
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub(crate) mod testutil {
     use super::{ModelStore, StoredModel};
     use crate::gpusim::registry::builtins;
@@ -665,6 +981,7 @@ fn salvage_id(prefix: &[u8]) -> Option<Json> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::testutil::toy_store;
     use super::*;
@@ -977,5 +1294,128 @@ mod tests {
             ReadLine::Line(l) => assert_eq!(l, "ok"),
             _ => panic!("stream must resynchronize at the newline"),
         }
+    }
+
+    #[test]
+    fn expired_deadlines_are_answered_with_a_reason() {
+        let svc = toy_service();
+        // a zero budget is always already spent by execution time
+        let r = svc.respond(
+            r#"{"id": 9, "device": "k40c", "kernel": "fd5", "case": "a", "deadline_ms": 0}"#,
+        );
+        assert!(r.get_str("error").unwrap().contains("deadline"), "{r}");
+        assert_eq!(r.get_str("reason"), Some("deadline"));
+        assert_eq!(r.get_f64("id"), Some(9.0));
+        assert!(r.get("predicted_s").is_none(), "an expired request is never predicted");
+        // a generous budget is not expired
+        let r = svc.respond(
+            r#"{"device": "k40c", "kernel": "fd5", "case": "a", "deadline_ms": 60000}"#,
+        );
+        assert!(r.get("error").is_none(), "{r}");
+        // matrix requests carry the same budget
+        let r = svc.respond(r#"{"cmd": "matrix", "kernel": "fd5", "deadline_ms": 0}"#);
+        assert_eq!(r.get_str("reason"), Some("deadline"), "{r}");
+        let s = svc.summary();
+        assert_eq!((s.requests, s.errors, s.deadline_expired), (3, 2, 2));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overload_in_stream_order() {
+        let svc = Service::new(
+            toy_store(&[("k40c", 2e-9, 5e-6)]),
+            builtins().clone(),
+            ServiceConfig { workers: 1, batch: 8, queue_cap: 2, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let input: String = (0..6)
+            .map(|i| {
+                format!(r#"{{"id": {i}, "device": "k40c", "kernel": "fd5", "case": "a"}}"#)
+                    + "\n"
+            })
+            .collect();
+        let mut out = Vec::new();
+        let summary = svc.serve(input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6, "every line gets exactly one response:\n{text}");
+        for (i, l) in lines.iter().enumerate() {
+            let j = Json::parse(l).unwrap();
+            assert_eq!(j.get_f64("id"), Some(i as f64), "stream order: {l}");
+            if i < 2 {
+                assert!(j.get("error").is_none(), "{l}");
+            } else {
+                assert!(j.get_str("error").unwrap().contains("overloaded"), "{l}");
+                assert_eq!(j.get_str("reason"), Some("overloaded"), "{l}");
+                assert_eq!(j.get_f64("retry_after_ms"), Some(RETRY_AFTER_MS as f64));
+            }
+        }
+        assert_eq!((summary.requests, summary.errors, summary.shed), (6, 4, 4));
+    }
+
+    #[test]
+    fn health_and_stats_report_component_status() {
+        let svc = toy_service();
+        svc.respond(r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        let h = svc.respond(r#"{"cmd": "health", "id": "h1"}"#);
+        assert_eq!(h.get_str("ok"), Some("health"), "{h}");
+        assert_eq!(h.get_str("id"), Some("h1"));
+        let store = h.get("store").unwrap();
+        assert_eq!(
+            store.get_str("fingerprint"),
+            Some(svc.store().fingerprint().as_str())
+        );
+        assert_eq!(store.get("devices").and_then(Json::as_arr).unwrap().len(), 1);
+        let reloader = h.get("reloader").unwrap();
+        assert_eq!(reloader.get("watching").and_then(Json::as_bool), Some(false));
+        assert_eq!(reloader.get("last_error"), Some(&Json::Null));
+        let cache = h.get("cache").unwrap();
+        assert_eq!(cache.get_f64("misses"), Some(1.0), "{cache}");
+        assert!(cache.get_f64("capacity").unwrap() > 0.0);
+        assert_eq!(h.get_f64("quarantined"), Some(0.0));
+        assert_eq!(h.get("breakers").unwrap().get_f64("open"), Some(0.0));
+        assert_eq!(h.get("faults"), Some(&Json::Null), "no plan installed");
+        // stats wraps the same summary the serve loop prints; health
+        // and stats count as requests, never as errors
+        let st = svc.respond(r#"{"cmd": "stats"}"#);
+        assert_eq!(st.get_str("ok"), Some("stats"), "{st}");
+        let sum = st.get("summary").unwrap();
+        assert_eq!(sum.get_f64("errors"), Some(0.0));
+        assert_eq!(sum.get_f64("requests"), Some(3.0));
+        assert_eq!(sum.get_f64("shed"), Some(0.0));
+        assert_eq!(svc.summary().errors, 0);
+    }
+
+    #[test]
+    fn degraded_predictions_surface_their_fallback_device() {
+        use crate::engine::{Config, Engine};
+        let engine = Engine::new(Config {
+            registry: builtins().clone(),
+            workers: 1,
+            degraded: true,
+            ..Config::default()
+        });
+        engine.install_store(toy_store(&[("k40c", 2e-9, 5e-6)])).unwrap();
+        let svc = Service::over(
+            Arc::new(engine),
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let r = svc.respond(r#"{"id": 3, "device": "titan_x", "kernel": "fd5", "case": "a"}"#);
+        assert!(r.get("error").is_none(), "{r}");
+        assert_eq!(r.get("degraded"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get_str("served_by"), Some("k40c"));
+        assert_eq!(r.get_str("device"), Some("titan_x"), "the requested device is echoed");
+        assert_eq!(svc.summary().degraded_served, 1);
+        // a direct hit is never flagged
+        let r = svc.respond(r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        assert!(r.get("degraded").is_none(), "{r}");
+        // matrix cells flag per device
+        let r = svc.respond(
+            r#"{"cmd": "matrix", "devices": ["k40c", "titan_x"], "kernel": "fd5", "case": "a"}"#,
+        );
+        let cells = r.get("results").and_then(Json::as_arr).unwrap();
+        assert!(cells[0].get("degraded").is_none(), "{r}");
+        assert_eq!(cells[1].get("degraded"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(cells[1].get_str("served_by"), Some("k40c"));
     }
 }

@@ -25,8 +25,16 @@
 //!   device the installed model store holds weights for).
 //! * `"shutdown"` — ask the server to stop accepting work and drain
 //!   (the threaded TCP listener joins its connections and exits).
+//! * `"health"` / `"stats"` — liveness + introspection: store
+//!   fingerprint, reloader state, cache/quarantine/breaker counters and
+//!   fault-injection tallies. Never touches the prediction path.
 //!
 //! `id` — any JSON value, echoed verbatim in the response.
+//!
+//! Predict and matrix requests additionally accept `"deadline_ms"` (a
+//! non-negative number): if the request has waited in the server longer
+//! than its deadline by the time it is executed, it is answered with a
+//! `"reason": "deadline"` error instead of a stale prediction.
 
 use super::spec;
 use crate::lpir::Kernel;
@@ -51,6 +59,8 @@ pub struct PredictRequest {
     pub kref: KernelRef,
     /// explicit parameter binding (name -> value), if given
     pub env: Option<Vec<(String, i64)>>,
+    /// queue-time budget in milliseconds; `None` = wait forever
+    pub deadline_ms: Option<f64>,
 }
 
 /// A parsed device×kernel matrix request: one kernel (parsed once),
@@ -62,6 +72,8 @@ pub struct MatrixRequest {
     pub devices: Option<Vec<String>>,
     pub kref: KernelRef,
     pub env: Option<Vec<(String, i64)>>,
+    /// queue-time budget in milliseconds; `None` = wait forever
+    pub deadline_ms: Option<f64>,
 }
 
 /// Any parsed request line.
@@ -71,6 +83,10 @@ pub enum Request {
     Matrix(MatrixRequest),
     /// drain + stop the serving loop
     Shutdown { id: Option<Json> },
+    /// liveness + component status (store, reloader, breakers, faults)
+    Health { id: Option<Json> },
+    /// counter snapshot (requests, cache, shedding, quarantine)
+    Stats { id: Option<Json> },
 }
 
 /// Parse the optional `env` object into (name, value) bindings.
@@ -92,6 +108,17 @@ fn parse_env(j: &Json) -> Result<Option<Vec<(String, i64)>>, String> {
             Ok(Some(pairs))
         }
         Some(_) => Err("request: 'env' must be an object".into()),
+    }
+}
+
+/// Parse the optional `deadline_ms` budget (non-negative, finite).
+fn parse_deadline(j: &Json) -> Result<Option<f64>, String> {
+    match j.get("deadline_ms") {
+        None => Ok(None),
+        Some(d) => match d.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 0.0 => Ok(Some(ms)),
+            _ => Err("request: 'deadline_ms' must be a non-negative number".into()),
+        },
     }
 }
 
@@ -143,7 +170,8 @@ impl PredictRequest {
             .to_string();
         let env = parse_env(j)?;
         let kref = parse_kref(j, &env)?;
-        Ok(PredictRequest { id: j.get("id").cloned(), device, kref, env })
+        let deadline_ms = parse_deadline(j)?;
+        Ok(PredictRequest { id: j.get("id").cloned(), device, kref, env, deadline_ms })
     }
 }
 
@@ -178,7 +206,8 @@ impl MatrixRequest {
         }
         let env = parse_env(j)?;
         let kref = parse_kref(j, &env)?;
-        Ok(MatrixRequest { id: j.get("id").cloned(), devices, kref, env })
+        let deadline_ms = parse_deadline(j)?;
+        Ok(MatrixRequest { id: j.get("id").cloned(), devices, kref, env, deadline_ms })
     }
 }
 
@@ -199,8 +228,10 @@ impl Request {
                 Some("predict") => Ok(Request::Predict(PredictRequest::from_json(j)?)),
                 Some("matrix") => Ok(Request::Matrix(MatrixRequest::from_json(j)?)),
                 Some("shutdown") => Ok(Request::Shutdown { id: j.get("id").cloned() }),
+                Some("health") => Ok(Request::Health { id: j.get("id").cloned() }),
+                Some("stats") => Ok(Request::Stats { id: j.get("id").cloned() }),
                 Some(other) => Err(format!(
-                    "request: unknown cmd '{other}' (predict|matrix|shutdown)"
+                    "request: unknown cmd '{other}' (predict|matrix|health|stats|shutdown)"
                 )),
                 None => Err("request: 'cmd' must be a string".into()),
             },
@@ -209,6 +240,7 @@ impl Request {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -290,6 +322,46 @@ mod tests {
         // unknown and non-string cmds are rejected
         assert!(Request::parse(r#"{"cmd": "reboot"}"#).unwrap_err().contains("unknown cmd"));
         assert!(Request::parse(r#"{"cmd": 3}"#).unwrap_err().contains("must be a string"));
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_rejects_bad_values() {
+        let r = parse_predict(
+            r#"{"device": "k40c", "kernel": "fd5", "case": "a", "deadline_ms": 250}"#,
+        );
+        assert_eq!(r.deadline_ms, Some(250.0));
+        let r = parse_predict(r#"{"device": "k40c", "kernel": "fd5"}"#);
+        assert!(r.deadline_ms.is_none());
+        // zero is legal: "answer only if executed immediately"
+        let r = parse_predict(
+            r#"{"device": "k40c", "kernel": "fd5", "deadline_ms": 0}"#,
+        );
+        assert_eq!(r.deadline_ms, Some(0.0));
+        for bad in [
+            r#"{"device": "k40c", "kernel": "fd5", "deadline_ms": -1}"#,
+            r#"{"device": "k40c", "kernel": "fd5", "deadline_ms": "soon"}"#,
+        ] {
+            assert!(Request::parse(bad).unwrap_err().contains("deadline_ms"));
+        }
+        // matrix requests take the same budget
+        match Request::parse(r#"{"cmd": "matrix", "kernel": "fd5", "deadline_ms": 9.5}"#)
+            .unwrap()
+        {
+            Request::Matrix(m) => assert_eq!(m.deadline_ms, Some(9.5)),
+            other => panic!("expected matrix, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_and_stats_cmds_parse() {
+        match Request::parse(r#"{"cmd": "health", "id": 12}"#).unwrap() {
+            Request::Health { id } => assert_eq!(id, Some(Json::Num(12.0))),
+            other => panic!("expected health, got {other:?}"),
+        }
+        match Request::parse(r#"{"cmd": "stats"}"#).unwrap() {
+            Request::Stats { id } => assert!(id.is_none()),
+            other => panic!("expected stats, got {other:?}"),
+        }
     }
 
     #[test]

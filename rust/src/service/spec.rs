@@ -212,7 +212,11 @@ fn expr_of(j: &Json) -> Result<Expr, String> {
         _ => return Err(format!("bad expression {j}")),
     }
     let (key, v) = match j {
-        Json::Obj(m) => m.iter().next().map(|(k, v)| (k.as_str(), v)).unwrap(),
+        Json::Obj(m) => match m.iter().next() {
+            Some((k, v)) => (k.as_str(), v),
+            // m.len() == 1 was checked above
+            None => return Err(format!("bad expression {j}")),
+        },
         _ => unreachable!(),
     };
     let bin = |op: BinOp, v: &Json| -> Result<Expr, String> {
@@ -401,6 +405,7 @@ pub fn kernel_from_json(j: &Json) -> Result<Kernel, String> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::qpoly::env;

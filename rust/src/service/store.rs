@@ -123,6 +123,24 @@ impl ModelStore {
         self.models.len()
     }
 
+    /// Digest of the whole store — format, schema fingerprint and every
+    /// model's device + profile/suite fingerprints — surfaced by the
+    /// `{"cmd": "health"}` response so operators can tell *which*
+    /// artifact a server answers from (and see a hot reload land).
+    pub fn fingerprint(&self) -> String {
+        let mut h = Fnv64::new();
+        h.write_str(FORMAT);
+        h.write_str(&self.schema_fp);
+        h.write_u64(self.models.len() as u64);
+        for sm in &self.models {
+            h.write_str(sm.device());
+            h.write_str(&sm.profile_fp);
+            h.write_str(&sm.suite_fp);
+            h.write_f64(sm.launch_overhead_s);
+        }
+        h.hex()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }
@@ -328,6 +346,7 @@ impl ModelStore {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::gpusim::registry::builtins;
@@ -425,6 +444,31 @@ mod tests {
         let mut capped = p;
         capped.max_group_size = 256;
         assert_ne!(base_s, suite_fingerprint(&capped));
+    }
+
+    #[test]
+    fn store_fingerprint_tracks_content() {
+        let schema = Schema::full();
+        let profile = builtins().get("k40c").unwrap();
+        let mut store = ModelStore::new(&schema, ExtractOpts::default());
+        store.insert(StoredModel::new(toy_model("k40c", &schema), 8e-6, 400, profile));
+        let base = store.fingerprint();
+        // deterministic across roundtrips
+        let text = store.to_json(&schema).pretty();
+        let back = ModelStore::from_json(&Json::parse(&text).unwrap(), &schema).unwrap();
+        assert_eq!(base, back.fingerprint());
+        // any content change moves it
+        let mut more = store.clone();
+        more.insert(StoredModel::new(
+            toy_model("titan_x", &schema),
+            7e-6,
+            400,
+            builtins().get("titan_x").unwrap(),
+        ));
+        assert_ne!(base, more.fingerprint());
+        let mut retimed = store;
+        retimed.models[0].launch_overhead_s = 9e-6;
+        assert_ne!(base, retimed.fingerprint());
     }
 
     #[test]

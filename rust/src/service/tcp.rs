@@ -71,6 +71,16 @@ pub fn serve_threaded(
             // the accept was the shutdown wake-up call
             break;
         }
+        // chaos: the conn.abort fault site drops an accepted connection
+        // before a single byte is served — clients observe a reset and
+        // must retry, the request accounting is untouched
+        if let Some(plan) = svc.fault_plan() {
+            if plan.should_inject("conn.abort") {
+                svc.note_conn_aborted();
+                drop(stream);
+                continue;
+            }
+        }
         // hot reload between connections (batch loops poll it too)
         if let Some(Err(e)) = svc.poll_reload() {
             eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}");
@@ -78,13 +88,19 @@ pub fn serve_threaded(
         // connection-count guard: shed load loudly instead of
         // spawning unbounded threads
         if active.load(Ordering::SeqCst) >= max_connections {
+            svc.note_shed();
             let mut s = stream;
-            let resp = Json::obj(vec![(
-                "error",
-                Json::Str(format!(
-                    "server at capacity ({max_connections} concurrent connections)"
-                )),
-            )]);
+            let resp = Json::obj(vec![
+                (
+                    "error",
+                    Json::Str(format!(
+                        "overloaded: server at capacity ({max_connections} concurrent \
+                         connections)"
+                    )),
+                ),
+                ("reason", Json::Str("overloaded".into())),
+                ("retry_after_ms", Json::Num(super::RETRY_AFTER_MS as f64)),
+            ]);
             let _ = writeln!(s, "{}", resp.compact());
             continue;
         }
@@ -114,10 +130,24 @@ pub fn serve_threaded(
 /// wait on the client's goodwill.
 const READ_POLL: std::time::Duration = std::time::Duration::from_millis(250);
 
+/// How long the `conn.slow` fault site stalls a freshly accepted
+/// connection. Short enough to keep chaos tests fast, long enough to
+/// overlap other connections' traffic.
+const SLOW_CONN_DELAY: std::time::Duration = std::time::Duration::from_millis(25);
+
 /// One connection: the conversational loop, then (if this connection
 /// carried the shutdown command) a wake connection so the blocked
 /// accept call observes the drain flag.
 fn serve_one(svc: &Arc<Service>, stream: TcpStream, addr: std::net::SocketAddr) {
+    // chaos: the conn.slow fault site stalls this connection before its
+    // first read — the client's requests still all get answered, just
+    // late (deadline budgets and the drain logic must both survive it)
+    if let Some(plan) = svc.fault_plan() {
+        if plan.should_inject("conn.slow") {
+            svc.note_conn_slowed();
+            std::thread::sleep(SLOW_CONN_DELAY);
+        }
+    }
     // a timeout-shaped read error makes the serving loop re-check the
     // shutdown flag (see `read_request_line`) instead of blocking
     // forever on an idle socket
@@ -144,6 +174,7 @@ fn serve_one(svc: &Arc<Service>, stream: TcpStream, addr: std::net::SocketAddr) 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::gpusim::registry::builtins;

@@ -1,0 +1,335 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] names *sites* — fixed string keys compiled into the
+//! code at the places where things can go wrong — and gives each a
+//! probability. Production code asks [`FaultPlan::should_inject`] at a
+//! site; with no plan installed the call never happens (the plan is
+//! threaded as `Option<Arc<FaultPlan>>` and checked with `if let`), so
+//! the no-fault configuration is byte-identical to a build without the
+//! feature.
+//!
+//! Decisions are **counter-based, not clock-based**: the n-th query of a
+//! site under seed `s` always returns the same answer, independent of
+//! wall clock, thread timing or process layout. That makes chaos runs
+//! reproducible — re-running the same plan against the same request
+//! stream injects the same faults — which is what lets
+//! `rust/tests/chaos.rs` pin exact accounting instead of "roughly no
+//! crashes".
+//!
+//! Sites currently compiled in:
+//!
+//! | site              | where                         | effect                              |
+//! |-------------------|-------------------------------|-------------------------------------|
+//! | `measure.fail`    | `gpusim::timing` via `SimGpu` | timing run returns `Err`            |
+//! | `measure.outlier` | `gpusim::timing` via `SimGpu` | one sample made spuriously fast     |
+//! | `solver.make`     | `engine` solver construction  | solver construction returns `Err`   |
+//! | `reload.io`       | `engine::Reloader`            | artifact re-read fails after change |
+//! | `conn.abort`      | `service::tcp` accept loop    | accepted connection dropped unread  |
+//! | `conn.slow`       | `service::tcp` per-connection | connection handling delayed ~25 ms  |
+//!
+//! Unknown site names in a plan are allowed (they simply never fire from
+//! code that doesn't query them); querying a site absent from the plan
+//! never injects. Per-site `attempts`/`injected` counters are exported
+//! on the service health surface via [`FaultPlan::counters_json`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+
+/// One named fault site: an injection rate plus live counters.
+#[derive(Debug)]
+struct Site {
+    rate: f64,
+    /// Injection ceiling: once `injected` reaches `max`, the site goes
+    /// quiet (attempts still count). `u64::MAX` = unlimited.
+    max: u64,
+    attempts: AtomicU64,
+    injected: AtomicU64,
+    draws: AtomicU64,
+}
+
+/// A seeded, counter-based fault plan. See the module docs.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: BTreeMap<String, Site>,
+}
+
+/// Uniform-in-[0,1) decision value for attempt `k` of `site` under
+/// `seed`. FNV-mix of the site name keeps distinct sites on distinct
+/// streams; splitmix64 whitens the counter so consecutive attempts are
+/// independent.
+fn decision(seed: u64, site: &str, k: u64, salt: u64) -> u64 {
+    let mut h = seed ^ salt;
+    for b in site.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    let mut s = h ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+const INJECT_SALT: u64 = 0xA076_1D64_78BD_642F;
+const DRAW_SALT: u64 = 0x2545_F491_4F6C_DD1D;
+
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl FaultPlan {
+    /// Empty plan (no sites — never injects) under `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, sites: BTreeMap::new() }
+    }
+
+    /// Builder: add `name` with injection probability `rate` (clamped to
+    /// [0,1]) and no injection ceiling.
+    pub fn site(self, name: &str, rate: f64) -> FaultPlan {
+        self.site_max(name, rate, u64::MAX)
+    }
+
+    /// Builder: add `name` with probability `rate` and at most `max`
+    /// total injections.
+    pub fn site_max(mut self, name: &str, rate: f64, max: u64) -> FaultPlan {
+        self.sites.insert(
+            name.to_string(),
+            Site {
+                rate: rate.clamp(0.0, 1.0),
+                max,
+                attempts: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+                draws: AtomicU64::new(0),
+            },
+        );
+        self
+    }
+
+    /// Parse `{"seed": n, "sites": {"name": {"rate": r, "max"?: m}, …}}`.
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let seed = match j.get("seed") {
+            None => 0,
+            Some(v) => v
+                .as_i64()
+                .ok_or("fault plan: 'seed' must be an integer")?
+                as u64,
+        };
+        let mut plan = FaultPlan::new(seed);
+        let sites = match j.get("sites") {
+            None => return Ok(plan),
+            Some(Json::Obj(m)) => m,
+            Some(_) => return Err("fault plan: 'sites' must be an object".into()),
+        };
+        for (name, sj) in sites {
+            let rate = sj
+                .get_f64("rate")
+                .ok_or_else(|| format!("fault plan: site '{name}' needs a numeric 'rate'"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!(
+                    "fault plan: site '{name}' rate {rate} outside [0, 1]"
+                ));
+            }
+            let max = match sj.get("max") {
+                None => u64::MAX,
+                Some(v) => v
+                    .as_i64()
+                    .filter(|m| *m >= 0)
+                    .ok_or_else(|| {
+                        format!("fault plan: site '{name}' 'max' must be a non-negative integer")
+                    })? as u64,
+            };
+            plan = plan.site_max(name, rate, max);
+        }
+        Ok(plan)
+    }
+
+    /// Load a plan from a JSON file (the `--faults <plan.json>` flag).
+    pub fn load(path: &Path) -> Result<FaultPlan, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("fault plan {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| format!("fault plan {}: {e}", path.display()))?;
+        FaultPlan::from_json(&j)
+    }
+
+    /// The plan's seed (exported so health output identifies the plan).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Should the next occurrence at `site` fail? Advances the site's
+    /// attempt counter; deterministic in (seed, site, attempt index).
+    /// Unknown sites never inject (and count nothing).
+    pub fn should_inject(&self, site: &str) -> bool {
+        let Some(s) = self.sites.get(site) else {
+            return false;
+        };
+        let k = s.attempts.fetch_add(1, Ordering::Relaxed);
+        if unit(decision(self.seed, site, k, INJECT_SALT)) >= s.rate {
+            return false;
+        }
+        // Reserve an injection slot; back out if the ceiling is reached
+        // so `injected` never exceeds `max` even under concurrency.
+        let prev = s.injected.fetch_add(1, Ordering::Relaxed);
+        if prev >= s.max {
+            s.injected.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Deterministic auxiliary value for `site` (e.g. which sample of a
+    /// timing run to corrupt). Advances its own counter so interleaving
+    /// draws with injection decisions doesn't perturb either stream.
+    pub fn draw(&self, site: &str) -> u64 {
+        let Some(s) = self.sites.get(site) else {
+            return 0;
+        };
+        let k = s.draws.fetch_add(1, Ordering::Relaxed);
+        decision(self.seed, site, k, DRAW_SALT)
+    }
+
+    /// Times `site` has been queried (0 for unknown sites).
+    pub fn attempts(&self, site: &str) -> u64 {
+        self.sites
+            .get(site)
+            .map(|s| s.attempts.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Times `site` actually injected (0 for unknown sites).
+    pub fn injected(&self, site: &str) -> u64 {
+        self.sites
+            .get(site)
+            .map(|s| s.injected.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Per-site counters for the health surface:
+    /// `{"site": {"rate": r, "attempts": n, "injected": m}, …}`.
+    pub fn counters_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        for (name, s) in &self.sites {
+            m.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("rate", Json::Num(s.rate)),
+                    ("attempts", Json::Num(s.attempts.load(Ordering::Relaxed) as f64)),
+                    ("injected", Json::Num(s.injected.load(Ordering::Relaxed) as f64)),
+                ]),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_and_counter() {
+        let a = FaultPlan::new(42).site("x", 0.5);
+        let b = FaultPlan::new(42).site("x", 0.5);
+        let sa: Vec<bool> = (0..256).map(|_| a.should_inject("x")).collect();
+        let sb: Vec<bool> = (0..256).map(|_| b.should_inject("x")).collect();
+        assert_eq!(sa, sb);
+        let hits = sa.iter().filter(|x| **x).count();
+        assert!(hits > 64 && hits < 192, "rate 0.5 gave {hits}/256");
+    }
+
+    #[test]
+    fn different_seeds_and_sites_get_different_streams() {
+        let a = FaultPlan::new(1).site("x", 0.5).site("y", 0.5);
+        let b = FaultPlan::new(2).site("x", 0.5);
+        let ax: Vec<bool> = (0..128).map(|_| a.should_inject("x")).collect();
+        let ay: Vec<bool> = (0..128).map(|_| a.should_inject("y")).collect();
+        let bx: Vec<bool> = (0..128).map(|_| b.should_inject("x")).collect();
+        assert_ne!(ax, ay);
+        assert_ne!(ax, bx);
+    }
+
+    #[test]
+    fn rate_edges_and_unknown_sites() {
+        let p = FaultPlan::new(7).site("never", 0.0).site("always", 1.0);
+        for _ in 0..64 {
+            assert!(!p.should_inject("never"));
+            assert!(p.should_inject("always"));
+            assert!(!p.should_inject("no-such-site"));
+        }
+        assert_eq!(p.attempts("never"), 64);
+        assert_eq!(p.injected("never"), 0);
+        assert_eq!(p.injected("always"), 64);
+        assert_eq!(p.attempts("no-such-site"), 0);
+    }
+
+    #[test]
+    fn max_caps_injections_but_not_attempts() {
+        let p = FaultPlan::new(3).site_max("x", 1.0, 2);
+        let hits = (0..10).filter(|_| p.should_inject("x")).count();
+        assert_eq!(hits, 2);
+        assert_eq!(p.attempts("x"), 10);
+        assert_eq!(p.injected("x"), 2);
+    }
+
+    #[test]
+    fn draws_do_not_perturb_decisions() {
+        let a = FaultPlan::new(11).site("x", 0.5);
+        let b = FaultPlan::new(11).site("x", 0.5);
+        let sa: Vec<bool> = (0..64)
+            .map(|_| {
+                let _ = a.draw("x");
+                a.should_inject("x")
+            })
+            .collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.should_inject("x")).collect();
+        assert_eq!(sa, sb);
+        // draws themselves are a deterministic stream
+        let c = FaultPlan::new(11).site("x", 0.5);
+        let d = FaultPlan::new(11).site("x", 0.5);
+        let da: Vec<u64> = (0..32).map(|_| c.draw("x")).collect();
+        let db: Vec<u64> = (0..32).map(|_| d.draw("x")).collect();
+        assert_eq!(da, db);
+        assert!(da.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let j = Json::parse(
+            r#"{"seed": 9, "sites": {"measure.fail": {"rate": 0.25},
+                 "reload.io": {"rate": 1.0, "max": 2}}}"#,
+        )
+        .unwrap();
+        let p = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(p.seed(), 9);
+        let hits = (0..8).filter(|_| p.should_inject("reload.io")).count();
+        assert_eq!(hits, 2);
+        // same seed via the builder gives the same stream
+        let q = FaultPlan::new(9).site("measure.fail", 0.25);
+        let sp: Vec<bool> = (0..128).map(|_| p.should_inject("measure.fail")).collect();
+        let sq: Vec<bool> = (0..128).map(|_| q.should_inject("measure.fail")).collect();
+        assert_eq!(sp, sq);
+
+        for bad in [
+            r#"{"seed": "x"}"#,
+            r#"{"sites": []}"#,
+            r#"{"sites": {"a": {}}}"#,
+            r#"{"sites": {"a": {"rate": 1.5}}}"#,
+            r#"{"sites": {"a": {"rate": 0.5, "max": -1}}}"#,
+        ] {
+            assert!(FaultPlan::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn counters_json_reports_every_site() {
+        let p = FaultPlan::new(5).site("a", 1.0).site("b", 0.0);
+        let _ = p.should_inject("a");
+        let j = p.counters_json();
+        assert_eq!(j.get("seed").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.get("a").and_then(|s| s.get_f64("injected")), Some(1.0));
+        assert_eq!(j.get("b").and_then(|s| s.get_f64("attempts")), Some(0.0));
+    }
+}

@@ -23,6 +23,10 @@
 //!   the compiled evaluation tapes in [`crate::qpoly::tape`].
 //! * [`fnv`] — FNV-1a 64-bit hashing for process-independent digests
 //!   (structural kernel hashes, model-artifact fingerprints).
+//! * [`fault`] — seeded, counter-based fault injection
+//!   ([`fault::FaultPlan`]) behind named sites in `gpusim`, `engine`
+//!   and `service`; the substrate for `rust/tests/chaos.rs`.
+pub mod fault;
 pub mod fnv;
 pub mod intern;
 pub mod rng;

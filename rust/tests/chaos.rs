@@ -1,0 +1,394 @@
+//! Chaos tests: the serving stack under deterministic fault injection.
+//!
+//! A [`FaultPlan`] is seeded and counter-based, so every test here pins
+//! *exact* accounting — "2 connections aborted, 1 reload failed, every
+//! request answered exactly once" — instead of "roughly no crashes".
+//! The fault classes exercised across this file:
+//!
+//! * **measurement** (`measure.fail`, `measure.outlier`) — campaigns
+//!   retry, quarantine and fall back instead of aborting, and two runs
+//!   under the same plan are byte-identical;
+//! * **reload I/O** (`reload.io`) — a hot-reload poll that fails keeps
+//!   the old store serving and surfaces the error on the health page;
+//! * **connection** (`conn.abort`, `conn.slow`) — dropped and delayed
+//!   TCP connections; resilient clients recover, the drain stays
+//!   deterministic, and request accounting is conserved.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use uniperf::coordinator::{run_device, Config, FitBackend};
+use uniperf::engine::Engine;
+use uniperf::gpusim::registry::builtins;
+use uniperf::harness::Protocol;
+use uniperf::perfmodel::Model;
+use uniperf::service::{tcp, ModelStore, Service, ServiceConfig, StoredModel};
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::fault::FaultPlan;
+use uniperf::util::json::Json;
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("uniperf_chaos_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir.join(name)
+}
+
+/// A k40c-only store whose two active weights are scaled by `scale` —
+/// predictions scale exactly with it (power-of-two scales stay
+/// bit-exact), which is what lets the reload assertions be `==`.
+fn toy_store_k40c(scale: f64) -> ModelStore {
+    let schema = Schema::full();
+    let mut weights = vec![0.0; schema.len()];
+    weights[schema.len() - 2] = 2e-9 * scale;
+    weights[schema.len() - 1] = 5e-6 * scale;
+    let model = Model {
+        device: "k40c".into(),
+        weights,
+        active: vec![schema.len() - 2, schema.len() - 1],
+        train_rel_err_geomean: 0.1,
+        solver: "native-cholesky",
+    };
+    let mut store = ModelStore::new(&schema, ExtractOpts::default());
+    store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+    store
+}
+
+/// A TCP client that survives chaos: when the server aborts the
+/// connection before answering (the `conn.abort` site), reconnect and
+/// resend the current line. Aborts always happen before a single byte
+/// is served, so no line is ever answered twice.
+fn resilient_client(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+    let connect = || {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        (stream, reader)
+    };
+    let (mut stream, mut reader) = connect();
+    let mut out = Vec::new();
+    for line in lines {
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            assert!(attempts <= 10, "line never served after 10 attempts: {line}");
+            let sent = writeln!(stream, "{line}").and_then(|_| stream.flush());
+            if sent.is_err() {
+                (stream, reader) = connect();
+                continue;
+            }
+            let mut resp = String::new();
+            match reader.read_line(&mut resp) {
+                Ok(0) | Err(_) => {
+                    // server dropped the connection unanswered; retry
+                    (stream, reader) = connect();
+                }
+                Ok(_) => {
+                    out.push(resp.trim_end().to_string());
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The `--faults` file path: a plan loaded twice from disk replays the
+/// same injection stream as the builder under the same seed, and its
+/// counters surface on `counters_json`.
+#[test]
+fn fault_plans_load_from_files_and_replay_identically() {
+    let path = temp_path("plan.json");
+    std::fs::write(
+        &path,
+        r#"{"seed": 77, "sites": {"measure.fail": {"rate": 0.3},
+             "conn.abort": {"rate": 1.0, "max": 2}}}"#,
+    )
+    .expect("write plan");
+    let a = FaultPlan::load(&path).expect("load plan");
+    let b = FaultPlan::load(&path).expect("load plan again");
+    assert_eq!(a.seed(), 77);
+    let sa: Vec<bool> = (0..256).map(|_| a.should_inject("measure.fail")).collect();
+    let sb: Vec<bool> = (0..256).map(|_| b.should_inject("measure.fail")).collect();
+    assert_eq!(sa, sb, "file-loaded plans must replay identically");
+    let builder = FaultPlan::new(77).site("measure.fail", 0.3);
+    let sc: Vec<bool> = (0..256).map(|_| builder.should_inject("measure.fail")).collect();
+    assert_eq!(sa, sc, "the file path and the builder must share one stream");
+
+    assert_eq!((0..8).filter(|_| a.should_inject("conn.abort")).count(), 2);
+    let j = a.counters_json();
+    assert_eq!(j.get("seed").and_then(Json::as_f64), Some(77.0));
+    assert_eq!(
+        j.get("conn.abort").and_then(|s| s.get_f64("injected")),
+        Some(2.0)
+    );
+}
+
+/// The measurement fault class: a campaign whose launch-overhead
+/// calibration is killed by `measure.fail` falls back to the
+/// zero-overhead default with a warning, the next case to exhaust its
+/// retry budget is quarantined (not fatal), spurious `measure.outlier`
+/// samples are absorbed by MAD rejection — and the whole degraded run
+/// is byte-for-byte reproducible under the same plan.
+#[test]
+fn faulty_campaigns_degrade_gracefully_and_reproduce_exactly() {
+    // workers: 1 pins the fault-counter order; retries: 2 means 3
+    // attempts per timing call, so max: 6 kills exactly calibration
+    // (attempts 1-3) and the first measured case (attempts 4-6)
+    let run = || {
+        let cfg = Config {
+            devices: vec!["k40c".into()],
+            backend: FitBackend::Native,
+            protocol: Protocol { runs: 5, discard: 1, retries: 2, mad_k: 3.5, ..Protocol::default() },
+            workers: 1,
+            faults: Some(Arc::new(
+                FaultPlan::new(42)
+                    .site_max("measure.fail", 1.0, 6)
+                    .site("measure.outlier", 0.05),
+            )),
+            ..Config::default()
+        };
+        run_device("k40c", &Schema::full(), &cfg).expect("faulty campaign must still fit")
+    };
+    let a = run();
+    assert!(
+        a.warnings.iter().any(|w| w.contains("calibration failed")),
+        "zero-overhead fallback must be reported: {:?}",
+        a.warnings
+    );
+    assert_eq!(a.launch_overhead_s, 0.0, "calibration failure falls back to zero");
+    assert_eq!(a.quarantined.len(), 1, "exactly one case exhausts the retry budget");
+    assert!(
+        a.quarantined[0].1.contains("measure.fail"),
+        "quarantine reason names the injected fault: {}",
+        a.quarantined[0].1
+    );
+
+    let b = run();
+    let schema = Schema::full();
+    assert_eq!(
+        a.model.to_json(&schema).pretty(),
+        b.model.to_json(&schema).pretty(),
+        "same plan, same seed -> byte-identical fitted model"
+    );
+    assert_eq!(a.warnings, b.warnings);
+    assert_eq!(a.quarantined, b.quarantined);
+    assert_eq!(a.tests, b.tests, "test-kernel predictions must reproduce exactly");
+}
+
+/// The flagship: a threaded TCP server under a multi-class fault plan
+/// (connection aborts, connection slowdowns, a reload I/O failure)
+/// with degraded-mode prediction on. Pins: no panic, every request
+/// line answered exactly once with well-formed JSON, conserved
+/// accounting (requests/errors/aborts/slowdowns/degraded all exact),
+/// the bad reload kept the old weights serving and surfaced on the
+/// health page, and the drain is deterministic.
+#[test]
+fn threaded_server_survives_multi_class_fault_plan() {
+    let schema = Schema::full();
+    let path = temp_path("chaos_models.json");
+    toy_store_k40c(1.0).save(&path, &schema).expect("save v1");
+
+    let plan = Arc::new(
+        FaultPlan::new(7)
+            .site_max("conn.abort", 1.0, 2)
+            .site_max("conn.slow", 1.0, 2)
+            .site_max("reload.io", 1.0, 1),
+    );
+    let engine = Engine::new(Config {
+        registry: builtins().clone(),
+        workers: 2,
+        degraded: true,
+        faults: Some(plan.clone()),
+        ..Config::default()
+    });
+    engine
+        .install_store(ModelStore::load(&path, &schema).expect("load v1"))
+        .expect("install v1");
+    let mut svc = Service::over(
+        Arc::new(engine),
+        ServiceConfig { workers: 2, ..ServiceConfig::default() },
+    )
+    .expect("service");
+    svc.watch(&path);
+    let svc = Arc::new(svc);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || tcp::serve_threaded(&svc, listener, 8).expect("serve"))
+    };
+
+    // phase 1: one resilient client through the abort gauntlet — its
+    // first two connections die unanswered (conn.abort max 2), the
+    // third is delayed (conn.slow) and then serves everything:
+    // 3 k40c predictions, 1 degraded titan_x prediction, 1 garbage line
+    let lines: Vec<String> = vec![
+        r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 3, "device": "titan_x", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"this is not json"#.into(),
+    ];
+    let responses = resilient_client(addr, &lines);
+    assert_eq!(responses.len(), lines.len(), "every line answered exactly once");
+    let parsed: Vec<Json> = responses
+        .iter()
+        .map(|r| Json::parse(r).unwrap_or_else(|e| panic!("malformed response {r}: {e}")))
+        .collect();
+    let p1 = parsed[0].get_f64("predicted_s").expect("prediction");
+    for (i, j) in parsed.iter().take(3).enumerate() {
+        assert!(j.get("error").is_none(), "{j}");
+        assert_eq!(j.get_f64("id"), Some(i as f64));
+        assert_eq!(j.get_f64("predicted_s"), Some(p1), "deterministic predictions");
+    }
+    assert_eq!(parsed[3].get("degraded"), Some(&Json::Bool(true)), "{}", parsed[3]);
+    assert_eq!(parsed[3].get_str("served_by"), Some("k40c"), "{}", parsed[3]);
+    assert_eq!(parsed[3].get_f64("id"), Some(3.0));
+    assert!(parsed[4].get_str("error").is_some(), "garbage must answer an error");
+    assert_eq!(plan.injected("conn.abort"), 2, "both aborts spent in phase 1");
+
+    // phase 2: rewrite the artifact; the first reload poll hits the
+    // injected I/O failure and the OLD weights keep serving
+    toy_store_k40c(2.0).save(&path, &schema).expect("save v2");
+    let e = svc
+        .poll_reload()
+        .expect("watching")
+        .expect_err("first poll after the rewrite must hit reload.io");
+    assert!(e.contains("reload.io"), "{e}");
+    let r = resilient_client(addr, &[lines[0].clone()]);
+    let j = Json::parse(&r[0]).expect("well-formed");
+    assert_eq!(j.get_f64("predicted_s"), Some(p1), "old store must keep serving: {j}");
+
+    // the health surface reports the suppressed reload error
+    let h = resilient_client(addr, &[r#"{"cmd": "health", "id": "h1"}"#.into()]);
+    let h1 = Json::parse(&h[0]).expect("health JSON");
+    assert_eq!(h1.get_str("ok"), Some("health"));
+    assert_eq!(h1.get_str("id"), Some("h1"));
+    let reloader = h1.get("reloader").expect("reloader section");
+    assert_eq!(reloader.get("watching"), Some(&Json::Bool(true)));
+    assert!(
+        reloader.get_str("last_error").is_some_and(|e| e.contains("reload.io")),
+        "health must surface the suppressed reload failure: {h1}"
+    );
+    let faults = h1.get("faults").expect("fault counters");
+    assert_eq!(
+        faults.get("conn.abort").and_then(|s| s.get_f64("injected")),
+        Some(2.0)
+    );
+    assert_eq!(
+        faults.get("reload.io").and_then(|s| s.get_f64("injected")),
+        Some(1.0)
+    );
+
+    // phase 3: a further rewrite reloads cleanly (reload.io max: 1 is
+    // spent) and the new weights serve — scaled by exactly 4
+    toy_store_k40c(4.0).save(&path, &schema).expect("save v3");
+    assert_eq!(svc.poll_reload(), Some(Ok(true)), "second rewrite must swap in");
+    let r = resilient_client(addr, &[lines[0].clone()]);
+    let j = Json::parse(&r[0]).expect("well-formed");
+    assert_eq!(j.get_f64("predicted_s"), Some(4.0 * p1), "reloaded weights: {j}");
+    let h = resilient_client(addr, &[r#"{"cmd": "health"}"#.into()]);
+    let h2 = Json::parse(&h[0]).expect("health JSON");
+    assert_eq!(
+        h2.get("reloader").and_then(|r| r.get("last_error")),
+        Some(&Json::Null),
+        "a successful swap clears the health error: {h2}"
+    );
+
+    // deterministic drain
+    let bye = resilient_client(addr, &[r#"{"cmd": "shutdown"}"#.into()]);
+    assert_eq!(Json::parse(&bye[0]).expect("bye").get_str("ok"), Some("shutdown"));
+    let summary = server.join().expect("server thread must not panic");
+
+    // conserved accounting: 5 phase-1 lines + 1 old-weights check +
+    // health + 1 new-weights check + health + shutdown = 10 requests,
+    // of which exactly the garbage line errored
+    assert_eq!(summary.requests, 10);
+    assert_eq!(summary.errors, 1);
+    assert_eq!(summary.degraded_served, 1);
+    assert_eq!(summary.conn_aborted, 2);
+    assert_eq!(summary.conn_slowed, 2);
+    assert_eq!(summary.shed, 0);
+    assert_eq!(summary.deadline_expired, 0);
+    // every successful prediction either hit or missed the cache
+    assert_eq!(summary.cache_hits + summary.cache_misses, 6);
+    assert_eq!(summary.cache_evictions, 0);
+}
+
+/// Deadlines and the health/stats surface over real sockets, no faults:
+/// a zero budget always expires with `"reason": "deadline"`, health
+/// reports the store fingerprint and cache counters, stats embeds the
+/// full summary — and the error accounting distinguishes all of them.
+#[test]
+fn deadlines_and_health_are_honored_over_tcp() {
+    let svc = Arc::new(
+        Service::new(
+            toy_store_k40c(1.0),
+            builtins().clone(),
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .expect("service"),
+    );
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let server = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || tcp::serve_threaded(&svc, listener, 8).expect("serve"))
+    };
+
+    let lines: Vec<String> = vec![
+        r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a", "deadline_ms": 0}"#.into(),
+        r#"{"id": 2, "cmd": "health"}"#.into(),
+        r#"{"id": 3, "cmd": "stats"}"#.into(),
+        r#"{"id": 4, "device": "k40c", "kernel": "no_such_kernel"}"#.into(),
+    ];
+    let responses = resilient_client(addr, &lines);
+    assert_eq!(responses.len(), lines.len());
+    let parsed: Vec<Json> = responses
+        .iter()
+        .map(|r| Json::parse(r).unwrap_or_else(|e| panic!("malformed response {r}: {e}")))
+        .collect();
+
+    assert!(parsed[0].get("error").is_none(), "{}", parsed[0]);
+
+    assert_eq!(parsed[1].get_str("reason"), Some("deadline"), "{}", parsed[1]);
+    assert!(
+        parsed[1].get_str("error").is_some_and(|e| e.contains("deadline exceeded")),
+        "{}",
+        parsed[1]
+    );
+    assert_eq!(parsed[1].get_f64("id"), Some(1.0));
+    assert!(parsed[1].get("predicted_s").is_none(), "an expired request must not predict");
+
+    let health = &parsed[2];
+    assert_eq!(health.get_str("ok"), Some("health"));
+    assert_eq!(
+        health.get("store").and_then(|s| s.get_str("fingerprint")),
+        Some(svc.store().fingerprint().as_str()),
+        "{health}"
+    );
+    assert_eq!(
+        health.get("cache").and_then(|c| c.get_f64("misses")),
+        Some(1.0),
+        "one extraction so far: {health}"
+    );
+    assert_eq!(health.get("faults"), Some(&Json::Null), "no plan installed");
+
+    let stats = &parsed[3];
+    assert_eq!(stats.get_str("ok"), Some("stats"));
+    let sum = stats.get("summary").expect("summary");
+    // the stats request counts itself: predict + deadline + health + stats
+    assert_eq!(sum.get_f64("requests"), Some(4.0), "{stats}");
+    assert_eq!(sum.get_f64("deadline_expired"), Some(1.0), "{stats}");
+
+    assert!(parsed[4].get_str("error").is_some_and(|e| e.contains("unknown kernel")));
+
+    let bye = resilient_client(addr, &[r#"{"cmd": "shutdown"}"#.into()]);
+    assert_eq!(Json::parse(&bye[0]).expect("bye").get_str("ok"), Some("shutdown"));
+    let summary = server.join().expect("server thread");
+    assert_eq!(summary.requests, 6);
+    assert_eq!(summary.errors, 2, "the expired deadline and the unknown kernel");
+    assert_eq!(summary.deadline_expired, 1);
+    assert_eq!(summary.conn_aborted, 0);
+}

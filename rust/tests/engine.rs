@@ -249,6 +249,7 @@ fn engine_fit_save_load_predict_is_bit_identical() {
             device: "k40c".into(),
             kref: KernelRef::Named { name: kernel.clone(), case: Some(case.clone()) },
             env: None,
+            deadline_ms: None,
         };
         let mem = engine.predict(&req).expect("predict (memory)");
         let loaded = engine_loaded.predict(&req).expect("predict (loaded)");
