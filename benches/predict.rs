@@ -1,0 +1,158 @@
+//! Batched-vs-scalar prediction throughput bench: fit two devices,
+//! warm the extraction cache over the full evaluation zoo, then push
+//! the same request stream through the scalar `Engine::predict` loop
+//! and the batched SoA path (`Engine::predict_batch`), best of 5 each.
+//! Records both throughputs to `BENCH_predict.json` and hard-fails if
+//! any request errors, if the two passes disagree on a single
+//! prediction bit, or if the batched evaluator does not beat the
+//! scalar loop.
+
+use std::time::Instant;
+use uniperf::coordinator::{fit_models, Config, FitBackend};
+use uniperf::engine::Engine;
+use uniperf::harness::Protocol;
+use uniperf::service::{PredictRequest, Request};
+use uniperf::util::json::Json;
+
+fn main() {
+    let cfg = Config {
+        devices: vec!["k40c".into(), "titan_x".into()],
+        backend: FitBackend::Native,
+        protocol: Protocol { runs: 8, ..Protocol::default() },
+        ..Config::default()
+    };
+    let t_fit = Instant::now();
+    let store = fit_models(&cfg).expect("fit --save flow failed");
+    let fit_s = t_fit.elapsed().as_secs_f64();
+    println!(
+        "fitted {} devices in {fit_s:.1}s (one-time artifact cost)",
+        store.len()
+    );
+    // one resolution worker: the comparison isolates the evaluator, not
+    // the parallel-resolve executor
+    let engine = Engine::new(Config { workers: 1, ..cfg });
+    engine.install_store(store).expect("artifact must validate");
+
+    // request stream: all 9 zoo classes x 4 size cases x both devices
+    let kernels = [
+        "fd5", "mm_skinny", "conv7", "nbody", "reduce_tree", "scan_hs", "st3d7", "bmm8",
+        "gather_s2",
+    ];
+    let mut reqs: Vec<PredictRequest> = Vec::new();
+    for dev in ["k40c", "titan_x"] {
+        for k in kernels {
+            for case in ["a", "b", "c", "d"] {
+                let line = format!(
+                    r#"{{"device": "{dev}", "kernel": "{k}", "case": "{case}"}}"#
+                );
+                match Request::parse(&line).expect("request line") {
+                    Request::Predict(p) => reqs.push(p),
+                    other => panic!("expected a predict request, got {other:?}"),
+                }
+            }
+        }
+    }
+    let n = reqs.len();
+
+    // warm-up: every distinct kernel structure pays its one extraction
+    // here, so both timed passes measure pure resolution + evaluation
+    for r in &reqs {
+        let p = engine.predict(r);
+        assert!(p.is_ok(), "warm-up request errored: {p:?}");
+    }
+    let misses = engine.cache().misses();
+    assert!(
+        (misses as usize) <= kernels.len(),
+        "structural sharing must dedupe cases and devices: {misses} misses for {} classes",
+        kernels.len()
+    );
+
+    const REPS: usize = 5;
+
+    // scalar: one tape walk (and one row allocation) per request
+    let mut scalar_s = f64::INFINITY;
+    let mut scalar: Vec<f64> = Vec::new();
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let out: Vec<_> = reqs.iter().map(|r| engine.predict(r)).collect();
+        scalar_s = scalar_s.min(t0.elapsed().as_secs_f64());
+        scalar = out
+            .into_iter()
+            .map(|p| p.expect("scalar request errored").predicted_s)
+            .collect();
+    }
+
+    // batched: requests sharing a compiled tape program are grouped,
+    // identical bindings collapse to one lane, and each instruction is
+    // walked once across the whole lane block
+    let mut batched_s = f64::INFINITY;
+    let mut batched: Vec<f64> = Vec::new();
+    for _ in 0..REPS {
+        let batch = reqs.clone();
+        let t0 = Instant::now();
+        let out = engine.predict_batch(batch, 1);
+        batched_s = batched_s.min(t0.elapsed().as_secs_f64());
+        batched = out
+            .into_iter()
+            .map(|p| p.expect("batched request errored").predicted_s)
+            .collect();
+    }
+    assert_eq!(
+        engine.cache().misses(),
+        misses,
+        "timed passes must stay warm (no re-extraction)"
+    );
+
+    // the batched path is a pure throughput change: bit-identical
+    assert_eq!(scalar.len(), batched.len());
+    for (i, (a, b)) in scalar.iter().zip(&batched).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "request {i}: scalar {a} vs batched {b} predictions diverged"
+        );
+    }
+
+    let scalar_rps = n as f64 / scalar_s;
+    let batched_rps = n as f64 / batched_s;
+    println!(
+        "scalar:  {n} requests in {:.3} ms ({scalar_rps:.0} req/s)",
+        scalar_s * 1e3
+    );
+    println!(
+        "batched: {n} requests in {:.3} ms ({batched_rps:.0} req/s, {:.2}x scalar)",
+        batched_s * 1e3,
+        batched_rps / scalar_rps
+    );
+    assert!(
+        batched_rps > scalar_rps,
+        "batched SoA evaluation ({batched_rps:.0} req/s) must beat the scalar loop \
+         ({scalar_rps:.0} req/s)"
+    );
+
+    let j = Json::obj(vec![
+        ("suite", Json::Str("predict".into())),
+        ("fit_s", Json::Num(fit_s)),
+        ("requests_per_pass", Json::Num(n as f64)),
+        ("reps", Json::Num(REPS as f64)),
+        (
+            "scalar",
+            Json::obj(vec![
+                ("seconds", Json::Num(scalar_s)),
+                ("rps", Json::Num(scalar_rps)),
+            ]),
+        ),
+        (
+            "batched",
+            Json::obj(vec![
+                ("seconds", Json::Num(batched_s)),
+                ("rps", Json::Num(batched_rps)),
+            ]),
+        ),
+        ("batched_over_scalar", Json::Num(batched_rps / scalar_rps)),
+        ("extractions", Json::Num(misses as f64)),
+        ("identical_predictions", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_predict.json", j.pretty()).expect("write BENCH_predict.json");
+    println!("wrote BENCH_predict.json");
+}

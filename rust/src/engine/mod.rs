@@ -15,7 +15,9 @@
 //!   resolves against;
 //! * the **props cache** ([`crate::service::SharedPropsCache`]) — one
 //!   eviction-bounded, sharded symbolic-extraction cache shared by
-//!   every prediction path;
+//!   every prediction path, optionally layered over a persistent
+//!   append-only extraction log ([`Config::props_cache`]) so a
+//!   restarted process warm-starts on its predecessor's corpus;
 //! * **suite construction** — capability-derived evaluation suites,
 //!   built lazily once per device and shared;
 //! * the **solver factory** ([`make_solver`]) — backend selection for
@@ -46,7 +48,7 @@ use crate::perfmodel::{NativeSolver, Solver};
 use crate::service::hash::structural_hash;
 use crate::service::request::{KernelRef, MatrixRequest, PredictRequest};
 use crate::service::{ModelStore, SharedPropsCache};
-use crate::stats::{ExtractOpts, Schema};
+use crate::stats::{BatchArena, ExtractOpts, KernelProps, Schema};
 use crate::util::executor::{default_workers, par_map};
 use crate::util::fault::FaultPlan;
 use crate::util::intern::Env;
@@ -110,6 +112,13 @@ pub struct Config {
     /// store *does* hold, flagging the response `degraded` (off by
     /// default — a missing model is then an error, as before)
     pub degraded: bool,
+    /// persistent extraction-cache file
+    /// ([`crate::service::diskcache::PropsCacheFile`]): extractions are
+    /// appended as they happen and preloaded at startup, so a restarted
+    /// process warm-starts on its predecessor's corpus. An incompatible
+    /// file (format/schema/options mismatch) is refused with a warning
+    /// and the engine runs cold — never trusted
+    pub props_cache: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -130,6 +139,7 @@ impl Default for Config {
             eval_zoo: false,
             faults: None,
             degraded: false,
+            props_cache: None,
         }
     }
 }
@@ -167,6 +177,29 @@ pub struct Prediction {
     pub degraded: bool,
     /// the store device that actually answered, when `degraded`
     pub served_by: Option<String>,
+}
+
+/// A request resolved up to — but not including — tape evaluation:
+/// device and kernel looked up, launch validated, symbolic extraction
+/// served from cache/disk/fresh. Holding the props `Arc`, the binding
+/// and the store snapshot, it can be finished on the scalar path or
+/// grouped with siblings for one batched SoA evaluation
+/// (`Engine::finish_batched`).
+struct Resolved {
+    id: Option<Json>,
+    device: String,
+    kernel: String,
+    case: Option<String>,
+    env: Env,
+    props: Arc<KernelProps>,
+    cache_hit: bool,
+    extract_s: Option<f64>,
+    /// the degraded-mode fallback device, when one answered
+    served_by: Option<String>,
+    /// the store device whose weights answer (requested or fallback)
+    weights_device: String,
+    /// the store snapshot the whole request is served from
+    store: Arc<ModelStore>,
 }
 
 /// One device×kernel matrix prediction ([`Engine::predict_matrix`]):
@@ -231,10 +264,31 @@ impl Engine {
     /// `cache_capacity` entries (see
     /// [`SharedPropsCache::with_capacity`]).
     pub fn with_cache_capacity(cfg: Config, cache_capacity: usize) -> Engine {
+        let schema = Schema::full();
+        let mut cache = SharedPropsCache::with_capacity(cache_capacity);
+        if let Some(path) = &cfg.props_cache {
+            // construction stays infallible: a refused or unreadable
+            // file costs the warm start, never the engine
+            match crate::service::diskcache::PropsCacheFile::open(path, &schema, cfg.extract) {
+                Ok(f) => {
+                    if f.loaded() > 0 {
+                        eprintln!(
+                            "uniperf: props cache {}: preloaded {} extractions",
+                            path.display(),
+                            f.loaded()
+                        );
+                    }
+                    cache.attach_persist(Arc::new(f));
+                }
+                Err(e) => {
+                    eprintln!("uniperf: props cache disabled (starting cold): {e}")
+                }
+            }
+        }
         Engine {
             cfg,
-            schema: Schema::full(),
-            cache: SharedPropsCache::with_capacity(cache_capacity),
+            schema,
+            cache,
             store: RwLock::new(None),
             suites: RwLock::new(BTreeMap::new()),
             robust: RobustState::default(),
@@ -389,6 +443,18 @@ impl Engine {
     /// store: registry lookup, suite resolution, cached symbolic
     /// extraction, tape evaluation, one inner product.
     pub fn predict(&self, req: &PredictRequest) -> Result<Prediction, String> {
+        let r = self.resolve(req)?;
+        let v = r.props.eval(&self.schema, &r.env)?;
+        self.finish(r, &v)
+    }
+
+    /// Everything [`Engine::predict`] does *before* tape evaluation:
+    /// store/device/kernel resolution, launch validation, cached (and
+    /// optionally disk-backed) symbolic extraction. The returned
+    /// [`Resolved`] carries the props `Arc` and the binding, so the
+    /// caller chooses between scalar evaluation ([`Engine::finish`])
+    /// and the batched SoA path ([`Engine::finish_batched`]).
+    fn resolve(&self, req: &PredictRequest) -> Result<Resolved, String> {
         let store = self.store_required()?;
         let profile = self.profile(&req.device)?;
         // degraded-mode resolution: a registry device the store has no
@@ -396,8 +462,8 @@ impl Engine {
         // the store *does* hold (when `Config::degraded` opts in) —
         // flagged, never cached, and validated against the *requested*
         // device's limits below
-        let (sm, served_by) = match store.get(&req.device) {
-            Some(sm) => (sm, None),
+        let (weights_device, served_by) = match store.get(&req.device) {
+            Some(_) => (req.device.clone(), None),
             None if self.cfg.degraded => {
                 let nearest =
                     nearest_capability(&store, &self.cfg.registry, profile).ok_or_else(
@@ -409,10 +475,7 @@ impl Engine {
                             )
                         },
                     )?;
-                let sm = store.get(&nearest).ok_or_else(|| {
-                    format!("degraded fallback '{nearest}' vanished from the store")
-                })?;
-                (sm, Some(nearest))
+                (nearest.clone(), Some(nearest))
             }
             None => {
                 return Err(format!(
@@ -534,29 +597,128 @@ impl Engine {
         }
         let (props, hit) = extracted?;
         let extract_s = (!hit).then(|| t0.elapsed().as_secs_f64());
-        let v = props.eval(&self.schema, &env)?;
-        Ok(Prediction {
+        Ok(Resolved {
             id: req.id.clone(),
             device: req.device.clone(),
             kernel: kname,
             case: case_letter,
-            predicted_s: sm.model.predict(&v),
+            env,
+            props,
             cache_hit: hit,
             extract_s,
-            degraded: served_by.is_some(),
             served_by,
+            weights_device,
+            store,
         })
     }
 
-    /// Predict a batch of parsed requests on the executor, preserving
-    /// input order. The request-line serving loops
+    /// The inner product closing a resolved request: look the weights
+    /// up in the request's store snapshot and fold them against the
+    /// evaluated property vector `v`.
+    fn finish(&self, r: Resolved, v: &[f64]) -> Result<Prediction, String> {
+        let sm = r.store.get(&r.weights_device).ok_or_else(|| {
+            format!("model for device '{}' vanished from the store", r.weights_device)
+        })?;
+        Ok(Prediction {
+            id: r.id,
+            device: r.device,
+            kernel: r.kernel,
+            case: r.case,
+            predicted_s: sm.model.predict(v),
+            cache_hit: r.cache_hit,
+            extract_s: r.extract_s,
+            degraded: r.served_by.is_some(),
+            served_by: r.served_by,
+        })
+    }
+
+    /// Evaluate + finish a set of resolved requests through the batched
+    /// SoA tape path: requests sharing one compiled tape program
+    /// ([`KernelProps::tape_id`]) are grouped, identical bindings
+    /// within a group are deduplicated into one lane, and each tape
+    /// instruction is walked once across all lanes
+    /// ([`KernelProps::eval_batch`]). Batched rows are bit-identical
+    /// to scalar [`KernelProps::eval`] (pinned by the stats and tape
+    /// test suites), so this is a pure throughput change.
+    ///
+    /// A batch evaluation error (an unbound parameter or an i64
+    /// overflow in *any* lane) fails that group's batch as a whole; the
+    /// affected requests then re-run on the scalar path so each gets
+    /// its exact own diagnostic — an overflowing binding always comes
+    /// back as that request's error, never as a wrapped value and never
+    /// as another request's failure.
+    fn finish_batched(
+        &self,
+        resolved: Vec<Result<Resolved, String>>,
+    ) -> Vec<Result<Prediction, String>> {
+        let m = self.schema.len();
+        // group by compiled tape program; dedupe identical bindings
+        // within a group (lane count = distinct envs, not requests)
+        struct Group {
+            props: Arc<KernelProps>,
+            envs: Vec<Env>,
+            /// (resolved index, lane) per member request
+            members: Vec<(usize, usize)>,
+        }
+        let mut groups: BTreeMap<usize, Group> = BTreeMap::new();
+        for (i, r) in resolved.iter().enumerate() {
+            let Ok(r) = r else { continue };
+            let g = groups.entry(r.props.tape_id()).or_insert_with(|| Group {
+                props: Arc::clone(&r.props),
+                envs: Vec::new(),
+                members: Vec::new(),
+            });
+            let lane = match g.envs.iter().position(|e| *e == r.env) {
+                Some(l) => l,
+                None => {
+                    g.envs.push(r.env.clone());
+                    g.envs.len() - 1
+                }
+            };
+            g.members.push((i, lane));
+        }
+        let mut rows: Vec<Option<Vec<f64>>> = (0..resolved.len()).map(|_| None).collect();
+        let mut arena = BatchArena::new();
+        let mut flat: Vec<f64> = Vec::new();
+        for g in groups.into_values() {
+            let env_refs: Vec<&Env> = g.envs.iter().collect();
+            if g.props.eval_batch(&self.schema, &env_refs, &mut arena, &mut flat).is_ok() {
+                for &(i, lane) in &g.members {
+                    rows[i] = Some(flat[lane * m..(lane + 1) * m].to_vec());
+                }
+            }
+            // on Err: leave the rows empty — the members fall back to
+            // the scalar path below for per-request diagnostics
+        }
+        resolved
+            .into_iter()
+            .zip(rows)
+            .map(|(r, row)| {
+                let r = r?;
+                match row {
+                    Some(v) => self.finish(r, &v),
+                    None => {
+                        let v = r.props.eval(&self.schema, &r.env)?;
+                        self.finish(r, &v)
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Predict a batch of parsed requests, preserving input order.
+    /// Resolution (parsing-adjacent lookups and the cached, possibly
+    /// milliseconds-long symbolic extraction) runs in parallel on the
+    /// executor; evaluation then runs batched per shared tape program
+    /// ([`Engine::finish_batched`]). The request-line serving loops
     /// ([`crate::service::Service`]) ride this after parsing.
     pub fn predict_batch(
         &self,
         reqs: Vec<PredictRequest>,
         workers: usize,
     ) -> Vec<Result<Prediction, String>> {
-        par_map(reqs, workers, |r| self.predict(&r))
+        let resolved = par_map(reqs, workers, |r| self.resolve(&r));
+        self.finish_batched(resolved)
     }
 
     /// One device×kernel matrix request: the kernel spec and binding
@@ -582,7 +744,12 @@ impl Engine {
             KernelRef::Named { case, .. } => case.clone(),
             KernelRef::Inline(_) => None,
         };
-        let per_device = devices
+        // resolve serially (deterministic cache accounting: the first
+        // device pays the one extraction, every later device hits),
+        // then evaluate all cells in one batched pass — they share one
+        // tape program and one binding, so the SoA evaluator walks the
+        // kernel's instructions once for the whole row of devices
+        let (names, resolved): (Vec<String>, Vec<Result<Resolved, String>>) = devices
             .into_iter()
             .map(|device| {
                 let preq = PredictRequest {
@@ -592,10 +759,11 @@ impl Engine {
                     env: req.env.clone(),
                     deadline_ms: None,
                 };
-                let outcome = self.predict(&preq);
+                let outcome = self.resolve(&preq);
                 (device, outcome)
             })
-            .collect();
+            .unzip();
+        let per_device = names.into_iter().zip(self.finish_batched(resolved)).collect();
         Ok(MatrixPrediction { id: req.id.clone(), kernel, case, per_device })
     }
 }

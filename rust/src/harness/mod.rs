@@ -8,14 +8,19 @@
 //!   sizes per device for the same reason).
 //! * Property extraction is cached per kernel: the symbolic counts are
 //!   extracted once and re-evaluated per size case (the paper's "cheaply
-//!   reevaluated for changed values of the parameter vector").
+//!   reevaluated for changed values of the parameter vector"). The
+//!   re-evaluation itself is batched: cases sharing one cached
+//!   extraction are evaluated in a single structure-of-arrays pass over
+//!   the compiled tapes ([`KernelProps::eval_batch`]) instead of one
+//!   allocating scalar walk per case — bit-identical rows, one tape
+//!   traversal per kernel per campaign.
 //! * Campaign persistence as JSON.
 
 use crate::gpusim::SimGpu;
 use crate::kernels::KernelCase;
 use crate::lpir::Kernel;
 use crate::perfmodel::PropertyMatrix;
-use crate::stats::{extract, ExtractOpts, KernelProps, Schema};
+use crate::stats::{extract, BatchArena, ExtractOpts, KernelProps, Schema};
 use crate::util::executor::par_map;
 use crate::util::intern::Env;
 use crate::util::json::Json;
@@ -251,6 +256,48 @@ impl PropsCache {
     }
 }
 
+/// Batched property evaluation for a measurement campaign: items
+/// sharing one compiled tape program ([`KernelProps::tape_id`] — i.e.
+/// one [`PropsCache`] entry) are grouped and evaluated in a single
+/// [`KernelProps::eval_batch`] SoA pass. Rows come back per item, in
+/// order, bit-identical to scalar [`KernelProps::eval`]. A group whose
+/// batch fails (an unbound parameter or i64 overflow in *any* of its
+/// bindings fails the whole batch) re-runs each member on the scalar
+/// path, so error attribution stays per case — a robust campaign
+/// quarantines exactly the offending case, not its whole kernel group.
+pub(crate) fn eval_props_batched(
+    items: &[(&KernelProps, &Env)],
+    schema: &Schema,
+) -> Vec<Result<Vec<f64>, String>> {
+    let m = schema.len();
+    let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, (p, _)) in items.iter().enumerate() {
+        groups.entry(p.tape_id()).or_default().push(i);
+    }
+    let mut rows: Vec<Result<Vec<f64>, String>> =
+        (0..items.len()).map(|_| Ok(Vec::new())).collect();
+    let mut arena = BatchArena::new();
+    let mut flat: Vec<f64> = Vec::new();
+    for members in groups.into_values() {
+        let (props, _) = items[members[0]];
+        let envs: Vec<&Env> = members.iter().map(|&i| items[i].1).collect();
+        match props.eval_batch(schema, &envs, &mut arena, &mut flat) {
+            Ok(()) => {
+                for (lane, &i) in members.iter().enumerate() {
+                    rows[i] = Ok(flat[lane * m..(lane + 1) * m].to_vec());
+                }
+            }
+            Err(_) => {
+                for &i in &members {
+                    let (p, env) = items[i];
+                    rows[i] = p.eval(schema, env);
+                }
+            }
+        }
+    }
+    rows
+}
+
 /// Measure a set of cases (timing + dense property evaluation) without
 /// the minimum-size filter, returning one [`Measurement`] per input case
 /// in order. Symbolic extraction runs once per distinct kernel through a
@@ -271,13 +318,17 @@ pub fn measure_cases(
     for case in cases {
         sym.push(cache.props_for(case, opts)?);
     }
+    // batched property evaluation: one SoA tape pass per distinct kernel
+    let items: Vec<(&KernelProps, &Env)> =
+        sym.iter().zip(cases).map(|(p, c)| (p, &c.env)).collect();
+    let rows = eval_props_batched(&items, schema);
 
-    // timing + evaluation in parallel over cases
+    // timing in parallel over cases
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
         let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
         let time_s = protocol.reduce(&times)?;
-        let props = sym[i].eval(schema, &case.env)?;
+        let props = rows[i].as_ref().map_err(Clone::clone)?.clone();
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
     results.into_iter().collect()
@@ -370,12 +421,33 @@ pub fn run_campaign_robust(
     for case in cases {
         sym.push(cache.props_for(case, opts));
     }
+    // batched property evaluation over the extractable cases; the
+    // helper's per-case scalar fallback keeps quarantine attribution
+    // exact when one binding in a kernel group is bad
+    let ok_items: Vec<(usize, (&KernelProps, &Env))> = sym
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.as_ref().ok().map(|p| (i, (p, &cases[i].env))))
+        .collect();
+    let flat_items: Vec<(&KernelProps, &Env)> =
+        ok_items.iter().map(|(_, it)| *it).collect();
+    let evaled = eval_props_batched(&flat_items, schema);
+    let mut rows: Vec<Result<Vec<f64>, String>> = sym
+        .iter()
+        .map(|r| match r {
+            Err(e) => Err(e.clone()),
+            Ok(_) => Ok(Vec::new()),
+        })
+        .collect();
+    for ((i, _), row) in ok_items.into_iter().zip(evaled) {
+        rows[i] = row;
+    }
 
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
         let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
         let time_s = protocol.reduce(&times)?;
-        let props = sym[i].as_ref().map_err(Clone::clone)?.eval(schema, &case.env)?;
+        let props = rows[i].as_ref().map_err(Clone::clone)?.clone();
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
 

@@ -75,6 +75,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "export", help: "devices: write a commented profiles.json template to this path", is_flag: false, default: None },
         OptSpec { name: "faults", help: "chaos: deterministic fault-injection plan (JSON: {\"seed\", \"sites\": {\"<site>\": {\"rate\", \"max\"?}}})", is_flag: false, default: None },
         OptSpec { name: "degraded", help: "serve/predict: answer for devices the artifact lacks from the nearest-capability fitted device (responses flagged \"degraded\")", is_flag: true, default: None },
+        OptSpec { name: "props-cache", help: "serve/predict: persistent extraction-cache file (append-only JSON lines, created if missing; a restarted server preloads it and warm-starts, an incompatible file is ignored with a warning)", is_flag: false, default: None },
     ]
 }
 
@@ -129,6 +130,9 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
     }
     cfg.eval_zoo = args.has_flag("zoo");
     cfg.degraded = args.has_flag("degraded");
+    if let Some(path) = args.get("props-cache") {
+        cfg.props_cache = Some(path.into());
+    }
     if let Some(path) = args.get("faults") {
         let plan = uniperf::util::fault::FaultPlan::load(Path::new(path))?;
         eprintln!("uniperf: fault injection armed (--faults {path}, seed {})", plan.seed());
@@ -174,6 +178,7 @@ fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, Stri
             workers: cfg.workers,
             faults: cfg.faults.clone(),
             degraded: cfg.degraded,
+            props_cache: cfg.props_cache.clone(),
             ..Config::default()
         },
         svc_cfg.cache_capacity,

@@ -24,7 +24,28 @@ use std::fmt;
 
 pub mod tape;
 
+use crate::util::json::Json;
 pub use crate::util::intern::{Env, Sym};
+
+/// Checked accumulation of one affine term: `acc + k*v`, where `v` is the
+/// value bound to `sym`. Shared by the tree-walking evaluators *and* the
+/// compiled tapes so both paths surface the identical diagnostic on
+/// overflow (the batch/scalar equivalence suite pins this).
+#[inline]
+pub(crate) fn checked_term(acc: i64, k: i64, v: i64, sym: Sym) -> Result<i64, String> {
+    k.checked_mul(v)
+        .and_then(|t| acc.checked_add(t))
+        .ok_or_else(|| format!("i64 overflow evaluating affine term {k}*{sym} with {sym} = {v}"))
+}
+
+/// Checked `floor(n / den)`. Covers `den == 0` and `i64::MIN / -1`, which
+/// would otherwise panic in debug builds or wrap in release on hostile
+/// bindings.
+#[inline]
+pub(crate) fn checked_floordiv(n: i64, den: i64) -> Result<i64, String> {
+    n.checked_div_euclid(den)
+        .ok_or_else(|| format!("invalid floor division floor(({n})/{den})"))
+}
 
 /// Affine integer expression: `Σ c_v · v + c0` over named parameters.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
@@ -103,14 +124,17 @@ impl LinExpr {
         self.terms.get(&name.into()).copied().unwrap_or(0)
     }
 
-    /// Evaluate with a parameter binding; errors on unbound parameters.
+    /// Evaluate with a parameter binding; errors on unbound parameters
+    /// and on `i64` overflow. Client-supplied bindings reach this path
+    /// through inline-spec requests, so wraparound must surface as an
+    /// `Err`, never as a silently wrong count.
     pub fn eval(&self, env: &Env) -> Result<i64, String> {
         let mut acc = self.c;
         for (v, k) in &self.terms {
             let val = env
                 .get(*v)
                 .ok_or_else(|| format!("unbound parameter '{v}'"))?;
-            acc += k * val;
+            acc = checked_term(acc, *k, val, *v)?;
         }
         Ok(acc)
     }
@@ -175,7 +199,7 @@ impl Atom {
             }
             Atom::FloorDiv(num, den) => {
                 let n = num.eval(env)?;
-                Ok(n.div_euclid(*den))
+                checked_floordiv(n, *den)
             }
         }
     }
@@ -478,6 +502,163 @@ impl fmt::Display for PwQPoly {
     }
 }
 
+// ---------------------------------------------------------------------------
+// JSON round-trip — used by the persistent extraction cache (service) to
+// serialize `KernelProps` bodies. `i64` values are encoded as decimal
+// strings when they do not fit exactly in an f64 JSON number (|x| >= 2^53);
+// f64 coefficients rely on Rust's shortest-round-trip `Display`.
+
+fn i64_to_json(x: i64) -> Json {
+    if x.unsigned_abs() < (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+fn i64_from_json(j: &Json) -> Result<i64, String> {
+    if let Some(x) = j.as_i64() {
+        return Ok(x);
+    }
+    match j {
+        Json::Str(s) => s.parse::<i64>().map_err(|e| format!("bad i64 '{s}': {e}")),
+        other => Err(format!("expected i64, got {}", other.compact())),
+    }
+}
+
+impl LinExpr {
+    pub fn to_json(&self) -> Json {
+        let terms = self
+            .terms
+            .iter()
+            .map(|(v, k)| Json::Arr(vec![Json::Str(v.to_string()), i64_to_json(*k)]))
+            .collect();
+        Json::obj(vec![("c", i64_to_json(self.c)), ("t", Json::Arr(terms))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LinExpr, String> {
+        let c = i64_from_json(j.get("c").ok_or("LinExpr: missing 'c'")?)?;
+        let Some(Json::Arr(ts)) = j.get("t") else {
+            return Err("LinExpr: missing 't'".into());
+        };
+        let mut terms = BTreeMap::new();
+        for t in ts {
+            let Json::Arr(pair) = t else {
+                return Err("LinExpr: term is not a pair".into());
+            };
+            let [name, k] = pair.as_slice() else {
+                return Err("LinExpr: term is not a pair".into());
+            };
+            let Json::Str(name) = name else {
+                return Err("LinExpr: term name is not a string".into());
+            };
+            terms.insert(Sym::intern(name), i64_from_json(k)?);
+        }
+        Ok(LinExpr { terms, c })
+    }
+}
+
+impl Atom {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Atom::Param(p) => Json::Str(p.to_string()),
+            Atom::FloorDiv(num, den) => {
+                Json::obj(vec![("num", num.to_json()), ("den", i64_to_json(*den))])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Atom, String> {
+        match j {
+            Json::Str(name) => Ok(Atom::Param(Sym::intern(name))),
+            Json::Obj(_) => Ok(Atom::FloorDiv(
+                LinExpr::from_json(j.get("num").ok_or("Atom: missing 'num'")?)?,
+                i64_from_json(j.get("den").ok_or("Atom: missing 'den'")?)?,
+            )),
+            other => Err(format!("Atom: unexpected {}", other.compact())),
+        }
+    }
+}
+
+impl QPoly {
+    pub fn to_json(&self) -> Json {
+        let terms = self
+            .terms
+            .iter()
+            .map(|(m, c)| {
+                let factors = m
+                    .iter()
+                    .map(|(a, e)| Json::Arr(vec![a.to_json(), Json::Num(f64::from(*e))]))
+                    .collect();
+                Json::obj(vec![("c", Json::Num(*c)), ("m", Json::Arr(factors))])
+            })
+            .collect();
+        Json::Arr(terms)
+    }
+
+    pub fn from_json(j: &Json) -> Result<QPoly, String> {
+        let Json::Arr(ts) = j else {
+            return Err("QPoly: expected array".into());
+        };
+        let mut q = QPoly::zero();
+        for t in ts {
+            let c = t.get_f64("c").ok_or("QPoly: term missing 'c'")?;
+            let Some(Json::Arr(ms)) = t.get("m") else {
+                return Err("QPoly: term missing 'm'".into());
+            };
+            let mut m = Monomial::new();
+            for f in ms {
+                let Json::Arr(pair) = f else {
+                    return Err("QPoly: factor is not a pair".into());
+                };
+                let [a, e] = pair.as_slice() else {
+                    return Err("QPoly: factor is not a pair".into());
+                };
+                let e = e
+                    .as_i64()
+                    .filter(|&e| e > 0 && e <= i64::from(u32::MAX))
+                    .ok_or("QPoly: bad exponent")?;
+                *m.entry(Atom::from_json(a)?).or_insert(0) += e as u32;
+            }
+            q.insert_term(m, c);
+        }
+        Ok(q)
+    }
+}
+
+impl PwQPoly {
+    pub fn to_json(&self) -> Json {
+        let pieces = self
+            .pieces
+            .iter()
+            .map(|(guards, q)| {
+                let gs = guards.iter().map(|g| g.0.to_json()).collect();
+                Json::obj(vec![("g", Json::Arr(gs)), ("q", q.to_json())])
+            })
+            .collect();
+        Json::Arr(pieces)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PwQPoly, String> {
+        let Json::Arr(ps) = j else {
+            return Err("PwQPoly: expected array".into());
+        };
+        let mut pieces = Vec::with_capacity(ps.len());
+        for p in ps {
+            let Some(Json::Arr(gs)) = p.get("g") else {
+                return Err("PwQPoly: piece missing 'g'".into());
+            };
+            let mut guards = Vec::with_capacity(gs.len());
+            for g in gs {
+                guards.push(Guard(LinExpr::from_json(g)?));
+            }
+            let q = QPoly::from_json(p.get("q").ok_or("PwQPoly: piece missing 'q'")?)?;
+            pieces.push((guards, q));
+        }
+        Ok(PwQPoly { pieces })
+    }
+}
+
 /// Convenience: parameter environment builder.
 pub fn env(pairs: &[(&str, i64)]) -> Env {
     Env::from_pairs(pairs)
@@ -577,6 +758,50 @@ mod tests {
         let s = a.mul(&b);
         assert_eq!(s.eval(&env(&[("n", 5)])).unwrap(), 15.0);
         assert_eq!(s.pieces[0].0.len(), 1);
+    }
+
+    #[test]
+    fn eval_overflow_is_an_error_not_a_wrap() {
+        let e = LinExpr::scaled_var("n", 3);
+        let err = e.eval(&env(&[("n", i64::MAX / 2)])).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        // accumulator overflow: MAX + MAX
+        let mut e = LinExpr::constant(i64::MAX);
+        e.add_term("n", 1);
+        assert!(e.eval(&env(&[("n", i64::MAX)])).is_err());
+        // floor division by zero is an error, not a panic
+        let fd = Atom::FloorDiv(LinExpr::var("n"), 0);
+        assert!(fd.eval(&env(&[("n", 1)])).is_err());
+        // in-range values still evaluate
+        assert_eq!(LinExpr::scaled_var("n", 3).eval(&env(&[("n", 4)])).unwrap(), 12);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_structure() {
+        let pw = PwQPoly {
+            pieces: vec![
+                (
+                    vec![Guard(LinExpr::var("n").sub(&LinExpr::constant(4)))],
+                    QPoly::param("n").mul(&QPoly::param("m")).add(
+                        &QPoly::from_atom(Atom::FloorDiv(
+                            LinExpr::var("n").add(&LinExpr::constant(15)),
+                            16,
+                        ))
+                        .scale(2.5),
+                    ),
+                ),
+                (Vec::new(), QPoly::constant(7.0)),
+            ],
+        };
+        let wire = pw.to_json().compact();
+        let back = PwQPoly::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, pw);
+        // i64s beyond 2^53 travel as strings, losslessly
+        let mut lin = LinExpr::constant(i64::MIN + 1);
+        lin.add_term("n", i64::MAX);
+        let wire = lin.to_json().compact();
+        let back = LinExpr::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, lin);
     }
 
     #[test]

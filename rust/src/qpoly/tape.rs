@@ -11,14 +11,121 @@
 //! string comparison, no map probing, no per-eval allocation (atom
 //! scratch lives in a thread-local buffer).
 //!
+//! For batched workloads ([`crate::engine`]'s `predict_batch` /
+//! `predict_matrix`, the measurement campaign) the `eval_many` entry
+//! points walk each tape instruction *once* across N environments laid
+//! out as a structure-of-arrays [`EnvFrame`]: per-slot value columns are
+//! contiguous, so the per-term floating-point inner loops run over flat
+//! `f64` columns the compiler can vectorize. Integer affine arithmetic
+//! is checked (overflow is an `Err`, never a wrapped count), and a
+//! batch fails as a whole on the first lane error — callers that need
+//! per-request attribution fall back to the scalar path, which by
+//! construction produces the identical diagnostic.
+//!
 //! Compilation preserves the exact term/atom/guard ordering of the
-//! source object, so tape evaluation is bit-identical to the
-//! tree-walking path (verified by property tests in
-//! `rust/tests/properties.rs`).
+//! source object, so tape evaluation — scalar and batched — is
+//! bit-identical to the tree-walking path (verified by property tests
+//! in `rust/tests/properties.rs`).
 
 use super::{Atom, LinExpr, PwQPoly, QPoly};
 use crate::util::intern::{Env, Sym};
 use std::cell::RefCell;
+
+#[cold]
+fn unbound(slot: u32) -> String {
+    format!("unbound parameter '{}'", Sym::from_id(slot))
+}
+
+/// Structure-of-arrays view of N environments: one contiguous value
+/// column per interned slot, lane `j` holding environment `j`'s binding.
+///
+/// Layout is slot-major — `vals[slot * n_envs + j]` — so a tape term
+/// touching one symbol streams a single contiguous column. Buffers are
+/// reused across `load` calls; the frame grows to the high-water mark
+/// and never shrinks.
+#[derive(Default)]
+pub struct EnvFrame {
+    n_envs: usize,
+    n_slots: usize,
+    vals: Vec<i64>,
+    bound: Vec<bool>,
+}
+
+impl EnvFrame {
+    pub fn new() -> EnvFrame {
+        EnvFrame::default()
+    }
+
+    /// (Re)fill the frame from `envs`. Lane `j` mirrors `envs[j]`.
+    pub fn load(&mut self, envs: &[&Env]) {
+        self.n_envs = envs.len();
+        self.n_slots = envs.iter().map(|e| e.slot_width()).max().unwrap_or(0);
+        let cells = self.n_slots * self.n_envs;
+        self.vals.clear();
+        self.vals.resize(cells, 0);
+        self.bound.clear();
+        self.bound.resize(cells, false);
+        for (j, e) in envs.iter().enumerate() {
+            for (sym, v) in e.iter() {
+                let i = sym.id() as usize * self.n_envs + j;
+                self.vals[i] = v;
+                self.bound[i] = true;
+            }
+        }
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.n_envs
+    }
+
+    /// Value and bound-flag columns for a slot; `None` when the slot is
+    /// beyond every loaded environment (i.e. unbound in all lanes).
+    #[inline]
+    fn col(&self, slot: u32) -> Option<(&[i64], &[bool])> {
+        let s = slot as usize;
+        if s >= self.n_slots {
+            return None;
+        }
+        let lo = s * self.n_envs;
+        let hi = lo + self.n_envs;
+        Some((&self.vals[lo..hi], &self.bound[lo..hi]))
+    }
+
+    /// Lane-scalar access: the value bound to `slot` in environment
+    /// `lane`, if any.
+    #[inline]
+    pub fn get(&self, slot: u32, lane: usize) -> Option<i64> {
+        let (vals, bound) = self.col(slot)?;
+        if bound[lane] {
+            Some(vals[lane])
+        } else {
+            None
+        }
+    }
+}
+
+/// Reusable scratch for batched tape evaluation. One instance serves any
+/// number of `eval_many` calls; buffers grow to the high-water mark and
+/// are never shrunk. Nothing here carries state between calls.
+#[derive(Default)]
+pub struct TapeScratch {
+    /// selected piece index per lane (`u32::MAX` = no guard held)
+    piece: Vec<u32>,
+    /// slot-major atom value columns, `atom_cols[ai * n_envs + lane]`
+    atom_cols: Vec<f64>,
+    /// i64 column for affine sub-evaluations (floor-division numerators)
+    ints: Vec<i64>,
+    /// per-term product column
+    tmp: Vec<f64>,
+    /// atom scratch for the lane-scalar mixed-piece fallback
+    lane_atoms: Vec<f64>,
+}
+
+impl TapeScratch {
+    pub fn new() -> TapeScratch {
+        TapeScratch::default()
+    }
+}
 
 /// Compiled affine expression: `c + Σ coeff · frame[slot]`.
 #[derive(Clone, Debug, Default)]
@@ -36,19 +143,48 @@ impl LinTape {
         }
     }
 
-    /// Evaluate against a slot frame; errors on unbound slots.
+    /// Evaluate against a slot frame; errors on unbound slots and on
+    /// `i64` overflow.
     #[inline]
     pub fn eval(&self, env: &Env) -> Result<i64, String> {
         let mut acc = self.c;
         for &(slot, k) in self.terms.iter() {
             match env.get_id(slot) {
-                Some(v) => acc += k * v,
-                None => {
-                    return Err(format!(
-                        "unbound parameter '{}'",
-                        Sym::from_id(slot)
-                    ))
+                Some(v) => acc = super::checked_term(acc, k, v, Sym::from_id(slot))?,
+                None => return Err(unbound(slot)),
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Batched evaluation: one pass over the tape, all lanes per term.
+    /// Fails the whole batch on the first lane error.
+    pub fn eval_many(&self, frame: &EnvFrame, out: &mut [i64]) -> Result<(), String> {
+        debug_assert_eq!(out.len(), frame.n_envs());
+        out.fill(self.c);
+        for &(slot, k) in self.terms.iter() {
+            let sym = Sym::from_id(slot);
+            let Some((vals, bound)) = frame.col(slot) else {
+                return Err(unbound(slot));
+            };
+            for ((o, &v), &b) in out.iter_mut().zip(vals).zip(bound) {
+                if !b {
+                    return Err(unbound(slot));
                 }
+                *o = super::checked_term(*o, k, v, sym)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Scalar evaluation of a single frame lane (guard checks).
+    #[inline]
+    fn eval_lane(&self, frame: &EnvFrame, lane: usize) -> Result<i64, String> {
+        let mut acc = self.c;
+        for &(slot, k) in self.terms.iter() {
+            match frame.get(slot, lane) {
+                Some(v) => acc = super::checked_term(acc, k, v, Sym::from_id(slot))?,
+                None => return Err(unbound(slot)),
             }
         }
         Ok(acc)
@@ -75,10 +211,18 @@ impl AtomTape {
     #[inline]
     fn eval(&self, env: &Env) -> Result<i64, String> {
         match self {
-            AtomTape::Param(slot) => env.get_id(*slot).ok_or_else(|| {
-                format!("unbound parameter '{}'", Sym::from_id(*slot))
-            }),
-            AtomTape::FloorDiv(lin, den) => Ok(lin.eval(env)?.div_euclid(*den)),
+            AtomTape::Param(slot) => env.get_id(*slot).ok_or_else(|| unbound(*slot)),
+            AtomTape::FloorDiv(lin, den) => super::checked_floordiv(lin.eval(env)?, *den),
+        }
+    }
+
+    #[inline]
+    fn eval_lane(&self, frame: &EnvFrame, lane: usize) -> Result<i64, String> {
+        match self {
+            AtomTape::Param(slot) => frame.get(*slot, lane).ok_or_else(|| unbound(*slot)),
+            AtomTape::FloorDiv(lin, den) => {
+                super::checked_floordiv(lin.eval_lane(frame, lane)?, *den)
+            }
         }
     }
 }
@@ -126,12 +270,12 @@ impl PolyTape {
         }
     }
 
-    /// Evaluate with caller-provided atom scratch (cleared internally).
-    pub fn eval_with(&self, env: &Env, atom_vals: &mut Vec<f64>) -> Result<f64, String> {
-        atom_vals.clear();
-        for a in self.atoms.iter() {
-            atom_vals.push(a.eval(env)? as f64);
-        }
+    /// Sum terms over pre-evaluated atom values. Shared by every entry
+    /// point so the floating-point operation order — and therefore the
+    /// bit pattern of the result — is identical across scalar and
+    /// batched evaluation.
+    #[inline]
+    fn sum_terms(&self, atom_vals: &[f64]) -> f64 {
         let mut acc = 0.0;
         for t in 0..self.term_coeff.len() {
             let mut term = self.term_coeff[t];
@@ -143,7 +287,95 @@ impl PolyTape {
             }
             acc += term;
         }
-        Ok(acc)
+        acc
+    }
+
+    /// Evaluate with caller-provided atom scratch (cleared internally).
+    pub fn eval_with(&self, env: &Env, atom_vals: &mut Vec<f64>) -> Result<f64, String> {
+        atom_vals.clear();
+        for a in self.atoms.iter() {
+            atom_vals.push(a.eval(env)? as f64);
+        }
+        Ok(self.sum_terms(atom_vals))
+    }
+
+    /// Scalar evaluation of a single frame lane.
+    fn eval_lane(
+        &self,
+        frame: &EnvFrame,
+        lane: usize,
+        atom_vals: &mut Vec<f64>,
+    ) -> Result<f64, String> {
+        atom_vals.clear();
+        for a in self.atoms.iter() {
+            atom_vals.push(a.eval_lane(frame, lane)? as f64);
+        }
+        Ok(self.sum_terms(atom_vals))
+    }
+
+    /// Batched evaluation: atoms become contiguous value columns, then
+    /// each term's coefficient/factor multiplies stream over whole
+    /// columns at once. Per-lane operation order matches [`Self::eval_with`]
+    /// exactly, so results are bit-identical lane by lane.
+    pub fn eval_many(
+        &self,
+        frame: &EnvFrame,
+        scratch: &mut TapeScratch,
+        out: &mut [f64],
+    ) -> Result<(), String> {
+        let n = frame.n_envs();
+        debug_assert_eq!(out.len(), n);
+        let na = self.atoms.len();
+        scratch.atom_cols.clear();
+        scratch.atom_cols.resize(na * n, 0.0);
+        scratch.ints.clear();
+        scratch.ints.resize(n, 0);
+        for (ai, a) in self.atoms.iter().enumerate() {
+            let col = &mut scratch.atom_cols[ai * n..(ai + 1) * n];
+            match a {
+                AtomTape::Param(slot) => {
+                    let Some((vals, bound)) = frame.col(*slot) else {
+                        return Err(unbound(*slot));
+                    };
+                    for ((c, &v), &b) in col.iter_mut().zip(vals).zip(bound) {
+                        if !b {
+                            return Err(unbound(*slot));
+                        }
+                        *c = v as f64;
+                    }
+                }
+                AtomTape::FloorDiv(lin, den) => {
+                    lin.eval_many(frame, &mut scratch.ints)?;
+                    for (c, &v) in col.iter_mut().zip(scratch.ints.iter()) {
+                        *c = super::checked_floordiv(v, *den)? as f64;
+                    }
+                }
+            }
+        }
+        out.fill(0.0);
+        scratch.tmp.clear();
+        scratch.tmp.resize(n, 0.0);
+        for t in 0..self.term_coeff.len() {
+            scratch.tmp.fill(self.term_coeff[t]);
+            let lo = self.term_off[t] as usize;
+            let hi = self.term_off[t + 1] as usize;
+            for &(ai, e) in &self.factors[lo..hi] {
+                let col = &scratch.atom_cols[ai as usize * n..(ai as usize + 1) * n];
+                if e == 1 {
+                    for (tv, &v) in scratch.tmp.iter_mut().zip(col) {
+                        *tv *= v;
+                    }
+                } else {
+                    for (tv, &v) in scratch.tmp.iter_mut().zip(col) {
+                        *tv *= v.powi(e as i32);
+                    }
+                }
+            }
+            for (o, &tv) in out.iter_mut().zip(scratch.tmp.iter()) {
+                *o += tv;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -178,10 +410,15 @@ impl PwTape {
     }
 
     /// Allocation-free evaluation (scratch is a thread-local buffer).
+    ///
+    /// Re-entrant evaluation on the same thread — e.g. a callback that
+    /// itself predicts while a prediction is on the stack — finds the
+    /// thread-local busy and degrades to a fresh local buffer instead of
+    /// panicking the worker on a `BorrowMutError`.
     pub fn eval(&self, env: &Env) -> Result<f64, String> {
-        ATOM_SCRATCH.with(|scratch| {
-            let mut buf = scratch.borrow_mut();
-            self.eval_with(env, &mut buf)
+        ATOM_SCRATCH.with(|scratch| match scratch.try_borrow_mut() {
+            Ok(mut buf) => self.eval_with(env, &mut buf),
+            Err(_) => self.eval_with(env, &mut Vec::new()),
         })
     }
 
@@ -197,6 +434,59 @@ impl PwTape {
             return poly.eval_with(env, atom_vals);
         }
         Ok(0.0)
+    }
+
+    /// Batched evaluation over an [`EnvFrame`]: piece selection runs
+    /// per lane (guards are tiny affine tapes), then — in the common
+    /// case where every lane lands on the same piece — the polynomial
+    /// streams over whole columns in one pass. Mixed-piece batches
+    /// degrade to lane-scalar evaluation of each selected piece.
+    ///
+    /// Fails the whole batch on the first lane error (unbound parameter
+    /// or `i64` overflow); callers needing per-lane attribution fall
+    /// back to scalar [`Self::eval`], which produces the identical
+    /// diagnostic.
+    pub fn eval_many(
+        &self,
+        frame: &EnvFrame,
+        scratch: &mut TapeScratch,
+        out: &mut [f64],
+    ) -> Result<(), String> {
+        const NONE: u32 = u32::MAX;
+        let n = frame.n_envs();
+        debug_assert_eq!(out.len(), n);
+        scratch.piece.clear();
+        scratch.piece.resize(n, NONE);
+        for (lane, sel) in scratch.piece.iter_mut().enumerate() {
+            'piece: for (pi, (guards, _)) in self.pieces.iter().enumerate() {
+                for g in guards.iter() {
+                    if g.eval_lane(frame, lane)? < 0 {
+                        continue 'piece;
+                    }
+                }
+                *sel = pi as u32;
+                break;
+            }
+        }
+        if n > 0 {
+            let first = scratch.piece[0];
+            if scratch.piece.iter().all(|&p| p == first) {
+                if first == NONE {
+                    out.fill(0.0);
+                    return Ok(());
+                }
+                return self.pieces[first as usize].1.eval_many(frame, scratch, out);
+            }
+        }
+        for (lane, o) in out.iter_mut().enumerate() {
+            *o = match scratch.piece[lane] {
+                NONE => 0.0,
+                pi => self.pieces[pi as usize]
+                    .1
+                    .eval_lane(frame, lane, &mut scratch.lane_atoms)?,
+            };
+        }
+        Ok(())
     }
 }
 
@@ -262,5 +552,103 @@ mod tests {
             let b = env(&[("n", n)]);
             assert_eq!(t.eval(&b).unwrap(), q.eval(&b).unwrap(), "n={n}");
         }
+    }
+
+    #[test]
+    fn pwtape_eval_survives_reentrant_scratch_borrow() {
+        // Regression: `eval` used `borrow_mut()` on the thread-local
+        // scratch and panicked on any re-entrant evaluation. Holding the
+        // borrow here simulates an evaluation already on the stack.
+        let pw = PwQPoly::from_qpoly(QPoly::param("n").mul(&QPoly::param("n")));
+        let t = PwTape::compile(&pw);
+        let b = env(&[("n", 6)]);
+        ATOM_SCRATCH.with(|s| {
+            let _held = s.borrow_mut();
+            assert_eq!(t.eval(&b).unwrap(), 36.0);
+        });
+    }
+
+    #[test]
+    fn tape_overflow_matches_tree_error() {
+        let e = LinExpr::scaled_var("n", 3);
+        let t = LinTape::compile(&e);
+        let b = env(&[("n", i64::MAX / 2)]);
+        let tree = e.eval(&b).unwrap_err();
+        let tape = t.eval(&b).unwrap_err();
+        assert_eq!(tree, tape);
+        assert!(tree.contains("overflow"), "{tree}");
+    }
+
+    #[test]
+    fn eval_many_matches_scalar_eval_bitwise() {
+        // Mixed piece selection: the guard n-4 >= 0 fails for the first
+        // lanes, which fall through to the unguarded second piece.
+        let pw = PwQPoly {
+            pieces: vec![
+                (
+                    vec![Guard(LinExpr::var("n").sub(&LinExpr::constant(4)))],
+                    QPoly::param("n").mul(&QPoly::param("m")).add(
+                        &QPoly::from_atom(Atom::FloorDiv(
+                            LinExpr::var("n").add(&LinExpr::constant(15)),
+                            16,
+                        ))
+                        .scale(3.0),
+                    ),
+                ),
+                (Vec::new(), QPoly::param("m").scale(0.5)),
+            ],
+        };
+        let t = PwTape::compile(&pw);
+        let envs: Vec<Env> = (0..17).map(|i| env(&[("n", i * 3 - 2), ("m", 100 - i)])).collect();
+        let refs: Vec<&Env> = envs.iter().collect();
+        let mut frame = EnvFrame::new();
+        frame.load(&refs);
+        let mut scratch = TapeScratch::new();
+        let mut out = vec![0.0; refs.len()];
+        t.eval_many(&frame, &mut scratch, &mut out).unwrap();
+        for (j, e) in envs.iter().enumerate() {
+            let want = t.eval(e).unwrap();
+            assert_eq!(out[j].to_bits(), want.to_bits(), "lane {j}: {} != {want}", out[j]);
+        }
+        // Uniform batch takes the single-piece SoA fast path; results
+        // must still match the scalar walk bit for bit.
+        let uni: Vec<Env> = (0..9).map(|i| env(&[("n", 10 + i), ("m", 3 * i)])).collect();
+        let urefs: Vec<&Env> = uni.iter().collect();
+        frame.load(&urefs);
+        let mut uout = vec![0.0; urefs.len()];
+        t.eval_many(&frame, &mut scratch, &mut uout).unwrap();
+        for (j, e) in uni.iter().enumerate() {
+            assert_eq!(uout[j].to_bits(), t.eval(e).unwrap().to_bits(), "lane {j}");
+        }
+    }
+
+    #[test]
+    fn eval_many_fails_whole_batch_on_lane_error() {
+        let pw = PwQPoly::from_qpoly(QPoly::param("n"));
+        let t = PwTape::compile(&pw);
+        let good = env(&[("n", 1)]);
+        let bad = env(&[("m", 1)]); // 'n' unbound
+        let refs = [&good, &bad];
+        let mut frame = EnvFrame::new();
+        frame.load(&refs);
+        let mut scratch = TapeScratch::new();
+        let mut out = [0.0; 2];
+        let err = t.eval_many(&frame, &mut scratch, &mut out).unwrap_err();
+        assert_eq!(err, t.eval(&bad).unwrap_err());
+
+        // Overflow in one lane also fails the batch, with the scalar
+        // path's exact diagnostic (i64 arithmetic lives in the affine
+        // floor-division numerator).
+        let big = PwQPoly::from_qpoly(QPoly::from_atom(Atom::FloorDiv(
+            LinExpr::scaled_var("n", 3),
+            2,
+        )));
+        let tb = PwTape::compile(&big);
+        let huge = env(&[("n", i64::MAX / 2)]);
+        let refs = [&good, &huge];
+        frame.load(&refs);
+        let err = tb.eval_many(&frame, &mut scratch, &mut out).unwrap_err();
+        assert_eq!(err, tb.eval(&huge).unwrap_err());
+        assert!(err.contains("overflow"), "{err}");
     }
 }

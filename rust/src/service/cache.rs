@@ -80,31 +80,43 @@ struct Entry {
 }
 
 /// One capacity-bounded shard: the lookup map plus the clock ring the
-/// eviction hand sweeps (insertion order; evicted keys leave the ring).
+/// eviction hand sweeps (insertion order). Evicted keys become `None`
+/// tombstones — `Vec::remove`'s O(capacity) shift made every eviction a
+/// linear scan under a hostile unique-structure stream — and a periodic
+/// compaction (triggered when dead slots outnumber live ones) rebuilds
+/// the ring in one pass, keeping eviction amortized O(1) while
+/// preserving sweep order and the hand's rotational position.
 #[derive(Default)]
 struct Shard {
     map: BTreeMap<Key, Entry>,
-    ring: Vec<Key>,
+    ring: Vec<Option<Key>>,
     hand: usize,
+    tombstones: usize,
 }
 
 impl Shard {
     /// Second-chance eviction: sweep from the hand, clearing referenced
     /// bits; evict the first unreferenced entry. Terminates within two
-    /// passes (the first pass clears every bit it crosses).
+    /// passes over live slots (the first pass clears every bit it
+    /// crosses); every ring operation is O(1).
     fn evict_one(&mut self) {
+        if self.map.is_empty() {
+            return;
+        }
         loop {
-            if self.ring.is_empty() {
-                return;
-            }
             if self.hand >= self.ring.len() {
                 self.hand = 0;
             }
-            let key = self.ring[self.hand];
+            let Some(key) = self.ring[self.hand] else {
+                self.hand += 1; // skip tombstone
+                continue;
+            };
             let Some(e) = self.map.get_mut(&key) else {
-                // defensive: a ring key without a live entry is dropped
-                // from the ring instead of wedging the sweep
-                self.ring.remove(self.hand);
+                // defensive: a ring key without a live entry becomes a
+                // tombstone instead of wedging the sweep
+                self.ring[self.hand] = None;
+                self.tombstones += 1;
+                self.hand += 1;
                 continue;
             };
             if e.referenced {
@@ -112,11 +124,42 @@ impl Shard {
                 self.hand += 1;
             } else {
                 self.map.remove(&key);
-                // the next candidate slides into the hand position
-                self.ring.remove(self.hand);
+                self.ring[self.hand] = None;
+                self.tombstones += 1;
+                self.hand += 1;
                 return;
             }
         }
+    }
+
+    /// Append a freshly inserted key to the ring, compacting first the
+    /// moment tombstones outnumber live slots (amortized O(1): each
+    /// compaction is one pass that removes at least half the ring, and
+    /// every removed slot paid O(1) when it was tombstoned).
+    fn push_ring(&mut self, key: Key) {
+        self.ring.push(Some(key));
+        if self.tombstones * 2 > self.ring.len() {
+            self.compact();
+        }
+    }
+
+    /// Drop tombstones in one pass, preserving sweep order; the hand
+    /// follows its element (or the next live slot after it) to its new
+    /// position.
+    fn compact(&mut self) {
+        let old = std::mem::take(&mut self.ring);
+        let hand = self.hand;
+        self.ring = Vec::with_capacity(old.len().saturating_sub(self.tombstones));
+        self.hand = 0;
+        for (i, slot) in old.into_iter().enumerate() {
+            if i == hand {
+                self.hand = self.ring.len();
+            }
+            if slot.is_some() {
+                self.ring.push(slot);
+            }
+        }
+        self.tombstones = 0;
     }
 }
 
@@ -127,7 +170,13 @@ fn locked(m: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
-/// A concurrently shared, eviction-bounded symbolic-extraction cache.
+/// A concurrently shared, eviction-bounded symbolic-extraction cache,
+/// optionally layered over a persistent [`super::diskcache::PropsCacheFile`]:
+/// an in-memory miss consults the file's preloaded entries before paying
+/// for extraction (counted as a `disk_hit`, returned as a cache hit),
+/// and every fresh extraction is appended so a restarted or scaled-out
+/// instance starts warm. With a file attached the conservation
+/// invariant generalizes to `misses + disk_hits == len + evictions`.
 pub struct SharedPropsCache {
     shards: Vec<Mutex<Shard>>,
     /// per-shard entry bound (total capacity ≈ `SHARDS ×` this)
@@ -135,6 +184,8 @@ pub struct SharedPropsCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    disk_hits: AtomicU64,
+    persist: Option<Arc<super::diskcache::PropsCacheFile>>,
 }
 
 impl Default for SharedPropsCache {
@@ -159,7 +210,17 @@ impl SharedPropsCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            persist: None,
         }
+    }
+
+    /// Layer a persistent extraction-cache file under this cache. Only
+    /// lookups whose [`ExtractOpts`] match the file's header go through
+    /// the file (the header pins one option set; mismatched lookups
+    /// simply skip the layer).
+    pub fn attach_persist(&mut self, file: Arc<super::diskcache::PropsCacheFile>) {
+        self.persist = Some(file);
     }
 
     /// The total entry bound (`SHARDS ×` the per-shard capacity).
@@ -195,17 +256,35 @@ impl SharedPropsCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok((Arc::clone(&e.props), true));
         }
-        // extract under the shard lock: the first requester pays, every
-        // concurrent duplicate waits and then hits
-        let props = Arc::new(extract(kernel, classify_env, opts)?);
+        // in-memory miss: consult the persistent layer (a restarted
+        // instance warm-starts from its predecessor's extractions),
+        // else extract under the shard lock — the first requester pays,
+        // every concurrent duplicate waits and then hits — and append
+        // the fresh extraction for the next instance
+        let persist = self.persist.as_ref().filter(|f| f.opts() == opts);
+        let (props, from_disk) = match persist.and_then(|f| f.lookup(key.0, key.2)) {
+            Some(p) => (p, true),
+            None => {
+                let p = Arc::new(extract(kernel, classify_env, opts)?);
+                if let Some(f) = persist {
+                    f.append(key.0, key.2, &p);
+                }
+                (p, false)
+            }
+        };
         if shard.map.len() >= self.per_shard_cap {
             shard.evict_one();
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         shard.map.insert(key, Entry { props: Arc::clone(&props), referenced: false });
-        shard.ring.push(key);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        Ok((props, false))
+        shard.push_ring(key);
+        if from_disk {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // a disk hit skipped extraction, so it reports as a hit
+        Ok((props, from_disk))
     }
 
     pub fn hits(&self) -> u64 {
@@ -214,6 +293,12 @@ impl SharedPropsCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// In-memory misses answered from the persistent file (extraction
+    /// skipped). Zero unless a file is attached.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
     }
 
     /// Entries evicted by the second-chance policy so far.
@@ -398,6 +483,60 @@ mod tests {
         assert_eq!(cache.misses(), cache.len() as u64 + cache.evictions());
         assert!(cache.len() <= cache.capacity(), "len {} over bound", cache.len());
         assert!(cache.evictions() > 0, "40 structures through 16 slots must evict");
+    }
+
+    #[test]
+    fn eviction_ring_stays_bounded_under_hostile_churn() {
+        // Regression: eviction used `Vec::remove`, an O(capacity) shift
+        // per evicted entry. The tombstone ring must stay bounded (dead
+        // slots never outnumber live ones for long) while preserving
+        // the eviction accounting exactly.
+        let cache = SharedPropsCache::with_capacity(32); // 2 per shard
+        let e = env(&[("n", 1 << 12)]);
+        let rounds = 400u64;
+        for g in 0..rounds {
+            let k = sized_kernel("churn", "a", 8 + g as i64);
+            let (_, hit) = cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+            assert!(!hit);
+        }
+        for s in &cache.shards {
+            let s = locked(s);
+            assert!(
+                s.ring.len() <= 2 * cache.per_shard_cap + 2,
+                "ring grew to {} slots for {} live entries",
+                s.ring.len(),
+                s.map.len()
+            );
+            assert_eq!(
+                s.ring.iter().filter(|k| k.is_some()).count(),
+                s.map.len(),
+                "live ring slots must mirror the map"
+            );
+        }
+        assert_eq!(cache.misses(), rounds);
+        assert_eq!(cache.misses(), cache.len() as u64 + cache.evictions());
+    }
+
+    #[test]
+    fn capacity_two_and_three_torture_conserves_and_keeps_hot() {
+        // per-shard capacities 2 and 3: the hot entry must survive an
+        // interleaved churn stream and the conservation invariant must
+        // hold exactly at every capacity
+        for cap in [32usize, 48] {
+            let cache = SharedPropsCache::with_capacity(cap);
+            let e = env(&[("n", 1 << 12)]);
+            let hot = sized_kernel("hot", "a", 7);
+            cache.props_for(&hot, &e, ExtractOpts::default(), false).unwrap();
+            for g in 0..200 {
+                let k = sized_kernel("churn", "a", 100 + g);
+                cache.props_for(&k, &e, ExtractOpts::default(), false).unwrap();
+                let (_, hit) = cache.props_for(&hot, &e, ExtractOpts::default(), false).unwrap();
+                assert!(hit, "cap {cap}: hot entry evicted after {g} churn inserts");
+            }
+            assert!(cache.len() <= cache.capacity(), "cap {cap}: len {}", cache.len());
+            assert!(cache.evictions() > 0, "cap {cap}: churn past capacity must evict");
+            assert_eq!(cache.misses(), cache.len() as u64 + cache.evictions(), "cap {cap}");
+        }
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! `diskcache` — a persistent, append-only extraction-cache file.
+//!
+//! Symbolic extraction is the expensive step of serving (milliseconds
+//! per novel kernel structure vs. microseconds on the compiled tape
+//! path), and its result is *pure*: a function of the kernel structure
+//! (the rename-invariant [`super::hash`] key), the extraction options
+//! and the classification-relevant environment bindings (the env
+//! salt). That makes it safe to share across processes: a
+//! [`PropsCacheFile`] records every extraction as one JSON line, and a
+//! restarted (or scaled-out) `serve` instance preloads the file and
+//! answers its in-memory misses from it — zero extractions on a warm
+//! corpus (`rust/tests/service.rs` pins the kill-then-restart path).
+//!
+//! ## File format (`uniperf-propscache-v1`)
+//!
+//! Line-delimited JSON. Line 1 is the header:
+//!
+//! ```json
+//! {"format": "uniperf-propscache-v1", "schema": "<fingerprint>",
+//!  "collapse_utilization": false, "bin_local_strides": false}
+//! ```
+//!
+//! Every later line is one cached extraction:
+//!
+//! ```json
+//! {"hash": "<16-hex structural hash>", "salt": "<16-hex env salt>",
+//!  "props": {"kernel": ..., "props": {...}}}
+//! ```
+//!
+//! ## Trust model: validate, never assume
+//!
+//! A cache file is an *optimization*, not an authority. [`open`]
+//! refuses a file whose format tag, schema fingerprint or extraction
+//! options disagree with this build — the caller warns and starts
+//! cold; a mismatched file is never read from or appended to (its
+//! entries would silently poison predictions across a schema change).
+//! A torn tail — the crash-truncated last line an append-only log can
+//! always have — is tolerated: loading stops at the first unparseable
+//! or incomplete line with one warning, keeping every entry before it.
+//! Appends are single `write(2)` calls of one complete line, so
+//! concurrent writers and crashes can tear at most the final line.
+//!
+//! [`open`]: PropsCacheFile::open
+
+use crate::stats::{ExtractOpts, KernelProps, Schema};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// The cache-file format this build writes and reads.
+pub const FORMAT: &str = "uniperf-propscache-v1";
+
+/// Poison-tolerant lock (same posture as the serving cache: a torn
+/// in-memory map beats a cascading panic in a serving loop).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A loaded + appendable extraction-cache file. See the module docs
+/// for the format and trust model. All methods are `&self`:
+/// [`SharedPropsCache`](super::SharedPropsCache) holds one behind an
+/// `Arc` and consults it from every shard.
+pub struct PropsCacheFile {
+    opts: ExtractOpts,
+    /// preloaded entries, keyed `(structural hash, env salt)`
+    entries: Mutex<BTreeMap<(u64, u64), Arc<KernelProps>>>,
+    /// append handle; one complete line per `write`
+    file: Mutex<std::fs::File>,
+    /// entries preloaded from disk at open (excludes later appends)
+    loaded: usize,
+}
+
+impl PropsCacheFile {
+    /// Open (or create) the cache file at `path` for this build's
+    /// `schema` and `opts`.
+    ///
+    /// A missing or empty file is created with a fresh header. An
+    /// existing file must carry a matching header — format tag, schema
+    /// fingerprint and extraction options — or this returns `Err` and
+    /// the file is left untouched: the caller logs the reason and runs
+    /// cold rather than trusting incompatible entries. Unreadable
+    /// trailing lines (a torn append) stop loading with one warning;
+    /// everything before them is kept.
+    pub fn open(
+        path: &Path,
+        schema: &Schema,
+        opts: ExtractOpts,
+    ) -> Result<PropsCacheFile, String> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(format!("props cache {}: {e}", path.display())),
+        };
+        let header = Json::obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("schema", Json::Str(schema.fingerprint())),
+            ("collapse_utilization", Json::Bool(opts.collapse_utilization)),
+            ("bin_local_strides", Json::Bool(opts.bin_local_strides)),
+        ]);
+        let mut lines = text.lines();
+        let fresh = match lines.next() {
+            None => true,
+            Some(first) => {
+                let j = Json::parse(first).map_err(|e| {
+                    format!("props cache {}: unreadable header: {e}", path.display())
+                })?;
+                super::store::check_format(&j, FORMAT, "props cache")?;
+                match j.get_str("schema") {
+                    Some(fp) if fp == schema.fingerprint() => {}
+                    Some(fp) => {
+                        return Err(format!(
+                            "props cache {}: schema fingerprint {fp} does not match \
+                             this build ({})",
+                            path.display(),
+                            schema.fingerprint()
+                        ))
+                    }
+                    None => {
+                        return Err(format!(
+                            "props cache {}: header missing 'schema'",
+                            path.display()
+                        ))
+                    }
+                }
+                let file_opts = ExtractOpts {
+                    collapse_utilization: j
+                        .get("collapse_utilization")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| {
+                            format!(
+                                "props cache {}: header missing 'collapse_utilization'",
+                                path.display()
+                            )
+                        })?,
+                    bin_local_strides: j
+                        .get("bin_local_strides")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| {
+                            format!(
+                                "props cache {}: header missing 'bin_local_strides'",
+                                path.display()
+                            )
+                        })?,
+                };
+                if file_opts != opts {
+                    return Err(format!(
+                        "props cache {}: extraction options {file_opts:?} do not \
+                         match this configuration ({opts:?})",
+                        path.display()
+                    ));
+                }
+                false
+            }
+        };
+
+        // entries: stop at the first torn/invalid line (append-only
+        // logs can always have a crash-truncated tail), keep the rest
+        let mut entries: BTreeMap<(u64, u64), Arc<KernelProps>> = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_entry(line) {
+                Ok((key, props)) => {
+                    entries.insert(key, Arc::new(props));
+                }
+                Err(e) => {
+                    eprintln!(
+                        "uniperf: props cache {}: line {}: {e}; keeping the {} entries \
+                         before it and ignoring the rest",
+                        path.display(),
+                        i + 2,
+                        entries.len()
+                    );
+                    break;
+                }
+            }
+        }
+        let loaded = entries.len();
+
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("props cache {}: open for append: {e}", path.display()))?;
+        if fresh {
+            file.write_all(format!("{}\n", header.compact()).as_bytes())
+                .map_err(|e| format!("props cache {}: write header: {e}", path.display()))?;
+        }
+        Ok(PropsCacheFile {
+            opts,
+            entries: Mutex::new(entries),
+            file: Mutex::new(file),
+            loaded,
+        })
+    }
+
+    /// The extraction options pinned by this file's header. The
+    /// in-memory cache only routes lookups with *matching* options
+    /// through this file.
+    pub fn opts(&self) -> ExtractOpts {
+        self.opts
+    }
+
+    /// A preloaded (or previously appended) extraction for the given
+    /// structural hash + env salt.
+    pub fn lookup(&self, hash: u64, salt: u64) -> Option<Arc<KernelProps>> {
+        locked(&self.entries).get(&(hash, salt)).map(Arc::clone)
+    }
+
+    /// Record a fresh extraction: one complete JSON line, appended
+    /// under the file lock in a single write. Persistence is
+    /// best-effort — a full disk degrades the *next* process's warm
+    /// start, never this request — but the in-memory copy is always
+    /// kept so repeated appends of the same key stay idempotent.
+    pub fn append(&self, hash: u64, salt: u64, props: &Arc<KernelProps>) {
+        let line = Json::obj(vec![
+            ("hash", Json::Str(format!("{hash:016x}"))),
+            ("salt", Json::Str(format!("{salt:016x}"))),
+            ("props", props.to_json()),
+        ]);
+        {
+            let mut entries = locked(&self.entries);
+            if entries.contains_key(&(hash, salt)) {
+                return;
+            }
+            entries.insert((hash, salt), Arc::clone(props));
+        }
+        let mut f = locked(&self.file);
+        let _ = f.write_all(format!("{}\n", line.compact()).as_bytes());
+    }
+
+    /// Entries currently held (preloaded + appended).
+    pub fn len(&self) -> usize {
+        locked(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        locked(&self.entries).is_empty()
+    }
+
+    /// Entries preloaded from disk when the file was opened — the warm
+    /// start a predecessor process handed this one.
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+}
+
+/// Parse one entry line into its key and properties.
+fn parse_entry(line: &str) -> Result<((u64, u64), KernelProps), String> {
+    let j = Json::parse(line).map_err(|e| format!("unreadable entry: {e}"))?;
+    let hex = |field: &str| -> Result<u64, String> {
+        let s = j
+            .get_str(field)
+            .ok_or_else(|| format!("entry missing '{field}'"))?;
+        u64::from_str_radix(s, 16).map_err(|e| format!("entry '{field}': {e}"))
+    };
+    let hash = hex("hash")?;
+    let salt = hex("salt")?;
+    let props = j
+        .get("props")
+        .ok_or_else(|| "entry missing 'props'".to_string())
+        .and_then(KernelProps::from_json)?;
+    Ok(((hash, salt), props))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+    use crate::stats::extract;
+
+    /// A unique temp path per test (no tempdir dependency; collisions
+    /// avoided via the test name).
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("uniperf_diskcache_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample_props() -> KernelProps {
+        let dev = crate::gpusim::registry::builtins().get("k40c").unwrap();
+        let case = kernels::eval_suite(dev)
+            .into_iter()
+            .find(|c| c.label.starts_with("fd5/a/"))
+            .unwrap();
+        extract(&case.kernel, &case.env, ExtractOpts::default()).unwrap()
+    }
+
+    #[test]
+    fn round_trips_entries_across_open() {
+        let path = tmp("round_trip");
+        let schema = Schema::full();
+        let opts = ExtractOpts::default();
+        let props = Arc::new(sample_props());
+        {
+            let f = PropsCacheFile::open(&path, &schema, opts).unwrap();
+            assert_eq!(f.loaded(), 0, "fresh file preloads nothing");
+            f.append(0xdead_beef, 0x42, &props);
+            f.append(0xdead_beef, 0x42, &props); // idempotent
+            f.append(0xcafe, 0x42, &props);
+            assert_eq!(f.len(), 2);
+        }
+        let f = PropsCacheFile::open(&path, &schema, opts).unwrap();
+        assert_eq!(f.loaded(), 2, "restart preloads both entries");
+        let got = f.lookup(0xdead_beef, 0x42).unwrap();
+        let env = crate::qpoly::env(&[("n", 1 << 20)]);
+        assert_eq!(
+            got.eval(&schema, &env).unwrap(),
+            props.eval(&schema, &env).unwrap(),
+            "reloaded props evaluate identically"
+        );
+        assert!(f.lookup(0xdead_beef, 0x43).is_none(), "salt is part of the key");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn refuses_mismatched_headers() {
+        let path = tmp("mismatch");
+        let schema = Schema::full();
+        let opts = ExtractOpts::default();
+        drop(PropsCacheFile::open(&path, &schema, opts).unwrap());
+        // options mismatch
+        let other = ExtractOpts { collapse_utilization: true, ..opts };
+        let e = PropsCacheFile::open(&path, &schema, other).unwrap_err();
+        assert!(e.contains("extraction options"), "{e}");
+        // schema mismatch: rewrite the header with a bogus fingerprint
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace(&schema.fingerprint(), "0000000000000bad")).unwrap();
+        let e = PropsCacheFile::open(&path, &schema, opts).unwrap_err();
+        assert!(e.contains("schema fingerprint"), "{e}");
+        // format mismatch
+        std::fs::write(&path, "{\"format\": \"uniperf-propscache-v999\"}\n").unwrap();
+        let e = PropsCacheFile::open(&path, &schema, opts).unwrap_err();
+        assert!(e.contains("format"), "{e}");
+        // tagless garbage
+        std::fs::write(&path, "{\"hello\": 1}\n").unwrap();
+        let e = PropsCacheFile::open(&path, &schema, opts).unwrap_err();
+        assert!(e.contains("missing 'format'"), "{e}");
+        // unparseable header
+        std::fs::write(&path, "not json at all\n").unwrap();
+        let e = PropsCacheFile::open(&path, &schema, opts).unwrap_err();
+        assert!(e.contains("unreadable header"), "{e}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tolerates_a_torn_tail() {
+        let path = tmp("torn");
+        let schema = Schema::full();
+        let opts = ExtractOpts::default();
+        let props = Arc::new(sample_props());
+        {
+            let f = PropsCacheFile::open(&path, &schema, opts).unwrap();
+            f.append(1, 0, &props);
+            f.append(2, 0, &props);
+        }
+        // simulate a crash mid-append: truncate the last line
+        let text = std::fs::read_to_string(&path).unwrap();
+        let keep = text.len() - 40;
+        std::fs::write(&path, &text[..keep]).unwrap();
+        let f = PropsCacheFile::open(&path, &schema, opts).unwrap();
+        assert_eq!(f.loaded(), 1, "entries before the torn line survive");
+        assert!(f.lookup(1, 0).is_some());
+        assert!(f.lookup(2, 0).is_none(), "the torn entry is dropped, not trusted");
+        // the file is still appendable after recovery
+        f.append(3, 0, &props);
+        drop(f);
+        let f = PropsCacheFile::open(&path, &schema, opts).unwrap();
+        // note: the torn fragment still sits mid-file, so loading still
+        // stops there — recovery is bounded by the first tear until the
+        // file is rewritten. The entry *before* the tear is what a
+        // restart is guaranteed to keep.
+        assert!(f.lookup(1, 0).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -21,7 +21,12 @@
 //!    sharded, eviction-bounded cache keyed by the *structural* kernel
 //!    hash ([`hash`]), so a warm request never re-runs extraction and
 //!    drops straight onto the compiled [`crate::qpoly::tape::PwTape`]
-//!    fast path (microseconds).
+//!    fast path (microseconds). With `--props-cache FILE` the cache is
+//!    additionally layered over a persistent, append-only extraction
+//!    log ([`diskcache`]): a restarted instance preloads its
+//!    predecessor's extractions and warm-starts with zero misses, and
+//!    an incompatible file (format/schema/options mismatch) is refused
+//!    with a warning rather than trusted.
 //! 4. **Batching** ([`Service::serve`]) — requests drain in
 //!    deterministic batches onto [`crate::util::executor::par_map`];
 //!    responses preserve input order, and per-request latency plus
@@ -62,6 +67,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod cache;
+pub mod diskcache;
 pub mod hash;
 pub mod request;
 pub mod spec;

@@ -29,6 +29,20 @@ use std::path::Path;
 /// The artifact format this build writes and reads.
 pub const FORMAT: &str = "uniperf-models-v1";
 
+/// Version-tag gate shared by every persisted artifact (model store,
+/// extraction cache): a future v2 file fails with a clear format
+/// message instead of a fingerprint riddle, and a tagless blob is
+/// refused outright.
+pub(crate) fn check_format(j: &Json, expected: &str, what: &str) -> Result<(), String> {
+    match j.get_str("format") {
+        Some(f) if f == expected => Ok(()),
+        Some(other) => Err(format!(
+            "unsupported {what} format '{other}' (this build reads '{expected}')"
+        )),
+        None => Err(format!("{what}: missing 'format' (expected '{expected}')")),
+    }
+}
+
 /// Digest of a device profile (exact JSON form, every field).
 pub fn profile_fingerprint(p: &DeviceProfile) -> String {
     let mut h = Fnv64::new();
@@ -258,18 +272,7 @@ impl ModelStore {
     }
 
     pub fn from_json(j: &Json, schema: &Schema) -> Result<ModelStore, String> {
-        // the version tag gates loading, so a future v2 artifact fails
-        // with a clear message instead of a fingerprint riddle
-        match j.get_str("format") {
-            Some(FORMAT) => {}
-            Some(other) => {
-                return Err(format!(
-                    "unsupported model artifact format '{other}' (this build reads \
-                     '{FORMAT}')"
-                ))
-            }
-            None => return Err(format!("model artifact: missing 'format' (expected '{FORMAT}')")),
-        }
+        check_format(j, FORMAT, "model artifact")?;
         let schema_fp = j
             .get_str("schema_fp")
             .ok_or("model artifact: missing 'schema_fp'")?

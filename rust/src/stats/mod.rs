@@ -17,10 +17,11 @@ pub mod ops;
 
 use crate::isl::progression::StrideClass;
 use crate::lpir::{Insn, Kernel, MemSpace, OpKind};
-use crate::qpoly::tape::PwTape;
+use crate::qpoly::tape::{EnvFrame, PwTape, TapeScratch};
 use crate::qpoly::PwQPoly;
 use crate::schedule::schedule;
 use crate::util::intern::{Env, Sym};
+use crate::util::json::Json;
 use footprint::{flatten_access, utilization, FlatAccess};
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock};
@@ -198,11 +199,66 @@ pub struct KernelProps {
     sym: BTreeMap<Prop, PwQPoly>,
     /// lazily compiled evaluation tapes, shared across clones
     tapes: Arc<OnceLock<Vec<(Prop, PwTape)>>>,
+    /// schema-resolved evaluation plan, built once alongside the tapes
+    /// and shared across clones (see [`EvalPlan`])
+    plan: Arc<OnceLock<EvalPlan>>,
+}
+
+/// Schema-resolved evaluation plan: which dense column each compiled
+/// tape writes, and which columns feed each roofline `MemMin` entry.
+/// Resolving the `BTreeMap` schema probes once per (props, schema) —
+/// instead of once per evaluated environment — is what makes
+/// [`KernelProps::eval_batch`] allocation- and probe-free per lane.
+#[derive(Clone, Debug)]
+struct EvalPlan {
+    /// fingerprint of the schema the plan was resolved against
+    schema_fp: String,
+    /// dense column per `tapes()` entry (`None`: prop not in the schema)
+    tape_idx: Vec<Option<usize>>,
+    /// `(MemMin column, loads column, stores column)`
+    memmin: Vec<(usize, Option<usize>, Option<usize>)>,
+}
+
+fn build_plan(schema: &Schema, tapes: &[(Prop, PwTape)]) -> EvalPlan {
+    let tape_idx = tapes.iter().map(|(p, _)| schema.index_of(p)).collect();
+    let mut memmin = Vec::new();
+    for (i, p) in schema.props().iter().enumerate() {
+        if let Prop::MemMin { bits, class } = p {
+            memmin.push((
+                i,
+                schema.index_of(&Prop::MemGlobal { bits: *bits, dir: Dir::Load, class: *class }),
+                schema.index_of(&Prop::MemGlobal { bits: *bits, dir: Dir::Store, class: *class }),
+            ));
+        }
+    }
+    EvalPlan { schema_fp: schema.fingerprint(), tape_idx, memmin }
+}
+
+/// Reusable buffers for [`KernelProps::eval_batch`]: the SoA environment
+/// frame, tape scratch, and one per-tape output column. An arena serves
+/// any number of batches of any size — buffers grow to the high-water
+/// mark and carry no state between calls.
+#[derive(Default)]
+pub struct BatchArena {
+    frame: EnvFrame,
+    scratch: TapeScratch,
+    col: Vec<f64>,
+}
+
+impl BatchArena {
+    pub fn new() -> BatchArena {
+        BatchArena::default()
+    }
 }
 
 impl KernelProps {
     pub fn new(kernel_name: String, sym: BTreeMap<Prop, PwQPoly>) -> KernelProps {
-        KernelProps { kernel_name, sym, tapes: Arc::new(OnceLock::new()) }
+        KernelProps {
+            kernel_name,
+            sym,
+            tapes: Arc::new(OnceLock::new()),
+            plan: Arc::new(OnceLock::new()),
+        }
     }
 
     /// The symbolic property counts (read-only; construct a new
@@ -250,6 +306,74 @@ impl KernelProps {
         Ok(v)
     }
 
+    /// Identity of the shared compiled-tape cache. Clones of one
+    /// extraction share tapes (and evaluation plan), so requests whose
+    /// props carry equal ids can be evaluated by one [`Self::eval_batch`]
+    /// pass.
+    pub fn tape_id(&self) -> usize {
+        Arc::as_ptr(&self.tapes) as usize
+    }
+
+    /// The cached plan if it matches `schema`, else a freshly resolved
+    /// one (a caller mixing schemas is rare enough not to cache).
+    fn plan_for(&self, schema: &Schema) -> std::borrow::Cow<'_, EvalPlan> {
+        let tapes = self.tapes();
+        let cached = self.plan.get_or_init(|| build_plan(schema, tapes));
+        if cached.schema_fp == schema.fingerprint() {
+            std::borrow::Cow::Borrowed(cached)
+        } else {
+            std::borrow::Cow::Owned(build_plan(schema, tapes))
+        }
+    }
+
+    /// Batched [`Self::eval`]: one schema-ordered dense row per
+    /// environment, written row-major into `out`
+    /// (`out[j * schema.len() + i]` is property `i` of environment `j`).
+    ///
+    /// Each compiled tape is walked *once* across all environments over
+    /// the arena's structure-of-arrays frame, and schema indices come
+    /// from a plan resolved once and cached alongside the tapes — no
+    /// per-environment allocation or map probing. Results are
+    /// bit-identical to per-environment [`Self::eval`]. The batch fails
+    /// as a whole on the first lane error (unbound parameter or i64
+    /// overflow); callers that need per-environment attribution fall
+    /// back to scalar `eval`, which produces the identical diagnostic.
+    pub fn eval_batch(
+        &self,
+        schema: &Schema,
+        envs: &[&Env],
+        arena: &mut BatchArena,
+        out: &mut Vec<f64>,
+    ) -> Result<(), String> {
+        let n = envs.len();
+        let m = schema.len();
+        out.clear();
+        out.resize(n * m, 0.0);
+        if n == 0 {
+            return Ok(());
+        }
+        let tapes = self.tapes();
+        let plan = self.plan_for(schema);
+        arena.frame.load(envs);
+        arena.col.clear();
+        arena.col.resize(n, 0.0);
+        for ((_, t), idx) in tapes.iter().zip(plan.tape_idx.iter()) {
+            let Some(i) = idx else { continue };
+            t.eval_many(&arena.frame, &mut arena.scratch, &mut arena.col)?;
+            for (j, &v) in arena.col.iter().enumerate() {
+                out[j * m + *i] = v;
+            }
+        }
+        for &(i, loads, stores) in &plan.memmin {
+            for row in out.chunks_exact_mut(m) {
+                let l = loads.map(|k| row[k]).unwrap_or(0.0);
+                let s = stores.map(|k| row[k]).unwrap_or(0.0);
+                row[i] = l.min(s);
+            }
+        }
+        Ok(())
+    }
+
     /// Non-zero symbolic entries with labels (for reports / debugging).
     pub fn nonzero(&self) -> Vec<(String, &PwQPoly)> {
         self.sym
@@ -258,6 +382,50 @@ impl KernelProps {
             .map(|(p, q)| (p.label(), q))
             .collect()
     }
+
+    /// Serialize the symbolic counts for the persistent extraction
+    /// cache. Properties are keyed by [`Prop::label`], which is unique
+    /// and invertible over the full §2 property set (see
+    /// [`prop_from_label`]); extraction never produces a property
+    /// outside that set.
+    pub fn to_json(&self) -> Json {
+        let props: BTreeMap<String, Json> =
+            self.sym.iter().map(|(p, q)| (p.label(), q.to_json())).collect();
+        Json::obj(vec![
+            ("kernel", Json::Str(self.kernel_name.clone())),
+            ("props", Json::Obj(props)),
+        ])
+    }
+
+    /// Rebuild from [`Self::to_json`] output. The compiled tapes are
+    /// re-derived lazily on first evaluation.
+    pub fn from_json(j: &Json) -> Result<KernelProps, String> {
+        let name = j.get_str("kernel").ok_or("props entry: missing 'kernel'")?;
+        let Some(Json::Obj(props)) = j.get("props") else {
+            return Err("props entry: missing 'props'".into());
+        };
+        let mut sym = BTreeMap::new();
+        for (label, q) in props {
+            let p = prop_from_label(label)
+                .ok_or_else(|| format!("unknown property label '{label}'"))?;
+            sym.insert(p, PwQPoly::from_json(q)?);
+        }
+        Ok(KernelProps::new(name.to_string(), sym))
+    }
+}
+
+/// Inverse of [`Prop::label`] over the full §2 property set (labels are
+/// unique). Used when deserializing persisted extraction-cache entries;
+/// an unknown label means the entry was written by an incompatible
+/// build and must be rejected.
+pub fn prop_from_label(label: &str) -> Option<Prop> {
+    static MAP: OnceLock<BTreeMap<String, Prop>> = OnceLock::new();
+    MAP.get_or_init(|| {
+        let s = Schema::full();
+        s.props().iter().map(|p| (p.label(), p.clone())).collect()
+    })
+    .get(label)
+    .cloned()
 }
 
 /// A global access together with its symbolic count and flattened form.
@@ -870,5 +1038,59 @@ mod tests {
             ) && !q.is_zero()
         });
         assert!(found);
+    }
+
+    #[test]
+    fn eval_batch_rows_match_scalar_eval_bitwise() {
+        let k = copy_kernel();
+        let classify = env(&[("n", 1 << 20)]);
+        let props = extract(&k, &classify, ExtractOpts::default()).unwrap();
+        let schema = Schema::full();
+        let envs: Vec<Env> =
+            [256i64, 4096, 1 << 16, 1 << 20, 3 * 256].iter().map(|&n| env(&[("n", n)])).collect();
+        let refs: Vec<&Env> = envs.iter().collect();
+        let mut arena = BatchArena::new();
+        let mut out = Vec::new();
+        props.eval_batch(&schema, &refs, &mut arena, &mut out).unwrap();
+        let m = schema.len();
+        assert_eq!(out.len(), refs.len() * m);
+        for (j, e) in envs.iter().enumerate() {
+            let want = props.eval(&schema, e).unwrap();
+            for i in 0..m {
+                assert_eq!(
+                    out[j * m + i].to_bits(),
+                    want[i].to_bits(),
+                    "row {j} col {i} ({})",
+                    schema.props()[i].label()
+                );
+            }
+        }
+        // clones share tapes — and therefore one batch identity
+        assert_eq!(props.clone().tape_id(), props.tape_id());
+        // an unbound parameter fails the whole batch
+        let bad = env(&[("m", 7)]);
+        let refs = [&envs[0], &bad];
+        assert!(props.eval_batch(&schema, &refs, &mut arena, &mut out).is_err());
+    }
+
+    #[test]
+    fn props_json_round_trip_evaluates_identically() {
+        let k = copy_kernel();
+        let e = env(&[("n", 1 << 20)]);
+        let props = extract(&k, &e, ExtractOpts::default()).unwrap();
+        let wire = props.to_json().compact();
+        let back = KernelProps::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.kernel_name, props.kernel_name);
+        assert_eq!(back.sym(), props.sym());
+        let schema = Schema::full();
+        for n in [256i64, 4096, 1 << 20] {
+            let b = env(&[("n", n)]);
+            let a = props.eval(&schema, &b).unwrap();
+            let c = back.eval(&schema, &b).unwrap();
+            assert_eq!(a, c, "n={n}");
+        }
+        // an unknown property label is rejected, not silently dropped
+        let j = Json::parse(r#"{"kernel":"x","props":{"no such prop":[]}}"#).unwrap();
+        assert!(KernelProps::from_json(&j).is_err());
     }
 }

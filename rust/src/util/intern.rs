@@ -227,6 +227,13 @@ impl Env {
         self.set.iter().filter(|&&s| s).count()
     }
 
+    /// Width of the dense slot table (highest ever-bound slot id + 1;
+    /// stale unbound slots count). A batched evaluation frame must
+    /// allocate columns up to this width to cover every binding.
+    pub fn slot_width(&self) -> usize {
+        self.set.len()
+    }
+
     pub fn is_empty(&self) -> bool {
         !self.set.iter().any(|&s| s)
     }

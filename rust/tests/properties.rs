@@ -318,6 +318,149 @@ fn interned_env_eval_agrees_with_string_keyed_path() {
 }
 
 #[test]
+fn overflow_errors_agree_between_tree_tape_and_batch() {
+    use uniperf::qpoly::tape::{EnvFrame, LinTape, PwTape, TapeScratch};
+    use uniperf::qpoly::PwQPoly;
+    quickcheck("overflow_tree_vs_tape", |rng| {
+        // coefficients and bindings spanning both the comfortable range
+        // and the i64 cliff edge: products like (1<<40)*(1<<40) and
+        // 2*(1<<62) must error identically on every evaluation path
+        let names = ["n", "m"];
+        let coeffs = [-3i64, -1, 0, 1, 2, 5, 1 << 40];
+        let vals = [0i64, 1, 13, 1 << 20, 1 << 40, 1 << 62];
+        let mut lin = LinExpr::constant(rng.range_i64(-8, 9));
+        for name in &names {
+            lin.add_term(*name, *rng.choose(&coeffs));
+        }
+        let envs: Vec<_> = (0..gen_usize(rng, 1, 5))
+            .map(|_| env(&[("n", *rng.choose(&vals)), ("m", *rng.choose(&vals))]))
+            .collect();
+        let env_refs: Vec<&_> = envs.iter().collect();
+        let mut frame = EnvFrame::new();
+        frame.load(&env_refs);
+
+        // LinExpr: the checked tree evaluator and the compiled tape
+        // agree lane by lane — same value or the exact same error
+        let tape = LinTape::compile(&lin);
+        for e in &envs {
+            let (a, b) = (lin.eval(e), tape.eval(e));
+            prop_assert!(a == b, "lin tree {a:?} vs tape {b:?}");
+        }
+        // ...and the batch either matches every lane bit for bit or
+        // reports exactly the scalar error of an overflowing lane
+        // (never a silently wrapped value)
+        let mut out = vec![0i64; envs.len()];
+        match tape.eval_many(&frame, &mut out) {
+            Ok(()) => {
+                for (j, e) in envs.iter().enumerate() {
+                    let want = lin.eval(e)?;
+                    prop_assert!(out[j] == want, "lane {j}: {} vs {want}", out[j]);
+                }
+            }
+            Err(err) => {
+                prop_assert!(err.contains("overflow"), "unexpected batch error: {err}");
+                prop_assert!(
+                    envs.iter().any(|e| lin.eval(e) == Err(err.clone())),
+                    "batch error '{err}' is no lane's scalar error"
+                );
+            }
+        }
+
+        // QPoly with floor-div atoms over the same cliff-edge bindings
+        let mut poly = QPoly::constant(rng.range_i64(-2, 3) as f64);
+        for _ in 0..gen_usize(rng, 1, 4) {
+            let atom = QPoly::from_atom(Atom::FloorDiv(
+                LinExpr::var(rng.choose(&names)).scale(*rng.choose(&coeffs)),
+                rng.range_i64(1, 8),
+            ));
+            poly = poly.mul(&atom).add(&QPoly::constant(rng.range_i64(-2, 3) as f64));
+        }
+        let ptape = PwTape::compile(&PwQPoly::from_qpoly(poly.clone()));
+        for e in &envs {
+            let (a, b) = (poly.eval(e), ptape.eval(e));
+            prop_assert!(a == b, "qpoly tree {a:?} vs tape {b:?}");
+        }
+        let mut scratch = TapeScratch::new();
+        let mut pout = vec![0.0f64; envs.len()];
+        match ptape.eval_many(&frame, &mut scratch, &mut pout) {
+            Ok(()) => {
+                for (j, e) in envs.iter().enumerate() {
+                    let want = poly.eval(e)?;
+                    prop_assert!(
+                        pout[j].to_bits() == want.to_bits(),
+                        "lane {j}: batched {} vs scalar {want}",
+                        pout[j]
+                    );
+                }
+            }
+            Err(err) => {
+                prop_assert!(err.contains("overflow"), "unexpected batch error: {err}");
+                prop_assert!(
+                    envs.iter().any(|e| poly.eval(e) == Err(err.clone())),
+                    "batch error '{err}' is no lane's scalar error"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_props_batch_eval_is_bit_identical_to_scalar() {
+    use uniperf::kernels::testks as tk;
+    use uniperf::stats::BatchArena;
+    // zoo kernels with distinct piecewise/guard structure, extracted
+    // once; randomized lane batches (group-multiple sizes plus
+    // off-by-one guard-boundary neighbours, duplicates allowed) must
+    // come out of the SoA batch path exactly equal to the scalar rows
+    let schema = Schema::full();
+    let zoo: Vec<(uniperf::lpir::Kernel, &str, i64)> = vec![
+        (tk::reduce_tree(256), "n", 256),
+        (tk::scan_hs(256), "n", 256),
+        (tk::bmm(128), "nb", 128),
+        (tk::gather_strided(128), "n", 128),
+        (tk::stencil3d(16, 16), "n", 16),
+    ];
+    let extracted: Vec<_> = zoo
+        .iter()
+        .map(|(k, p, base)| {
+            let e0 = env(&[(*p, base * 64)]);
+            let props = extract(k, &e0, ExtractOpts::default()).unwrap();
+            (props, *p, *base, k.name.clone())
+        })
+        .collect();
+    let m = schema.len();
+    quickcheck("props_batch_vs_scalar", |rng| {
+        let mut arena = BatchArena::new();
+        let mut flat: Vec<f64> = Vec::new();
+        for (props, p, base, name) in &extracted {
+            let envs: Vec<_> = (0..gen_usize(rng, 1, 6))
+                .map(|_| {
+                    let mult = rng.range_i64(1, 65);
+                    let jitter = *rng.choose(&[-1i64, 0, 0, 1]);
+                    env(&[(*p, (base * mult + jitter).max(1))])
+                })
+                .collect();
+            let env_refs: Vec<&_> = envs.iter().collect();
+            props.eval_batch(&schema, &env_refs, &mut arena, &mut flat)?;
+            for (j, e) in envs.iter().enumerate() {
+                let want = props.eval(&schema, e)?;
+                for i in 0..m {
+                    prop_assert!(
+                        flat[j * m + i].to_bits() == want[i].to_bits(),
+                        "{name} {}: lane {j} batched {} vs scalar {}",
+                        schema.props()[i].label(),
+                        flat[j * m + i],
+                        want[i]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn kernel_props_tape_eval_matches_symbolic_eval() {
     use uniperf::stats::Prop;
     // tapes (used by KernelProps::eval) must agree with direct PwQPoly

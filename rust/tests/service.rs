@@ -31,8 +31,8 @@ fn temp_path(name: &str) -> std::path::PathBuf {
     dir.join(name)
 }
 
-/// A service over hand-made weights (no campaign) for cheap tests.
-fn toy_service(workers: usize) -> Service {
+/// A k40c store over hand-made weights (no campaign) for cheap tests.
+fn toy_store() -> ModelStore {
     let schema = Schema::full();
     let mut weights = vec![0.0; schema.len()];
     weights[schema.len() - 2] = 2e-9; // work groups
@@ -46,8 +46,13 @@ fn toy_service(workers: usize) -> Service {
     };
     let mut store = ModelStore::new(&schema, ExtractOpts::default());
     store.insert(StoredModel::new(model, 8e-6, 400, builtins().get("k40c").unwrap()));
+    store
+}
+
+/// A service over [`toy_store`] weights.
+fn toy_service(workers: usize) -> Service {
     let cfg = ServiceConfig { workers, ..ServiceConfig::default() };
-    Service::new(store, builtins().clone(), cfg).unwrap()
+    Service::new(toy_store(), builtins().clone(), cfg).unwrap()
 }
 
 /// The ISSUE's acceptance pin: `fit --save models.json` then `predict
@@ -239,6 +244,170 @@ fn concurrent_workers_agree_with_single_threaded_reference() {
     assert_eq!(s.cache_misses as usize, kernels.len());
     assert_eq!(s.distinct_kernels, kernels.len());
     assert_eq!(s.batches, n_threads as u64);
+}
+
+/// An inline kernel whose extents scale a parameter by 2: with `n`
+/// bound to `2^62` (exactly representable in JSON's f64, in range for
+/// i64), the `2*n` extent overflows i64 during evaluation.
+const WIDE_SPEC: &str = r#"{"name": "wide", "params": ["n"],
+    "dims": [{"iname": "g0", "tag": "group0", "hi": "2*n", "tiles": 128},
+             {"iname": "l0", "tag": "local0", "hi": 128}],
+    "arrays": [{"name": "src", "dtype": "f32", "shape": ["2*n"]},
+               {"name": "dst", "dtype": "f32", "shape": ["2*n"], "output": true}],
+    "insns": [{"store": "dst", "idx": ["128*g0 + l0"],
+               "expr": {"load": {"array": "src", "idx": ["128*g0 + l0"]}},
+               "within": ["g0", "l0"]}]}"#;
+
+/// The ISSUE's acceptance pin: an overflowing client-supplied binding
+/// comes back as `{"error": ...}` naming the overflow — never a
+/// silently wrapped prediction.
+#[test]
+fn overflowing_env_binding_answers_with_an_error() {
+    let svc = toy_service(1);
+    let n = 1i64 << 62;
+    let line = format!(r#"{{"device": "k40c", "lpir": {WIDE_SPEC}, "env": {{"n": {n}}}}}"#);
+    let resp = svc.respond(&line);
+    let err = resp.get_str("error").unwrap_or_default();
+    assert!(err.contains("overflow"), "want an overflow error, got: {resp}");
+    assert!(resp.get("predicted_s").is_none(), "{resp}");
+    // the same kernel at a sane size still predicts
+    let line = format!(r#"{{"device": "k40c", "lpir": {WIDE_SPEC}, "env": {{"n": 65536}}}}"#);
+    let ok = svc.respond(&line);
+    assert!(ok.get("error").is_none(), "{ok}");
+    assert!(ok.get_f64("predicted_s").is_some(), "{ok}");
+}
+
+/// The batched SoA prediction path is a pure throughput change: a
+/// mixed request stream answers bit-identically to scalar
+/// [`uniperf::engine::Engine::predict`], and a failing request (an
+/// overflowing binding, an unknown kernel, a device without weights)
+/// gets its own error without poisoning its batchmates.
+#[test]
+fn predict_batch_agrees_with_scalar_predict() {
+    use uniperf::engine::Engine;
+    use uniperf::service::{PredictRequest, Request};
+
+    let engine = Engine::new(Config { workers: 1, ..Config::default() });
+    engine.install_store(toy_store()).unwrap();
+
+    let n = 1i64 << 62;
+    let lines = [
+        r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#.to_string(),
+        r#"{"device": "k40c", "kernel": "fd5", "case": "b"}"#.to_string(),
+        r#"{"device": "k40c", "kernel": "nbody", "case": "c"}"#.to_string(),
+        r#"{"device": "k40c", "kernel": "fd5", "env": {"n": 4096}}"#.to_string(),
+        format!(r#"{{"device": "k40c", "lpir": {WIDE_SPEC}, "env": {{"n": {n}}}}}"#),
+        r#"{"device": "k40c", "kernel": "no_such_kernel", "case": "a"}"#.to_string(),
+        r#"{"device": "titan_x", "kernel": "fd5", "case": "a"}"#.to_string(),
+    ];
+    let reqs: Vec<PredictRequest> = lines
+        .iter()
+        .map(|l| match Request::parse(l).unwrap() {
+            Request::Predict(p) => p,
+            other => panic!("expected a predict request, got {other:?}"),
+        })
+        .collect();
+    let batched = engine.predict_batch(reqs.clone(), 2);
+    assert_eq!(batched.len(), reqs.len());
+    for (line, (req, b)) in lines.iter().zip(reqs.iter().zip(&batched)) {
+        match (engine.predict(req), b) {
+            (Ok(a), Ok(bp)) => assert_eq!(
+                a.predicted_s.to_bits(),
+                bp.predicted_s.to_bits(),
+                "{line}: batched prediction diverged from scalar"
+            ),
+            (Err(ea), Err(eb)) => assert_eq!(&ea, eb, "{line}"),
+            (a, b) => panic!("{line}: scalar {a:?} vs batched {b:?}"),
+        }
+    }
+    // the overflowing lane answered with its own overflow error...
+    let overflow = batched[4].as_ref().unwrap_err();
+    assert!(overflow.contains("overflow"), "{overflow}");
+    // ...and every well-formed batchmate still predicted
+    for b in &batched[..4] {
+        assert!(b.is_ok(), "{b:?}");
+    }
+}
+
+/// Tentpole: the persistent extraction cache survives a process
+/// restart. A second service over the same `--props-cache` file
+/// answers the same stream with zero fresh extractions and identical
+/// predictions, while a fingerprint-mismatched file is refused — the
+/// service then runs cold and never trusts (or modifies) the file.
+#[test]
+fn props_cache_file_warm_starts_a_restarted_service() {
+    use std::sync::Arc;
+    use uniperf::engine::Engine;
+
+    let path = temp_path("props_cache_warm.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let build = |cache_path: &std::path::Path| -> Service {
+        let engine = Engine::new(Config {
+            workers: 1,
+            props_cache: Some(cache_path.to_path_buf()),
+            ..Config::default()
+        });
+        engine.install_store(toy_store()).unwrap();
+        let cfg = ServiceConfig { workers: 1, ..ServiceConfig::default() };
+        Service::over(Arc::new(engine), cfg).unwrap()
+    };
+
+    let lines: Vec<String> = ["fd5", "nbody", "reduce_tree", "bmm8"]
+        .iter()
+        .flat_map(|k| {
+            ["a", "b"].iter().map(move |c| {
+                format!(r#"{{"device": "k40c", "kernel": "{k}", "case": "{c}"}}"#)
+            })
+        })
+        .collect();
+
+    // first life: cold — one extraction per kernel structure, appended
+    let first: Vec<Json> = {
+        let svc = build(&path);
+        let out: Vec<Json> = lines.iter().map(|l| svc.respond(l)).collect();
+        for r in &out {
+            assert!(r.get("error").is_none(), "{r}");
+        }
+        assert!(svc.cache().misses() > 0);
+        assert_eq!(svc.cache().disk_hits(), 0);
+        out
+    };
+
+    // second life: the whole stream lands on the preloaded corpus
+    let svc = build(&path);
+    for (line, a) in lines.iter().zip(&first) {
+        let b = svc.respond(line);
+        assert!(b.get("error").is_none(), "{b}");
+        assert_eq!(
+            a.get_f64("predicted_s"),
+            b.get_f64("predicted_s"),
+            "{line}: warm-started prediction diverged"
+        );
+    }
+    assert_eq!(svc.cache().misses(), 0, "a restart must not re-extract");
+    assert!(svc.cache().disk_hits() > 0);
+    drop(svc);
+
+    // a file recorded under another schema is refused, not trusted: the
+    // service starts cold and leaves the file byte-identical
+    let alien = temp_path("props_cache_alien.jsonl");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let forged = text.replacen(&Schema::full().fingerprint(), "0000000000000bad", 1);
+    assert_ne!(forged, text, "the forgery must actually rewrite the fingerprint");
+    std::fs::write(&alien, &forged).unwrap();
+    let svc = build(&alien);
+    for line in &lines {
+        let r = svc.respond(line);
+        assert!(r.get("error").is_none(), "{r}");
+    }
+    assert!(svc.cache().misses() > 0, "a mismatched file must not warm-start");
+    assert_eq!(svc.cache().disk_hits(), 0);
+    assert_eq!(
+        std::fs::read_to_string(&alien).unwrap(),
+        forged,
+        "a refused cache file must never be modified"
+    );
 }
 
 /// The `--devices` template written by `devices --export` loads back
