@@ -2,12 +2,17 @@
 //! prediction service, and push the full evaluation zoo through it
 //! cold (extraction on every new kernel structure), warm (pure
 //! cache-hit tape evaluation), and over TCP — the threaded
-//! per-connection listener against the serial conversational loop.
-//! Records cold/warm/threaded throughput, the latency percentiles and
-//! the cache counters (including evictions) to `BENCH_serve.json`, and
-//! hard-fails if any request errors, if the warm path does not beat
-//! the cold path, if the warm pass ever misses the cache, or if the
-//! threaded listener does not beat the serial loop.
+//! per-connection listener against the serial conversational loop,
+//! then the epoll reactor against the threaded listener under the
+//! idle-heavy pipelining workload the reactor exists for (a horde of
+//! idle keep-alive connections plus 32 active pipelining clients).
+//! Records cold/warm/threaded/event-driven throughput, the latency
+//! percentiles, the mean formed-batch width and the cache counters
+//! (including evictions) to `BENCH_serve.json`, and hard-fails if any
+//! request errors, if the warm path does not beat the cold path, if
+//! the warm pass ever misses the cache, if the threaded listener does
+//! not beat the serial loop, or (on Linux) if the reactor does not
+//! beat the threaded listener or never forms a cross-connection batch.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,8 +21,8 @@ use std::time::Instant;
 use uniperf::coordinator::{fit_models, Config, FitBackend};
 use uniperf::gpusim::registry::builtins;
 use uniperf::harness::Protocol;
-use uniperf::report::render_service;
-use uniperf::service::{tcp, Service, ServiceConfig};
+use uniperf::report::{render_service, ServiceSummary};
+use uniperf::service::{reactor, tcp, Service, ServiceConfig};
 use uniperf::util::json::Json;
 
 /// Conversational TCP client: send each line, wait for its response.
@@ -36,6 +41,45 @@ fn tcp_roundtrips(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
     out
 }
 
+/// Pipelining client: send `depth` request lines at once, read the
+/// `depth` responses back, repeat until the stream is drained. Returns
+/// the per-round latencies in seconds; every response must be a clean
+/// prediction.
+fn pipelined_rounds(addr: std::net::SocketAddr, lines: &[String], depth: usize) -> Vec<f64> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+    let mut rounds = Vec::new();
+    for chunk in lines.chunks(depth) {
+        let mut burst = String::new();
+        for line in chunk {
+            burst.push_str(line);
+            burst.push('\n');
+        }
+        let t0 = Instant::now();
+        stream.write_all(burst.as_bytes()).expect("send");
+        stream.flush().expect("flush");
+        for _ in chunk {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).expect("recv");
+            let j = Json::parse(resp.trim_end()).expect("response JSON");
+            assert!(j.get("error").is_none(), "pipelined request errored: {resp}");
+        }
+        rounds.push(t0.elapsed().as_secs_f64());
+    }
+    rounds
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
 fn main() {
     let cfg = Config {
         devices: vec!["k40c".into(), "titan_x".into()],
@@ -50,6 +94,9 @@ fn main() {
         "fitted {} devices in {fit_s:.1}s (one-time artifact cost)",
         store.len()
     );
+    // the event-driven section stands up fresh services over the same
+    // fitted artifact so both transports start from identical state
+    let event_store = store.clone();
     let svc = Service::new(store, builtins().clone(), ServiceConfig::default())
         .expect("artifact must validate against the registry it was fitted on");
 
@@ -213,6 +260,135 @@ fn main() {
         "the evaluation zoo must fit the default cache capacity"
     );
 
+    // --- event-driven reactor vs threaded listener, idle-heavy load ---
+    // The workload the reactor exists for: up to 1k idle keep-alive
+    // connections (gracefully fewer under a tight fd budget — both
+    // sides of every connection live in this process) plus 32 active
+    // clients pipelining the zoo stream at depth 8. Identical fresh
+    // services, identical streams; the reactor must win on throughput
+    // with zero errors and real cross-connection batch formation.
+    const ACTIVE_CLIENTS: usize = 32;
+    const PIPELINE_DEPTH: usize = 8;
+    let run_event = |use_reactor: bool| -> (f64, Vec<f64>, ServiceSummary, usize) {
+        let svc = Arc::new(
+            Service::new(event_store.clone(), builtins().clone(), ServiceConfig::default())
+                .expect("event-driven service"),
+        );
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().expect("listener addr");
+        let server = {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                if use_reactor {
+                    let rcfg =
+                        reactor::ReactorConfig { max_conns: 2048, ..Default::default() };
+                    reactor::serve_reactor(&svc, listener, rcfg).expect("reactor listener")
+                } else {
+                    tcp::serve_threaded(&svc, listener, 2048).expect("threaded listener")
+                }
+            })
+        };
+        let mut idle = Vec::new();
+        for _ in 0..1000 {
+            match TcpStream::connect(addr) {
+                Ok(s) => idle.push(s),
+                Err(_) => break,
+            }
+        }
+        if idle.len() < 1000 {
+            // fd ceiling hit: give back headroom for the active
+            // clients, then let the server reap and any accept
+            // backoff expire
+            for _ in 0..96 {
+                drop(idle.pop());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(250));
+        }
+        let n_idle = idle.len();
+        let t0 = Instant::now();
+        let rounds: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..ACTIVE_CLIENTS)
+                .map(|_| scope.spawn(|| pipelined_rounds(addr, &lines, PIPELINE_DEPTH)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut lat: Vec<f64> = rounds.into_iter().flatten().collect();
+        lat.sort_by(f64::total_cmp);
+        let bye = tcp_roundtrips(addr, &[r#"{"cmd": "shutdown"}"#.to_string()]);
+        assert_eq!(
+            Json::parse(&bye[0]).expect("shutdown response").get_str("ok"),
+            Some("shutdown")
+        );
+        let summary = server.join().expect("server drains with the idle horde attached");
+        drop(idle);
+        (wall_s, lat, summary, n_idle)
+    };
+    let event = if reactor::supported() {
+        let (thr_s, thr_lat, thr_sum, thr_idle) = run_event(false);
+        let (rct_s, rct_lat, rct_sum, rct_idle) = run_event(true);
+        let total = (ACTIVE_CLIENTS * n) as f64;
+        let (thr_rps, rct_rps) = (total / thr_s, total / rct_s);
+        for (name, sum) in [("threaded", &thr_sum), ("reactor", &rct_sum)] {
+            assert_eq!(sum.errors, 0, "{name} event-driven pass had request errors");
+            assert_eq!(sum.shed, 0, "{name} event-driven pass shed load");
+        }
+        println!(
+            "event-driven threaded: {total:.0} piped requests + {thr_idle} idle conns \
+             in {:.1} ms ({thr_rps:.0} req/s)",
+            thr_s * 1e3
+        );
+        println!(
+            "event-driven reactor:  {total:.0} piped requests + {rct_idle} idle conns \
+             in {:.1} ms ({rct_rps:.0} req/s, {:.2}x threaded, mean batch width {:.1})",
+            rct_s * 1e3,
+            rct_rps / thr_rps,
+            rct_sum.batch_mean
+        );
+        assert!(
+            rct_sum.batch_mean > 1.0,
+            "cross-connection batch formation never engaged: mean formed-batch width {}",
+            rct_sum.batch_mean
+        );
+        assert!(
+            rct_rps > thr_rps,
+            "the reactor ({rct_rps:.0} req/s) must beat the threaded listener \
+             ({thr_rps:.0} req/s) under idle-heavy pipelining load"
+        );
+        Some(Json::obj(vec![
+            ("active_clients", Json::Num(ACTIVE_CLIENTS as f64)),
+            ("pipeline_depth", Json::Num(PIPELINE_DEPTH as f64)),
+            ("requests", Json::Num(total)),
+            (
+                "threaded",
+                Json::obj(vec![
+                    ("idle_connections", Json::Num(thr_idle as f64)),
+                    ("seconds", Json::Num(thr_s)),
+                    ("rps", Json::Num(thr_rps)),
+                    ("round_p50_ms", Json::Num(pct(&thr_lat, 50.0) * 1e3)),
+                    ("round_p99_ms", Json::Num(pct(&thr_lat, 99.0) * 1e3)),
+                ]),
+            ),
+            (
+                "reactor",
+                Json::obj(vec![
+                    ("idle_connections", Json::Num(rct_idle as f64)),
+                    ("seconds", Json::Num(rct_s)),
+                    ("rps", Json::Num(rct_rps)),
+                    ("round_p50_ms", Json::Num(pct(&rct_lat, 50.0) * 1e3)),
+                    ("round_p99_ms", Json::Num(pct(&rct_lat, 99.0) * 1e3)),
+                    ("batch_width_mean", Json::Num(rct_sum.batch_mean)),
+                    ("batch_width_p50", Json::Num(rct_sum.batch_p50)),
+                    ("batch_width_p99", Json::Num(rct_sum.batch_p99)),
+                ]),
+            ),
+            ("reactor_over_threaded", Json::Num(rct_rps / thr_rps)),
+        ]))
+    } else {
+        println!("event-driven section skipped: epoll reactor unsupported on this target");
+        None
+    };
+
     let j = Json::obj(vec![
         ("suite", Json::Str("serve".into())),
         ("fit_s", Json::Num(fit_s)),
@@ -248,6 +424,13 @@ fn main() {
             ]),
         ),
         ("threaded_over_serial", Json::Num(threaded_rps / serial_rps)),
+        (
+            "event_driven",
+            match event {
+                Some(section) => section,
+                None => Json::Null,
+            },
+        ),
         ("service", summary.to_json()),
     ]);
     std::fs::write("BENCH_serve.json", j.pretty()).expect("write BENCH_serve.json");

@@ -16,10 +16,15 @@
 //!   or a whole `--requests` file of line-delimited JSON); without
 //!   `--models`: legacy predict + measure of the §5 test kernels
 //! * `serve`    — the prediction server: line-delimited JSON requests
-//!   on stdin (responses on stdout, summary on stderr), or a threaded
-//!   TCP listener with `--port` (one thread per connection, shared
-//!   cache, `--max-conn` connection guard, drained by a
-//!   `{"cmd": "shutdown"}` request); requires `--models`. `--watch`
+//!   on stdin (responses on stdout, summary on stderr), or a TCP
+//!   listener with `--port`. The listener transport is selected by
+//!   `--transport auto|reactor|threaded`: on Linux the default is the
+//!   epoll reactor (one readiness loop, nonblocking sockets, a fixed
+//!   worker pool, and cross-connection batch formation under the
+//!   `--batch-ms` window); elsewhere, or on request, one thread per
+//!   connection. Both share the cache, the `--max-conns` connection
+//!   guard and the `--queue-cap` bound, and drain on a
+//!   `{"cmd": "shutdown"}` request; requires `--models`. `--watch`
 //!   hot-reloads the artifact when the file changes (a bad rewrite
 //!   keeps the old models serving). Requests may also be batched
 //!   device×kernel matrices (`{"cmd": "matrix", ...}`)
@@ -41,7 +46,7 @@ use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
 use uniperf::gpusim::registry;
 use uniperf::harness::Protocol;
 use uniperf::report::{render_service, render_table2};
-use uniperf::service::{tcp, ModelStore, Service, ServiceConfig};
+use uniperf::service::{reactor, tcp, ModelStore, Service, ServiceConfig};
 use uniperf::stats::{extract, ExtractOpts, Schema};
 use uniperf::util::cli::{parse, usage, Args, OptSpec};
 use uniperf::util::json::Json;
@@ -72,6 +77,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "batch", help: "serve: requests per executor batch", is_flag: false, default: Some("64") },
         OptSpec { name: "watch", help: "serve: hot-reload --models when the file changes (polled between batches/connections)", is_flag: true, default: None },
         OptSpec { name: "max-conn", help: "serve --port: concurrent-connection guard", is_flag: false, default: Some("256") },
+        OptSpec { name: "max-conns", help: "serve --port: alias for --max-conn (takes precedence when both are given)", is_flag: false, default: None },
+        OptSpec { name: "transport", help: "serve --port: auto|reactor|threaded (auto picks the epoll reactor where supported)", is_flag: false, default: Some("auto") },
+        OptSpec { name: "batch-ms", help: "serve --port (reactor): cross-connection batch-formation window in milliseconds", is_flag: false, default: Some("2") },
+        OptSpec { name: "queue-cap", help: "serve: pending-request queue bound; beyond it requests shed with reason \"overloaded\"", is_flag: false, default: None },
         OptSpec { name: "export", help: "devices: write a commented profiles.json template to this path", is_flag: false, default: None },
         OptSpec { name: "faults", help: "chaos: deterministic fault-injection plan (JSON: {\"seed\", \"sites\": {\"<site>\": {\"rate\", \"max\"?}}})", is_flag: false, default: None },
         OptSpec { name: "degraded", help: "serve/predict: answer for devices the artifact lacks from the nearest-capability fitted device (responses flagged \"degraded\")", is_flag: true, default: None },
@@ -161,11 +170,13 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
 fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, String> {
     let schema = Schema::full();
     let store = ModelStore::load(Path::new(models), &schema)?;
+    let defaults = ServiceConfig::default();
     let svc_cfg = ServiceConfig {
         batch: args.get_usize("batch", 64)?,
         workers: cfg.workers,
         extract: cfg.extract,
-        ..ServiceConfig::default()
+        queue_cap: args.get_usize("queue-cap", defaults.queue_cap)?,
+        ..defaults
     };
     // the serving engine is built here (not through `Service::new`) so
     // it carries the run's fault plan and degraded-mode setting along
@@ -387,20 +398,59 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                 Some(p) => {
                     let port: u16 =
                         p.parse().map_err(|_| format!("bad --port '{p}'"))?;
-                    let max_conn = args.get_usize("max-conn", tcp::DEFAULT_MAX_CONNECTIONS)?;
+                    let max_conn = if args.get("max-conns").is_some() {
+                        args.get_usize("max-conns", tcp::DEFAULT_MAX_CONNECTIONS)?
+                    } else {
+                        args.get_usize("max-conn", tcp::DEFAULT_MAX_CONNECTIONS)?
+                    };
+                    let transport = match args.get_or("transport", "auto") {
+                        "threaded" => "threaded",
+                        "reactor" => {
+                            if !reactor::supported() {
+                                return Err(
+                                    "--transport reactor: the epoll reactor requires \
+                                     Linux on x86_64/aarch64 (use --transport threaded)"
+                                        .into(),
+                                );
+                            }
+                            "reactor"
+                        }
+                        "auto" => {
+                            if reactor::supported() {
+                                "reactor"
+                            } else {
+                                "threaded"
+                            }
+                        }
+                        other => {
+                            return Err(format!(
+                                "unknown transport '{other}' (auto|reactor|threaded)"
+                            ))
+                        }
+                    };
                     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
                         .map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
                     eprintln!(
                         "uniperf serve: listening on 127.0.0.1:{port} \
                          (line-delimited JSON requests, one response line each; \
-                         threaded, up to {max_conn} connections; send \
+                         {transport} transport, up to {max_conn} connections; send \
                          {{\"cmd\": \"shutdown\"}} to drain)"
                     );
-                    // per-connection threads over one shared service;
-                    // returns once a shutdown request drained every
-                    // connection
+                    // one shared service either way; both transports
+                    // return once a shutdown request drained everything
                     let svc = std::sync::Arc::new(svc);
-                    let summary = tcp::serve_threaded(&svc, listener, max_conn)?;
+                    let summary = if transport == "reactor" {
+                        let rcfg = reactor::ReactorConfig {
+                            max_conns: max_conn,
+                            batch_ms: args.get_f64("batch-ms", reactor::DEFAULT_BATCH_MS)?,
+                            batch_cap: svc.config().batch,
+                            workers: svc.config().workers,
+                            ..reactor::ReactorConfig::default()
+                        };
+                        reactor::serve_reactor(&svc, listener, rcfg)?
+                    } else {
+                        tcp::serve_threaded(&svc, listener, max_conn)?
+                    };
                     eprint!("{}", render_service(&summary));
                 }
             }

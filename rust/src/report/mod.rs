@@ -348,6 +348,19 @@ pub struct ServiceSummary {
     pub conn_slowed: u64,
     /// measurement cases quarantined by the engine's campaigns
     pub quarantined: u64,
+    /// failed `accept` calls absorbed by the listener (counted per
+    /// failure; the log is rate-limited per errno)
+    pub accept_errors: u64,
+    /// fd-exhaustion accept backoffs taken by the reactor transport
+    pub accept_backoffs: u64,
+    /// formation-queue depth gauge after the reactor's last dispatch
+    /// round (0 under the threaded transport)
+    pub queue_depth: u64,
+    /// formed-batch width percentiles (requests per executor batch):
+    /// a mean above 1 proves cross-connection coalescing engaged
+    pub batch_p50: f64,
+    pub batch_p99: f64,
+    pub batch_mean: f64,
 }
 
 impl ServiceSummary {
@@ -384,6 +397,12 @@ impl ServiceSummary {
             ("conn_aborted", Json::Num(self.conn_aborted as f64)),
             ("conn_slowed", Json::Num(self.conn_slowed as f64)),
             ("quarantined", Json::Num(self.quarantined as f64)),
+            ("accept_errors", Json::Num(self.accept_errors as f64)),
+            ("accept_backoffs", Json::Num(self.accept_backoffs as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("batch_p50", Json::Num(self.batch_p50)),
+            ("batch_p99", Json::Num(self.batch_p99)),
+            ("batch_mean", Json::Num(self.batch_mean)),
         ])
     }
 
@@ -397,6 +416,8 @@ impl ServiceSummary {
             || self.conn_aborted != 0
             || self.conn_slowed != 0
             || self.quarantined != 0
+            || self.accept_errors != 0
+            || self.accept_backoffs != 0
     }
 }
 
@@ -424,6 +445,13 @@ pub fn render_service(s: &ServiceSummary) -> String {
         "latency: p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
         s.latency_p50_us, s.latency_p99_us, s.latency_mean_us
     );
+    if s.batch_mean > 0.0 {
+        let _ = writeln!(
+            out,
+            "batch width: p50 {:.0}  p99 {:.0}  mean {:.1}  (queue depth {})",
+            s.batch_p50, s.batch_p99, s.batch_mean, s.queue_depth
+        );
+    }
     match s.min_extract_us {
         Some(t) => {
             let _ = writeln!(
@@ -442,13 +470,16 @@ pub fn render_service(s: &ServiceSummary) -> String {
         let _ = writeln!(
             out,
             "robustness: {} shed  {} deadline-expired  {} degraded  \
-             {} conn aborted  {} conn slowed  {} quarantined",
+             {} conn aborted  {} conn slowed  {} quarantined  \
+             {} accept errors  {} accept backoffs",
             s.shed,
             s.deadline_expired,
             s.degraded_served,
             s.conn_aborted,
             s.conn_slowed,
-            s.quarantined
+            s.quarantined,
+            s.accept_errors,
+            s.accept_backoffs
         );
     }
     out

@@ -69,6 +69,7 @@
 pub mod cache;
 pub mod diskcache;
 pub mod hash;
+pub mod reactor;
 pub mod request;
 pub mod spec;
 pub mod store;
@@ -78,18 +79,19 @@ pub use cache::SharedPropsCache;
 pub use request::{KernelRef, MatrixRequest, PredictRequest, Request};
 pub use store::{ModelStore, StoredModel};
 
-use crate::engine::{Config, Engine, Reloader};
+use crate::engine::{Config, Engine, MatrixPrediction, Prediction, Reloader};
 use crate::gpusim::DeviceRegistry;
 use crate::report::ServiceSummary;
 use crate::stats::ExtractOpts;
-use crate::util::executor::{default_workers, par_map};
+use crate::util::executor::default_workers;
 use crate::util::fault::FaultPlan;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default request-line length cap (bytes). Far above any legitimate
 /// inline kernel spec, far below what a hostile unterminated stream
@@ -100,6 +102,12 @@ pub const MAX_REQUEST_LINE: usize = 1 << 20;
 /// `"reason": "overloaded"` shed response (bounded queue and TCP
 /// connection guard alike).
 pub const RETRY_AFTER_MS: u64 = 50;
+
+/// Accept-failure log window: under SYN churn or fd exhaustion both
+/// transports count every failed `accept` ([`ServiceSummary`]
+/// `accept_errors`) but print at most one line per distinct errno per
+/// window, with a suppressed-repeat count — diagnosis without flooding.
+const ACCEPT_LOG_WINDOW: Duration = Duration::from_secs(5);
 
 /// Mutex lock that survives a poisoned peer: accounting state stays
 /// usable even if another worker thread panicked mid-update (a torn
@@ -198,6 +206,28 @@ struct Stats {
     conn_aborted: AtomicU64,
     /// TCP connections delayed by the `conn.slow` fault site
     conn_slowed: AtomicU64,
+    /// failed `accept` calls, both transports (each one is counted
+    /// here; the log limiter below decides which get printed)
+    accept_errors: AtomicU64,
+    /// fd-exhaustion backoffs taken by the reactor's accept path
+    accept_backoffs: AtomicU64,
+    /// formation-queue depth gauge, sampled by the reactor after each
+    /// dispatch round (stays 0 under the threaded transport, whose
+    /// queue lives per connection)
+    queue_depth: AtomicU64,
+    /// formed-batch widths (requests per executor batch) — same
+    /// bounded decimating buffer as the latencies
+    batch_widths: Mutex<LatencyBuf>,
+    /// per-errno accept-failure log limiter state
+    accept_log: Mutex<BTreeMap<i32, AcceptLog>>,
+}
+
+/// Log-limiter state for one accept-failure errno.
+#[derive(Default)]
+struct AcceptLog {
+    last_logged: Option<Instant>,
+    /// identical failures swallowed since the last printed line
+    suppressed: u64,
 }
 
 /// The prediction server front end: request parsing + response
@@ -295,6 +325,46 @@ impl Service {
         self.stats.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one failed `accept`. Returns `Some(message)` when the
+    /// caller should actually print it: at most one line per distinct
+    /// errno per [`ACCEPT_LOG_WINDOW`], annotated with how many
+    /// identical failures were suppressed since the last printed one.
+    pub(crate) fn note_accept_error(&self, err: &std::io::Error) -> Option<String> {
+        self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+        let errno = err.raw_os_error().unwrap_or(-1);
+        let mut log = locked(&self.stats.accept_log);
+        let state = log.entry(errno).or_default();
+        let now = Instant::now();
+        if let Some(last) = state.last_logged {
+            if now.duration_since(last) < ACCEPT_LOG_WINDOW {
+                state.suppressed += 1;
+                return None;
+            }
+        }
+        let suppressed = std::mem::take(&mut state.suppressed);
+        state.last_logged = Some(now);
+        Some(if suppressed == 0 {
+            format!("accept failed: {err}")
+        } else {
+            format!("accept failed: {err} ({suppressed} identical failures suppressed)")
+        })
+    }
+
+    /// Count one fd-exhaustion accept backoff (reactor transport).
+    pub(crate) fn note_accept_backoff(&self) {
+        self.stats.accept_backoffs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the formation-queue depth after a reactor dispatch round.
+    pub(crate) fn note_queue_depth(&self, depth: usize) {
+        self.stats.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// The serving configuration this service was built with.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
     /// Watch `path` (the `--models` artifact) for rewrites: the serving
     /// loops re-stat it between batches and connections and atomically
     /// swap a validated new store in ([`Reloader`]). The current file
@@ -320,7 +390,7 @@ impl Service {
 
     /// Between-batches reload tick: poll and log, never fail the
     /// serving loop — a bad rewrite keeps the old store serving.
-    fn reload_tick(&self) {
+    pub(crate) fn reload_tick(&self) {
         match self.poll_reload() {
             Some(Ok(true)) => eprintln!("uniperf serve: reloaded model artifact"),
             Some(Err(e)) => {
@@ -382,145 +452,205 @@ impl Service {
     /// budgets are measured from when the server first read the line,
     /// so time spent waiting in a batch window counts against them.
     fn respond_at(&self, line: &str, enqueued: Instant) -> Json {
+        match self.answer_batch(vec![(line.to_string(), enqueued)], 1).pop() {
+            Some(resp) => resp,
+            // answer_batch renders one response per line it was given
+            None => unreachable!("one response per request line"),
+        }
+    }
+
+    /// Answer one *formed batch* of request lines, in order. This is
+    /// the single rendering path for every transport: introspection,
+    /// control and error responses are answered inline, and all live
+    /// predictions coalesce into one [`Engine::predict_batch`] call so
+    /// the SoA tape evaluator sees the whole cross-request batch at
+    /// once (PR 7 pinned batch-vs-scalar bit identity, so the rendered
+    /// bytes match the scalar path exactly). `workers` bounds the
+    /// resolution fan-out inside the engine call — a caller that
+    /// already parallelizes across batches (the reactor's worker pool)
+    /// passes 1.
+    pub fn respond_batch(&self, lines: Vec<(String, Instant)>, workers: usize) -> Vec<Json> {
+        if lines.is_empty() {
+            return Vec::new();
+        }
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        locked(&self.stats.batch_widths).push(lines.len() as f64);
+        self.answer_batch(lines, workers)
+    }
+
+    /// [`Service::respond_batch`] without the batch accounting (the
+    /// single-request [`Service::respond`] path is not a batch).
+    fn answer_batch(&self, lines: Vec<(String, Instant)>, workers: usize) -> Vec<Json> {
+        if lines.is_empty() {
+            return Vec::new();
+        }
         let t0 = Instant::now();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        let error_resp = |id: Option<&Json>, msg: String| {
-            self.stats.errors.fetch_add(1, Ordering::Relaxed);
-            let mut pairs = vec![("error", Json::Str(msg))];
-            if let Some(id) = id {
-                pairs.push(("id", id.clone()));
-            }
-            Json::obj(pairs)
-        };
-        let resp = match Request::parse(line) {
-            Err(e) => {
-                // salvage the id for correlation even when the request
-                // is otherwise malformed (documented id-echo contract)
-                let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
-                error_resp(id.as_ref(), e)
-            }
-            Ok(Request::Shutdown { id }) => {
-                // flag first: the loop that flushes this response stops
-                // reading right after
-                self.shutdown.store(true, Ordering::SeqCst);
-                let mut pairs = vec![("ok", Json::Str("shutdown".into()))];
-                if let Some(id) = id {
-                    pairs.push(("id", id));
+        // first pass: parse and answer everything that never reaches
+        // the evaluator; live predictions collect into one batch
+        let mut preds: Vec<PredictRequest> = Vec::new();
+        let mut pred_ids: Vec<Option<Json>> = Vec::new();
+        let mut slots: Vec<Option<Json>> = Vec::with_capacity(lines.len());
+        for (line, enqueued) in &lines {
+            self.stats.requests.fetch_add(1, Ordering::Relaxed);
+            let resp = match Request::parse(line) {
+                Err(e) => {
+                    // salvage the id for correlation even when the
+                    // request is otherwise malformed (documented
+                    // id-echo contract)
+                    let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
+                    Some(self.error_response(id.as_ref(), e))
                 }
-                Json::obj(pairs)
-            }
-            Ok(Request::Health { id }) => self.health_response(id),
-            Ok(Request::Stats { id }) => {
-                let mut pairs = vec![
-                    ("ok", Json::Str("stats".into())),
-                    ("summary", self.summary().to_json()),
-                ];
-                if let Some(id) = id {
-                    pairs.push(("id", id));
-                }
-                Json::obj(pairs)
-            }
-            Ok(Request::Predict(req)) => {
-                if let Some(expired) =
-                    self.deadline_response(req.deadline_ms, enqueued, req.id.as_ref())
-                {
-                    expired
-                } else {
-                    match self.engine.predict(&req) {
-                        Err(e) => error_resp(req.id.as_ref(), e),
-                        Ok(p) => {
-                            self.note_extract(p.extract_s);
-                            let mut pairs = vec![
-                                ("device", Json::Str(p.device)),
-                                ("kernel", Json::Str(p.kernel)),
-                                ("predicted_s", Json::Num(p.predicted_s)),
-                                (
-                                    "cache",
-                                    Json::Str(if p.cache_hit {
-                                        "hit".into()
-                                    } else {
-                                        "miss".into()
-                                    }),
-                                ),
-                            ];
-                            if p.degraded {
-                                self.stats.degraded.fetch_add(1, Ordering::Relaxed);
-                                pairs.push(("degraded", Json::Bool(true)));
-                            }
-                            if let Some(sb) = p.served_by {
-                                pairs.push(("served_by", Json::Str(sb)));
-                            }
-                            if let Some(c) = p.case {
-                                pairs.push(("case", Json::Str(c)));
-                            }
-                            if let Some(id) = p.id {
-                                pairs.push(("id", id));
-                            }
-                            Json::obj(pairs)
+                Ok(Request::Shutdown { id }) => Some(self.shutdown_response(id)),
+                Ok(Request::Health { id }) => Some(self.health_response(id)),
+                Ok(Request::Stats { id }) => Some(self.stats_response(id)),
+                Ok(Request::Matrix(req)) => Some(
+                    match self.deadline_response(req.deadline_ms, *enqueued, req.id.as_ref()) {
+                        Some(expired) => expired,
+                        None => match self.engine.predict_matrix(&req) {
+                            Err(e) => self.error_response(req.id.as_ref(), e),
+                            Ok(mp) => self.render_matrix(mp),
+                        },
+                    },
+                ),
+                Ok(Request::Predict(req)) => {
+                    match self.deadline_response(req.deadline_ms, *enqueued, req.id.as_ref()) {
+                        Some(expired) => Some(expired),
+                        None => {
+                            pred_ids.push(req.id.clone());
+                            preds.push(req);
+                            None
                         }
                     }
                 }
-            }
-            Ok(Request::Matrix(req)) => {
-                if let Some(expired) =
-                    self.deadline_response(req.deadline_ms, enqueued, req.id.as_ref())
-                {
-                    expired
-                } else {
-                    match self.engine.predict_matrix(&req) {
-                        Err(e) => error_resp(req.id.as_ref(), e),
-                        Ok(mp) => {
-                            let results = mp
-                                .per_device
-                                .into_iter()
-                                .map(|(device, outcome)| match outcome {
-                                    Ok(p) => {
-                                        self.note_extract(p.extract_s);
-                                        let mut cell = vec![
-                                            ("device", Json::Str(device)),
-                                            ("predicted_s", Json::Num(p.predicted_s)),
-                                            (
-                                                "cache",
-                                                Json::Str(if p.cache_hit {
-                                                    "hit".into()
-                                                } else {
-                                                    "miss".into()
-                                                }),
-                                            ),
-                                        ];
-                                        if p.degraded {
-                                            self.stats.degraded.fetch_add(1, Ordering::Relaxed);
-                                            cell.push(("degraded", Json::Bool(true)));
-                                        }
-                                        if let Some(sb) = p.served_by {
-                                            cell.push(("served_by", Json::Str(sb)));
-                                        }
-                                        Json::obj(cell)
-                                    }
-                                    Err(e) => Json::obj(vec![
-                                        ("device", Json::Str(device)),
-                                        ("error", Json::Str(e)),
-                                    ]),
-                                })
-                                .collect();
-                            let mut pairs = vec![
-                                ("kernel", Json::Str(mp.kernel)),
-                                ("results", Json::Arr(results)),
-                            ];
-                            if let Some(c) = mp.case {
-                                pairs.push(("case", Json::Str(c)));
-                            }
-                            if let Some(id) = mp.id {
-                                pairs.push(("id", id));
-                            }
-                            Json::obj(pairs)
-                        }
+            };
+            slots.push(resp);
+        }
+        // one batched engine call answers every live prediction
+        let outcomes = self.engine.predict_batch(preds, workers);
+        let mut outcomes = outcomes.into_iter().zip(pred_ids);
+        let out: Vec<Json> = slots
+            .into_iter()
+            .map(|slot| match slot {
+                Some(resp) => resp,
+                None => match outcomes.next() {
+                    Some((Ok(p), _)) => self.render_prediction(p),
+                    Some((Err(e), id)) => self.error_response(id.as_ref(), e),
+                    // predict_batch answers every request it was given
+                    None => unreachable!("one outcome per batched prediction"),
+                },
+            })
+            .collect();
+        let dt_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut lat = locked(&self.stats.latencies_us);
+        for _ in 0..out.len() {
+            lat.push(dt_us);
+        }
+        out
+    }
+
+    /// Render + count a request-level error (`{"error": ...}` with the
+    /// id echoed when known).
+    fn error_response(&self, id: Option<&Json>, msg: String) -> Json {
+        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        let mut pairs = vec![("error", Json::Str(msg))];
+        if let Some(id) = id {
+            pairs.push(("id", id.clone()));
+        }
+        Json::obj(pairs)
+    }
+
+    fn shutdown_response(&self, id: Option<Json>) -> Json {
+        // flag first: the loop that flushes this response stops
+        // reading right after
+        self.shutdown.store(true, Ordering::SeqCst);
+        let mut pairs = vec![("ok", Json::Str("shutdown".into()))];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
+    }
+
+    fn stats_response(&self, id: Option<Json>) -> Json {
+        let mut pairs = vec![
+            ("ok", Json::Str("stats".into())),
+            ("summary", self.summary().to_json()),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Render one successful prediction (shared by the single and
+    /// matrix paths' accounting: extraction floor + degraded counter).
+    fn render_prediction(&self, p: Prediction) -> Json {
+        self.note_extract(p.extract_s);
+        let mut pairs = vec![
+            ("device", Json::Str(p.device)),
+            ("kernel", Json::Str(p.kernel)),
+            ("predicted_s", Json::Num(p.predicted_s)),
+            (
+                "cache",
+                Json::Str(if p.cache_hit { "hit".into() } else { "miss".into() }),
+            ),
+        ];
+        if p.degraded {
+            self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            pairs.push(("degraded", Json::Bool(true)));
+        }
+        if let Some(sb) = p.served_by {
+            pairs.push(("served_by", Json::Str(sb)));
+        }
+        if let Some(c) = p.case {
+            pairs.push(("case", Json::Str(c)));
+        }
+        if let Some(id) = p.id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
+    }
+
+    fn render_matrix(&self, mp: MatrixPrediction) -> Json {
+        let results = mp
+            .per_device
+            .into_iter()
+            .map(|(device, outcome)| match outcome {
+                Ok(p) => {
+                    self.note_extract(p.extract_s);
+                    let mut cell = vec![
+                        ("device", Json::Str(device)),
+                        ("predicted_s", Json::Num(p.predicted_s)),
+                        (
+                            "cache",
+                            Json::Str(if p.cache_hit { "hit".into() } else { "miss".into() }),
+                        ),
+                    ];
+                    if p.degraded {
+                        self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                        cell.push(("degraded", Json::Bool(true)));
                     }
+                    if let Some(sb) = p.served_by {
+                        cell.push(("served_by", Json::Str(sb)));
+                    }
+                    Json::obj(cell)
                 }
-            }
-        };
-        locked(&self.stats.latencies_us).push(t0.elapsed().as_secs_f64() * 1e6);
-        resp
+                Err(e) => Json::obj(vec![
+                    ("device", Json::Str(device)),
+                    ("error", Json::Str(e)),
+                ]),
+            })
+            .collect();
+        let mut pairs = vec![
+            ("kernel", Json::Str(mp.kernel)),
+            ("results", Json::Arr(results)),
+        ];
+        if let Some(c) = mp.case {
+            pairs.push(("case", Json::Str(c)));
+        }
+        if let Some(id) = mp.id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
     }
 
     /// The `{"cmd": "health"}` surface: component status without
@@ -592,7 +722,36 @@ impl Service {
                         "conn_slowed",
                         Json::Num(self.stats.conn_slowed.load(Ordering::Relaxed) as f64),
                     ),
+                    (
+                        "accept_errors",
+                        Json::Num(self.stats.accept_errors.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "accept_backoffs",
+                        Json::Num(self.stats.accept_backoffs.load(Ordering::Relaxed) as f64),
+                    ),
                 ]),
+            ),
+            (
+                "queue",
+                Json::obj(vec![
+                    (
+                        "depth",
+                        Json::Num(self.stats.queue_depth.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("cap", Json::Num(self.cfg.queue_cap as f64)),
+                ]),
+            ),
+            (
+                "batch",
+                {
+                    let (p50, p99, mean) = percentiles(&self.stats.batch_widths);
+                    Json::obj(vec![
+                        ("width_p50", Json::Num(p50)),
+                        ("width_p99", Json::Num(p99)),
+                        ("width_mean", Json::Num(mean)),
+                    ])
+                },
             ),
             (
                 "faults",
@@ -624,11 +783,7 @@ impl Service {
     /// serving loop records when each line was read, so `deadline_ms`
     /// budgets cover the wait in the batch window).
     fn run_batch_at(&self, lines: Vec<(String, Instant)>) -> Vec<Json> {
-        if lines.is_empty() {
-            return Vec::new();
-        }
-        self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        par_map(lines, self.cfg.workers, |(l, t)| self.respond_at(&l, t))
+        self.respond_batch(lines, self.cfg.workers)
     }
 
     /// The piped serving loop (stdin, `--requests` files): read request
@@ -712,17 +867,7 @@ impl Service {
                     self.flush(&mut pending, out)?;
                     self.stats.requests.fetch_add(1, Ordering::Relaxed);
                     self.stats.errors.fetch_add(1, Ordering::Relaxed);
-                    let mut pairs = vec![(
-                        "error",
-                        Json::Str(format!(
-                            "request line exceeds the {} byte cap",
-                            self.cfg.max_line
-                        )),
-                    )];
-                    if let Some(id) = id {
-                        pairs.push(("id", id));
-                    }
-                    writeln!(out, "{}", Json::obj(pairs).compact())
+                    writeln!(out, "{}", self.oversized_error(id).compact())
                         .map_err(|e| format!("write response: {e}"))?;
                     out.flush().map_err(|e| format!("flush responses: {e}"))?;
                 }
@@ -765,6 +910,59 @@ impl Service {
         out.flush().map_err(|e| format!("flush responses: {e}"))
     }
 
+    /// The bounded cap-exceeded error for one oversized request line
+    /// (id already salvaged from the retained prefix). Counting is the
+    /// caller's job — the two framing layers detect oversize at
+    /// different points in their read loops.
+    fn oversized_error(&self, id: Option<Json>) -> Json {
+        let mut pairs = vec![(
+            "error",
+            Json::Str(format!("request line exceeds the {} byte cap", self.cfg.max_line)),
+        )];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Reactor framing hook: count + render the oversized-line error,
+    /// salvaging the id from the retained prefix.
+    pub(crate) fn oversized_line(&self, prefix: &[u8]) -> Json {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        self.oversized_error(salvage_id(prefix))
+    }
+
+    /// Reactor backpressure hook: count + render the shed response for
+    /// one request line dropped by the bounded global queue or a
+    /// connection's write-buffer cap (same response either way — the
+    /// client's remedy is identical: back off and retry).
+    pub(crate) fn shed_line(&self, line: &str) -> Json {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
+        self.shed_response(id)
+    }
+
+    /// The connection-count guard response both TCP transports answer
+    /// (and then close) with above `max_connections` concurrent
+    /// connections. Counts the shed.
+    pub(crate) fn conn_guard_response(&self, max_connections: usize) -> Json {
+        self.note_shed();
+        Json::obj(vec![
+            (
+                "error",
+                Json::Str(format!(
+                    "overloaded: server at capacity ({max_connections} concurrent \
+                     connections)"
+                )),
+            ),
+            ("reason", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Num(RETRY_AFTER_MS as f64)),
+        ])
+    }
+
     /// The bounded-queue shed response: the `"reason": "overloaded"` +
     /// `retry_after_ms` contract chaos tests pin.
     fn shed_response(&self, id: Option<Json>) -> Json {
@@ -785,20 +983,13 @@ impl Service {
         Json::obj(pairs)
     }
 
-    /// Aggregate accounting so far. Latency percentiles come from the
-    /// bounded sample buffer (exact below [`LATENCY_CAP`] requests,
-    /// uniformly subsampled beyond).
+    /// Aggregate accounting so far. Latency and formed-batch-width
+    /// percentiles come from their bounded sample buffers (exact below
+    /// [`LATENCY_CAP`] observations, uniformly subsampled beyond).
     pub fn summary(&self) -> ServiceSummary {
-        let mut lat = locked(&self.stats.latencies_us).samples.clone();
-        lat.sort_by(f64::total_cmp);
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[(((lat.len() - 1) as f64) * p).round() as usize]
-            }
-        };
-        let mean = if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+        let (latency_p50_us, latency_p99_us, latency_mean_us) =
+            percentiles(&self.stats.latencies_us);
+        let (batch_p50, batch_p99, batch_mean) = percentiles(&self.stats.batch_widths);
         // min extraction time over timed extractions only; cache hits
         // were Sample::Cached markers and never entered the floor
         let min_extract_us = locked(&self.stats.min_extract_s).map(|s| s * 1e6);
@@ -811,9 +1002,9 @@ impl Service {
             cache_misses: cache.misses(),
             cache_evictions: cache.evictions(),
             distinct_kernels: cache.len(),
-            latency_p50_us: pct(0.50),
-            latency_p99_us: pct(0.99),
-            latency_mean_us: mean,
+            latency_p50_us,
+            latency_p99_us,
+            latency_mean_us,
             min_extract_us,
             shed: self.stats.shed.load(Ordering::Relaxed),
             deadline_expired: self.stats.deadline_expired.load(Ordering::Relaxed),
@@ -821,8 +1012,25 @@ impl Service {
             conn_aborted: self.stats.conn_aborted.load(Ordering::Relaxed),
             conn_slowed: self.stats.conn_slowed.load(Ordering::Relaxed),
             quarantined: self.engine.quarantined_total(),
+            accept_errors: self.stats.accept_errors.load(Ordering::Relaxed),
+            accept_backoffs: self.stats.accept_backoffs.load(Ordering::Relaxed),
+            queue_depth: self.stats.queue_depth.load(Ordering::Relaxed),
+            batch_p50,
+            batch_p99,
+            batch_mean,
         }
     }
+}
+
+/// (p50, p99, mean) over a bounded sample buffer; zeros when empty.
+fn percentiles(buf: &Mutex<LatencyBuf>) -> (f64, f64, f64) {
+    let mut v = locked(buf).samples.clone();
+    v.sort_by(f64::total_cmp);
+    if v.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let pct = |p: f64| v[(((v.len() - 1) as f64) * p).round() as usize];
+    (pct(0.50), pct(0.99), v.iter().sum::<f64>() / v.len() as f64)
 }
 
 /// One queued slot of the batched serving loop: a request waiting to
@@ -1423,5 +1631,98 @@ mod tests {
         assert!(cells[0].get("degraded").is_none(), "{r}");
         assert_eq!(cells[1].get("degraded"), Some(&Json::Bool(true)), "{r}");
         assert_eq!(cells[1].get_str("served_by"), Some("k40c"));
+    }
+
+    /// The reactor's rendering path: one formed batch answers exactly
+    /// like the same lines fed through sequential `respond` calls on
+    /// an identical fresh service (same bytes, same hit/miss
+    /// sequence), and records one batch of the right width.
+    #[test]
+    fn respond_batch_matches_sequential_respond_and_records_width() {
+        let svc = toy_service();
+        let reference = toy_service();
+        let lines = [
+            r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#,
+            r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "b"}"#,
+            r#"{"id": 2, "device": "k40c", "kernel": "nope"}"#,
+            r#"not json"#,
+        ];
+        let now = Instant::now();
+        let batch: Vec<(String, Instant)> =
+            lines.iter().map(|l| (l.to_string(), now)).collect();
+        let got = svc.respond_batch(batch, 1);
+        assert_eq!(got.len(), lines.len());
+        for (line, g) in lines.iter().zip(&got) {
+            assert_eq!(g.compact(), reference.respond(line).compact(), "{line}");
+        }
+        let s = svc.summary();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.errors, 2);
+        // exactly one width-4 batch was formed; `respond` never counts
+        // one (the reference saw four width-1 calls through
+        // answer_batch, not respond_batch)
+        assert_eq!((s.batch_p50, s.batch_p99, s.batch_mean), (4.0, 4.0, 4.0));
+        let r = reference.summary();
+        assert_eq!((r.batch_p50, r.batch_p99, r.batch_mean), (0.0, 0.0, 0.0));
+    }
+
+    /// Accept failures always count, but only the first per errno per
+    /// window is printed — with the suppressed repeats annotated on
+    /// the next printed line. A distinct errno logs immediately.
+    #[test]
+    fn accept_errors_count_every_failure_but_rate_limit_the_log() {
+        let svc = toy_service();
+        let reset = || std::io::Error::from_raw_os_error(104); // ECONNRESET
+        let msg = svc.note_accept_error(&reset()).expect("first failure logs");
+        assert!(msg.contains("accept failed"), "{msg}");
+        assert!(svc.note_accept_error(&reset()).is_none(), "repeat is silent");
+        assert!(svc.note_accept_error(&reset()).is_none());
+        let emfile = std::io::Error::from_raw_os_error(24); // EMFILE
+        assert!(
+            svc.note_accept_error(&emfile).is_some(),
+            "a distinct errno is not suppressed by another's window"
+        );
+        assert_eq!(svc.summary().accept_errors, 4, "every failure counted");
+        let h = svc.respond(r#"{"cmd": "health"}"#);
+        assert_eq!(
+            h.get("counters").unwrap().get_f64("accept_errors"),
+            Some(4.0),
+            "{h}"
+        );
+    }
+
+    /// The serving knobs are observable: queue depth/cap, the
+    /// formed-batch width percentiles and the accept-backoff counter
+    /// all surface through health and the summary.
+    #[test]
+    fn queue_and_batch_observability_surfaces_in_health_and_summary() {
+        let svc = toy_service();
+        let now = Instant::now();
+        let batch: Vec<(String, Instant)> = (0..4)
+            .map(|i| {
+                let line =
+                    format!(r#"{{"id": {i}, "device": "k40c", "kernel": "fd5", "case": "a"}}"#);
+                (line, now)
+            })
+            .collect();
+        svc.respond_batch(batch, 1);
+        svc.note_queue_depth(2);
+        svc.note_accept_backoff();
+        let h = svc.respond(r#"{"cmd": "health"}"#);
+        let queue = h.get("queue").unwrap();
+        assert_eq!(queue.get_f64("depth"), Some(2.0), "{h}");
+        assert_eq!(queue.get_f64("cap"), Some(4096.0), "default queue bound: {h}");
+        let widths = h.get("batch").unwrap();
+        assert_eq!(widths.get_f64("width_p50"), Some(4.0), "{h}");
+        assert_eq!(widths.get_f64("width_p99"), Some(4.0), "{h}");
+        assert_eq!(widths.get_f64("width_mean"), Some(4.0), "{h}");
+        assert_eq!(
+            h.get("counters").unwrap().get_f64("accept_backoffs"),
+            Some(1.0),
+            "{h}"
+        );
+        let s = svc.summary();
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.accept_backoffs, 1);
     }
 }

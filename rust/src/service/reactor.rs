@@ -1,0 +1,1408 @@
+//! `reactor` — the event-driven TCP transport: one epoll readiness
+//! loop, nonblocking sockets, and a fixed worker pool pulling *formed
+//! batches* instead of connections.
+//!
+//! The threaded transport ([`super::tcp`]) spends one OS thread per
+//! connection and a 250 ms read-timeout poll per idle socket: a
+//! thousand mostly-idle keep-alive clients cost a thousand parked
+//! threads and four thousand wakeups a second, and the SoA tape
+//! evaluator's batch speedup is only realized when one client happens
+//! to pipeline. Here a single reactor thread owns *every* socket
+//! through one `epoll` instance (raw syscalls, no `libc` — this crate
+//! has no dependencies), frames request lines off nonblocking reads,
+//! and coalesces lines from *many* connections into one
+//! [`Service::respond_batch`] call dispatched to a fixed
+//! [`WorkerPool`](crate::util::executor::WorkerPool):
+//!
+//! * **Batch formation** — pending request lines are dispatched when
+//!   the batch size cap is reached *or* the oldest line has waited
+//!   [`ReactorConfig::batch_ms`] (so a lone conversational client pays
+//!   at most the window in latency, and concurrent narrow clients get
+//!   coalesced into wide `Engine::predict_batch` calls).
+//! * **Ordering** — responses are routed back per-connection in
+//!   arrival order (a sequence number per line, a reorder buffer per
+//!   connection), so each client observes exactly the conversational
+//!   contract the threaded loop provides.
+//! * **Backpressure** — a bounded global formation queue
+//!   ([`super::ServiceConfig::queue_cap`], counting in-flight batches)
+//!   and a per-connection write-buffer cap
+//!   ([`ReactorConfig::write_buf_cap`]) shed with
+//!   `"reason": "overloaded"` instead of growing memory; `EMFILE`/
+//!   `ENFILE` on accept drops a reserve fd to drain one pending
+//!   connection, then disarms accept for a backoff window instead of
+//!   spinning hot on the error.
+//! * **Drain** — `{"cmd": "shutdown"}` stops accepting and reading,
+//!   flushes every response already owed, joins the worker pool, and
+//!   returns the summary — the same deterministic contract as
+//!   [`super::tcp::serve_threaded`].
+//! * **Faults** — the `conn.abort` / `conn.slow` chaos sites behave
+//!   exactly as in the threaded transport: abort drops an accepted
+//!   connection before a byte is served; slow defers the connection's
+//!   first read by the same delay the threaded loop sleeps.
+//!
+//! The raw-epoll core is Linux (x86_64/aarch64) tier-1;
+//! [`supported`] reports availability at runtime and `main.rs` falls
+//! back to the threaded transport elsewhere.
+
+/// Default cross-connection batch-formation window (milliseconds): how
+/// long the oldest pending request line may wait before its batch is
+/// dispatched regardless of width.
+pub const DEFAULT_BATCH_MS: f64 = 2.0;
+
+/// Default per-connection write-buffer cap (bytes): responses owed to
+/// a client that never reads are bounded; further request lines from
+/// that connection shed with `"reason": "overloaded"`.
+pub const DEFAULT_WRITE_BUF_CAP: usize = 256 * 1024;
+
+/// Event-driven transport configuration (the service-level knobs —
+/// queue bound, line cap, extraction — live in
+/// [`super::ServiceConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorConfig {
+    /// concurrent-connection guard (same contract as the threaded
+    /// transport's cap: above it a connection is answered with one
+    /// overload error line and closed)
+    pub max_conns: usize,
+    /// batch-formation latency window, milliseconds
+    pub batch_ms: f64,
+    /// batch-formation size cap (requests per formed batch)
+    pub batch_cap: usize,
+    /// fixed worker-pool size (defaults to one per core)
+    pub workers: usize,
+    /// per-connection write-buffer cap, bytes
+    pub write_buf_cap: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_conns: super::tcp::DEFAULT_MAX_CONNECTIONS,
+            batch_ms: DEFAULT_BATCH_MS,
+            batch_cap: 64,
+            workers: crate::util::executor::default_workers(),
+            write_buf_cap: DEFAULT_WRITE_BUF_CAP,
+        }
+    }
+}
+
+/// Is the epoll reactor available on this target?
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn supported() -> bool {
+    true
+}
+
+/// Is the epoll reactor available on this target?
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn supported() -> bool {
+    false
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use imp::serve_reactor;
+
+/// Portable stub: the raw-epoll reactor needs Linux syscall numbers;
+/// other targets keep the threaded transport.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn serve_reactor(
+    _svc: &std::sync::Arc<super::Service>,
+    _listener: std::net::TcpListener,
+    _cfg: ReactorConfig,
+) -> Result<crate::report::ServiceSummary, String> {
+    Err("the epoll reactor transport requires Linux on x86_64/aarch64; \
+         run with --transport threaded"
+        .into())
+}
+
+/// Thin, `libc`-free epoll bindings: the four syscalls the reactor
+/// needs (`epoll_create1`, `epoll_ctl`, `epoll_pwait`, `close`) issued
+/// through inline assembly. Everything else — sockets, accept, the
+/// worker wake channel — goes through `std`, so this is the entire
+/// unsafe surface of the transport.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    /// readable (or a peer closed its write half)
+    pub const EPOLLIN: u32 = 0x1;
+    /// writable
+    pub const EPOLLOUT: u32 = 0x4;
+    /// error condition (always reported; treated as readable so the
+    /// read path observes and classifies the failure)
+    pub const EPOLLERR: u32 = 0x8;
+    /// hangup (always reported; treated as readable so the read path
+    /// observes EOF)
+    pub const EPOLLHUP: u32 = 0x10;
+
+    const EPOLL_CTL_ADD: usize = 1;
+    const EPOLL_CTL_DEL: usize = 2;
+    const EPOLL_CTL_MOD: usize = 3;
+    const EPOLL_CLOEXEC: usize = 0x8_0000;
+    const EINTR: isize = 4;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const CLOSE: usize = 3;
+        pub const EPOLL_CTL: usize = 233;
+        pub const EPOLL_PWAIT: usize = 281;
+        pub const EPOLL_CREATE1: usize = 291;
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const EPOLL_CREATE1: usize = 20;
+        pub const EPOLL_CTL: usize = 21;
+        pub const EPOLL_PWAIT: usize = 22;
+        pub const CLOSE: usize = 57;
+    }
+
+    /// One readiness record. x86_64's kernel ABI packs this struct
+    /// (12 bytes); every other architecture pads it to 16. Fields are
+    /// only ever accessed by value-copy, which is safe on a packed
+    /// struct.
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    impl EpollEvent {
+        pub fn zeroed() -> EpollEvent {
+            EpollEvent { events: 0, data: 0 }
+        }
+
+        pub fn events(self) -> u32 {
+            self.events
+        }
+
+        pub fn data(self) -> u64 {
+            self.data
+        }
+    }
+
+    /// Issue one raw 5-argument syscall; returns the kernel's raw
+    /// result (negative values in `[-4095, -1]` are `-errno`).
+    fn syscall(nr: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize) -> isize {
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the syscall instruction with the Linux x86_64 calling
+        // convention (number in rax, args in rdi/rsi/rdx/r10/r8; the
+        // kernel clobbers rcx and r11, declared below). All pointers
+        // passed by callers in this module reference live memory for
+        // the duration of the call.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") nr as isize => ret,
+                in("rdi") a1,
+                in("rsi") a2,
+                in("rdx") a3,
+                in("r10") a4,
+                in("r8") a5,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `svc #0` with the Linux aarch64 calling convention
+        // (number in x8, args in x0..x4, result in x0; no other
+        // registers clobbered). All pointers passed by callers in this
+        // module reference live memory for the duration of the call.
+        unsafe {
+            std::arch::asm!(
+                "svc #0",
+                in("x8") nr,
+                inlateout("x0") a1 => ret,
+                in("x1") a2,
+                in("x2") a3,
+                in("x3") a4,
+                in("x4") a5,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    fn check(ret: isize, what: &str) -> Result<usize, String> {
+        if ret < 0 {
+            Err(format!("{what} failed (errno {})", -ret))
+        } else {
+            Ok(ret as usize)
+        }
+    }
+
+    /// An owned epoll instance (closed on drop).
+    pub struct Epoll {
+        fd: i32,
+    }
+
+    impl Epoll {
+        pub fn new() -> Result<Epoll, String> {
+            let fd = check(
+                syscall(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0),
+                "epoll_create1",
+            )?;
+            Ok(Epoll { fd: fd as i32 })
+        }
+
+        fn ctl(&self, op: usize, fd: i32, events: u32, data: u64) -> Result<(), String> {
+            let ev = EpollEvent { events, data };
+            check(
+                syscall(
+                    nr::EPOLL_CTL,
+                    self.fd as usize,
+                    op,
+                    fd as usize,
+                    // DEL ignores the event on any kernel this runs on,
+                    // but passing a live pointer is valid everywhere
+                    &ev as *const EpollEvent as usize,
+                    0,
+                ),
+                "epoll_ctl",
+            )
+            .map(|_| ())
+        }
+
+        pub fn add(&self, fd: i32, events: u32, data: u64) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_ADD, fd, events, data)
+        }
+
+        pub fn modify(&self, fd: i32, events: u32, data: u64) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_MOD, fd, events, data)
+        }
+
+        pub fn del(&self, fd: i32) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Wait for readiness; `timeout_ms < 0` blocks indefinitely.
+        /// Interrupted waits retry. Returns how many events were
+        /// written into `buf`.
+        pub fn wait(&self, buf: &mut [EpollEvent], timeout_ms: i32) -> Result<usize, String> {
+            loop {
+                let ret = syscall(
+                    nr::EPOLL_PWAIT,
+                    self.fd as usize,
+                    buf.as_mut_ptr() as usize,
+                    buf.len(),
+                    timeout_ms as isize as usize,
+                    // NULL sigmask: plain epoll_wait semantics (the
+                    // kernel never reads sigsetsize when the mask is
+                    // NULL, so the 5-argument form suffices)
+                    0,
+                );
+                if ret == -EINTR {
+                    continue;
+                }
+                return check(ret, "epoll_wait");
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            let _ = syscall(nr::CLOSE, self.fd as usize, 0, 0, 0, 0);
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::super::{locked, Service};
+    use super::sys::{Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT};
+    use super::ReactorConfig;
+    use crate::report::ServiceSummary;
+    use crate::util::executor::WorkerPool;
+    use crate::util::json::Json;
+    use std::collections::{BTreeMap, VecDeque};
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    /// How long the shutdown drain waits for in-flight batches and
+    /// unflushed responses before giving up (a hostile client that
+    /// never reads must not pin the listener forever).
+    const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+    /// How long accept stays disarmed after fd exhaustion.
+    const ACCEPT_BACKOFF: Duration = Duration::from_millis(100);
+
+    /// Readiness events drained per `epoll_wait`, and the accept-loop
+    /// bound per listener event (level-triggered epoll re-arms, so
+    /// bounding both only buys fairness, never loses wakeups).
+    const MAX_EVENTS: usize = 256;
+
+    /// Per-`read` chunk size, and the bound on how far one connection
+    /// may over-read past the line cap before the framer resyncs.
+    const READ_CHUNK: usize = 16 * 1024;
+
+    /// Socket-read rounds per readiness event: fairness across
+    /// connections (a firehose client yields after this many chunks;
+    /// level-triggering re-reports it immediately).
+    const READ_ROUNDS: usize = 16;
+
+    /// Keep at most this much already-written prefix in a connection's
+    /// write buffer before compacting it.
+    const WRITE_COMPACT: usize = 64 * 1024;
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+
+    /// Epoll token for a connection slot: the slot index (offset past
+    /// the two fixed tokens) plus a generation stamp so a stale kernel
+    /// event for a closed connection can never alias its slot's next
+    /// tenant.
+    fn token_for(slot: usize, gen: u32) -> u64 {
+        ((slot as u64) + 2) | ((gen as u64) << 32)
+    }
+
+    /// One request line waiting in (or dispatched from) the global
+    /// formation queue.
+    struct Item {
+        slot: usize,
+        gen: u32,
+        /// per-connection arrival index (routes the response back in
+        /// conversational order)
+        seq: u64,
+        line: String,
+        /// when the line was framed off the socket (`deadline_ms`
+        /// budgets are measured from here, so formation-window wait
+        /// counts against them — same rule as the batched stdin loop)
+        at: Instant,
+    }
+
+    /// One rendered response traveling back from a pool worker.
+    struct Done {
+        slot: usize,
+        gen: u32,
+        seq: u64,
+        /// compact JSON + trailing newline, ready for the socket
+        text: String,
+    }
+
+    /// Worker→reactor completion channel: a locked vector plus a
+    /// nonblocking socketpair byte to wake the epoll wait. Completions
+    /// are pushed *before* the wake byte is written, and a full wake
+    /// buffer means the reactor is already waking — no completion can
+    /// be stranded.
+    struct Shared {
+        done: Mutex<Vec<Done>>,
+        wake_tx: UnixStream,
+    }
+
+    impl Shared {
+        fn notify(&self) {
+            let _ = (&self.wake_tx).write(&[1u8]);
+        }
+    }
+
+    /// One framed unit off a connection's read buffer.
+    enum LineEvent {
+        Line(String),
+        /// line blew the cap; the retained prefix salvages the id
+        Oversized(Vec<u8>),
+        BadUtf8,
+    }
+
+    /// One nonblocking connection's state.
+    struct Conn {
+        stream: TcpStream,
+        gen: u32,
+        /// unframed bytes read off the socket
+        rbuf: Vec<u8>,
+        /// prefix of `rbuf` already scanned for a newline
+        scanned: usize,
+        /// inside the tail of an oversized line, dropping to the next
+        /// newline
+        discarding: bool,
+        /// rendered responses being written (prefix `wpos` already
+        /// sent)
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// next arrival index to assign to a framed line
+        next_seq: u64,
+        /// next arrival index owed to the socket
+        next_write: u64,
+        /// completed responses waiting for their turn (keyed by seq)
+        done: BTreeMap<u64, String>,
+        /// bytes held in `done` (counted toward the write-buffer cap)
+        done_bytes: usize,
+        /// lines owned by the pipeline (formation queue + workers)
+        awaiting: usize,
+        eof: bool,
+        dead: bool,
+        /// `conn.slow` fault: no reads before this instant
+        defer_until: Option<Instant>,
+        /// interest bits currently registered with epoll
+        interest: u32,
+    }
+
+    impl Conn {
+        /// Bytes owed to this client but not yet on the wire.
+        fn backlog(&self) -> usize {
+            (self.wbuf.len() - self.wpos) + self.done_bytes
+        }
+    }
+
+    /// Serve `listener` with the epoll reactor until a shutdown request
+    /// drains it. Returns the service summary once every in-flight
+    /// batch has been handled and the worker pool joined.
+    pub fn serve_reactor(
+        svc: &Arc<Service>,
+        listener: TcpListener,
+        cfg: ReactorConfig,
+    ) -> Result<ServiceSummary, String> {
+        let mut reactor = Reactor::new(svc, listener, cfg)?;
+        reactor.run();
+        if let Some(pool) = reactor.pool.take() {
+            pool.join();
+        }
+        Ok(reactor.svc.summary())
+    }
+
+    struct Reactor {
+        svc: Arc<Service>,
+        cfg: ReactorConfig,
+        epoll: Epoll,
+        listener: TcpListener,
+        /// is the listener currently registered for EPOLLIN?
+        listener_armed: bool,
+        /// fd-exhaustion backoff: accept re-arms at this instant
+        accept_resume: Option<Instant>,
+        /// reserve fd dropped on EMFILE/ENFILE so one pending
+        /// connection can be accepted and shed instead of sitting in
+        /// the backlog retrying forever
+        reserve: Option<std::fs::File>,
+        wake_rx: UnixStream,
+        shared: Arc<Shared>,
+        pool: Option<WorkerPool<Vec<Item>>>,
+        /// connection slab (slot indices are epoll tokens)
+        conns: Vec<Option<Conn>>,
+        free: Vec<usize>,
+        n_conns: usize,
+        /// generation stamp for slot reuse
+        gen: u32,
+        /// global cross-connection formation queue
+        pending: VecDeque<Item>,
+        /// lines dispatched to the pool, not yet completed
+        inflight: usize,
+        draining: bool,
+        drain_deadline: Option<Instant>,
+    }
+
+    impl Reactor {
+        fn new(
+            svc: &Arc<Service>,
+            listener: TcpListener,
+            cfg: ReactorConfig,
+        ) -> Result<Reactor, String> {
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| format!("listener nonblocking: {e}"))?;
+            let epoll = Epoll::new()?;
+            let (wake_tx, wake_rx) =
+                UnixStream::pair().map_err(|e| format!("wake channel: {e}"))?;
+            wake_tx
+                .set_nonblocking(true)
+                .map_err(|e| format!("wake channel: {e}"))?;
+            wake_rx
+                .set_nonblocking(true)
+                .map_err(|e| format!("wake channel: {e}"))?;
+            epoll.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+            epoll.add(wake_rx.as_raw_fd(), EPOLLIN, TOKEN_WAKE)?;
+            let shared = Arc::new(Shared { done: Mutex::new(Vec::new()), wake_tx });
+            let pool = {
+                let svc = Arc::clone(svc);
+                let shared = Arc::clone(&shared);
+                // workers get whole formed batches; parallelism is
+                // across batches, so the engine call inside runs
+                // single-worker
+                WorkerPool::new(cfg.workers.max(1), move |batch: Vec<Item>| {
+                    let keys: Vec<(usize, u32, u64)> =
+                        batch.iter().map(|i| (i.slot, i.gen, i.seq)).collect();
+                    let lines: Vec<(String, Instant)> =
+                        batch.into_iter().map(|i| (i.line, i.at)).collect();
+                    let responses = svc.respond_batch(lines, 1);
+                    let mut done = locked(&shared.done);
+                    for ((slot, gen, seq), resp) in keys.into_iter().zip(responses) {
+                        done.push(Done {
+                            slot,
+                            gen,
+                            seq,
+                            text: format!("{}\n", resp.compact()),
+                        });
+                    }
+                    drop(done);
+                    shared.notify();
+                })
+            };
+            Ok(Reactor {
+                svc: Arc::clone(svc),
+                cfg,
+                epoll,
+                listener,
+                listener_armed: true,
+                accept_resume: None,
+                reserve: std::fs::File::open("/dev/null").ok(),
+                wake_rx,
+                shared,
+                pool: Some(pool),
+                conns: Vec::new(),
+                free: Vec::new(),
+                n_conns: 0,
+                gen: 0,
+                pending: VecDeque::new(),
+                inflight: 0,
+                draining: false,
+                drain_deadline: None,
+            })
+        }
+
+        fn run(&mut self) {
+            let mut events = [EpollEvent::zeroed(); MAX_EVENTS];
+            loop {
+                self.form_batches();
+                self.svc.note_queue_depth(self.pending.len());
+                if self.svc.shutdown_requested() && !self.draining {
+                    self.begin_drain();
+                }
+                if self.drain_finished() {
+                    break;
+                }
+                let timeout = self.timeout_ms();
+                let n = match self.epoll.wait(&mut events, timeout) {
+                    Ok(n) => n,
+                    Err(e) => {
+                        eprintln!("uniperf serve: reactor wait failed: {e}");
+                        break;
+                    }
+                };
+                for ev in events.iter().take(n) {
+                    match ev.data() {
+                        TOKEN_LISTENER => self.accept_ready(),
+                        TOKEN_WAKE => self.drain_wake(),
+                        token => self.conn_event(token, ev.events()),
+                    }
+                }
+                self.apply_completions();
+                self.resume_timers();
+            }
+            // responses completed during the final wait still land
+            self.apply_completions();
+        }
+
+        /// Dispatch formed batches: size cap reached, the oldest line's
+        /// window expired, or draining (drain answers everything read).
+        fn form_batches(&mut self) {
+            let window = Duration::from_secs_f64(self.cfg.batch_ms.max(0.0) / 1e3);
+            let cap = self.cfg.batch_cap.max(1);
+            loop {
+                let n = self.pending.len();
+                if n == 0 {
+                    return;
+                }
+                let window_due = match self.pending.front() {
+                    Some(i) => i.at.elapsed() >= window,
+                    None => false,
+                };
+                if n < cap && !window_due && !self.draining {
+                    return;
+                }
+                let batch: Vec<Item> = self.pending.drain(..n.min(cap)).collect();
+                self.inflight += batch.len();
+                // hot reload between dispatched batches — the same
+                // cadence the threaded loop polls at
+                self.svc.reload_tick();
+                if let Some(pool) = &self.pool {
+                    pool.submit(batch);
+                }
+            }
+        }
+
+        /// Next wait timeout: the earliest of the formation window, the
+        /// accept-backoff resume, any `conn.slow` defer, and a 50 ms
+        /// drain poll; `-1` (block) when nothing is timed.
+        fn timeout_ms(&self) -> i32 {
+            fn min_opt(next: &mut Option<Instant>, cand: Instant) {
+                let better = match *next {
+                    Some(n) => cand < n,
+                    None => true,
+                };
+                if better {
+                    *next = Some(cand);
+                }
+            }
+            let mut next: Option<Instant> = None;
+            if let Some(item) = self.pending.front() {
+                let window = Duration::from_secs_f64(self.cfg.batch_ms.max(0.0) / 1e3);
+                min_opt(&mut next, item.at + window);
+            }
+            if let Some(t) = self.accept_resume {
+                min_opt(&mut next, t);
+            }
+            for conn in self.conns.iter().flatten() {
+                if let Some(t) = conn.defer_until {
+                    min_opt(&mut next, t);
+                }
+            }
+            if self.draining {
+                min_opt(&mut next, Instant::now() + Duration::from_millis(50));
+            }
+            match next {
+                None => -1,
+                Some(next) => {
+                    let d = next.saturating_duration_since(Instant::now());
+                    let ms = (d.as_nanos() + 999_999) / 1_000_000;
+                    ms.min(i32::MAX as u128) as i32
+                }
+            }
+        }
+
+        /// Drain the wake channel (the byte is a doorbell, not data).
+        fn drain_wake(&mut self) {
+            let mut buf = [0u8; 64];
+            loop {
+                match (&self.wake_rx).read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        fn accept_ready(&mut self) {
+            if self.draining || !self.listener_armed || self.accept_resume.is_some() {
+                return;
+            }
+            for _ in 0..MAX_EVENTS {
+                let stream = match self.listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        let fd_exhausted = matches!(e.raw_os_error(), Some(23) | Some(24));
+                        if let Some(msg) = self.svc.note_accept_error(&e) {
+                            eprintln!("uniperf serve: {msg}");
+                        }
+                        if fd_exhausted {
+                            // EMFILE/ENFILE: drop the reserve fd so one
+                            // backlogged connection can be accepted and
+                            // shed (instead of the client hanging in the
+                            // SYN queue), then disarm accept for a
+                            // backoff window instead of spinning hot
+                            self.reserve = None;
+                            if let Ok((s, _)) = self.listener.accept() {
+                                drop(s);
+                            }
+                            self.reserve = std::fs::File::open("/dev/null").ok();
+                            self.svc.note_accept_backoff();
+                            self.accept_resume = Some(Instant::now() + ACCEPT_BACKOFF);
+                            self.set_listener_interest(false);
+                        }
+                        break;
+                    }
+                };
+                self.install(stream);
+                if self.svc.shutdown_requested() {
+                    break;
+                }
+            }
+        }
+
+        /// Register one accepted connection: fault sites, reload poll
+        /// and the connection-count guard first (identical order to the
+        /// threaded accept path), then the slab slot and epoll
+        /// registration.
+        fn install(&mut self, stream: TcpStream) {
+            // chaos: conn.abort drops the connection before a byte is
+            // served — clients observe a reset, accounting is untouched
+            if let Some(plan) = self.svc.fault_plan() {
+                if plan.should_inject("conn.abort") {
+                    self.svc.note_conn_aborted();
+                    return;
+                }
+            }
+            if let Some(Err(e)) = self.svc.poll_reload() {
+                eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}");
+            }
+            let cap = self.cfg.max_conns.max(1);
+            if self.n_conns >= cap {
+                // guard: one overload line, blockingly (accepted
+                // sockets do not inherit the listener's nonblocking
+                // flag), then close
+                let mut s = stream;
+                let resp = self.svc.conn_guard_response(cap);
+                let _ = writeln!(s, "{}", resp.compact());
+                return;
+            }
+            // chaos: conn.slow defers this connection's first read by
+            // the same delay the threaded transport sleeps
+            let mut defer_until = None;
+            if let Some(plan) = self.svc.fault_plan() {
+                if plan.should_inject("conn.slow") {
+                    self.svc.note_conn_slowed();
+                    defer_until = Some(Instant::now() + super::super::tcp::SLOW_CONN_DELAY);
+                }
+            }
+            let _ = stream.set_nodelay(true);
+            if let Err(e) = stream.set_nonblocking(true) {
+                eprintln!("uniperf serve: connection setup failed: {e}");
+                return;
+            }
+            self.gen = self.gen.wrapping_add(1);
+            let gen = self.gen;
+            let slot = match self.free.pop() {
+                Some(s) => s,
+                None => {
+                    self.conns.push(None);
+                    self.conns.len() - 1
+                }
+            };
+            let interest = if defer_until.is_some() { 0 } else { EPOLLIN };
+            if let Err(e) = self.epoll.add(stream.as_raw_fd(), interest, token_for(slot, gen)) {
+                eprintln!("uniperf serve: connection registration failed: {e}");
+                self.free.push(slot);
+                return;
+            }
+            self.conns[slot] = Some(Conn {
+                stream,
+                gen,
+                rbuf: Vec::new(),
+                scanned: 0,
+                discarding: false,
+                wbuf: Vec::new(),
+                wpos: 0,
+                next_seq: 0,
+                next_write: 0,
+                done: BTreeMap::new(),
+                done_bytes: 0,
+                awaiting: 0,
+                eof: false,
+                dead: false,
+                defer_until,
+                interest,
+            });
+            self.n_conns += 1;
+        }
+
+        fn conn_event(&mut self, token: u64, bits: u32) {
+            let slot = match (token & 0xFFFF_FFFF) as usize {
+                s if s >= 2 => s - 2,
+                _ => return,
+            };
+            let gen = (token >> 32) as u32;
+            let live = match self.conns.get(slot) {
+                Some(Some(c)) => c.gen == gen && !c.dead,
+                _ => false,
+            };
+            if !live {
+                // stale event for a closed generation
+                return;
+            }
+            if bits & (EPOLLIN | EPOLLHUP | EPOLLERR) != 0 {
+                self.do_read(slot);
+            } else if bits & EPOLLOUT != 0 {
+                self.pump(slot);
+            }
+        }
+
+        fn do_read(&mut self, slot: usize) {
+            let max_line = self.svc.config().max_line;
+            let read = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(conn) if !conn.dead && conn.defer_until.is_none() => {
+                    Some(drain_socket(conn, max_line))
+                }
+                _ => None,
+            };
+            let (events, hard_error) = match read {
+                Some(r) => r,
+                None => return,
+            };
+            for ev in events {
+                match ev {
+                    LineEvent::Line(line) => self.enqueue_line(slot, line),
+                    LineEvent::Oversized(prefix) => {
+                        // counted + rendered by the service (stream
+                        // resyncs at the next newline, same as the
+                        // buffered framer)
+                        let resp = self.svc.oversized_line(&prefix);
+                        self.complete_local(slot, resp);
+                    }
+                    LineEvent::BadUtf8 => {
+                        // the buffered framer treats this as a
+                        // connection-fatal stream error; match it
+                        eprintln!(
+                            "uniperf serve: connection error: read request stream: \
+                             request line is not valid UTF-8"
+                        );
+                        self.kill_conn(slot);
+                        return;
+                    }
+                }
+            }
+            if let Some(e) = hard_error {
+                eprintln!("uniperf serve: connection error: read request stream: {e}");
+                self.kill_conn(slot);
+                return;
+            }
+            self.pump(slot);
+        }
+
+        /// Queue one framed request line into the global formation
+        /// queue, or shed it when the queue (counting in-flight lines)
+        /// or this connection's write backlog is at cap.
+        fn enqueue_line(&mut self, slot: usize, line: String) {
+            if line.trim().is_empty() {
+                return;
+            }
+            let queue_cap = self.svc.config().queue_cap.max(1);
+            let write_cap = self.cfg.write_buf_cap.max(1);
+            let over_write = match self.conns.get(slot).and_then(Option::as_ref) {
+                Some(c) => c.backlog() >= write_cap,
+                None => return,
+            };
+            if over_write || self.pending.len() + self.inflight >= queue_cap {
+                let resp = self.svc.shed_line(&line);
+                self.complete_local(slot, resp);
+                return;
+            }
+            let (gen, seq) = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(c) => {
+                    let seq = c.next_seq;
+                    c.next_seq += 1;
+                    c.awaiting += 1;
+                    (c.gen, seq)
+                }
+                None => return,
+            };
+            self.pending.push_back(Item { slot, gen, seq, line, at: Instant::now() });
+        }
+
+        /// Complete one response that never went through the pool
+        /// (shed, oversized): it still consumes a sequence number so
+        /// the per-connection stream order is preserved.
+        fn complete_local(&mut self, slot: usize, resp: Json) {
+            if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                let text = format!("{}\n", resp.compact());
+                c.done_bytes += text.len();
+                c.done.insert(seq, text);
+            }
+            self.pump(slot);
+        }
+
+        /// Route completed pool responses back to their connections.
+        fn apply_completions(&mut self) {
+            let done = std::mem::take(&mut *locked(&self.shared.done));
+            if done.is_empty() {
+                return;
+            }
+            let mut touched: Vec<usize> = Vec::new();
+            for d in done {
+                self.inflight = self.inflight.saturating_sub(1);
+                let freed = match self.conns.get_mut(d.slot).and_then(Option::as_mut) {
+                    Some(c) if c.gen == d.gen => {
+                        c.awaiting = c.awaiting.saturating_sub(1);
+                        if c.dead {
+                            // the client is gone; the slot was only
+                            // held so its in-flight work could land
+                            c.awaiting == 0
+                        } else {
+                            c.done_bytes += d.text.len();
+                            c.done.insert(d.seq, d.text);
+                            if !touched.contains(&d.slot) {
+                                touched.push(d.slot);
+                            }
+                            false
+                        }
+                    }
+                    _ => false,
+                };
+                if freed {
+                    self.free_slot(d.slot);
+                }
+            }
+            for slot in touched {
+                self.pump(slot);
+            }
+        }
+
+        /// Move in-order completed responses into the write buffer,
+        /// flush what the socket accepts, close when everything owed
+        /// has been written to an EOF'd connection.
+        fn pump(&mut self, slot: usize) {
+            let mut kill = false;
+            {
+                let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    Some(c) => c,
+                    None => return,
+                };
+                if conn.dead {
+                    return;
+                }
+                while let Some(text) = conn.done.remove(&conn.next_write) {
+                    conn.done_bytes -= text.len();
+                    conn.next_write += 1;
+                    conn.wbuf.extend_from_slice(text.as_bytes());
+                }
+                while conn.wpos < conn.wbuf.len() {
+                    match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                        Ok(0) => {
+                            kill = true;
+                            break;
+                        }
+                        Ok(n) => conn.wpos += n,
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            kill = true;
+                            break;
+                        }
+                    }
+                }
+                if conn.wpos >= conn.wbuf.len() {
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                } else if conn.wpos > WRITE_COMPACT {
+                    conn.wbuf.drain(..conn.wpos);
+                    conn.wpos = 0;
+                }
+                if !kill
+                    && conn.eof
+                    && conn.awaiting == 0
+                    && conn.done.is_empty()
+                    && conn.wbuf.is_empty()
+                {
+                    // conversational contract fulfilled: every line
+                    // read has been answered and flushed
+                    kill = true;
+                }
+            }
+            if kill {
+                self.kill_conn(slot);
+            } else {
+                self.update_interest(slot);
+            }
+        }
+
+        /// Tear one connection down. The slot is only recycled once no
+        /// in-flight batch still references it (the generation stamp
+        /// protects the interim).
+        fn kill_conn(&mut self, slot: usize) {
+            let gen = {
+                let conn = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    Some(c) => c,
+                    None => return,
+                };
+                if conn.dead {
+                    return;
+                }
+                conn.dead = true;
+                let _ = self.epoll.del(conn.stream.as_raw_fd());
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                conn.gen
+            };
+            // abandon this connection's queued-but-unformed lines
+            let mut dropped = 0usize;
+            self.pending.retain(|i| {
+                if i.slot == slot && i.gen == gen {
+                    dropped += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            let awaiting = match self.conns.get_mut(slot).and_then(Option::as_mut) {
+                Some(c) => {
+                    c.awaiting = c.awaiting.saturating_sub(dropped);
+                    c.awaiting
+                }
+                None => 0,
+            };
+            if awaiting == 0 {
+                self.free_slot(slot);
+            }
+        }
+
+        fn free_slot(&mut self, slot: usize) {
+            if self.conns.get_mut(slot).and_then(Option::take).is_some() {
+                self.n_conns = self.n_conns.saturating_sub(1);
+                self.free.push(slot);
+            }
+        }
+
+        /// Reconcile a connection's epoll interest with its state:
+        /// readable unless EOF'd, draining, deferred, or over the
+        /// write-buffer cap (read backpressure); writable while bytes
+        /// are owed.
+        fn update_interest(&mut self, slot: usize) {
+            let (fd, gen, want, have) = {
+                let conn = match self.conns.get(slot).and_then(Option::as_ref) {
+                    Some(c) if !c.dead => c,
+                    _ => return,
+                };
+                let mut want = 0u32;
+                if !conn.eof
+                    && !self.draining
+                    && conn.defer_until.is_none()
+                    && conn.backlog() < self.cfg.write_buf_cap.max(1)
+                {
+                    want |= EPOLLIN;
+                }
+                if conn.wpos < conn.wbuf.len() {
+                    want |= EPOLLOUT;
+                }
+                (conn.stream.as_raw_fd(), conn.gen, want, conn.interest)
+            };
+            if want != have && self.epoll.modify(fd, want, token_for(slot, gen)).is_ok() {
+                if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    c.interest = want;
+                }
+            }
+        }
+
+        fn set_listener_interest(&mut self, on: bool) {
+            if on == self.listener_armed {
+                return;
+            }
+            let events = if on { EPOLLIN } else { 0 };
+            if self
+                .epoll
+                .modify(self.listener.as_raw_fd(), events, TOKEN_LISTENER)
+                .is_ok()
+            {
+                self.listener_armed = on;
+            }
+        }
+
+        /// Fire expired timers: re-arm accept after an fd-exhaustion
+        /// backoff, resume reads on `conn.slow`-deferred connections.
+        fn resume_timers(&mut self) {
+            let now = Instant::now();
+            if matches!(self.accept_resume, Some(t) if now >= t) {
+                self.accept_resume = None;
+                self.set_listener_interest(true);
+                self.accept_ready();
+            }
+            let resumed: Vec<usize> = self
+                .conns
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| match c {
+                    Some(c) if !c.dead && matches!(c.defer_until, Some(t) if now >= t) => {
+                        Some(i)
+                    }
+                    _ => None,
+                })
+                .collect();
+            for slot in resumed {
+                if let Some(c) = self.conns.get_mut(slot).and_then(Option::as_mut) {
+                    c.defer_until = None;
+                }
+                self.update_interest(slot);
+                // level-triggered epoll only reports *new* readiness;
+                // bytes that arrived while deferred are already waiting
+                self.do_read(slot);
+            }
+        }
+
+        /// Shutdown requested: stop accepting and reading, dispatch
+        /// everything pending, and wait (bounded) for owed responses to
+        /// flush.
+        fn begin_drain(&mut self) {
+            self.draining = true;
+            self.drain_deadline = Some(Instant::now() + DRAIN_GRACE);
+            self.set_listener_interest(false);
+            for slot in 0..self.conns.len() {
+                self.update_interest(slot);
+            }
+        }
+
+        fn drain_finished(&self) -> bool {
+            if !self.draining {
+                return false;
+            }
+            if matches!(self.drain_deadline, Some(t) if Instant::now() >= t) {
+                // grace expired: a client that never reads its
+                // responses does not get to pin the listener
+                return true;
+            }
+            if !self.pending.is_empty() || self.inflight > 0 {
+                return false;
+            }
+            self.conns.iter().flatten().all(|c| {
+                c.dead || (c.awaiting == 0 && c.done.is_empty() && c.wbuf.len() == c.wpos)
+            })
+        }
+    }
+
+    /// Read every available chunk off one connection (bounded rounds;
+    /// level-triggered epoll re-reports leftovers), then frame complete
+    /// lines. Returns the framed events and a hard error if the socket
+    /// failed mid-read.
+    fn drain_socket(conn: &mut Conn, max_line: usize) -> (Vec<LineEvent>, Option<String>) {
+        let mut hard_error = None;
+        let mut chunk = [0u8; READ_CHUNK];
+        for _ in 0..READ_ROUNDS {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    if conn.rbuf.len() > max_line + READ_CHUNK {
+                        // already provably oversized: resync via the
+                        // framer before buffering more
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    hard_error = Some(format!("{e}"));
+                    break;
+                }
+            }
+        }
+        let mut events = split_lines(conn, max_line);
+        if conn.eof && hard_error.is_none() && !conn.discarding && !conn.rbuf.is_empty() {
+            // a final unterminated line at a clean close is served —
+            // the buffered framer does the same at EOF
+            let buf = std::mem::take(&mut conn.rbuf);
+            conn.scanned = 0;
+            match String::from_utf8(buf) {
+                Ok(s) => events.push(LineEvent::Line(s)),
+                Err(_) => events.push(LineEvent::BadUtf8),
+            }
+        }
+        (events, hard_error)
+    }
+
+    /// Frame complete lines out of `conn.rbuf`. Invariants shared with
+    /// the buffered framer ([`super::super::read_request_line`]): a
+    /// line of exactly `max_line` bytes passes, one byte more is
+    /// answered as oversized with the first `max_line` bytes retained
+    /// for the id echo, and the stream resynchronizes at the next
+    /// newline.
+    fn split_lines(conn: &mut Conn, max_line: usize) -> Vec<LineEvent> {
+        let mut events = Vec::new();
+        loop {
+            let nl = conn.rbuf[conn.scanned..].iter().position(|&b| b == b'\n');
+            match nl {
+                Some(off) => {
+                    let pos = conn.scanned + off;
+                    if conn.discarding {
+                        // tail of an oversized line: drop to the
+                        // newline and resume framing
+                        conn.rbuf.drain(..=pos);
+                        conn.scanned = 0;
+                        conn.discarding = false;
+                        continue;
+                    }
+                    if pos > max_line {
+                        events.push(LineEvent::Oversized(conn.rbuf[..max_line].to_vec()));
+                    } else {
+                        match std::str::from_utf8(&conn.rbuf[..pos]) {
+                            Ok(s) => events.push(LineEvent::Line(s.to_string())),
+                            Err(_) => {
+                                events.push(LineEvent::BadUtf8);
+                                conn.rbuf.clear();
+                                conn.scanned = 0;
+                                return events;
+                            }
+                        }
+                    }
+                    conn.rbuf.drain(..=pos);
+                    conn.scanned = 0;
+                }
+                None => {
+                    if conn.discarding {
+                        conn.rbuf.clear();
+                        conn.scanned = 0;
+                    } else if conn.rbuf.len() > max_line {
+                        events.push(LineEvent::Oversized(conn.rbuf[..max_line].to_vec()));
+                        conn.rbuf.clear();
+                        conn.scanned = 0;
+                        conn.discarding = true;
+                    } else {
+                        conn.scanned = conn.rbuf.len();
+                    }
+                    return events;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(test, target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::super::testutil::toy_store;
+    use super::super::{Service, ServiceConfig};
+    use super::{serve_reactor, sys, ReactorConfig};
+    use crate::gpusim::registry::builtins;
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::Arc;
+
+    fn toy_service() -> Service {
+        let store = toy_store(&[("k40c", 2e-9, 5e-6)]);
+        Service::new(store, builtins().clone(), ServiceConfig::default()).unwrap()
+    }
+
+    fn spawn(
+        svc: &Arc<Service>,
+        cfg: ReactorConfig,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<crate::report::ServiceSummary>) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let svc = Arc::clone(svc);
+        let handle = std::thread::spawn(move || {
+            serve_reactor(&svc, listener, cfg).expect("serve_reactor")
+        });
+        (addr, handle)
+    }
+
+    /// Send `lines` conversationally; return the response lines.
+    fn client(addr: std::net::SocketAddr, lines: &[String]) -> Vec<String> {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut stream = stream;
+        let mut out = Vec::new();
+        for line in lines {
+            writeln!(stream, "{line}").expect("send");
+            stream.flush().expect("flush");
+            let mut resp = String::new();
+            reader.read_line(&mut resp).expect("recv");
+            out.push(resp.trim_end().to_string());
+        }
+        out
+    }
+
+    /// The syscall layer end to end: register, observe readiness with
+    /// both a zero and a blocking-with-data timeout, deregister.
+    #[test]
+    fn epoll_reports_readiness() {
+        use std::os::unix::io::AsRawFd;
+        let ep = sys::Epoll::new().unwrap();
+        let (mut a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        ep.add(b.as_raw_fd(), sys::EPOLLIN, 7).unwrap();
+        let mut evs = [sys::EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0, "nothing readable yet");
+        a.write_all(&[1]).unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].data(), 7);
+        assert_ne!(evs[0].events() & sys::EPOLLIN, 0);
+        // re-arm with different interest, then deregister
+        ep.modify(b.as_raw_fd(), sys::EPOLLIN | sys::EPOLLOUT, 9).unwrap();
+        ep.del(b.as_raw_fd()).unwrap();
+    }
+
+    /// The reactor serves the conversational contract and drains
+    /// deterministically on shutdown, with the same accounting the
+    /// threaded transport produces for this stream.
+    #[test]
+    fn reactor_serves_and_drains_on_shutdown() {
+        let svc = Arc::new(toy_service());
+        let (addr, server) = spawn(&svc, ReactorConfig::default());
+
+        let lines: Vec<String> = (0..4)
+            .map(|i| format!(r#"{{"id": {i}, "device": "k40c", "kernel": "fd5", "case": "a"}}"#))
+            .collect();
+        let responses = client(addr, &lines);
+        assert_eq!(responses.len(), 4);
+        for (i, r) in responses.iter().enumerate() {
+            let j = Json::parse(r).unwrap();
+            assert!(j.get("error").is_none(), "{r}");
+            assert_eq!(j.get_f64("id"), Some(i as f64));
+        }
+
+        let bye = client(addr, &[r#"{"cmd": "shutdown", "id": "drain"}"#.to_string()]);
+        let j = Json::parse(&bye[0]).unwrap();
+        assert_eq!(j.get_str("ok"), Some("shutdown"));
+        let summary = server.join().expect("server thread");
+        assert!(svc.shutdown_requested());
+        assert_eq!(summary.requests, 5);
+        assert_eq!(summary.errors, 0);
+    }
+
+    /// Above the connection cap the reactor answers with the same
+    /// one-line overload error the threaded guard produces, and the
+    /// shed is counted.
+    #[test]
+    fn connection_guard_sheds_over_cap() {
+        let svc = Arc::new(toy_service());
+        let cfg = ReactorConfig { max_conns: 1, ..ReactorConfig::default() };
+        let (addr, server) = spawn(&svc, cfg);
+
+        // first connection occupies the only slot (a request proves it
+        // is fully installed before the second connect)
+        let held = TcpStream::connect(addr).expect("held connect");
+        let mut held_reader = BufReader::new(held.try_clone().unwrap());
+        let mut held = held;
+        writeln!(held, r#"{{"device": "k40c", "kernel": "fd5", "case": "a"}}"#).unwrap();
+        let mut first = String::new();
+        held_reader.read_line(&mut first).unwrap();
+        assert!(Json::parse(first.trim_end()).unwrap().get("error").is_none());
+
+        // second connection: guard response, then close
+        let over = TcpStream::connect(addr).expect("over connect");
+        let mut over_reader = BufReader::new(over);
+        let mut line = String::new();
+        over_reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim_end()).unwrap();
+        assert_eq!(j.get_str("reason"), Some("overloaded"), "{line}");
+        assert!(j.get_str("error").unwrap().contains("at capacity"));
+        let mut rest = String::new();
+        assert_eq!(over_reader.read_line(&mut rest).unwrap(), 0, "guard closes");
+
+        writeln!(held, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut bye = String::new();
+        held_reader.read_line(&mut bye).unwrap();
+        let summary = server.join().expect("server thread");
+        assert_eq!(summary.shed, 1);
+    }
+
+    /// Pipelined lines from one client all come back, in order — the
+    /// reorder buffer and batch formation preserve the stream contract
+    /// even when lines land in different formed batches.
+    #[test]
+    fn pipelined_lines_come_back_in_order() {
+        let svc = Arc::new(toy_service());
+        let cfg = ReactorConfig { batch_cap: 3, ..ReactorConfig::default() };
+        let (addr, server) = spawn(&svc, cfg);
+
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut stream = stream;
+        for i in 0..10 {
+            writeln!(
+                stream,
+                r#"{{"id": {i}, "device": "k40c", "kernel": "fd5", "case": "a"}}"#
+            )
+            .unwrap();
+        }
+        stream.flush().unwrap();
+        for i in 0..10 {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let j = Json::parse(resp.trim_end()).unwrap();
+            assert_eq!(j.get_f64("id"), Some(i as f64), "{resp}");
+        }
+
+        writeln!(stream, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        let summary = server.join().expect("server thread");
+        assert_eq!(summary.requests, 11);
+        assert_eq!(summary.errors, 0);
+    }
+}

@@ -32,7 +32,6 @@
 
 use super::Service;
 use crate::report::ServiceSummary;
-use crate::util::json::Json;
 use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -62,8 +61,13 @@ pub fn serve_threaded(
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                // a failed accept must not take the listener down
-                eprintln!("uniperf serve: accept failed: {e}");
+                // a failed accept must not take the listener down; the
+                // service counts every failure but rate-limits the log
+                // to one line per errno per window (SYN churn would
+                // otherwise flood stderr)
+                if let Some(msg) = svc.note_accept_error(&e) {
+                    eprintln!("uniperf serve: {msg}");
+                }
                 continue;
             }
         };
@@ -88,19 +92,8 @@ pub fn serve_threaded(
         // connection-count guard: shed load loudly instead of
         // spawning unbounded threads
         if active.load(Ordering::SeqCst) >= max_connections {
-            svc.note_shed();
             let mut s = stream;
-            let resp = Json::obj(vec![
-                (
-                    "error",
-                    Json::Str(format!(
-                        "overloaded: server at capacity ({max_connections} concurrent \
-                         connections)"
-                    )),
-                ),
-                ("reason", Json::Str("overloaded".into())),
-                ("retry_after_ms", Json::Num(super::RETRY_AFTER_MS as f64)),
-            ]);
+            let resp = svc.conn_guard_response(max_connections);
             let _ = writeln!(s, "{}", resp.compact());
             continue;
         }
@@ -131,9 +124,10 @@ pub fn serve_threaded(
 const READ_POLL: std::time::Duration = std::time::Duration::from_millis(250);
 
 /// How long the `conn.slow` fault site stalls a freshly accepted
-/// connection. Short enough to keep chaos tests fast, long enough to
-/// overlap other connections' traffic.
-const SLOW_CONN_DELAY: std::time::Duration = std::time::Duration::from_millis(25);
+/// connection (shared with the reactor transport, which defers the
+/// first read by the same amount). Short enough to keep chaos tests
+/// fast, long enough to overlap other connections' traffic.
+pub(crate) const SLOW_CONN_DELAY: std::time::Duration = std::time::Duration::from_millis(25);
 
 /// One connection: the conversational loop, then (if this connection
 /// carried the shutdown command) a wake connection so the blocked
@@ -180,6 +174,7 @@ mod tests {
     use crate::gpusim::registry::builtins;
     use crate::service::testutil::toy_store;
     use crate::service::ServiceConfig;
+    use crate::util::json::Json;
     use std::io::BufRead;
 
     fn toy_service() -> Service {

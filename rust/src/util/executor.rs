@@ -10,8 +10,9 @@
 //! touched exactly once, uncontended) and processes items front-to-back
 //! instead of the queue's back-to-front pop order.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f` over `items` with up to `workers` OS threads, preserving input
 /// order in the output. Uses `std::thread::scope`, so `f` may borrow from
@@ -65,6 +66,109 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// A fixed pool of long-lived worker threads pulling jobs off one
+/// shared queue — the persistent complement to [`par_map`]'s scoped
+/// fan-out, for callers (the event-driven serving reactor) that submit
+/// work continuously instead of in one batch.
+///
+/// Jobs are handled by one shared closure; results travel through
+/// whatever channel the closure captures. [`WorkerPool::join`] is
+/// deterministic: already-queued jobs are drained before the workers
+/// exit, so a caller that stops submitting and then joins has seen
+/// every job handled.
+pub struct WorkerPool<J: Send + 'static> {
+    shared: Arc<PoolShared<J>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct PoolShared<J> {
+    queue: Mutex<VecDeque<J>>,
+    available: Condvar,
+    stop: AtomicBool,
+}
+
+impl<J: Send + 'static> WorkerPool<J> {
+    /// Spawn `workers` (at least 1) threads, each running `handle` over
+    /// jobs claimed from the shared queue.
+    pub fn new<F>(workers: usize, handle: F) -> WorkerPool<J>
+    where
+        F: Fn(J) + Send + Sync + 'static,
+    {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let handle = Arc::new(handle);
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let handle = Arc::clone(&handle);
+                std::thread::spawn(move || worker_loop(&shared, &*handle))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Enqueue one job; a parked worker wakes to claim it.
+    pub fn submit(&self, job: J) {
+        let mut q = self
+            .shared
+            .queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        q.push_back(job);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Jobs submitted but not yet claimed by a worker.
+    pub fn queued(&self) -> usize {
+        self.shared
+            .queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .len()
+    }
+
+    /// Drain the queue and stop: workers finish every job already
+    /// submitted, then exit; returns once all of them have been joined.
+    pub fn join(self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<J: Send>(shared: &PoolShared<J>, handle: &(dyn Fn(J) + Sync)) {
+    loop {
+        let job = {
+            let mut q = shared
+                .queue
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared
+                    .available
+                    .wait(q)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        match job {
+            Some(j) => handle(j),
+            None => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +219,45 @@ mod tests {
         for (i, (x, _)) in out.iter().enumerate() {
             assert_eq!(*x, i as i64, "result out of order at {i}");
         }
+    }
+
+    #[test]
+    fn worker_pool_drains_every_submitted_job_on_join() {
+        use std::sync::{Arc, Mutex};
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let pool = {
+            let seen = Arc::clone(&seen);
+            WorkerPool::new(4, move |j: usize| seen.lock().unwrap().push(j))
+        };
+        for j in 0..500 {
+            pool.submit(j);
+        }
+        pool.join();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..500).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn worker_pool_survives_a_panicking_job() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = {
+            let done = Arc::clone(&done);
+            WorkerPool::new(2, move |j: usize| {
+                if j == 0 {
+                    panic!("hostile job");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        pool.submit(0);
+        // the poisoned worker dies, but the queue stays usable and the
+        // surviving workers keep draining
+        for j in 1..10 {
+            pool.submit(j);
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 9);
     }
 
     #[test]
