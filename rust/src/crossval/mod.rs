@@ -36,6 +36,7 @@
 
 use crate::coordinator::Config;
 use crate::engine::{Engine, FoldCtx, ZooCase};
+use crate::obs::span::{self, Span};
 use crate::report::{render_crossval, render_transfer, Table1, Table1Entry, TransferMatrix};
 use crate::util::executor::par_map;
 use crate::util::json::Json;
@@ -251,6 +252,10 @@ fn run_fold(
     fold: &str,
     split: Split,
 ) -> Result<FoldResult, String> {
+    let mut sp = Span::child("crossval.fold");
+    if span::enabled() {
+        sp.set_meta(format!("device={} fold={fold}", ctx.device));
+    }
     let held: Vec<&ZooCase> = ctx
         .zoo
         .iter()
@@ -292,6 +297,10 @@ fn run_transfer_fold(
     si: usize,
 ) -> Result<FoldResult, String> {
     let src = &contexts[si];
+    let mut sp = Span::child("crossval.fold");
+    if span::enabled() {
+        sp.set_meta(format!("device={} fold=transfer", src.device));
+    }
     let pm = engine.fold_training_matrix(src, &|_| true);
     let model = engine.fit_fold_model(src, &pm)?;
     let mut entries = Vec::new();
@@ -354,9 +363,14 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
         if opts.quick { &quick_zoo_case } else { &keep_all };
     let device_workers = cfg.workers.min(profiles.len()).max(1);
     let inner_workers = (cfg.workers / device_workers).max(1);
+    let mut measure_span = Span::child("crossval.measure");
+    if span::enabled() {
+        measure_span.set_meta(format!("devices={}", cfg.devices.len()));
+    }
     let ctxs = par_map(profiles, device_workers, |p| {
         engine.measure_fold_ctx(&p, campaign_keep, zoo_keep, inner_workers)
     });
+    drop(measure_span);
     let mut contexts = Vec::with_capacity(ctxs.len());
     for c in ctxs {
         contexts.push(c?);

@@ -44,6 +44,9 @@ pub use pipeline::{CampaignNotes, DeviceResult, FoldCtx, ZooCase};
 use crate::gpusim::{registry, DeviceProfile, DeviceRegistry, SimGpu};
 use crate::harness::Protocol;
 use crate::kernels::{self, KernelCase};
+use crate::obs::log::Level;
+use crate::obs::span::{self, Span};
+use crate::olog;
 use crate::perfmodel::{NativeSolver, Solver};
 use crate::service::hash::structural_hash;
 use crate::service::request::{KernelRef, MatrixRequest, PredictRequest};
@@ -272,7 +275,8 @@ impl Engine {
             match crate::service::diskcache::PropsCacheFile::open(path, &schema, cfg.extract) {
                 Ok(f) => {
                     if f.loaded() > 0 {
-                        eprintln!(
+                        olog!(
+                            Level::Info,
                             "uniperf: props cache {}: preloaded {} extractions",
                             path.display(),
                             f.loaded()
@@ -281,7 +285,7 @@ impl Engine {
                     cache.attach_persist(Arc::new(f));
                 }
                 Err(e) => {
-                    eprintln!("uniperf: props cache disabled (starting cold): {e}")
+                    olog!(Level::Warn, "uniperf: props cache disabled (starting cold): {e}")
                 }
             }
         }
@@ -590,6 +594,10 @@ impl Engine {
                 ));
             }
         }
+        // no span here: a cache hit is a hash probe counted by the
+        // always-on hit/miss counters, and a miss is already traced by
+        // the `engine.extract` span inside the cache — so warm requests
+        // record nothing on this path
         let t0 = Instant::now();
         let extracted = self.cache.props_for(kernel, &env, self.cfg.extract, env_keyed);
         if let Some(h) = breaker_key {
@@ -680,6 +688,10 @@ impl Engine {
         let mut rows: Vec<Option<Vec<f64>>> = (0..resolved.len()).map(|_| None).collect();
         let mut arena = BatchArena::new();
         let mut flat: Vec<f64> = Vec::new();
+        let mut eval_span = Span::child("engine.tape_eval");
+        if span::enabled() {
+            eval_span.set_meta(format!("groups={} requests={}", groups.len(), resolved.len()));
+        }
         for g in groups.into_values() {
             let env_refs: Vec<&Env> = g.envs.iter().collect();
             if g.props.eval_batch(&self.schema, &env_refs, &mut arena, &mut flat).is_ok() {
@@ -690,6 +702,7 @@ impl Engine {
             // on Err: leave the rows empty — the members fall back to
             // the scalar path below for per-request diagnostics
         }
+        drop(eval_span);
         resolved
             .into_iter()
             .zip(rows)

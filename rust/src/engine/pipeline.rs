@@ -12,6 +12,7 @@ use super::Engine;
 use crate::gpusim::{DeviceProfile, SimGpu};
 use crate::harness::{self, measure_cases, run_campaign, run_campaign_robust};
 use crate::kernels;
+use crate::obs::span::{self, Span};
 use crate::perfmodel::{self, Model, PropertyMatrix, Solver};
 use crate::service::{ModelStore, StoredModel};
 use crate::util::executor::par_map;
@@ -80,6 +81,10 @@ impl Engine {
         //    cases and survives calibration failure; with no faults in
         //    play it produces the same matrix as `run_campaign`.
         let cases = kernels::measurement_suite(&gpu.profile);
+        let mut campaign_span = Span::child("pipeline.campaign");
+        if span::enabled() {
+            campaign_span.set_meta(format!("device={device} cases={}", cases.len()));
+        }
         let outcome = run_campaign_robust(
             &gpu,
             &cases,
@@ -88,6 +93,7 @@ impl Engine {
             cfg.extract,
             cfg.workers,
         )?;
+        drop(campaign_span);
         let notes = CampaignNotes {
             warnings: outcome.overhead_warning.clone().into_iter().collect(),
             quarantined: outcome
@@ -100,8 +106,13 @@ impl Engine {
 
         // 2. fit (§4.3)
         let solver = self.solver()?;
+        let mut fit_span = Span::child("pipeline.fit");
+        if span::enabled() {
+            fit_span.set_meta(format!("device={device}"));
+        }
         let model =
             perfmodel::fit(device, &outcome.matrix, self.schema(), solver.as_ref())?;
+        drop(fit_span);
         Ok((gpu, outcome.matrix, model, outcome.overhead, notes))
     }
 
@@ -119,6 +130,10 @@ impl Engine {
         } else {
             kernels::test_suite(&gpu.profile)
         };
+        let mut predict_span = Span::child("pipeline.predict");
+        if span::enabled() {
+            predict_span.set_meta(format!("device={device} cases={}", suite.len()));
+        }
         let measurements = measure_cases(
             &gpu,
             &suite,
@@ -135,6 +150,7 @@ impl Engine {
             let letter = parts.next().unwrap_or("?").to_string();
             tests.push((kname, letter, model.predict(&m.props), m.time_s));
         }
+        drop(predict_span);
 
         // 4. optional persistence
         if let Some(dir) = &cfg.out_dir {

@@ -19,6 +19,7 @@
 use crate::gpusim::SimGpu;
 use crate::kernels::KernelCase;
 use crate::lpir::Kernel;
+use crate::obs::span::{self, Span};
 use crate::perfmodel::PropertyMatrix;
 use crate::stats::{extract, BatchArena, ExtractOpts, KernelProps, Schema};
 use crate::util::executor::par_map;
@@ -325,12 +326,17 @@ pub fn measure_cases(
 
     // timing in parallel over cases
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
+    let mut measure_span = Span::child("harness.measure");
+    if span::enabled() {
+        measure_span.set_meta(format!("cases={}", work.len()));
+    }
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
         let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
         let time_s = protocol.reduce(&times)?;
         let props = rows[i].as_ref().map_err(Clone::clone)?.clone();
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
+    drop(measure_span);
     results.into_iter().collect()
 }
 
@@ -402,6 +408,7 @@ pub fn run_campaign_robust(
     opts: ExtractOpts,
     workers: usize,
 ) -> Result<CampaignOutcome, String> {
+    let calibrate_span = Span::child("harness.calibrate");
     let (overhead, overhead_warning) = match calibrate_overhead(gpu, protocol) {
         Ok(o) => (o, None),
         Err(e) => (
@@ -413,6 +420,7 @@ pub fn run_campaign_robust(
             )),
         ),
     };
+    drop(calibrate_span);
 
     // symbolic extraction once per kernel; a failure quarantines every
     // case of that kernel rather than aborting
@@ -444,12 +452,17 @@ pub fn run_campaign_robust(
     }
 
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();
+    let mut measure_span = Span::child("harness.measure");
+    if span::enabled() {
+        measure_span.set_meta(format!("cases={}", work.len()));
+    }
     let results = par_map(work, workers, |(i, case)| -> Result<Measurement, String> {
         let times = time_with_retry(gpu, &case.kernel, &case.env, protocol)?;
         let time_s = protocol.reduce(&times)?;
         let props = rows[i].as_ref().map_err(Clone::clone)?.clone();
         Ok(Measurement { label: case.label.clone(), props, time_s })
     });
+    drop(measure_span);
 
     let mut pm = PropertyMatrix::default();
     let mut quarantined = Vec::new();

@@ -39,9 +39,14 @@
 //! suite construction, the solver factory and an atomically
 //! hot-swappable model store live there.
 //!
+//! Cross-cutting observability — the typed metrics registry, the
+//! structured-span recorder behind `{"cmd": "trace"}`/`--profile`, and
+//! the leveled logger — lives in [`obs`].
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 pub mod util;
+pub mod obs;
 pub mod qpoly;
 pub mod isl;
 pub mod lpir;

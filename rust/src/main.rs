@@ -42,6 +42,9 @@
 
 use std::path::Path;
 use uniperf::coordinator::{fit_models, run_device, run_pipeline, Config, FitBackend};
+use uniperf::obs::log::Level;
+use uniperf::obs::{log as olog_mod, span};
+use uniperf::olog;
 use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
 use uniperf::gpusim::registry;
 use uniperf::harness::Protocol;
@@ -85,6 +88,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "faults", help: "chaos: deterministic fault-injection plan (JSON: {\"seed\", \"sites\": {\"<site>\": {\"rate\", \"max\"?}}})", is_flag: false, default: None },
         OptSpec { name: "degraded", help: "serve/predict: answer for devices the artifact lacks from the nearest-capability fitted device (responses flagged \"degraded\")", is_flag: true, default: None },
         OptSpec { name: "props-cache", help: "serve/predict: persistent extraction-cache file (append-only JSON lines, created if missing; a restarted server preloads it and warm-starts, an incompatible file is ignored with a warning)", is_flag: false, default: None },
+        OptSpec { name: "log-level", help: "stderr verbosity: error|warn|info|debug|off", is_flag: false, default: Some("info") },
+        OptSpec { name: "trace", help: "record structured spans (serve exposes them via {\"cmd\": \"trace\"}; slow roots land in a separate ring)", is_flag: true, default: None },
+        OptSpec { name: "slow-ms", help: "with --trace/--profile: root spans at least this many ms are kept in the slow ring", is_flag: false, default: Some("500") },
+        OptSpec { name: "profile", help: "write recorded spans as Chrome trace-event JSON (chrome://tracing, Perfetto) to this path at exit; implies --trace", is_flag: false, default: None },
     ]
 }
 
@@ -107,7 +114,7 @@ fn main() {
         }
     };
     if let Err(e) = dispatch(cmd, &rest) {
-        eprintln!("error: {e}");
+        olog!(Level::Error, "error: {e}");
         std::process::exit(1);
     }
 }
@@ -144,7 +151,7 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
     }
     if let Some(path) = args.get("faults") {
         let plan = uniperf::util::fault::FaultPlan::load(Path::new(path))?;
-        eprintln!("uniperf: fault injection armed (--faults {path}, seed {})", plan.seed());
+        olog!(Level::Info, "uniperf: fault injection armed (--faults {path}, seed {})", plan.seed());
         cfg.faults = Some(std::sync::Arc::new(plan));
     }
     if let Some(path) = args.get("devices") {
@@ -229,9 +236,27 @@ fn one_shot_request(args: &Args) -> Result<String, String> {
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
     let args = parse(rest, &specs())?;
+    olog_mod::set_level_str(args.get_or("log-level", "info"))?;
+    let profile = args.get("profile").map(String::from);
+    if args.has_flag("trace") || profile.is_some() {
+        span::enable(args.get_f64("slow-ms", 500.0)?);
+    }
+    let result = run_cmd(cmd, &args);
+    // written even when the command failed: a trace of the failing run
+    // is exactly what the flag is for
+    if let Some(path) = profile {
+        match span::write_chrome_trace(Path::new(&path)) {
+            Ok(()) => olog!(Level::Info, "uniperf: wrote trace profile to {path}"),
+            Err(e) => olog!(Level::Warn, "uniperf: could not write --profile: {e}"),
+        }
+    }
+    result
+}
+
+fn run_cmd(cmd: &str, args: &Args) -> Result<(), String> {
     match cmd {
         "pipeline" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             let t0 = std::time::Instant::now();
             let result = run_pipeline(&cfg)?;
             println!("{}", result.table1.render());
@@ -244,17 +269,17 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                     100.0 * dr.model.train_rel_err_geomean
                 );
                 for w in &dr.warnings {
-                    eprintln!("  warning [{}]: {w}", dr.device);
+                    olog!(Level::Warn, "  warning [{}]: {w}", dr.device);
                 }
                 for (label, reason) in &dr.quarantined {
-                    eprintln!("  quarantined [{}]: {label}: {reason}", dr.device);
+                    olog!(Level::Warn, "  quarantined [{}]: {label}: {reason}", dr.device);
                 }
             }
             println!("pipeline completed in {:.1}s", t0.elapsed().as_secs_f64());
             Ok(())
         }
         "crossval" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             let split = match args.get_or("split", "kernel") {
                 "kernel" => Split::LeaveOneKernelOut,
                 "case" => Split::LeaveOneSizeCaseOut,
@@ -269,7 +294,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "fit" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             if let Some(path) = args.get("save") {
                 // fit --save: all configured devices -> persisted
                 // artifact; an explicit --device narrows the fit to
@@ -304,15 +329,15 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             let dr = run_device(&device, &schema, &cfg)?;
             println!("{}", render_table2(&dr.model, &schema));
             for w in &dr.warnings {
-                eprintln!("warning: {w}");
+                olog!(Level::Warn, "warning: {w}");
             }
             for (label, reason) in &dr.quarantined {
-                eprintln!("quarantined: {label}: {reason}");
+                olog!(Level::Warn, "quarantined: {label}: {reason}");
             }
             Ok(())
         }
         "predict" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             if args.get("models").is_none() {
                 // the artifact-backed flags must not be silently dropped
                 // by the legacy measure-everything path
@@ -327,7 +352,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             }
             if let Some(models) = args.get("models") {
                 // artifact-backed predict: no measurement, no refit
-                let svc = load_service(models, &cfg, &args)?;
+                let svc = load_service(models, &cfg, args)?;
                 if let Some(reqfile) = args.get("requests") {
                     // a requests file carries its own device/kernel/case
                     // per line; one-shot flags cannot be honored and
@@ -346,7 +371,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                     let summary = svc.serve(text.as_bytes(), out.lock())?;
                     eprint!("{}", render_service(&summary));
                 } else {
-                    let line = one_shot_request(&args)?;
+                    let line = one_shot_request(args)?;
                     let resp = svc.respond(&line);
                     println!("{}", resp.compact());
                     // scripted callers rely on the exit status: a failed
@@ -377,11 +402,11 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "serve" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             let models = args.get("models").ok_or(
                 "serve requires --models <models.json> (create one with 'fit --save')",
             )?;
-            let mut svc = load_service(models, &cfg, &args)?;
+            let mut svc = load_service(models, &cfg, args)?;
             if args.has_flag("watch") {
                 // hot artifact reload: polled between batches (stdin
                 // loop) / before each connection (TCP); a bad rewrite
@@ -430,7 +455,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
                     };
                     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
                         .map_err(|e| format!("bind 127.0.0.1:{port}: {e}"))?;
-                    eprintln!(
+                    olog!(
+                        Level::Info,
                         "uniperf serve: listening on 127.0.0.1:{port} \
                          (line-delimited JSON requests, one response line each; \
                          {transport} transport, up to {max_conn} connections; send \
@@ -457,7 +483,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "devices" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             if let Some(path) = args.get("export") {
                 std::fs::write(path, registry::export_template().pretty())
                     .map_err(|e| format!("write {path}: {e}"))?;
@@ -487,7 +513,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "props" => {
-            let cfg = make_config(&args)?;
+            let cfg = make_config(args)?;
             let device = args.get_or("device", "k40c").to_string();
             let kernel_name = args.get_or("kernel", "fd5");
             let profile = cfg

@@ -1,0 +1,575 @@
+//! The typed metrics registry: named counters, gauges and fixed-bucket
+//! log₂ histograms with deterministic snapshot/merge semantics and a
+//! Prometheus-style text exposition.
+//!
+//! Everything here is a thin veneer over `AtomicU64`, so the hot-path
+//! cost of a metric update is one relaxed atomic op — the same cost as
+//! the ad-hoc counters this module replaced across `service`,
+//! `service::cache` and `util::fault`. The registry itself
+//! (name → handle map) is only locked at registration and snapshot
+//! time; recording paths hold pre-registered `Arc` handles and never
+//! touch the map.
+//!
+//! Histograms use 65 fixed log₂ buckets over non-negative integer
+//! values (bucket `b` holds `[2^(b-1), 2^b)`; bucket 0 holds exactly
+//! 0), each bucket keeping a count *and* a sum. Quantiles return the
+//! **mean of the bucket the quantile rank lands in**: error is bounded
+//! by the bucket width (a factor of 2 in the value), and a population
+//! whose samples all share one bucket reports that bucket's exact mean
+//! — so e.g. a batch-width histogram fed nothing but 4s answers
+//! p50 = p99 = mean = 4 exactly, which is what lets the service tests
+//! pin exact values instead of tolerances.
+//!
+//! Merge semantics (deterministic, order-independent for counters and
+//! histograms): counters add, histograms add bucketwise, gauges keep
+//! the maximum — merging N worker snapshots equals one snapshot of the
+//! combined stream for the additive kinds, and the gauge rule is the
+//! only associative-commutative choice that never invents a value
+//! neither side observed.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of histogram buckets: one for zero plus one per power of two
+/// up to `2^64`.
+pub const BUCKETS: usize = 65;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Atomically increment and return the *previous* value — the
+    /// claim-a-slot primitive counter-based decision streams need
+    /// (`util::fault`'s per-site attempt index must be race-free to
+    /// stay deterministic under concurrent queries).
+    #[inline]
+    pub fn next(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Decrement — for the rare "reserve then back out" accounting
+    /// pattern (e.g. a fault-injection ceiling race).
+    #[inline]
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-written-value gauge (queue depths, configured capacities).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index for a value: 0 for 0, else `floor(log2 v) + 1` — so
+/// bucket `b ≥ 1` covers `[2^(b-1), 2^b)`.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// A fixed-bucket log₂ histogram over non-negative integer samples
+/// (the service feeds it microseconds and batch widths). Per-bucket
+/// count **and** sum, so quantiles are exact within their bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sums: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sums: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        let b = bucket_of(v);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.sums[b].fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Observe a non-negative float sample, rounded to the nearest
+    /// integer (negative or non-finite samples clamp to 0).
+    #[inline]
+    pub fn observe_f64(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v.round() as u64 } else { 0 };
+        self.observe(v);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sums: self.sums.iter().map(|s| s.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]'s buckets: the unit of
+/// percentile computation, merging and exposition.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub counts: Vec<u64>,
+    pub sums: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sums.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// The q-quantile (`q` in `[0, 1]`): nearest-rank over the bucket
+    /// counts, answering the **mean of the bucket the rank lands in**.
+    /// Exact when the population shares one bucket; otherwise within a
+    /// factor of 2 (the bucket width).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                return self.sums[b] as f64 / c as f64;
+            }
+        }
+        0.0
+    }
+
+    /// Bucketwise addition (the histogram merge rule).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+            self.sums.resize(other.sums.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        for (i, &s) in other.sums.iter().enumerate() {
+            self.sums[i] += s;
+        }
+    }
+}
+
+/// One metric's value inside a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistogramSnapshot),
+}
+
+/// A deterministic point-in-time view of a registry (plus any
+/// synthetic entries a caller folds in): name-ordered, mergeable, and
+/// renderable as Prometheus-style text.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    values: BTreeMap<String, MetricValue>,
+}
+
+impl Snapshot {
+    pub fn new() -> Snapshot {
+        Snapshot { values: BTreeMap::new() }
+    }
+
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        self.values.insert(name.to_string(), MetricValue::Counter(v));
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: u64) {
+        self.values.insert(name.to_string(), MetricValue::Gauge(v));
+    }
+
+    pub fn set_histogram(&mut self, name: &str, h: HistogramSnapshot) {
+        self.values.insert(name.to_string(), MetricValue::Histogram(h));
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.values.get(name) {
+            Some(MetricValue::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        match self.values.get(name) {
+            Some(MetricValue::Gauge(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> HistogramSnapshot {
+        match self.values.get(name) {
+            Some(MetricValue::Histogram(h)) => h.clone(),
+            _ => HistogramSnapshot::default(),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &MetricValue)> {
+        self.values.iter()
+    }
+
+    /// Merge `other` into `self`: counters add, histograms add
+    /// bucketwise, gauges keep the maximum. Entries of mismatched kind
+    /// keep `self`'s value (a schema conflict, not a data race — the
+    /// deterministic choice is to not guess).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, v) in &other.values {
+            match (self.values.get_mut(name), v) {
+                (None, v) => {
+                    self.values.insert(name.clone(), v.clone());
+                }
+                (Some(MetricValue::Counter(a)), MetricValue::Counter(b)) => *a += b,
+                (Some(MetricValue::Gauge(a)), MetricValue::Gauge(b)) => *a = (*a).max(*b),
+                (Some(MetricValue::Histogram(a)), MetricValue::Histogram(b)) => a.merge(b),
+                _ => {}
+            }
+        }
+    }
+
+    /// Prometheus-style text exposition. Every metric name is prefixed
+    /// `uniperf_`; histograms render cumulative `_bucket{le="..."}`
+    /// lines (powers of two, only up to the highest populated bucket)
+    /// plus `_sum`/`_count`. Deterministic for a given snapshot:
+    /// name-ordered, fixed formatting.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.values {
+            let full = format!("uniperf_{name}");
+            match v {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("# TYPE {full} counter\n{full} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {full} gauge\n{full} {g}\n"));
+                }
+                MetricValue::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {full} histogram\n"));
+                    let mut cum = 0u64;
+                    let top = h
+                        .counts
+                        .iter()
+                        .rposition(|&c| c > 0)
+                        .map(|b| b + 1)
+                        .unwrap_or(0);
+                    for (b, &c) in h.counts.iter().enumerate().take(top) {
+                        cum += c;
+                        // bucket b holds values < 2^b (bucket 0: value 0)
+                        let le = if b == 0 {
+                            "0".to_string()
+                        } else if b >= 64 {
+                            continue; // folded into +Inf below
+                        } else {
+                            (1u64 << b).to_string()
+                        };
+                        out.push_str(&format!("{full}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    out.push_str(&format!(
+                        "{full}_bucket{{le=\"+Inf\"}} {}\n{full}_sum {}\n{full}_count {}\n",
+                        h.count(),
+                        h.sum(),
+                        h.count()
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A registered metric handle (what the registry's map holds).
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// The typed registry: get-or-register by name, snapshot on demand.
+/// Recording paths hold the returned `Arc` handles; the internal map
+/// lock is touched only at registration and snapshot time.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+fn locked(m: &Mutex<BTreeMap<String, Metric>>) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register the counter `name`. A name already registered
+    /// as a different kind yields a fresh detached handle (recorded
+    /// values go nowhere) — a programming error surfaced as silence
+    /// rather than a serving-path panic.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = locked(&self.metrics);
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => Arc::new(Counter::new()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = locked(&self.metrics);
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => Arc::new(Gauge::new()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = locked(&self.metrics);
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => Arc::new(Histogram::new()),
+        }
+    }
+
+    /// Point-in-time view of every registered metric, name-ordered.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = locked(&self.metrics);
+        let mut snap = Snapshot::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => snap.set_counter(name, c.get()),
+                Metric::Gauge(g) => snap.set_gauge(name, g.get()),
+                Metric::Histogram(h) => snap.set_histogram(name, h.snapshot()),
+            }
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(u64::MAX), 64);
+    }
+
+    #[test]
+    fn single_bucket_population_is_exact() {
+        let h = Histogram::new();
+        for _ in 0..7 {
+            h.observe(4);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 4.0);
+        assert_eq!(s.quantile(0.99), 4.0);
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.count(), 7);
+    }
+
+    #[test]
+    fn quantiles_are_within_bucket_means() {
+        let h = Histogram::new();
+        // 90 samples at 10 (bucket [8,16)), 10 at 1000 (bucket [512,1024))
+        for _ in 0..90 {
+            h.observe(10);
+        }
+        for _ in 0..10 {
+            h.observe(1000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 10.0);
+        assert_eq!(s.quantile(0.9), 10.0);
+        assert_eq!(s.quantile(0.99), 1000.0);
+        assert!((s.mean() - 109.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_error_is_bounded_by_bucket_width() {
+        let h = Histogram::new();
+        // mixed values inside the [64,128) bucket: the quantile is the
+        // bucket mean, within a factor of 2 of any true member
+        for v in [65u64, 70, 100, 127] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        let q = s.quantile(0.5);
+        assert!(q >= 64.0 && q < 128.0, "{q}");
+        assert_eq!(q, (65.0 + 70.0 + 100.0 + 127.0) / 4.0);
+    }
+
+    #[test]
+    fn merge_is_additive_for_counters_and_histograms_max_for_gauges() {
+        let mut a = Snapshot::new();
+        a.set_counter("req", 3);
+        a.set_gauge("depth", 5);
+        let ha = {
+            let h = Histogram::new();
+            h.observe(4);
+            h.snapshot()
+        };
+        a.set_histogram("lat", ha);
+
+        let mut b = Snapshot::new();
+        b.set_counter("req", 2);
+        b.set_gauge("depth", 2);
+        b.set_counter("other", 1);
+        let hb = {
+            let h = Histogram::new();
+            h.observe(4);
+            h.observe(16);
+            h.snapshot()
+        };
+        b.set_histogram("lat", hb);
+
+        a.merge(&b);
+        assert_eq!(a.counter("req"), 5);
+        assert_eq!(a.counter("other"), 1);
+        assert_eq!(a.gauge("depth"), 5);
+        let h = a.histogram("lat");
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 24);
+        // merged == one histogram of the combined stream
+        let all = Histogram::new();
+        for v in [4u64, 4, 16] {
+            all.observe(v);
+        }
+        assert_eq!(h, all.snapshot());
+    }
+
+    #[test]
+    fn registry_hands_out_shared_handles_and_snapshots_deterministically() {
+        let r = Registry::new();
+        let c1 = r.counter("requests_total");
+        let c2 = r.counter("requests_total");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        r.gauge("queue_depth").set(7);
+        r.histogram("latency_us").observe(100);
+        let s1 = r.snapshot();
+        let s2 = r.snapshot();
+        assert_eq!(s1, s2);
+        assert_eq!(s1.counter("requests_total"), 3);
+        assert_eq!(s1.gauge("queue_depth"), 7);
+        assert_eq!(s1.histogram("latency_us").count(), 1);
+        // kind mismatch: detached handle, registered value untouched
+        let detached = r.gauge("requests_total");
+        detached.set(99);
+        assert_eq!(r.snapshot().counter("requests_total"), 3);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_deterministic_text() {
+        let r = Registry::new();
+        r.counter("requests_total").add(3);
+        r.gauge("queue_depth").set(2);
+        let h = r.histogram("latency_us");
+        h.observe(0);
+        h.observe(5);
+        h.observe(5);
+        h.observe(100);
+        let text = r.snapshot().render_prometheus();
+        let want = "\
+# TYPE uniperf_latency_us histogram
+uniperf_latency_us_bucket{le=\"0\"} 1
+uniperf_latency_us_bucket{le=\"2\"} 1
+uniperf_latency_us_bucket{le=\"4\"} 1
+uniperf_latency_us_bucket{le=\"8\"} 3
+uniperf_latency_us_bucket{le=\"16\"} 3
+uniperf_latency_us_bucket{le=\"32\"} 3
+uniperf_latency_us_bucket{le=\"64\"} 3
+uniperf_latency_us_bucket{le=\"128\"} 4
+uniperf_latency_us_bucket{le=\"+Inf\"} 4
+uniperf_latency_us_sum 110
+uniperf_latency_us_count 4
+# TYPE uniperf_queue_depth gauge
+uniperf_queue_depth 2
+# TYPE uniperf_requests_total counter
+uniperf_requests_total 3
+";
+        assert_eq!(text, want);
+    }
+}

@@ -1,0 +1,29 @@
+//! `obs` — the unified observability plane: a typed metrics registry
+//! ([`metrics`]), structured spans with bounded ring capture and
+//! Chrome-trace export ([`span`]), and a leveled stderr logger
+//! ([`log`], via the crate-wide `olog!` macro).
+//!
+//! Design contract (see DESIGN.md § Observability):
+//!
+//! * **Pay for what you use.** Span recording is off by default behind
+//!   one relaxed atomic load; metric updates are single relaxed
+//!   atomics — the same cost as the ad-hoc counters they replaced.
+//!   With tracing disabled, response bytes on every serving path are
+//!   bit-identical to the uninstrumented binary (pinned in
+//!   `rust/tests/obs.rs`; overhead with tracing *enabled* is gated
+//!   ≤ 3% by `benches/obs.rs`).
+//! * **One snapshot, three surfaces.** The service assembles a single
+//!   [`metrics::Snapshot`] (registry + cache + engine + fault
+//!   counters) and feeds the *same* snapshot to `{"cmd": "health"}`,
+//!   `{"cmd": "stats"}`/`ServiceSummary` and the Prometheus-style
+//!   `{"cmd": "metrics"}` exposition — the surfaces cannot disagree.
+//! * **Deterministic semantics.** Snapshots are name-ordered; merges
+//!   are order-independent (counters/histograms add, gauges max);
+//!   histogram quantiles are exact within a log₂ bucket.
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, MetricValue, Registry, Snapshot};
+pub use span::Span;

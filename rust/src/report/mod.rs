@@ -331,6 +331,7 @@ pub struct ServiceSummary {
     /// distinct kernel structures extracted and cached
     pub distinct_kernels: usize,
     pub latency_p50_us: f64,
+    pub latency_p90_us: f64,
     pub latency_p99_us: f64,
     pub latency_mean_us: f64,
     /// minimum symbolic-extraction time over the *timed* (cache-miss)
@@ -385,6 +386,7 @@ impl ServiceSummary {
             ("distinct_kernels", Json::Num(self.distinct_kernels as f64)),
             ("hit_rate", Json::Num(self.hit_rate())),
             ("latency_p50_us", Json::Num(self.latency_p50_us)),
+            ("latency_p90_us", Json::Num(self.latency_p90_us)),
             ("latency_p99_us", Json::Num(self.latency_p99_us)),
             ("latency_mean_us", Json::Num(self.latency_mean_us)),
             (
@@ -442,8 +444,8 @@ pub fn render_service(s: &ServiceSummary) -> String {
     );
     let _ = writeln!(
         out,
-        "latency: p50 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
-        s.latency_p50_us, s.latency_p99_us, s.latency_mean_us
+        "latency: p50 {:.1} µs  p90 {:.1} µs  p99 {:.1} µs  mean {:.1} µs",
+        s.latency_p50_us, s.latency_p90_us, s.latency_p99_us, s.latency_mean_us
     );
     if s.batch_mean > 0.0 {
         let _ = writeln!(
@@ -612,6 +614,7 @@ mod tests {
             cache_evictions: 3,
             distinct_kernels: 15,
             latency_p50_us: 12.3,
+            latency_p90_us: 96.0,
             latency_p99_us: 180.0,
             latency_mean_us: 20.1,
             min_extract_us: Some(812.0),
@@ -628,6 +631,7 @@ mod tests {
             "270 hits / 18 misses",
             "3 evictions",
             "p50 12.3",
+            "p90 96.0",
             "p99 180.0",
             "min 812.0",
             "cached hits excluded",

@@ -39,11 +39,12 @@
 
 use super::hash::structural_hash;
 use crate::lpir::Kernel;
+use crate::obs::span::Span;
+use crate::obs::Counter;
 use crate::stats::{extract, ExtractOpts, KernelProps};
 use crate::util::fnv::Fnv64;
 use crate::util::intern::Env;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 const SHARDS: usize = 16;
@@ -181,10 +182,10 @@ pub struct SharedPropsCache {
     shards: Vec<Mutex<Shard>>,
     /// per-shard entry bound (total capacity ≈ `SHARDS ×` this)
     per_shard_cap: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-    disk_hits: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+    disk_hits: Counter,
     persist: Option<Arc<super::diskcache::PropsCacheFile>>,
 }
 
@@ -207,10 +208,10 @@ impl SharedPropsCache {
         SharedPropsCache {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             per_shard_cap: capacity.div_ceil(SHARDS).max(1),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            disk_hits: AtomicU64::new(0),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            evictions: Counter::new(),
+            disk_hits: Counter::new(),
             persist: None,
         }
     }
@@ -253,7 +254,7 @@ impl SharedPropsCache {
         let mut shard = locked(shard);
         if let Some(e) = shard.map.get_mut(&key) {
             e.referenced = true;
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.inc();
             return Ok((Arc::clone(&e.props), true));
         }
         // in-memory miss: consult the persistent layer (a restarted
@@ -265,6 +266,9 @@ impl SharedPropsCache {
         let (props, from_disk) = match persist.and_then(|f| f.lookup(key.0, key.2)) {
             Some(p) => (p, true),
             None => {
+                // the expensive symbolic pass gets its own span (nested
+                // under the engine's cache-lookup span when tracing)
+                let _sp = Span::child("engine.extract");
                 let p = Arc::new(extract(kernel, classify_env, opts)?);
                 if let Some(f) = persist {
                     f.append(key.0, key.2, &p);
@@ -274,36 +278,36 @@ impl SharedPropsCache {
         };
         if shard.map.len() >= self.per_shard_cap {
             shard.evict_one();
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
         }
         shard.map.insert(key, Entry { props: Arc::clone(&props), referenced: false });
         shard.push_ring(key);
         if from_disk {
-            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+            self.disk_hits.inc();
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.inc();
         }
         // a disk hit skipped extraction, so it reports as a hit
         Ok((props, from_disk))
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.get()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.get()
     }
 
     /// In-memory misses answered from the persistent file (extraction
     /// skipped). Zero unless a file is attached.
     pub fn disk_hits(&self) -> u64 {
-        self.disk_hits.load(Ordering::Relaxed)
+        self.disk_hits.get()
     }
 
     /// Entries evicted by the second-chance policy so far.
     pub fn evictions(&self) -> u64 {
-        self.evictions.load(Ordering::Relaxed)
+        self.evictions.get()
     }
 
     /// Distinct (kernel structure, options) entries currently cached.

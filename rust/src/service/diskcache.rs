@@ -42,6 +42,8 @@
 //!
 //! [`open`]: PropsCacheFile::open
 
+use crate::obs::log::Level;
+use crate::olog;
 use crate::stats::{ExtractOpts, KernelProps, Schema};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -167,7 +169,8 @@ impl PropsCacheFile {
                     entries.insert(key, Arc::new(props));
                 }
                 Err(e) => {
-                    eprintln!(
+                    olog!(
+                        Level::Warn,
                         "uniperf: props cache {}: line {}: {e}; keeping the {} entries \
                          before it and ignoring the rest",
                         path.display(),

@@ -81,6 +81,10 @@ pub use store::{ModelStore, StoredModel};
 
 use crate::engine::{Config, Engine, MatrixPrediction, Prediction, Reloader};
 use crate::gpusim::DeviceRegistry;
+use crate::obs::log::Level;
+use crate::obs::span::{self, Span};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Snapshot};
+use crate::olog;
 use crate::report::ServiceSummary;
 use crate::stats::ExtractOpts;
 use crate::util::executor::default_workers;
@@ -89,7 +93,7 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -150,76 +154,85 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Once this many latency samples are held, the buffer is decimated
-/// (every 2nd sample dropped) and the recording stride doubles — a
-/// server answering millions of requests keeps percentile-grade
-/// coverage of its whole history in bounded memory.
-const LATENCY_CAP: usize = 1 << 14;
+/// Span cap for one `{"cmd": "trace"}` response (the slow-root ring is
+/// always included in full).
+const TRACE_EXPORT_LIMIT: usize = 256;
 
-#[derive(Default)]
-struct LatencyBuf {
-    samples: Vec<f64>,
-    /// record every `stride`-th observation (doubles on decimation)
-    stride: u64,
-    seen: u64,
-}
-
-impl LatencyBuf {
-    fn push(&mut self, us: f64) {
-        self.seen += 1;
-        let stride = self.stride.max(1);
-        if self.seen % stride != 0 {
-            return;
-        }
-        self.samples.push(us);
-        if self.samples.len() >= LATENCY_CAP {
-            let mut keep = false;
-            self.samples.retain(|_| {
-                keep = !keep;
-                keep
-            });
-            self.stride = stride * 2;
-        }
-    }
-}
-
-#[derive(Default)]
+/// Per-service accounting, held as pre-registered handles into the
+/// service's own [`Registry`] (per-instance, not process-global, so
+/// concurrent services — and parallel tests — never share counters).
+/// Every update is one relaxed atomic op, the same cost as the ad-hoc
+/// `AtomicU64`s and decimating sample buffers this replaced; the
+/// histograms are bounded by construction (65 log₂ buckets) instead of
+/// by decimation, so every observation counts and single-bucket
+/// populations report exact percentiles.
 struct Stats {
-    requests: AtomicU64,
-    errors: AtomicU64,
-    batches: AtomicU64,
-    latencies_us: Mutex<LatencyBuf>,
+    registry: Registry,
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    batches: Arc<Counter>,
+    /// per-request wall latency in µs (batch wall time, charged to
+    /// every request answered in the batch)
+    latency_us: Arc<Histogram>,
+    /// formed-batch widths (requests per executor batch)
+    batch_width: Arc<Histogram>,
+    /// requests shed by the bounded pending queue or connection guard
+    shed: Arc<Counter>,
+    /// requests answered with a deadline error instead of a prediction
+    deadline_expired: Arc<Counter>,
+    /// predictions served by a degraded-mode fallback device
+    degraded: Arc<Counter>,
+    /// TCP connections dropped by the `conn.abort` fault site
+    conn_aborted: Arc<Counter>,
+    /// TCP connections delayed by the `conn.slow` fault site
+    conn_slowed: Arc<Counter>,
+    /// failed `accept` calls, both transports (each one is counted
+    /// here; the log limiter below decides which get printed)
+    accept_errors: Arc<Counter>,
+    /// fd-exhaustion backoffs taken by the reactor's accept path
+    accept_backoffs: Arc<Counter>,
+    /// formation-queue depth, sampled by the reactor after each
+    /// dispatch round (stays 0 under the threaded transport, whose
+    /// queue lives per connection)
+    queue_depth: Arc<Gauge>,
     /// exact running floor over every *timed* extraction. Cache hits
     /// contribute nothing — the 0-second-sample pollution that
     /// [`crate::harness::Sample::Cached`] /
     /// [`crate::harness::Protocol::reduce_samples`] define and
     /// unit-test the exclusion rule for — so this is bounded state
     /// with an exact answer, even for miss-heavy inline workloads.
+    /// (Not a registry metric: it is a fractional-second min, not a
+    /// counter/gauge/histogram.)
     min_extract_s: Mutex<Option<f64>>,
-    /// requests shed by the bounded pending queue or connection guard
-    shed: AtomicU64,
-    /// requests answered with a deadline error instead of a prediction
-    deadline_expired: AtomicU64,
-    /// predictions served by a degraded-mode fallback device
-    degraded: AtomicU64,
-    /// TCP connections dropped by the `conn.abort` fault site
-    conn_aborted: AtomicU64,
-    /// TCP connections delayed by the `conn.slow` fault site
-    conn_slowed: AtomicU64,
-    /// failed `accept` calls, both transports (each one is counted
-    /// here; the log limiter below decides which get printed)
-    accept_errors: AtomicU64,
-    /// fd-exhaustion backoffs taken by the reactor's accept path
-    accept_backoffs: AtomicU64,
-    /// formation-queue depth gauge, sampled by the reactor after each
-    /// dispatch round (stays 0 under the threaded transport, whose
-    /// queue lives per connection)
-    queue_depth: AtomicU64,
-    /// formed-batch widths (requests per executor batch) — same
-    /// bounded decimating buffer as the latencies
-    batch_widths: Mutex<LatencyBuf>,
     /// per-errno accept-failure log limiter state
     accept_log: Mutex<BTreeMap<i32, AcceptLog>>,
+}
+
+impl Stats {
+    /// Register every service metric up front: recording paths hold
+    /// the returned handles (never the registry lock), and snapshots
+    /// carry all names from the first request on.
+    fn new() -> Stats {
+        let registry = Registry::new();
+        Stats {
+            requests: registry.counter("requests_total"),
+            errors: registry.counter("errors_total"),
+            batches: registry.counter("batches_total"),
+            latency_us: registry.histogram("request_latency_us"),
+            batch_width: registry.histogram("batch_width"),
+            shed: registry.counter("shed_total"),
+            deadline_expired: registry.counter("deadline_expired_total"),
+            degraded: registry.counter("degraded_total"),
+            conn_aborted: registry.counter("conn_aborted_total"),
+            conn_slowed: registry.counter("conn_slowed_total"),
+            accept_errors: registry.counter("accept_errors_total"),
+            accept_backoffs: registry.counter("accept_backoffs_total"),
+            queue_depth: registry.gauge("queue_depth"),
+            min_extract_s: Mutex::new(None),
+            accept_log: Mutex::new(BTreeMap::new()),
+            registry,
+        }
+    }
 }
 
 /// Log-limiter state for one accept-failure errno.
@@ -281,7 +294,7 @@ impl Service {
         Ok(Service {
             engine,
             cfg,
-            stats: Stats::default(),
+            stats: Stats::new(),
             shutdown: AtomicBool::new(false),
             reload: None,
         })
@@ -314,15 +327,15 @@ impl Service {
     /// TCP-layer accounting hooks ([`tcp`] owns the sockets, the
     /// service owns the counters the health surface reports).
     pub(crate) fn note_conn_aborted(&self) {
-        self.stats.conn_aborted.fetch_add(1, Ordering::Relaxed);
+        self.stats.conn_aborted.inc();
     }
 
     pub(crate) fn note_conn_slowed(&self) {
-        self.stats.conn_slowed.fetch_add(1, Ordering::Relaxed);
+        self.stats.conn_slowed.inc();
     }
 
     pub(crate) fn note_shed(&self) {
-        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        self.stats.shed.inc();
     }
 
     /// Count one failed `accept`. Returns `Some(message)` when the
@@ -330,7 +343,7 @@ impl Service {
     /// errno per [`ACCEPT_LOG_WINDOW`], annotated with how many
     /// identical failures were suppressed since the last printed one.
     pub(crate) fn note_accept_error(&self, err: &std::io::Error) -> Option<String> {
-        self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.accept_errors.inc();
         let errno = err.raw_os_error().unwrap_or(-1);
         let mut log = locked(&self.stats.accept_log);
         let state = log.entry(errno).or_default();
@@ -352,12 +365,12 @@ impl Service {
 
     /// Count one fd-exhaustion accept backoff (reactor transport).
     pub(crate) fn note_accept_backoff(&self) {
-        self.stats.accept_backoffs.fetch_add(1, Ordering::Relaxed);
+        self.stats.accept_backoffs.inc();
     }
 
     /// Record the formation-queue depth after a reactor dispatch round.
     pub(crate) fn note_queue_depth(&self, depth: usize) {
-        self.stats.queue_depth.store(depth as u64, Ordering::Relaxed);
+        self.stats.queue_depth.set(depth as u64);
     }
 
     /// The serving configuration this service was built with.
@@ -392,9 +405,12 @@ impl Service {
     /// serving loop — a bad rewrite keeps the old store serving.
     pub(crate) fn reload_tick(&self) {
         match self.poll_reload() {
-            Some(Ok(true)) => eprintln!("uniperf serve: reloaded model artifact"),
+            Some(Ok(true)) => olog!(Level::Info, "uniperf serve: reloaded model artifact"),
             Some(Err(e)) => {
-                eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}")
+                olog!(
+                    Level::Warn,
+                    "uniperf serve: artifact reload failed (keeping current models): {e}"
+                )
             }
             Some(Ok(false)) | None => {}
         }
@@ -423,8 +439,8 @@ impl Service {
         if waited <= budget {
             return None;
         }
-        self.stats.errors.fetch_add(1, Ordering::Relaxed);
-        self.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        self.stats.errors.inc();
+        self.stats.deadline_expired.inc();
         let mut pairs = vec![
             (
                 "error",
@@ -473,8 +489,8 @@ impl Service {
         if lines.is_empty() {
             return Vec::new();
         }
-        self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        locked(&self.stats.batch_widths).push(lines.len() as f64);
+        self.stats.batches.inc();
+        self.stats.batch_width.observe(lines.len() as u64);
         self.answer_batch(lines, workers)
     }
 
@@ -485,48 +501,68 @@ impl Service {
             return Vec::new();
         }
         let t0 = Instant::now();
+        // span tree per batch: one `svc.request` child per line (meta =
+        // how it was answered — the conservation unit, and the only
+        // per-request span so warm traffic pays for a single record),
+        // then the shared evaluator and renderer get one child each.
+        // Inert and free when tracing is off. A child (not root) so the
+        // reactor's `reactor.dispatch` span adopts it; standalone it
+        // roots a fresh trace.
+        let mut batch_span = Span::child("svc.batch");
+        if span::enabled() {
+            batch_span.set_meta(format!("width={}", lines.len()));
+        }
         // first pass: parse and answer everything that never reaches
         // the evaluator; live predictions collect into one batch
         let mut preds: Vec<PredictRequest> = Vec::new();
         let mut pred_ids: Vec<Option<Json>> = Vec::new();
         let mut slots: Vec<Option<Json>> = Vec::with_capacity(lines.len());
         for (line, enqueued) in &lines {
-            self.stats.requests.fetch_add(1, Ordering::Relaxed);
-            let resp = match Request::parse(line) {
+            self.stats.requests.inc();
+            let mut req_span = Span::child("svc.request");
+            let (resp, kind) = match Request::parse(line) {
                 Err(e) => {
                     // salvage the id for correlation even when the
                     // request is otherwise malformed (documented
                     // id-echo contract)
                     let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
-                    Some(self.error_response(id.as_ref(), e))
+                    (Some(self.error_response(id.as_ref(), e)), "error")
                 }
-                Ok(Request::Shutdown { id }) => Some(self.shutdown_response(id)),
-                Ok(Request::Health { id }) => Some(self.health_response(id)),
-                Ok(Request::Stats { id }) => Some(self.stats_response(id)),
-                Ok(Request::Matrix(req)) => Some(
+                Ok(Request::Shutdown { id }) => (Some(self.shutdown_response(id)), "shutdown"),
+                Ok(Request::Health { id }) => (Some(self.health_response(id)), "health"),
+                Ok(Request::Stats { id }) => (Some(self.stats_response(id)), "stats"),
+                Ok(Request::Metrics { id }) => (Some(self.metrics_response(id)), "metrics"),
+                Ok(Request::Trace { id }) => (Some(self.trace_response(id)), "trace"),
+                Ok(Request::Matrix(req)) => {
                     match self.deadline_response(req.deadline_ms, *enqueued, req.id.as_ref()) {
-                        Some(expired) => expired,
+                        Some(expired) => (Some(expired), "deadline"),
                         None => match self.engine.predict_matrix(&req) {
-                            Err(e) => self.error_response(req.id.as_ref(), e),
-                            Ok(mp) => self.render_matrix(mp),
+                            Err(e) => (Some(self.error_response(req.id.as_ref(), e)), "error"),
+                            Ok(mp) => (Some(self.render_matrix(mp)), "matrix"),
                         },
-                    },
-                ),
+                    }
+                }
                 Ok(Request::Predict(req)) => {
                     match self.deadline_response(req.deadline_ms, *enqueued, req.id.as_ref()) {
-                        Some(expired) => Some(expired),
+                        Some(expired) => (Some(expired), "deadline"),
                         None => {
                             pred_ids.push(req.id.clone());
                             preds.push(req);
-                            None
+                            (None, "predict")
                         }
                     }
                 }
             };
+            req_span.set_meta(kind);
+            drop(req_span);
             slots.push(resp);
         }
         // one batched engine call answers every live prediction
-        let outcomes = self.engine.predict_batch(preds, workers);
+        let outcomes = {
+            let _e = Span::child("svc.eval");
+            self.engine.predict_batch(preds, workers)
+        };
+        let _r = Span::child("svc.render");
         let mut outcomes = outcomes.into_iter().zip(pred_ids);
         let out: Vec<Json> = slots
             .into_iter()
@@ -540,10 +576,10 @@ impl Service {
                 },
             })
             .collect();
+        drop(_r);
         let dt_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut lat = locked(&self.stats.latencies_us);
         for _ in 0..out.len() {
-            lat.push(dt_us);
+            self.stats.latency_us.observe_f64(dt_us);
         }
         out
     }
@@ -551,7 +587,7 @@ impl Service {
     /// Render + count a request-level error (`{"error": ...}` with the
     /// id echoed when known).
     fn error_response(&self, id: Option<&Json>, msg: String) -> Json {
-        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.errors.inc();
         let mut pairs = vec![("error", Json::Str(msg))];
         if let Some(id) = id {
             pairs.push(("id", id.clone()));
@@ -595,7 +631,7 @@ impl Service {
             ),
         ];
         if p.degraded {
-            self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            self.stats.degraded.inc();
             pairs.push(("degraded", Json::Bool(true)));
         }
         if let Some(sb) = p.served_by {
@@ -626,7 +662,7 @@ impl Service {
                         ),
                     ];
                     if p.degraded {
-                        self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                        self.stats.degraded.inc();
                         cell.push(("degraded", Json::Bool(true)));
                     }
                     if let Some(sb) = p.served_by {
@@ -653,12 +689,87 @@ impl Service {
         Json::obj(pairs)
     }
 
+    /// The **one** metrics snapshot every introspection surface is
+    /// built from: the service registry (request/error/shed counters,
+    /// latency and batch-width histograms, queue depth) plus the
+    /// engine-owned components folded in as synthetic entries (cache,
+    /// quarantine, breakers, fault-site tallies) and the configured
+    /// queue bound. `{"cmd": "health"}`, `{"cmd": "stats"}` /
+    /// [`Service::summary`] and `{"cmd": "metrics"}` all read this —
+    /// the three surfaces cannot drift apart.
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        let mut snap = self.stats.registry.snapshot();
+        let cache = self.engine.cache();
+        snap.set_counter("cache_hits_total", cache.hits());
+        snap.set_counter("cache_misses_total", cache.misses());
+        snap.set_counter("cache_disk_hits_total", cache.disk_hits());
+        snap.set_counter("cache_evictions_total", cache.evictions());
+        snap.set_gauge("cache_entries", cache.len() as u64);
+        snap.set_gauge("cache_capacity", cache.capacity() as u64);
+        snap.set_counter("quarantined_total", self.engine.quarantined_total());
+        snap.set_gauge("breakers_open", self.engine.breaker_open_count() as u64);
+        snap.set_counter("breaker_trips_total", self.engine.breaker_trips());
+        snap.set_gauge("queue_cap", self.cfg.queue_cap as u64);
+        if let Some(plan) = self.engine.config().faults.as_ref() {
+            // per-site fault tallies, names flattened to metric idiom
+            // ("conn.abort" -> fault_conn_abort_attempts_total)
+            if let Json::Obj(sites) = plan.counters_json() {
+                for (site, v) in &sites {
+                    if let Json::Obj(_) = v {
+                        let base = format!("fault_{}", site.replace('.', "_"));
+                        snap.set_counter(
+                            &format!("{base}_attempts_total"),
+                            v.get_f64("attempts").unwrap_or(0.0) as u64,
+                        );
+                        snap.set_counter(
+                            &format!("{base}_injected_total"),
+                            v.get_f64("injected").unwrap_or(0.0) as u64,
+                        );
+                    }
+                }
+            }
+        }
+        snap
+    }
+
+    /// The `{"cmd": "metrics"}` surface: the unified snapshot as
+    /// Prometheus-style exposition text.
+    fn metrics_response(&self, id: Option<Json>) -> Json {
+        let mut pairs = vec![
+            ("ok", Json::Str("metrics".into())),
+            ("exposition", Json::Str(self.metrics_snapshot().render_prometheus())),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", id));
+        }
+        Json::obj(pairs)
+    }
+
+    /// The `{"cmd": "trace"}` surface: recorder state plus recent and
+    /// slow spans (empty unless the process enabled tracing via
+    /// `--trace`/`--profile`).
+    fn trace_response(&self, id: Option<Json>) -> Json {
+        let mut j = span::trace_json(TRACE_EXPORT_LIMIT);
+        if let Json::Obj(m) = &mut j {
+            m.insert("ok".into(), Json::Str("trace".into()));
+            if let Some(id) = id {
+                m.insert("id".into(), id);
+            }
+        }
+        j
+    }
+
     /// The `{"cmd": "health"}` surface: component status without
     /// touching the prediction path (safe to poll under load). Shape
-    /// documented in `DESIGN.md` § Robustness.
+    /// documented in `DESIGN.md` § Robustness. Every number is read
+    /// from the unified [`Service::metrics_snapshot`], so health can
+    /// never disagree with the summary or the metrics exposition.
     fn health_response(&self, id: Option<Json>) -> Json {
         let store = self.store();
-        let cache = self.engine.cache();
+        let snap = self.metrics_snapshot();
+        let widths = snap.histogram("batch_width");
+        let counter = |name: &str| Json::Num(snap.counter(name) as f64);
+        let gauge = |name: &str| Json::Num(snap.gauge(name) as f64);
         let mut pairs = vec![
             ("ok", Json::Str("health".into())),
             (
@@ -687,71 +798,47 @@ impl Service {
             (
                 "cache",
                 Json::obj(vec![
-                    ("hits", Json::Num(cache.hits() as f64)),
-                    ("misses", Json::Num(cache.misses() as f64)),
-                    ("evictions", Json::Num(cache.evictions() as f64)),
-                    ("entries", Json::Num(cache.len() as f64)),
-                    ("capacity", Json::Num(cache.capacity() as f64)),
+                    ("hits", counter("cache_hits_total")),
+                    ("misses", counter("cache_misses_total")),
+                    ("evictions", counter("cache_evictions_total")),
+                    ("entries", gauge("cache_entries")),
+                    ("capacity", gauge("cache_capacity")),
                 ]),
             ),
-            ("quarantined", Json::Num(self.engine.quarantined_total() as f64)),
+            ("quarantined", counter("quarantined_total")),
             (
                 "breakers",
                 Json::obj(vec![
-                    ("open", Json::Num(self.engine.breaker_open_count() as f64)),
-                    ("trips", Json::Num(self.engine.breaker_trips() as f64)),
+                    ("open", gauge("breakers_open")),
+                    ("trips", counter("breaker_trips_total")),
                 ]),
             ),
             (
                 "counters",
                 Json::obj(vec![
-                    ("shed", Json::Num(self.stats.shed.load(Ordering::Relaxed) as f64)),
-                    (
-                        "deadline_expired",
-                        Json::Num(self.stats.deadline_expired.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "degraded",
-                        Json::Num(self.stats.degraded.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "conn_aborted",
-                        Json::Num(self.stats.conn_aborted.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "conn_slowed",
-                        Json::Num(self.stats.conn_slowed.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "accept_errors",
-                        Json::Num(self.stats.accept_errors.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "accept_backoffs",
-                        Json::Num(self.stats.accept_backoffs.load(Ordering::Relaxed) as f64),
-                    ),
+                    ("shed", counter("shed_total")),
+                    ("deadline_expired", counter("deadline_expired_total")),
+                    ("degraded", counter("degraded_total")),
+                    ("conn_aborted", counter("conn_aborted_total")),
+                    ("conn_slowed", counter("conn_slowed_total")),
+                    ("accept_errors", counter("accept_errors_total")),
+                    ("accept_backoffs", counter("accept_backoffs_total")),
                 ]),
             ),
             (
                 "queue",
                 Json::obj(vec![
-                    (
-                        "depth",
-                        Json::Num(self.stats.queue_depth.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("cap", Json::Num(self.cfg.queue_cap as f64)),
+                    ("depth", gauge("queue_depth")),
+                    ("cap", gauge("queue_cap")),
                 ]),
             ),
             (
                 "batch",
-                {
-                    let (p50, p99, mean) = percentiles(&self.stats.batch_widths);
-                    Json::obj(vec![
-                        ("width_p50", Json::Num(p50)),
-                        ("width_p99", Json::Num(p99)),
-                        ("width_mean", Json::Num(mean)),
-                    ])
-                },
+                Json::obj(vec![
+                    ("width_p50", Json::Num(widths.quantile(0.50))),
+                    ("width_p99", Json::Num(widths.quantile(0.99))),
+                    ("width_mean", Json::Num(widths.mean())),
+                ]),
             ),
             (
                 "faults",
@@ -769,7 +856,7 @@ impl Service {
 
     #[cfg(test)]
     fn latency_samples_held(&self) -> usize {
-        locked(&self.stats.latencies_us).samples.len()
+        self.stats.latency_us.snapshot().count() as usize
     }
 
     /// Handle one deterministic batch: responses come back in request
@@ -844,9 +931,9 @@ impl Service {
                         // shed: answered at the next flush, in stream
                         // order, with a bounded error instead of
                         // queueing without bound
-                        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-                        self.stats.errors.fetch_add(1, Ordering::Relaxed);
-                        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                        self.stats.requests.inc();
+                        self.stats.errors.inc();
+                        self.stats.shed.inc();
                         let id =
                             Json::parse(&line).ok().and_then(|j| j.get("id").cloned());
                         pending.push(Pending::Shed(id));
@@ -865,8 +952,8 @@ impl Service {
                     // answer in stream order: everything read before the
                     // oversized line first, then its bounded error
                     self.flush(&mut pending, out)?;
-                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
-                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    self.stats.requests.inc();
+                    self.stats.errors.inc();
                     writeln!(out, "{}", self.oversized_error(id).compact())
                         .map_err(|e| format!("write response: {e}"))?;
                     out.flush().map_err(|e| format!("flush responses: {e}"))?;
@@ -915,6 +1002,8 @@ impl Service {
     /// caller's job — the two framing layers detect oversize at
     /// different points in their read loops.
     fn oversized_error(&self, id: Option<Json>) -> Json {
+        let mut sp = Span::root("svc.request");
+        sp.set_meta("oversized");
         let mut pairs = vec![(
             "error",
             Json::Str(format!("request line exceeds the {} byte cap", self.cfg.max_line)),
@@ -928,8 +1017,8 @@ impl Service {
     /// Reactor framing hook: count + render the oversized-line error,
     /// salvaging the id from the retained prefix.
     pub(crate) fn oversized_line(&self, prefix: &[u8]) -> Json {
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.stats.errors.fetch_add(1, Ordering::Relaxed);
+        self.stats.requests.inc();
+        self.stats.errors.inc();
         self.oversized_error(salvage_id(prefix))
     }
 
@@ -938,9 +1027,9 @@ impl Service {
     /// connection's write-buffer cap (same response either way — the
     /// client's remedy is identical: back off and retry).
     pub(crate) fn shed_line(&self, line: &str) -> Json {
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        self.stats.errors.fetch_add(1, Ordering::Relaxed);
-        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        self.stats.requests.inc();
+        self.stats.errors.inc();
+        self.stats.shed.inc();
         let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
         self.shed_response(id)
     }
@@ -966,6 +1055,8 @@ impl Service {
     /// The bounded-queue shed response: the `"reason": "overloaded"` +
     /// `retry_after_ms` contract chaos tests pin.
     fn shed_response(&self, id: Option<Json>) -> Json {
+        let mut sp = Span::root("svc.request");
+        sp.set_meta("shed");
         let mut pairs = vec![
             (
                 "error",
@@ -983,54 +1074,44 @@ impl Service {
         Json::obj(pairs)
     }
 
-    /// Aggregate accounting so far. Latency and formed-batch-width
-    /// percentiles come from their bounded sample buffers (exact below
-    /// [`LATENCY_CAP`] observations, uniformly subsampled beyond).
+    /// Aggregate accounting so far, read off the unified
+    /// [`Service::metrics_snapshot`]. Latency and formed-batch-width
+    /// percentiles come from the bounded log₂ histograms (every
+    /// observation counted; quantiles exact within their bucket).
     pub fn summary(&self) -> ServiceSummary {
-        let (latency_p50_us, latency_p99_us, latency_mean_us) =
-            percentiles(&self.stats.latencies_us);
-        let (batch_p50, batch_p99, batch_mean) = percentiles(&self.stats.batch_widths);
+        let snap = self.metrics_snapshot();
+        let lat = snap.histogram("request_latency_us");
+        let widths = snap.histogram("batch_width");
         // min extraction time over timed extractions only; cache hits
         // were Sample::Cached markers and never entered the floor
         let min_extract_us = locked(&self.stats.min_extract_s).map(|s| s * 1e6);
-        let cache = self.engine.cache();
         ServiceSummary {
-            requests: self.stats.requests.load(Ordering::Relaxed),
-            errors: self.stats.errors.load(Ordering::Relaxed),
-            batches: self.stats.batches.load(Ordering::Relaxed),
-            cache_hits: cache.hits(),
-            cache_misses: cache.misses(),
-            cache_evictions: cache.evictions(),
-            distinct_kernels: cache.len(),
-            latency_p50_us,
-            latency_p99_us,
-            latency_mean_us,
+            requests: snap.counter("requests_total"),
+            errors: snap.counter("errors_total"),
+            batches: snap.counter("batches_total"),
+            cache_hits: snap.counter("cache_hits_total"),
+            cache_misses: snap.counter("cache_misses_total"),
+            cache_evictions: snap.counter("cache_evictions_total"),
+            distinct_kernels: snap.gauge("cache_entries") as usize,
+            latency_p50_us: lat.quantile(0.50),
+            latency_p90_us: lat.quantile(0.90),
+            latency_p99_us: lat.quantile(0.99),
+            latency_mean_us: lat.mean(),
             min_extract_us,
-            shed: self.stats.shed.load(Ordering::Relaxed),
-            deadline_expired: self.stats.deadline_expired.load(Ordering::Relaxed),
-            degraded_served: self.stats.degraded.load(Ordering::Relaxed),
-            conn_aborted: self.stats.conn_aborted.load(Ordering::Relaxed),
-            conn_slowed: self.stats.conn_slowed.load(Ordering::Relaxed),
-            quarantined: self.engine.quarantined_total(),
-            accept_errors: self.stats.accept_errors.load(Ordering::Relaxed),
-            accept_backoffs: self.stats.accept_backoffs.load(Ordering::Relaxed),
-            queue_depth: self.stats.queue_depth.load(Ordering::Relaxed),
-            batch_p50,
-            batch_p99,
-            batch_mean,
+            shed: snap.counter("shed_total"),
+            deadline_expired: snap.counter("deadline_expired_total"),
+            degraded_served: snap.counter("degraded_total"),
+            conn_aborted: snap.counter("conn_aborted_total"),
+            conn_slowed: snap.counter("conn_slowed_total"),
+            quarantined: snap.counter("quarantined_total"),
+            accept_errors: snap.counter("accept_errors_total"),
+            accept_backoffs: snap.counter("accept_backoffs_total"),
+            queue_depth: snap.gauge("queue_depth"),
+            batch_p50: widths.quantile(0.50),
+            batch_p99: widths.quantile(0.99),
+            batch_mean: widths.mean(),
         }
     }
-}
-
-/// (p50, p99, mean) over a bounded sample buffer; zeros when empty.
-fn percentiles(buf: &Mutex<LatencyBuf>) -> (f64, f64, f64) {
-    let mut v = locked(buf).samples.clone();
-    v.sort_by(f64::total_cmp);
-    if v.is_empty() {
-        return (0.0, 0.0, 0.0);
-    }
-    let pct = |p: f64| v[(((v.len() - 1) as f64) * p).round() as usize];
-    (pct(0.50), pct(0.99), v.iter().sum::<f64>() / v.len() as f64)
 }
 
 /// One queued slot of the batched serving loop: a request waiting to
@@ -1317,24 +1398,78 @@ mod tests {
     }
 
     #[test]
-    fn latency_buffer_stays_bounded_under_heavy_traffic() {
-        let mut buf = LatencyBuf::default();
-        for i in 0..10 * LATENCY_CAP {
-            buf.push(i as f64);
+    fn latency_histogram_counts_every_sample_in_bounded_state() {
+        // the histogram's state is bounded by construction (65 fixed
+        // buckets), yet every observation is counted — unlike the old
+        // decimating buffer, heavy traffic loses nothing
+        let h = Histogram::new();
+        for i in 0..200_000u64 {
+            h.observe(i);
         }
-        assert!(buf.samples.len() < LATENCY_CAP, "held {}", buf.samples.len());
-        assert!(buf.stride > 1, "decimation must have kicked in");
-        assert_eq!(buf.seen, (10 * LATENCY_CAP) as u64);
-        // below the cap, recording is exact
-        let mut small = LatencyBuf::default();
-        for i in 0..100 {
-            small.push(i as f64);
-        }
-        assert_eq!(small.samples.len(), 100);
-        // the service-side accessor reports the bounded count
+        assert_eq!(h.snapshot().count(), 200_000);
+        // the service-side accessor reports the exact count
         let svc = toy_service();
         svc.respond(r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#);
         assert_eq!(svc.latency_samples_held(), 1);
+        let s = svc.summary();
+        assert!(s.latency_p50_us >= 0.0);
+        assert!(s.latency_p90_us >= s.latency_p50_us || s.latency_p90_us == 0.0);
+    }
+
+    /// Satellite contract: `{"cmd": "metrics"}` exposes the unified
+    /// snapshot as Prometheus text, and the numbers agree with both
+    /// the health surface and the summary because all three read
+    /// [`Service::metrics_snapshot`].
+    #[test]
+    fn metrics_cmd_exposes_the_same_snapshot_as_health_and_summary() {
+        let svc = toy_service();
+        svc.respond(r#"{"device": "k40c", "kernel": "fd5", "case": "a"}"#);
+        svc.note_shed();
+        svc.note_accept_backoff();
+        svc.note_queue_depth(3);
+        let m = svc.respond(r#"{"cmd": "metrics", "id": "m1"}"#);
+        assert_eq!(m.get_str("ok"), Some("metrics"), "{m}");
+        assert_eq!(m.get_str("id"), Some("m1"));
+        let text = m.get_str("exposition").unwrap().to_string();
+        // the metrics request itself is request #2 and was counted
+        // before rendering
+        assert!(text.contains("# TYPE uniperf_requests_total counter"), "{text}");
+        assert!(text.contains("uniperf_requests_total 2"), "{text}");
+        assert!(text.contains("uniperf_cache_misses_total 1"), "{text}");
+        assert!(text.contains("uniperf_shed_total 1"), "{text}");
+        assert!(text.contains("uniperf_accept_backoffs_total 1"), "{text}");
+        assert!(text.contains("# TYPE uniperf_queue_depth gauge"), "{text}");
+        assert!(text.contains("uniperf_queue_depth 3"), "{text}");
+        assert!(text.contains("# TYPE uniperf_request_latency_us histogram"), "{text}");
+        assert!(text.contains("uniperf_request_latency_us_count 1"), "{text}");
+        // cross-surface agreement on traffic-independent values
+        let s = svc.summary();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.queue_depth, 3);
+        let h = svc.respond(r#"{"cmd": "health"}"#);
+        assert_eq!(h.get("counters").unwrap().get_f64("shed"), Some(1.0), "{h}");
+        assert_eq!(h.get("queue").unwrap().get_f64("depth"), Some(3.0), "{h}");
+        assert!(
+            !text.contains("uniperf_fault_"),
+            "no fault plan installed, no fault metrics: {text}"
+        );
+    }
+
+    #[test]
+    fn trace_cmd_reports_recorder_state() {
+        let svc = toy_service();
+        let t = svc.respond(r#"{"cmd": "trace", "id": 7}"#);
+        assert_eq!(t.get_str("ok"), Some("trace"), "{t}");
+        assert_eq!(t.get_f64("id"), Some(7.0));
+        // the enabled flag is whatever the process-global recorder
+        // says (parallel tests may have enabled it); the span arrays
+        // are always present
+        assert!(t.get("enabled").and_then(Json::as_bool).is_some(), "{t}");
+        assert!(matches!(t.get("spans"), Some(Json::Arr(_))), "{t}");
+        assert!(matches!(t.get("slow"), Some(Json::Arr(_))), "{t}");
+        // trace requests count like any other request, never as errors
+        let s = svc.summary();
+        assert_eq!((s.requests, s.errors), (1, 0));
     }
 
     #[test]

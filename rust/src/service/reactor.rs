@@ -311,6 +311,9 @@ mod imp {
     use super::super::{locked, Service};
     use super::sys::{Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT};
     use super::ReactorConfig;
+    use crate::obs::log::Level;
+    use crate::obs::span::{self, Span};
+    use crate::olog;
     use crate::report::ServiceSummary;
     use crate::util::executor::WorkerPool;
     use crate::util::json::Json;
@@ -525,7 +528,14 @@ mod imp {
                         batch.iter().map(|i| (i.slot, i.gen, i.seq)).collect();
                     let lines: Vec<(String, Instant)> =
                         batch.into_iter().map(|i| (i.line, i.at)).collect();
+                    // the `svc.batch` span inside respond_batch nests
+                    // under this dispatch span (same worker thread)
+                    let mut sp = Span::root("reactor.dispatch");
+                    if span::enabled() {
+                        sp.set_meta(format!("width={}", lines.len()));
+                    }
                     let responses = svc.respond_batch(lines, 1);
+                    drop(sp);
                     let mut done = locked(&shared.done);
                     for ((slot, gen, seq), resp) in keys.into_iter().zip(responses) {
                         done.push(Done {
@@ -576,7 +586,7 @@ mod imp {
                 let n = match self.epoll.wait(&mut events, timeout) {
                     Ok(n) => n,
                     Err(e) => {
-                        eprintln!("uniperf serve: reactor wait failed: {e}");
+                        olog!(Level::Error, "uniperf serve: reactor wait failed: {e}");
                         break;
                     }
                 };
@@ -611,7 +621,12 @@ mod imp {
                 if n < cap && !window_due && !self.draining {
                     return;
                 }
-                let batch: Vec<Item> = self.pending.drain(..n.min(cap)).collect();
+                let take = n.min(cap);
+                let mut sp = Span::root("reactor.formation");
+                if span::enabled() {
+                    sp.set_meta(format!("width={take}"));
+                }
+                let batch: Vec<Item> = self.pending.drain(..take).collect();
                 self.inflight += batch.len();
                 // hot reload between dispatched batches — the same
                 // cadence the threaded loop polls at
@@ -619,6 +634,7 @@ mod imp {
                 if let Some(pool) = &self.pool {
                     pool.submit(batch);
                 }
+                drop(sp);
             }
         }
 
@@ -686,7 +702,7 @@ mod imp {
                     Err(e) => {
                         let fd_exhausted = matches!(e.raw_os_error(), Some(23) | Some(24));
                         if let Some(msg) = self.svc.note_accept_error(&e) {
-                            eprintln!("uniperf serve: {msg}");
+                            olog!(Level::Warn, "uniperf serve: {msg}");
                         }
                         if fd_exhausted {
                             // EMFILE/ENFILE: drop the reserve fd so one
@@ -727,7 +743,10 @@ mod imp {
                 }
             }
             if let Some(Err(e)) = self.svc.poll_reload() {
-                eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}");
+                olog!(
+                    Level::Warn,
+                    "uniperf serve: artifact reload failed (keeping current models): {e}"
+                );
             }
             let cap = self.cfg.max_conns.max(1);
             if self.n_conns >= cap {
@@ -750,7 +769,7 @@ mod imp {
             }
             let _ = stream.set_nodelay(true);
             if let Err(e) = stream.set_nonblocking(true) {
-                eprintln!("uniperf serve: connection setup failed: {e}");
+                olog!(Level::Warn, "uniperf serve: connection setup failed: {e}");
                 return;
             }
             self.gen = self.gen.wrapping_add(1);
@@ -764,7 +783,7 @@ mod imp {
             };
             let interest = if defer_until.is_some() { 0 } else { EPOLLIN };
             if let Err(e) = self.epoll.add(stream.as_raw_fd(), interest, token_for(slot, gen)) {
-                eprintln!("uniperf serve: connection registration failed: {e}");
+                olog!(Level::Warn, "uniperf serve: connection registration failed: {e}");
                 self.free.push(slot);
                 return;
             }
@@ -835,7 +854,8 @@ mod imp {
                     LineEvent::BadUtf8 => {
                         // the buffered framer treats this as a
                         // connection-fatal stream error; match it
-                        eprintln!(
+                        olog!(
+                            Level::Warn,
                             "uniperf serve: connection error: read request stream: \
                              request line is not valid UTF-8"
                         );
@@ -845,7 +865,7 @@ mod imp {
                 }
             }
             if let Some(e) = hard_error {
-                eprintln!("uniperf serve: connection error: read request stream: {e}");
+                olog!(Level::Warn, "uniperf serve: connection error: read request stream: {e}");
                 self.kill_conn(slot);
                 return;
             }
@@ -859,6 +879,7 @@ mod imp {
             if line.trim().is_empty() {
                 return;
             }
+            let mut sp = Span::root("reactor.enqueue");
             let queue_cap = self.svc.config().queue_cap.max(1);
             let write_cap = self.cfg.write_buf_cap.max(1);
             let over_write = match self.conns.get(slot).and_then(Option::as_ref) {
@@ -866,6 +887,7 @@ mod imp {
                 None => return,
             };
             if over_write || self.pending.len() + self.inflight >= queue_cap {
+                sp.set_meta("shed");
                 let resp = self.svc.shed_line(&line);
                 self.complete_local(slot, resp);
                 return;
@@ -879,6 +901,7 @@ mod imp {
                 }
                 None => return,
             };
+            sp.set_meta("queued");
             self.pending.push_back(Item { slot, gen, seq, line, at: Instant::now() });
         }
 

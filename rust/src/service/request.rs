@@ -28,6 +28,10 @@
 //! * `"health"` / `"stats"` — liveness + introspection: store
 //!   fingerprint, reloader state, cache/quarantine/breaker counters and
 //!   fault-injection tallies. Never touches the prediction path.
+//! * `"metrics"` — the unified metrics snapshot as Prometheus-style
+//!   exposition text (same snapshot health and stats are built from).
+//! * `"trace"` — recent + slow structured spans as JSON (empty unless
+//!   the server was started with `--trace`/`--profile`).
 //!
 //! `id` — any JSON value, echoed verbatim in the response.
 //!
@@ -87,6 +91,10 @@ pub enum Request {
     Health { id: Option<Json> },
     /// counter snapshot (requests, cache, shedding, quarantine)
     Stats { id: Option<Json> },
+    /// Prometheus-style exposition of the unified metrics snapshot
+    Metrics { id: Option<Json> },
+    /// recent + slow structured spans as JSON
+    Trace { id: Option<Json> },
 }
 
 /// Parse the optional `env` object into (name, value) bindings.
@@ -230,8 +238,11 @@ impl Request {
                 Some("shutdown") => Ok(Request::Shutdown { id: j.get("id").cloned() }),
                 Some("health") => Ok(Request::Health { id: j.get("id").cloned() }),
                 Some("stats") => Ok(Request::Stats { id: j.get("id").cloned() }),
+                Some("metrics") => Ok(Request::Metrics { id: j.get("id").cloned() }),
+                Some("trace") => Ok(Request::Trace { id: j.get("id").cloned() }),
                 Some(other) => Err(format!(
-                    "request: unknown cmd '{other}' (predict|matrix|health|stats|shutdown)"
+                    "request: unknown cmd '{other}' \
+                     (predict|matrix|health|stats|metrics|trace|shutdown)"
                 )),
                 None => Err("request: 'cmd' must be a string".into()),
             },
@@ -361,6 +372,14 @@ mod tests {
         match Request::parse(r#"{"cmd": "stats"}"#).unwrap() {
             Request::Stats { id } => assert!(id.is_none()),
             other => panic!("expected stats, got {other:?}"),
+        }
+        match Request::parse(r#"{"cmd": "metrics", "id": "m"}"#).unwrap() {
+            Request::Metrics { id } => assert_eq!(id, Some(Json::Str("m".into()))),
+            other => panic!("expected metrics, got {other:?}"),
+        }
+        match Request::parse(r#"{"cmd": "trace"}"#).unwrap() {
+            Request::Trace { id } => assert!(id.is_none()),
+            other => panic!("expected trace, got {other:?}"),
         }
     }
 

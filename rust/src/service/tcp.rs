@@ -31,6 +31,8 @@
 //!   server without a restart.
 
 use super::Service;
+use crate::obs::log::Level;
+use crate::olog;
 use crate::report::ServiceSummary;
 use std::io::{BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -66,7 +68,7 @@ pub fn serve_threaded(
                 // to one line per errno per window (SYN churn would
                 // otherwise flood stderr)
                 if let Some(msg) = svc.note_accept_error(&e) {
-                    eprintln!("uniperf serve: {msg}");
+                    olog!(Level::Warn, "uniperf serve: {msg}");
                 }
                 continue;
             }
@@ -87,7 +89,10 @@ pub fn serve_threaded(
         }
         // hot reload between connections (batch loops poll it too)
         if let Some(Err(e)) = svc.poll_reload() {
-            eprintln!("uniperf serve: artifact reload failed (keeping current models): {e}");
+            olog!(
+                Level::Warn,
+                "uniperf serve: artifact reload failed (keeping current models): {e}"
+            );
         }
         // connection-count guard: shed load loudly instead of
         // spawning unbounded threads
@@ -146,19 +151,19 @@ fn serve_one(svc: &Arc<Service>, stream: TcpStream, addr: std::net::SocketAddr) 
     // shutdown flag (see `read_request_line`) instead of blocking
     // forever on an idle socket
     if let Err(e) = stream.set_read_timeout(Some(READ_POLL)) {
-        eprintln!("uniperf serve: connection setup failed: {e}");
+        olog!(Level::Warn, "uniperf serve: connection setup failed: {e}");
         return;
     }
     let reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(e) => {
-            eprintln!("uniperf serve: connection setup failed: {e}");
+            olog!(Level::Warn, "uniperf serve: connection setup failed: {e}");
             return;
         }
     };
     if let Err(e) = svc.serve_connection(reader, stream) {
         // a broken client must not take the listener down
-        eprintln!("uniperf serve: connection error: {e}");
+        olog!(Level::Warn, "uniperf serve: connection error: {e}");
     }
     if svc.shutdown_requested() {
         // unblock the accept loop; any connection works, including a

@@ -17,6 +17,7 @@ pub mod ops;
 
 use crate::isl::progression::StrideClass;
 use crate::lpir::{Insn, Kernel, MemSpace, OpKind};
+use crate::obs::span::{self, Span};
 use crate::qpoly::tape::{EnvFrame, PwTape, TapeScratch};
 use crate::qpoly::PwQPoly;
 use crate::schedule::schedule;
@@ -351,6 +352,12 @@ impl KernelProps {
         out.resize(n * m, 0.0);
         if n == 0 {
             return Ok(());
+        }
+        // timing hook for the observability plane: one span per batched
+        // tape walk, lane count in the meta. Inert when tracing is off.
+        let mut sp = Span::child("tape.eval_batch");
+        if span::enabled() {
+            sp.set_meta(format!("lanes={n}"));
         }
         let tapes = self.tapes();
         let plan = self.plan_for(schema);

@@ -4,6 +4,8 @@
 //! Output format is one line per benchmark:
 //! `bench <name> ... median 1.234 ms  mean 1.240 ms ± 0.5%  (20 samples)`
 
+use crate::obs::log::Level;
+use crate::olog;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -168,7 +170,7 @@ impl Bench {
         let path = format!("BENCH_{suite}.json");
         match std::fs::write(&path, self.to_json(suite).pretty()) {
             Ok(()) => println!("wrote {path}"),
-            Err(e) => eprintln!("could not write {path}: {e}"),
+            Err(e) => olog!(Level::Error, "could not write {path}: {e}"),
         }
     }
 }

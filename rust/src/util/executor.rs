@@ -10,6 +10,7 @@
 //! touched exactly once, uncontended) and processes items front-to-back
 //! instead of the queue's back-to-front pop order.
 
+use crate::obs::span::{self, Span};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -37,18 +38,29 @@ where
     let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
+            scope.spawn(|| {
+                // one root span per worker thread: its duration against
+                // the items it claimed is the utilization signal the
+                // trace export surfaces (inert when tracing is off)
+                let mut sp = Span::root("par_map.worker");
+                let mut claimed = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("work item claimed twice");
+                    let r = f(item);
+                    *out[i].lock().unwrap() = Some(r);
+                    claimed += 1;
                 }
-                let item = slots[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("work item claimed twice");
-                let r = f(item);
-                *out[i].lock().unwrap() = Some(r);
+                if span::enabled() {
+                    sp.set_meta(format!("items={claimed}"));
+                }
             });
         }
     });

@@ -34,7 +34,8 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::Counter;
 
 use crate::util::json::Json;
 use crate::util::rng::splitmix64;
@@ -46,9 +47,9 @@ struct Site {
     /// Injection ceiling: once `injected` reaches `max`, the site goes
     /// quiet (attempts still count). `u64::MAX` = unlimited.
     max: u64,
-    attempts: AtomicU64,
-    injected: AtomicU64,
-    draws: AtomicU64,
+    attempts: Counter,
+    injected: Counter,
+    draws: Counter,
 }
 
 /// A seeded, counter-based fault plan. See the module docs.
@@ -98,9 +99,9 @@ impl FaultPlan {
             Site {
                 rate: rate.clamp(0.0, 1.0),
                 max,
-                attempts: AtomicU64::new(0),
-                injected: AtomicU64::new(0),
-                draws: AtomicU64::new(0),
+                attempts: Counter::new(),
+                injected: Counter::new(),
+                draws: Counter::new(),
             },
         );
         self
@@ -165,15 +166,15 @@ impl FaultPlan {
         let Some(s) = self.sites.get(site) else {
             return false;
         };
-        let k = s.attempts.fetch_add(1, Ordering::Relaxed);
+        let k = s.attempts.next();
         if unit(decision(self.seed, site, k, INJECT_SALT)) >= s.rate {
             return false;
         }
         // Reserve an injection slot; back out if the ceiling is reached
         // so `injected` never exceeds `max` even under concurrency.
-        let prev = s.injected.fetch_add(1, Ordering::Relaxed);
+        let prev = s.injected.next();
         if prev >= s.max {
-            s.injected.fetch_sub(1, Ordering::Relaxed);
+            s.injected.dec();
             return false;
         }
         true
@@ -186,7 +187,7 @@ impl FaultPlan {
         let Some(s) = self.sites.get(site) else {
             return 0;
         };
-        let k = s.draws.fetch_add(1, Ordering::Relaxed);
+        let k = s.draws.next();
         decision(self.seed, site, k, DRAW_SALT)
     }
 
@@ -194,7 +195,7 @@ impl FaultPlan {
     pub fn attempts(&self, site: &str) -> u64 {
         self.sites
             .get(site)
-            .map(|s| s.attempts.load(Ordering::Relaxed))
+            .map(|s| s.attempts.get())
             .unwrap_or(0)
     }
 
@@ -202,7 +203,7 @@ impl FaultPlan {
     pub fn injected(&self, site: &str) -> u64 {
         self.sites
             .get(site)
-            .map(|s| s.injected.load(Ordering::Relaxed))
+            .map(|s| s.injected.get())
             .unwrap_or(0)
     }
 
@@ -216,8 +217,8 @@ impl FaultPlan {
                 name.clone(),
                 Json::obj(vec![
                     ("rate", Json::Num(s.rate)),
-                    ("attempts", Json::Num(s.attempts.load(Ordering::Relaxed) as f64)),
-                    ("injected", Json::Num(s.injected.load(Ordering::Relaxed) as f64)),
+                    ("attempts", Json::Num(s.attempts.get() as f64)),
+                    ("injected", Json::Num(s.injected.get() as f64)),
                 ]),
             );
         }

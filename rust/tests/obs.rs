@@ -1,0 +1,230 @@
+//! Observability-plane integration tests: the `{"cmd": "metrics"}` /
+//! `{"cmd": "health"}` / summary surfaces agree because they render one
+//! registry snapshot; response bytes are bit-identical whether span
+//! recording is on or off; and with recording on, every accepted
+//! request line lands in exactly one well-nested span tree — including
+//! the shed and deadline-expired paths that never reach the evaluator.
+//!
+//! The span recorder is process-global and tests here only ever
+//! *enable* it, so the byte-parity phase (which needs it off) runs
+//! before the enable inside one test function, and span assertions
+//! filter to trace ids minted after a marker span.
+
+use uniperf::gpusim::registry::builtins;
+use uniperf::obs::span::{self, Span};
+use uniperf::perfmodel::Model;
+use uniperf::service::{ModelStore, Service, ServiceConfig, StoredModel};
+use uniperf::stats::{ExtractOpts, Schema};
+
+/// A k40c+titan_x store over the work-group and constant columns —
+/// registry-valid, no fit required, deterministic predictions (same
+/// shape as the transport parity tests).
+fn toy_store() -> ModelStore {
+    let schema = Schema::full();
+    let mut store = ModelStore::new(&schema, ExtractOpts::default());
+    for (device, group_w, const_w) in [("k40c", 2e-9, 5e-6), ("titan_x", 1e-9, 3e-6)] {
+        let mut weights = vec![0.0; schema.len()];
+        weights[schema.len() - 2] = group_w;
+        weights[schema.len() - 1] = const_w;
+        let model = Model {
+            device: device.into(),
+            weights,
+            active: vec![schema.len() - 2, schema.len() - 1],
+            train_rel_err_geomean: 0.1,
+            solver: "native-cholesky",
+        };
+        store.insert(StoredModel::new(model, 8e-6, 400, builtins().get(device).unwrap()));
+    }
+    store
+}
+
+fn toy_service(cfg: ServiceConfig) -> Service {
+    Service::new(toy_store(), builtins().clone(), cfg).expect("service")
+}
+
+/// A deterministic request stream: no timing-dependent response fields
+/// (`stats`/`metrics`/`trace` embed measured latencies and are pinned
+/// field-wise elsewhere).
+fn golden_stream() -> Vec<String> {
+    vec![
+        r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"cmd": "matrix", "kernel": "fd5", "case": "a", "devices": ["k40c", "titan_x"], "id": "m1"}"#
+            .into(),
+        r#"{"id": 2, "device": "k40c", "kernel": "nope"}"#.into(),
+        r#"this is not json"#.into(),
+        r#"{"cmd": "health"}"#.into(),
+    ]
+}
+
+/// The three exposure surfaces — Prometheus exposition, the health
+/// block, and the structured summary — are all views of one snapshot
+/// and can never disagree.
+#[test]
+fn metrics_cmd_health_and_summary_agree() {
+    let svc = toy_service(ServiceConfig { workers: 1, ..ServiceConfig::default() });
+    // one real width-3 batch (the single-request `respond` path is
+    // deliberately not batch-accounted; width 3 also keeps this
+    // binary's conservation test free to filter on its own width-2
+    // batch span once tracing is on)
+    for p in svc.run_batch(vec![
+        r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 1, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+        r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#.into(),
+    ]) {
+        assert!(p.get_str("error").is_none(), "{}", p.compact());
+    }
+
+    let m = svc.respond(r#"{"cmd": "metrics", "id": "mx"}"#);
+    assert_eq!(m.get_str("ok"), Some("metrics"), "{}", m.compact());
+    assert_eq!(m.get_str("id"), Some("mx"));
+    let text = m.get_str("exposition").expect("exposition text").to_string();
+
+    // the metrics request itself is counted before rendering
+    assert!(text.contains("# TYPE uniperf_requests_total counter\nuniperf_requests_total 4\n"), "{text}");
+    assert!(text.contains("uniperf_cache_misses_total 1\n"), "{text}");
+    assert!(text.contains("uniperf_cache_hits_total 2\n"), "{text}");
+    assert!(text.contains("uniperf_errors_total 0\n"), "{text}");
+    assert!(text.contains("# TYPE uniperf_queue_cap gauge"), "{text}");
+    assert!(text.contains("# TYPE uniperf_request_latency_us histogram"), "{text}");
+    assert!(text.contains("uniperf_request_latency_us_count 3\n"), "{text}");
+    assert!(text.contains("uniperf_batches_total 1\n"), "{text}");
+    assert!(text.contains("uniperf_batch_width_sum 3\n"), "{text}");
+    assert!(text.contains("uniperf_batch_width_count 1\n"), "{text}");
+
+    // health and the summary read the same snapshot
+    let h = svc.respond(r#"{"cmd": "health"}"#);
+    assert_eq!(h.get_str("ok"), Some("health"), "{}", h.compact());
+    let cache = h.get("cache").expect("cache block");
+    assert_eq!(cache.get_f64("misses"), Some(1.0), "{}", h.compact());
+    assert_eq!(cache.get_f64("hits"), Some(2.0));
+    let counters = h.get("counters").expect("counters block");
+    assert_eq!(counters.get_f64("shed"), Some(0.0));
+    let s = svc.summary();
+    assert_eq!(s.requests, 5, "batch of 3 + metrics + health");
+    assert_eq!(s.cache_misses, 1);
+    assert_eq!(s.cache_hits, 2);
+}
+
+/// Phase 1: with the recorder off (and again with it on), the golden
+/// stream's response bytes are identical — tracing is observably free
+/// at the protocol surface. Phase 2: with the recorder on, every
+/// accepted line is accounted for in exactly one well-nested span tree,
+/// including the shed and deadline paths. One test function because the
+/// recorder is process-global: phase 1 must run before the enable.
+#[test]
+fn tracing_toggle_keeps_bytes_identical_and_spans_conserve() {
+    // --- phase 1: byte parity across the recorder toggle ---
+    assert!(!span::enabled(), "recorder must start disabled");
+    let golden = golden_stream();
+    let cold = toy_service(ServiceConfig { workers: 1, ..ServiceConfig::default() });
+    let bytes_off: Vec<String> =
+        golden.iter().map(|l| cold.respond(l).compact()).collect();
+
+    span::enable(f64::INFINITY); // keep the slow ring out of play
+    let warm = toy_service(ServiceConfig { workers: 1, ..ServiceConfig::default() });
+    let bytes_on: Vec<String> =
+        golden.iter().map(|l| warm.respond(l).compact()).collect();
+    assert_eq!(bytes_off, bytes_on, "span recording must not change response bytes");
+
+    // --- phase 2: span conservation over shed + deadline + predict ---
+    let marker = {
+        let s = Span::root("test.marker");
+        s.trace_id()
+    };
+    assert!(marker > 0);
+
+    // queue_cap 2, batch 8: lines 1-2 are answered, lines 3-5 shed
+    let svc = toy_service(ServiceConfig {
+        workers: 1,
+        batch: 8,
+        queue_cap: 2,
+        ..ServiceConfig::default()
+    });
+    let input = concat!(
+        r#"{"id": 0, "device": "k40c", "kernel": "fd5", "case": "a"}"#, "\n",
+        r#"{"id": 1, "device": "k40c", "kernel": "fd5", "deadline_ms": 0}"#, "\n",
+        r#"{"id": 2, "device": "k40c", "kernel": "fd5", "case": "a"}"#, "\n",
+        r#"not even json"#, "\n",
+        r#"{"id": 4, "device": "k40c", "kernel": "fd5", "case": "a"}"#, "\n",
+    );
+    let mut out = Vec::new();
+    let summary = svc.serve(input.as_bytes(), &mut out).expect("serve");
+    assert_eq!(summary.requests, 5);
+    assert_eq!(summary.shed, 3);
+    assert_eq!(summary.deadline_expired, 1);
+
+    let ours: Vec<span::SpanRec> =
+        span::recent().into_iter().filter(|s| s.trace > marker).collect();
+
+    // the three shed lines never reach the evaluator; each still gets
+    // its own root span
+    let shed_roots: Vec<&span::SpanRec> = ours
+        .iter()
+        .filter(|s| s.name == "svc.request" && s.parent == 0)
+        .collect();
+    assert_eq!(shed_roots.len(), 3, "one root span per shed line: {ours:?}");
+    for s in &shed_roots {
+        assert_eq!(s.meta.as_deref(), Some("shed"));
+    }
+
+    // exactly one batch tree holds the two answered lines (the width-2
+    // meta scopes the filter: other tests in this binary only ever
+    // respond one line at a time)
+    let batches: Vec<&span::SpanRec> = ours
+        .iter()
+        .filter(|s| s.name == "svc.batch" && s.meta.as_deref() == Some("width=2"))
+        .collect();
+    assert_eq!(batches.len(), 1, "{ours:?}");
+    let batch = batches[0];
+    assert_eq!(batch.parent, 0);
+    assert_eq!(batch.meta.as_deref(), Some("width=2"));
+    let tree: Vec<&span::SpanRec> =
+        ours.iter().filter(|s| s.trace == batch.trace).collect();
+
+    let requests: Vec<&&span::SpanRec> =
+        tree.iter().filter(|s| s.name == "svc.request").collect();
+    assert_eq!(requests.len(), 2, "{tree:?}");
+    let mut kinds: Vec<&str> =
+        requests.iter().filter_map(|s| s.meta.as_deref()).collect();
+    kinds.sort_unstable();
+    assert_eq!(kinds, ["deadline", "predict"]);
+    for r in &requests {
+        assert_eq!(r.parent, batch.span, "requests parent under the batch root");
+    }
+
+    // shared evaluator + renderer children, and the engine/tape spans
+    // they adopt (workers=1 keeps resolution on the serving thread)
+    for name in ["svc.eval", "svc.render"] {
+        let n = tree.iter().filter(|s| s.name == name && s.parent == batch.span).count();
+        assert_eq!(n, 1, "{name} under the batch root: {tree:?}");
+    }
+    assert!(
+        tree.iter().any(|s| s.name == "engine.extract"),
+        "the cold store's first lookup misses and the miss extracts: {tree:?}"
+    );
+    assert!(
+        tree.iter().any(|s| s.name == "tape.eval_batch"),
+        "the batched tape walk is spanned: {tree:?}"
+    );
+
+    // well-nested by construction: every child interval sits inside its
+    // parent's (2 µs slack for independent truncation to µs)
+    for s in &tree {
+        if s.parent == 0 {
+            continue;
+        }
+        let p = tree
+            .iter()
+            .find(|c| c.span == s.parent)
+            .unwrap_or_else(|| panic!("parent of {s:?} present in trace"));
+        assert!(s.start_us + 2 >= p.start_us, "child starts after parent: {s:?} in {p:?}");
+        assert!(
+            s.start_us + s.dur_us <= p.start_us + p.dur_us + 2,
+            "child ends before parent: {s:?} in {p:?}"
+        );
+    }
+
+    // conservation: 5 accepted lines == 2 in the batch tree + 3 shed
+    assert_eq!(requests.len() + shed_roots.len(), 5);
+}
