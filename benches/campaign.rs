@@ -1,0 +1,236 @@
+//! Campaign-plane smoke: the compile-once measurement plane end to
+//! end. Three sections, all hard-failing on contract violations:
+//!
+//! 1. **Cold vs warm per-case timing** on one device's full
+//!    measurement suite: a populated `MeasCacheFile` must replay every
+//!    raw stream bit-identically, with zero simulator draws, and must
+//!    be strictly faster than cold measurement.
+//! 2. **Flat vs nested scheduling** over four devices: the flat
+//!    shared-pool fan-out (full worker budget at every level) against
+//!    an emulation of the old static `device_workers × inner_workers`
+//!    split. The results must be byte-identical; the flat schedule
+//!    must not be materially slower.
+//! 3. **Warm crossval replay**: a quick two-device transfer split run
+//!    cold then warm through the same cache file — the warm run must
+//!    perform zero simulations, finish faster, and reproduce the cold
+//!    run's JSON record byte for byte.
+//!
+//! Records everything to `BENCH_campaign.json` (consumed by CI's perf
+//! trajectory artifacts).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use uniperf::coordinator::{Config, FitBackend};
+use uniperf::crossval::{quick_campaign_case, run_crossval, CrossvalOpts, Split};
+use uniperf::gpusim::{self, SimGpu, TimingCache};
+use uniperf::harness::{measure_cases, MeasCacheFile, Protocol};
+use uniperf::kernels::{self, KernelCase};
+use uniperf::stats::{ExtractOpts, Schema};
+use uniperf::util::bench::Bench;
+use uniperf::util::executor::{default_workers, par_map};
+use uniperf::util::json::Json;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("uniperf_bench_campaign_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn main() {
+    let schema = Schema::full();
+    let protocol = Protocol::default();
+    let extract = ExtractOpts::default();
+    let workers = default_workers();
+    let mut b = Bench::end_to_end();
+    // one timed iteration is a full campaign; two samples keep the
+    // bench CI-sized
+    b.samples = 2;
+
+    // --- 1. cold vs warm per-case timing ----------------------------
+    let profile = gpusim::device("k40c").expect("k40c profile");
+    let cases = kernels::measurement_suite(&profile);
+    let n_cases = cases.len();
+
+    let cold_gpu = SimGpu::new(profile.clone());
+    let mut cold_result = None;
+    let cold_s = b.run("campaign/k40c/cold", || {
+        cold_result = Some(
+            measure_cases(&cold_gpu, &cases, &schema, &protocol, extract, workers)
+                .expect("cold campaign"),
+        );
+    });
+
+    let cache_path = tmp("k40c");
+    let cache = Arc::new(
+        MeasCacheFile::open(&cache_path, &protocol, gpusim::DEFAULT_SEED)
+            .expect("open meas cache"),
+    );
+    let warm_gpu = SimGpu::new(profile)
+        .with_meas_cache(Some(cache.clone() as Arc<dyn TimingCache>));
+    // one populating pass (cold, write-through), then every timed
+    // iteration replays from the cache
+    let populate = measure_cases(&warm_gpu, &cases, &schema, &protocol, extract, workers)
+        .expect("populating campaign");
+    assert!(
+        !cache.is_empty() && cache.len() <= n_cases,
+        "populating pass must fill the cache (got {} entries for {n_cases} cases)",
+        cache.len()
+    );
+    let draws_before_warm = gpusim::sim_draws();
+    let mut warm_result = None;
+    let warm_s = b.run("campaign/k40c/warm", || {
+        warm_result = Some(
+            measure_cases(&warm_gpu, &cases, &schema, &protocol, extract, workers)
+                .expect("warm campaign"),
+        );
+    });
+    assert_eq!(
+        gpusim::sim_draws(),
+        draws_before_warm,
+        "warm iterations must not touch the simulator"
+    );
+    let cold_ms = cold_result.expect("cold ran");
+    let warm_ms = warm_result.expect("warm ran");
+    assert_eq!(cold_ms.len(), warm_ms.len());
+    for ((c, w), p) in cold_ms.iter().zip(&warm_ms).zip(&populate) {
+        assert_eq!(c.label, w.label, "case order must be preserved");
+        assert_eq!(
+            c.time_s.to_bits(),
+            w.time_s.to_bits(),
+            "bit divergence in replayed time for {}",
+            c.label
+        );
+        assert_eq!(p.time_s.to_bits(), w.time_s.to_bits(), "{}", c.label);
+        let cb: Vec<u64> = c.props.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = w.props.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(cb, wb, "bit divergence in properties for {}", c.label);
+    }
+    assert!(
+        warm_s.median_ns < cold_s.median_ns,
+        "warm replay must beat cold measurement (warm {:.0} ns vs cold {:.0} ns)",
+        warm_s.median_ns,
+        cold_s.median_ns
+    );
+    let cold_cps = n_cases as f64 * 1e9 / cold_s.median_ns;
+    let warm_cps = n_cases as f64 * 1e9 / warm_s.median_ns;
+    println!(
+        "cold {cold_cps:.1} cases/s, warm {warm_cps:.1} cases/s ({:.1}x)",
+        cold_s.median_ns / warm_s.median_ns
+    );
+
+    // --- 2. flat vs nested scheduling over four devices -------------
+    let suites: Vec<(SimGpu, Vec<KernelCase>)> = ["k40c", "r9_fury", "p100", "c2070"]
+        .iter()
+        .map(|d| {
+            let p = gpusim::device(d).expect("builtin device");
+            let mut cs = kernels::measurement_suite(&p);
+            cs.retain(|c| quick_campaign_case(&c.label));
+            (SimGpu::new(p), cs)
+        })
+        .collect();
+    let run_sched = |outer: usize, inner: usize| -> Vec<Vec<u64>> {
+        par_map((0..suites.len()).collect(), outer, |i| {
+            let (gpu, cs) = &suites[i];
+            measure_cases(gpu, cs, &schema, &protocol, extract, inner)
+                .expect("scheduled campaign")
+                .iter()
+                .map(|m| m.time_s.to_bits())
+                .collect()
+        })
+    };
+    // the old static split: devices get the outer budget, each campaign
+    // only its integer share of what is left
+    let device_workers = workers.min(suites.len()).max(1);
+    let inner_workers = (workers / device_workers).max(1);
+    let mut nested_times = None;
+    let nested_s = b.run("campaign/4dev/nested-static-split", || {
+        nested_times = Some(run_sched(device_workers, inner_workers));
+    });
+    let mut flat_times = None;
+    let flat_s = b.run("campaign/4dev/flat-shared-pool", || {
+        flat_times = Some(run_sched(workers, workers));
+    });
+    assert_eq!(
+        nested_times, flat_times,
+        "scheduling must never change measurement bytes"
+    );
+    let flat_ratio = nested_s.median_ns / flat_s.median_ns;
+    println!("flat shared-pool speedup over nested static split: {flat_ratio:.2}x");
+    assert!(
+        flat_s.median_ns <= nested_s.median_ns * 1.25,
+        "flat scheduling materially slower than the nested split \
+         (flat {:.0} ns vs nested {:.0} ns)",
+        flat_s.median_ns,
+        nested_s.median_ns
+    );
+
+    // --- 3. warm crossval replay -------------------------------------
+    let cv_cache = tmp("crossval");
+    let opts = CrossvalOpts {
+        base: Config {
+            devices: vec!["k40c".into(), "r9_fury".into()],
+            backend: FitBackend::Native,
+            meas_cache: Some(cv_cache.clone()),
+            ..Config::default()
+        },
+        split: Split::LeaveOneDeviceOut,
+        quick: true,
+    };
+    let t0 = Instant::now();
+    let cold_cv = run_crossval(&opts).expect("cold crossval");
+    let cold_cv_s = t0.elapsed().as_secs_f64();
+    let draws_before_cv = gpusim::sim_draws();
+    let t1 = Instant::now();
+    let warm_cv = run_crossval(&opts).expect("warm crossval");
+    let warm_cv_s = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        gpusim::sim_draws(),
+        draws_before_cv,
+        "warm crossval must replay with zero simulation"
+    );
+    assert_eq!(
+        cold_cv.to_json().pretty(),
+        warm_cv.to_json().pretty(),
+        "warm crossval replay diverged from the cold run"
+    );
+    assert!(cold_cv.overall_err().is_finite(), "fold error not finite");
+    for f in &cold_cv.folds {
+        assert!(!f.entries.is_empty(), "empty fold {}", f.fold);
+        for e in &f.entries {
+            assert!(
+                e.predicted_s.is_finite() && e.actual_s > 0.0,
+                "degenerate fold entry {}/{}/{}",
+                e.device,
+                e.kernel,
+                e.case
+            );
+        }
+    }
+    assert!(
+        warm_cv_s < cold_cv_s,
+        "warm crossval ({warm_cv_s:.3}s) must beat cold ({cold_cv_s:.3}s)"
+    );
+    println!("crossval device-split: cold {cold_cv_s:.3}s, warm {warm_cv_s:.3}s");
+
+    b.finish("campaign");
+    let mut j = b.to_json("campaign");
+    if let Json::Obj(m) = &mut j {
+        m.insert("cases".into(), Json::Num(n_cases as f64));
+        m.insert("cold_cases_per_s".into(), Json::Num(cold_cps));
+        m.insert("warm_cases_per_s".into(), Json::Num(warm_cps));
+        m.insert(
+            "warm_speedup".into(),
+            Json::Num(cold_s.median_ns / warm_s.median_ns),
+        );
+        m.insert("flat_vs_nested_speedup".into(), Json::Num(flat_ratio));
+        m.insert("crossval_cold_s".into(), Json::Num(cold_cv_s));
+        m.insert("crossval_warm_s".into(), Json::Num(warm_cv_s));
+        m.insert("meascache_entries".into(), Json::Num(cache.len() as f64));
+    }
+    std::fs::write("BENCH_campaign.json", j.pretty()).expect("write BENCH_campaign.json");
+    println!("wrote BENCH_campaign.json");
+    let _ = std::fs::remove_file(&cache_path);
+    let _ = std::fs::remove_file(&cv_cache);
+}

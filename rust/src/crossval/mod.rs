@@ -361,14 +361,23 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
         if opts.quick { &quick_campaign_case } else { &keep_all };
     let zoo_keep: &(dyn Fn(&str) -> bool + Sync) =
         if opts.quick { &quick_zoo_case } else { &keep_all };
-    let device_workers = cfg.workers.min(profiles.len()).max(1);
-    let inner_workers = (cfg.workers / device_workers).max(1);
+    // Flat scheduling: both the per-device fan-out and each device's
+    // per-case timing fan-out request the full worker budget. Every
+    // ticket drains the one process-wide executor queue
+    // ([`crate::util::executor`]), so the (device, fold, case) work
+    // flattens itself — inner case tickets fill whatever slots the
+    // device level leaves idle — instead of the old static
+    // device_workers × inner_workers split that oversubscribed wide
+    // registries and starved narrow ones. Output order (and therefore
+    // every assembled table) is still input order: `par_map` collects
+    // by index regardless of scheduling.
+    let workers = cfg.workers.max(1);
     let mut measure_span = Span::child("crossval.measure");
     if span::enabled() {
         measure_span.set_meta(format!("devices={}", cfg.devices.len()));
     }
-    let ctxs = par_map(profiles, device_workers, |p| {
-        engine.measure_fold_ctx(&p, campaign_keep, zoo_keep, inner_workers)
+    let ctxs = par_map(profiles, workers, |p| {
+        engine.measure_fold_ctx(&p, campaign_keep, zoo_keep, workers)
     });
     drop(measure_span);
     let mut contexts = Vec::with_capacity(ctxs.len());
@@ -379,7 +388,7 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
     let results = if opts.split == Split::LeaveOneDeviceOut {
         // one fold per source device, each predicting all other devices
         let sources: Vec<usize> = (0..contexts.len()).collect();
-        par_map(sources, cfg.workers.max(1), |si| {
+        par_map(sources, workers, |si| {
             run_transfer_fold(&engine, &contexts, si)
         })
     } else {
@@ -397,7 +406,7 @@ pub fn run_crossval(opts: &CrossvalOpts) -> Result<CrossvalResult, String> {
                 jobs.push((di, key.to_string()));
             }
         }
-        par_map(jobs, cfg.workers.max(1), |(di, fold)| {
+        par_map(jobs, workers, |(di, fold)| {
             run_fold(&engine, &contexts[di], &fold, opts.split)
         })
     };

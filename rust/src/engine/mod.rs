@@ -41,10 +41,11 @@ pub mod pipeline;
 
 pub use pipeline::{CampaignNotes, DeviceResult, FoldCtx, ZooCase};
 
-use crate::gpusim::{registry, DeviceProfile, DeviceRegistry, SimGpu};
-use crate::harness::Protocol;
+use crate::gpusim::{registry, DeviceProfile, DeviceRegistry, SimGpu, TimingCache};
+use crate::harness::{MeasCacheFile, Protocol};
 use crate::kernels::{self, KernelCase};
 use crate::obs::log::Level;
+use crate::obs::metrics;
 use crate::obs::span::{self, Span};
 use crate::olog;
 use crate::perfmodel::{NativeSolver, Solver};
@@ -122,6 +123,14 @@ pub struct Config {
     /// file (format/schema/options mismatch) is refused with a warning
     /// and the engine runs cold — never trusted
     pub props_cache: Option<PathBuf>,
+    /// persistent campaign measurement cache
+    /// ([`crate::harness::meascache::MeasCacheFile`]): raw timing
+    /// streams are appended as they are measured and preloaded at
+    /// startup, so a repeated `fit`/`crossval`/`transfer` replays its
+    /// campaigns bit-identically with zero simulation. An incompatible
+    /// file (format/protocol/seed mismatch) is refused with a warning
+    /// and the engine measures cold — never trusted
+    pub meas_cache: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -143,6 +152,7 @@ impl Default for Config {
             faults: None,
             degraded: false,
             props_cache: None,
+            meas_cache: None,
         }
     }
 }
@@ -234,6 +244,10 @@ pub struct Engine {
     /// robustness bookkeeping (quarantine counts, campaign warnings,
     /// extraction circuit breakers) surfaced on the service health page
     robust: RobustState,
+    /// the persistent campaign measurement cache, when configured and
+    /// accepted ([`Config::meas_cache`]); attached to every [`SimGpu`]
+    /// this engine constructs
+    meas: Option<Arc<MeasCacheFile>>,
 }
 
 /// Consecutive inline-extraction failures before the circuit opens for
@@ -289,6 +303,28 @@ impl Engine {
                 }
             }
         }
+        let mut meas = None;
+        if let Some(path) = &cfg.meas_cache {
+            // same posture as the props cache: a refused or unreadable
+            // file costs the warm replay, never the engine
+            match MeasCacheFile::open(path, &cfg.protocol, crate::gpusim::DEFAULT_SEED) {
+                Ok(f) => {
+                    if f.loaded() > 0 {
+                        olog!(
+                            Level::Info,
+                            "uniperf: meas cache {}: preloaded {} measurement streams",
+                            path.display(),
+                            f.loaded()
+                        );
+                    }
+                    meas = Some(Arc::new(f));
+                }
+                Err(e) => {
+                    metrics::campaign().counter("meascache_refused_total").inc();
+                    olog!(Level::Warn, "uniperf: meas cache disabled (measuring cold): {e}")
+                }
+            }
+        }
         Engine {
             cfg,
             schema,
@@ -296,6 +332,7 @@ impl Engine {
             store: RwLock::new(None),
             suites: RwLock::new(BTreeMap::new()),
             robust: RobustState::default(),
+            meas,
         }
     }
 
@@ -366,7 +403,17 @@ impl Engine {
     /// the one constructor every engine measurement path uses, so
     /// `measure.*` sites cover campaigns and fold measurement alike.
     pub fn sim_gpu(&self, profile: DeviceProfile) -> SimGpu {
-        SimGpu::new(profile).with_faults(self.cfg.faults.clone())
+        SimGpu::new(profile)
+            .with_faults(self.cfg.faults.clone())
+            .with_meas_cache(
+                self.meas.clone().map(|m| m as Arc<dyn TimingCache>),
+            )
+    }
+
+    /// The attached campaign measurement cache, when one was configured
+    /// and accepted (for hit/miss summaries on the fit/crossval paths).
+    pub fn meas_cache(&self) -> Option<&Arc<MeasCacheFile>> {
+        self.meas.as_ref()
     }
 
     /// Instantiate the configured fit backend ([`make_solver`]), with

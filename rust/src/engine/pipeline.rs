@@ -187,8 +187,14 @@ impl Engine {
     /// [`Engine::install_store`] to serve it from this engine).
     pub fn fit_store(&self) -> Result<ModelStore, String> {
         let cfg = self.config();
-        let device_workers = cfg.workers.min(cfg.devices.len()).max(1);
-        let results = par_map(cfg.devices.clone(), device_workers, |dev| {
+        // Flat scheduling: every level of the fan-out (devices here,
+        // per-case timing inside each campaign) requests the full
+        // worker budget — all tickets drain one process-wide executor
+        // queue ([`crate::util::executor`]), so inner case work fills
+        // whatever slots the device level leaves idle instead of a
+        // static device×case split oversubscribing either level.
+        let workers = cfg.workers.max(1);
+        let results = par_map(cfg.devices.clone(), workers, |dev| {
             self.campaign_and_fit(&dev).map(|(gpu, pm, model, overhead, _notes)| {
                 (gpu.profile, pm.n_cases(), model, overhead)
             })

@@ -16,13 +16,28 @@
 //! None of these effects are linear in the model's properties, so the fit
 //! against this engine exhibits the paper's error structure rather than
 //! being a change of basis.
+//!
+//! ## Compile-once evaluation
+//!
+//! The structural part of the analysis — access-index tapes, per-insn
+//! op-count polynomials, projected iteration domains, the barrier
+//! schedule, the noise-stream name prefix — depends only on the kernel
+//! *structure*, not on the size binding. [`CompiledTiming`] lowers it
+//! once per (device, kernel) and re-evaluates per env, so a campaign's
+//! ~10 size cases per kernel class (and every retry attempt) stop
+//! recompiling the kernel. The free [`base_time`] / [`run_times`]
+//! functions are thin wrappers over a process-wide compiled cache and
+//! are pinned bit-identical to the historical per-call computation.
 
 use super::device::DeviceProfile;
-use crate::lpir::{Insn, Kernel, MemSpace};
+use crate::isl::BoxDomain;
+use crate::lpir::{Kernel, MemSpace, OpKind};
 use crate::qpoly::tape::LinTape;
-use crate::qpoly::LinExpr;
+use crate::qpoly::{LinExpr, PwQPoly, QPoly};
 use crate::util::intern::{Env, Sym};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Cost breakdown for one kernel launch (seconds unless noted).
 #[derive(Clone, Debug, Default)]
@@ -50,149 +65,268 @@ struct AccessCost {
 /// repeated line fetches.
 const BROADCAST_MULT: f64 = 12.0;
 
-/// Count distinct cache lines a warp touches for one access, averaged over
-/// a few sampled warp instances.
-#[allow(clippy::too_many_arguments)]
-fn warp_lines(
-    kernel: &Kernel,
-    insn: &Insn,
-    idx: &[LinExpr],
-    axis_strides: &[i64],
+/// One global-memory access, pre-lowered for per-env evaluation.
+struct GlobalAccess {
+    array: Sym,
+    /// original index expressions (footprint flattening needs them)
+    idx: Vec<LinExpr>,
+    /// index expressions compiled to slot tapes (the per-call
+    /// `LinTape::compile` this artifact exists to hoist)
+    tapes: Vec<LinTape>,
+    /// per-axis element-stride polynomials of the array
+    strides: Vec<QPoly>,
     elem_bytes: i64,
-    red: &[Sym],
-    env: &Env,
-    profile: &DeviceProfile,
-) -> Result<(f64, bool), String> {
-    // inames the access ranges over: instruction inames + reduction scope
-    let mut names: Vec<Sym> = insn.within.clone();
-    for r in red {
-        if !names.contains(r) {
-            names.push(*r);
-        }
-    }
-    // lane axes
-    let locals = kernel.local_inames();
-    let l0 = locals.get(&0).copied();
-    let l1 = locals.get(&1).copied();
-    let l0_ext = match l0 {
-        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
-        None => 1,
-    };
-    let l1_ext = match l1 {
-        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
-        None => 1,
-    };
-    let threads = (l0_ext * l1_ext).max(1);
-    let warp = (profile.warp_size as i64).min(threads);
-
-    let mut total_lines = 0.0;
-    let mut samples = 0usize;
-    let mut all_broadcast = true;
-    // one reusable slot-frame environment for the whole sampling loop,
-    // and the index expressions compiled to tapes once per access
-    let mut ienv = env.clone();
-    let tapes: Vec<LinTape> = idx.iter().map(LinTape::compile).collect();
-    let mut addrs: Vec<i64> = Vec::with_capacity(warp as usize);
-    for (si, frac) in SAMPLE_FRACS.iter().enumerate() {
-        // fix non-lane inames at a sampled position in their range
-        for name in &names {
-            if Some(*name) == l0 || Some(*name) == l1 {
-                continue;
-            }
-            let dim = match kernel.domain.dim(*name) {
-                Some(d) => d,
-                None => continue,
-            };
-            let trip = dim.trip_count_at(env)?;
-            let lo = dim.lo.eval(env)?;
-            let t = ((frac * (trip - 1).max(0) as f64).floor() as i64).clamp(0, (trip - 1).max(0));
-            ienv.bind(*name, lo + dim.step * t);
-        }
-        // one warp: linear local ids [w0, w0 + warp)
-        let w0 = if si % 2 == 0 { 0 } else { ((threads / warp).max(1) - 1) * warp };
-        addrs.clear();
-        for lid in w0..(w0 + warp) {
-            if let Some(n0) = l0 {
-                ienv.bind(n0, lid % l0_ext);
-            }
-            if let Some(n1) = l1 {
-                ienv.bind(n1, (lid / l0_ext) % l1_ext.max(1));
-            }
-            let mut flat: i64 = 0;
-            for (tape, &st) in tapes.iter().zip(axis_strides) {
-                flat += tape.eval(&ienv)? * st;
-            }
-            addrs.push(flat * elem_bytes);
-        }
-        addrs.sort_unstable();
-        let uniform = addrs.first() == addrs.last() && !addrs.is_empty();
-        let mut lines = 0usize;
-        let mut prev = i64::MIN;
-        for &a in &addrs {
-            let line = a.div_euclid(profile.line_bytes as i64);
-            if line != prev {
-                lines += 1;
-                prev = line;
-            }
-        }
-        total_lines += lines as f64;
-        all_broadcast &= uniform;
-        samples += 1;
-    }
-    Ok((total_lines / samples as f64, all_broadcast))
+    /// inames the access ranges over (instruction inames + reduction scope)
+    names: Vec<Sym>,
+    /// iteration domain projected onto `names` (for exec counts)
+    domain: BoxDomain,
 }
 
-/// Analyze all global accesses of a kernel into DRAM traffic estimates.
-fn access_costs(
-    kernel: &Kernel,
-    env: &Env,
-    profile: &DeviceProfile,
-) -> Result<Vec<AccessCost>, String> {
-    let mut costs = Vec::new();
-    // per-array total requested bytes, for cache smoothing
-    let mut requested: BTreeMap<Sym, f64> = BTreeMap::new();
-    let mut raw: Vec<(Sym, f64, bool)> = Vec::new(); // (array, line-bytes, uncoalesced)
-    // per-array flattened accesses with group inames pinned (for the
-    // per-group unique-working-set estimate)
-    let mut group_flats: BTreeMap<Sym, Vec<crate::stats::footprint::FlatAccess>> =
-        BTreeMap::new();
+/// One local-memory access: count domain + bank-conflict inputs.
+struct LocalAccess {
+    domain: BoxDomain,
+    elem_bytes: f64,
+    /// per-axis (lane-0 coefficient of the index expr, element stride)
+    lane: Vec<(i64, QPoly)>,
+}
 
-    let locals = kernel.local_inames();
-    let l0_ext = match locals.get(&0) {
-        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
-        None => 1,
-    };
-    let l1_ext = match locals.get(&1) {
-        Some(n) => kernel.domain.dim(n).map(|d| d.trip_count_at(env)).transpose()?.unwrap_or(1),
-        None => 1,
-    };
-    let threads = (l0_ext * l1_ext).max(1);
-    let warp = (profile.warp_size as i64).min(threads) as f64;
+/// Per-(device, kernel-structure) timing artifact: everything in the
+/// cost analysis that does not depend on the size binding, lowered once
+/// and re-evaluated per env (tentpole of the compile-once measurement
+/// plane). Obtain via [`compiled_for`].
+pub struct CompiledTiming {
+    /// device-name + kernel-name bytes: the seed-independent input of
+    /// the noise-stream hash prefix (see [`CompiledTiming::stream_hash`])
+    name_bytes: Vec<u8>,
+    l0: Option<Sym>,
+    l1: Option<Sym>,
+    /// group inames (pinned to group 0 for the per-group footprint)
+    gnames: Vec<Sym>,
+    globals: Vec<GlobalAccess>,
+    locals: Vec<LocalAccess>,
+    /// flattened (kind, bits, count-poly) op table in the historical
+    /// insn-order / key-order walk
+    ops: Vec<(OpKind, u32, PwQPoly)>,
+    /// barrier count per group; scheduling errors are deferred so they
+    /// surface at the same point of `base_time` as before
+    barriers: Result<PwQPoly, String>,
+}
 
-    for insn in &kernel.insns {
-        let mut handle = |idx: &[LinExpr], array: Sym, red: &[Sym]| -> Result<(), String> {
-            let arr = match kernel.array(array) {
-                Some(a) => a,
-                None => return Ok(()),
+impl CompiledTiming {
+    /// Lower the structural part of the cost analysis. Infallible: the
+    /// only fallible structural step (the barrier schedule) is stored as
+    /// a deferred `Result` so error ordering matches the historical
+    /// per-call path.
+    fn compile(profile: &DeviceProfile, kernel: &Kernel) -> CompiledTiming {
+        let locals_map = kernel.local_inames();
+        let l0 = locals_map.get(&0).copied();
+        let l1 = locals_map.get(&1).copied();
+        let gnames: Vec<Sym> =
+            kernel.group_inames().into_iter().map(|(_, g)| g).collect();
+
+        // global accesses, in the exact historical walk order:
+        // lhs, (lhs again on updates), rhs loads in visit order
+        let mut globals = Vec::new();
+        for insn in &kernel.insns {
+            let mut handle = |idx: &[LinExpr], array: Sym, red: &[Sym]| {
+                let arr = match kernel.array(array) {
+                    Some(a) => a,
+                    None => return,
+                };
+                if arr.space != MemSpace::Global {
+                    return;
+                }
+                let mut names: Vec<Sym> = insn.within.clone();
+                for r in red {
+                    if !names.contains(r) {
+                        names.push(*r);
+                    }
+                }
+                globals.push(GlobalAccess {
+                    array,
+                    idx: idx.to_vec(),
+                    tapes: idx.iter().map(LinTape::compile).collect(),
+                    strides: arr.elem_strides(),
+                    elem_bytes: arr.dtype.size_bytes() as i64,
+                    domain: kernel.domain.project_onto(&names),
+                    names,
+                });
             };
-            if arr.space != MemSpace::Global {
-                return Ok(());
+            handle(&insn.lhs.idx, insn.lhs.array, &[]);
+            if insn.is_update {
+                handle(&insn.lhs.idx, insn.lhs.array, &[]);
             }
-            let axis_strides: Vec<i64> = arr
-                .elem_strides()
+            insn.rhs.visit_loads(&mut |a, red| handle(&a.idx, a.array, red));
+        }
+
+        // local accesses: store first, then rhs loads, per insn
+        let mut locals = Vec::new();
+        let lane_pairs = |idx: &[LinExpr], strides: Vec<QPoly>| -> Vec<(i64, QPoly)> {
+            idx.iter()
+                .zip(strides)
+                .map(|(e, st)| (l0.map(|lane| e.coeff(lane)).unwrap_or(0), st))
+                .collect()
+        };
+        for insn in &kernel.insns {
+            if let Some(arr) = kernel.array(insn.lhs.array) {
+                if arr.space == MemSpace::Local {
+                    locals.push(LocalAccess {
+                        domain: kernel.insn_domain(insn, false),
+                        elem_bytes: arr.dtype.size_bytes() as f64,
+                        lane: lane_pairs(&insn.lhs.idx, arr.elem_strides()),
+                    });
+                }
+            }
+            insn.rhs.visit_loads(&mut |a, red| {
+                if let Some(arr) = kernel.array(a.array) {
+                    if arr.space == MemSpace::Local {
+                        let mut names: Vec<Sym> = insn.within.clone();
+                        for r in red {
+                            if !names.contains(r) {
+                                names.push(*r);
+                            }
+                        }
+                        locals.push(LocalAccess {
+                            domain: kernel.domain.project_onto(&names),
+                            elem_bytes: arr.dtype.size_bytes() as f64,
+                            lane: lane_pairs(&a.idx, arr.elem_strides()),
+                        });
+                    }
+                }
+            });
+        }
+
+        let mut ops = Vec::new();
+        for insn in &kernel.insns {
+            for ((kind, bits), q) in crate::stats::ops::count_insn_ops(kernel, insn) {
+                ops.push((kind, bits, q));
+            }
+        }
+
+        let barriers = crate::schedule::schedule(kernel)
+            .map(|s| s.barriers_per_group(kernel));
+
+        let mut name_bytes: Vec<u8> = profile.name.as_bytes().to_vec();
+        name_bytes.extend_from_slice(kernel.name.as_bytes());
+
+        CompiledTiming { name_bytes, l0, l1, gnames, globals, locals, ops, barriers }
+    }
+
+    fn l01_extents(&self, kernel: &Kernel, env: &Env) -> Result<(i64, i64), String> {
+        let ext = |n: Option<Sym>| -> Result<i64, String> {
+            Ok(match n {
+                Some(n) => kernel
+                    .domain
+                    .dim(n)
+                    .map(|d| d.trip_count_at(env))
+                    .transpose()?
+                    .unwrap_or(1),
+                None => 1,
+            })
+        };
+        Ok((ext(self.l0)?, ext(self.l1)?))
+    }
+
+    /// Count distinct cache lines a warp touches for one access, averaged
+    /// over a few sampled warp instances.
+    fn warp_lines(
+        &self,
+        acc: &GlobalAccess,
+        axis_strides: &[i64],
+        kernel: &Kernel,
+        env: &Env,
+        profile: &DeviceProfile,
+        l0_ext: i64,
+        l1_ext: i64,
+    ) -> Result<(f64, bool), String> {
+        let threads = (l0_ext * l1_ext).max(1);
+        let warp = (profile.warp_size as i64).min(threads);
+
+        let mut total_lines = 0.0;
+        let mut samples = 0usize;
+        let mut all_broadcast = true;
+        // one reusable slot-frame environment for the whole sampling loop
+        let mut ienv = env.clone();
+        let mut addrs: Vec<i64> = Vec::with_capacity(warp as usize);
+        for (si, frac) in SAMPLE_FRACS.iter().enumerate() {
+            // fix non-lane inames at a sampled position in their range
+            for name in &acc.names {
+                if Some(*name) == self.l0 || Some(*name) == self.l1 {
+                    continue;
+                }
+                let dim = match kernel.domain.dim(*name) {
+                    Some(d) => d,
+                    None => continue,
+                };
+                let trip = dim.trip_count_at(env)?;
+                let lo = dim.lo.eval(env)?;
+                let t = ((frac * (trip - 1).max(0) as f64).floor() as i64)
+                    .clamp(0, (trip - 1).max(0));
+                ienv.bind(*name, lo + dim.step * t);
+            }
+            // one warp: linear local ids [w0, w0 + warp)
+            let w0 = if si % 2 == 0 { 0 } else { ((threads / warp).max(1) - 1) * warp };
+            addrs.clear();
+            for lid in w0..(w0 + warp) {
+                if let Some(n0) = self.l0 {
+                    ienv.bind(n0, lid % l0_ext);
+                }
+                if let Some(n1) = self.l1 {
+                    ienv.bind(n1, (lid / l0_ext) % l1_ext.max(1));
+                }
+                let mut flat: i64 = 0;
+                for (tape, &st) in acc.tapes.iter().zip(axis_strides) {
+                    flat += tape.eval(&ienv)? * st;
+                }
+                addrs.push(flat * acc.elem_bytes);
+            }
+            addrs.sort_unstable();
+            let uniform = addrs.first() == addrs.last() && !addrs.is_empty();
+            let mut lines = 0usize;
+            let mut prev = i64::MIN;
+            for &a in &addrs {
+                let line = a.div_euclid(profile.line_bytes as i64);
+                if line != prev {
+                    lines += 1;
+                    prev = line;
+                }
+            }
+            total_lines += lines as f64;
+            all_broadcast &= uniform;
+            samples += 1;
+        }
+        Ok((total_lines / samples as f64, all_broadcast))
+    }
+
+    /// Analyze all global accesses into DRAM traffic estimates.
+    fn access_costs(
+        &self,
+        kernel: &Kernel,
+        env: &Env,
+        profile: &DeviceProfile,
+    ) -> Result<Vec<AccessCost>, String> {
+        let mut costs = Vec::new();
+        // per-array total requested bytes, for cache smoothing
+        let mut requested: BTreeMap<Sym, f64> = BTreeMap::new();
+        let mut raw: Vec<(Sym, f64, bool)> = Vec::new(); // (array, line-bytes, uncoalesced)
+        // per-array flattened accesses with group inames pinned (for the
+        // per-group unique-working-set estimate)
+        let mut group_flats: BTreeMap<Sym, Vec<crate::stats::footprint::FlatAccess>> =
+            BTreeMap::new();
+
+        let (l0_ext, l1_ext) = self.l01_extents(kernel, env)?;
+        let threads = (l0_ext * l1_ext).max(1);
+        let warp = (profile.warp_size as i64).min(threads) as f64;
+
+        for acc in &self.globals {
+            let axis_strides: Vec<i64> = acc
+                .strides
                 .iter()
                 .map(|q| q.eval(env).map(|x| x as i64))
                 .collect::<Result<_, _>>()?;
-            let elem_bytes = arr.dtype.size_bytes() as i64;
-            let mut names: Vec<Sym> = insn.within.clone();
-            for r in red {
-                if !names.contains(r) {
-                    names.push(*r);
-                }
-            }
-            let execs = kernel.domain.project_onto(&names).count_at(env)? as f64;
+            let execs = acc.domain.count_at(env)? as f64;
             let (lines_per_warp, broadcast) =
-                warp_lines(kernel, insn, idx, &axis_strides, elem_bytes, red, env, profile)?;
+                self.warp_lines(acc, &axis_strides, kernel, env, profile, l0_ext, l1_ext)?;
             let n_warps = execs / warp;
             let mut bytes = lines_per_warp * n_warps * profile.line_bytes as f64;
             if broadcast {
@@ -200,77 +334,285 @@ fn access_costs(
                 bytes /= BROADCAST_MULT;
             }
             // ideal fully-coalesced line count for this access width
-            let ideal = (warp * elem_bytes as f64 / profile.line_bytes as f64).max(1.0);
+            let ideal = (warp * acc.elem_bytes as f64 / profile.line_bytes as f64).max(1.0);
             let uncoalesced = lines_per_warp > 2.5 * ideal;
-            *requested.entry(array).or_insert(0.0) += bytes;
-            raw.push((array, bytes, uncoalesced));
+            *requested.entry(acc.array).or_insert(0.0) += bytes;
+            raw.push((acc.array, bytes, uncoalesced));
             // flattened access with group inames pinned to group 0
             let mut flat =
-                crate::stats::footprint::flatten_access(kernel, idx, &axis_strides, env)?;
-            for (_, gname) in kernel.group_inames() {
-                flat.coeffs.remove(&gname);
-                flat.ranges.remove(&gname);
+                crate::stats::footprint::flatten_access(kernel, &acc.idx, &axis_strides, env)?;
+            for gname in &self.gnames {
+                flat.coeffs.remove(gname);
+                flat.ranges.remove(gname);
             }
-            group_flats.entry(array).or_default().push(flat);
-            Ok(())
-        };
-        handle(&insn.lhs.idx, insn.lhs.array, &[])?;
-        if insn.is_update {
-            handle(&insn.lhs.idx, insn.lhs.array, &[])?;
+            group_flats.entry(acc.array).or_default().push(flat);
         }
-        let mut err: Option<String> = None;
-        insn.rhs.visit_loads(&mut |a, red| {
-            if err.is_none() {
-                err = handle(&a.idx, a.array, red).err();
-            }
-        });
-        if let Some(e) = err {
-            return Err(e);
+
+        // Cache smoothing: traffic beyond an array's compulsory footprint is
+        // served from cache when one of these working sets fits —
+        // * the whole array is L2-resident, or
+        // * the *unique* cells one work group touches fit its SM's L1
+        //   (temporal reuse inside a tile region, e.g. convolution windows),
+        //   estimated by enumerating the access pattern with the group
+        //   inames pinned, or
+        // * the concurrently-resident groups' unique slices fit L2.
+        let groups = kernel.group_count_at(env)?.max(1) as f64;
+        let (gs0, gs1) = kernel.group_size_at(env)?;
+        let concurrent = profile.concurrent_groups(gs0 * gs1) as f64;
+        // per-array unique bytes one group touches
+        let mut group_unique: BTreeMap<Sym, f64> = BTreeMap::new();
+        for (array, flats) in &group_flats {
+            let arr = kernel.array(*array).unwrap();
+            let cells = crate::stats::footprint::unique_cells(flats) as f64;
+            group_unique.insert(*array, cells * arr.dtype.size_bytes() as f64);
         }
+        for (array, bytes, uncoalesced) in raw {
+            let arr = kernel.array(array).unwrap();
+            let footprint: f64 = arr
+                .extents_at(env)?
+                .iter()
+                .map(|&e| e as f64)
+                .product::<f64>()
+                * arr.dtype.size_bytes() as f64;
+            let total_req = requested[&array];
+            let per_group = group_unique.get(&array).copied().unwrap_or(footprint);
+            let cached = footprint <= profile.l2_bytes as f64
+                || per_group <= profile.l1_bytes as f64
+                || per_group * concurrent.min(groups) <= profile.l2_bytes as f64;
+            let dram = if cached && total_req > footprint {
+                // this access's share of the compulsory traffic + cache-rate rest
+                let share = bytes / total_req;
+                footprint * share + (bytes - footprint * share) / profile.l2_bw_mult
+            } else {
+                bytes
+            };
+            let dram = if uncoalesced { dram * profile.uncoalesced_penalty } else { dram };
+            costs.push(AccessCost { dram_bytes: dram });
+        }
+        Ok(costs)
     }
 
-    // Cache smoothing: traffic beyond an array's compulsory footprint is
-    // served from cache when one of these working sets fits —
-    // * the whole array is L2-resident, or
-    // * the *unique* cells one work group touches fit its SM's L1
-    //   (temporal reuse inside a tile region, e.g. convolution windows),
-    //   estimated by enumerating the access pattern with the group
-    //   inames pinned, or
-    // * the concurrently-resident groups' unique slices fit L2.
-    let groups = kernel.group_count_at(env)?.max(1) as f64;
-    let (gs0, gs1) = kernel.group_size_at(env)?;
-    let concurrent = profile.concurrent_groups(gs0 * gs1) as f64;
-    // per-array unique bytes one group touches
-    let mut group_unique: BTreeMap<Sym, f64> = BTreeMap::new();
-    for (array, flats) in &group_flats {
-        let arr = kernel.array(*array).unwrap();
-        let cells = crate::stats::footprint::unique_cells(flats) as f64;
-        group_unique.insert(*array, cells * arr.dtype.size_bytes() as f64);
-    }
-    for (array, bytes, uncoalesced) in raw {
-        let arr = kernel.array(array).unwrap();
-        let footprint: f64 = arr
-            .extents_at(env)?
-            .iter()
-            .map(|&e| e as f64)
-            .product::<f64>()
-            * arr.dtype.size_bytes() as f64;
-        let total_req = requested[&array];
-        let per_group = group_unique.get(&array).copied().unwrap_or(footprint);
-        let cached = footprint <= profile.l2_bytes as f64
-            || per_group <= profile.l1_bytes as f64
-            || per_group * concurrent.min(groups) <= profile.l2_bytes as f64;
-        let dram = if cached && total_req > footprint {
-            // this access's share of the compulsory traffic + cache-rate rest
-            let share = bytes / total_req;
-            footprint * share + (bytes - footprint * share) / profile.l2_bw_mult
-        } else {
-            bytes
+    /// Compute the noise-free cost breakdown of one launch at one env.
+    pub fn base_time(
+        &self,
+        profile: &DeviceProfile,
+        kernel: &Kernel,
+        env: &Env,
+    ) -> Result<Breakdown, String> {
+        let (gs0, gs1) = kernel.group_size_at(env)?;
+        let group_size = gs0 * gs1;
+        if group_size > profile.max_group_size as i64 {
+            return Err(format!(
+                "group size {group_size} exceeds device limit {} on {}",
+                profile.max_group_size, profile.name
+            ));
+        }
+        let groups = kernel.group_count_at(env)?.max(1);
+
+        // --- memory ---------------------------------------------------------
+        let costs = self.access_costs(kernel, env, profile)?;
+        let dram_bytes: f64 = costs.iter().map(|c| c.dram_bytes).sum();
+        let mem = dram_bytes * ripple(profile, dram_bytes) / profile.dram_bw;
+
+        // --- arithmetic -------------------------------------------------------
+        let mut alu_cycles = 0.0;
+        for (kind, bits, q) in &self.ops {
+            let count = q.eval(env)?;
+            alu_cycles += count * profile.cycles_for(*kind, *bits);
+        }
+        let alu =
+            alu_cycles / (profile.sms as f64 * profile.cores_per_sm as f64 * profile.clock_hz);
+
+        // --- local (shared) memory traffic ------------------------------------
+        // Bank conflicts (32 banks, 4-byte words): a lane stride of s
+        // serializes a warp's access gcd(s, 32)-fold; strides 0 (broadcast)
+        // and 1 are conflict-free. The linear model can optionally bin local
+        // loads by this stride (paper §6.2 future work; ExtractOpts).
+        let mut local_bytes = 0.0;
+        for acc in &self.locals {
+            let factor = if self.l0.is_none() {
+                1.0
+            } else {
+                let mut s: i64 = 0;
+                for (c, st) in &acc.lane {
+                    s += c * st.eval(env)? as i64;
+                }
+                let s = s.abs();
+                // worst-case serialization is gcd(s, banks); real parts
+                // mitigate via line multicast, so cap the effective degree
+                if s <= 1 { 1.0 } else { (gcd_i64(s, 32) as f64).min(4.0) }
+            };
+            let execs = acc.domain.count_at(env)? as f64;
+            local_bytes += execs * acc.elem_bytes * factor;
+        }
+        let local = local_bytes / profile.local_bw;
+
+        // --- barriers -----------------------------------------------------------
+        let per_group = match &self.barriers {
+            Ok(p) => p.eval(env)?,
+            Err(e) => return Err(e.clone()),
         };
-        let dram = if uncoalesced { dram * profile.uncoalesced_penalty } else { dram };
-        costs.push(AccessCost { dram_bytes: dram });
+        let warps_per_group =
+            ((group_size as f64) / profile.warp_size as f64).ceil().max(1.0);
+        let barrier = per_group * groups as f64 * warps_per_group * profile.cyc_barrier
+            / (profile.clock_hz * profile.sms as f64);
+
+        // --- overlap + occupancy -------------------------------------------------
+        let busy = mem.max(alu).max(local);
+        let hidden = mem + alu + local - busy;
+        let mut exec = busy + (1.0 - profile.overlap) * hidden + barrier;
+
+        let concurrent = profile.concurrent_groups(group_size);
+        let waves = (groups + concurrent - 1) / concurrent;
+        // wave quantization: partially-filled final waves waste throughput.
+        // Only a fraction of the workload is latency/occupancy sensitive.
+        let quant = (waves * concurrent) as f64 / groups as f64;
+        const LAT_SENSITIVITY: f64 = 0.25;
+        exec *= 1.0 + LAT_SENSITIVITY * (quant - 1.0);
+        // pipeline-latency floor: one full traversal plus a small per-wave
+        // scheduling cost (waves pipeline, they do not serialize the latency)
+        exec += profile.wave_latency + (waves - 1) as f64 * 120e-9;
+
+        let launch = profile.launch_base + profile.launch_per_group * groups as f64;
+        Ok(Breakdown {
+            launch,
+            mem,
+            alu,
+            local,
+            barrier,
+            waves,
+            total: launch + exec,
+        })
     }
-    Ok(costs)
+
+    /// The per-(device, kernel, env, seed) noise-stream hash, bit-identical
+    /// to the historical inline computation: the device/kernel name prefix
+    /// is folded from the precomputed byte string, then bindings are hashed
+    /// in name order so the stream matches the historical string-keyed maps.
+    pub fn stream_hash(&self, env: &Env, seed: u64) -> u64 {
+        let mut h: u64 = seed ^ 0x9E37_79B9_97F4_A7C1;
+        for &b in &self.name_bytes {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        let mut pairs: Vec<(&'static str, i64)> =
+            env.iter().map(|(s, v)| (s.as_str(), v)).collect();
+        pairs.sort();
+        for (k, v) in pairs {
+            for b in k.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            h = (h ^ v as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+
+    /// Evaluate this artifact at one size case: noise-free base time plus
+    /// the stream hash, computed once so retry attempts (and repeated
+    /// sampling) stop re-paying `base_time` and the env re-sort.
+    pub fn case(
+        &self,
+        profile: &DeviceProfile,
+        kernel: &Kernel,
+        env: &Env,
+        seed: u64,
+    ) -> Result<CaseTiming, String> {
+        let base = self.base_time(profile, kernel, env)?;
+        Ok(CaseTiming {
+            base_total: base.total,
+            first_touch_factor: profile.first_touch_factor,
+            second_run_sigma: profile.second_run_sigma,
+            noise_sigma: profile.noise_sigma,
+            hash: self.stream_hash(env, seed),
+        })
+    }
+}
+
+/// One fully-evaluated (device, kernel, env, seed) timing case: drawing
+/// samples from it is pure noise generation (no recompilation, no
+/// re-evaluation, no re-hash).
+#[derive(Clone, Debug)]
+pub struct CaseTiming {
+    base_total: f64,
+    first_touch_factor: f64,
+    second_run_sigma: f64,
+    noise_sigma: f64,
+    hash: u64,
+}
+
+impl CaseTiming {
+    /// Simulated per-run wall times implementing the paper's §4.2 timing
+    /// artifacts: first-touch slowdown on run 0, extra variance on run 1,
+    /// log-normal noise on every run.
+    pub fn sample(&self, runs: usize) -> Vec<f64> {
+        SIM_DRAWS.fetch_add(1, Ordering::Relaxed);
+        let mut rng = crate::util::rng::Rng::new(self.hash);
+        let mut out = Vec::with_capacity(runs);
+        for r in 0..runs {
+            let mut t = self.base_total;
+            if r == 0 {
+                t *= self.first_touch_factor;
+            }
+            let sigma = if r == 1 {
+                self.second_run_sigma
+            } else {
+                self.noise_sigma
+            };
+            t *= rng.lognormal(sigma);
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Count of simulated timing draws since process start. A warm
+/// measurement cache must replay campaigns with this counter unchanged —
+/// the meascache tests and `benches/campaign.rs` pin exactly that.
+static SIM_DRAWS: AtomicU64 = AtomicU64::new(0);
+
+pub fn sim_draws() -> u64 {
+    SIM_DRAWS.load(Ordering::Relaxed)
+}
+
+/// Process-wide compiled-artifact cache, keyed by (device name,
+/// rename-invariant structural hash, symbol fingerprint). The symbol
+/// fingerprint covers the concrete spellings the tapes were compiled
+/// against, so two kernels that are structurally identical but use
+/// different interned names never share an artifact.
+type CompiledKey = (String, u64, u64);
+
+static COMPILED: OnceLock<Mutex<HashMap<CompiledKey, Arc<CompiledTiming>>>> =
+    OnceLock::new();
+
+/// runaway backstop: campaigns see dozens of kernel structures, not thousands
+const COMPILED_CAP: usize = 4096;
+
+fn sym_fingerprint(kernel: &Kernel) -> u64 {
+    let mut f = crate::util::fnv::Fnv64::new();
+    f.write_str(&format!("{kernel:?}"));
+    f.finish()
+}
+
+/// Fetch (or build) the compiled timing artifact for a (device, kernel).
+pub fn compiled_for(profile: &DeviceProfile, kernel: &Kernel) -> Arc<CompiledTiming> {
+    let key = (
+        profile.name.clone(),
+        crate::service::hash::structural_hash(kernel),
+        sym_fingerprint(kernel),
+    );
+    let map = COMPILED.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut m = match map.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    if let Some(ct) = m.get(&key) {
+        return ct.clone();
+    }
+    if m.len() >= COMPILED_CAP {
+        m.clear();
+    }
+    let ct = Arc::new(CompiledTiming::compile(profile, kernel));
+    m.insert(key, ct.clone());
+    ct
 }
 
 /// Deterministic device-irregularity ripple (R9 Fury): effective
@@ -283,146 +625,18 @@ fn ripple(profile: &DeviceProfile, dram_bytes: f64) -> f64 {
     1.0 + profile.irregularity * 0.5 * (1.0 + (4.7 * x).sin()) * 0.5
 }
 
-/// Compute the noise-free cost breakdown of one launch.
+/// Compute the noise-free cost breakdown of one launch (compiled-cache
+/// wrapper; bit-identical to the historical per-call analysis).
 pub fn base_time(
     profile: &DeviceProfile,
     kernel: &Kernel,
     env: &Env,
 ) -> Result<Breakdown, String> {
-    let (gs0, gs1) = kernel.group_size_at(env)?;
-    let group_size = gs0 * gs1;
-    if group_size > profile.max_group_size as i64 {
-        return Err(format!(
-            "group size {group_size} exceeds device limit {} on {}",
-            profile.max_group_size, profile.name
-        ));
-    }
-    let groups = kernel.group_count_at(env)?.max(1);
-
-    // --- memory ---------------------------------------------------------
-    let costs = access_costs(kernel, env, profile)?;
-    let dram_bytes: f64 = costs.iter().map(|c| c.dram_bytes).sum();
-    let mem = dram_bytes * ripple(profile, dram_bytes) / profile.dram_bw;
-
-    // --- arithmetic -------------------------------------------------------
-    let mut alu_cycles = 0.0;
-    for insn in &kernel.insns {
-        for ((kind, bits), q) in crate::stats::ops::count_insn_ops(kernel, insn) {
-            let count = q.eval(env)?;
-            alu_cycles += count * profile.cycles_for(kind, bits);
-        }
-    }
-    let alu = alu_cycles / (profile.sms as f64 * profile.cores_per_sm as f64 * profile.clock_hz);
-
-    // --- local (shared) memory traffic ------------------------------------
-    // Bank conflicts (32 banks, 4-byte words): a lane stride of s
-    // serializes a warp's access gcd(s, 32)-fold; strides 0 (broadcast)
-    // and 1 are conflict-free. The linear model can optionally bin local
-    // loads by this stride (paper §6.2 future work; ExtractOpts).
-    let lane0 = kernel.local_inames().get(&0).copied();
-    let conflict_factor = |arr_name: Sym, idx: &[LinExpr]| -> Result<f64, String> {
-        let Some(lane) = lane0 else { return Ok(1.0) };
-        let arr = kernel.array(arr_name).unwrap();
-        let axis_strides: Vec<i64> = arr
-            .elem_strides()
-            .iter()
-            .map(|q| q.eval(env).map(|x| x as i64))
-            .collect::<Result<_, _>>()?;
-        let mut s: i64 = 0;
-        for (e, &st) in idx.iter().zip(&axis_strides) {
-            s += e.coeff(lane) * st;
-        }
-        let s = s.abs();
-        // worst-case serialization is gcd(s, banks); real parts mitigate
-        // via line multicast, so cap the effective degree
-        Ok(if s <= 1 { 1.0 } else { (gcd_i64(s, 32) as f64).min(4.0) })
-    };
-    let mut local_bytes = 0.0;
-    for insn in &kernel.insns {
-        // stores to local
-        if let Some(arr) = kernel.array(insn.lhs.array) {
-            if arr.space == MemSpace::Local {
-                let execs = kernel.insn_domain(insn, false).count_at(env)? as f64;
-                local_bytes += execs
-                    * arr.dtype.size_bytes() as f64
-                    * conflict_factor(insn.lhs.array, &insn.lhs.idx)?;
-            }
-        }
-        let mut err: Option<String> = None;
-        insn.rhs.visit_loads(&mut |a, red| {
-            if err.is_some() {
-                return;
-            }
-            if let Some(arr) = kernel.array(a.array) {
-                if arr.space == MemSpace::Local {
-                    let mut names: Vec<Sym> = insn.within.clone();
-                    for r in red {
-                        if !names.contains(r) {
-                            names.push(*r);
-                        }
-                    }
-                    let factor = match conflict_factor(a.array, &a.idx) {
-                        Ok(f) => f,
-                        Err(e) => {
-                            err = Some(e);
-                            return;
-                        }
-                    };
-                    match kernel.domain.project_onto(&names).count_at(env) {
-                        Ok(execs) => {
-                            local_bytes +=
-                                execs as f64 * arr.dtype.size_bytes() as f64 * factor
-                        }
-                        Err(e) => err = Some(e),
-                    }
-                }
-            }
-        });
-        if let Some(e) = err {
-            return Err(e);
-        }
-    }
-    let local = local_bytes / profile.local_bw;
-
-    // --- barriers -----------------------------------------------------------
-    let sched = crate::schedule::schedule(kernel)?;
-    let per_group = sched.barriers_per_group(kernel).eval(env)?;
-    let warps_per_group =
-        ((group_size as f64) / profile.warp_size as f64).ceil().max(1.0);
-    let barrier = per_group * groups as f64 * warps_per_group * profile.cyc_barrier
-        / (profile.clock_hz * profile.sms as f64);
-
-    // --- overlap + occupancy -------------------------------------------------
-    let busy = mem.max(alu).max(local);
-    let hidden = mem + alu + local - busy;
-    let mut exec = busy + (1.0 - profile.overlap) * hidden + barrier;
-
-    let concurrent = profile.concurrent_groups(group_size);
-    let waves = (groups + concurrent - 1) / concurrent;
-    // wave quantization: partially-filled final waves waste throughput.
-    // Only a fraction of the workload is latency/occupancy sensitive.
-    let quant = (waves * concurrent) as f64 / groups as f64;
-    const LAT_SENSITIVITY: f64 = 0.25;
-    exec *= 1.0 + LAT_SENSITIVITY * (quant - 1.0);
-    // pipeline-latency floor: one full traversal plus a small per-wave
-    // scheduling cost (waves pipeline, they do not serialize the latency)
-    exec += profile.wave_latency + (waves - 1) as f64 * 120e-9;
-
-    let launch = profile.launch_base + profile.launch_per_group * groups as f64;
-    Ok(Breakdown {
-        launch,
-        mem,
-        alu,
-        local,
-        barrier,
-        waves,
-        total: launch + exec,
-    })
+    compiled_for(profile, kernel).base_time(profile, kernel, env)
 }
 
-/// Simulated per-run wall times implementing the paper's §4.2 timing
-/// artifacts: first-touch slowdown on run 0, extra variance on run 1,
-/// log-normal noise on every run.
+/// Simulated per-run wall times (compiled-cache wrapper over
+/// [`CompiledTiming::case`] + [`CaseTiming::sample`]).
 pub fn run_times(
     profile: &DeviceProfile,
     kernel: &Kernel,
@@ -430,38 +644,8 @@ pub fn run_times(
     runs: usize,
     seed: u64,
 ) -> Result<Vec<f64>, String> {
-    let base = base_time(profile, kernel, env)?;
-    // stable per-(device, kernel, env) stream; bindings are hashed in
-    // name order so the stream matches the historical string-keyed maps
-    let mut h: u64 = seed ^ 0x9E37_79B9_97F4_A7C1;
-    for b in profile.name.bytes().chain(kernel.name.bytes()) {
-        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-    }
-    let mut pairs: Vec<(&'static str, i64)> =
-        env.iter().map(|(s, v)| (s.as_str(), v)).collect();
-    pairs.sort();
-    for (k, v) in pairs {
-        for b in k.bytes() {
-            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
-        }
-        h = (h ^ v as u64).wrapping_mul(0x100_0000_01b3);
-    }
-    let mut rng = crate::util::rng::Rng::new(h);
-    let mut out = Vec::with_capacity(runs);
-    for r in 0..runs {
-        let mut t = base.total;
-        if r == 0 {
-            t *= profile.first_touch_factor;
-        }
-        let sigma = if r == 1 {
-            profile.second_run_sigma
-        } else {
-            profile.noise_sigma
-        };
-        t *= rng.lognormal(sigma);
-        out.push(t);
-    }
-    Ok(out)
+    let ct = compiled_for(profile, kernel);
+    Ok(ct.case(profile, kernel, env, seed)?.sample(runs))
 }
 
 /// Apply measurement-channel fault sites to a completed timing run.
@@ -599,6 +783,70 @@ mod tests {
         assert_eq!(times, run_times(&d, &k, &e, 30, 1).unwrap());
         // different for different seed
         assert_ne!(times, run_times(&d, &k, &e, 30, 2).unwrap());
+    }
+
+    #[test]
+    fn compiled_artifact_is_cached_and_reused() {
+        let d = titan_x();
+        let k = copy_kernel(256);
+        let a = compiled_for(&d, &k);
+        let b = compiled_for(&d, &k);
+        assert!(Arc::ptr_eq(&a, &b), "same (device, kernel) must share one artifact");
+        // a different device gets its own artifact (the noise prefix differs)
+        let c = compiled_for(&r9_fury(), &k);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    /// Satellite regression: the hoisted stream hash must reproduce the
+    /// historical inline FNV fold byte-for-byte — device+kernel name
+    /// prefix, then bindings sorted by name, keys as raw bytes, values
+    /// folded as u64 — and the sampled stream must match `run_times`.
+    #[test]
+    fn stream_hash_matches_legacy_inline_fold() {
+        let d = titan_x();
+        let k = copy_kernel(256);
+        let e = env(&[("n", 1 << 20)]);
+        for seed in [0u64, 1, 0xD15C_0, 0xDEAD_BEEF] {
+            let mut h: u64 = seed ^ 0x9E37_79B9_97F4_A7C1;
+            for b in d.name.bytes().chain(k.name.bytes()) {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            let mut pairs: Vec<(&'static str, i64)> =
+                e.iter().map(|(s, v)| (s.as_str(), v)).collect();
+            pairs.sort();
+            for (key, v) in pairs {
+                for b in key.bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+                }
+                h = (h ^ v as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            let ct = compiled_for(&d, &k);
+            assert_eq!(ct.stream_hash(&e, seed), h, "seed {seed}");
+            // the full legacy stream: base total × first-touch/sigma noise
+            let base = ct.base_time(&d, &k, &e).unwrap();
+            let mut rng = crate::util::rng::Rng::new(h);
+            let mut legacy = Vec::with_capacity(8);
+            for r in 0..8 {
+                let mut t = base.total;
+                if r == 0 {
+                    t *= d.first_touch_factor;
+                }
+                let sigma = if r == 1 { d.second_run_sigma } else { d.noise_sigma };
+                t *= rng.lognormal(sigma);
+                legacy.push(t);
+            }
+            assert_eq!(legacy, run_times(&d, &k, &e, 8, seed).unwrap());
+        }
+    }
+
+    #[test]
+    fn case_sampling_counts_sim_draws() {
+        let d = titan_x();
+        let k = copy_kernel(256);
+        let e = env(&[("n", 1 << 20)]);
+        let before = sim_draws();
+        let _ = run_times(&d, &k, &e, 4, 1).unwrap();
+        assert!(sim_draws() > before, "run_times must count as a simulation draw");
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! `meascache` — a persistent, append-only campaign measurement cache.
+//!
+//! Timing a campaign case is the expensive step of the fit plane (30
+//! simulated runs through the transaction-level cost engine per case,
+//! ~400+ cases per device), and under a fixed seed its result is
+//! *pure*: the raw stream is a function of the device profile, the
+//! kernel (structure and name — the noise hash folds the literal
+//! name), the env, the run count and the seed. That makes it safe to
+//! persist: a [`MeasCacheFile`] records every measured stream as one
+//! JSON line, and a later `fit`/`crossval`/`transfer` invocation
+//! replays its cases bit-identically with **zero simulations** (the
+//! reduction runs on the recorded raw samples, so every downstream
+//! byte — `PerfMatrix`, fold JSON, reports — is unchanged).
+//!
+//! ## File format (`uniperf-meascache-v1`)
+//!
+//! Line-delimited JSON. Line 1 is the header, pinning everything that
+//! shapes a raw stream globally:
+//!
+//! ```json
+//! {"format": "uniperf-meascache-v1", "runs": 30, "discard": 4,
+//!  "min_time_factor": 2, "retries": 2, "mad_k": 0,
+//!  "seed": "00000000000d15c0"}
+//! ```
+//!
+//! Every later line is one recorded stream, keyed by the per-case
+//! inputs:
+//!
+//! ```json
+//! {"dev": "<16-hex profile fingerprint>",
+//!  "kernel": "<16-hex structural hash + name fold>",
+//!  "env": "<16-hex env fingerprint>", "times": [..30 raw samples..]}
+//! ```
+//!
+//! The kernel key folds the kernel *name* on top of the
+//! rename-invariant structural hash because the noise stream folds the
+//! literal name: two structurally identical kernels with different
+//! names draw different streams and must not share entries. Raw f64
+//! samples round-trip exactly through the JSON layer (shortest
+//! round-trip formatting), which is what makes warm replay
+//! bit-identical rather than merely close.
+//!
+//! ## Trust model: validate, never assume
+//!
+//! Same contract as the extraction cache
+//! ([`crate::service::diskcache`]): [`open`] refuses a file whose
+//! format tag, timing protocol or seed disagree with this run — the
+//! caller warns and starts cold; a refused file is never read from or
+//! appended to, and is left byte-identical on disk. A torn tail (the
+//! crash-truncated last line an append-only log can always have) is
+//! tolerated: loading stops at the first unparseable line with one
+//! warning, keeping every entry before it. Appends are single
+//! `write(2)` calls of one complete line.
+//!
+//! [`open`]: MeasCacheFile::open
+
+use super::Protocol;
+use crate::gpusim::{DeviceProfile, TimingCache};
+use crate::lpir::Kernel;
+use crate::obs::log::Level;
+use crate::obs::metrics;
+use crate::olog;
+use crate::util::fnv::Fnv64;
+use crate::util::intern::Env;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// The cache-file format this build writes and reads.
+pub const FORMAT: &str = "uniperf-meascache-v1";
+
+/// Poison-tolerant lock (a torn in-memory map beats cascading a panic
+/// through a whole campaign).
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Entry key: (device-profile fingerprint, structural hash ⊕ kernel
+/// name, env fingerprint). The protocol and seed are file-global
+/// (header-pinned), so they are not part of the per-entry key.
+pub type MeasKey = (u64, u64, u64);
+
+/// Integer form of [`crate::service::store::profile_fingerprint`]
+/// (same bytes hashed; the hex string there is this value formatted).
+fn device_fp(p: &DeviceProfile) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(&p.to_json().compact());
+    h.finish()
+}
+
+/// Kernel key: the rename-invariant structural hash plus the literal
+/// kernel name (the noise stream folds the name — see module docs).
+fn kernel_fp(kernel: &Kernel) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(crate::service::hash::structural_hash(kernel));
+    h.write_str(&kernel.name);
+    h.finish()
+}
+
+/// The key for one measured case.
+pub fn meas_key(profile: &DeviceProfile, kernel: &Kernel, env: &Env) -> MeasKey {
+    (
+        device_fp(profile),
+        kernel_fp(kernel),
+        crate::service::cache::env_fingerprint(env),
+    )
+}
+
+/// A loaded + appendable measurement-cache file. See the module docs
+/// for the format and trust model. All methods are `&self`; the engine
+/// holds one behind an `Arc` and attaches it to every [`crate::gpusim::SimGpu`]
+/// it constructs (as the [`TimingCache`] implementation the harness
+/// retry loop consults).
+#[derive(Debug)]
+pub struct MeasCacheFile {
+    protocol: Protocol,
+    seed: u64,
+    /// preloaded + appended streams, keyed [`MeasKey`]
+    entries: Mutex<BTreeMap<MeasKey, Arc<Vec<f64>>>>,
+    /// append handle; one complete line per `write`
+    file: Mutex<std::fs::File>,
+    /// entries preloaded from disk at open (excludes later appends)
+    loaded: usize,
+    /// replayed lookups (this file; the process-global
+    /// `meascache_hits_total` counter aggregates across files)
+    hits: AtomicU64,
+    /// eligible lookups that fell through to simulation
+    misses: AtomicU64,
+}
+
+impl MeasCacheFile {
+    /// Open (or create) the cache file at `path` for this run's
+    /// `protocol` and `seed`.
+    ///
+    /// A missing or empty file is created with a fresh header. An
+    /// existing file must carry a matching header — format tag, every
+    /// timing-protocol field and the noise seed — or this returns
+    /// `Err` and the file is left byte-identical on disk: the caller
+    /// logs the reason and measures cold rather than replaying streams
+    /// drawn under a different discipline. Unreadable trailing lines
+    /// (a torn append) stop loading with one warning; everything
+    /// before them is kept.
+    pub fn open(path: &Path, protocol: &Protocol, seed: u64) -> Result<MeasCacheFile, String> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(format!("meas cache {}: {e}", path.display())),
+        };
+        let header = Json::obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("runs", Json::Num(protocol.runs as f64)),
+            ("discard", Json::Num(protocol.discard as f64)),
+            ("min_time_factor", Json::Num(protocol.min_time_factor)),
+            ("retries", Json::Num(protocol.retries as f64)),
+            ("mad_k", Json::Num(protocol.mad_k)),
+            ("seed", Json::Str(format!("{seed:016x}"))),
+        ]);
+        let mut lines = text.lines();
+        let fresh = match lines.next() {
+            None => true,
+            Some(first) => {
+                let j = Json::parse(first).map_err(|e| {
+                    format!("meas cache {}: unreadable header: {e}", path.display())
+                })?;
+                crate::service::store::check_format(&j, FORMAT, "meas cache")?;
+                let num = |field: &str| -> Result<f64, String> {
+                    j.get_f64(field).ok_or_else(|| {
+                        format!("meas cache {}: header missing '{field}'", path.display())
+                    })
+                };
+                let same_protocol = num("runs")? == protocol.runs as f64
+                    && num("discard")? == protocol.discard as f64
+                    && num("min_time_factor")? == protocol.min_time_factor
+                    && num("retries")? == protocol.retries as f64
+                    && num("mad_k")? == protocol.mad_k;
+                if !same_protocol {
+                    return Err(format!(
+                        "meas cache {}: recorded timing protocol does not match this \
+                         run's ({protocol:?}); streams measured under another protocol \
+                         are not replayable",
+                        path.display()
+                    ));
+                }
+                let file_seed = j
+                    .get_str("seed")
+                    .ok_or_else(|| {
+                        format!("meas cache {}: header missing 'seed'", path.display())
+                    })
+                    .and_then(|s| {
+                        u64::from_str_radix(s, 16).map_err(|e| {
+                            format!("meas cache {}: header 'seed': {e}", path.display())
+                        })
+                    })?;
+                if file_seed != seed {
+                    return Err(format!(
+                        "meas cache {}: recorded seed {file_seed:#x} does not match \
+                         this run's seed ({seed:#x})",
+                        path.display()
+                    ));
+                }
+                false
+            }
+        };
+
+        // entries: stop at the first torn/invalid line (append-only
+        // logs can always have a crash-truncated tail), keep the rest
+        let mut entries: BTreeMap<MeasKey, Arc<Vec<f64>>> = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_entry(line) {
+                Ok((key, times)) => {
+                    entries.insert(key, Arc::new(times));
+                }
+                Err(e) => {
+                    olog!(
+                        Level::Warn,
+                        "uniperf: meas cache {}: line {}: {e}; keeping the {} entries \
+                         before it and ignoring the rest",
+                        path.display(),
+                        i + 2,
+                        entries.len()
+                    );
+                    break;
+                }
+            }
+        }
+        let loaded = entries.len();
+
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("meas cache {}: open for append: {e}", path.display()))?;
+        if fresh {
+            file.write_all(format!("{}\n", header.compact()).as_bytes())
+                .map_err(|e| format!("meas cache {}: write header: {e}", path.display()))?;
+        }
+        Ok(MeasCacheFile {
+            protocol: *protocol,
+            seed,
+            entries: Mutex::new(entries),
+            file: Mutex::new(file),
+            loaded,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Record one stream: one complete JSON line, appended under the
+    /// file lock in a single write. Persistence is best-effort — a
+    /// full disk degrades the *next* run's warm start, never this
+    /// measurement — and the in-memory copy is always kept, so
+    /// repeated appends of the same key stay idempotent. Non-finite
+    /// samples are never recorded (they would not survive the JSON
+    /// round trip).
+    pub fn append(&self, key: MeasKey, times: &[f64]) {
+        if times.iter().any(|t| !t.is_finite()) {
+            return;
+        }
+        let line = Json::obj(vec![
+            ("dev", Json::Str(format!("{:016x}", key.0))),
+            ("kernel", Json::Str(format!("{:016x}", key.1))),
+            ("env", Json::Str(format!("{:016x}", key.2))),
+            ("times", Json::Arr(times.iter().copied().map(Json::Num).collect())),
+        ]);
+        {
+            let mut entries = locked(&self.entries);
+            if entries.contains_key(&key) {
+                return;
+            }
+            entries.insert(key, Arc::new(times.to_vec()));
+        }
+        let mut f = locked(&self.file);
+        let _ = f.write_all(format!("{}\n", line.compact()).as_bytes());
+    }
+
+    /// Streams replayed from this file so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Eligible lookups that fell through to live simulation so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently held (preloaded + appended).
+    pub fn len(&self) -> usize {
+        locked(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        locked(&self.entries).is_empty()
+    }
+
+    /// Entries preloaded from disk when the file was opened — the warm
+    /// start a previous campaign handed this one.
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+}
+
+impl TimingCache for MeasCacheFile {
+    fn lookup(
+        &self,
+        profile: &DeviceProfile,
+        kernel: &Kernel,
+        env: &Env,
+        runs: usize,
+        seed: u64,
+    ) -> Option<Vec<f64>> {
+        // a stream drawn under a different run count or seed is a
+        // different stream — not a miss, simply not this file's domain
+        if runs != self.protocol.runs || seed != self.seed {
+            return None;
+        }
+        let key = meas_key(profile, kernel, env);
+        let hit = locked(&self.entries).get(&key).map(|t| t.as_ref().clone());
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            metrics::campaign().counter("meascache_hits_total").inc();
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            metrics::campaign().counter("meascache_misses_total").inc();
+        }
+        hit
+    }
+
+    fn store(
+        &self,
+        profile: &DeviceProfile,
+        kernel: &Kernel,
+        env: &Env,
+        runs: usize,
+        seed: u64,
+        times: &[f64],
+    ) {
+        if runs != self.protocol.runs || seed != self.seed {
+            return;
+        }
+        self.append(meas_key(profile, kernel, env), times);
+    }
+}
+
+/// Parse one entry line into its key and raw samples.
+fn parse_entry(line: &str) -> Result<(MeasKey, Vec<f64>), String> {
+    let j = Json::parse(line).map_err(|e| format!("unreadable entry: {e}"))?;
+    let hex = |field: &str| -> Result<u64, String> {
+        let s = j
+            .get_str(field)
+            .ok_or_else(|| format!("entry missing '{field}'"))?;
+        u64::from_str_radix(s, 16).map_err(|e| format!("entry '{field}': {e}"))
+    };
+    let key = (hex("dev")?, hex("kernel")?, hex("env")?);
+    let times = match j.get("times") {
+        Some(Json::Arr(xs)) => {
+            let mut v = Vec::with_capacity(xs.len());
+            for x in xs {
+                match x {
+                    Json::Num(t) => v.push(*t),
+                    _ => return Err("entry 'times': non-numeric sample".into()),
+                }
+            }
+            v
+        }
+        _ => return Err("entry missing 'times'".into()),
+    };
+    Ok((key, times))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::lpir::builder::{gid_lin_1d, KernelBuilder};
+    use crate::lpir::{Access, DType, Expr, Layout};
+    use crate::qpoly::{env, LinExpr};
+
+    /// A unique temp path per test (no tempdir dependency; collisions
+    /// avoided via the test name).
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("uniperf_meascache_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample_kernel(name: &str) -> Kernel {
+        KernelBuilder::new(name, &["n"])
+            .group_dims_1d(LinExpr::var("n"), 128)
+            .global_array("a", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, false)
+            .global_array("b", DType::F32, vec![LinExpr::var("n")], Layout::RowMajor, true)
+            .insn(
+                Access::new("b", vec![gid_lin_1d(128)]),
+                Expr::load("a", vec![gid_lin_1d(128)]),
+                &["g0", "l0"],
+                &[],
+            )
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn round_trips_raw_streams_bit_for_bit() {
+        let path = tmp("round_trip");
+        let protocol = Protocol::default();
+        let profile = crate::gpusim::device("k40c").unwrap();
+        let kernel = sample_kernel("copy_rt");
+        let e = env(&[("n", 1 << 20)]);
+        // awkward values: non-terminating binary fractions, denormal
+        // territory, an exact integer
+        let times = vec![1.0 / 3.0, 6.02e-23, 1.25e-3, 4.0];
+        {
+            let f = MeasCacheFile::open(&path, &protocol, 0xD15C_0).unwrap();
+            assert_eq!(f.loaded(), 0, "fresh file preloads nothing");
+            assert!(
+                f.lookup(&profile, &kernel, &e, protocol.runs, 0xD15C_0).is_none(),
+                "cold lookup misses"
+            );
+            f.store(&profile, &kernel, &e, protocol.runs, 0xD15C_0, &times);
+            f.store(&profile, &kernel, &e, protocol.runs, 0xD15C_0, &times); // idempotent
+            assert_eq!(f.len(), 1);
+            assert_eq!((f.hits(), f.misses()), (0, 1));
+        }
+        let f = MeasCacheFile::open(&path, &protocol, 0xD15C_0).unwrap();
+        assert_eq!(f.loaded(), 1, "restart preloads the stream");
+        let got = f.lookup(&profile, &kernel, &e, protocol.runs, 0xD15C_0).unwrap();
+        let want: Vec<u64> = times.iter().map(|t| t.to_bits()).collect();
+        let got_bits: Vec<u64> = got.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(got_bits, want, "samples survive the JSON round trip bit-for-bit");
+        assert_eq!((f.hits(), f.misses()), (1, 0));
+        // out-of-domain lookups answer None without counting
+        assert!(f.lookup(&profile, &kernel, &e, protocol.runs + 1, 0xD15C_0).is_none());
+        assert!(f.lookup(&profile, &kernel, &e, protocol.runs, 1).is_none());
+        assert_eq!((f.hits(), f.misses()), (1, 0), "mismatched runs/seed count nothing");
+        // the kernel *name* is part of the key (structural hash alone
+        // is rename-invariant, but the noise stream is not)
+        let renamed = sample_kernel("copy_rt2");
+        assert!(f.lookup(&profile, &renamed, &e, protocol.runs, 0xD15C_0).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn refuses_mismatched_headers_and_leaves_the_file_untouched() {
+        let path = tmp("mismatch");
+        let protocol = Protocol::default();
+        drop(MeasCacheFile::open(&path, &protocol, 7).unwrap());
+        let before = std::fs::read(&path).unwrap();
+        // protocol mismatch
+        let other = Protocol { runs: 31, ..protocol };
+        let e = MeasCacheFile::open(&path, &other, 7).unwrap_err();
+        assert!(e.contains("protocol"), "{e}");
+        // seed mismatch
+        let e = MeasCacheFile::open(&path, &protocol, 8).unwrap_err();
+        assert!(e.contains("seed"), "{e}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            before,
+            "a refused file is left byte-identical"
+        );
+        // format mismatch
+        std::fs::write(&path, "{\"format\": \"uniperf-meascache-v999\"}\n").unwrap();
+        let e = MeasCacheFile::open(&path, &protocol, 7).unwrap_err();
+        assert!(e.contains("format"), "{e}");
+        // tagless garbage
+        std::fs::write(&path, "{\"hello\": 1}\n").unwrap();
+        let e = MeasCacheFile::open(&path, &protocol, 7).unwrap_err();
+        assert!(e.contains("missing 'format'"), "{e}");
+        // unparseable header
+        std::fs::write(&path, "not json at all\n").unwrap();
+        let e = MeasCacheFile::open(&path, &protocol, 7).unwrap_err();
+        assert!(e.contains("unreadable header"), "{e}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tolerates_a_torn_tail() {
+        let path = tmp("torn");
+        let protocol = Protocol::default();
+        {
+            let f = MeasCacheFile::open(&path, &protocol, 7).unwrap();
+            f.append((1, 1, 1), &[0.5, 0.25]);
+            f.append((2, 2, 2), &[0.125, 0.0625]);
+        }
+        // simulate a crash mid-append: truncate the last line
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 20]).unwrap();
+        let f = MeasCacheFile::open(&path, &protocol, 7).unwrap();
+        assert_eq!(f.loaded(), 1, "entries before the torn line survive");
+        // the file is still appendable after recovery
+        f.append((3, 3, 3), &[1.0]);
+        assert_eq!(f.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -16,9 +16,14 @@
 //!   traversal per kernel per campaign.
 //! * Campaign persistence as JSON.
 
+pub mod meascache;
+
+pub use meascache::MeasCacheFile;
+
 use crate::gpusim::SimGpu;
 use crate::kernels::KernelCase;
 use crate::lpir::Kernel;
+use crate::obs::metrics;
 use crate::obs::span::{self, Span};
 use crate::perfmodel::PropertyMatrix;
 use crate::stats::{extract, BatchArena, ExtractOpts, KernelProps, Schema};
@@ -200,13 +205,35 @@ pub fn time_with_retry(
     protocol: &Protocol,
 ) -> Result<Vec<f64>, String> {
     let budget = protocol.retries + 1;
+    // Warm path: an attached measurement cache replays the raw stream
+    // with zero simulation. A fault plan bypasses the cache entirely —
+    // counter-based fault draws must advance exactly as they would
+    // live, and corrupted streams must never be recorded.
+    let cache = if gpu.faults.is_none() { gpu.meas.as_deref() } else { None };
+    if let Some(mc) = cache {
+        if let Some(times) = mc.lookup(&gpu.profile, kernel, env, protocol.runs, gpu.seed) {
+            return Ok(times);
+        }
+    }
+    // The compiled artifact, base time and stream hash are paid once;
+    // retry attempts only re-run noise sampling plus the fault plan. A
+    // lowering error is deterministic — it would fail every attempt
+    // identically — so it surfaces immediately, message unchanged.
+    let prepared = match gpu.prepare(kernel, env) {
+        Ok(p) => p,
+        Err(e) => return Err(format!("measurement failed after {budget} attempt(s): {e}")),
+    };
     let mut last = String::new();
-    for attempt in 1..=budget {
-        match gpu.time(kernel, env, protocol.runs) {
-            Ok(times) => return Ok(times),
+    for _ in 0..budget {
+        match prepared.time(protocol.runs) {
+            Ok(times) => {
+                if let Some(mc) = cache {
+                    mc.store(&gpu.profile, kernel, env, protocol.runs, gpu.seed, &times);
+                }
+                return Ok(times);
+            }
             Err(e) => last = e,
         }
-        let _ = attempt;
     }
     Err(format!("measurement failed after {budget} attempt(s): {last}"))
 }
@@ -323,6 +350,11 @@ pub fn measure_cases(
     let items: Vec<(&KernelProps, &Env)> =
         sym.iter().zip(cases).map(|(p, c)| (p, &c.env)).collect();
     let rows = eval_props_batched(&items, schema);
+
+    // campaign-plane accounting: one labeled counter per device
+    metrics::campaign()
+        .counter(&format!("campaign_cases_total{{device=\"{}\"}}", gpu.profile.name))
+        .add(cases.len() as u64);
 
     // timing in parallel over cases
     let work: Vec<(usize, &KernelCase)> = cases.iter().enumerate().collect();

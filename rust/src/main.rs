@@ -88,6 +88,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "faults", help: "chaos: deterministic fault-injection plan (JSON: {\"seed\", \"sites\": {\"<site>\": {\"rate\", \"max\"?}}})", is_flag: false, default: None },
         OptSpec { name: "degraded", help: "serve/predict: answer for devices the artifact lacks from the nearest-capability fitted device (responses flagged \"degraded\")", is_flag: true, default: None },
         OptSpec { name: "props-cache", help: "serve/predict: persistent extraction-cache file (append-only JSON lines, created if missing; a restarted server preloads it and warm-starts, an incompatible file is ignored with a warning)", is_flag: false, default: None },
+        OptSpec { name: "meas-cache", help: "fit/crossval/pipeline: persistent campaign measurement cache (append-only JSON lines, created if missing; a repeated run replays its raw timing streams bit-identically with zero simulation, an incompatible file is ignored with a warning)", is_flag: false, default: None },
         OptSpec { name: "log-level", help: "stderr verbosity: error|warn|info|debug|off", is_flag: false, default: Some("info") },
         OptSpec { name: "trace", help: "record structured spans (serve exposes them via {\"cmd\": \"trace\"}; slow roots land in a separate ring)", is_flag: true, default: None },
         OptSpec { name: "slow-ms", help: "with --trace/--profile: root spans at least this many ms are kept in the slow ring", is_flag: false, default: Some("500") },
@@ -149,6 +150,9 @@ fn make_config(args: &uniperf::util::cli::Args) -> Result<Config, String> {
     if let Some(path) = args.get("props-cache") {
         cfg.props_cache = Some(path.into());
     }
+    if let Some(path) = args.get("meas-cache") {
+        cfg.meas_cache = Some(path.into());
+    }
     if let Some(path) = args.get("faults") {
         let plan = uniperf::util::fault::FaultPlan::load(Path::new(path))?;
         olog!(Level::Info, "uniperf: fault injection armed (--faults {path}, seed {})", plan.seed());
@@ -203,6 +207,40 @@ fn load_service(models: &str, cfg: &Config, args: &Args) -> Result<Service, Stri
     );
     engine.install_store(store)?;
     Service::over(std::sync::Arc::new(engine), svc_cfg)
+}
+
+/// One-line campaign-plane summary from the process-global campaign
+/// registry: total measured cases across devices plus measurement-cache
+/// traffic. `None` when nothing was measured (e.g. artifact-backed
+/// predict), so non-campaign commands stay silent.
+fn campaign_summary() -> Option<String> {
+    use uniperf::obs::metrics::{campaign, MetricValue};
+    let snap = campaign().snapshot();
+    let cases: u64 = snap
+        .iter()
+        .filter(|(name, _)| name.starts_with("campaign_cases_total"))
+        .map(|(_, v)| match v {
+            MetricValue::Counter(c) => *c,
+            _ => 0,
+        })
+        .sum();
+    let hits = snap.counter("meascache_hits_total");
+    let misses = snap.counter("meascache_misses_total");
+    let refused = snap.counter("meascache_refused_total");
+    if cases == 0 && hits + misses + refused == 0 {
+        return None;
+    }
+    Some(format!(
+        "campaign: {cases} cases measured; meas cache: {hits} replayed, \
+         {misses} simulated, {refused} file(s) refused"
+    ))
+}
+
+/// Emit the campaign-plane summary on stderr after a measuring command.
+fn log_campaign_summary() {
+    if let Some(s) = campaign_summary() {
+        olog!(Level::Info, "uniperf: {s}");
+    }
 }
 
 /// Assemble the one-shot `predict` request line from CLI flags.
@@ -276,6 +314,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<(), String> {
                 }
             }
             println!("pipeline completed in {:.1}s", t0.elapsed().as_secs_f64());
+            log_campaign_summary();
             Ok(())
         }
         "crossval" => {
@@ -291,6 +330,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<(), String> {
             let result = run_crossval(&opts)?;
             println!("{}", result.render());
             println!("crossval completed in {:.1}s", t0.elapsed().as_secs_f64());
+            log_campaign_summary();
             Ok(())
         }
         "fit" => {
@@ -322,6 +362,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<(), String> {
                     store.len(),
                     t0.elapsed().as_secs_f64()
                 );
+                log_campaign_summary();
                 return Ok(());
             }
             let device = args.get_or("device", "k40c").to_string();
@@ -334,6 +375,7 @@ fn run_cmd(cmd: &str, args: &Args) -> Result<(), String> {
             for (label, reason) in &dr.quarantined {
                 olog!(Level::Warn, "quarantined: {label}: {reason}");
             }
+            log_campaign_summary();
             Ok(())
         }
         "predict" => {

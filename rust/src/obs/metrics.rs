@@ -29,7 +29,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Number of histogram buckets: one for zero plus one per power of two
 /// up to `2^64`.
@@ -296,21 +296,39 @@ impl Snapshot {
     /// Prometheus-style text exposition. Every metric name is prefixed
     /// `uniperf_`; histograms render cumulative `_bucket{le="..."}`
     /// lines (powers of two, only up to the highest populated bucket)
-    /// plus `_sum`/`_count`. Deterministic for a given snapshot:
+    /// plus `_sum`/`_count`. Labeled series (`name{label="x"}`) share
+    /// one `# TYPE` line per family — name ordering keeps a family's
+    /// series adjacent. Deterministic for a given snapshot:
     /// name-ordered, fixed formatting.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
+        let mut last_family = String::new();
         for (name, v) in &self.values {
             let full = format!("uniperf_{name}");
+            // the family is the name up to the label set; unlabeled
+            // names are their own family, so their TYPE lines render
+            // exactly as before
+            let family = match full.split_once('{') {
+                Some((fam, _)) => fam.to_string(),
+                None => full.clone(),
+            };
+            let kind = match v {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histogram(_) => "histogram",
+            };
+            if family != last_family {
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                last_family = family;
+            }
             match v {
                 MetricValue::Counter(c) => {
-                    out.push_str(&format!("# TYPE {full} counter\n{full} {c}\n"));
+                    out.push_str(&format!("{full} {c}\n"));
                 }
                 MetricValue::Gauge(g) => {
-                    out.push_str(&format!("# TYPE {full} gauge\n{full} {g}\n"));
+                    out.push_str(&format!("{full} {g}\n"));
                 }
                 MetricValue::Histogram(h) => {
-                    out.push_str(&format!("# TYPE {full} histogram\n"));
                     let mut cum = 0u64;
                     let top = h
                         .counts
@@ -341,6 +359,19 @@ impl Snapshot {
         }
         out
     }
+}
+
+/// The process-global campaign-plane registry: fit/crossval/transfer
+/// counters (per-device `campaign_cases_total{device="..."}`,
+/// measurement-cache `meascache_{hits,misses,refused}_total`) recorded
+/// from the harness and engine, which have no per-service registry to
+/// hand counters to. The service merges this snapshot into its
+/// `{"cmd": "metrics"}` response. Lazily populated: a process that
+/// never measures registers nothing here, so a pure serving process's
+/// exposition stays byte-identical.
+pub fn campaign() -> &'static Registry {
+    static CAMPAIGN: OnceLock<Registry> = OnceLock::new();
+    CAMPAIGN.get_or_init(Registry::new)
 }
 
 /// A registered metric handle (what the registry's map holds).
@@ -569,6 +600,26 @@ uniperf_latency_us_count 4
 uniperf_queue_depth 2
 # TYPE uniperf_requests_total counter
 uniperf_requests_total 3
+";
+        assert_eq!(text, want);
+    }
+
+    /// Labeled series (the campaign plane's per-device counters) render
+    /// one `# TYPE` line per family, not one per series — name ordering
+    /// keeps a family's series adjacent.
+    #[test]
+    fn labeled_series_share_one_type_line_per_family() {
+        let r = Registry::new();
+        r.counter("campaign_cases_total{device=\"k40c\"}").add(3);
+        r.counter("campaign_cases_total{device=\"r9_fury\"}").add(2);
+        r.counter("meascache_hits_total").add(7);
+        let text = r.snapshot().render_prometheus();
+        let want = "\
+# TYPE uniperf_campaign_cases_total counter
+uniperf_campaign_cases_total{device=\"k40c\"} 3
+uniperf_campaign_cases_total{device=\"r9_fury\"} 2
+# TYPE uniperf_meascache_hits_total counter
+uniperf_meascache_hits_total 7
 ";
         assert_eq!(text, want);
     }

@@ -729,6 +729,11 @@ impl Service {
                 }
             }
         }
+        // campaign-plane counters (per-device cases measured, meas-cache
+        // hit/miss/refusal): non-empty only when this process ran a
+        // measurement campaign — a pure serving process never registers
+        // them, so its exposition bytes are unchanged.
+        snap.merge(&crate::obs::metrics::campaign().snapshot());
         snap
     }
 

@@ -1,23 +1,213 @@
-//! Fixed-size thread pool with a scoped parallel `map` (offline stand-in
-//! for `tokio`/`rayon`). The coordinator's workload — running measurement
-//! campaigns across simulated devices — is CPU-bound fan-out, which maps
-//! cleanly onto scoped threads.
+//! Parallel execution primitives (offline stand-in for `tokio`/`rayon`).
 //!
-//! Work is dispatched by a single shared atomic cursor over a slice of
-//! item slots: each worker claims the next index with `fetch_add` and
-//! takes the item out of its slot. Compared to a `Mutex<Vec<_>>` queue
-//! this removes all lock contention from dispatch (each slot mutex is
-//! touched exactly once, uncontended) and processes items front-to-back
-//! instead of the queue's back-to-front pop order.
+//! Three layers:
+//!
+//! * [`Executor`] — a process-wide shared pool of long-lived worker
+//!   threads pulling from **one** flat job queue. Batch fan-outs
+//!   anywhere in the process (fit, crossval, transfer, per-case
+//!   measurement) all land in this single queue, so nested fan-outs
+//!   compose without per-call thread spawning or multiplicative
+//!   oversubscription: a worker blocked on an inner batch is
+//!   complemented by the inner caller executing its own tickets inline,
+//!   which guarantees progress even when every pooled thread is busy.
+//! * [`par_map`] — order-preserving parallel map over a vector,
+//!   dispatched as claim-tickets on the shared executor. Work is
+//!   claimed by a single shared atomic cursor over item slots: each
+//!   ticket claims the next index with `fetch_add` and takes the item
+//!   out of its slot, which removes all lock contention from dispatch
+//!   and processes items front-to-back.
+//! * [`WorkerPool`] — a dedicated fixed pool with one shared handler
+//!   closure, for callers (the event-driven serving reactor) that
+//!   submit work continuously instead of in one batch and need
+//!   deterministic drain-on-join semantics.
 
 use crate::obs::span::{self, Span};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 
-/// Run `f` over `items` with up to `workers` OS threads, preserving input
-/// order in the output. Uses `std::thread::scope`, so `f` may borrow from
-/// the caller.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Hard ceiling on shared-executor threads, far above any sane
+/// `--workers`; the pool only ever grows to the largest single request.
+const EXEC_MAX_THREADS: usize = 256;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QJob {
+    batch: u64,
+    job: Job,
+}
+
+/// Per-batch completion accounting for [`Executor::run_tickets`].
+struct Ctl {
+    finished: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+/// The process-wide shared executor: one flat queue, lazily-grown
+/// workers, no per-call thread spawning. Obtain via [`Executor::global`].
+pub struct Executor {
+    queue: Mutex<VecDeque<QJob>>,
+    available: Condvar,
+    threads: Mutex<usize>,
+}
+
+static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
+
+impl Executor {
+    pub fn global() -> &'static Executor {
+        static EXEC: OnceLock<Executor> = OnceLock::new();
+        EXEC.get_or_init(|| Executor {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            threads: Mutex::new(0),
+        })
+    }
+
+    /// Worker threads currently in the pool.
+    pub fn threads(&self) -> usize {
+        *lock(&self.threads)
+    }
+
+    /// Submit a detached fire-and-forget job.
+    pub fn submit(&self, job: Job) {
+        self.ensure_workers(1);
+        self.push(0, job);
+    }
+
+    /// Run `ticket` on up to `extra` pooled threads concurrently with
+    /// the caller, which always runs it once inline (guaranteeing
+    /// progress even when the pool is saturated by blocked outer
+    /// batches). Returns once every *started* ticket has finished;
+    /// tickets still queued when the inline run completes are withdrawn
+    /// unexecuted. Panics if any ticket panicked.
+    pub fn run_tickets<F: Fn() + Sync>(&self, extra: usize, ticket: &F) {
+        if extra == 0 {
+            ticket();
+            return;
+        }
+        self.ensure_workers(extra);
+        let batch = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
+        let ctl = Arc::new(Ctl {
+            finished: Mutex::new(0),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let tref: &(dyn Fn() + Sync) = ticket;
+        // SAFETY: every submitted ticket either runs to completion
+        // before `WaitGuard` drops (the guard blocks on the finished
+        // count, including during unwind) or is withdrawn from the
+        // queue unexecuted, so the erased borrow never outlives this
+        // frame.
+        let tref: &'static (dyn Fn() + Sync) = unsafe { std::mem::transmute(tref) };
+        for _ in 0..extra {
+            let ctl = Arc::clone(&ctl);
+            let job: Job = Box::new(move || {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| tref()))
+                    .is_err()
+                {
+                    ctl.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut done = lock(&ctl.finished);
+                *done += 1;
+                drop(done);
+                ctl.cv.notify_all();
+            });
+            self.push(batch, job);
+        }
+        let guard = WaitGuard { exec: self, batch, submitted: extra, ctl: &ctl };
+        ticket();
+        drop(guard);
+        if ctl.panicked.load(Ordering::SeqCst) {
+            panic!("executor ticket panicked");
+        }
+    }
+
+    fn push(&self, batch: u64, job: Job) {
+        let mut q = lock(&self.queue);
+        q.push_back(QJob { batch, job });
+        drop(q);
+        self.available.notify_one();
+    }
+
+    /// Remove all still-queued jobs of one batch; returns how many.
+    fn withdraw(&self, batch: u64) -> usize {
+        let mut q = lock(&self.queue);
+        let before = q.len();
+        q.retain(|j| j.batch != batch);
+        before - q.len()
+    }
+
+    /// Grow the pool to at least `want` threads (bounded; spawn failure
+    /// degrades gracefully — the inline ticket still makes progress).
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(EXEC_MAX_THREADS);
+        let mut t = lock(&self.threads);
+        while *t < want {
+            let spawned = std::thread::Builder::new()
+                .name("uniperf-exec".into())
+                .spawn(|| Executor::global().worker_loop());
+            if spawned.is_err() {
+                break;
+            }
+            *t += 1;
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let qjob = {
+                let mut q = lock(&self.queue);
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = self
+                        .available
+                        .wait(q)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            };
+            // ticket wrappers catch their own panics; a raw detached job
+            // panicking must not kill the pooled worker either
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(qjob.job));
+        }
+    }
+}
+
+/// Blocks (even on unwind) until every started ticket of a batch has
+/// finished, after withdrawing the unstarted ones — the linchpin of the
+/// lifetime-erasure safety argument in [`Executor::run_tickets`].
+struct WaitGuard<'x> {
+    exec: &'x Executor,
+    batch: u64,
+    submitted: usize,
+    ctl: &'x Arc<Ctl>,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let withdrawn = self.exec.withdraw(self.batch);
+        let target = self.submitted - withdrawn;
+        let mut done = lock(&self.ctl.finished);
+        while *done < target {
+            done = self
+                .ctl
+                .cv
+                .wait(done)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Run `f` over `items` with up to `workers` concurrent claim-tickets on
+/// the shared executor, preserving input order in the output. `f` may
+/// borrow from the caller. The worker count is clamped to the item
+/// count, so small batches never pay for idle tickets.
 pub fn par_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -36,38 +226,31 @@ where
     let slots: Vec<Mutex<Option<T>>> =
         items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| {
-                // one root span per worker thread: its duration against
-                // the items it claimed is the utilization signal the
-                // trace export surfaces (inert when tracing is off)
-                let mut sp = Span::root("par_map.worker");
-                let mut claimed = 0usize;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let item = slots[i]
-                        .lock()
-                        .unwrap()
-                        .take()
-                        .expect("work item claimed twice");
-                    let r = f(item);
-                    *out[i].lock().unwrap() = Some(r);
-                    claimed += 1;
-                }
-                if span::enabled() {
-                    sp.set_meta(format!("items={claimed}"));
-                }
-            });
+    let ticket = || {
+        // one root span per ticket: its duration against the items it
+        // claimed is the utilization signal the trace export surfaces
+        // (inert when tracing is off)
+        let mut sp = Span::root("par_map.worker");
+        let mut claimed = 0usize;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let item = lock(&slots[i]).take().expect("work item claimed twice");
+            let r = f(item);
+            *lock(&out[i]) = Some(r);
+            claimed += 1;
         }
-    });
+        if span::enabled() {
+            sp.set_meta(format!("items={claimed}"));
+        }
+    };
+    Executor::global().run_tickets(workers - 1, &ticket);
     out.into_iter()
         .map(|m| {
             m.into_inner()
-                .unwrap()
+                .unwrap_or_else(PoisonError::into_inner)
                 .expect("worker died before producing result")
         })
         .collect()
@@ -79,7 +262,7 @@ pub fn default_workers() -> usize {
 }
 
 /// A fixed pool of long-lived worker threads pulling jobs off one
-/// shared queue — the persistent complement to [`par_map`]'s scoped
+/// shared queue — the persistent complement to [`par_map`]'s batch
 /// fan-out, for callers (the event-driven serving reactor) that submit
 /// work continuously instead of in one batch.
 ///
@@ -124,11 +307,7 @@ impl<J: Send + 'static> WorkerPool<J> {
 
     /// Enqueue one job; a parked worker wakes to claim it.
     pub fn submit(&self, job: J) {
-        let mut q = self
-            .shared
-            .queue
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut q = lock(&self.shared.queue);
         q.push_back(job);
         drop(q);
         self.shared.available.notify_one();
@@ -136,11 +315,7 @@ impl<J: Send + 'static> WorkerPool<J> {
 
     /// Jobs submitted but not yet claimed by a worker.
     pub fn queued(&self) -> usize {
-        self.shared
-            .queue
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner)
-            .len()
+        lock(&self.shared.queue).len()
     }
 
     /// Drain the queue and stop: workers finish every job already
@@ -157,10 +332,7 @@ impl<J: Send + 'static> WorkerPool<J> {
 fn worker_loop<J: Send>(shared: &PoolShared<J>, handle: &(dyn Fn(J) + Sync)) {
     loop {
         let job = {
-            let mut q = shared
-                .queue
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut q = lock(&shared.queue);
             loop {
                 if let Some(j) = q.pop_front() {
                     break Some(j);
@@ -171,7 +343,7 @@ fn worker_loop<J: Send>(shared: &PoolShared<J>, handle: &(dyn Fn(J) + Sync)) {
                 q = shared
                     .available
                     .wait(q)
-                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    .unwrap_or_else(PoisonError::into_inner);
             }
         };
         match job {
@@ -211,6 +383,54 @@ mod tests {
         assert_eq!(out, vec![10]);
     }
 
+    /// Regression for the worker-count clamp: a batch of k items must
+    /// execute on at most k distinct threads no matter how many workers
+    /// the caller asks for — small folds never pay idle spawn/dispatch.
+    #[test]
+    fn small_batches_use_at_most_item_count_threads() {
+        use std::collections::HashSet;
+        let ids = Mutex::new(HashSet::new());
+        let _ = par_map(vec![1, 2, 3], 64, |x: i32| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            x
+        });
+        let distinct = ids.lock().unwrap().len();
+        assert!(distinct <= 3, "3 items ran on {distinct} threads");
+    }
+
+    /// Nested fan-outs share the flat executor queue: inner maps run on
+    /// the same pool while the outer caller helps inline, with no
+    /// deadlock and order preserved at both levels.
+    #[test]
+    fn nested_fanout_shares_the_pool_and_preserves_order() {
+        let out = par_map((0..8i64).collect::<Vec<_>>(), 4, |d| {
+            par_map((0..16i64).collect::<Vec<_>>(), 4, |c| d * 100 + c)
+        });
+        assert_eq!(out.len(), 8);
+        for (d, inner) in out.iter().enumerate() {
+            let want: Vec<i64> = (0..16).map(|c| d as i64 * 100 + c).collect();
+            assert_eq!(inner, &want, "device {d}");
+        }
+        // the shared pool stayed bounded instead of spawning per call
+        assert!(Executor::global().threads() <= EXEC_MAX_THREADS);
+    }
+
+    #[test]
+    fn panicking_job_propagates_to_caller_without_hanging() {
+        let r = std::panic::catch_unwind(|| {
+            par_map(vec![0i32, 1, 2, 3], 3, |x| {
+                if x == 1 {
+                    panic!("hostile item");
+                }
+                x
+            })
+        });
+        assert!(r.is_err(), "item panic must propagate");
+        // and the executor remains usable afterwards
+        assert_eq!(par_map(vec![1, 2, 3], 3, |x| x * 2), vec![2, 4, 6]);
+    }
+
     #[test]
     fn stress_many_items_many_workers() {
         // far more items than workers, and far more workers than cores:
@@ -231,6 +451,22 @@ mod tests {
         for (i, (x, _)) in out.iter().enumerate() {
             assert_eq!(*x, i as i64, "result out of order at {i}");
         }
+    }
+
+    #[test]
+    fn detached_submit_runs() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        Executor::global().submit(Box::new(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        }));
+        for _ in 0..500 {
+            if done.load(Ordering::SeqCst) == 1 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        panic!("detached job never ran");
     }
 
     #[test]

@@ -1,0 +1,148 @@
+//! Integration contract for the persistent campaign measurement cache
+//! (`--meas-cache`, format `uniperf-meascache-v1`): a warm cache
+//! replays a whole cross-validation run bit-identically with **zero**
+//! simulator draws, an incompatible file is refused without being
+//! modified (the run proceeds cold), and a torn final line degrades to
+//! a partial warm start instead of an error. The file-format unit
+//! contract lives next to the implementation in
+//! `rust/src/harness/meascache.rs`; these tests pin the engine-level
+//! layering: `Config.meas_cache` → `Engine` → `SimGpu` → the harness
+//! retry loop.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use uniperf::coordinator::{Config, FitBackend};
+use uniperf::crossval::{run_crossval, CrossvalOpts, Split};
+use uniperf::gpusim;
+use uniperf::harness::{MeasCacheFile, Protocol};
+
+/// Serializes the measuring tests in this binary: [`gpusim::sim_draws`]
+/// is a process-global counter, so "zero draws during the warm run" is
+/// only meaningful while no sibling test is measuring concurrently.
+static MEAS_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("uniperf_meascache_it_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Quick two-device transfer split — the acceptance scenario: warm
+/// `crossval --split device` must replay with zero simulation.
+fn transfer_opts(cache: &Path) -> CrossvalOpts {
+    CrossvalOpts {
+        base: Config {
+            devices: vec!["k40c".into(), "r9_fury".into()],
+            backend: FitBackend::Native,
+            meas_cache: Some(cache.to_path_buf()),
+            ..Config::default()
+        },
+        split: Split::LeaveOneDeviceOut,
+        quick: true,
+    }
+}
+
+/// Cheaper single-device split for the refusal/torn-tail scenarios.
+fn single_device_opts(cache: &Path) -> CrossvalOpts {
+    CrossvalOpts {
+        base: Config {
+            devices: vec!["c2070".into()],
+            backend: FitBackend::Native,
+            meas_cache: Some(cache.to_path_buf()),
+            ..Config::default()
+        },
+        split: Split::LeaveOneSizeCaseOut,
+        quick: true,
+    }
+}
+
+#[test]
+fn warm_transfer_crossval_replays_bit_identically_with_zero_simulation() {
+    let _g = MEAS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cache = tmp("warm");
+
+    let before_cold = gpusim::sim_draws();
+    let cold = run_crossval(&transfer_opts(&cache)).expect("cold crossval");
+    assert!(
+        gpusim::sim_draws() > before_cold,
+        "the cold run must actually simulate"
+    );
+
+    let bytes = std::fs::read(&cache).expect("cold run persists its streams");
+    assert!(bytes.ends_with(b"\n"), "every record is one complete line");
+    let records = bytes.split(|&b| b == b'\n').filter(|l| !l.is_empty()).count();
+    assert!(records > 1, "expected header + streams, got {records} line(s)");
+
+    let before_warm = gpusim::sim_draws();
+    let warm = run_crossval(&transfer_opts(&cache)).expect("warm crossval");
+    assert_eq!(
+        gpusim::sim_draws() - before_warm,
+        0,
+        "a warm cache must replay without touching the simulator"
+    );
+
+    // byte-identical downstream artifacts: transfer matrix, report,
+    // full JSON record
+    assert_eq!(cold.transfer, warm.transfer);
+    assert_eq!(cold.render(), warm.render());
+    assert_eq!(cold.to_json().pretty(), warm.to_json().pretty());
+
+    // a fully warm replay appends nothing
+    assert_eq!(std::fs::read(&cache).expect("reread"), bytes);
+
+    // the campaign plane surfaced the replay: hits are monotonic and a
+    // warm two-device run scores many (exact counts are asserted in
+    // the unit tests; globals are shared across the test process)
+    let snap = uniperf::obs::metrics::campaign().snapshot();
+    assert!(snap.counter("meascache_hits_total") > 0, "replays must be counted");
+    let _ = std::fs::remove_file(&cache);
+}
+
+#[test]
+fn incompatible_cache_is_refused_cold_run_proceeds_file_untouched() {
+    let _g = MEAS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cache = tmp("refused");
+
+    // seed a file recorded under a *different* timing protocol (one
+    // extra run per case) but this build's noise seed
+    let other = Protocol { runs: Protocol::default().runs + 1, ..Protocol::default() };
+    drop(MeasCacheFile::open(&cache, &other, gpusim::DEFAULT_SEED).expect("seed file"));
+    let before = std::fs::read(&cache).expect("seeded header");
+
+    let draws_before = gpusim::sim_draws();
+    let r = run_crossval(&single_device_opts(&cache)).expect("refused cache still runs");
+    assert!(
+        gpusim::sim_draws() > draws_before,
+        "with the cache refused, the run must measure cold"
+    );
+    assert!(r.overall_err().is_finite());
+    assert_eq!(
+        std::fs::read(&cache).expect("reread"),
+        before,
+        "a refused cache file is left byte-identical on disk"
+    );
+    let _ = std::fs::remove_file(&cache);
+}
+
+#[test]
+fn torn_final_line_degrades_to_a_partial_warm_start() {
+    let _g = MEAS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cache = tmp("torn");
+
+    let cold = run_crossval(&single_device_opts(&cache)).expect("cold crossval");
+    // simulate a crash mid-append: chop the last record mid-line
+    let mut bytes = std::fs::read(&cache).expect("cold cache");
+    assert!(bytes.len() > 40, "cache unexpectedly small");
+    bytes.truncate(bytes.len() - 17);
+    std::fs::write(&cache, &bytes).expect("tear tail");
+
+    // the torn cache opens, replays everything before the tear, and
+    // re-measures only the torn stream — determinism makes the rerun
+    // byte-identical to the cold one either way
+    let warm = run_crossval(&single_device_opts(&cache)).expect("torn cache still runs");
+    assert_eq!(cold.render(), warm.render());
+    assert_eq!(cold.to_json().pretty(), warm.to_json().pretty());
+    let _ = std::fs::remove_file(&cache);
+}
